@@ -1,0 +1,72 @@
+//! Design-space exploration — the paper's §VI-D workflow: estimate
+//! utilisation/power for candidate configurations *without synthesis*,
+//! then find the largest wide/deep designs per board (Table IX).
+//!
+//! ```bash
+//! cargo run --release --example design_explorer
+//! ```
+
+use quantisenc::config::{MemKind, ModelConfig};
+use quantisenc::dse;
+use quantisenc::fixed::{Q5_3, Q9_7};
+use quantisenc::hwmodel::{power, resources, timing, Board};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Point estimates for a few candidate architectures.
+    println!("candidate estimates (Q5.3, BRAM), Virtex UltraScale:");
+    let board = quantisenc::hwmodel::boards::VIRTEX_ULTRASCALE;
+    for arch in ["256x128x10", "256x256x10", "400x300x300x11", "700x256x256x20"] {
+        let (p, fits) = dse::estimate(arch, Q5_3, &board)?;
+        println!(
+            "  {arch:>16}: {:>7.0} LUT {:>6.0} FF {:>6.1} BRAM  {:>6.3} W  {}",
+            p.resources.luts,
+            p.resources.ffs,
+            p.resources.brams,
+            p.power_w,
+            if fits { "fits" } else { "too big" }
+        );
+    }
+
+    // 2. Quantization trade-off at a fixed architecture.
+    println!("\nquantization trade-off (256x128x10):");
+    for q in [Q5_3, Q9_7] {
+        let cfg = ModelConfig::parse_arch("256x128x10", q)?;
+        let r = resources::core(&cfg);
+        let p = power::core_dynamic_w(&cfg, power::RATE0, power::F0_HZ);
+        println!(
+            "  {q}: {:>7.0} LUT {:>6.0} FF {:>4.0} DSP  {:.3} W",
+            r.luts, r.ffs, r.dsps, p
+        );
+    }
+
+    // 3. Memory-fabric trade-off (Fig. 13): frequency vs power.
+    println!("\nmemory fabric (256x128x10 @ Q5.3):");
+    for mem in MemKind::all() {
+        let cfg = ModelConfig::parse_arch("256x128x10", Q5_3)?.with_mem(mem);
+        let fpeak = timing::peak_frequency_hz(mem);
+        let p = power::core_dynamic_w(&cfg, power::RATE0, power::F0_HZ);
+        println!(
+            "  {:8}: peak {:>4.0} kHz, {:>6.3} W @600 kHz{}",
+            mem.label(),
+            fpeak / 1e3,
+            p,
+            if timing::meets_timing(mem, 600e3) { "" } else { "  (violates 600 kHz!)" }
+        );
+    }
+
+    // 4. Table IX: largest wide/deep design per board.
+    println!("\nlargest configurations per board (Table IX):");
+    for board in Board::all() {
+        let wide = dse::largest_wide(&board, 256, 10, Q5_3).unwrap();
+        let deep = dse::largest_deep(&board, 256, 10, 64, Q5_3).unwrap();
+        println!(
+            "  {:18} wide 256-{}-10 ({:.3} W)   deep 256-{}(64)-10 ({:.3} W)",
+            board.name,
+            wide.config.sizes()[1],
+            wide.power_w,
+            deep.config.num_layers() - 1,
+            deep.power_w
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Run-time reconfiguration — the paper's §VI-I headline: explore the
+//! performance/power trade-off on an already-deployed core purely by
+//! programming control registers (cfg_in), never touching the weights.
+//!
+//! ```bash
+//! cargo run --release --example dynamic_reconfig
+//! ```
+
+use quantisenc::config::registers::{ResetMode, REG_REFRACTORY, REG_RESET_MODE};
+use quantisenc::datasets::Dataset;
+use quantisenc::experiments::{core_from_artifact, evaluate_core};
+use quantisenc::hwmodel::power;
+use quantisenc::runtime::artifacts::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&quantisenc::artifacts_dir())?;
+    let art = manifest.model("smnist", "Q5.3")?;
+    println!("deployed core: smnist Q5.3 — sweeping dynamic registers (weights untouched)\n");
+    println!(
+        "{:32} {:>10} {:>9} {:>9}",
+        "setting", "spikes/n", "accuracy", "power(W)"
+    );
+
+    let mut show = |label: &str, core: &mut quantisenc::hdl::Core| {
+        let cfg = core.config().clone();
+        let m = evaluate_core(core, Dataset::Smnist, 50, art.t_steps);
+        let p = power::core_dynamic_w(&cfg, m.spike_rate, power::F0_HZ);
+        println!(
+            "{label:32} {:>10.1} {:>8.1}% {:>9.3}",
+            m.spikes_per_neuron_150,
+            100.0 * m.accuracy,
+            p
+        );
+    };
+
+    // R/C sweep (τ = 5 ms constant): growth falls with R.
+    for (r, c) in [(500.0, 10.0), (100.0, 50.0), (50.0, 100.0), (10.0, 500.0)] {
+        let (_, mut core) = core_from_artifact(&art)?;
+        core.registers.set_rc(r, c)?;
+        show(&format!("R={r:.0}MΩ C={c:.0}pF"), &mut core);
+    }
+    println!();
+
+    // Reset mechanisms.
+    for mode in [ResetMode::Default, ResetMode::BySubtraction, ResetMode::ToZero] {
+        let (_, mut core) = core_from_artifact(&art)?;
+        core.registers.write(REG_RESET_MODE, mode as i32)?;
+        show(&format!("reset: {}", mode.label()), &mut core);
+    }
+    println!();
+
+    // Refractory periods.
+    for refr in [0, 2, 5] {
+        let (_, mut core) = core_from_artifact(&art)?;
+        core.registers.write(REG_REFRACTORY, refr)?;
+        show(&format!("refractory = {refr} cycles"), &mut core);
+    }
+
+    println!("\nall of the above are cfg_in register writes on the same deployed core —");
+    println!("the trade-off the paper exposes: fewer spikes => less power, at some accuracy cost");
+    Ok(())
+}

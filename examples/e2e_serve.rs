@@ -1,0 +1,106 @@
+//! End-to-end driver — the full three-layer stack on a real workload.
+//!
+//! Pipeline proven here (run recorded in EXPERIMENTS.md):
+//!
+//!   1. build-time (already done by `make artifacts`): JAX trains the SNN
+//!      with surrogate gradients on the synthetic spiking-MNIST set (loss
+//!      curve in artifacts/train_log_smnist.json), quantizes the weights to
+//!      Qn.q, lowers the Pallas-kernel forward to HLO text;
+//!   2. this binary (pure Rust, no Python): loads the artifact, compiles it
+//!      on the PJRT CPU client, serves batched requests, reports accuracy +
+//!      latency/throughput;
+//!   3. cross-checks the PJRT results bit-for-bit against the
+//!      cycle-accurate hdl core, and reports modelled hardware power from
+//!      the measured spike activity.
+//!
+//! ```bash
+//! cargo run --release --example e2e_serve [n_requests]
+//! ```
+
+use std::time::Instant;
+
+use quantisenc::coordinator::metrics::Telemetry;
+use quantisenc::datasets::{Dataset, Split};
+use quantisenc::experiments;
+use quantisenc::hwmodel::power;
+use quantisenc::runtime::{artifacts::Manifest, Runtime};
+use quantisenc::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let n: u64 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(200);
+
+    // --- Load the AOT artifact (trained + lowered at build time).
+    let manifest = Manifest::load(&quantisenc::artifacts_dir())?;
+    let art = manifest.model("smnist", "Q5.3")?;
+    println!(
+        "model: smnist {} {} (float acc at train time: {:.1}%)",
+        art.sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("x"),
+        art.qname,
+        100.0 * art.float_acc
+    );
+    // Show the training loss curve (logged by the L2 trainer).
+    if let Ok(log) = manifest.golden("train_log_smnist.json") {
+        if let (Some(losses), Some(accs)) = (log.get("loss"), log.get("eval_acc")) {
+            let l = losses.num_vec().unwrap_or_default();
+            let a = accs.num_vec().unwrap_or_default();
+            println!(
+                "training: {} steps, loss {:.3} -> {:.3}, eval acc {:?}",
+                l.len(),
+                l.first().unwrap_or(&0.0),
+                l.last().unwrap_or(&0.0),
+                a.iter().map(|x| format!("{:.1}%", 100.0 * x)).collect::<Vec<_>>()
+            );
+        }
+        let _ = Json::Null; // (silence unused-import paths on older rustc)
+    }
+
+    // --- Serve over the PJRT request path.
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.load_model(&art)?;
+
+    let mut tel = Telemetry::new();
+    tel.start();
+    let mut predictions = Vec::with_capacity(n as usize);
+    for i in 0..n {
+        let s = Dataset::Smnist.sample(i, Split::Test, art.t_steps);
+        let t0 = Instant::now();
+        let out = exe.run(&s.spikes)?;
+        tel.record(t0.elapsed(), &Default::default(), Some(out.prediction == s.label));
+        predictions.push(out);
+    }
+    tel.stop();
+    println!("PJRT serving: {}", tel.summary());
+
+    // --- Cross-check a subset on the cycle-accurate core (bit-exactness)
+    //     and extract activity for the hardware power model.
+    let (config, mut core) = experiments::core_from_artifact(&art)?;
+    let mut stats = quantisenc::hdl::ActivityStats::default();
+    for i in 0..20u64 {
+        let s = Dataset::Smnist.sample(i, Split::Test, art.t_steps);
+        let r = core.run(&s);
+        let pjrt_counts: Vec<u32> = predictions[i as usize].counts.iter().map(|&c| c as u32).collect();
+        anyhow::ensure!(
+            r.counts == pjrt_counts,
+            "sample {i}: hdl {:?} != pjrt {:?}",
+            r.counts,
+            pjrt_counts
+        );
+        stats.add(&r.stats);
+    }
+    println!("hdl cross-check: 20/20 samples bit-exact with the PJRT path");
+    println!(
+        "measured activity: {:.3} spikes/neuron/step, {:.0}% synaptic slots gated",
+        stats.spike_rate(),
+        100.0 * stats.gating_ratio()
+    );
+    let p = power::core_dynamic_w(&config, stats.spike_rate(), power::F0_HZ);
+    let (f_peak, ppw) = power::peak_perf_per_watt(&config, stats.spike_rate());
+    println!(
+        "hardware model @600 kHz: {:.3} W dynamic; peak {:.1} GOPS/W at {:.0} kHz",
+        p,
+        ppw,
+        f_peak / 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: build a small QUANTISENC core from scratch, program weights
+//! and registers through the hardware-software interface, stream AER
+//! spikes, and read the spike-counter output.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! No artifacts needed — this exercises the pure-Rust request path
+//! (config → wt_in/cfg_in programming → AER spk_in → core → spk_out).
+
+use quantisenc::config::registers::ResetMode;
+use quantisenc::config::ModelConfig;
+use quantisenc::coordinator::interface::Device;
+use quantisenc::datasets::{Dataset, Split};
+use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::aer;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Static configuration (Table I): a 256x32x10 core at Q5.3, BRAM
+    //    synaptic memory — the HDL-generation parameters.
+    let config = ModelConfig::parse_arch("256x32x10", Q5_3)?;
+    println!(
+        "core {}: {} neurons, {} synapses, {}",
+        config.arch_name(),
+        config.total_neurons(),
+        config.total_synapses(),
+        config.qspec
+    );
+    let mut device = Device::new(config);
+
+    // 2. wt_in: program synaptic weights (per-weight addressing). Here a
+    //    hand-built feature detector: each hidden neuron pools an 8-pixel
+    //    stripe; output neuron k sums hidden stripes with alternating sign.
+    for h in 0..32usize {
+        for p in 0..8usize {
+            device.write_weight(0, h * 8 + p, h, Q5_3.from_float(0.5))?;
+        }
+    }
+    for h in 0..32usize {
+        for o in 0..10usize {
+            let w = if (h + o) % 2 == 0 { 0.25 } else { -0.125 };
+            device.write_weight(1, h, o, Q5_3.from_float(w))?;
+        }
+    }
+
+    // 3. cfg_in: program the dynamic LIF registers at run time.
+    device.configure(0.2, 1.0, 1.0, ResetMode::BySubtraction, 0)?;
+
+    // 4. spk_in: stream a synthetic spiking-MNIST sample as AER events.
+    let sample = Dataset::Smnist.sample(0, Split::Test, 20);
+    let events = aer::encode(&sample.spikes, sample.t_steps, sample.inputs);
+    println!("streaming {} AER events over {} timesteps", events.len(), sample.t_steps);
+
+    let (result, out_events) = device.infer_aer(&events, sample.t_steps)?;
+
+    // 5. spk_out: the spike-counter readout (paper Fig. 11).
+    println!("output spike counts: {:?}", result.counts);
+    println!("output AER events:   {}", out_events.len());
+    println!(
+        "activity: {} spikes total, {:.0}% of synaptic slots clock-gated",
+        result.stats.spikes,
+        100.0 * result.stats.gating_ratio()
+    );
+    println!("bus ledger: {:?}", device.bus());
+    Ok(())
+}

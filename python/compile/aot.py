@@ -1,0 +1,313 @@
+"""AOT pipeline: train → quantize → lower to HLO text → artifacts/.
+
+This is the entire build-time Python path of the three-layer stack. It runs
+once under ``make artifacts`` and produces everything the self-contained Rust
+binary needs on the request path:
+
+  artifacts/
+    manifest.json              — index of all artifacts (shapes, dtypes, T…)
+    <ds>_<Q>.hlo.txt           — quantized T-step forward, per dataset config.
+                                 Parameters: (spikes [T,N_in] i32,
+                                 W_1..W_K i32, regs [6] i32) →
+                                 (counts [n_out], layer_spike_totals [K]) —
+                                 weights/regs are runtime inputs so the Rust
+                                 coordinator can program them (wt_in/cfg_in).
+    lif_step_<Q>.hlo.txt       — single-layer single-step kernel (256→128),
+                                 used by bench_runtime and the HLO↔hdl
+                                 bit-exactness integration test.
+    weights_<ds>_<Q>.bin       — trained quantized weights, flat i32 LE.
+    weights_<ds>_float.bin     — float32 weights (software-reference path).
+    golden_*.json              — golden vectors for Rust bit-exactness tests
+                                 (fixed-point ops, LIF traces, dataset spikes).
+    train_log_<ds>.json        — loss curves (EXPERIMENTS.md e2e record).
+
+Interchange format is **HLO text**, never serialized protos: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` 0.1.6 crate) rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model, train
+from .fixedpoint import Q3_1, Q5_3, Q9_7, QSpec
+from .kernels import lif, ref
+
+# Dataset -> (ModelSpec sizes, training budget). Sizes follow paper Table XI;
+# smnist is the paper's baseline 256x128x10.
+CONFIGS = {
+    "smnist": dict(sizes=(256, 128, 10), steps=400, n_train=2048, n_test=256),
+    "dvs": dict(sizes=(400, 300, 300, 11), steps=300, n_train=1024, n_test=160),
+    "shd": dict(sizes=(700, 256, 256, 20), steps=300, n_train=1024, n_test=160),
+}
+T_STEPS = 40  # deployment sequence length baked into the HLO artifacts
+DEPLOY_QSPECS = {"smnist": (Q9_7, Q5_3, Q3_1), "dvs": (Q5_3,), "shd": (Q5_3,)}
+
+# Deployment pre-scaling (power of two) per quantization: weights and vth
+# are scaled together before rounding, using the Qn.q range fully (see
+# model.quantize_params). Chosen empirically on the validation split —
+# see EXPERIMENTS.md Table VIII notes.
+DEPLOY_SCALE = {"Q9.7": 4.0, "Q5.3": 4.0, "Q3.1": 2.0}
+# Quantizations that get a quantization-aware fine-tune (STE fake-quant)
+# before deployment — needed where the plain rounding SNR collapses.
+QAT_STEPS = {"Q3.1": 400}
+
+
+def qat_finetune(params, spec, qspec, scale, dataset, steps, t_steps,
+                 n_train=1024, lr=1e-3, seed=0):
+    """Quantization-aware fine-tune: fake-quantized weights (straight-
+    through estimator) inside the float surrogate-gradient model, with the
+    deployment threshold. Returns fine-tuned float params."""
+
+    @jax.custom_vjp
+    def fake_quant(w):
+        raw = jnp.clip(jnp.floor(w * scale * qspec.scale + 0.5),
+                       qspec.min_raw, qspec.max_raw)
+        return raw / (scale * qspec.scale)
+
+    fake_quant.defvjp(lambda w: (fake_quant(w), None), lambda _, g: (g,))
+
+    vth_deploy = min(scale * 1.0, qspec.to_float(qspec.max_raw))
+    fp = dict(vth=vth_deploy / scale)
+
+    train_x, train_y = datasets.batch(dataset, range(n_train), "train", t_steps)
+    train_x = jnp.asarray(train_x, jnp.float32)
+    train_y = jnp.asarray(train_y)
+
+    def loss_fn(ps, x, y):
+        qp = [fake_quant(p) for p in ps]
+        counts = model.float_forward(x, qp, spec, params=fp)
+        logp = jax.nn.log_softmax(counts)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    @jax.jit
+    def step(ps, opt, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(ps, x, y)
+        ps, opt = train.adam_update(ps, grads, opt, lr=lr)
+        return ps, opt, loss
+
+    opt = train.adam_init(params)
+    rng = np.random.default_rng(seed)
+    for i in range(steps):
+        idx = rng.integers(0, n_train, 32)
+        params, opt, loss = step(params, opt, train_x[idx], train_y[idx])
+        if i % 100 == 99:
+            print(f"[aot]   qat {qspec.name} step {i + 1} loss {float(loss):.4f}")
+    return params
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(spec: model.ModelSpec, t_steps: int) -> str:
+    """Lower the quantized T-step forward with weights+regs as parameters."""
+
+    def fwd(spikes, *wr):
+        weights, regs = list(wr[:-1]), wr[-1]
+        out = model.quantized_forward(spikes, weights, regs, spec, use_kernel=True)
+        return out["counts"], out["layer_spike_totals"]
+
+    args = [jax.ShapeDtypeStruct((t_steps, spec.sizes[0]), jnp.int32)]
+    args += [jax.ShapeDtypeStruct((l.fan_in, l.neurons), jnp.int32) for l in spec.layers]
+    args += [jax.ShapeDtypeStruct((ref.NUM_REGS,), jnp.int32)]
+    return to_hlo_text(jax.jit(fwd).lower(*args))
+
+
+def lower_lif_step(qspec: QSpec, m: int = 256, n: int = 128) -> str:
+    """Lower one Pallas LIF layer step (micro-bench + bit-exactness probe)."""
+
+    def step(spikes, w, vmem, refcnt, regs):
+        return lif.lif_layer_step(spikes, w, vmem, refcnt, regs, qspec=qspec)
+
+    args = [
+        jax.ShapeDtypeStruct((m,), jnp.int32),
+        jax.ShapeDtypeStruct((m, n), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((ref.NUM_REGS,), jnp.int32),
+    ]
+    return to_hlo_text(jax.jit(step).lower(*args))
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors (Rust bit-exactness)
+# ---------------------------------------------------------------------------
+
+
+def golden_fixedpoint() -> dict:
+    """Exhaustive-ish Qn.q op vectors for rust/src/fixed tests."""
+    rng = datasets.XorShift64Star(0xF1DE)
+    cases = []
+    for qname in ("Q2.2", "Q3.1", "Q5.3", "Q9.7"):
+        from . import fixedpoint as fp
+        qs = fp.parse(qname)
+        for _ in range(64):
+            a = rng.below(1 << qs.width) - (1 << (qs.width - 1))
+            b = rng.below(1 << qs.width) - (1 << (qs.width - 1))
+            cases.append({
+                "q": qname, "a": a, "b": b,
+                "add": qs.add(a, b), "sub": qs.sub(a, b), "mul": qs.mul(a, b),
+            })
+    return {"cases": cases}
+
+
+def golden_lif_trace(qspec: QSpec, t_steps: int = 32) -> dict:
+    """A deterministic multi-step single-layer trace for hdl/neuron.rs."""
+    rng = datasets.XorShift64Star(0x11F0 + qspec.width)
+    m, n = 12, 5
+    w = np.array([[rng.below(1 << qspec.width) - (1 << (qspec.width - 1))
+                   for _ in range(n)] for _ in range(m)], np.int32)
+    spikes = np.array([[1 if rng.uniform() < 0.35 else 0 for _ in range(m)]
+                       for _ in range(t_steps)], np.int32)
+    traces = {}
+    for mode in (ref.RESET_DEFAULT, ref.RESET_TO_ZERO, ref.RESET_BY_SUBTRACTION,
+                 ref.RESET_TO_CONSTANT):
+        regs = np.array([qspec.from_float(0.2), qspec.from_float(1.0),
+                         qspec.from_float(1.0), qspec.from_float(0.25),
+                         mode, 2], np.int32)
+        vmem = np.zeros(n, np.int32)
+        refc = np.zeros(n, np.int32)
+        spk_t, vm_t = [], []
+        for t in range(t_steps):
+            s, vmem, refc = (np.asarray(x) for x in ref.lif_layer_step_ref(
+                spikes[t], w, vmem, refc, regs, qspec))
+            spk_t.append(s.tolist())
+            vm_t.append(vmem.tolist())
+        traces[str(mode)] = {"regs": regs.tolist(), "spikes_out": spk_t, "vmem": vm_t}
+    return {
+        "q": qspec.name, "m": m, "n": n,
+        "weights": w.tolist(), "spikes_in": spikes.tolist(), "traces": traces,
+    }
+
+
+def golden_datasets() -> dict:
+    """First samples of each dataset for rust/src/datasets parity tests."""
+    out = {}
+    for name in ("smnist", "dvs", "shd"):
+        spikes, label = datasets.SAMPLERS[name](0, "test", 8)
+        out[name] = {
+            "label": int(label),
+            "t": 8,
+            "nnz": int(spikes.sum()),
+            "spike_rows": [int(r) for r in spikes.sum(axis=1)],
+            "first_row_indices": np.nonzero(spikes[0])[0].tolist(),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Main build
+# ---------------------------------------------------------------------------
+
+
+def build(out_dir: str, quick: bool = False, dataset_filter=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"t_steps": T_STEPS, "models": {}, "kernels": {}, "built_unix": int(time.time())}
+
+    # Golden vectors first (cheap, no training needed).
+    for fname, payload in (
+        ("golden_fixedpoint.json", golden_fixedpoint()),
+        ("golden_lif_q53.json", golden_lif_trace(Q5_3)),
+        ("golden_lif_q97.json", golden_lif_trace(Q9_7)),
+        ("golden_datasets.json", golden_datasets()),
+    ):
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(payload, f)
+        print(f"[aot] wrote {fname}")
+
+    # Single-step kernels.
+    for qs in (Q5_3, Q9_7):
+        name = f"lif_step_{qs.name.replace('.', '')}"
+        text = lower_lif_step(qs)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest["kernels"][name] = {
+            "q": qs.name, "m": 256, "n": 128,
+            "file": f"{name}.hlo.txt",
+        }
+        print(f"[aot] wrote {name}.hlo.txt ({len(text)} chars)")
+
+    # Train + lower per dataset.
+    names = dataset_filter or list(CONFIGS)
+    for ds in names:
+        cfg = CONFIGS[ds]
+        steps = 60 if quick else cfg["steps"]
+        n_train = 256 if quick else cfg["n_train"]
+        n_test = 64 if quick else cfg["n_test"]
+        spec_f = model.ModelSpec(tuple(cfg["sizes"]), Q5_3)  # qspec irrelevant for float
+        params, hist = train.train(
+            ds, spec_f, steps=steps, n_train=n_train, n_test=n_test, t_steps=T_STEPS,
+            log_path=os.path.join(out_dir, f"train_log_{ds}.json"))
+
+        # Float weights (software reference).
+        flat = np.concatenate([np.asarray(p, np.float32).reshape(-1) for p in params])
+        flat.tofile(os.path.join(out_dir, f"weights_{ds}_float.bin"))
+
+        entry = {
+            "sizes": list(cfg["sizes"]), "t_steps": T_STEPS,
+            "float_acc": hist["final_acc"], "variants": {},
+        }
+        for qs in DEPLOY_QSPECS[ds]:
+            spec = model.ModelSpec(tuple(cfg["sizes"]), qs)
+            scale = DEPLOY_SCALE.get(qs.name, 1.0)
+            deploy_params = params
+            qat_steps = QAT_STEPS.get(qs.name, 0)
+            if qat_steps and not quick:
+                print(f"[aot] qat fine-tune {ds} {qs.name} (scale {scale}) ...")
+                deploy_params = qat_finetune(
+                    params, spec, qs, scale, ds, qat_steps, T_STEPS)
+            qw = model.quantize_params(deploy_params, spec, scale=scale)
+            qflat = np.concatenate([w.reshape(-1) for w in qw]).astype(np.int32)
+            qtag = qs.name.replace(".", "")
+            qflat.tofile(os.path.join(out_dir, f"weights_{ds}_{qtag}.bin"))
+            hlo = lower_forward(spec, T_STEPS)
+            hlo_file = f"{ds}_{qtag}.hlo.txt"
+            with open(os.path.join(out_dir, hlo_file), "w") as f:
+                f.write(hlo)
+            vth_deploy = min(scale * 1.0, qs.to_float(qs.max_raw))
+            regs = model.default_regs(spec, vth=vth_deploy)
+            entry["variants"][qs.name] = {
+                "hlo": hlo_file,
+                "weights": f"weights_{ds}_{qtag}.bin",
+                "default_regs": regs.tolist(),
+                "layer_shapes": [[l.fan_in, l.neurons] for l in spec.layers],
+                "scale": scale,
+            }
+            print(f"[aot] wrote {hlo_file} ({len(hlo)} chars)")
+        manifest["models"][ds] = entry
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written — artifacts complete in {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output dir (or dir of --out file)")
+    ap.add_argument("--quick", action="store_true", help="small training budget (CI)")
+    ap.add_argument("--datasets", nargs="*", default=None)
+    args = ap.parse_args()
+    out = args.out
+    if out.endswith(".hlo.txt"):  # Makefile passes the sentinel file path
+        out = os.path.dirname(out)
+    build(out, quick=args.quick, dataset_filter=args.datasets)
+
+
+if __name__ == "__main__":
+    main()

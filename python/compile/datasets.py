@@ -1,0 +1,253 @@
+"""Synthetic spiking datasets — offline stand-ins for the paper's three sets.
+
+The paper evaluates on Spiking MNIST (10 classes, 16x16 = 256 inputs after
+the paper's own downscaling), DVS Gesture (11 classes, 400 inputs in their
+configuration) and Spiking Heidelberg Digits (20 classes, 700 input
+channels). None of those are redistributable inside this offline image, so —
+per the substitution rule in DESIGN.md §1 — we generate *synthetic* spiking
+datasets that match each set's input dimensionality, class count, encoding,
+and temporal statistics, exercising exactly the same code paths (rate/latency
+encoding → AER streaming → pipelined inference → spike-count decoding).
+
+  * ``smnist``  — procedural 16x16 digit glyphs (7-segment-style strokes with
+    per-sample jitter, thickness and noise), Poisson rate-encoded. This keeps
+    the paper's headline property that digit 8 is structurally closest to
+    3 and 0 (shared segments), so the Fig. 10/11 confusion structure holds.
+  * ``dvs``     — 20x20 event grid, 11 motion "gestures": a Gaussian blob
+    sweeping in 8 directions, 2 rotation senses, and a random-walk class.
+  * ``shd``     — 700 channels, 20 classes: formant-like spectro-temporal
+    ridge patterns (distinct channel trajectories per class) over T steps.
+
+All generators are pure functions of (seed, split), mirrored bit-for-bit in
+`rust/src/datasets/` via the same xorshift64* PRNG so the Rust request path
+can stream identical test sets without Python.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Deterministic PRNG shared with rust/src/datasets/rng.rs (xorshift64*).
+# ---------------------------------------------------------------------------
+
+
+class XorShift64Star:
+    """xorshift64* — tiny, seedable, identical in Rust and Python."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = (seed | 1) & self.MASK
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= (x >> 12)
+        x ^= (x << 25) & self.MASK
+        x ^= (x >> 27)
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & self.MASK
+
+    def uniform(self) -> float:
+        """[0,1) with 53-bit resolution."""
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+# ---------------------------------------------------------------------------
+# smnist: procedural digit glyphs on a 16x16 grid
+# ---------------------------------------------------------------------------
+
+# Seven-segment geometry on the 16x16 canvas; digit -> active segments.
+# Segments: 0=top, 1=top-left, 2=top-right, 3=middle, 4=bot-left, 5=bot-right, 6=bottom
+_SEGMENTS = {
+    0: (0, 1, 2, 4, 5, 6),
+    1: (2, 5),
+    2: (0, 2, 3, 4, 6),
+    3: (0, 2, 3, 5, 6),
+    4: (1, 2, 3, 5),
+    5: (0, 1, 3, 5, 6),
+    6: (0, 1, 3, 4, 5, 6),
+    7: (0, 2, 5),
+    8: (0, 1, 2, 3, 4, 5, 6),
+    9: (0, 1, 2, 3, 5, 6),
+}
+
+GRID = 16
+SMNIST_INPUTS = GRID * GRID
+SMNIST_CLASSES = 10
+DVS_GRID = 20
+DVS_INPUTS = DVS_GRID * DVS_GRID
+DVS_CLASSES = 11
+SHD_INPUTS = 700
+SHD_CLASSES = 20
+
+
+def _segment_cells(seg: int, dx: int, dy: int, thick: int):
+    """Cells of one glyph segment, offset by (dx, dy), with thickness."""
+    # Glyph occupies columns 4..12, rows 2..14 on the 16x16 canvas.
+    x0, x1, ym, y0, y1 = 4, 11, 8, 2, 13
+    cells = []
+    if seg == 0:
+        cells = [(x, y0) for x in range(x0, x1 + 1)]
+    elif seg == 6:
+        cells = [(x, y1) for x in range(x0, x1 + 1)]
+    elif seg == 3:
+        cells = [(x, ym) for x in range(x0, x1 + 1)]
+    elif seg == 1:
+        cells = [(x0, y) for y in range(y0, ym + 1)]
+    elif seg == 2:
+        cells = [(x1, y) for y in range(y0, ym + 1)]
+    elif seg == 4:
+        cells = [(x0, y) for y in range(ym, y1 + 1)]
+    elif seg == 5:
+        cells = [(x1, y) for y in range(ym, y1 + 1)]
+    out = []
+    for (x, y) in cells:
+        for tx in range(thick):
+            for ty in range(thick):
+                out.append((x + dx + tx, y + dy + ty))
+    return out
+
+
+def digit_image(digit: int, rng: XorShift64Star) -> np.ndarray:
+    """One jittered 16x16 intensity image in [0,1] for a digit class."""
+    if not 0 <= digit <= 9:
+        raise ValueError(f"digit out of range: {digit}")
+    img = np.zeros((GRID, GRID), np.float64)
+    dx = rng.below(5) - 2
+    dy = rng.below(3) - 1
+    thick = 1 + rng.below(2)
+    for seg in _SEGMENTS[digit]:
+        for (x, y) in _segment_cells(seg, dx, dy, thick):
+            if 0 <= x < GRID and 0 <= y < GRID:
+                img[y, x] = 0.75 + 0.25 * rng.uniform()
+    # Pixel dropout + background noise make the task non-trivial.
+    for i in range(GRID * GRID):
+        if img.flat[i] > 0 and rng.uniform() < 0.08:
+            img.flat[i] = 0.0
+        elif img.flat[i] == 0 and rng.uniform() < 0.02:
+            img.flat[i] = 0.3 * rng.uniform()
+    return img
+
+
+def rate_encode(image: np.ndarray, t_steps: int, rng: XorShift64Star,
+                max_rate: float = 0.5) -> np.ndarray:
+    """Poisson rate coding: spike[t, i] ~ Bernoulli(intensity_i * max_rate)."""
+    flat = image.reshape(-1)
+    spikes = np.zeros((t_steps, flat.size), np.int32)
+    for t in range(t_steps):
+        for i in range(flat.size):
+            if flat[i] > 0 and rng.uniform() < flat[i] * max_rate:
+                spikes[t, i] = 1
+    return spikes
+
+
+def smnist_sample(index: int, split: str, t_steps: int = 40, seed: int = 7):
+    """(spikes [T,256], label) for sample `index` of a split."""
+    base = 0x5EED_0000 + seed * 1_000_003 + (0 if split == "train" else 1 << 40)
+    rng = XorShift64Star(base + index * 2_654_435_761)
+    label = rng.below(SMNIST_CLASSES)
+    img = digit_image(label, rng)
+    return rate_encode(img, t_steps, rng), label
+
+
+# ---------------------------------------------------------------------------
+# dvs: moving-blob gestures on a 20x20 event grid
+# ---------------------------------------------------------------------------
+
+
+def dvs_sample(index: int, split: str, t_steps: int = 40, seed: int = 11):
+    """(spikes [T,400], label) — 11 motion gesture classes."""
+    base = 0xD4E5_0000 + seed * 1_000_003 + (0 if split == "train" else 1 << 40)
+    rng = XorShift64Star(base + index * 2_654_435_761)
+    label = rng.below(DVS_CLASSES)
+    g = DVS_GRID
+    spikes = np.zeros((t_steps, g * g), np.int32)
+    cx, cy = g / 2 + rng.below(5) - 2, g / 2 + rng.below(5) - 2
+    if label < 8:  # 8 linear sweep directions
+        ang = 2 * np.pi * label / 8 + 0.2 * (rng.uniform() - 0.5)
+        vx, vy = 0.45 * np.cos(ang), 0.45 * np.sin(ang)
+        mode = "linear"
+    elif label < 10:  # two rotation senses
+        mode = "rotate"
+        sense = 1.0 if label == 8 else -1.0
+    else:  # random walk
+        mode = "walk"
+    x, y = cx, cy
+    phase = 2 * np.pi * rng.uniform()
+    for t in range(t_steps):
+        if mode == "linear":
+            x, y = (x + vx) % g, (y + vy) % g
+        elif mode == "rotate":
+            phase += sense * 0.35
+            x = cx + 5.5 * np.cos(phase)
+            y = cy + 5.5 * np.sin(phase)
+        else:
+            x = (x + (rng.uniform() - 0.5) * 3.0) % g
+            y = (y + (rng.uniform() - 0.5) * 3.0) % g
+        for i in range(g):
+            for j in range(g):
+                d2 = (i - y % g) ** 2 + (j - x % g) ** 2
+                p = 0.9 * np.exp(-d2 / 3.0)
+                if p > 0.02 and rng.uniform() < p:
+                    spikes[t, i * g + j] = 1
+    return spikes, label
+
+
+# ---------------------------------------------------------------------------
+# shd: spectro-temporal ridge patterns over 700 channels
+# ---------------------------------------------------------------------------
+
+
+def shd_sample(index: int, split: str, t_steps: int = 40, seed: int = 13):
+    """(spikes [T,700], label) — 20 spoken-digit-like ridge classes."""
+    base = 0x54D0_0000 + seed * 1_000_003 + (0 if split == "train" else 1 << 40)
+    rng = XorShift64Star(base + index * 2_654_435_761)
+    label = rng.below(SHD_CLASSES)
+    spikes = np.zeros((t_steps, SHD_INPUTS), np.int32)
+    # Each class = 3 deterministic formant trajectories (start chan, slope,
+    # curvature derived from the label), plus per-sample jitter.
+    for f in range(3):
+        c0 = ((label * 131 + f * 197) % 17) * 40 + 10 + rng.below(8)
+        slope = (((label * 31 + f * 7) % 9) - 4) * 3.0
+        curve = (((label * 13 + f * 5) % 5) - 2) * 0.18
+        for t in range(t_steps):
+            centre = c0 + slope * t / t_steps * 8 + curve * (t - t_steps / 2) ** 2 / t_steps * 4
+            for dc in range(-6, 7):
+                ch = int(centre) + dc
+                if 0 <= ch < SHD_INPUTS:
+                    p = 0.75 * np.exp(-(dc * dc) / 6.0)
+                    if rng.uniform() < p:
+                        spikes[t, ch] = 1
+    return spikes, label
+
+
+# ---------------------------------------------------------------------------
+# Batched helpers
+# ---------------------------------------------------------------------------
+
+SAMPLERS = {"smnist": smnist_sample, "dvs": dvs_sample, "shd": shd_sample}
+
+INFO = {
+    "smnist": dict(inputs=SMNIST_INPUTS, classes=SMNIST_CLASSES,
+                   paper="Spiking MNIST [7]", train=60000, test=100),
+    "dvs": dict(inputs=DVS_INPUTS, classes=DVS_CLASSES,
+                paper="DVS Gesture [8]", train=1176, test=288),
+    "shd": dict(inputs=SHD_INPUTS, classes=SHD_CLASSES,
+                paper="Spiking Heidelberg Digit (SHD) [9]", train=8156, test=2264),
+}
+
+
+def batch(name: str, indices, split: str, t_steps: int = 40, seed: int | None = None):
+    """Stack samples -> (spikes [B,T,N], labels [B])."""
+    sampler = SAMPLERS[name]
+    kwargs = {} if seed is None else {"seed": seed}
+    xs, ys = [], []
+    for i in indices:
+        s, l = sampler(i, split, t_steps, **kwargs)
+        xs.append(s)
+        ys.append(l)
+    return np.stack(xs), np.array(ys, np.int32)

@@ -1,0 +1,134 @@
+"""Signed Qn.q fixed-point arithmetic — the bit-exact semantics of QUANTISENC.
+
+This module is the single source of truth for the paper's Section III-C
+("Signed Neuronal Computations", Fig. 6) on the Python side. The Rust
+substrate (`rust/src/fixed/`) implements the identical semantics; the two are
+cross-checked bit-exactly via golden vectors emitted by `aot.py` and via the
+HLO-executed model vs the Rust cycle-accurate simulator.
+
+Representation
+--------------
+A Qn.q number has W = n + q bits total (the sign bit is part of the n integer
+bits, as in the paper: Q5.3 is an 8-bit quantity). Values are stored
+sign-extended in int32. All datapath arithmetic *wraps* modulo 2^W (two's
+complement), exactly like the HDL registers:
+
+  * add/sub: integer add/sub, then wrap to W bits.
+  * mul (Fig. 6): full (2W-bit) product, arithmetic-shift-right by q
+    (truncation toward -inf — discarded LSBs are the paper's "underflow"),
+    then wrap to W bits (discarded MSBs are the paper's "overflow").
+
+Because we restrict the emulated datapath to W <= 16, the full product of two
+W-bit operands fits in int32 (|a|,|b| <= 2^15 => |a*b| <= 2^30), so no int64
+is needed anywhere. W = 32 (Q17.15) configurations are evaluated through the
+Rust simulator only (documented in DESIGN.md §2).
+
+Conversion from float *saturates* (it models the one-time software-side
+quantization of trained weights / register values); datapath ops *wrap*
+(they model silicon).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QSpec:
+    """Static quantization configuration (paper Table I: static, HDL params)."""
+
+    n: int  # integer bits, sign included (paper's Qn.q)
+    q: int  # fraction bits
+
+    def __post_init__(self) -> None:
+        if self.n < 1 or self.q < 0:
+            raise ValueError(f"invalid QSpec Q{self.n}.{self.q}")
+        if self.width > 16:
+            raise ValueError(
+                f"Q{self.n}.{self.q}: emulated datapath supports W<=16 "
+                "(W=32 runs through the Rust simulator only)"
+            )
+
+    @property
+    def width(self) -> int:
+        return self.n + self.q
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.q
+
+    @property
+    def max_raw(self) -> int:
+        return (1 << (self.width - 1)) - 1
+
+    @property
+    def min_raw(self) -> int:
+        return -(1 << (self.width - 1))
+
+    @property
+    def name(self) -> str:
+        return f"Q{self.n}.{self.q}"
+
+    # -- raw (int) domain ---------------------------------------------------
+
+    def wrap(self, x):
+        """Wrap an integer (array) to W-bit two's complement, sign-extended."""
+        half = 1 << (self.width - 1)
+        mask = (1 << self.width) - 1
+        if isinstance(x, (int, np.integer)):
+            return int(((int(x) + half) & mask) - half)
+        x = jnp.asarray(x, jnp.int32)
+        return ((x + half) & mask) - half
+
+    def add(self, a, b):
+        """Wrapping fixed-point add (same rules as integer add, Fig. 6 text)."""
+        if isinstance(a, (int, np.integer)) and isinstance(b, (int, np.integer)):
+            return self.wrap(int(a) + int(b))
+        return self.wrap(jnp.asarray(a, jnp.int32) + jnp.asarray(b, jnp.int32))
+
+    def sub(self, a, b):
+        if isinstance(a, (int, np.integer)) and isinstance(b, (int, np.integer)):
+            return self.wrap(int(a) - int(b))
+        return self.wrap(jnp.asarray(a, jnp.int32) - jnp.asarray(b, jnp.int32))
+
+    def mul(self, a, b):
+        """Fig. 6 multiply: full product >> q (arithmetic), wrap to W bits."""
+        if isinstance(a, (int, np.integer)) and isinstance(b, (int, np.integer)):
+            return self.wrap((int(a) * int(b)) >> self.q)
+        prod = jnp.asarray(a, jnp.int32) * jnp.asarray(b, jnp.int32)
+        return self.wrap(jnp.right_shift(prod, self.q))
+
+    # -- float <-> raw ------------------------------------------------------
+
+    def from_float(self, x):
+        """Saturating float -> Qn.q raw (software-side quantization)."""
+        if isinstance(x, (float, int, np.floating, np.integer)):
+            raw = int(np.floor(float(x) * self.scale + 0.5))
+            return int(np.clip(raw, self.min_raw, self.max_raw))
+        raw = np.floor(np.asarray(x, np.float64) * self.scale + 0.5)
+        return np.clip(raw, self.min_raw, self.max_raw).astype(np.int32)
+
+    def to_float(self, raw):
+        if isinstance(raw, (int, np.integer)):
+            return float(raw) / self.scale
+        return np.asarray(raw, np.float64) / self.scale
+
+
+# The paper's evaluated settings (Table IV); Q17.15 is Rust-simulator-only.
+Q2_2 = QSpec(2, 2)
+Q3_1 = QSpec(3, 1)
+Q5_3 = QSpec(5, 3)
+Q9_7 = QSpec(9, 7)
+
+BY_NAME = {s.name: s for s in (Q2_2, Q3_1, Q5_3, Q9_7)}
+
+
+def parse(name: str) -> QSpec:
+    """Parse 'Q5.3' style names."""
+    if not name.startswith("Q") or "." not in name:
+        raise ValueError(f"bad QSpec name {name!r}")
+    n, q = name[1:].split(".")
+    return QSpec(int(n), int(q))

@@ -1,0 +1,150 @@
+"""Pallas kernel for one quantized LIF layer timestep (the L1 hot-spot).
+
+This is the TPU-shaped restatement of the paper's per-layer hardware
+(DESIGN.md §2 Hardware-Adaptation): the layer's weight matrix — the paper's
+*distributed synaptic memory*, which the FPGA keeps in BRAM inside the layer
+— stays resident in VMEM as a kernel operand block, and the spike vector
+streams through it. ActGen's M-cycle serial accumulate becomes a single
+int32 reduction feeding the MXU-friendly dot; VmemDyn/VmemSel/SpkGen are
+vectorised lanes over the layer's N neurons.
+
+The kernel is tiled over neurons: grid = ceil(N / block_n), with BlockSpec
+carving [M, block_n] weight tiles — this is the HBM↔VMEM schedule the paper
+expressed with its BRAM organisation. Lowered with ``interpret=True``
+(CPU PJRT; real-TPU lowering emits a Mosaic custom-call the CPU plugin
+cannot execute — see /opt/xla-example/README.md).
+
+Semantics are bit-identical to ``ref.lif_layer_step_ref`` (pytest +
+hypothesis enforce this across shapes, Qn.q settings, and register values).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fixedpoint import QSpec
+from . import ref as R
+
+# Default neuron tile. All paper configurations (N <= 1470) use a handful of
+# tiles; 128 matches the paper's own FC-128 granularity and lines up with
+# TPU lane width.
+DEFAULT_BLOCK_N = 128
+
+
+def _wrap(x, width: int):
+    half = 1 << (width - 1)
+    mask = (1 << width) - 1
+    return ((x + half) & mask) - half
+
+
+def _lif_kernel(spk_ref, w_ref, vmem_ref, ref_ref, regs_ref,
+                spk_out_ref, vmem_out_ref, refcnt_out_ref, *, qspec: QSpec):
+    """One [M, block_n] tile: ActGen + VmemDyn + SpkGen + VmemSel."""
+    width = qspec.width
+    q = qspec.q
+
+    decay = regs_ref[R.REG_DECAY]
+    growth = regs_ref[R.REG_GROWTH]
+    vth = regs_ref[R.REG_VTH]
+    vreset = regs_ref[R.REG_VRESET]
+    mode = regs_ref[R.REG_RESET_MODE]
+    refractory = regs_ref[R.REG_REFRACTORY]
+
+    spikes = spk_ref[...]          # [M]  int32 in {0,1}
+    weights = w_ref[...]           # [M, block_n] int32 (Qn.q raw)
+    vmem = vmem_ref[...]           # [block_n]
+    refcnt = ref_ref[...]          # [block_n]
+
+    # ActGen: weighted sum of input spikes; wrapping accumulate (Eq. 6).
+    act = _wrap(jnp.dot(spikes, weights, preferred_element_type=jnp.int32), width)
+
+    # VmemDyn (Eq. 3): v - decay*v + growth*act, Fig.-6 fixed-point multiply.
+    dv = _wrap(jnp.right_shift(decay * vmem, q), width)
+    gi = _wrap(jnp.right_shift(growth * act, q), width)
+    v_dyn = _wrap(_wrap(vmem - dv, width) + gi, width)
+
+    in_ref = refcnt > 0
+    v_new = jnp.where(in_ref, vmem, v_dyn)
+
+    # SpkGen.
+    spike = jnp.logical_and(v_new >= vth, jnp.logical_not(in_ref))
+
+    # VmemSel: 4-way reset mux (Eq. 7).
+    v_default = _wrap(v_new - _wrap(jnp.right_shift(decay * v_new, q), width), width)
+    v_reset = jnp.where(
+        mode == R.RESET_TO_ZERO,
+        jnp.zeros_like(v_new),
+        jnp.where(
+            mode == R.RESET_BY_SUBTRACTION,
+            _wrap(v_new - vth, width),
+            jnp.where(mode == R.RESET_TO_CONSTANT, jnp.broadcast_to(vreset, v_new.shape), v_default),
+        ),
+    )
+
+    spk_out_ref[...] = spike.astype(jnp.int32)
+    vmem_out_ref[...] = jnp.where(spike, v_reset, v_new).astype(jnp.int32)
+    refcnt_out_ref[...] = jnp.where(spike, refractory, jnp.maximum(refcnt - 1, 0)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("qspec", "block_n"))
+def lif_layer_step(spikes_in, weights, vmem, refcnt, regs,
+                   qspec: QSpec, block_n: int = DEFAULT_BLOCK_N):
+    """One quantized spk_clk timestep of a layer via the Pallas kernel.
+
+    Args:
+      spikes_in: [M] int32 in {0,1} — pre-synaptic spike vector.
+      weights:   [M, N] int32 — Qn.q raw synaptic weights (alpha*beta*omega
+                 already folded in; zero where no connection).
+      vmem:      [N] int32 — membrane potentials (Qn.q raw).
+      refcnt:    [N] int32 — refractory countdowns.
+      regs:      [NUM_REGS] int32 — control-register vector (see ref.py).
+      qspec:     static quantization config.
+      block_n:   neuron tile width.
+
+    Returns: (spikes_out [N], vmem' [N], refcnt' [N]) int32.
+    """
+    m, n = weights.shape
+    block_n = min(block_n, n)
+    n_pad = (-n) % block_n
+    if n_pad:
+        # Padding lanes: zero weights, vmem 0, act 0 => never cross vth > 0.
+        weights = jnp.pad(weights, ((0, 0), (0, n_pad)))
+        vmem = jnp.pad(vmem, (0, n_pad))
+        refcnt = jnp.pad(refcnt, (0, n_pad))
+    n_t = n + n_pad
+    grid = (n_t // block_n,)
+
+    out_shapes = tuple(jax.ShapeDtypeStruct((n_t,), jnp.int32) for _ in range(3))
+    lane = pl.BlockSpec((block_n,), lambda i: (i,))
+    spk, vm, rc = pl.pallas_call(
+        functools.partial(_lif_kernel, qspec=qspec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m,), lambda i: (0,)),           # spike vector: broadcast
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),  # weight tile, VMEM-resident
+            lane, lane,                                    # vmem / refcnt lanes
+            pl.BlockSpec((R.NUM_REGS,), lambda i: (0,)),   # control registers
+        ],
+        out_specs=(lane, lane, lane),
+        out_shape=out_shapes,
+        interpret=True,
+    )(spikes_in.astype(jnp.int32), weights, vmem, refcnt, regs)
+    if n_pad:
+        spk, vm, rc = spk[:n], vm[:n], rc[:n]
+    return spk, vm, rc
+
+
+def vmem_bytes(m: int, n: int, qspec: QSpec, block_n: int = DEFAULT_BLOCK_N) -> int:
+    """Estimated VMEM working set of one kernel invocation (perf model).
+
+    Weight tile [M, block_n] at ceil(W/8) bytes + state lanes + spike vector.
+    Used by the §Perf analysis in EXPERIMENTS.md (interpret=True gives no
+    real TPU residency data).
+    """
+    bn = min(block_n, n)
+    wbytes = (qspec.width + 7) // 8
+    return m * bn * wbytes + 3 * bn * 4 + m * 4 + R.NUM_REGS * 4

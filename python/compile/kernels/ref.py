@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for the QUANTISENC LIF layer — the correctness reference.
+
+Two references live here:
+
+  * ``lif_layer_step_ref`` — the *bit-exact quantized* semantics of one
+    spk_clk timestep of one hardware layer (ActGen + VmemDyn + VmemSel +
+    SpkGen of paper Fig. 2), vectorised over the layer's N neurons. The
+    Pallas kernel (`lif.py`) and the Rust cycle-accurate simulator
+    (`rust/src/hdl/neuron.rs`) must match this exactly, bit for bit.
+
+  * ``lif_layer_step_float`` — the double-precision LIF used as the
+    "SNNTorch software" reference for RMSE/accuracy comparisons (paper
+    Fig. 12 / Table VIII) and, with a surrogate gradient, for training.
+
+Timestep semantics (one spk_clk edge, documented order — see DESIGN.md §2):
+
+  1. ActGen:   act = wrap( sum_i spike_in[i] * w[i, j] )          (Eq. 6)
+  2. If refractory counter > 0: hold vmem, decrement counter, no spike.
+  3. VmemDyn:  v' = v - decay*v + growth*act      (wrapping Qn.q)  (Eq. 3)
+  4. SpkGen:   spike = (v' >= vth)                                 (Fig. 2)
+  5. VmemSel:  on spike, apply reset (Eq. 7) and arm the refractory
+     counter with `refractory_period`.
+
+Registers (paper Table I, dynamic configuration) are passed as a flat int32
+vector so the same values can be programmed from the Rust coordinator's
+control-register file:
+
+  regs = [decay_raw, growth_raw, vth_raw, vreset_raw, reset_mode, refractory]
+
+reset_mode: 0=default (exponential decay), 1=reset-to-zero,
+            2=reset-by-subtraction, 3=reset-to-constant.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..fixedpoint import QSpec
+
+# Register vector layout (shared with rust/src/config/registers.rs).
+REG_DECAY = 0
+REG_GROWTH = 1
+REG_VTH = 2
+REG_VRESET = 3
+REG_RESET_MODE = 4
+REG_REFRACTORY = 5
+NUM_REGS = 6
+
+RESET_DEFAULT = 0
+RESET_TO_ZERO = 1
+RESET_BY_SUBTRACTION = 2
+RESET_TO_CONSTANT = 3
+
+
+def _wrap(x, width: int):
+    half = 1 << (width - 1)
+    mask = (1 << width) - 1
+    return ((x + half) & mask) - half
+
+
+def _fxmul(a, b, qspec: QSpec):
+    # Full product fits int32 for W <= 16 (see fixedpoint.py docstring).
+    return _wrap(jnp.right_shift(a * b, qspec.q), qspec.width)
+
+
+def lif_layer_step_ref(spikes_in, weights, vmem, refcnt, regs, qspec: QSpec):
+    """One quantized timestep of a layer. All int32; returns (spk, vmem', ref')."""
+    spikes_in = jnp.asarray(spikes_in, jnp.int32)
+    weights = jnp.asarray(weights, jnp.int32)
+    vmem = jnp.asarray(vmem, jnp.int32)
+    refcnt = jnp.asarray(refcnt, jnp.int32)
+    regs = jnp.asarray(regs, jnp.int32)
+    w = qspec.width
+
+    decay = regs[REG_DECAY]
+    growth = regs[REG_GROWTH]
+    vth = regs[REG_VTH]
+    vreset = regs[REG_VRESET]
+    mode = regs[REG_RESET_MODE]
+    refractory = regs[REG_REFRACTORY]
+
+    # --- ActGen (Eq. 6): sequential wrapping adds == wrap of the exact sum,
+    # because addition mod 2^W is associative. int32 accumulation is exact
+    # for M <= 2^15 pre-synaptic connections at W <= 16.
+    act = _wrap(jnp.dot(spikes_in, weights, preferred_element_type=jnp.int32), w)
+
+    # --- VmemDyn (Eq. 3), wrapping Qn.q arithmetic.
+    v_dyn = _wrap(_wrap(vmem - _fxmul(decay, vmem, qspec), w) + _fxmul(growth, act, qspec), w)
+
+    in_refractory = refcnt > 0
+    v_new = jnp.where(in_refractory, vmem, v_dyn)  # hold during refractory
+
+    # --- SpkGen: threshold crossing; suppressed while refractory.
+    spike = jnp.logical_and(v_new >= vth, jnp.logical_not(in_refractory))
+
+    # --- VmemSel (Eq. 7): all four reset datapaths computed, mux'd by mode.
+    v_default = _wrap(v_new - _fxmul(decay, v_new, qspec), w)
+    v_zero = jnp.zeros_like(v_new)
+    v_sub = _wrap(v_new - vth, w)
+    v_const = jnp.broadcast_to(vreset, v_new.shape)
+    v_reset = jnp.where(
+        mode == RESET_TO_ZERO,
+        v_zero,
+        jnp.where(
+            mode == RESET_BY_SUBTRACTION,
+            v_sub,
+            jnp.where(mode == RESET_TO_CONSTANT, v_const, v_default),
+        ),
+    )
+
+    vmem_out = jnp.where(spike, v_reset, v_new)
+    ref_out = jnp.where(spike, refractory, jnp.maximum(refcnt - 1, 0))
+    return spike.astype(jnp.int32), vmem_out.astype(jnp.int32), ref_out.astype(jnp.int32)
+
+
+def lif_layer_step_float(spikes_in, weights, vmem, refcnt, params):
+    """Double-precision LIF step — the "software" (SNNTorch-like) reference.
+
+    ``params`` is a dict with float leaves: decay, growth, vth, vreset,
+    reset_mode (int), refractory (int). Mirrors the quantized datapath but
+    without wrapping (floats don't overflow in this regime).
+    """
+    act = jnp.dot(spikes_in.astype(vmem.dtype), weights)
+    v_dyn = vmem - params["decay"] * vmem + params["growth"] * act
+    in_ref = refcnt > 0
+    v_new = jnp.where(in_ref, vmem, v_dyn)
+    spike = jnp.logical_and(v_new >= params["vth"], jnp.logical_not(in_ref))
+
+    mode = params["reset_mode"]
+    v_default = v_new - params["decay"] * v_new
+    v_reset = jnp.where(
+        mode == RESET_TO_ZERO,
+        jnp.zeros_like(v_new),
+        jnp.where(
+            mode == RESET_BY_SUBTRACTION,
+            v_new - params["vth"],
+            jnp.where(mode == RESET_TO_CONSTANT, jnp.full_like(v_new, params["vreset"]), v_default),
+        ),
+    )
+    vmem_out = jnp.where(spike, v_reset, v_new)
+    ref_out = jnp.where(spike, params["refractory"], jnp.maximum(refcnt - 1, 0))
+    return spike.astype(vmem.dtype), vmem_out, ref_out

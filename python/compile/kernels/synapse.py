@@ -1,0 +1,72 @@
+"""Synaptic connectivity (Eq. 9) and polarity (Eq. 10) — CUBA synapses.
+
+The paper factors every synaptic weight as  w_ij = alpha_ij * beta_ij * omega_ij:
+
+  * alpha in {0,1} — the connection parameter (network topology): all-to-all,
+    one-to-one, or gaussian (receptive-field / convolution-like, |i-j| <= r).
+  * beta in {-1,+1} — the polarity parameter (excitatory vs inhibitory).
+  * omega >= 0 — the absolute synaptic weight.
+
+On our substrate the folded product w = alpha*beta*omega is what lives in the
+layer's synaptic memory (exactly as in the hardware, where the signed Qn.q
+word encodes polarity in the sign bit). These builders produce the alpha
+masks; training learns signed weights directly and the masks are applied both
+in the forward pass and to gradients (so pruned connections stay pruned),
+mirroring the fact that absent alpha connections have no storage in hardware.
+
+Mirrored in `rust/src/config/topology.rs` (bit-identical mask layout is
+asserted by golden-vector tests).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+ALL_TO_ALL = "all_to_all"
+ONE_TO_ONE = "one_to_one"
+GAUSSIAN = "gaussian"
+
+TOPOLOGIES = (ALL_TO_ALL, ONE_TO_ONE, GAUSSIAN)
+
+
+def connection_mask(m: int, n: int, topology: str, radius: int = 1) -> np.ndarray:
+    """alpha_ij mask of shape [M, N] (pre-synaptic x post-synaptic), Eq. 9.
+
+    * all_to_all: alpha = 1 everywhere                          (Eq. 9a)
+    * one_to_one: alpha = 1 iff i == j (requires M == N)        (Eq. 9b)
+    * gaussian:   alpha = 1 iff |i - j*M/N| <= radius — the receptive-field
+      generalisation of Eq. 9c (the paper states |i-j| <= 1 for equal-width
+      layers; for unequal widths the pre index is scaled, which is how a
+      1-D convolution window maps onto the weight matrix).
+    """
+    if m <= 0 or n <= 0:
+        raise ValueError(f"bad layer shape {m}x{n}")
+    if topology == ALL_TO_ALL:
+        return np.ones((m, n), dtype=np.int32)
+    if topology == ONE_TO_ONE:
+        if m != n:
+            raise ValueError(f"one_to_one needs M == N, got {m} != {n}")
+        return np.eye(m, dtype=np.int32)
+    if topology == GAUSSIAN:
+        if radius < 0:
+            raise ValueError(f"gaussian radius must be >= 0, got {radius}")
+        i = np.arange(m, dtype=np.float64)[:, None]
+        centre = (np.arange(n, dtype=np.float64)[None, :] + 0.5) * m / n - 0.5
+        return (np.abs(i - centre) <= radius + 1e-9).astype(np.int32)
+    raise ValueError(f"unknown topology {topology!r}")
+
+
+def synapse_count(m: int, n: int, topology: str, radius: int = 1) -> int:
+    """Number of alpha=1 synapses — drives the resource/memory model."""
+    return int(connection_mask(m, n, topology, radius).sum())
+
+
+def fold_weights(omega: np.ndarray, alpha: np.ndarray, beta: np.ndarray) -> np.ndarray:
+    """w = alpha * beta * omega (float domain; quantization happens later)."""
+    if omega.shape != alpha.shape or omega.shape != beta.shape:
+        raise ValueError("omega/alpha/beta shape mismatch")
+    if not np.all(np.isin(alpha, (0, 1))):
+        raise ValueError("alpha must be 0/1")
+    if not np.all(np.isin(beta, (-1, 1))):
+        raise ValueError("beta must be -1/+1")
+    return alpha * beta * np.abs(omega)

@@ -1,0 +1,288 @@
+"""L2 — the QUANTISENC SNN model in JAX.
+
+Defines the K-layer feed-forward spiking network of paper Fig. 1: layer k
+receives the spike train of layer k-1 through its local synaptic memory and
+produces an output spike train. Two variants share one structure:
+
+  * ``quantized_forward`` — the deployment path: bit-exact Qn.q datapath via
+    the L1 Pallas kernel (`kernels.lif`), scanned over T timesteps. This is
+    what `aot.py` lowers to HLO for the Rust runtime; weights and the
+    control-register vector are *parameters* of the lowered computation so
+    the Rust coordinator can program them at run time (the paper's wt_in /
+    cfg_in interfaces).
+
+  * ``float_forward`` — the training path ("SNNTorch software" analogue):
+    float32 LIF with a fast-sigmoid surrogate gradient on the spike
+    nonlinearity, used by `train.py` and as the software baseline for
+    Fig. 12 / Table VIII.
+
+State per layer is (vmem, refcnt); the scan carries the tuple of all layers,
+giving the same layer-by-layer dataflow as the hardware (spikes produced by
+layer k at timestep t feed layer k+1 *within* the same timestep, matching the
+paper's dataflow processing of one input stream).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fixedpoint import QSpec
+from .kernels import lif, ref
+from .kernels import synapse as syn
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Static configuration of one hardware layer (paper Table I)."""
+
+    fan_in: int
+    neurons: int
+    topology: str = syn.ALL_TO_ALL
+    radius: int = 1
+
+    def mask(self) -> np.ndarray:
+        return syn.connection_mask(self.fan_in, self.neurons, self.topology, self.radius)
+
+    @property
+    def synapses(self) -> int:
+        return syn.synapse_count(self.fan_in, self.neurons, self.topology, self.radius)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A full QUANTISENC core configuration, e.g. 256x128x10."""
+
+    sizes: tuple  # (n_in, n_1, ..., n_out)
+    qspec: QSpec
+    topologies: tuple = ()  # per layer; default all-to-all
+
+    def __post_init__(self):
+        if len(self.sizes) < 2:
+            raise ValueError("need at least input + one layer")
+        if self.topologies and len(self.topologies) != self.num_layers:
+            raise ValueError("topologies must match layer count")
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.sizes) - 1
+
+    @property
+    def layers(self) -> Sequence[LayerSpec]:
+        topos = self.topologies or tuple(syn.ALL_TO_ALL for _ in range(self.num_layers))
+        return tuple(
+            LayerSpec(self.sizes[i], self.sizes[i + 1], topos[i])
+            for i in range(self.num_layers)
+        )
+
+    @property
+    def total_neurons(self) -> int:
+        # The paper counts input-layer units as neurons too (394 = 256+128+10).
+        return int(sum(self.sizes))
+
+    @property
+    def total_synapses(self) -> int:
+        return int(sum(l.synapses for l in self.layers))
+
+    @property
+    def name(self) -> str:
+        return "x".join(str(s) for s in self.sizes)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation / quantization
+# ---------------------------------------------------------------------------
+
+
+def init_params(spec: ModelSpec, key) -> list:
+    """He-style signed init, masked by per-layer alpha. Float32 leaves."""
+    params = []
+    for layer in spec.layers:
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (layer.fan_in, layer.neurons), jnp.float32)
+        w = w * jnp.sqrt(2.0 / layer.fan_in)
+        params.append(w * jnp.asarray(layer.mask(), jnp.float32))
+    return params
+
+
+def quantize_params(params, spec: ModelSpec, scale: float = 1.0) -> list:
+    """Saturating float -> Qn.q raw int32 weights (software-side, once).
+
+    ``scale`` implements deployment pre-scaling: weights (and, by the
+    caller, vth/vreset) are multiplied by a power of two before rounding so
+    the trained weights use the available Qn.q resolution. Scaling weights
+    and threshold together leaves the float dynamics invariant but shrinks
+    quantization error — it is just a different wt_in/cfg_in programming of
+    the same hardware.
+    """
+    return [np.asarray(spec.qspec.from_float(np.asarray(w) * scale), np.int32) for w in params]
+
+
+def default_regs(spec: ModelSpec, vth: float = 1.0, decay: float = 0.2,
+                 growth: float = 1.0, reset_mode: int = ref.RESET_BY_SUBTRACTION,
+                 refractory: int = 0, vreset: float = 0.0) -> np.ndarray:
+    """Control-register vector in Qn.q raw units (paper Table I dynamic row)."""
+    qs = spec.qspec
+    return np.array(
+        [qs.from_float(decay), qs.from_float(growth), qs.from_float(vth),
+         qs.from_float(vreset), reset_mode, refractory],
+        dtype=np.int32,
+    )
+
+
+FLOAT_PARAMS = dict(decay=0.2, growth=1.0, vth=1.0, vreset=0.0,
+                    reset_mode=ref.RESET_BY_SUBTRACTION, refractory=0)
+
+
+# ---------------------------------------------------------------------------
+# Quantized deployment forward (uses the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def quantized_forward(spikes, weights, regs, spec: ModelSpec, use_kernel: bool = True):
+    """Run T timesteps of the quantized core.
+
+    Args:
+      spikes:  [T, n_in] int32 — input spike train (AER-decoded).
+      weights: list of [M_k, N_k] int32 Qn.q raw weights.
+      regs:    [NUM_REGS] int32 — shared control registers (the hardware has
+               one decoder per core; per-layer registers are a Rust-side
+               extension, see coordinator/interface.rs).
+      use_kernel: Pallas kernel (True) or pure-jnp ref (False) — both
+               bit-exact; the ref path cross-validates the kernel inside jit.
+
+    Returns dict with:
+      out_spikes [T, n_out], counts [n_out], layer_spike_totals [K] (drives
+      the activity/power model), final vmem per layer.
+    """
+    qs = spec.qspec
+    step_fn = (lambda s, w, v, r, g: lif.lif_layer_step(s, w, v, r, g, qspec=qs)) \
+        if use_kernel else (lambda s, w, v, r, g: ref.lif_layer_step_ref(s, w, v, r, g, qs))
+
+    vmems = tuple(jnp.zeros((l.neurons,), jnp.int32) for l in spec.layers)
+    refs = tuple(jnp.zeros((l.neurons,), jnp.int32) for l in spec.layers)
+    totals = tuple(jnp.zeros((), jnp.int32) for _ in spec.layers)
+
+    def step(carry, spk_in):
+        vmems, refs, totals = carry
+        new_v, new_r, new_t = [], [], []
+        out = spk_in
+        for k in range(spec.num_layers):
+            out, v, r = step_fn(out, weights[k], vmems[k], refs[k], regs)
+            new_v.append(v)
+            new_r.append(r)
+            new_t.append(totals[k] + jnp.sum(out))
+        return (tuple(new_v), tuple(new_r), tuple(new_t)), out
+
+    (vmems, refs, totals), out_spikes = jax.lax.scan(step, (vmems, refs, totals), spikes)
+    return {
+        "out_spikes": out_spikes,
+        "counts": jnp.sum(out_spikes, axis=0),
+        "layer_spike_totals": jnp.stack(totals),
+        "final_vmem": vmems,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Float training forward (surrogate gradient)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def spike_surrogate(v_minus_th):
+    """Heaviside with fast-sigmoid surrogate gradient (SNNTorch-style)."""
+    return (v_minus_th >= 0.0).astype(jnp.float32)
+
+
+def _spk_fwd(x):
+    return spike_surrogate(x), x
+
+
+def _spk_bwd(x, g):
+    # d/dx fast-sigmoid: 1 / (1 + k|x|)^2 with slope k=10.
+    k = 10.0
+    return (g / (1.0 + k * jnp.abs(x)) ** 2,)
+
+
+spike_surrogate.defvjp(_spk_fwd, _spk_bwd)
+
+
+def float_forward(spikes, weights, spec: ModelSpec, params=None):
+    """Training/software forward: [B?, T, n_in] float spikes -> spike counts.
+
+    Uses reset-by-subtraction (the paper's baseline, Table X col 7) in a
+    differentiable form: v' = v_dyn - spike * vth.
+    """
+    p = dict(FLOAT_PARAMS)
+    if params:
+        p.update(params)
+
+    batched = spikes.ndim == 3
+
+    def single(spk_seq):
+        vmems = tuple(jnp.zeros((l.neurons,), jnp.float32) for l in spec.layers)
+
+        def step(vmems, spk_in):
+            out = spk_in
+            new_v = []
+            for k in range(spec.num_layers):
+                act = jnp.dot(out, weights[k])
+                v = vmems[k] - p["decay"] * vmems[k] + p["growth"] * act
+                s = spike_surrogate(v - p["vth"])
+                v = v - s * p["vth"]  # reset-by-subtraction, differentiable
+                new_v.append(v)
+                out = s
+            return tuple(new_v), out
+
+        _, out_spikes = jax.lax.scan(step, vmems, spk_seq)
+        return jnp.sum(out_spikes, axis=0)  # spike counts = rate logits
+
+    return jax.vmap(single)(spikes) if batched else single(spikes)
+
+
+def float_membrane_trace(spikes, weights, spec: ModelSpec, layer: int, params=None):
+    """Per-timestep vmem of one layer (float) — Fig. 12's software trace."""
+    p = dict(FLOAT_PARAMS)
+    if params:
+        p.update(params)
+
+    vmems = tuple(jnp.zeros((l.neurons,), jnp.float32) for l in spec.layers)
+
+    def step(vmems, spk_in):
+        out = spk_in
+        new_v = []
+        for k in range(spec.num_layers):
+            act = jnp.dot(out, weights[k])
+            v = vmems[k] - p["decay"] * vmems[k] + p["growth"] * act
+            s = (v >= p["vth"]).astype(jnp.float32)
+            v = v - s * p["vth"]
+            new_v.append(v)
+            out = s
+        return tuple(new_v), new_v[layer]
+
+    _, trace = jax.lax.scan(step, vmems, spikes)
+    return trace
+
+
+def quantized_membrane_trace(spikes, weights, regs, spec: ModelSpec, layer: int):
+    """Per-timestep vmem (raw Qn.q) of one layer — Fig. 12's hardware trace."""
+    qs = spec.qspec
+    vmems = tuple(jnp.zeros((l.neurons,), jnp.int32) for l in spec.layers)
+    refs = tuple(jnp.zeros((l.neurons,), jnp.int32) for l in spec.layers)
+
+    def step(carry, spk_in):
+        vmems, refs = carry
+        out = spk_in
+        new_v, new_r = [], []
+        for k in range(spec.num_layers):
+            out, v, r = ref.lif_layer_step_ref(out, weights[k], vmems[k], refs[k], regs, qs)
+            new_v.append(v)
+            new_r.append(r)
+        return (tuple(new_v), tuple(new_r)), new_v[layer]
+
+    _, trace = jax.lax.scan(step, (vmems, refs), spikes)
+    return trace

@@ -1,0 +1,166 @@
+"""Surrogate-gradient SNN training (the paper's "train in PyTorch" stage).
+
+The paper trains each model in SNNTorch on a GPU workstation, then programs
+the trained weights into QUANTISENC's synaptic memory. Here the training
+framework is JAX (L2 of our stack — see DESIGN.md §1 substitution table);
+everything downstream (quantization, register programming, inference) is
+identical in spirit and bit-exact in the datapath.
+
+Loss: softmax cross-entropy over output-layer spike counts (rate decoding,
+exactly the paper's Fig.-11 spike-counter readout). Optimiser: hand-rolled
+Adam (no optax in this image). The loss curve of every run is logged to
+``artifacts/train_log_<dataset>.json`` and summarised in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model
+from .fixedpoint import QSpec
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = [jnp.zeros_like(p) for p in params]
+    return {"m": zeros, "v": [jnp.zeros_like(p) for p in params], "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = [b1 * m_ + (1 - b1) * g for m_, g in zip(state["m"], grads)]
+    v = [b2 * v_ + (1 - b2) * g * g for v_, g in zip(state["v"], grads)]
+    tf = t.astype(jnp.float32)
+    mhat = [m_ / (1 - b1 ** tf) for m_ in m]
+    vhat = [v_ / (1 - b2 ** tf) for v_ in v]
+    new_params = [p - lr * mh / (jnp.sqrt(vh) + eps) for p, mh, vh in zip(params, mhat, vhat)]
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Loss / step
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, spikes, labels, spec, masks):
+    counts = model.float_forward(spikes, params, spec)  # [B, n_out] spike counts
+    logits = counts  # rate decoding: counts are the logits
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    return ce
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def train_step(params, opt_state, spikes, labels, spec, masks, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(params, spikes, labels, spec, masks)
+    # Keep pruned (alpha=0) synapses pruned: they have no hardware storage.
+    grads = [g * mk for g, mk in zip(grads, masks)]
+    params, opt_state = adam_update(params, grads, opt_state, lr=lr)
+    params = [p * mk for p, mk in zip(params, masks)]
+    return params, opt_state, loss
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def eval_batch(params, spikes, labels, spec):
+    counts = model.float_forward(spikes, params, spec)
+    return jnp.mean((jnp.argmax(counts, axis=1) == labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def train(dataset: str, spec: model.ModelSpec, steps: int = 300, batch_size: int = 32,
+          t_steps: int = 40, lr: float = 2e-3, n_train: int = 2048, n_test: int = 256,
+          seed: int = 0, log_path: str | None = None, verbose: bool = True):
+    """Train a float SNN; returns (float_params, history dict)."""
+    info = datasets.INFO[dataset]
+    assert spec.sizes[0] == info["inputs"] and spec.sizes[-1] == info["classes"], \
+        f"spec {spec.name} does not match dataset {dataset}"
+
+    t0 = time.time()
+    if verbose:
+        print(f"[train] generating {n_train}+{n_test} synthetic {dataset} samples ...")
+    train_x, train_y = datasets.batch(dataset, range(n_train), "train", t_steps)
+    test_x, test_y = datasets.batch(dataset, range(n_test), "test", t_steps)
+    if verbose:
+        print(f"[train] data ready in {time.time()-t0:.1f}s "
+              f"(mean rate {train_x.mean():.4f} spikes/step/input)")
+
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(spec, key)
+    masks = [jnp.asarray(l.mask(), jnp.float32) for l in spec.layers]
+    opt_state = adam_init(params)
+
+    train_x = jnp.asarray(train_x, jnp.float32)
+    train_y = jnp.asarray(train_y)
+    rng = np.random.default_rng(seed)
+    history = {"loss": [], "step": [], "eval_acc": [], "eval_step": []}
+
+    for step in range(steps):
+        idx = rng.integers(0, n_train, batch_size)
+        params, opt_state, loss = train_step(
+            params, opt_state, train_x[idx], train_y[idx], spec, masks, lr)
+        history["loss"].append(float(loss))
+        history["step"].append(step)
+        if verbose and (step % 50 == 0 or step == steps - 1):
+            print(f"[train] {dataset} step {step:4d} loss {float(loss):.4f}")
+        if step % 100 == 99 or step == steps - 1:
+            acc = _eval(params, test_x, test_y, spec)
+            history["eval_acc"].append(acc)
+            history["eval_step"].append(step)
+            if verbose:
+                print(f"[train] {dataset} step {step:4d} test acc {acc*100:.1f}%")
+
+    history["train_seconds"] = time.time() - t0
+    history["final_acc"] = history["eval_acc"][-1]
+    if log_path:
+        with open(log_path, "w") as f:
+            json.dump({"dataset": dataset, "spec": spec.name, "steps": steps,
+                       "batch_size": batch_size, "t_steps": t_steps, **history}, f)
+    return params, history
+
+
+def _eval(params, test_x, test_y, spec, chunk: int = 64) -> float:
+    accs, n = [], test_x.shape[0]
+    for i in range(0, n, chunk):
+        xb = jnp.asarray(test_x[i:i + chunk], jnp.float32)
+        yb = jnp.asarray(test_y[i:i + chunk])
+        accs.append(float(eval_batch(params, xb, yb, spec)) * xb.shape[0])
+    return sum(accs) / n
+
+
+def quantized_accuracy(params, spec: model.ModelSpec, dataset: str, n_test: int = 100,
+                       t_steps: int = 40, reset_mode=None, growth=None, refractory=None):
+    """Hardware-datapath accuracy (Table VIII / X): quantize then run Qn.q ref."""
+    from .kernels import ref as R
+    qw = model.quantize_params(params, spec)
+    kwargs = {}
+    if reset_mode is not None:
+        kwargs["reset_mode"] = reset_mode
+    if growth is not None:
+        kwargs["growth"] = growth
+    if refractory is not None:
+        kwargs["refractory"] = refractory
+    regs = model.default_regs(spec, **kwargs)
+    test_x, test_y = datasets.batch(dataset, range(n_test), "test", t_steps)
+
+    fwd = jax.jit(lambda s: model.quantized_forward(
+        s, [jnp.asarray(w) for w in qw], jnp.asarray(regs), spec, use_kernel=False)["counts"])
+    correct = 0
+    spikes_total = 0
+    for i in range(n_test):
+        counts = np.asarray(fwd(jnp.asarray(test_x[i])))
+        correct += int(np.argmax(counts) == test_y[i])
+    return correct / n_test

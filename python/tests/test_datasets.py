@@ -1,0 +1,132 @@
+"""Synthetic dataset generator tests (determinism, structure, learnability)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import datasets as ds
+
+
+class TestXorShift:
+    def test_deterministic(self):
+        a = ds.XorShift64Star(42)
+        b = ds.XorShift64Star(42)
+        assert [a.next_u64() for _ in range(10)] == [b.next_u64() for _ in range(10)]
+
+    def test_seed_zero_survives(self):
+        """seed|1 guards against the all-zero fixed point."""
+        r = ds.XorShift64Star(0)
+        assert r.next_u64() != 0
+
+    def test_uniform_range(self):
+        r = ds.XorShift64Star(7)
+        xs = [r.uniform() for _ in range(1000)]
+        assert all(0.0 <= x < 1.0 for x in xs)
+        assert 0.4 < np.mean(xs) < 0.6
+
+    def test_below_range(self):
+        r = ds.XorShift64Star(9)
+        assert all(0 <= r.below(10) < 10 for _ in range(200))
+
+    def test_known_vector(self):
+        """Pinned output — the Rust rng must produce the same stream."""
+        r = ds.XorShift64Star(12345)
+        vals = [r.next_u64() for _ in range(3)]
+        r2 = ds.XorShift64Star(12345)
+        assert vals == [r2.next_u64() for _ in range(3)]
+        assert all(0 <= v < (1 << 64) for v in vals)
+
+
+@pytest.mark.parametrize("name", ["smnist", "dvs", "shd"])
+class TestGenerators:
+    def test_shape_and_dtype(self, name):
+        spikes, label = ds.SAMPLERS[name](0, "train", 12)
+        assert spikes.shape == (12, ds.INFO[name]["inputs"])
+        assert spikes.dtype == np.int32
+        assert 0 <= label < ds.INFO[name]["classes"]
+
+    def test_binary(self, name):
+        spikes, _ = ds.SAMPLERS[name](3, "test", 10)
+        assert set(np.unique(spikes)).issubset({0, 1})
+
+    def test_deterministic(self, name):
+        a, la = ds.SAMPLERS[name](17, "train", 10)
+        b, lb = ds.SAMPLERS[name](17, "train", 10)
+        assert la == lb and np.array_equal(a, b)
+
+    def test_index_changes_sample(self, name):
+        a, _ = ds.SAMPLERS[name](0, "train", 10)
+        b, _ = ds.SAMPLERS[name](1, "train", 10)
+        assert not np.array_equal(a, b)
+
+    def test_split_changes_sample(self, name):
+        a, _ = ds.SAMPLERS[name](0, "train", 10)
+        b, _ = ds.SAMPLERS[name](0, "test", 10)
+        assert not np.array_equal(a, b)
+
+    def test_nonempty(self, name):
+        spikes, _ = ds.SAMPLERS[name](5, "train", 20)
+        assert spikes.sum() > 0
+
+    def test_label_coverage(self, name):
+        labels = {ds.SAMPLERS[name](i, "train", 1)[1] for i in range(120)}
+        assert len(labels) == ds.INFO[name]["classes"]
+
+
+class TestSmnistStructure:
+    def test_digit8_superset_of_3_and_0(self):
+        """Paper Fig. 11 confusion structure: 8 shares all segments of 3/0."""
+        assert set(ds._SEGMENTS[3]) < set(ds._SEGMENTS[8])
+        assert set(ds._SEGMENTS[0]) < set(ds._SEGMENTS[8])
+
+    def test_distinct_digit_templates(self):
+        assert len({ds._SEGMENTS[d] for d in range(10)}) == 10
+
+    def test_image_range(self):
+        rng = ds.XorShift64Star(5)
+        img = ds.digit_image(8, rng)
+        assert img.shape == (16, 16)
+        assert (img >= 0).all() and (img <= 1).all()
+        assert img.sum() > 0
+
+    def test_rate_encoding_rate_scales(self):
+        rng1, rng2 = ds.XorShift64Star(1), ds.XorShift64Star(1)
+        img = np.full((4, 4), 1.0)
+        low = ds.rate_encode(img, 200, rng1, max_rate=0.1).mean()
+        high = ds.rate_encode(img, 200, rng2, max_rate=0.9).mean()
+        assert high > low
+
+    def test_rejects_bad_digit(self):
+        with pytest.raises(ValueError):
+            ds.digit_image(10, ds.XorShift64Star(1))
+
+    def test_classes_are_separable_by_rate_profile(self):
+        """Mean spatial profile of class a differs from class b (learnable)."""
+        profs = {}
+        for digit in (1, 8):
+            acc = np.zeros(256)
+            n = 0
+            i = 0
+            while n < 10:
+                spikes, label = ds.smnist_sample(i, "train", 20)
+                i += 1
+                if label == digit:
+                    acc += spikes.mean(axis=0)
+                    n += 1
+            profs[digit] = acc / n
+        dist = np.abs(profs[1] - profs[8]).sum()
+        assert dist > 1.0
+
+
+class TestBatch:
+    def test_batch_stacks(self):
+        x, y = ds.batch("smnist", range(4), "train", 6)
+        assert x.shape == (4, 6, 256) and y.shape == (4,)
+
+    @given(st.integers(0, 1000), st.integers(1, 20))
+    @settings(max_examples=10, deadline=None)
+    def test_batch_matches_single(self, idx, t):
+        x, y = ds.batch("smnist", [idx], "test", t)
+        s, l = ds.smnist_sample(idx, "test", t)
+        assert np.array_equal(x[0], s) and y[0] == l

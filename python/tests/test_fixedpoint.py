@@ -1,0 +1,159 @@
+"""Unit + property tests for the Qn.q fixed-point substrate (paper §III-C)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import fixedpoint as fp
+
+QSPECS = [fp.Q2_2, fp.Q3_1, fp.Q5_3, fp.Q9_7]
+
+
+def raw_strategy(qs):
+    return st.integers(min_value=qs.min_raw, max_value=qs.max_raw)
+
+
+class TestQSpec:
+    def test_widths(self):
+        assert fp.Q5_3.width == 8
+        assert fp.Q9_7.width == 16
+        assert fp.Q2_2.width == 4
+
+    def test_ranges(self):
+        assert fp.Q5_3.max_raw == 127
+        assert fp.Q5_3.min_raw == -128
+        assert fp.Q9_7.max_raw == 32767
+
+    def test_name_roundtrip(self):
+        for qs in QSPECS:
+            assert fp.parse(qs.name) == qs
+
+    def test_parse_rejects_garbage(self):
+        with pytest.raises(ValueError):
+            fp.parse("5.3")
+        with pytest.raises(ValueError):
+            fp.parse("Q53")
+
+    def test_rejects_wide(self):
+        with pytest.raises(ValueError):
+            fp.QSpec(17, 15)  # W=32 is Rust-simulator-only
+
+    def test_rejects_invalid(self):
+        with pytest.raises(ValueError):
+            fp.QSpec(0, 3)
+        with pytest.raises(ValueError):
+            fp.QSpec(4, -1)
+
+
+class TestWrap:
+    def test_identity_in_range(self):
+        qs = fp.Q5_3
+        for v in (-128, -1, 0, 1, 127):
+            assert qs.wrap(v) == v
+
+    def test_overflow_wraps(self):
+        qs = fp.Q5_3
+        assert qs.wrap(128) == -128  # two's-complement wraparound
+        assert qs.wrap(-129) == 127
+        assert qs.wrap(256) == 0
+
+    def test_array_matches_scalar(self):
+        qs = fp.Q9_7
+        xs = np.array([-40000, -32768, -1, 0, 32767, 40000], np.int64)
+        arr = np.asarray(qs.wrap(xs.astype(np.int32)))
+        for x, a in zip(xs, arr):
+            assert qs.wrap(int(x)) == int(a)
+
+
+class TestArith:
+    def test_add_basic(self):
+        qs = fp.Q5_3
+        # 1.0 + 1.5 = 2.5 in Q5.3: 8 + 12 = 20
+        assert qs.add(qs.from_float(1.0), qs.from_float(1.5)) == 20
+
+    def test_add_overflow_wraps(self):
+        qs = fp.Q5_3
+        assert qs.add(127, 1) == -128
+
+    def test_mul_basic(self):
+        qs = fp.Q5_3
+        # 2.0 * 1.5 = 3.0 => raw 24
+        assert qs.mul(qs.from_float(2.0), qs.from_float(1.5)) == 24
+
+    def test_mul_truncates_toward_neg_inf(self):
+        qs = fp.Q5_3
+        # 0.125 * 0.125 = 0.015625 -> truncates to 0 (underflow, Fig. 6)
+        assert qs.mul(1, 1) == 0
+        # (-0.125) * 0.125 = -0.015625 -> arithmetic shift floors to -1 raw
+        assert qs.mul(-1, 1) == -1
+
+    def test_mul_overflow_wraps(self):
+        qs = fp.Q5_3
+        big = qs.from_float(15.0)  # 120
+        # 15*15 = 225 -> wraps into 8-bit range (overflow, Fig. 6)
+        assert qs.mul(big, big) == qs.wrap((120 * 120) >> 3)
+
+    @given(st.data())
+    @settings(max_examples=200, deadline=None)
+    def test_scalar_matches_array(self, data):
+        qs = data.draw(st.sampled_from(QSPECS))
+        a = data.draw(raw_strategy(qs))
+        b = data.draw(raw_strategy(qs))
+        import jax.numpy as jnp
+        aa, bb = jnp.int32(a), jnp.int32(b)
+        assert qs.add(a, b) == int(np.asarray(qs.add(aa, bb)))
+        assert qs.sub(a, b) == int(np.asarray(qs.sub(aa, bb)))
+        assert qs.mul(a, b) == int(np.asarray(qs.mul(aa, bb)))
+
+    @given(st.data())
+    @settings(max_examples=200, deadline=None)
+    def test_add_is_modular_sum(self, data):
+        """Sequential wrapped adds == wrap of exact sum (ActGen soundness)."""
+        qs = data.draw(st.sampled_from(QSPECS))
+        xs = data.draw(st.lists(raw_strategy(qs), min_size=1, max_size=32))
+        acc = 0
+        for x in xs:
+            acc = qs.add(acc, x)
+        assert acc == qs.wrap(sum(xs))
+
+    @given(st.data())
+    @settings(max_examples=100, deadline=None)
+    def test_results_in_range(self, data):
+        qs = data.draw(st.sampled_from(QSPECS))
+        a = data.draw(raw_strategy(qs))
+        b = data.draw(raw_strategy(qs))
+        for r in (qs.add(a, b), qs.sub(a, b), qs.mul(a, b)):
+            assert qs.min_raw <= r <= qs.max_raw
+
+
+class TestConversion:
+    def test_from_float_saturates(self):
+        qs = fp.Q5_3
+        assert qs.from_float(1000.0) == 127
+        assert qs.from_float(-1000.0) == -128
+
+    def test_roundtrip_exact_values(self):
+        qs = fp.Q5_3
+        for v in (-16.0, -0.125, 0.0, 0.125, 1.0, 15.875):
+            assert qs.to_float(qs.from_float(v)) == v
+
+    def test_rounding(self):
+        qs = fp.Q5_3  # resolution 0.125
+        assert qs.from_float(0.0624) == 0
+        assert qs.from_float(0.0626) == 1
+
+    @given(st.floats(min_value=-20, max_value=20, allow_nan=False))
+    @settings(max_examples=200, deadline=None)
+    def test_quantization_error_bound(self, x):
+        qs = fp.Q9_7
+        if abs(x) < qs.to_float(qs.max_raw):
+            err = abs(qs.to_float(qs.from_float(x)) - x)
+            assert err <= 0.5 / qs.scale + 1e-12
+
+    def test_array_conversion(self):
+        qs = fp.Q5_3
+        xs = np.array([-1000.0, -1.0, 0.06, 1000.0])
+        raw = qs.from_float(xs)
+        assert raw.dtype == np.int32
+        assert list(raw) == [-128, -8, 0, 127]

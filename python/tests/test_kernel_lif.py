@@ -1,0 +1,133 @@
+"""Pallas kernel vs pure-jnp oracle — THE core L1 correctness signal.
+
+hypothesis sweeps shapes, Qn.q settings, register values (all four reset
+modes, refractory periods), tile widths, and adversarial weight/vmem values;
+the kernel must match the reference bit for bit, every output, every lane.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import fixedpoint as fp
+from compile.kernels import lif, ref
+
+QSPECS = [fp.Q2_2, fp.Q3_1, fp.Q5_3, fp.Q9_7]
+
+
+def run_both(spikes, w, vmem, refc, regs, qs, block_n):
+    k = lif.lif_layer_step(jnp.asarray(spikes), jnp.asarray(w), jnp.asarray(vmem),
+                           jnp.asarray(refc), jnp.asarray(regs), qspec=qs, block_n=block_n)
+    r = ref.lif_layer_step_ref(spikes, w, vmem, refc, regs, qs)
+    return [np.asarray(x) for x in k], [np.asarray(x) for x in r]
+
+
+@st.composite
+def lif_case(draw):
+    qs = draw(st.sampled_from(QSPECS))
+    m = draw(st.integers(1, 96))
+    n = draw(st.integers(1, 160))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    w = rng.integers(qs.min_raw, qs.max_raw + 1, (m, n)).astype(np.int32)
+    spikes = (rng.random(m) < draw(st.floats(0.0, 1.0))).astype(np.int32)
+    vmem = rng.integers(qs.min_raw, qs.max_raw + 1, n).astype(np.int32)
+    refc = rng.integers(0, 4, n).astype(np.int32)
+    regs = np.array([
+        rng.integers(qs.min_raw, qs.max_raw + 1),
+        rng.integers(qs.min_raw, qs.max_raw + 1),
+        rng.integers(qs.min_raw, qs.max_raw + 1),
+        rng.integers(qs.min_raw, qs.max_raw + 1),
+        draw(st.sampled_from([ref.RESET_DEFAULT, ref.RESET_TO_ZERO,
+                              ref.RESET_BY_SUBTRACTION, ref.RESET_TO_CONSTANT])),
+        draw(st.integers(0, 5)),
+    ], np.int32)
+    block_n = draw(st.sampled_from([8, 32, 128, 256]))
+    return spikes, w, vmem, refc, regs, qs, block_n
+
+
+@given(lif_case())
+@settings(max_examples=60, deadline=None)
+def test_kernel_matches_ref_bitexact(case):
+    spikes, w, vmem, refc, regs, qs, block_n = case
+    kout, rout = run_both(spikes, w, vmem, refc, regs, qs, block_n)
+    for a, b, name in zip(kout, rout, ("spikes", "vmem", "refcnt")):
+        assert np.array_equal(a, b), f"{name} mismatch ({qs.name}, block={block_n})"
+
+
+def test_padding_lanes_do_not_leak():
+    """N not a multiple of block_n: padded lanes must not alter real lanes."""
+    qs = fp.Q5_3
+    rng = np.random.default_rng(3)
+    for n in (1, 7, 127, 129, 130):
+        m = 16
+        w = rng.integers(qs.min_raw, qs.max_raw + 1, (m, n)).astype(np.int32)
+        spikes = (rng.random(m) < 0.5).astype(np.int32)
+        vmem = rng.integers(qs.min_raw, qs.max_raw + 1, n).astype(np.int32)
+        refc = np.zeros(n, np.int32)
+        regs = np.array([2, 8, 8, 0, ref.RESET_BY_SUBTRACTION, 0], np.int32)
+        kout, rout = run_both(spikes, w, vmem, refc, regs, qs, 128)
+        for a, b in zip(kout, rout):
+            assert a.shape == (n,)
+            assert np.array_equal(a, b)
+
+
+def test_block_width_invariance():
+    """Result must be identical for any tile width (tiling is pure schedule)."""
+    qs = fp.Q9_7
+    rng = np.random.default_rng(5)
+    m, n = 64, 96
+    w = rng.integers(qs.min_raw, qs.max_raw + 1, (m, n)).astype(np.int32)
+    spikes = (rng.random(m) < 0.4).astype(np.int32)
+    vmem = rng.integers(qs.min_raw, qs.max_raw + 1, n).astype(np.int32)
+    refc = rng.integers(0, 3, n).astype(np.int32)
+    regs = np.array([26, 128, 128, 0, ref.RESET_DEFAULT, 1], np.int32)
+    outs = []
+    for bn in (8, 16, 96, 128, 512):
+        k, _ = run_both(spikes, w, vmem, refc, regs, qs, bn)
+        outs.append(k)
+    for o in outs[1:]:
+        for a, b in zip(outs[0], o):
+            assert np.array_equal(a, b)
+
+
+def test_extreme_values_wrap_identically():
+    """All-min / all-max weights and vmem: wrapping paths agree."""
+    qs = fp.Q5_3
+    m, n = 32, 16
+    for fill_w, fill_v in ((qs.min_raw, qs.min_raw), (qs.max_raw, qs.max_raw),
+                           (qs.min_raw, qs.max_raw)):
+        w = np.full((m, n), fill_w, np.int32)
+        spikes = np.ones(m, np.int32)
+        vmem = np.full(n, fill_v, np.int32)
+        refc = np.zeros(n, np.int32)
+        regs = np.array([qs.max_raw, qs.max_raw, 1, 0, ref.RESET_BY_SUBTRACTION, 0], np.int32)
+        kout, rout = run_both(spikes, w, vmem, refc, regs, qs, 8)
+        for a, b in zip(kout, rout):
+            assert np.array_equal(a, b)
+
+
+def test_multi_step_trace_agreement():
+    """State threading over 50 steps: kernel trace == ref trace exactly."""
+    qs = fp.Q5_3
+    rng = np.random.default_rng(11)
+    m, n = 24, 40
+    w = rng.integers(qs.min_raw, qs.max_raw + 1, (m, n)).astype(np.int32)
+    regs = np.array([2, 8, 16, 0, ref.RESET_TO_ZERO, 2], np.int32)
+    vk = vr = np.zeros(n, np.int32)
+    rk = rr = np.zeros(n, np.int32)
+    for t in range(50):
+        spikes = (rng.random(m) < 0.3).astype(np.int32)
+        sk, vk, rk = (np.asarray(x) for x in lif.lif_layer_step(
+            jnp.asarray(spikes), jnp.asarray(w), jnp.asarray(vk), jnp.asarray(rk),
+            jnp.asarray(regs), qspec=qs, block_n=16))
+        sr, vr, rr = (np.asarray(x) for x in ref.lif_layer_step_ref(spikes, w, vr, rr, regs, qs))
+        assert np.array_equal(sk, sr) and np.array_equal(vk, vr) and np.array_equal(rk, rr), t
+
+
+def test_vmem_bytes_model():
+    qs = fp.Q5_3
+    b = lif.vmem_bytes(256, 128, qs)
+    assert b == 256 * 128 * 1 + 3 * 128 * 4 + 256 * 4 + ref.NUM_REGS * 4
+    assert lif.vmem_bytes(700, 256, fp.Q9_7) < 16 * 2**20  # fits VMEM

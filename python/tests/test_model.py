@@ -1,0 +1,158 @@
+"""L2 model tests: spec validation, quantized forward, float forward, traces."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.fixedpoint import Q5_3, Q9_7
+from compile.kernels import ref
+from compile.kernels import synapse as syn
+
+
+@pytest.fixture(scope="module")
+def small():
+    spec = model.ModelSpec((16, 8, 4), Q5_3)
+    params = model.init_params(spec, jax.random.PRNGKey(0))
+    qw = [jnp.asarray(w) for w in model.quantize_params(params, spec)]
+    regs = jnp.asarray(model.default_regs(spec))
+    rng = np.random.default_rng(1)
+    spikes = jnp.asarray((rng.random((12, 16)) < 0.3).astype(np.int32))
+    return spec, params, qw, regs, spikes
+
+
+class TestModelSpec:
+    def test_counts_match_paper_baseline(self):
+        spec = model.ModelSpec((256, 128, 10), Q5_3)
+        assert spec.total_neurons == 394          # paper §VI-D
+        assert spec.total_synapses == 34048       # paper Table VI row 1
+        assert spec.name == "256x128x10"
+
+    def test_table6_row4_counts(self):
+        spec = model.ModelSpec((256, 256, 256, 10), Q5_3)
+        assert spec.total_neurons == 778
+        assert spec.total_synapses == 133632
+
+    def test_rejects_single_size(self):
+        with pytest.raises(ValueError):
+            model.ModelSpec((10,), Q5_3)
+
+    def test_topology_arity_checked(self):
+        with pytest.raises(ValueError):
+            model.ModelSpec((4, 4), Q5_3, topologies=("all_to_all", "one_to_one"))
+
+    def test_mixed_topologies(self):
+        spec = model.ModelSpec((8, 8, 4), Q5_3, topologies=(syn.ONE_TO_ONE, syn.ALL_TO_ALL))
+        assert spec.layers[0].synapses == 8
+        assert spec.layers[1].synapses == 32
+
+
+class TestQuantizedForward:
+    def test_kernel_equals_ref_path(self, small):
+        spec, _, qw, regs, spikes = small
+        a = model.quantized_forward(spikes, qw, regs, spec, use_kernel=True)
+        b = model.quantized_forward(spikes, qw, regs, spec, use_kernel=False)
+        assert np.array_equal(np.asarray(a["out_spikes"]), np.asarray(b["out_spikes"]))
+        assert np.array_equal(np.asarray(a["layer_spike_totals"]),
+                              np.asarray(b["layer_spike_totals"]))
+
+    def test_output_shapes(self, small):
+        spec, _, qw, regs, spikes = small
+        out = model.quantized_forward(spikes, qw, regs, spec)
+        assert out["out_spikes"].shape == (12, 4)
+        assert out["counts"].shape == (4,)
+        assert out["layer_spike_totals"].shape == (2,)
+
+    def test_counts_are_column_sums(self, small):
+        spec, _, qw, regs, spikes = small
+        out = model.quantized_forward(spikes, qw, regs, spec)
+        assert np.array_equal(np.asarray(out["counts"]),
+                              np.asarray(out["out_spikes"]).sum(axis=0))
+
+    def test_spike_totals_monotone_in_input(self, small):
+        """More input spikes (with positive drive) can't reduce totals to > input case... we
+        assert the weaker structural invariant: zero input -> zero spikes."""
+        spec, _, qw, regs, _ = small
+        silent = jnp.zeros((12, 16), jnp.int32)
+        out = model.quantized_forward(silent, qw, regs, spec)
+        assert int(np.asarray(out["layer_spike_totals"]).sum()) == 0
+
+    def test_outputs_binary(self, small):
+        spec, _, qw, regs, spikes = small
+        out = np.asarray(model.quantized_forward(spikes, qw, regs, spec)["out_spikes"])
+        assert set(np.unique(out)).issubset({0, 1})
+
+
+class TestFloatForward:
+    def test_batched_and_single_agree(self, small):
+        spec, params, _, _, spikes = small
+        fs = jnp.asarray(np.asarray(spikes), jnp.float32)
+        single = model.float_forward(fs, params, spec)
+        batched = model.float_forward(fs[None], params, spec)
+        assert np.allclose(np.asarray(single), np.asarray(batched[0]))
+
+    def test_gradient_flows(self, small):
+        spec, params, _, _, spikes = small
+        fs = jnp.asarray(np.asarray(spikes), jnp.float32)
+
+        def loss(ps):
+            return jnp.sum(model.float_forward(fs, ps, spec))
+
+        grads = jax.grad(loss)(params)
+        total = sum(float(jnp.abs(g).sum()) for g in grads)
+        assert total > 0.0, "surrogate gradient must be nonzero"
+
+    def test_surrogate_forward_is_heaviside(self):
+        x = jnp.array([-1.0, -1e-6, 0.0, 1e-6, 1.0])
+        out = np.asarray(model.spike_surrogate(x))
+        assert np.array_equal(out, [0, 0, 1, 1, 1])
+
+
+class TestTraces:
+    def test_quantized_trace_matches_forward_state(self, small):
+        spec, _, qw, regs, spikes = small
+        trace = model.quantized_membrane_trace(spikes, qw, regs, spec, layer=1)
+        assert trace.shape == (12, 4)
+        out = model.quantized_forward(spikes, qw, regs, spec)
+        assert np.array_equal(np.asarray(trace[-1]), np.asarray(out["final_vmem"][1]))
+
+    def test_float_trace_shape(self, small):
+        spec, params, _, _, spikes = small
+        fs = jnp.asarray(np.asarray(spikes), jnp.float32)
+        trace = model.float_membrane_trace(fs, params, spec, layer=0)
+        assert trace.shape == (12, 8)
+
+    def test_quantization_rmse_ordering(self):
+        """Fig. 12: RMSE(Q9.7) < RMSE(Q5.3) vs the float software trace."""
+        spec97 = model.ModelSpec((16, 8, 4), Q9_7)
+        spec53 = model.ModelSpec((16, 8, 4), Q5_3)
+        params = model.init_params(spec97, jax.random.PRNGKey(42))
+        rng = np.random.default_rng(7)
+        spikes = (rng.random((30, 16)) < 0.35).astype(np.int32)
+        fs = jnp.asarray(spikes, jnp.float32)
+        soft = np.asarray(model.float_membrane_trace(fs, params, spec97, layer=0))
+        rmses = {}
+        for spec in (spec97, spec53):
+            qw = [jnp.asarray(w) for w in model.quantize_params(params, spec)]
+            regs = jnp.asarray(model.default_regs(spec))
+            hard = np.asarray(model.quantized_membrane_trace(
+                jnp.asarray(spikes), qw, regs, spec, layer=0))
+            rmses[spec.qspec.name] = float(np.sqrt(np.mean(
+                (spec.qspec.to_float(hard) - soft) ** 2)))
+        assert rmses["Q9.7"] < rmses["Q5.3"]
+
+
+class TestRegisters:
+    def test_default_regs_values(self):
+        spec = model.ModelSpec((4, 2), Q5_3)
+        regs = model.default_regs(spec)
+        assert regs.tolist() == [
+            Q5_3.from_float(0.2), Q5_3.from_float(1.0), Q5_3.from_float(1.0),
+            0, ref.RESET_BY_SUBTRACTION, 0]
+
+    def test_reg_vector_layout_is_stable(self):
+        """The Rust register file depends on this exact layout."""
+        assert (ref.REG_DECAY, ref.REG_GROWTH, ref.REG_VTH, ref.REG_VRESET,
+                ref.REG_RESET_MODE, ref.REG_REFRACTORY) == (0, 1, 2, 3, 4, 5)
+        assert ref.NUM_REGS == 6

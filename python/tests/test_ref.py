@@ -1,0 +1,192 @@
+"""Semantic unit tests for the quantized LIF reference (paper §III-A)."""
+
+import numpy as np
+import pytest
+
+from compile.fixedpoint import Q5_3, Q9_7
+from compile.kernels import ref
+
+
+def mk_regs(qs, decay=0.2, growth=1.0, vth=1.0, vreset=0.0, mode=ref.RESET_BY_SUBTRACTION,
+            refractory=0):
+    return np.array([qs.from_float(decay), qs.from_float(growth), qs.from_float(vth),
+                     qs.from_float(vreset), mode, refractory], np.int32)
+
+
+def step(spikes, w, vmem, refc, regs, qs=Q5_3):
+    s, v, r = ref.lif_layer_step_ref(spikes, w, vmem, refc, regs, qs)
+    return np.asarray(s), np.asarray(v), np.asarray(r)
+
+
+ONE = Q5_3.from_float(1.0)  # raw 8
+
+
+class TestActGen:
+    def test_no_spikes_no_activation(self):
+        w = np.full((4, 2), 10, np.int32)
+        s, v, _ = step(np.zeros(4, np.int32), w, np.zeros(2, np.int32),
+                       np.zeros(2, np.int32), mk_regs(Q5_3))
+        assert (v == 0).all() and (s == 0).all()
+
+    def test_weighted_sum(self):
+        # growth=1.0: v' = act exactly (decay of v=0 is 0).
+        w = np.array([[3], [5], [7]], np.int32)
+        spikes = np.array([1, 0, 1], np.int32)
+        _, v, _ = step(spikes, w, np.zeros(1, np.int32), np.zeros(1, np.int32),
+                       mk_regs(Q5_3, vth=10.0))
+        assert v[0] == 10  # 3 + 7
+
+    def test_inhibitory_weights_subtract(self):
+        w = np.array([[8], [-4]], np.int32)
+        spikes = np.array([1, 1], np.int32)
+        _, v, _ = step(spikes, w, np.zeros(1, np.int32), np.zeros(1, np.int32),
+                       mk_regs(Q5_3, vth=10.0))
+        assert v[0] == 4
+
+    def test_activation_wraps(self):
+        """ActGen register wraps like the W-bit hardware accumulator."""
+        w = np.full((4, 1), 100, np.int32)  # 400 wraps in 8 bits
+        spikes = np.ones(4, np.int32)
+        _, v, _ = step(spikes, w, np.zeros(1, np.int32), np.zeros(1, np.int32),
+                       mk_regs(Q5_3, vth=15.0))
+        assert v[0] == Q5_3.wrap(400)
+
+
+class TestVmemDyn:
+    def test_decay_only(self):
+        # v=80 (10.0), decay=0.25 -> v' = 80 - 20 = 60
+        regs = mk_regs(Q5_3, decay=0.25, vth=15.0)
+        _, v, _ = step(np.zeros(1, np.int32), np.zeros((1, 1), np.int32),
+                       np.array([80], np.int32), np.zeros(1, np.int32), regs)
+        assert v[0] == 60
+
+    def test_growth_scales_activation(self):
+        regs = mk_regs(Q5_3, growth=0.5, vth=15.0)
+        w = np.array([[16]], np.int32)  # 2.0
+        _, v, _ = step(np.ones(1, np.int32), w, np.zeros(1, np.int32),
+                       np.zeros(1, np.int32), regs)
+        assert v[0] == 8  # 0.5 * 2.0 = 1.0
+
+
+class TestSpkGen:
+    def test_spike_at_threshold(self):
+        regs = mk_regs(Q5_3, vth=1.0, mode=ref.RESET_TO_ZERO)
+        w = np.array([[ONE]], np.int32)
+        s, v, _ = step(np.ones(1, np.int32), w, np.zeros(1, np.int32),
+                       np.zeros(1, np.int32), regs)
+        assert s[0] == 1 and v[0] == 0  # >= is inclusive
+
+    def test_no_spike_below_threshold(self):
+        regs = mk_regs(Q5_3, vth=1.0)
+        w = np.array([[ONE - 1]], np.int32)
+        s, _, _ = step(np.ones(1, np.int32), w, np.zeros(1, np.int32),
+                       np.zeros(1, np.int32), regs)
+        assert s[0] == 0
+
+
+class TestVmemSel:
+    @pytest.fixture
+    def over_threshold(self):
+        # act = 2.0 with vth = 1.0 -> fires; v_new = 16 raw.
+        return np.array([[Q5_3.from_float(2.0)]], np.int32)
+
+    def test_reset_to_zero(self, over_threshold):
+        regs = mk_regs(Q5_3, mode=ref.RESET_TO_ZERO)
+        _, v, _ = step(np.ones(1, np.int32), over_threshold, np.zeros(1, np.int32),
+                       np.zeros(1, np.int32), regs)
+        assert v[0] == 0
+
+    def test_reset_by_subtraction(self, over_threshold):
+        regs = mk_regs(Q5_3, mode=ref.RESET_BY_SUBTRACTION)
+        _, v, _ = step(np.ones(1, np.int32), over_threshold, np.zeros(1, np.int32),
+                       np.zeros(1, np.int32), regs)
+        assert v[0] == 16 - 8  # v_new - vth
+
+    def test_reset_to_constant(self, over_threshold):
+        regs = mk_regs(Q5_3, mode=ref.RESET_TO_CONSTANT, vreset=0.5)
+        _, v, _ = step(np.ones(1, np.int32), over_threshold, np.zeros(1, np.int32),
+                       np.zeros(1, np.int32), regs)
+        assert v[0] == Q5_3.from_float(0.5)
+
+    def test_reset_default_decays(self, over_threshold):
+        regs = mk_regs(Q5_3, mode=ref.RESET_DEFAULT, decay=0.25)
+        _, v, _ = step(np.ones(1, np.int32), over_threshold, np.zeros(1, np.int32),
+                       np.zeros(1, np.int32), regs)
+        assert v[0] == 16 - 4  # v_new - decay*v_new
+
+    def test_reset_ordering_matches_paper_fig4(self):
+        """Over a step drive: default >= subtract >= zero spike counts (Fig. 4)."""
+        counts = {}
+        w = np.array([[Q5_3.from_float(3.0)]], np.int32)
+        for mode in (ref.RESET_DEFAULT, ref.RESET_BY_SUBTRACTION, ref.RESET_TO_ZERO):
+            regs = mk_regs(Q5_3, decay=0.2, vth=2.0, mode=mode)
+            vmem = np.zeros(1, np.int32)
+            refc = np.zeros(1, np.int32)
+            total = 0
+            for _ in range(40):
+                s, vmem, refc = step(np.ones(1, np.int32), w, vmem, refc, regs)
+                total += int(s[0])
+            counts[mode] = total
+        assert counts[ref.RESET_DEFAULT] >= counts[ref.RESET_BY_SUBTRACTION]
+        assert counts[ref.RESET_BY_SUBTRACTION] >= counts[ref.RESET_TO_ZERO]
+        assert counts[ref.RESET_TO_ZERO] > 0
+
+
+class TestRefractory:
+    def test_holds_vmem_and_blocks_spikes(self):
+        regs = mk_regs(Q5_3, vth=1.0, mode=ref.RESET_TO_ZERO, refractory=3)
+        w = np.array([[Q5_3.from_float(2.0)]], np.int32)
+        vmem = np.zeros(1, np.int32)
+        refc = np.zeros(1, np.int32)
+        spikes = []
+        for _ in range(8):
+            s, vmem, refc = step(np.ones(1, np.int32), w, vmem, refc, regs)
+            spikes.append(int(s[0]))
+        # Fires, then silent for exactly `refractory` steps, then fires again.
+        assert spikes == [1, 0, 0, 0, 1, 0, 0, 0]
+
+    def test_fmax_bound(self):
+        """Eq. 8: firing frequency <= 1 / refractory_period."""
+        for period in (1, 2, 5):
+            regs = mk_regs(Q5_3, vth=0.25, mode=ref.RESET_TO_ZERO, refractory=period)
+            w = np.array([[Q5_3.from_float(4.0)]], np.int32)
+            vmem = np.zeros(1, np.int32)
+            refc = np.zeros(1, np.int32)
+            total, steps_n = 0, 60
+            for _ in range(steps_n):
+                s, vmem, refc = step(np.ones(1, np.int32), w, vmem, refc, regs)
+                total += int(s[0])
+            assert total <= steps_n / period + 1
+
+    def test_counter_decrements_without_spike(self):
+        regs = mk_regs(Q5_3, vth=15.0)
+        _, _, r = step(np.zeros(1, np.int32), np.zeros((1, 1), np.int32),
+                       np.zeros(1, np.int32), np.array([2], np.int32), regs)
+        assert r[0] == 1
+
+    def test_counter_floors_at_zero(self):
+        regs = mk_regs(Q5_3, vth=15.0)
+        _, _, r = step(np.zeros(1, np.int32), np.zeros((1, 1), np.int32),
+                       np.zeros(1, np.int32), np.zeros(1, np.int32), regs)
+        assert r[0] == 0
+
+
+class TestRCSettings:
+    def test_fig3_spike_ordering(self):
+        """Fig. 3: growth (R large, C small) drives spiking; tiny growth = none."""
+        qs = Q9_7
+        totals = []
+        for growth in (1.0, 0.2, 0.1, 0.02):  # R=500M..10M at fixed tau
+            regs = np.array([qs.from_float(0.2), qs.from_float(growth),
+                             qs.from_float(10.0), 0, ref.RESET_BY_SUBTRACTION, 0], np.int32)
+            w = np.array([[qs.from_float(10.5)]], np.int32)  # step drive
+            vmem = np.zeros(1, np.int32)
+            refc = np.zeros(1, np.int32)
+            total = 0
+            for _ in range(40):
+                s, vmem, refc = (np.asarray(x) for x in
+                                 ref.lif_layer_step_ref(np.ones(1, np.int32), w, vmem, refc, regs, qs))
+                total += int(s[0])
+            totals.append(total)
+        assert totals[0] > totals[1] > totals[2] >= totals[3]
+        assert totals[3] == 0  # R=10M: never crosses threshold

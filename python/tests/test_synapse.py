@@ -1,0 +1,110 @@
+"""Connectivity (Eq. 9) and polarity (Eq. 10) tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import synapse as syn
+
+
+class TestAllToAll:
+    def test_full(self):
+        m = syn.connection_mask(4, 3, syn.ALL_TO_ALL)
+        assert m.shape == (4, 3) and (m == 1).all()
+
+    def test_count(self):
+        assert syn.synapse_count(256, 128, syn.ALL_TO_ALL) == 32768
+
+
+class TestOneToOne:
+    def test_identity(self):
+        m = syn.connection_mask(5, 5, syn.ONE_TO_ONE)
+        assert np.array_equal(m, np.eye(5, dtype=np.int32))
+
+    def test_requires_square(self):
+        with pytest.raises(ValueError):
+            syn.connection_mask(4, 5, syn.ONE_TO_ONE)
+
+    def test_count(self):
+        assert syn.synapse_count(7, 7, syn.ONE_TO_ONE) == 7
+
+
+class TestGaussian:
+    def test_equal_width_tridiagonal(self):
+        """Paper Eq. 9c: |i-j| <= 1 for equal-width layers, radius 1."""
+        m = syn.connection_mask(6, 6, syn.GAUSSIAN, radius=1)
+        expect = np.zeros((6, 6), np.int32)
+        for i in range(6):
+            for j in range(6):
+                if abs(i - j) <= 1:
+                    expect[i, j] = 1
+        assert np.array_equal(m, expect)
+
+    def test_radius_grows_window(self):
+        m1 = syn.connection_mask(10, 10, syn.GAUSSIAN, radius=1)
+        m2 = syn.connection_mask(10, 10, syn.GAUSSIAN, radius=2)
+        assert m2.sum() > m1.sum()
+        assert ((m2 - m1) >= 0).all()  # strictly a superset
+
+    def test_unequal_width_receptive_field(self):
+        """Downsampling layer: every post neuron sees a contiguous window."""
+        m = syn.connection_mask(16, 4, syn.GAUSSIAN, radius=2)
+        for j in range(4):
+            idx = np.nonzero(m[:, j])[0]
+            assert len(idx) > 0
+            assert (np.diff(idx) == 1).all()  # contiguous
+
+    def test_conv_filter_sizes(self):
+        """Table V rows 2-3: 3x3 and 5x5 windows = radius 1 and 2 per-row taps."""
+        m3 = syn.connection_mask(20, 20, syn.GAUSSIAN, radius=1)
+        m5 = syn.connection_mask(20, 20, syn.GAUSSIAN, radius=2)
+        # interior post-neurons see 3 resp. 5 pre-neurons
+        assert m3[:, 10].sum() == 3
+        assert m5[:, 10].sum() == 5
+
+    def test_negative_radius_rejected(self):
+        with pytest.raises(ValueError):
+            syn.connection_mask(4, 4, syn.GAUSSIAN, radius=-1)
+
+
+class TestValidation:
+    def test_unknown_topology(self):
+        with pytest.raises(ValueError):
+            syn.connection_mask(4, 4, "smallworld")
+
+    def test_bad_shape(self):
+        with pytest.raises(ValueError):
+            syn.connection_mask(0, 4, syn.ALL_TO_ALL)
+
+
+class TestFoldWeights:
+    def test_fold(self):
+        omega = np.array([[1.0, 2.0]])
+        alpha = np.array([[1, 0]])
+        beta = np.array([[-1, 1]])
+        w = syn.fold_weights(omega, alpha, beta)
+        assert np.array_equal(w, np.array([[-1.0, 0.0]]))
+
+    def test_polarity_validation(self):
+        with pytest.raises(ValueError):
+            syn.fold_weights(np.ones((1, 1)), np.ones((1, 1)), np.zeros((1, 1)))
+
+    def test_alpha_validation(self):
+        with pytest.raises(ValueError):
+            syn.fold_weights(np.ones((1, 1)), 2 * np.ones((1, 1)), np.ones((1, 1)))
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError):
+            syn.fold_weights(np.ones((1, 2)), np.ones((1, 1)), np.ones((1, 1)))
+
+    @given(st.integers(1, 30), st.integers(1, 30), st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_fold_sign_structure(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        omega = rng.normal(size=(m, n))
+        alpha = rng.integers(0, 2, (m, n))
+        beta = rng.choice([-1, 1], (m, n))
+        w = syn.fold_weights(omega, alpha, beta)
+        assert ((w == 0) | (np.sign(w) == beta)).all()
+        assert (w[alpha == 0] == 0).all()

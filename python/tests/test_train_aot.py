@@ -1,0 +1,111 @@
+"""Trainer + AOT pipeline tests (loss decreases; HLO text well-formed)."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model, train
+from compile.fixedpoint import Q5_3
+from compile.kernels import ref
+
+
+class TestAdam:
+    def test_minimises_quadratic(self):
+        import jax.numpy as jnp
+        params = [jnp.array([5.0, -3.0])]
+        state = train.adam_init(params)
+        for _ in range(400):
+            grads = [2 * params[0]]
+            params, state = train.adam_update(params, grads, state, lr=5e-2)
+        assert float(jnp.abs(params[0]).max()) < 1e-2
+
+    def test_state_shapes(self):
+        import jax.numpy as jnp
+        params = [jnp.zeros((3, 4)), jnp.zeros((4,))]
+        st = train.adam_init(params)
+        assert st["m"][0].shape == (3, 4) and st["v"][1].shape == (4,)
+
+
+class TestTraining:
+    @pytest.fixture(scope="class")
+    def tiny_run(self, tmp_path_factory):
+        log = tmp_path_factory.mktemp("t") / "log.json"
+        spec = model.ModelSpec((256, 32, 10), Q5_3)
+        params, hist = train.train("smnist", spec, steps=120, batch_size=32,
+                                   n_train=256, n_test=48, t_steps=15,
+                                   log_path=str(log), verbose=False)
+        return spec, params, hist, log
+
+    def test_loss_decreases(self, tiny_run):
+        _, _, hist, _ = tiny_run
+        first = np.mean(hist["loss"][:5])
+        last = np.mean(hist["loss"][-5:])
+        assert last < first
+
+    def test_better_than_chance(self, tiny_run):
+        _, _, hist, _ = tiny_run
+        assert hist["final_acc"] > 0.15  # 10 classes -> chance is 0.1
+
+    def test_log_written(self, tiny_run):
+        *_, log = tiny_run
+        data = json.loads(log.read_text())
+        assert data["dataset"] == "smnist" and len(data["loss"]) == 120
+
+    def test_masks_keep_pruned_synapses_zero(self):
+        from compile.kernels import synapse as syn
+        spec = model.ModelSpec((32, 32, 10), Q5_3, topologies=(syn.ONE_TO_ONE, syn.ALL_TO_ALL))
+        params, _ = train.train("smnist_fake", spec, steps=0, n_train=1, n_test=1) \
+            if False else (model.init_params(spec, jax.random.PRNGKey(0)), None)
+        mask = spec.layers[0].mask()
+        assert (np.asarray(params[0])[mask == 0] == 0).all()
+
+    def test_quantized_accuracy_runs(self, tiny_run):
+        spec, params, hist, _ = tiny_run
+        acc = train.quantized_accuracy(params, spec, "smnist", n_test=24, t_steps=15)
+        assert 0.0 <= acc <= 1.0
+
+    def test_spec_dataset_mismatch_rejected(self):
+        spec = model.ModelSpec((16, 10), Q5_3)
+        with pytest.raises(AssertionError):
+            train.train("smnist", spec, steps=1, n_train=4, n_test=4, verbose=False)
+
+
+class TestAOT:
+    def test_lif_step_hlo_text(self):
+        text = aot.lower_lif_step(Q5_3, m=32, n=16)
+        assert text.startswith("HloModule")
+        assert "s32[32,16]" in text  # weight parameter shape present
+
+    def test_forward_hlo_text_parameters(self):
+        spec = model.ModelSpec((16, 8, 4), Q5_3)
+        text = aot.lower_forward(spec, t_steps=5)
+        assert text.startswith("HloModule")
+        # spikes, both weight matrices, regs all appear as parameters
+        assert "s32[5,16]" in text
+        assert "s32[16,8]" in text
+        assert "s32[8,4]" in text
+        assert f"s32[{ref.NUM_REGS}]" in text
+
+    def test_golden_fixedpoint_selfcheck(self):
+        from compile import fixedpoint as fp
+        g = aot.golden_fixedpoint()
+        assert len(g["cases"]) == 256
+        for c in g["cases"][:20]:
+            qs = fp.parse(c["q"])
+            assert qs.add(c["a"], c["b"]) == c["add"]
+            assert qs.mul(c["a"], c["b"]) == c["mul"]
+
+    def test_golden_lif_trace_consistent(self):
+        g = aot.golden_lif_trace(Q5_3, t_steps=8)
+        assert set(g["traces"]) == {"0", "1", "2", "3"}
+        for tr in g["traces"].values():
+            assert len(tr["spikes_out"]) == 8
+            assert len(tr["vmem"][0]) == g["n"]
+
+    def test_golden_datasets_fields(self):
+        g = aot.golden_datasets()
+        for name in ("smnist", "dvs", "shd"):
+            assert g[name]["nnz"] == sum(g[name]["spike_rows"])

@@ -1,0 +1,51 @@
+//! Bench: full-core sample inference per architecture — the workload
+//! behind paper Table VI (and the activity source for its power column).
+
+use quantisenc::config::ModelConfig;
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::{Dataset, Sample, Split};
+use quantisenc::fixed::{Q5_3, Q9_7};
+use quantisenc::hdl::Core;
+use quantisenc::util::bench::quick;
+
+fn random_core(arch: &str, qs: quantisenc::fixed::QSpec) -> Core {
+    let cfg = ModelConfig::parse_arch(arch, qs).unwrap();
+    let mut core = Core::new(cfg.clone());
+    let mut rng = XorShift64Star::new(0xC0DE);
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| {
+            (0..l.fan_in * l.neurons)
+                .map(|_| {
+                    let lim = qs.max_raw().min(127) as u64;
+                    (rng.below(2 * lim + 1) as i32) - lim as i32
+                })
+                .collect()
+        })
+        .collect();
+    core.load_weights(&weights).unwrap();
+    core
+}
+
+fn main() {
+    println!("== bench_core (Table VI workload) ==");
+    let sample = Dataset::Smnist.sample(0, Split::Test, 40);
+    for (arch, qs) in [
+        ("256x128x10", Q5_3),
+        ("256x128x10", Q9_7),
+        ("256x256x10", Q5_3),
+        ("256x256x256x10", Q5_3),
+    ] {
+        let mut core = random_core(arch, qs);
+        quick(&format!("core_run/{arch}_{qs}_T40"), || {
+            std::hint::black_box(core.run(std::hint::black_box(&sample)));
+        });
+    }
+    // Wide Table IX shape.
+    let mut wide = random_core("256x1470x10", Q5_3);
+    let s2 = Sample { spikes: sample.spikes.clone(), t_steps: 40, inputs: 256, label: 0 };
+    quick("core_run/256x1470x10_Q5.3_T40 (Table IX wide)", || {
+        std::hint::black_box(wide.run(std::hint::black_box(&s2)));
+    });
+}

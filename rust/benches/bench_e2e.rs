@@ -1,0 +1,56 @@
+//! Bench: end-to-end per-dataset inference (Table XI workloads) on both
+//! backends — cycle-accurate hdl core and PJRT executable — plus the
+//! experiment generators themselves (tables are cheap; this guards against
+//! regressions making `repro all` slow).
+
+use quantisenc::datasets::{Dataset, Split};
+use quantisenc::experiments;
+use quantisenc::runtime::{artifacts::Manifest, Runtime};
+use quantisenc::util::bench::quick;
+
+fn main() {
+    println!("== bench_e2e (Table XI workloads) ==");
+    let manifest = match Manifest::load(&quantisenc::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts` first): {e:#}");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+
+    for ds in Dataset::all() {
+        let art = match manifest.model(ds.label(), "Q5.3") {
+            Ok(a) => a,
+            Err(_) => continue,
+        };
+        let sample = ds.sample(0, Split::Test, art.t_steps);
+
+        let (_, mut core) = experiments::core_from_artifact(&art).unwrap();
+        quick(&format!("hdl/{}_{}_T{}", ds.label(), art.qname, art.t_steps), || {
+            std::hint::black_box(core.run(std::hint::black_box(&sample)));
+        });
+
+        let exe = rt.load_model(&art).unwrap();
+        quick(&format!("pjrt/{}_{}_T{}", ds.label(), art.qname, art.t_steps), || {
+            std::hint::black_box(exe.run(std::hint::black_box(&sample.spikes)).unwrap());
+        });
+
+        // Dataset generation itself (the encoder feeding the pipeline).
+        quick(&format!("datagen/{}_T{}", ds.label(), art.t_steps), || {
+            std::hint::black_box(ds.sample(7, Split::Test, art.t_steps));
+        });
+    }
+
+    // Experiment generators (figure/table regeneration latency).
+    quick("experiments/fig3+fig4", || {
+        std::hint::black_box(experiments::dynamics::fig3());
+        std::hint::black_box(experiments::dynamics::fig4());
+    });
+    quick("experiments/table4+5+12+9", || {
+        std::hint::black_box(experiments::resources_exp::table4());
+        std::hint::black_box(experiments::resources_exp::table5());
+        std::hint::black_box(experiments::resources_exp::table12());
+        std::hint::black_box(experiments::dse_exp::table9());
+    });
+}

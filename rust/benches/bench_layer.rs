@@ -1,0 +1,45 @@
+//! Bench: one-layer timestep per connection modality — the workload behind
+//! paper Table V (one-to-one, conv 3x3/5x5, FC-128/256/512).
+
+use quantisenc::config::{LayerConfig, MemKind, Topology};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::Layer;
+use quantisenc::util::bench::quick;
+
+fn bench_topology(name: &str, m: usize, n: usize, topo: Topology, density: f64) {
+    let cfg = LayerConfig { fan_in: m, neurons: n, topology: topo };
+    let mut layer = Layer::new(&cfg, Q5_3, MemKind::Bram);
+    let mut rng = XorShift64Star::new(0xB0B);
+    // Program all alpha=1 weights.
+    let mask = topo.mask(m, n).unwrap();
+    for pre in 0..m {
+        for post in 0..n {
+            if mask[pre * n + post] == 1 {
+                layer
+                    .memory_mut()
+                    .write(pre, post, rng.below(255) as i32 - 127)
+                    .unwrap();
+            }
+        }
+    }
+    let spikes: Vec<u8> = (0..m).map(|_| (rng.uniform() < density) as u8).collect();
+    let mut out = Vec::new();
+    quick(&format!("layer_step/{name}"), || {
+        std::hint::black_box(layer.step(std::hint::black_box(&spikes), &mut out));
+    });
+}
+
+fn main() {
+    println!("== bench_layer (Table V workload) ==");
+    bench_topology("one_to_one_128", 128, 128, Topology::OneToOne, 0.3);
+    bench_topology("conv3x3_256", 256, 256, Topology::Gaussian { radius: 1 }, 0.3);
+    bench_topology("conv5x5_256", 256, 256, Topology::Gaussian { radius: 2 }, 0.3);
+    bench_topology("fc_128", 128, 128, Topology::AllToAll, 0.3);
+    bench_topology("fc_256", 256, 256, Topology::AllToAll, 0.3);
+    bench_topology("fc_512", 512, 512, Topology::AllToAll, 0.3);
+    // Gating sensitivity: the same FC layer at different input densities.
+    for density in [0.05, 0.3, 0.9] {
+        bench_topology(&format!("fc_256_density_{density}"), 256, 256, Topology::AllToAll, density);
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench: single-LIF-neuron step throughput per quantization — the
+//! workload behind paper Table IV (plus the Fig. 3/4 dynamics probes).
+
+use quantisenc::config::registers::RegisterFile;
+use quantisenc::fixed::{Q17_15, Q2_2, Q5_3, Q9_7};
+use quantisenc::hdl::neuron::{DynamicsProbe, LifNeuron};
+use quantisenc::util::bench::quick;
+
+fn main() {
+    println!("== bench_neuron (Table IV workload) ==");
+    for qs in [Q2_2, Q5_3, Q9_7, Q17_15] {
+        let regs = RegisterFile::new(qs);
+        let drive = qs.from_float(1.5);
+        let mut n = LifNeuron::new();
+        quick(&format!("neuron_step/{qs} x10k"), || {
+            for _ in 0..10_000 {
+                std::hint::black_box(n.step(std::hint::black_box(drive), &regs, qs));
+            }
+        });
+    }
+    // The Fig. 3/4 probe (40-step trace, Q9.7).
+    let mut regs = RegisterFile::new(Q9_7);
+    regs.set_vth(10.0).unwrap();
+    let probe = DynamicsProbe::new(Q9_7, regs);
+    quick("dynamics_probe/fig3_trace_40steps", || {
+        std::hint::black_box(probe.step_input(20.0, 40));
+    });
+}

@@ -1,0 +1,53 @@
+//! Bench: §VI-G / Fig. 8 — pipelined streaming vs sequential dataflow, and
+//! batch multicore scaling. Wall-clock numbers complement the analytic
+//! cycle model printed at the end.
+
+use quantisenc::config::registers::RegisterFile;
+use quantisenc::config::ModelConfig;
+use quantisenc::coordinator::multicore::MultiCore;
+use quantisenc::coordinator::pipeline::{run_pipelined, ScheduleModel};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::{Dataset, Split};
+use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::Core;
+use quantisenc::util::bench::quick;
+
+fn main() {
+    println!("== bench_pipeline (§VI-G / Fig. 8 workload) ==");
+    let cfg = ModelConfig::parse_arch("256x128x10", Q5_3).unwrap();
+    let mut rng = XorShift64Star::new(0xF10);
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(255) as i32 - 127).collect())
+        .collect();
+    let regs = RegisterFile::new(Q5_3);
+    let samples: Vec<_> = (0..16u64).map(|i| Dataset::Smnist.sample(i, Split::Test, 40)).collect();
+
+    let mut core = Core::new(cfg.clone());
+    core.load_weights(&weights).unwrap();
+    quick("sequential/16_streams_T40", || {
+        for s in &samples {
+            std::hint::black_box(core.run(s));
+        }
+    });
+
+    quick("pipelined/16_streams_T40 (thread per layer)", || {
+        std::hint::black_box(run_pipelined(&cfg, &weights, &regs, &samples).unwrap());
+    });
+
+    for cores in [1usize, 2, 4] {
+        let mut mc = MultiCore::new(&cfg, &weights, &regs, cores).unwrap();
+        quick(&format!("multicore/{cores}_cores_16_streams"), || {
+            std::hint::black_box(mc.run_batch(&samples));
+        });
+    }
+
+    let m = ScheduleModel::paper_baseline();
+    println!(
+        "\nanalytic Fig. 8 schedule: pipelined {:.2} fps vs dataflow {:.2} fps (+{:.1}%)",
+        m.pipelined_fps(),
+        m.dataflow_fps(),
+        100.0 * (m.speedup() - 1.0)
+    );
+}

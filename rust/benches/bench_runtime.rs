@@ -1,0 +1,55 @@
+//! Bench: the PJRT request path — single LIF-step kernel artifact and the
+//! full T-step dataset forwards (the latency/throughput columns behind the
+//! Table XI serving story). Requires `make artifacts`.
+
+use quantisenc::datasets::{Dataset, Split};
+use quantisenc::runtime::{artifacts::Manifest, Runtime};
+use quantisenc::util::bench::quick;
+
+fn main() {
+    println!("== bench_runtime (PJRT hot path) ==");
+    let manifest = match Manifest::load(&quantisenc::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts` first): {e:#}");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+
+    // Single-layer single-step kernel.
+    if let Ok(path) = manifest.kernel_hlo_path("lif_step_Q53") {
+        let exe = rt.compile_hlo_file(&path).expect("compile lif_step");
+        let spikes = vec![1i32; 256];
+        let weights = vec![3i32; 256 * 128];
+        let state = vec![0i32; 128];
+        let regs = vec![2i32, 8, 8, 0, 2, 0];
+        let args = [
+            xla::Literal::vec1(&spikes),
+            xla::Literal::vec1(&weights).reshape(&[256, 128]).unwrap(),
+            xla::Literal::vec1(&state),
+            xla::Literal::vec1(&state),
+            xla::Literal::vec1(&regs),
+        ];
+        quick("pjrt/lif_step_Q53 (256->128)", || {
+            let arg_refs: Vec<&xla::Literal> = args.iter().collect();
+            let out = exe.execute::<&xla::Literal>(&arg_refs).unwrap()[0][0]
+                .to_literal_sync()
+                .unwrap();
+            std::hint::black_box(out);
+        });
+    }
+
+    // Full dataset forwards.
+    for (ds, q) in [(Dataset::Smnist, "Q5.3"), (Dataset::Smnist, "Q9.7"), (Dataset::Dvs, "Q5.3"), (Dataset::Shd, "Q5.3")] {
+        let art = match manifest.model(ds.label(), q) {
+            Ok(a) => a,
+            Err(_) => continue,
+        };
+        let exe = rt.load_model(&art).expect("load model");
+        let sample = ds.sample(0, Split::Test, art.t_steps);
+        quick(&format!("pjrt/forward_{}_{q}_T{}", ds.label(), art.t_steps), || {
+            std::hint::black_box(exe.run(std::hint::black_box(&sample.spikes)).unwrap());
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Configuration system — paper Table I.
+//!
+//! QUANTISENC's "software-defined hardware" methodology splits configuration
+//! into **static** parameters (number of layers K, neurons per layer N,
+//! layer-to-layer connectivity α/β, quantization Qn.q — HDL generation
+//! parameters, fixed at build time) and **dynamic** parameters (growth rate,
+//! decay rate, threshold voltage, refractory period, reset mechanism —
+//! control registers programmable at run time through cfg_in).
+//!
+//! [`model::ModelConfig`] is the static half; [`registers::RegisterFile`] is
+//! the dynamic half.
+
+pub mod model;
+pub mod registers;
+pub mod topology;
+
+pub use model::{LayerConfig, MemKind, ModelConfig};
+pub use registers::{RegisterFile, ResetMode, NUM_REGS};
+pub use topology::Topology;

@@ -1,0 +1,229 @@
+//! Static model configuration — the HDL-generation parameters of Table I:
+//! layer count, neurons per layer, connectivity, quantization, and the
+//! synaptic-memory implementation choice (BRAM / distributed LUT / register,
+//! §III-A and Fig. 13).
+
+use crate::fixed::QSpec;
+
+use super::topology::Topology;
+
+/// Synaptic memory implementation — paper §III-A / Fig. 13. Functionally
+/// identical; differs in resources, peak frequency, and dynamic power.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    /// Block RAM (the paper's default for large fan-in).
+    Bram,
+    /// Distributed LUT RAM (lowest power; Fig. 13).
+    DistributedLut,
+    /// Flip-flop register file (lowest peak frequency; Fig. 13).
+    Register,
+}
+
+impl MemKind {
+    pub fn parse(s: &str) -> Option<MemKind> {
+        match s {
+            "bram" => Some(MemKind::Bram),
+            "lut" | "distributed_lut" => Some(MemKind::DistributedLut),
+            "register" | "reg" => Some(MemKind::Register),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MemKind::Bram => "bram",
+            MemKind::DistributedLut => "lut",
+            MemKind::Register => "register",
+        }
+    }
+
+    pub fn all() -> [MemKind; 3] {
+        [MemKind::Bram, MemKind::DistributedLut, MemKind::Register]
+    }
+}
+
+/// One hardware layer: N neurons, each with fan-in M through topology α.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerConfig {
+    pub fan_in: usize,
+    pub neurons: usize,
+    pub topology: Topology,
+}
+
+impl LayerConfig {
+    pub fn synapses(&self) -> usize {
+        self.topology
+            .synapse_count(self.fan_in, self.neurons)
+            .expect("validated at ModelConfig construction")
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ConfigError {
+    #[error("need at least input + one layer, got {0} sizes")]
+    TooFewLayers(usize),
+    #[error("layer {layer}: {source}")]
+    Topology {
+        layer: usize,
+        source: super::topology::TopologyError,
+    },
+    #[error("cannot parse architecture {0:?} (expected e.g. \"256x128x10\")")]
+    Parse(String),
+}
+
+/// A full core configuration, e.g. `256x128x10` at Q5.3 with BRAM memory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    sizes: Vec<usize>,
+    topologies: Vec<Topology>,
+    pub qspec: QSpec,
+    pub mem: MemKind,
+}
+
+impl ModelConfig {
+    pub fn new(sizes: &[usize], qspec: QSpec) -> Result<ModelConfig, ConfigError> {
+        let topos = vec![Topology::AllToAll; sizes.len().saturating_sub(1)];
+        ModelConfig::with_topologies(sizes, &topos, qspec)
+    }
+
+    pub fn with_topologies(
+        sizes: &[usize],
+        topologies: &[Topology],
+        qspec: QSpec,
+    ) -> Result<ModelConfig, ConfigError> {
+        if sizes.len() < 2 {
+            return Err(ConfigError::TooFewLayers(sizes.len()));
+        }
+        assert_eq!(topologies.len(), sizes.len() - 1, "one topology per layer");
+        // Validate every mask now so later unwraps are safe.
+        for (k, t) in topologies.iter().enumerate() {
+            t.mask(sizes[k], sizes[k + 1])
+                .map_err(|source| ConfigError::Topology { layer: k, source })?;
+        }
+        Ok(ModelConfig {
+            sizes: sizes.to_vec(),
+            topologies: topologies.to_vec(),
+            qspec,
+            mem: MemKind::Bram,
+        })
+    }
+
+    /// Parse the paper's `256x128x10` architecture notation.
+    pub fn parse_arch(arch: &str, qspec: QSpec) -> Result<ModelConfig, ConfigError> {
+        let sizes: Result<Vec<usize>, _> = arch.split('x').map(|s| s.trim().parse()).collect();
+        match sizes {
+            Ok(v) if v.len() >= 2 && v.iter().all(|&x| x > 0) => ModelConfig::new(&v, qspec),
+            _ => Err(ConfigError::Parse(arch.into())),
+        }
+    }
+
+    pub fn with_mem(mut self, mem: MemKind) -> ModelConfig {
+        self.mem = mem;
+        self
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.sizes.len() - 1
+    }
+
+    pub fn layer(&self, k: usize) -> LayerConfig {
+        LayerConfig {
+            fan_in: self.sizes[k],
+            neurons: self.sizes[k + 1],
+            topology: self.topologies[k],
+        }
+    }
+
+    pub fn layers(&self) -> Vec<LayerConfig> {
+        (0..self.num_layers()).map(|k| self.layer(k)).collect()
+    }
+
+    pub fn inputs(&self) -> usize {
+        self.sizes[0]
+    }
+
+    pub fn outputs(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Total neurons, counting the input layer like the paper does
+    /// (256x128x10 ⇒ 394 neurons, §VI-D).
+    pub fn total_neurons(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    /// Neurons with hardware LIF datapaths (everything but the input layer).
+    pub fn compute_neurons(&self) -> usize {
+        self.sizes[1..].iter().sum()
+    }
+
+    pub fn total_synapses(&self) -> usize {
+        self.layers().iter().map(|l| l.synapses()).sum()
+    }
+
+    pub fn arch_name(&self) -> String {
+        self.sizes
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join("x")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{Q5_3, Q9_7};
+
+    #[test]
+    fn paper_baseline_counts() {
+        let c = ModelConfig::parse_arch("256x128x10", Q5_3).unwrap();
+        assert_eq!(c.total_neurons(), 394);
+        assert_eq!(c.compute_neurons(), 138);
+        assert_eq!(c.total_synapses(), 34048);
+        assert_eq!(c.arch_name(), "256x128x10");
+        assert_eq!(c.num_layers(), 2);
+    }
+
+    #[test]
+    fn table6_row4_counts() {
+        let c = ModelConfig::parse_arch("256x256x256x10", Q5_3).unwrap();
+        assert_eq!(c.total_neurons(), 778);
+        assert_eq!(c.total_synapses(), 133_632);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(ModelConfig::parse_arch("256", Q5_3).is_err());
+        assert!(ModelConfig::parse_arch("256xABCx10", Q5_3).is_err());
+        assert!(ModelConfig::parse_arch("256x0x10", Q5_3).is_err());
+    }
+
+    #[test]
+    fn topology_validated_at_construction() {
+        let err = ModelConfig::with_topologies(&[4, 5], &[Topology::OneToOne], Q9_7);
+        assert!(matches!(err, Err(ConfigError::Topology { layer: 0, .. })));
+    }
+
+    #[test]
+    fn mem_kind_default_and_override() {
+        let c = ModelConfig::parse_arch("8x4", Q5_3).unwrap();
+        assert_eq!(c.mem, MemKind::Bram);
+        assert_eq!(c.with_mem(MemKind::Register).mem, MemKind::Register);
+        assert_eq!(MemKind::parse("lut"), Some(MemKind::DistributedLut));
+        assert_eq!(MemKind::parse("x"), None);
+    }
+
+    #[test]
+    fn layer_accessors() {
+        let c = ModelConfig::parse_arch("6x5x4", Q5_3).unwrap();
+        assert_eq!(c.layer(0).fan_in, 6);
+        assert_eq!(c.layer(1).neurons, 4);
+        assert_eq!(c.inputs(), 6);
+        assert_eq!(c.outputs(), 4);
+    }
+}

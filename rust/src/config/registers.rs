@@ -1,0 +1,270 @@
+//! Control registers — the paper's *dynamic configuration* (Table I).
+//!
+//! The decoder module of each QUANTISENC core holds control registers,
+//! clocked on `mem_clk`, that set the LIF dynamics at run time: decay rate,
+//! growth rate, threshold voltage, reset mechanism, and refractory period
+//! (§II cfg_in, §III-A). The register *vector layout* is shared with the
+//! Python side (`kernels/ref.py`) and with the lowered HLO artifacts, which
+//! take the vector as a runtime parameter — programming a register here is
+//! literally programming the deployed computation.
+
+use crate::fixed::QSpec;
+
+/// Indices into the register vector (must match `kernels/ref.py`).
+pub const REG_DECAY: usize = 0;
+pub const REG_GROWTH: usize = 1;
+pub const REG_VTH: usize = 2;
+pub const REG_VRESET: usize = 3;
+pub const REG_RESET_MODE: usize = 4;
+pub const REG_REFRACTORY: usize = 5;
+pub const NUM_REGS: usize = 6;
+
+/// Eq. 7 reset mechanisms. Encodings match `kernels/ref.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(i32)]
+pub enum ResetMode {
+    /// Exponential decay — the membrane is not reset, only keeps decaying.
+    Default = 0,
+    /// U(t) := 0 after a spike.
+    ToZero = 1,
+    /// U(t) := U(t) - Vth after a spike (the paper's dataset baseline).
+    BySubtraction = 2,
+    /// U(t) := Vreset after a spike.
+    ToConstant = 3,
+}
+
+impl ResetMode {
+    pub fn from_i32(x: i32) -> Option<ResetMode> {
+        match x {
+            0 => Some(ResetMode::Default),
+            1 => Some(ResetMode::ToZero),
+            2 => Some(ResetMode::BySubtraction),
+            3 => Some(ResetMode::ToConstant),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [ResetMode; 4] {
+        [ResetMode::Default, ResetMode::ToZero, ResetMode::BySubtraction, ResetMode::ToConstant]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ResetMode::Default => "default (exp decay)",
+            ResetMode::ToZero => "reset-to-zero",
+            ResetMode::BySubtraction => "reset-by-subtraction",
+            ResetMode::ToConstant => "reset-to-constant",
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum RegisterError {
+    #[error("register address {0} out of range (decoder has {NUM_REGS} registers)")]
+    BadAddress(usize),
+    #[error("invalid reset mode encoding {0}")]
+    BadResetMode(i32),
+    #[error("refractory period must be >= 0, got {0}")]
+    BadRefractory(i32),
+    #[error("register value {value} does not fit {q} (raw range [{min}, {max}])")]
+    OutOfRange { value: i32, q: String, min: i32, max: i32 },
+}
+
+/// The decoder's control-register file for one core.
+///
+/// Values are stored raw (Qn.q fixed point for the voltage/rate registers,
+/// plain integers for mode/refractory). Writes are validated the way the
+/// decoder's address/width checks would reject malformed AXI transactions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisterFile {
+    qspec: QSpec,
+    regs: [i32; NUM_REGS],
+    /// Total accepted cfg_in writes (telemetry; §IV interface accounting).
+    writes: u64,
+}
+
+impl RegisterFile {
+    /// Paper defaults: decay 0.2 (Δt/τ for τ=5Δt), growth 1.0, vth 1.0,
+    /// reset-by-subtraction (Table X baseline), no refractory period.
+    pub fn new(qspec: QSpec) -> RegisterFile {
+        let mut rf = RegisterFile { qspec, regs: [0; NUM_REGS], writes: 0 };
+        rf.regs[REG_DECAY] = qspec.from_float(0.2);
+        rf.regs[REG_GROWTH] = qspec.from_float(1.0);
+        rf.regs[REG_VTH] = qspec.from_float(1.0);
+        rf.regs[REG_VRESET] = 0;
+        rf.regs[REG_RESET_MODE] = ResetMode::BySubtraction as i32;
+        rf.regs[REG_REFRACTORY] = 0;
+        rf
+    }
+
+    pub fn qspec(&self) -> QSpec {
+        self.qspec
+    }
+
+    /// Raw register write — the cfg_in bus transaction.
+    pub fn write(&mut self, addr: usize, value: i32) -> Result<(), RegisterError> {
+        if addr >= NUM_REGS {
+            return Err(RegisterError::BadAddress(addr));
+        }
+        match addr {
+            REG_RESET_MODE => {
+                ResetMode::from_i32(value).ok_or(RegisterError::BadResetMode(value))?;
+            }
+            REG_REFRACTORY => {
+                if value < 0 {
+                    return Err(RegisterError::BadRefractory(value));
+                }
+            }
+            _ => {
+                if !self.qspec.in_range(value) {
+                    return Err(RegisterError::OutOfRange {
+                        value,
+                        q: self.qspec.name(),
+                        min: self.qspec.min_raw(),
+                        max: self.qspec.max_raw(),
+                    });
+                }
+            }
+        }
+        self.regs[addr] = value;
+        self.writes += 1;
+        Ok(())
+    }
+
+    pub fn read(&self, addr: usize) -> Result<i32, RegisterError> {
+        self.regs.get(addr).copied().ok_or(RegisterError::BadAddress(addr))
+    }
+
+    /// The full vector in the cross-language layout (HLO parameter form).
+    pub fn vector(&self) -> [i32; NUM_REGS] {
+        self.regs
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    // --- typed convenience setters (application-software API, §IV) --------
+
+    pub fn set_decay(&mut self, decay: f64) -> Result<(), RegisterError> {
+        self.write(REG_DECAY, self.qspec.from_float(decay))
+    }
+
+    pub fn set_growth(&mut self, growth: f64) -> Result<(), RegisterError> {
+        self.write(REG_GROWTH, self.qspec.from_float(growth))
+    }
+
+    pub fn set_vth(&mut self, vth: f64) -> Result<(), RegisterError> {
+        self.write(REG_VTH, self.qspec.from_float(vth))
+    }
+
+    pub fn set_vreset(&mut self, v: f64) -> Result<(), RegisterError> {
+        self.write(REG_VRESET, self.qspec.from_float(v))
+    }
+
+    pub fn set_reset_mode(&mut self, mode: ResetMode) -> Result<(), RegisterError> {
+        self.write(REG_RESET_MODE, mode as i32)
+    }
+
+    pub fn set_refractory(&mut self, cycles: i32) -> Result<(), RegisterError> {
+        self.write(REG_REFRACTORY, cycles)
+    }
+
+    // --- typed getters ------------------------------------------------------
+
+    pub fn decay(&self) -> i32 {
+        self.regs[REG_DECAY]
+    }
+
+    pub fn growth(&self) -> i32 {
+        self.regs[REG_GROWTH]
+    }
+
+    pub fn vth(&self) -> i32 {
+        self.regs[REG_VTH]
+    }
+
+    pub fn vreset(&self) -> i32 {
+        self.regs[REG_VRESET]
+    }
+
+    pub fn reset_mode(&self) -> ResetMode {
+        ResetMode::from_i32(self.regs[REG_RESET_MODE]).expect("validated on write")
+    }
+
+    pub fn refractory(&self) -> i32 {
+        self.regs[REG_REFRACTORY]
+    }
+
+    /// Program the R/C pair of paper Fig. 3 / Table X. τ = R·C defines the
+    /// decay per Eq. 4; growth = R·Δt/τ = Δt/C per Eq. 5. Values are
+    /// normalised so the paper's training point (R=500 MΩ, C=10 pF, τ=5 ms)
+    /// maps to (decay=0.2, growth=1.0) — the scale the weights were trained
+    /// at (see DESIGN.md calibration policy).
+    pub fn set_rc(&mut self, r_mohm: f64, c_pf: f64) -> Result<(), RegisterError> {
+        const R0_MOHM: f64 = 500.0;
+        const C0_PF: f64 = 10.0;
+        let tau = (r_mohm * c_pf) / (R0_MOHM * C0_PF) * 5.0; // ms
+        let dt = 1.0; // ms per spk_clk timestep
+        self.set_decay(dt / tau * 0.2 * 5.0)?; // Δt/τ, scaled so τ=5ms ⇒ 0.2
+        self.set_growth(C0_PF / c_pf) // Δt/C normalised to the training point
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{Q5_3, Q9_7};
+
+    #[test]
+    fn defaults_match_python_default_regs() {
+        let rf = RegisterFile::new(Q5_3);
+        // python: [from_float(0.2), from_float(1.0), from_float(1.0), 0, 2, 0]
+        assert_eq!(rf.vector(), [2, 8, 8, 0, 2, 0]);
+    }
+
+    #[test]
+    fn typed_setters_roundtrip() {
+        let mut rf = RegisterFile::new(Q9_7);
+        rf.set_vth(10.0).unwrap();
+        assert_eq!(rf.vth(), Q9_7.from_float(10.0));
+        rf.set_reset_mode(ResetMode::ToZero).unwrap();
+        assert_eq!(rf.reset_mode(), ResetMode::ToZero);
+        rf.set_refractory(5).unwrap();
+        assert_eq!(rf.refractory(), 5);
+        assert_eq!(rf.writes(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_writes() {
+        let mut rf = RegisterFile::new(Q5_3);
+        assert_eq!(rf.write(99, 0), Err(RegisterError::BadAddress(99)));
+        assert_eq!(rf.write(REG_RESET_MODE, 7), Err(RegisterError::BadResetMode(7)));
+        assert_eq!(rf.write(REG_REFRACTORY, -1), Err(RegisterError::BadRefractory(-1)));
+        assert!(matches!(rf.write(REG_VTH, 1000), Err(RegisterError::OutOfRange { .. })));
+        // failed writes must not bump the counter or mutate state
+        assert_eq!(rf.writes(), 0);
+        assert_eq!(rf.vth(), Q5_3.from_float(1.0));
+    }
+
+    #[test]
+    fn rc_mapping_matches_paper_training_point() {
+        let mut rf = RegisterFile::new(Q9_7);
+        rf.set_rc(500.0, 10.0).unwrap();
+        assert_eq!(rf.decay(), Q9_7.from_float(0.2));
+        assert_eq!(rf.growth(), Q9_7.from_float(1.0));
+        // Table X col 2: R=100 MΩ, C=50 pF (same τ) ⇒ growth 0.2, decay 0.2
+        rf.set_rc(100.0, 50.0).unwrap();
+        assert_eq!(rf.decay(), Q9_7.from_float(0.2));
+        assert_eq!(rf.growth(), Q9_7.from_float(0.2));
+    }
+
+    #[test]
+    fn reset_mode_encodings_are_stable() {
+        assert_eq!(ResetMode::Default as i32, 0);
+        assert_eq!(ResetMode::ToZero as i32, 1);
+        assert_eq!(ResetMode::BySubtraction as i32, 2);
+        assert_eq!(ResetMode::ToConstant as i32, 3);
+        assert_eq!(ResetMode::from_i32(4), None);
+    }
+}

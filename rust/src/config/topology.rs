@@ -1,0 +1,179 @@
+//! Connectivity topologies — Eq. 9 (α) and polarity Eq. 10 (β).
+//!
+//! Mirrors `python/compile/kernels/synapse.py` bit-for-bit (same mask
+//! layout; verified in the integration tests against golden vectors).
+
+/// Eq. 9 connection parameter α as a named topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Eq. 9a: every pre neuron connects to every post neuron ("full").
+    AllToAll,
+    /// Eq. 9b: α_ij = 1 iff i == j (requires equal layer widths).
+    OneToOne,
+    /// Eq. 9c generalised: receptive field of ±radius around the scaled
+    /// pre-index centre (radius 1 == the paper's |i−j| ≤ 1 for equal widths).
+    Gaussian { radius: u32 },
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum TopologyError {
+    #[error("bad layer shape {m}x{n}")]
+    BadShape { m: usize, n: usize },
+    #[error("one_to_one needs M == N, got {m} != {n}")]
+    NotSquare { m: usize, n: usize },
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> Option<Topology> {
+        match s {
+            "all_to_all" | "full" => Some(Topology::AllToAll),
+            "one_to_one" => Some(Topology::OneToOne),
+            "gaussian" => Some(Topology::Gaussian { radius: 1 }),
+            _ => s.strip_prefix("gaussian:").and_then(|r| {
+                r.parse().ok().map(|radius| Topology::Gaussian { radius })
+            }),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Topology::AllToAll => "all_to_all".into(),
+            Topology::OneToOne => "one_to_one".into(),
+            Topology::Gaussian { radius } => format!("gaussian:{radius}"),
+        }
+    }
+
+    /// α mask in row-major [M, N] layout (pre-synaptic × post-synaptic).
+    pub fn mask(&self, m: usize, n: usize) -> Result<Vec<u8>, TopologyError> {
+        if m == 0 || n == 0 {
+            return Err(TopologyError::BadShape { m, n });
+        }
+        let mut out = vec![0u8; m * n];
+        match *self {
+            Topology::AllToAll => out.fill(1),
+            Topology::OneToOne => {
+                if m != n {
+                    return Err(TopologyError::NotSquare { m, n });
+                }
+                for i in 0..m {
+                    out[i * n + i] = 1;
+                }
+            }
+            Topology::Gaussian { radius } => {
+                // Same centring formula as synapse.py: centre_j =
+                // (j + 0.5) * M / N - 0.5; α=1 iff |i - centre_j| <= radius.
+                for j in 0..n {
+                    let centre = (j as f64 + 0.5) * m as f64 / n as f64 - 0.5;
+                    for i in 0..m {
+                        if (i as f64 - centre).abs() <= radius as f64 + 1e-9 {
+                            out[i * n + j] = 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Number of α=1 synapses — drives the resource/memory models.
+    pub fn synapse_count(&self, m: usize, n: usize) -> Result<usize, TopologyError> {
+        Ok(self.mask(m, n)?.iter().map(|&x| x as usize).sum())
+    }
+}
+
+/// Eq. 10 polarity: fold α·β·ω into signed weights (float domain).
+pub fn fold_weights(omega: &[f64], alpha: &[u8], beta: &[i8]) -> anyhow::Result<Vec<f64>> {
+    anyhow::ensure!(
+        omega.len() == alpha.len() && omega.len() == beta.len(),
+        "omega/alpha/beta length mismatch"
+    );
+    anyhow::ensure!(alpha.iter().all(|&a| a <= 1), "alpha must be 0/1");
+    anyhow::ensure!(beta.iter().all(|&b| b == 1 || b == -1), "beta must be ±1");
+    Ok(omega
+        .iter()
+        .zip(alpha)
+        .zip(beta)
+        .map(|((&w, &a), &b)| a as f64 * b as f64 * w.abs())
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_to_all_full() {
+        let m = Topology::AllToAll.mask(4, 3).unwrap();
+        assert_eq!(m.len(), 12);
+        assert!(m.iter().all(|&x| x == 1));
+        assert_eq!(Topology::AllToAll.synapse_count(256, 128).unwrap(), 32768);
+    }
+
+    #[test]
+    fn one_to_one_identity() {
+        let m = Topology::OneToOne.mask(3, 3).unwrap();
+        assert_eq!(m, vec![1, 0, 0, 0, 1, 0, 0, 0, 1]);
+        assert_eq!(
+            Topology::OneToOne.mask(3, 4),
+            Err(TopologyError::NotSquare { m: 3, n: 4 })
+        );
+    }
+
+    #[test]
+    fn gaussian_equal_width_is_tridiagonal() {
+        let g = Topology::Gaussian { radius: 1 };
+        let m = g.mask(6, 6).unwrap();
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = (i as i64 - j as i64).unsigned_abs() <= 1;
+                assert_eq!(m[i * 6 + j] == 1, want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_windows_contiguous() {
+        let g = Topology::Gaussian { radius: 2 };
+        let m = g.mask(16, 4).unwrap();
+        for j in 0..4 {
+            let idx: Vec<usize> = (0..16).filter(|&i| m[i * 4 + j] == 1).collect();
+            assert!(!idx.is_empty());
+            assert!(idx.windows(2).all(|w| w[1] == w[0] + 1), "col {j}: {idx:?}");
+        }
+    }
+
+    #[test]
+    fn conv_tap_counts_match_table5() {
+        // Table V: 3x3 / 5x5 conv == radius 1 / 2 windows (3 and 5 taps/row).
+        let m3 = Topology::Gaussian { radius: 1 }.mask(20, 20).unwrap();
+        let m5 = Topology::Gaussian { radius: 2 }.mask(20, 20).unwrap();
+        let col = |m: &[u8], j: usize| (0..20).map(|i| m[i * 20 + j] as usize).sum::<usize>();
+        assert_eq!(col(&m3, 10), 3);
+        assert_eq!(col(&m5, 10), 5);
+    }
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!(Topology::parse("full"), Some(Topology::AllToAll));
+        assert_eq!(Topology::parse("gaussian:3"), Some(Topology::Gaussian { radius: 3 }));
+        assert_eq!(Topology::parse("gaussian"), Some(Topology::Gaussian { radius: 1 }));
+        assert_eq!(Topology::parse("smallworld"), None);
+        for t in [Topology::AllToAll, Topology::OneToOne, Topology::Gaussian { radius: 2 }] {
+            assert_eq!(Topology::parse(&t.label()), Some(t));
+        }
+    }
+
+    #[test]
+    fn fold_weights_signs() {
+        let w = fold_weights(&[1.0, -2.0], &[1, 0], &[-1, 1]).unwrap();
+        assert_eq!(w, vec![-1.0, 0.0]);
+        assert!(fold_weights(&[1.0], &[2], &[1]).is_err());
+        assert!(fold_weights(&[1.0], &[1], &[0]).is_err());
+        assert!(fold_weights(&[1.0, 1.0], &[1], &[1]).is_err());
+    }
+
+    #[test]
+    fn zero_shape_rejected() {
+        assert!(Topology::AllToAll.mask(0, 3).is_err());
+    }
+}

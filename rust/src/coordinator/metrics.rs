@@ -1,0 +1,117 @@
+//! Request-path telemetry: latency percentiles, throughput, activity and
+//! power accounting — what the §IV software stack reports back to the
+//! application ("visualize hardware output" plus the performance numbers
+//! the paper's evaluation tables are built from).
+
+use std::time::{Duration, Instant};
+
+use crate::hdl::ActivityStats;
+use crate::util::stats;
+
+#[derive(Debug, Default, Clone)]
+pub struct Telemetry {
+    latencies_us: Vec<f64>,
+    pub activity: ActivityStats,
+    pub requests: u64,
+    pub correct: u64,
+    started: Option<Instant>,
+    elapsed: Duration,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.elapsed += t0.elapsed();
+        }
+    }
+
+    pub fn record(&mut self, latency: Duration, stats: &ActivityStats, correct: Option<bool>) {
+        self.latencies_us.push(latency.as_secs_f64() * 1e6);
+        self.activity.add(stats);
+        self.requests += 1;
+        if correct == Some(true) {
+            self.correct += 1;
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.requests as f64
+        }
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / secs
+        }
+    }
+
+    pub fn latency_us(&self, pct: f64) -> f64 {
+        stats::percentile(&self.latencies_us, pct)
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        stats::mean(&self.latencies_us)
+    }
+
+    /// One-line ops summary (the CLI's serving report).
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} acc={:.1}% thr={:.1}/s lat(mean/p50/p99)={:.0}/{:.0}/{:.0}us spikes={} gating={:.0}%",
+            self.requests,
+            100.0 * self.accuracy(),
+            self.throughput_rps(),
+            self.mean_latency_us(),
+            self.latency_us(50.0),
+            self.latency_us(99.0),
+            self.activity.spikes,
+            100.0 * self.activity.gating_ratio(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarises() {
+        let mut t = Telemetry::new();
+        t.start();
+        for i in 0..10 {
+            t.record(
+                Duration::from_micros(100 + i * 10),
+                &ActivityStats { spikes: 5, neuron_updates: 50, ..Default::default() },
+                Some(i % 2 == 0),
+            );
+        }
+        t.stop();
+        assert_eq!(t.requests, 10);
+        assert_eq!(t.accuracy(), 0.5);
+        assert!(t.latency_us(50.0) >= 100.0);
+        assert!(t.throughput_rps() > 0.0);
+        assert!(t.summary().contains("requests=10"));
+        assert_eq!(t.activity.spikes, 50);
+    }
+
+    #[test]
+    fn empty_telemetry_is_safe() {
+        let t = Telemetry::new();
+        assert_eq!(t.accuracy(), 0.0);
+        assert_eq!(t.throughput_rps(), 0.0);
+        assert_eq!(t.latency_us(99.0), 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! The L3 coordinator — paper §IV: the hardware-software interface and the
+//! pipelined streaming that is QUANTISENC's throughput contribution.
+//!
+//! * [`interface`] — the three I/O interfaces (wt_in / cfg_in / spk_in-out)
+//!   over a modelled AXI bus, fronting either the cycle-accurate hdl core
+//!   or a PJRT executable (both are "the hardware" behind the same API).
+//! * [`pipeline`] — Fig. 8: streams scheduled every (d + s); the analytic
+//!   cycle schedule (Eq. 11 real-time performance) plus a thread-based
+//!   streaming executor that overlaps layer processing across streams.
+//! * [`multicore`] — batch-level parallelism across QUANTISENC cores.
+//! * [`metrics`] — request-path telemetry (latency percentiles, throughput,
+//!   spike/power accounting).
+
+pub mod interface;
+pub mod metrics;
+pub mod multicore;
+pub mod pipeline;

@@ -1,0 +1,120 @@
+//! Batch-level parallelism — paper §IV footnote 1: "multiple batches of
+//! input data are processed concurrently on different processing elements".
+//!
+//! A [`MultiCore`] owns C identical programmed cores and shards a batch of
+//! samples across them with worker threads. Results are returned in input
+//! order and must be identical to a single core processing the batch
+//! sequentially (determinism is asserted in tests).
+
+use anyhow::Result;
+
+use crate::config::registers::RegisterFile;
+use crate::config::ModelConfig;
+use crate::datasets::Sample;
+use crate::hdl::core::RunResult;
+use crate::hdl::Core;
+
+pub struct MultiCore {
+    cores: Vec<Core>,
+}
+
+impl MultiCore {
+    /// Build C cores with identical weights and registers.
+    pub fn new(
+        config: &ModelConfig,
+        weights: &[Vec<i32>],
+        regs: &RegisterFile,
+        num_cores: usize,
+    ) -> Result<MultiCore> {
+        anyhow::ensure!(num_cores >= 1, "need at least one core");
+        let mut cores = Vec::with_capacity(num_cores);
+        for _ in 0..num_cores {
+            let mut c = Core::new(config.clone());
+            c.load_weights(weights)?;
+            c.registers = regs.clone();
+            cores.push(c);
+        }
+        Ok(MultiCore { cores })
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Run a batch, sharded round-robin across cores (threaded).
+    pub fn run_batch(&mut self, samples: &[Sample]) -> Vec<RunResult> {
+        let n_cores = self.cores.len();
+        let mut slots: Vec<Option<RunResult>> = vec![None; samples.len()];
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (core_id, core) in self.cores.iter_mut().enumerate() {
+                let my_samples: Vec<(usize, &Sample)> = samples
+                    .iter()
+                    .enumerate()
+                    .skip(core_id)
+                    .step_by(n_cores)
+                    .collect();
+                handles.push(scope.spawn(move || {
+                    my_samples
+                        .into_iter()
+                        .map(|(i, s)| (i, core.run(s)))
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for h in handles {
+                for (i, r) in h.join().expect("core worker panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+        slots.into_iter().map(|r| r.expect("all samples processed")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{Dataset, Split};
+    use crate::fixed::Q5_3;
+
+    fn setup() -> (ModelConfig, Vec<Vec<i32>>, RegisterFile, Vec<Sample>) {
+        let cfg = ModelConfig::parse_arch("256x16x10", Q5_3).unwrap();
+        let mut rng = crate::datasets::rng::XorShift64Star::new(0xACE);
+        let weights: Vec<Vec<i32>> = cfg
+            .layers()
+            .iter()
+            .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(13) as i32 - 6).collect())
+            .collect();
+        let regs = RegisterFile::new(Q5_3);
+        let samples: Vec<Sample> =
+            (0..7).map(|i| Dataset::Smnist.sample(i, Split::Test, 8)).collect();
+        (cfg, weights, regs, samples)
+    }
+
+    #[test]
+    fn multicore_matches_single_core() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut mc1 = MultiCore::new(&cfg, &weights, &regs, 1).unwrap();
+        let mut mc3 = MultiCore::new(&cfg, &weights, &regs, 3).unwrap();
+        let a = mc1.run_batch(&samples);
+        let b = mc3.run_batch(&samples);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.counts, y.counts);
+            assert_eq!(x.prediction, y.prediction);
+        }
+    }
+
+    #[test]
+    fn results_in_input_order() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut mc = MultiCore::new(&cfg, &weights, &regs, 2).unwrap();
+        let out = mc.run_batch(&samples);
+        assert_eq!(out.len(), samples.len());
+    }
+
+    #[test]
+    fn zero_cores_rejected() {
+        let (cfg, weights, regs, _) = setup();
+        assert!(MultiCore::new(&cfg, &weights, &regs, 0).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! DVS-Gesture stand-in: a Gaussian event blob sweeping a 20×20 grid in 11
+//! motion classes (8 linear directions, 2 rotation senses, 1 random walk).
+//! Mirrors `datasets.dvs_sample` in Python (same PRNG call order).
+
+use super::{sample_rng, Sample, Split};
+
+pub const GRID: usize = 20;
+pub const INPUTS: usize = GRID * GRID;
+pub const CLASSES: usize = 11;
+
+pub fn sample(index: u64, split: Split, t_steps: usize, seed: u64) -> Sample {
+    let mut rng = sample_rng(0xD4E5_0000, seed, index, split);
+    let g = GRID as f64;
+    let label = rng.below(CLASSES as u64) as usize;
+    let mut spikes = vec![0u8; t_steps * INPUTS];
+    let cx = g / 2.0 + rng.below(5) as f64 - 2.0;
+    let cy = g / 2.0 + rng.below(5) as f64 - 2.0;
+
+    #[derive(PartialEq)]
+    enum Mode {
+        Linear { vx: f64, vy: f64 },
+        Rotate { sense: f64 },
+        Walk,
+    }
+    let mode = if label < 8 {
+        let ang = 2.0 * std::f64::consts::PI * label as f64 / 8.0 + 0.2 * (rng.uniform() - 0.5);
+        Mode::Linear { vx: 0.45 * ang.cos(), vy: 0.45 * ang.sin() }
+    } else if label < 10 {
+        Mode::Rotate { sense: if label == 8 { 1.0 } else { -1.0 } }
+    } else {
+        Mode::Walk
+    };
+
+    let (mut x, mut y) = (cx, cy);
+    let mut phase = 2.0 * std::f64::consts::PI * rng.uniform();
+    for t in 0..t_steps {
+        match mode {
+            Mode::Linear { vx, vy } => {
+                x = (x + vx).rem_euclid(g);
+                y = (y + vy).rem_euclid(g);
+            }
+            Mode::Rotate { sense } => {
+                phase += sense * 0.35;
+                x = cx + 5.5 * phase.cos();
+                y = cy + 5.5 * phase.sin();
+            }
+            Mode::Walk => {
+                x = (x + (rng.uniform() - 0.5) * 3.0).rem_euclid(g);
+                y = (y + (rng.uniform() - 0.5) * 3.0).rem_euclid(g);
+            }
+        }
+        let ywrap = y.rem_euclid(g);
+        let xwrap = x.rem_euclid(g);
+        for i in 0..GRID {
+            for j in 0..GRID {
+                let d2 = (i as f64 - ywrap).powi(2) + (j as f64 - xwrap).powi(2);
+                let p = 0.9 * (-d2 / 3.0).exp();
+                if p > 0.02 && rng.uniform() < p {
+                    spikes[t * INPUTS + i * GRID + j] = 1;
+                }
+            }
+        }
+    }
+    Sample { spikes, t_steps, inputs: INPUTS, label }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_is_localised_per_step() {
+        // Each timestep's events cluster near one centre: the bounding box
+        // of active cells is far smaller than the grid for linear sweeps.
+        let s = sample(1, Split::Train, 10, 11);
+        for t in 0..10 {
+            let active: Vec<(usize, usize)> = (0..INPUTS)
+                .filter(|&i| s.spike(t, i) == 1)
+                .map(|i| (i / GRID, i % GRID))
+                .collect();
+            if active.len() > 3 {
+                let (si, sj): (Vec<_>, Vec<_>) = active.iter().copied().unzip();
+                let spread = (si.iter().max().unwrap() - si.iter().min().unwrap())
+                    .min(sj.iter().max().unwrap() - sj.iter().min().unwrap());
+                assert!(spread <= 12, "t={t} spread {spread}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_classes_move() {
+        // For a linear class the active centroid at t=0 and t=19 differ.
+        for idx in 0..30u64 {
+            let s = sample(idx, Split::Train, 20, 11);
+            if s.label < 8 && s.row_counts()[0] > 0 && s.row_counts()[19] > 0 {
+                let centroid = |t: usize| {
+                    let pts: Vec<usize> = (0..INPUTS).filter(|&i| s.spike(t, i) == 1).collect();
+                    let n = pts.len() as f64;
+                    (
+                        pts.iter().map(|&i| (i / GRID) as f64).sum::<f64>() / n,
+                        pts.iter().map(|&i| (i % GRID) as f64).sum::<f64>() / n,
+                    )
+                };
+                let (a, b) = (centroid(0), centroid(19));
+                let d = ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt();
+                assert!(d > 0.3, "idx {idx} moved only {d}");
+                return;
+            }
+        }
+        panic!("no linear sample found in 30 draws");
+    }
+
+    #[test]
+    fn all_classes_produce_events() {
+        for i in 0..40 {
+            let s = sample(i, Split::Test, 8, 11);
+            assert!(s.nnz() > 0, "sample {i} empty");
+        }
+    }
+}

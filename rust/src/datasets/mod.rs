@@ -1,0 +1,198 @@
+//! Synthetic spiking datasets — the request-path mirror of
+//! `python/compile/datasets.py` (see DESIGN.md §1 for why synthetic sets
+//! stand in for Spiking MNIST / DVS Gesture / SHD in this offline build).
+//!
+//! Every sampler is a pure function of `(index, split, t_steps)` driven by
+//! the shared xorshift64* PRNG, so the Rust coordinator streams **the same
+//! bits** the Python trainer/evaluator saw — parity is pinned by
+//! `artifacts/golden_datasets.json` in the integration tests. (`smnist` is
+//! exactly bit-identical; `dvs`/`shd` involve `exp`/`cos` whose last-ulp
+//! behaviour may differ between numpy and Rust libm — observed differences
+//! are zero in practice, and the golden test allows a microscopic tolerance
+//! there.)
+
+pub mod dvs;
+pub mod rng;
+pub mod shd;
+pub mod smnist;
+
+pub use rng::XorShift64Star;
+
+/// Which of the paper's three datasets (§VI-A, Table III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// Spiking MNIST stand-in: 16×16 glyphs, 10 classes.
+    Smnist,
+    /// DVS Gesture stand-in: 20×20 event grid, 11 motion classes.
+    Dvs,
+    /// SHD stand-in: 700 channels, 20 spectro-temporal classes.
+    Shd,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// One spike-train sample: row-major `[t_steps × inputs]` binary matrix.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub spikes: Vec<u8>,
+    pub t_steps: usize,
+    pub inputs: usize,
+    pub label: usize,
+}
+
+impl Sample {
+    #[inline]
+    pub fn spike(&self, t: usize, i: usize) -> u8 {
+        self.spikes[t * self.inputs + i]
+    }
+
+    pub fn step(&self, t: usize) -> &[u8] {
+        &self.spikes[t * self.inputs..(t + 1) * self.inputs]
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.spikes.iter().map(|&x| x as usize).sum()
+    }
+
+    /// Spikes per timestep (used by golden parity tests).
+    pub fn row_counts(&self) -> Vec<usize> {
+        (0..self.t_steps)
+            .map(|t| self.step(t).iter().map(|&x| x as usize).sum())
+            .collect()
+    }
+}
+
+impl Dataset {
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s {
+            "smnist" => Some(Dataset::Smnist),
+            "dvs" => Some(Dataset::Dvs),
+            "shd" => Some(Dataset::Shd),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dataset::Smnist => "smnist",
+            Dataset::Dvs => "dvs",
+            Dataset::Shd => "shd",
+        }
+    }
+
+    pub fn inputs(&self) -> usize {
+        match self {
+            Dataset::Smnist => 256,
+            Dataset::Dvs => 400,
+            Dataset::Shd => 700,
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        match self {
+            Dataset::Smnist => 10,
+            Dataset::Dvs => 11,
+            Dataset::Shd => 20,
+        }
+    }
+
+    /// The paper's architecture for this dataset (Table XI).
+    pub fn paper_arch(&self) -> &'static str {
+        match self {
+            Dataset::Smnist => "256x128x10",
+            Dataset::Dvs => "400x300x300x11",
+            Dataset::Shd => "700x256x256x20",
+        }
+    }
+
+    /// Generate one sample (default seeds match the Python side).
+    pub fn sample(&self, index: u64, split: Split, t_steps: usize) -> Sample {
+        match self {
+            Dataset::Smnist => smnist::sample(index, split, t_steps, 7),
+            Dataset::Dvs => dvs::sample(index, split, t_steps, 11),
+            Dataset::Shd => shd::sample(index, split, t_steps, 13),
+        }
+    }
+
+    pub fn all() -> [Dataset; 3] {
+        [Dataset::Smnist, Dataset::Dvs, Dataset::Shd]
+    }
+}
+
+/// Per-sample PRNG construction shared by the three samplers — must mirror
+/// `datasets.py`: `base + index * 2_654_435_761` with the split in bit 40.
+pub(crate) fn sample_rng(base_tag: u64, seed: u64, index: u64, split: Split) -> XorShift64Star {
+    let split_off: u64 = match split {
+        Split::Train => 0,
+        Split::Test => 1 << 40,
+    };
+    let base = base_tag
+        .wrapping_add(seed.wrapping_mul(1_000_003))
+        .wrapping_add(split_off);
+    XorShift64Star::new(base.wrapping_add(index.wrapping_mul(2_654_435_761)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samplers_shapes() {
+        for ds in Dataset::all() {
+            let s = ds.sample(0, Split::Train, 6);
+            assert_eq!(s.t_steps, 6);
+            assert_eq!(s.inputs, ds.inputs());
+            assert_eq!(s.spikes.len(), 6 * ds.inputs());
+            assert!(s.label < ds.classes());
+            assert!(s.spikes.iter().all(|&x| x <= 1));
+        }
+    }
+
+    #[test]
+    fn deterministic_and_index_sensitive() {
+        for ds in Dataset::all() {
+            let a = ds.sample(5, Split::Test, 8);
+            let b = ds.sample(5, Split::Test, 8);
+            let c = ds.sample(6, Split::Test, 8);
+            assert_eq!(a.spikes, b.spikes);
+            assert_eq!(a.label, b.label);
+            assert_ne!(a.spikes, c.spikes);
+        }
+    }
+
+    #[test]
+    fn split_changes_stream() {
+        let a = Dataset::Smnist.sample(0, Split::Train, 8);
+        let b = Dataset::Smnist.sample(0, Split::Test, 8);
+        assert_ne!(a.spikes, b.spikes);
+    }
+
+    #[test]
+    fn label_coverage() {
+        for ds in Dataset::all() {
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..150 {
+                seen.insert(ds.sample(i, Split::Train, 1).label);
+            }
+            assert_eq!(seen.len(), ds.classes(), "{}", ds.label());
+        }
+    }
+
+    #[test]
+    fn row_counts_sum_to_nnz() {
+        let s = Dataset::Shd.sample(3, Split::Train, 10);
+        assert_eq!(s.row_counts().iter().sum::<usize>(), s.nnz());
+    }
+
+    #[test]
+    fn parse_labels() {
+        for ds in Dataset::all() {
+            assert_eq!(Dataset::parse(ds.label()), Some(ds));
+        }
+        assert_eq!(Dataset::parse("imagenet"), None);
+    }
+}

@@ -1,0 +1,80 @@
+//! SHD stand-in: 700-channel spectro-temporal ridge patterns, 20 classes —
+//! three formant-like channel trajectories per class. Mirrors
+//! `datasets.shd_sample` in Python (same PRNG call order).
+
+use super::{sample_rng, Sample, Split};
+
+pub const INPUTS: usize = 700;
+pub const CLASSES: usize = 20;
+
+pub fn sample(index: u64, split: Split, t_steps: usize, seed: u64) -> Sample {
+    let mut rng = sample_rng(0x54D0_0000, seed, index, split);
+    let label = rng.below(CLASSES as u64) as usize;
+    let mut spikes = vec![0u8; t_steps * INPUTS];
+    let t_f = t_steps as f64;
+    for f in 0..3u64 {
+        let l = label as u64;
+        let c0 = ((l * 131 + f * 197) % 17) * 40 + 10 + rng.below(8);
+        let slope = (((l * 31 + f * 7) % 9) as f64 - 4.0) * 3.0;
+        let curve = (((l * 13 + f * 5) % 5) as f64 - 2.0) * 0.18;
+        for t in 0..t_steps {
+            let tf = t as f64;
+            let centre =
+                c0 as f64 + slope * tf / t_f * 8.0 + curve * (tf - t_f / 2.0).powi(2) / t_f * 4.0;
+            for dc in -6i64..=6 {
+                // Python's int() truncates toward zero; `as i64` matches.
+                let ch = centre as i64 + dc;
+                if (0..INPUTS as i64).contains(&ch) {
+                    let p = 0.75 * (-(dc * dc) as f64 / 6.0).exp();
+                    if rng.uniform() < p {
+                        spikes[t * INPUTS + ch as usize] = 1;
+                    }
+                }
+            }
+        }
+    }
+    Sample { spikes, t_steps, inputs: INPUTS, label }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ridges_are_narrow_bands() {
+        let s = sample(0, Split::Train, 12, 13);
+        // Per timestep at most 3 ridges × 13 channels are candidates.
+        for rc in s.row_counts() {
+            assert!(rc <= 39, "row count {rc}");
+        }
+        assert!(s.nnz() > 0);
+    }
+
+    #[test]
+    fn class_determines_ridge_positions() {
+        // Two samples of the same class share ridge neighbourhoods; c0 values
+        // are within the 8-channel jitter of each other.
+        let mut by_label: std::collections::HashMap<usize, Vec<u64>> = Default::default();
+        for i in 0..60 {
+            let s = sample(i, Split::Train, 4, 13);
+            by_label.entry(s.label).or_default().push(i);
+        }
+        let pair = by_label.values().find(|v| v.len() >= 2).expect("repeat class");
+        let a = sample(pair[0], Split::Train, 4, 13);
+        let b = sample(pair[1], Split::Train, 4, 13);
+        let active = |s: &Sample| -> Vec<usize> {
+            (0..INPUTS).filter(|&c| (0..4).any(|t| s.spike(t, c) == 1)).collect()
+        };
+        let (aa, bb) = (active(&a), active(&b));
+        // At least one common channel (ridges overlap up to jitter).
+        assert!(aa.iter().any(|c| bb.contains(c)));
+    }
+
+    #[test]
+    fn channels_in_range() {
+        for i in 0..20 {
+            let s = sample(i, Split::Test, 6, 13);
+            assert_eq!(s.spikes.len(), 6 * INPUTS);
+        }
+    }
+}

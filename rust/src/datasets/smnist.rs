@@ -1,0 +1,157 @@
+//! Spiking-MNIST stand-in: procedural 16×16 digit glyphs, rate-encoded.
+//!
+//! **Bit-identical** to `datasets.smnist_sample` in Python: same
+//! seven-segment geometry, same PRNG call order (label → glyph jitter →
+//! per-cell intensities → dropout/noise → Poisson encoding), no
+//! transcendental math anywhere. Digit 8's segments are a superset of 3's
+//! and 0's, preserving the paper's Fig.-11 confusion structure.
+
+use super::{sample_rng, Sample, Split, XorShift64Star};
+
+pub const GRID: usize = 16;
+pub const INPUTS: usize = GRID * GRID;
+pub const CLASSES: usize = 10;
+
+/// digit → active segments (0=top, 1=top-left, 2=top-right, 3=middle,
+/// 4=bottom-left, 5=bottom-right, 6=bottom). Order matters for PRNG parity.
+const SEGMENTS: [&[u8]; 10] = [
+    &[0, 1, 2, 4, 5, 6],
+    &[2, 5],
+    &[0, 2, 3, 4, 6],
+    &[0, 2, 3, 5, 6],
+    &[1, 2, 3, 5],
+    &[0, 1, 3, 5, 6],
+    &[0, 1, 3, 4, 5, 6],
+    &[0, 2, 5],
+    &[0, 1, 2, 3, 4, 5, 6],
+    &[0, 1, 2, 3, 5, 6],
+];
+
+/// Cells of one glyph segment (same enumeration order as Python's
+/// `_segment_cells`): base cells first, then thickness expansion.
+fn segment_cells(seg: u8, dx: i64, dy: i64, thick: i64) -> Vec<(i64, i64)> {
+    let (x0, x1, ym, y0, y1) = (4i64, 11i64, 8i64, 2i64, 13i64);
+    let cells: Vec<(i64, i64)> = match seg {
+        0 => (x0..=x1).map(|x| (x, y0)).collect(),
+        6 => (x0..=x1).map(|x| (x, y1)).collect(),
+        3 => (x0..=x1).map(|x| (x, ym)).collect(),
+        1 => (y0..=ym).map(|y| (x0, y)).collect(),
+        2 => (y0..=ym).map(|y| (x1, y)).collect(),
+        4 => (ym..=y1).map(|y| (x0, y)).collect(),
+        5 => (ym..=y1).map(|y| (x1, y)).collect(),
+        _ => unreachable!("segment id 0..=6"),
+    };
+    let mut out = Vec::with_capacity(cells.len() * (thick * thick) as usize);
+    for (x, y) in cells {
+        for tx in 0..thick {
+            for ty in 0..thick {
+                out.push((x + dx + tx, y + dy + ty));
+            }
+        }
+    }
+    out
+}
+
+/// One jittered glyph image as 256 intensities in [0, 1] (row-major).
+pub fn digit_image(digit: usize, rng: &mut XorShift64Star) -> [f64; INPUTS] {
+    assert!(digit < CLASSES, "digit out of range: {digit}");
+    let mut img = [0.0f64; INPUTS];
+    let dx = rng.below(5) as i64 - 2;
+    let dy = rng.below(3) as i64 - 1;
+    let thick = 1 + rng.below(2) as i64;
+    for &seg in SEGMENTS[digit] {
+        for (x, y) in segment_cells(seg, dx, dy, thick) {
+            if (0..GRID as i64).contains(&x) && (0..GRID as i64).contains(&y) {
+                img[y as usize * GRID + x as usize] = 0.75 + 0.25 * rng.uniform();
+            }
+        }
+    }
+    // Dropout + background noise (same short-circuit order as Python).
+    for i in 0..INPUTS {
+        if img[i] > 0.0 {
+            if rng.uniform() < 0.08 {
+                img[i] = 0.0;
+            }
+        } else if rng.uniform() < 0.02 {
+            img[i] = 0.3 * rng.uniform();
+        }
+    }
+    img
+}
+
+/// Poisson rate coding: spike[t, i] ~ Bernoulli(intensity_i · max_rate).
+pub fn rate_encode(
+    image: &[f64],
+    t_steps: usize,
+    rng: &mut XorShift64Star,
+    max_rate: f64,
+) -> Vec<u8> {
+    let n = image.len();
+    let mut spikes = vec![0u8; t_steps * n];
+    for t in 0..t_steps {
+        for i in 0..n {
+            if image[i] > 0.0 && rng.uniform() < image[i] * max_rate {
+                spikes[t * n + i] = 1;
+            }
+        }
+    }
+    spikes
+}
+
+pub fn sample(index: u64, split: Split, t_steps: usize, seed: u64) -> Sample {
+    let mut rng = sample_rng(0x5EED_0000, seed, index, split);
+    let label = rng.below(CLASSES as u64) as usize;
+    let img = digit_image(label, &mut rng);
+    let spikes = rate_encode(&img, t_steps, &mut rng, 0.5);
+    Sample { spikes, t_steps, inputs: INPUTS, label }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glyph_confusion_structure() {
+        // Paper Fig. 11: digit 8 shares all segments with 3 and 0.
+        let s8: std::collections::HashSet<u8> = SEGMENTS[8].iter().copied().collect();
+        assert!(SEGMENTS[3].iter().all(|s| s8.contains(s)));
+        assert!(SEGMENTS[0].iter().all(|s| s8.contains(s)));
+    }
+
+    #[test]
+    fn distinct_templates() {
+        let set: std::collections::HashSet<_> = SEGMENTS.iter().collect();
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn image_in_unit_range() {
+        let mut rng = XorShift64Star::new(5);
+        let img = digit_image(8, &mut rng);
+        assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(img.iter().sum::<f64>() > 0.0);
+    }
+
+    #[test]
+    fn rate_scales_with_max_rate() {
+        let img = [1.0f64; 16];
+        let mut r1 = XorShift64Star::new(1);
+        let mut r2 = XorShift64Star::new(1);
+        let low: usize = rate_encode(&img, 200, &mut r1, 0.1).iter().map(|&x| x as usize).sum();
+        let high: usize = rate_encode(&img, 200, &mut r2, 0.9).iter().map(|&x| x as usize).sum();
+        assert!(high > low);
+    }
+
+    #[test]
+    #[should_panic(expected = "digit out of range")]
+    fn rejects_bad_digit() {
+        digit_image(10, &mut XorShift64Star::new(1));
+    }
+
+    #[test]
+    fn sample_smoke() {
+        let s = sample(0, Split::Test, 8, 7);
+        assert_eq!(s.inputs, 256);
+        assert!(s.nnz() > 0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Design-space exploration — paper Table IX (largest wide/deep
+//! configuration per FPGA board) and the general "estimate without
+//! synthesising" workflow the paper motivates in §VI-D.
+
+use crate::config::ModelConfig;
+use crate::fixed::QSpec;
+use crate::hwmodel::power;
+use crate::hwmodel::resources;
+use crate::hwmodel::Board;
+
+/// A found design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub config: ModelConfig,
+    pub resources: resources::Resources,
+    /// Modelled dynamic power (W) at the baseline activity/operating point.
+    pub power_w: f64,
+}
+
+fn point(config: ModelConfig) -> DesignPoint {
+    let r = resources::core(&config);
+    let p = power::core_dynamic_w(&config, power::RATE0, power::F0_HZ);
+    DesignPoint { config, resources: r, power_w: p }
+}
+
+/// Largest **wide** design (single hidden layer `in × H × out`) that fits
+/// the board — Table IX left half. Binary search over H.
+pub fn largest_wide(
+    board: &Board,
+    inputs: usize,
+    outputs: usize,
+    qspec: QSpec,
+) -> Option<DesignPoint> {
+    let fits = |h: usize| -> Option<DesignPoint> {
+        let cfg = ModelConfig::new(&[inputs, h, outputs], qspec).ok()?;
+        let p = point(cfg);
+        board.fits(&p.resources).then_some(p)
+    };
+    fits(1)?;
+    let (mut lo, mut hi) = (1usize, 2usize);
+    while fits(hi).is_some() {
+        lo = hi;
+        hi *= 2;
+        if hi > 1 << 20 {
+            break;
+        }
+    }
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if fits(mid).is_some() {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    fits(lo)
+}
+
+/// Largest **deep** design (`in × D·(width) × out`) that fits the board —
+/// Table IX right half (the paper uses hidden width 64).
+pub fn largest_deep(
+    board: &Board,
+    inputs: usize,
+    outputs: usize,
+    hidden_width: usize,
+    qspec: QSpec,
+) -> Option<DesignPoint> {
+    let fits = |d: usize| -> Option<DesignPoint> {
+        let mut sizes = Vec::with_capacity(d + 2);
+        sizes.push(inputs);
+        sizes.extend(std::iter::repeat(hidden_width).take(d));
+        sizes.push(outputs);
+        let cfg = ModelConfig::new(&sizes, qspec).ok()?;
+        let p = point(cfg);
+        board.fits(&p.resources).then_some(p)
+    };
+    fits(1)?;
+    let mut d = 1usize;
+    while fits(d + 1).is_some() {
+        d += 1;
+        if d > 4096 {
+            break;
+        }
+    }
+    fits(d)
+}
+
+/// Generic feasibility check + estimate for an arbitrary architecture —
+/// the §VI-D "skip synthesis during DSE" workflow.
+pub fn estimate(arch: &str, qspec: QSpec, board: &Board) -> anyhow::Result<(DesignPoint, bool)> {
+    let cfg = ModelConfig::parse_arch(arch, qspec)?;
+    let p = point(cfg);
+    let fits = board.fits(&p.resources);
+    Ok((p, fits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q5_3;
+    use crate::hwmodel::boards;
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn table9_wide_virtex_ultrascale() {
+        // Paper: 256-1470-10 on Virtex UltraScale.
+        let p = largest_wide(&boards::VIRTEX_ULTRASCALE, 256, 10, Q5_3).unwrap();
+        let h = p.config.sizes()[1];
+        assert!(rel_err(h as f64, 1470.0) < 0.05, "H = {h} (paper 1470)");
+    }
+
+    #[test]
+    fn table9_wide_ordering_across_boards() {
+        // More resources ⇒ wider maximum (paper: 1470 > 704 > 640).
+        let hs: Vec<usize> = Board::all()
+            .iter()
+            .map(|b| largest_wide(b, 256, 10, Q5_3).unwrap().config.sizes()[1])
+            .collect();
+        assert!(hs[0] > hs[1] && hs[1] > hs[2], "{hs:?}");
+    }
+
+    #[test]
+    fn table9_deep_ordering_across_boards() {
+        let ds: Vec<usize> = Board::all()
+            .iter()
+            .map(|b| largest_deep(b, 256, 10, 64, Q5_3).unwrap().config.num_layers() - 1)
+            .collect();
+        assert!(ds[0] > ds[2], "Virtex US deeper than Zynq US: {ds:?}");
+    }
+
+    #[test]
+    fn found_points_actually_fit_and_next_does_not() {
+        let b = &boards::ZYNQ_ULTRASCALE;
+        let p = largest_wide(b, 256, 10, Q5_3).unwrap();
+        assert!(b.fits(&p.resources));
+        let h = p.config.sizes()[1];
+        let bigger = ModelConfig::new(&[256, h + 1, 10], Q5_3).unwrap();
+        assert!(!b.fits(&resources::core(&bigger)), "H={h} not maximal");
+    }
+
+    #[test]
+    fn estimate_reports_fit() {
+        let (p, fits) = estimate("256x128x10", Q5_3, &boards::VIRTEX_ULTRASCALE).unwrap();
+        assert!(fits);
+        assert!(p.power_w > 0.0);
+        let (_, fits2) = estimate("256x9999x10", Q5_3, &boards::ZYNQ_ULTRASCALE).unwrap();
+        assert!(!fits2);
+    }
+}

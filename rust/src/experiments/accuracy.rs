@@ -1,0 +1,196 @@
+//! Table VIII (software vs hardware accuracy per quantization), Fig. 10/11
+//! (classification example + spike-counter readout), Fig. 12 (quantization
+//! impact on the membrane trace, RMSE vs the float software reference).
+
+use anyhow::Result;
+
+use crate::datasets::{Dataset, Split};
+use crate::fixed::QSpec;
+use crate::runtime::artifacts::{self, Manifest};
+use crate::util::stats;
+use crate::util::table::Table;
+
+use super::{core_from_artifact, evaluate_core};
+
+/// Table VIII: SNNTorch(float) vs hardware accuracy at Q9.7 / Q5.3 / Q3.1.
+pub fn table8(manifest: &Manifest) -> Result<Table> {
+    let mut t = Table::new(
+        "Table VIII — accuracy per quantization (synthetic smnist, 100 test samples)",
+        &["Dataset", "Software (float)", "Q9.7", "Q5.3", "Q3.1", "paper (SW/Q9.7/Q5.3/Q3.1)"],
+    );
+    let mut accs = Vec::new();
+    let mut float_acc = 0.0;
+    for q in ["Q9.7", "Q5.3", "Q3.1"] {
+        let art = manifest.model("smnist", q)?;
+        float_acc = art.float_acc;
+        let (_, mut core) = core_from_artifact(&art)?;
+        let m = evaluate_core(&mut core, Dataset::Smnist, 100, art.t_steps);
+        accs.push(m.accuracy);
+    }
+    t.row(vec![
+        "Spiking MNIST (synthetic)".into(),
+        format!("{:.1}%", 100.0 * float_acc),
+        format!("{:.1}%", 100.0 * accs[0]),
+        format!("{:.1}%", 100.0 * accs[1]),
+        format!("{:.1}%", 100.0 * accs[2]),
+        "97.8% / 97.1% / 96.5% / 88.3%".into(),
+    ]);
+    t.note("trend to reproduce: accuracy degrades as precision shrinks, Q9.7 ≈ software");
+    Ok(t)
+}
+
+/// Fig. 10 + 11: one classification example — per-layer spike raster
+/// summary and the output spike-counter histogram.
+pub fn fig10_11(manifest: &Manifest) -> Result<Vec<Table>> {
+    let art = manifest.model("smnist", "Q5.3")?;
+    let (_, mut core) = core_from_artifact(&art)?;
+
+    // Find a test sample whose label is 8 (the paper's example digit).
+    let mut idx = 0;
+    let sample = loop {
+        let s = Dataset::Smnist.sample(idx, Split::Test, art.t_steps);
+        if s.label == 8 {
+            break s;
+        }
+        idx += 1;
+        if idx > 500 {
+            anyhow::bail!("no digit-8 sample found");
+        }
+    };
+    let r = core.run(&sample);
+
+    let mut t1 = Table::new(
+        format!("Figure 10 — spike raster summary (digit {} example, sample {idx})", sample.label),
+        &["layer", "size", "total spikes", "spikes/step"],
+    );
+    t1.row(vec![
+        "input".into(),
+        sample.inputs.to_string(),
+        sample.nnz().to_string(),
+        format!("{:.1}", sample.nnz() as f64 / sample.t_steps as f64),
+    ]);
+    for (k, &spk) in r.layer_spikes.iter().enumerate() {
+        t1.row(vec![
+            format!("layer {}", k + 1),
+            art.sizes[k + 1].to_string(),
+            spk.to_string(),
+            format!("{:.1}", spk as f64 / sample.t_steps as f64),
+        ]);
+    }
+
+    let mut t2 = Table::new(
+        "Figure 11 — output spike counter (classification readout)",
+        &["output neuron", "spike count", "bar"],
+    );
+    let max = r.counts.iter().copied().max().unwrap_or(1).max(1);
+    for (i, &c) in r.counts.iter().enumerate() {
+        let bar = "#".repeat((c as usize * 40) / max as usize);
+        let mark = if i == r.prediction { " <= prediction" } else { "" };
+        t2.row(vec![i.to_string(), c.to_string(), format!("{bar}{mark}")]);
+    }
+    t2.note(format!(
+        "predicted {} (true label {}); paper: neuron 8 highest, neuron 3 and 0 next (shared glyph segments)",
+        r.prediction, sample.label
+    ));
+    Ok(vec![t1, t2])
+}
+
+/// Fig. 12: membrane trace of a hidden-layer neuron per quantization vs the
+/// double-precision software trace; average RMSE over test samples.
+pub fn fig12(manifest: &Manifest) -> Result<Table> {
+    let mut t = Table::new(
+        "Figure 12 — quantization impact on membrane potential (hidden layer, RMSE vs float)",
+        &["Q", "avg RMSE (value units)", "paper (mV)", "samples", "neurons"],
+    );
+    // Float reference: software LIF on the float weights.
+    let art53 = manifest.model("smnist", "Q5.3")?;
+    let float_w = artifacts::load_float_weight_file(
+        &manifest.root.join("weights_smnist_float.bin"),
+        &art53.layer_shapes,
+    )?;
+
+    let n_samples = 20u64;
+    for (q, paper) in [("Q9.7", "0.25"), ("Q5.3", "0.43"), ("Q3.1", "2.12")] {
+        let art = manifest.model("smnist", q)?;
+        let qs = QSpec::parse(q)?;
+        let (_, mut core) = core_from_artifact(&art)?;
+        // Deployment pre-scaling: hardware runs at vth = s·1.0, so divide
+        // its trace by s to compare with the unit-threshold float model.
+        let scale = qs.to_float(art.default_regs[crate::config::registers::REG_VTH]);
+        let mut rmses = Vec::new();
+        for i in 0..n_samples {
+            let sample = Dataset::Smnist.sample(i, Split::Test, art.t_steps);
+            // Hardware trace: hidden-layer vmem per step (value units).
+            let mut hw_trace: Vec<f64> = Vec::new();
+            core.reset();
+            let mut layer_spikes = vec![0u64; art.layer_shapes.len()];
+            for tstep in 0..sample.t_steps {
+                core.step(sample.step(tstep), &mut layer_spikes);
+                for v in core.layers()[0].vmem() {
+                    hw_trace.push(qs.to_float(v) / scale);
+                }
+            }
+            // Software trace: float LIF with the same topology.
+            let sw_trace = float_hidden_trace(&float_w, &sample);
+            rmses.push(stats::rmse(&hw_trace, &sw_trace));
+        }
+        t.row(vec![
+            q.into(),
+            format!("{:.4}", stats::mean(&rmses)),
+            paper.into(),
+            n_samples.to_string(),
+            art.sizes[1].to_string(),
+        ]);
+    }
+    t.note("ordering RMSE(Q9.7) < RMSE(Q5.3) < RMSE(Q3.1) is the Fig. 12 claim; absolute units differ (our Vth=1.0 scale vs the paper's mV)");
+    Ok(t)
+}
+
+/// Double-precision software LIF (reset-by-subtraction), hidden-layer trace —
+/// the Rust mirror of `model.float_membrane_trace`.
+fn float_hidden_trace(weights: &[Vec<f32>], sample: &crate::datasets::Sample) -> Vec<f64> {
+    let (m, n) = (sample.inputs, weights[0].len() / sample.inputs);
+    let (decay, growth, vth) = (0.2f64, 1.0f64, 1.0f64);
+    let mut vmem = vec![0.0f64; n];
+    let mut out = Vec::with_capacity(sample.t_steps * n);
+    for t in 0..sample.t_steps {
+        let spk = sample.step(t);
+        for j in 0..n {
+            let mut act = 0.0f64;
+            for i in 0..m {
+                if spk[i] != 0 {
+                    act += weights[0][i * n + j] as f64;
+                }
+            }
+            let mut v = vmem[j] - decay * vmem[j] + growth * act;
+            if v >= vth {
+                v -= vth;
+            }
+            vmem[j] = v;
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    // Artifact-dependent generators are exercised by the integration tests
+    // (rust/tests/integration_experiments.rs) and the CLI; the pure helper
+    // is tested here.
+    use super::*;
+
+    #[test]
+    fn float_trace_shape() {
+        let sample = crate::datasets::Sample {
+            spikes: vec![1, 0, 1, 0, 0, 1],
+            t_steps: 2,
+            inputs: 3,
+            label: 0,
+        };
+        let w = vec![vec![0.5f32; 3 * 4]];
+        let tr = float_hidden_trace(&w, &sample);
+        assert_eq!(tr.len(), 2 * 4);
+        assert!(tr.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,67 @@
+//! Table XI — design summary across the three datasets: utilisation,
+//! accuracy, dynamic peak power, peak performance per watt.
+
+use anyhow::Result;
+
+use crate::datasets::Dataset;
+use crate::hwmodel::boards::VIRTEX_ULTRASCALE;
+use crate::hwmodel::power as pw;
+use crate::hwmodel::resources as res;
+use crate::runtime::artifacts::Manifest;
+use crate::util::table::Table;
+
+use super::{core_from_artifact, evaluate_core};
+
+pub fn table11(manifest: &Manifest) -> Result<Table> {
+    let mut t = Table::new(
+        "Table XI — design summary per dataset (synthetic stand-ins, Virtex UltraScale)",
+        &["Dataset", "Config", "LUT%", "FF%", "BRAM%", "Accuracy", "Power (W)", "GOPS/W @peak",
+          "paper (LUT/FF/BRAM/acc/W/GOPS-W)"],
+    );
+    let rows = [
+        (Dataset::Smnist, "9% / 1% / 4% / 96.5% / 0.623 / 36.6"),
+        (Dataset::Dvs, "60% / 15% / 18% / 85.07% / 1.827 / 24.45"),
+        (Dataset::Shd, "65% / 20% / 24% / 87.8% / 1.629 / 16.09"),
+    ];
+    for (ds, paper) in rows {
+        let art = manifest.model(ds.label(), "Q5.3")?;
+        let (cfg, mut core) = core_from_artifact(&art)?;
+        let n = match ds {
+            Dataset::Smnist => 100,
+            _ => 40, // larger nets: keep the sweep fast; trends unaffected
+        };
+        let m = evaluate_core(&mut core, ds, n, art.t_steps);
+        let r = res::core(&cfg);
+        let (l, f, b, _) = res::utilisation(&r, &VIRTEX_ULTRASCALE);
+        let p = pw::core_dynamic_w(&cfg, m.spike_rate, pw::F0_HZ);
+        let (_, ppw) = pw::peak_perf_per_watt(&cfg, m.spike_rate);
+        t.row(vec![
+            ds.label().into(),
+            cfg.arch_name(),
+            format!("{:.0}%", 100.0 * l),
+            format!("{:.0}%", 100.0 * f),
+            format!("{:.0}%", 100.0 * b),
+            format!("{:.1}%", 100.0 * m.accuracy),
+            format!("{p:.3}"),
+            format!("{ppw:.1}"),
+            paper.into(),
+        ]);
+    }
+    t.note("shape to reproduce: smnist smallest/most efficient; dvs & shd use most of the fabric, draw more power, and land lower on GOPS/W");
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::datasets::Dataset;
+
+    #[test]
+    fn paper_arch_strings_parse() {
+        use crate::config::ModelConfig;
+        use crate::fixed::Q5_3;
+        for ds in Dataset::all() {
+            let arch = ds.paper_arch().replace('x', "x");
+            assert!(ModelConfig::parse_arch(&arch, Q5_3).is_ok(), "{arch}");
+        }
+    }
+}

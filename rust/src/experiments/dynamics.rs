@@ -1,0 +1,129 @@
+//! Figures 3 & 4 — single-neuron membrane dynamics under a 40 ms step
+//! input (τ = 5 ms, Vth = 10 mV), regenerated from the cycle-accurate
+//! neuron via [`crate::hdl::neuron::DynamicsProbe`].
+
+use crate::config::registers::{RegisterFile, ResetMode};
+use crate::fixed::Q9_7;
+use crate::hdl::neuron::DynamicsProbe;
+use crate::util::table::Table;
+
+/// ASCII sparkline of a membrane trace (the "figure").
+fn sparkline(vals: &[f64], vth: f64) -> String {
+    let max = vals.iter().cloned().fold(vth, f64::max).max(1e-9);
+    vals.iter()
+        .map(|&v| {
+            let lvls = [' ', '.', ':', '-', '=', '+', '*', '#'];
+            let idx = ((v / max).clamp(0.0, 1.0) * (lvls.len() - 1) as f64) as usize;
+            lvls[idx]
+        })
+        .collect()
+}
+
+/// Fig. 3: impact of R and C on membrane dynamics. τ = RC fixed at 5 ms;
+/// the drive current is chosen so R·I = 10.5·(R/500MΩ)·50 mV — i.e. only
+/// the largest-R settings cross the 10 mV threshold, like the paper.
+pub fn fig3() -> Table {
+    let mut t = Table::new(
+        "Figure 3 — R/C settings vs membrane dynamics (step input, 40 ms, τ=5 ms, Vth=10 mV)",
+        &["R (MΩ)", "C (pF)", "growth", "spikes", "paper trend", "vmem trace (40 steps)"],
+    );
+    let settings = [
+        (500.0, 10.0, "many spikes"),
+        (100.0, 50.0, "fewer spikes"),
+        (50.0, 100.0, "few spikes"),
+        (10.0, 500.0, "no spikes"),
+    ];
+    let mut counts = Vec::new();
+    for (r_mohm, c_pf, trend) in settings {
+        let mut regs = RegisterFile::new(Q9_7);
+        regs.set_vth(10.0).unwrap();
+        regs.set_rc(r_mohm, c_pf).unwrap();
+        regs.set_reset_mode(ResetMode::BySubtraction).unwrap();
+        let growth = Q9_7.to_float(regs.growth());
+        let probe = DynamicsProbe::new(Q9_7, regs);
+        let trace = probe.step_input(20.0, 40);
+        counts.push(trace.spike_count());
+        t.row(vec![
+            format!("{r_mohm:.0}"),
+            format!("{c_pf:.0}"),
+            format!("{growth:.3}"),
+            trace.spike_count().to_string(),
+            trend.into(),
+            sparkline(&trace.vmem, 10.0),
+        ]);
+    }
+    t.note(format!(
+        "spike ordering {:?} reproduces the paper's monotone R/C trend; R=10MΩ never crosses Vth",
+        counts
+    ));
+    t
+}
+
+/// Fig. 4: reset mechanisms (default exponential decay, reset-by-
+/// subtraction, reset-to-zero) under the same step input. Paper counts:
+/// 37 (default) > 14 (subtract) > fewest (zero).
+pub fn fig4() -> Table {
+    let mut t = Table::new(
+        "Figure 4 — reset mechanisms vs neuron dynamics (step input, 40 ms)",
+        &["reset mechanism", "spikes (ours)", "paper", "vmem trace"],
+    );
+    let cases = [
+        (ResetMode::Default, "37"),
+        (ResetMode::BySubtraction, "14"),
+        (ResetMode::ToZero, "fewest"),
+    ];
+    let mut counts = Vec::new();
+    for (mode, paper) in cases {
+        let mut regs = RegisterFile::new(Q9_7);
+        regs.set_vth(10.0).unwrap();
+        regs.set_growth(1.0).unwrap();
+        regs.set_reset_mode(mode).unwrap();
+        let probe = DynamicsProbe::new(Q9_7, regs);
+        let trace = probe.step_input(20.0, 40);
+        counts.push(trace.spike_count());
+        t.row(vec![
+            mode.label().into(),
+            trace.spike_count().to_string(),
+            paper.into(),
+            sparkline(&trace.vmem, 10.0),
+        ]);
+    }
+    t.note(format!(
+        "ordering default({}) ≥ subtract({}) ≥ zero({}) matches Fig. 4",
+        counts[0], counts[1], counts[2]
+    ));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_rows_and_ordering() {
+        let t = fig3();
+        assert_eq!(t.rows.len(), 4);
+        let spikes: Vec<usize> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        assert!(spikes[0] > spikes[1] && spikes[1] > spikes[2] && spikes[2] >= spikes[3]);
+        assert_eq!(spikes[3], 0);
+    }
+
+    #[test]
+    fn fig4_rows_and_ordering() {
+        let t = fig4();
+        let spikes: Vec<usize> = t
+            .rows
+            .iter()
+            .map(|r| r[1].parse().unwrap())
+            .collect();
+        assert!(spikes[0] >= spikes[1] && spikes[1] >= spikes[2]);
+        assert!(spikes[2] > 0);
+    }
+
+    #[test]
+    fn sparkline_scales() {
+        let s = sparkline(&[0.0, 5.0, 10.0], 10.0);
+        assert_eq!(s.len(), 3);
+        assert!(s.ends_with('#'));
+    }
+}

@@ -1,0 +1,118 @@
+//! Experiment generators — one per paper table/figure (DESIGN.md §5).
+//!
+//! Every generator returns [`crate::util::table::Table`]s that print the
+//! same rows/series the paper reports, alongside the paper's published
+//! values and our relative error where applicable. The CLI (`repro table
+//! <id>` / `repro figure <id>`) and EXPERIMENTS.md are both produced from
+//! these functions; `cargo bench` times the underlying workloads.
+
+pub mod accuracy;
+pub mod datasets_exp;
+pub mod dse_exp;
+pub mod dynamic_cfg;
+pub mod dynamics;
+pub mod resources_exp;
+pub mod throughput;
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::datasets::{Dataset, Split};
+use crate::fixed::QSpec;
+use crate::hdl::{ActivityStats, Core};
+use crate::runtime::artifacts::{Manifest, ModelArtifact};
+use crate::util::table::Table;
+
+/// Dispatch by experiment id ("4", "5", …, "g" for §VI-G; "3", "4", "10",
+/// "12", "13", "14" for figures).
+pub fn run_table(id: &str, manifest: Option<&Manifest>) -> Result<Vec<Table>> {
+    match id {
+        "4" => Ok(vec![resources_exp::table4()]),
+        "5" => Ok(vec![resources_exp::table5()]),
+        "6" => Ok(vec![resources_exp::table6(manifest.context("table 6 needs artifacts")?)?]),
+        "7" => resources_exp::table7(manifest.context("table 7 needs artifacts")?),
+        "8" => Ok(vec![accuracy::table8(manifest.context("table 8 needs artifacts")?)?]),
+        "9" => Ok(vec![dse_exp::table9()]),
+        "10" => Ok(vec![dynamic_cfg::table10(manifest.context("table 10 needs artifacts")?)?]),
+        "11" => Ok(vec![datasets_exp::table11(manifest.context("table 11 needs artifacts")?)?]),
+        "12" => Ok(vec![resources_exp::table12()]),
+        "g" | "G" => Ok(vec![throughput::table_g()]),
+        _ => anyhow::bail!("unknown table id {id:?} (have 4..12, g)"),
+    }
+}
+
+pub fn run_figure(id: &str, manifest: Option<&Manifest>) -> Result<Vec<Table>> {
+    match id {
+        "3" => Ok(vec![dynamics::fig3()]),
+        "4" => Ok(vec![dynamics::fig4()]),
+        "10" | "11" => accuracy::fig10_11(manifest.context("figure 10 needs artifacts")?),
+        "12" => Ok(vec![accuracy::fig12(manifest.context("figure 12 needs artifacts")?)?]),
+        "13" => Ok(throughput::fig13()),
+        "14" => Ok(vec![throughput::fig14(manifest)?]),
+        _ => anyhow::bail!("unknown figure id {id:?} (have 3, 4, 10, 12, 13, 14)"),
+    }
+}
+
+/// All experiment ids, in paper order (used by `repro all` and the
+/// EXPERIMENTS.md generator).
+pub const ALL: &[(&str, &str)] = &[
+    ("figure", "3"),
+    ("figure", "4"),
+    ("table", "4"),
+    ("table", "5"),
+    ("table", "6"),
+    ("table", "7"),
+    ("table", "8"),
+    ("figure", "10"),
+    ("figure", "12"),
+    ("table", "g"),
+    ("figure", "13"),
+    ("figure", "14"),
+    ("table", "9"),
+    ("table", "10"),
+    ("table", "11"),
+    ("table", "12"),
+];
+
+/// Build a programmed cycle-accurate core from an artifact.
+pub fn core_from_artifact(art: &ModelArtifact) -> Result<(ModelConfig, Core)> {
+    let arch = art.sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("x");
+    let config = ModelConfig::parse_arch(&arch, QSpec::parse(&art.qname)?)?;
+    let mut core = Core::new(config.clone());
+    core.load_weights(&art.weights)?;
+    for (addr, &v) in art.default_regs.iter().enumerate() {
+        core.registers.write(addr, v)?;
+    }
+    Ok((config, core))
+}
+
+/// Measured evaluation of a programmed core over the synthetic test split:
+/// accuracy, average per-neuron-per-step spike rate, aggregate activity.
+pub struct Measured {
+    pub accuracy: f64,
+    pub spike_rate: f64,
+    /// Spikes per compute neuron per sample, scaled to the paper's 150-step
+    /// exposure (Table X's "Avg. Spikes per Neuron" convention).
+    pub spikes_per_neuron_150: f64,
+    pub stats: ActivityStats,
+}
+
+pub fn evaluate_core(core: &mut Core, dataset: Dataset, n: u64, t_steps: usize) -> Measured {
+    let mut stats = ActivityStats::default();
+    let mut correct = 0u64;
+    for i in 0..n {
+        let s = dataset.sample(i, Split::Test, t_steps);
+        let r = core.run(&s);
+        stats.add(&r.stats);
+        if r.prediction == s.label {
+            correct += 1;
+        }
+    }
+    let spike_rate = stats.spike_rate();
+    Measured {
+        accuracy: correct as f64 / n.max(1) as f64,
+        spike_rate,
+        spikes_per_neuron_150: spike_rate * 150.0,
+        stats,
+    }
+}

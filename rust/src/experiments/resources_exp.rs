@@ -1,0 +1,254 @@
+//! Tables IV, V, VI, VII, XII — resource/power characterisation tables.
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::config::{MemKind, ModelConfig, Topology};
+use crate::fixed::{QSpec, Q17_15, Q1_0, Q2_2, Q5_3, Q9_7};
+use crate::hwmodel::boards::VIRTEX_ULTRASCALE;
+use crate::hwmodel::power as pw;
+use crate::hwmodel::resources as res;
+use crate::hwmodel::asic;
+use crate::runtime::artifacts::Manifest;
+use crate::util::stats::rel_err;
+use crate::util::table::Table;
+
+use super::{core_from_artifact, evaluate_core};
+use crate::datasets::Dataset;
+
+fn err_cell(ours: f64, paper: f64) -> String {
+    format!("{:.1}%", 100.0 * rel_err(ours, paper))
+}
+
+/// Table IV: LIF resources + power vs quantization.
+pub fn table4() -> Table {
+    let mut t = Table::new(
+        "Table IV — LIF resource utilisation vs quantization (single neuron, 100 MHz)",
+        &["Quantization", "LUTs", "paper", "FFs", "paper", "DSPs", "paper", "Power (mW)", "paper"],
+    );
+    let rows: [(&str, QSpec, f64, f64, f64, f64); 5] = [
+        ("binary", Q1_0, 14.0, 11.0, 0.0, 3.0),
+        ("4 bits (Q2.2)", Q2_2, 66.0, 19.0, 0.0, 4.0),
+        ("8 bits (Q5.3)", Q5_3, 245.0, 35.0, 0.0, 6.0),
+        ("16 bits (Q9.7)", Q9_7, 242.0, 68.0, 2.0, 14.0),
+        ("32 bits (Q17.15)", Q17_15, 856.0, 132.0, 8.0, 27.0),
+    ];
+    for (name, qs, p_lut, p_ff, p_dsp, p_pow) in rows {
+        let r = res::lif_neuron(qs);
+        let p = res::lif_neuron_power_mw(qs);
+        t.row(vec![
+            name.into(),
+            format!("{:.0}", r.luts),
+            format!("{p_lut:.0}"),
+            format!("{:.0}", r.ffs),
+            format!("{p_ff:.0}"),
+            format!("{:.0}", r.dsps),
+            format!("{p_dsp:.0}"),
+            format!("{p:.0}"),
+            format!("{p_pow:.0}"),
+        ]);
+    }
+    t.note("model anchored at the paper's five published points (calibration = validation here; interpolation covers unevaluated widths)");
+    t
+}
+
+/// Table V: resources/power per connection modality (Q5.3).
+pub fn table5() -> Table {
+    let mut t = Table::new(
+        "Table V — resources & peak dynamic power per connection modality (Q5.3)",
+        &["Connections", "LUTs", "err", "FFs", "err", "BRAMs", "Power (mW)", "err"],
+    );
+    let rows: [(&str, Topology, usize, f64, f64, f64, f64); 6] = [
+        ("one-to-one", Topology::OneToOne, 1, 296.0, 56.0, 0.0, 12.0),
+        ("conv 3x3", Topology::Gaussian { radius: 1 }, 20, 284.0, 80.0, 0.5, 17.0),
+        ("conv 5x5", Topology::Gaussian { radius: 2 }, 20, 300.0, 130.0, 0.5, 18.0),
+        ("FC 128", Topology::AllToAll, 128, 420.0, 443.0, 0.5, 23.0),
+        ("FC 256", Topology::AllToAll, 256, 551.0, 829.0, 0.5, 29.0),
+        ("FC 512", Topology::AllToAll, 512, 822.0, 1599.0, 0.5, 48.0),
+    ];
+    for (name, topo, fan_in, p_lut, p_ff, p_bram, p_pow) in rows {
+        let r = res::connection_block(topo, fan_in, MemKind::Bram);
+        let p = pw::connection_block_power_mw(topo, fan_in);
+        t.row(vec![
+            name.into(),
+            format!("{:.0}", r.luts),
+            err_cell(r.luts, p_lut),
+            format!("{:.0}", r.ffs),
+            err_cell(r.ffs, p_ff),
+            format!("{:.1}", r.brams),
+            format!("{p:.0}"),
+            err_cell(p, p_pow),
+        ]);
+        let _ = p_bram;
+    }
+    t.note("affine fits in fan-in / tap count; per-cell error vs the paper shown inline");
+    t
+}
+
+/// Table VI: full-architecture scaling, with *measured* spike activity from
+/// the cycle-accurate core driving the power model.
+pub fn table6(manifest: &Manifest) -> Result<Table> {
+    let mut t = Table::new(
+        "Table VI — resource utilisation & dynamic power per SNN architecture (Virtex UltraScale)",
+        &["Config", "Q", "Neurons", "Synapses", "LUT%", "paper", "FF%", "paper", "BRAM%", "paper",
+          "DSP%", "Power (W)", "paper"],
+    );
+    // Measured baseline activity: run the real smnist artifact weights.
+    let art = manifest.model("smnist", "Q5.3")?;
+    let (_, mut core) = core_from_artifact(&art)?;
+    let measured = evaluate_core(&mut core, Dataset::Smnist, 40, art.t_steps);
+    let rate = measured.spike_rate;
+
+    let rows: [(&str, QSpec, f64, f64, f64, f64, f64); 4] = [
+        ("256x128x10", Q5_3, 8.97, 0.98, 3.99, 0.0, 0.623),
+        ("256x128x10", Q9_7, 9.38, 1.39, 3.99, 35.93, 0.738),
+        ("256x256x10", Q5_3, 17.44, 1.85, 7.69, 0.0, 1.241),
+        ("256x256x256x10", Q5_3, 34.08, 3.55, 15.10, 0.0, 2.172),
+    ];
+    for (arch, qs, p_lut, p_ff, p_bram, p_dsp, p_pow) in rows {
+        let cfg = ModelConfig::parse_arch(arch, qs)?;
+        let r = res::core(&cfg);
+        let (l, f, b, d) = res::utilisation(&r, &VIRTEX_ULTRASCALE);
+        // Larger nets keep roughly the baseline per-neuron rate (the paper's
+        // power column scales with synapses at fixed activity).
+        let p = pw::core_dynamic_w(&cfg, rate, pw::F0_HZ);
+        t.row(vec![
+            arch.into(),
+            qs.name(),
+            cfg.total_neurons().to_string(),
+            cfg.total_synapses().to_string(),
+            format!("{:.2}%", 100.0 * l),
+            format!("{p_lut:.2}%"),
+            format!("{:.2}%", 100.0 * f),
+            format!("{p_ff:.2}%"),
+            format!("{:.2}%", 100.0 * b),
+            format!("{p_bram:.2}%"),
+            format!("{:.2}%", 100.0 * d),
+            format!("{p:.3}"),
+            format!("{p_pow:.3}"),
+        ]);
+        let _ = p_dsp;
+    }
+    t.note(format!(
+        "power driven by measured smnist activity: {:.3} spikes/neuron/step ({:.0} per 150-step exposure)",
+        rate,
+        rate * 150.0
+    ));
+    Ok(t)
+}
+
+/// Table VII: comparison against state-of-the-art designs.
+pub fn table7(manifest: &Manifest) -> Result<Vec<Table>> {
+    let mut t1 = Table::new(
+        "Table VII (left) — single neuron vs Euler designs",
+        &["Design", "LUTs", "FFs", "BRAMs", "Power (W)"],
+    );
+    for d in [baselines::EULER_GUO_33, baselines::EULER_YE_34] {
+        t1.row(vec![
+            d.citation.into(),
+            d.luts.to_string(),
+            d.ffs.to_string(),
+            d.brams.to_string(),
+            d.power_w.map(|p| format!("{p}")).unwrap_or_else(|| "NR".into()),
+        ]);
+    }
+    // "Ours": the paper's single neuron is Q5.3 with runtime configurability.
+    let ours = baselines::PAPER_OURS_NEURON;
+    let model = res::lif_neuron(Q5_3);
+    t1.row(vec![
+        format!("Ours (paper: {} LUTs)", ours.luts),
+        format!("{:.0}", model.luts),
+        format!("{:.0}", model.ffs),
+        "0".into(),
+        format!("{}", ours.power_w.unwrap()),
+    ]);
+    t1.note("our neuron spends extra logic on run-time configurability (refractory, reset, rates, Vth) — the paper's key distinction vs [33]/[34]");
+
+    let mut t2 = Table::new(
+        "Table VII (right) — full SNN architectures on Spiking MNIST",
+        &["Design", "Config", "Neurons", "Synapses", "LUTs", "FFs", "BRAMs", "Power (W)", "Accuracy"],
+    );
+    for d in [baselines::BEST_ACCURACY_28, baselines::BEST_HARDWARE_35] {
+        t2.row(vec![
+            d.citation.into(),
+            d.config.into(),
+            d.neurons.unwrap().to_string(),
+            d.synapses.unwrap().to_string(),
+            d.luts.to_string(),
+            d.ffs.to_string(),
+            d.brams.to_string(),
+            format!("{}", d.power_w.unwrap()),
+            format!("{:.1}%", 100.0 * d.accuracy.unwrap()),
+        ]);
+    }
+    let art = manifest.model("smnist", "Q5.3")?;
+    let (cfg, mut core) = core_from_artifact(&art)?;
+    let m = evaluate_core(&mut core, Dataset::Smnist, 100, art.t_steps);
+    let r = res::core(&cfg);
+    let p = pw::core_dynamic_w(&cfg, m.spike_rate, pw::F0_HZ);
+    t2.row(vec![
+        "Ours (measured/model)".into(),
+        cfg.arch_name(),
+        cfg.total_neurons().to_string(),
+        cfg.total_synapses().to_string(),
+        format!("{:.0}", r.luts),
+        format!("{:.0}", r.ffs),
+        format!("{:.0}", r.brams),
+        format!("{p:.3}"),
+        format!("{:.1}%", 100.0 * m.accuracy),
+    ]);
+    t2.note("paper's own row: 40,965 LUTs / 7,095 FFs / 69 BRAMs / 0.623 W / 96.5% — fewer neurons+synapses than [28]/[35] at comparable accuracy and lowest power");
+    Ok(vec![t1, t2])
+}
+
+/// Table XII: early ASIC synthesis of the Q5.3 LIF neuron.
+pub fn table12() -> Table {
+    let mut t = Table::new(
+        "Table XII — early ASIC synthesis (Synopsys-DC-calibrated model, 32 nm, 100 MHz)",
+        &["Q", "Nets", "Comb", "Seq", "Buf/Inv", "Area (µm²)", "Switch (µW)", "Leak (µW)", "Total (µW)"],
+    );
+    for qs in [Q5_3, Q9_7, Q2_2] {
+        let s = asic::synthesize_lif(qs, 100e6);
+        t.row(vec![
+            qs.name(),
+            format!("{:.0}", s.nets),
+            format!("{:.0}", s.comb_cells),
+            format!("{:.0}", s.seq_cells),
+            format!("{:.0}", s.buf_inv),
+            format!("{:.0}", s.area_um2),
+            format!("{:.1}", s.switching_power_uw),
+            format!("{:.1}", s.leakage_power_uw),
+            format!("{:.1}", s.total_power_uw()),
+        ]);
+    }
+    t.note("Q5.3 row reproduces the paper's anchor exactly (1574/944/35/309, 2894 µm², 23.2+78.5 µW); other widths are model extrapolations");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_shape() {
+        let t = table4();
+        assert_eq!(t.rows.len(), 5);
+        assert_eq!(t.rows[2][1], "245"); // Q5.3 LUTs anchor
+    }
+
+    #[test]
+    fn table5_errors_small() {
+        let t = table5();
+        for row in &t.rows {
+            let err: f64 = row[2].trim_end_matches('%').parse().unwrap();
+            assert!(err < 3.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn table12_anchor() {
+        let t = table12();
+        assert_eq!(t.rows[0][1], "1574");
+        assert_eq!(t.rows[0][8], "101.7");
+    }
+}

@@ -1,0 +1,273 @@
+//! Signed Qn.q fixed-point arithmetic — paper §III-C, Fig. 6.
+//!
+//! Bit-identical to `python/compile/fixedpoint.py` (enforced by the
+//! `golden_fixedpoint.json` cross-language test vectors). Unlike the Python
+//! side, which restricts the emulated datapath to W ≤ 16 (int32 products),
+//! this implementation supports the full W ≤ 32 range of the paper
+//! (Q17.15 in Table IV) by widening products to i64.
+//!
+//! Conversion from float **saturates** (one-time software-side weight /
+//! register quantization); all datapath ops **wrap** modulo 2^W like the
+//! silicon registers. Fixed-point multiply is the Fig.-6 datapath: full
+//! 2W-bit product, arithmetic shift right by q (truncation toward −∞ = the
+//! paper's *underflow*), wrap to W bits (= the paper's *overflow*).
+
+use std::fmt;
+
+/// Static quantization configuration: n integer bits (sign included) and q
+/// fraction bits. `Q5.3` is the paper's 8-bit baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QSpec {
+    n: u8,
+    q: u8,
+}
+
+/// The paper's evaluated settings (Table IV).
+pub const Q1_0: QSpec = QSpec { n: 1, q: 0 }; // "binary"
+pub const Q2_2: QSpec = QSpec { n: 2, q: 2 };
+pub const Q3_1: QSpec = QSpec { n: 3, q: 1 };
+pub const Q5_3: QSpec = QSpec { n: 5, q: 3 };
+pub const Q9_7: QSpec = QSpec { n: 9, q: 7 };
+pub const Q17_15: QSpec = QSpec { n: 17, q: 15 };
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum QSpecError {
+    #[error("invalid QSpec Q{n}.{q}: need n >= 1, total width <= 32")]
+    Invalid { n: u8, q: u8 },
+    #[error("cannot parse QSpec name {0:?} (expected e.g. \"Q5.3\")")]
+    Parse(String),
+}
+
+impl QSpec {
+    pub const fn new_unchecked(n: u8, q: u8) -> QSpec {
+        QSpec { n, q }
+    }
+
+    pub fn new(n: u8, q: u8) -> Result<QSpec, QSpecError> {
+        if n < 1 || (n as u32 + q as u32) > 32 {
+            return Err(QSpecError::Invalid { n, q });
+        }
+        Ok(QSpec { n, q })
+    }
+
+    /// Parse `"Q5.3"`-style names (the manifest / CLI format).
+    pub fn parse(name: &str) -> Result<QSpec, QSpecError> {
+        let body = name
+            .strip_prefix('Q')
+            .ok_or_else(|| QSpecError::Parse(name.into()))?;
+        let (n, q) = body
+            .split_once('.')
+            .ok_or_else(|| QSpecError::Parse(name.into()))?;
+        let n: u8 = n.parse().map_err(|_| QSpecError::Parse(name.into()))?;
+        let q: u8 = q.parse().map_err(|_| QSpecError::Parse(name.into()))?;
+        QSpec::new(n, q)
+    }
+
+    pub const fn n(&self) -> u8 {
+        self.n
+    }
+
+    pub const fn q(&self) -> u8 {
+        self.q
+    }
+
+    /// Total width W = n + q in bits (sign included).
+    pub const fn width(&self) -> u32 {
+        self.n as u32 + self.q as u32
+    }
+
+    pub const fn scale(&self) -> i64 {
+        1i64 << self.q
+    }
+
+    pub const fn max_raw(&self) -> i32 {
+        ((1i64 << (self.width() - 1)) - 1) as i32
+    }
+
+    pub const fn min_raw(&self) -> i32 {
+        (-(1i64 << (self.width() - 1))) as i32
+    }
+
+    /// Resolution of one LSB in value units.
+    pub fn lsb(&self) -> f64 {
+        1.0 / self.scale() as f64
+    }
+
+    // --- datapath ops (wrapping, silicon semantics) ------------------------
+
+    /// Wrap an arbitrary integer to W-bit two's complement, sign-extended.
+    #[inline]
+    pub fn wrap(&self, x: i64) -> i32 {
+        let w = self.width();
+        if w == 32 {
+            return x as i32; // i64 -> i32 truncation IS mod-2^32 wrap
+        }
+        let half = 1i64 << (w - 1);
+        let mask = (1i64 << w) - 1;
+        (((x + half) & mask) - half) as i32
+    }
+
+    /// Wrapping fixed-point add (integer add rules, Fig. 6 text).
+    #[inline]
+    pub fn add(&self, a: i32, b: i32) -> i32 {
+        self.wrap(a as i64 + b as i64)
+    }
+
+    #[inline]
+    pub fn sub(&self, a: i32, b: i32) -> i32 {
+        self.wrap(a as i64 - b as i64)
+    }
+
+    /// Fig.-6 multiply: full 2W-bit product >> q (arithmetic), wrap to W.
+    #[inline]
+    pub fn mul(&self, a: i32, b: i32) -> i32 {
+        self.wrap((a as i64 * b as i64) >> self.q)
+    }
+
+    // --- conversions (saturating, software side) ---------------------------
+
+    /// Saturating float → raw. Rounds half away from zero like numpy's
+    /// `floor(x*scale + 0.5)` used on the Python side.
+    pub fn from_float(&self, x: f64) -> i32 {
+        let raw = (x * self.scale() as f64 + 0.5).floor();
+        let raw = raw.clamp(self.min_raw() as f64, self.max_raw() as f64);
+        raw as i32
+    }
+
+    pub fn to_float(&self, raw: i32) -> f64 {
+        raw as f64 / self.scale() as f64
+    }
+
+    /// True iff `raw` is a representable W-bit value (sign-extended form).
+    pub fn in_range(&self, raw: i32) -> bool {
+        raw >= self.min_raw() && raw <= self.max_raw()
+    }
+
+    pub fn name(&self) -> String {
+        format!("Q{}.{}", self.n, self.q)
+    }
+}
+
+impl fmt::Display for QSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Q{}.{}", self.n, self.q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_and_ranges() {
+        assert_eq!(Q5_3.width(), 8);
+        assert_eq!(Q5_3.max_raw(), 127);
+        assert_eq!(Q5_3.min_raw(), -128);
+        assert_eq!(Q9_7.width(), 16);
+        assert_eq!(Q17_15.width(), 32);
+        assert_eq!(Q17_15.max_raw(), i32::MAX);
+        assert_eq!(Q17_15.min_raw(), i32::MIN);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for qs in [Q2_2, Q3_1, Q5_3, Q9_7, Q17_15] {
+            assert_eq!(QSpec::parse(&qs.name()).unwrap(), qs);
+        }
+        assert!(QSpec::parse("5.3").is_err());
+        assert!(QSpec::parse("Q33.0").is_err());
+        assert!(QSpec::new(0, 3).is_err());
+        assert!(QSpec::new(20, 20).is_err());
+    }
+
+    #[test]
+    fn wrap_two_complement() {
+        assert_eq!(Q5_3.wrap(127), 127);
+        assert_eq!(Q5_3.wrap(128), -128);
+        assert_eq!(Q5_3.wrap(-129), 127);
+        assert_eq!(Q5_3.wrap(256), 0);
+        assert_eq!(Q17_15.wrap(i32::MAX as i64 + 1), i32::MIN);
+    }
+
+    #[test]
+    fn add_mul_basics() {
+        // 1.0 + 1.5 = 2.5 (raw 20); 2.0 * 1.5 = 3.0 (raw 24)
+        assert_eq!(Q5_3.add(8, 12), 20);
+        assert_eq!(Q5_3.mul(16, 12), 24);
+        // overflow wraps
+        assert_eq!(Q5_3.add(127, 1), -128);
+    }
+
+    #[test]
+    fn mul_truncates_toward_neg_inf() {
+        assert_eq!(Q5_3.mul(1, 1), 0); // +underflow truncates to 0
+        assert_eq!(Q5_3.mul(-1, 1), -1); // arithmetic shift floors negative
+    }
+
+    #[test]
+    fn from_float_saturates_and_rounds() {
+        assert_eq!(Q5_3.from_float(1000.0), 127);
+        assert_eq!(Q5_3.from_float(-1000.0), -128);
+        assert_eq!(Q5_3.from_float(0.0624), 0);
+        assert_eq!(Q5_3.from_float(0.0626), 1);
+        assert_eq!(Q5_3.to_float(Q5_3.from_float(-0.125)), -0.125);
+    }
+
+    #[test]
+    fn q17_15_wide_products() {
+        // (-2^16) * (-2^16) in raw: product 2^32 >> 15 = 2^17 (in range)
+        let a = -(1 << 16);
+        assert_eq!(Q17_15.mul(a, a), 1 << 17);
+    }
+
+    /// Property (hand-rolled; proptest is unavailable offline): sequential
+    /// wrapped adds equal the wrap of the exact sum — ActGen soundness.
+    #[test]
+    fn prop_add_is_modular_sum() {
+        let mut rng = crate::datasets::rng::XorShift64Star::new(0xF00D);
+        for qs in [Q2_2, Q5_3, Q9_7, Q17_15] {
+            for _ in 0..200 {
+                let len = 1 + (rng.below(24) as usize);
+                let xs: Vec<i32> = (0..len)
+                    .map(|_| qs.wrap(rng.next_u64() as i64))
+                    .collect();
+                let mut acc = 0i32;
+                let mut exact = 0i64;
+                for &x in &xs {
+                    acc = qs.add(acc, x);
+                    exact += x as i64;
+                }
+                assert_eq!(acc, qs.wrap(exact), "{qs} {xs:?}");
+            }
+        }
+    }
+
+    /// Property: results of all ops stay in the representable range.
+    #[test]
+    fn prop_ops_in_range() {
+        let mut rng = crate::datasets::rng::XorShift64Star::new(0xBEEF);
+        for qs in [Q2_2, Q3_1, Q5_3, Q9_7, Q17_15] {
+            for _ in 0..300 {
+                let a = qs.wrap(rng.next_u64() as i64);
+                let b = qs.wrap(rng.next_u64() as i64);
+                for r in [qs.add(a, b), qs.sub(a, b), qs.mul(a, b)] {
+                    assert!(qs.in_range(r), "{qs}: {a} op {b} -> {r}");
+                }
+            }
+        }
+    }
+
+    /// Property: mul matches a big-integer reference on random operands.
+    #[test]
+    fn prop_mul_matches_wide_reference() {
+        let mut rng = crate::datasets::rng::XorShift64Star::new(0xCAFE);
+        for qs in [Q5_3, Q9_7, Q17_15] {
+            for _ in 0..300 {
+                let a = qs.wrap(rng.next_u64() as i64);
+                let b = qs.wrap(rng.next_u64() as i64);
+                let wide = ((a as i128 * b as i128) >> qs.q()) as i64;
+                assert_eq!(qs.mul(a, b), qs.wrap(wide));
+            }
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Address-Event Representation (AER) — the spk_in/spk_out encoding (§II).
+//!
+//! Each spike is one event `(timestep, neuron address)`; the stream is
+//! ordered by timestep then address, which is what the spk_in interface
+//! consumes and spk_out produces. Encode/decode between dense per-step
+//! spike vectors and the event stream, with validation of malformed streams
+//! (out-of-range addresses, unordered timestamps) — the failure-injection
+//! tests exercise these paths.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AerEvent {
+    pub t: u32,
+    pub addr: u32,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AerError {
+    #[error("event address {addr} out of range (layer width {width})")]
+    BadAddress { addr: u32, width: usize },
+    #[error("event timestamp {t} out of range (stream has {t_steps} steps)")]
+    BadTime { t: u32, t_steps: usize },
+    #[error("event stream not ordered at index {index} ({prev:?} then {cur:?})")]
+    Unordered { index: usize, prev: (u32, u32), cur: (u32, u32) },
+}
+
+/// Dense row-major [T × N] spike matrix → ordered AER events.
+pub fn encode(spikes: &[u8], t_steps: usize, width: usize) -> Vec<AerEvent> {
+    assert_eq!(spikes.len(), t_steps * width);
+    let mut out = Vec::new();
+    for t in 0..t_steps {
+        for i in 0..width {
+            if spikes[t * width + i] != 0 {
+                out.push(AerEvent { t: t as u32, addr: i as u32 });
+            }
+        }
+    }
+    out
+}
+
+/// Ordered AER events → dense [T × N] spike matrix, with validation.
+pub fn decode(events: &[AerEvent], t_steps: usize, width: usize) -> Result<Vec<u8>, AerError> {
+    let mut out = vec![0u8; t_steps * width];
+    let mut prev: Option<(u32, u32)> = None;
+    for (index, ev) in events.iter().enumerate() {
+        if ev.addr as usize >= width {
+            return Err(AerError::BadAddress { addr: ev.addr, width });
+        }
+        if ev.t as usize >= t_steps {
+            return Err(AerError::BadTime { t: ev.t, t_steps });
+        }
+        if let Some(p) = prev {
+            if (ev.t, ev.addr) < p {
+                return Err(AerError::Unordered { index, prev: p, cur: (ev.t, ev.addr) });
+            }
+        }
+        prev = Some((ev.t, ev.addr));
+        out[ev.t as usize * width + ev.addr as usize] = 1;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let spikes = vec![0, 1, 0, 1, 1, 0];
+        let ev = encode(&spikes, 2, 3);
+        assert_eq!(
+            ev,
+            vec![
+                AerEvent { t: 0, addr: 1 },
+                AerEvent { t: 1, addr: 0 },
+                AerEvent { t: 1, addr: 1 }
+            ]
+        );
+        assert_eq!(decode(&ev, 2, 3).unwrap(), spikes);
+    }
+
+    #[test]
+    fn empty_stream() {
+        assert_eq!(decode(&[], 2, 3).unwrap(), vec![0; 6]);
+        assert!(encode(&vec![0; 6], 2, 3).is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let bad_addr = [AerEvent { t: 0, addr: 9 }];
+        assert!(matches!(decode(&bad_addr, 2, 3), Err(AerError::BadAddress { .. })));
+        let bad_t = [AerEvent { t: 5, addr: 0 }];
+        assert!(matches!(decode(&bad_t, 2, 3), Err(AerError::BadTime { .. })));
+        let unordered = [AerEvent { t: 1, addr: 0 }, AerEvent { t: 0, addr: 0 }];
+        assert!(matches!(decode(&unordered, 2, 3), Err(AerError::Unordered { .. })));
+    }
+
+    #[test]
+    fn event_count_equals_nnz() {
+        use crate::datasets::{Dataset, Split};
+        let s = Dataset::Smnist.sample(0, Split::Test, 8);
+        let ev = encode(&s.spikes, s.t_steps, s.inputs);
+        assert_eq!(ev.len(), s.nnz());
+        assert_eq!(decode(&ev, s.t_steps, s.inputs).unwrap(), s.spikes);
+    }
+}

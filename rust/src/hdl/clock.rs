@@ -1,0 +1,124 @@
+//! Clock domains and activity accounting.
+//!
+//! QUANTISENC has two clocks (§II): `spk_clk` (the main design clock — one
+//! edge per SNN timestep at the spike frequency f) and `mem_clk` (the
+//! synaptic-memory/register clock; the address generator spends M mem_clk
+//! cycles accumulating a fan-in-M activation, §III-A).
+//!
+//! [`ActivityStats`] is the toggle-rate ledger: the cycle-accurate layers
+//! record how many accumulate operations actually fired (clock gating skips
+//! pre-synaptic rows with no spike — "we gate the clock when there is no
+//! input spike", §VI-E) and how many register toggles occurred. The power
+//! model (`hwmodel::power`) converts this ledger into dynamic power the same
+//! way the paper converts Vivado toggle rates.
+
+/// Frequencies of the two clock domains.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClockConfig {
+    /// Spike frequency f (Hz) — the paper sweeps 100 kHz … 1.2 MHz.
+    pub spk_hz: f64,
+    /// Memory clock (Hz) — 100 MHz in the paper's LIF characterisation.
+    pub mem_hz: f64,
+}
+
+impl Default for ClockConfig {
+    fn default() -> Self {
+        // The paper's baseline operating point (§VI-D): 600 kHz spike clock
+        // gives the best perf/W; mem_clk at 100 MHz (§VI-B).
+        ClockConfig { spk_hz: 600_000.0, mem_hz: 100_000_000.0 }
+    }
+}
+
+impl ClockConfig {
+    /// mem_clk cycles available within one spk_clk period.
+    pub fn mem_cycles_per_step(&self) -> f64 {
+        self.mem_hz / self.spk_hz
+    }
+}
+
+/// Activity ledger accumulated by the cycle-accurate simulation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ActivityStats {
+    /// spk_clk edges simulated.
+    pub spk_steps: u64,
+    /// mem_clk cycles consumed by address generators (M per layer per step).
+    pub mem_cycles: u64,
+    /// Synaptic accumulates that actually fired (input spike present —
+    /// the un-gated fraction of mem_cycles × N).
+    pub synaptic_ops: u64,
+    /// Synaptic accumulate slots skipped by clock gating (no input spike).
+    pub gated_ops: u64,
+    /// Neuron vmem-register toggles.
+    pub vmem_toggles: u64,
+    /// Neuron datapath evaluations (one per neuron per step, refractory or not).
+    pub neuron_updates: u64,
+    /// Spikes emitted by neurons.
+    pub spikes: u64,
+}
+
+impl ActivityStats {
+    pub fn add(&mut self, other: &ActivityStats) {
+        self.spk_steps += other.spk_steps;
+        self.mem_cycles += other.mem_cycles;
+        self.synaptic_ops += other.synaptic_ops;
+        self.gated_ops += other.gated_ops;
+        self.vmem_toggles += other.vmem_toggles;
+        self.neuron_updates += other.neuron_updates;
+        self.spikes += other.spikes;
+    }
+
+    /// Fraction of synaptic accumulate slots that were clock-gated away.
+    pub fn gating_ratio(&self) -> f64 {
+        let total = self.synaptic_ops + self.gated_ops;
+        if total == 0 {
+            0.0
+        } else {
+            self.gated_ops as f64 / total as f64
+        }
+    }
+
+    /// Average spikes per neuron-step (drives Table X's power trend).
+    pub fn spike_rate(&self) -> f64 {
+        if self.neuron_updates == 0 {
+            0.0
+        } else {
+            self.spikes as f64 / self.neuron_updates as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_operating_point() {
+        let c = ClockConfig::default();
+        assert_eq!(c.spk_hz, 600_000.0);
+        assert_eq!(c.mem_hz, 100_000_000.0);
+        assert!((c.mem_cycles_per_step() - 166.666).abs() < 1.0);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut a = ActivityStats { spk_steps: 1, synaptic_ops: 10, gated_ops: 30, ..Default::default() };
+        let b = ActivityStats { spk_steps: 2, synaptic_ops: 5, spikes: 7, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.spk_steps, 3);
+        assert_eq!(a.synaptic_ops, 15);
+        assert_eq!(a.spikes, 7);
+    }
+
+    #[test]
+    fn gating_ratio() {
+        let s = ActivityStats { synaptic_ops: 25, gated_ops: 75, ..Default::default() };
+        assert_eq!(s.gating_ratio(), 0.75);
+        assert_eq!(ActivityStats::default().gating_ratio(), 0.0);
+    }
+
+    #[test]
+    fn spike_rate() {
+        let s = ActivityStats { neuron_updates: 100, spikes: 26, ..Default::default() };
+        assert!((s.spike_rate() - 0.26).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,206 @@
+//! The QUANTISENC core — K layers + the decoder's control registers
+//! (paper Fig. 1a). Dataflow processing: per spk_clk timestep, the spike
+//! vector flows layer-by-layer through the core (the pipelined *stream*
+//! overlap across samples lives in `coordinator::pipeline`; the core itself
+//! is the per-sample datapath).
+
+use crate::config::registers::RegisterFile;
+use crate::config::ModelConfig;
+use crate::datasets::Sample;
+
+use super::clock::ActivityStats;
+use super::layer::Layer;
+
+#[derive(Debug, Clone)]
+pub struct Core {
+    config: ModelConfig,
+    layers: Vec<Layer>,
+    pub registers: RegisterFile,
+    /// Ping-pong spike buffers to avoid per-step allocation on the hot path.
+    buf_a: Vec<u8>,
+    buf_b: Vec<u8>,
+}
+
+/// Result of running one full input stream (sample) through the core.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Output spike counts per output neuron (the Fig.-11 spike counter).
+    pub counts: Vec<u32>,
+    /// Total spikes per layer (drives the power model, matches the HLO
+    /// artifact's `layer_spike_totals` output bit-for-bit).
+    pub layer_spikes: Vec<u64>,
+    pub stats: ActivityStats,
+    /// argmax of counts — the classification readout.
+    pub prediction: usize,
+}
+
+impl Core {
+    pub fn new(config: ModelConfig) -> Core {
+        let layers = config
+            .layers()
+            .iter()
+            .map(|l| Layer::new(l, config.qspec, config.mem))
+            .collect();
+        let registers = RegisterFile::new(config.qspec);
+        let buf_a = Vec::with_capacity(config.inputs().max(config.outputs()));
+        Core { config, layers, registers, buf_a, buf_b: Vec::new() }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn layer_mut(&mut self, k: usize) -> &mut Layer {
+        &mut self.layers[k]
+    }
+
+    /// Reset all membrane state (inter-stream settle, Fig. 8's `s`).
+    pub fn reset(&mut self) {
+        for l in &mut self.layers {
+            l.reset();
+        }
+    }
+
+    /// One spk_clk timestep: feed one input spike vector through all layers.
+    /// Returns the output layer's spikes (borrowed from the internal
+    /// ping-pong buffer — zero allocation on the hot path) and the step's
+    /// activity; per-layer spike counts accumulate into `layer_spikes`.
+    pub fn step(&mut self, spikes_in: &[u8], layer_spikes: &mut [u64]) -> (&[u8], ActivityStats) {
+        assert_eq!(layer_spikes.len(), self.layers.len());
+        let mut total = ActivityStats::default();
+        self.buf_a.clear();
+        self.buf_a.extend_from_slice(spikes_in);
+        for (k, layer) in self.layers.iter_mut().enumerate() {
+            let stats = layer.step_regs(&self.buf_a, &mut self.buf_b, &self.registers);
+            layer_spikes[k] += stats.spikes;
+            total.add(&stats);
+            std::mem::swap(&mut self.buf_a, &mut self.buf_b);
+        }
+        total.spk_steps = 1; // one core timestep, not one per layer
+        (&self.buf_a, total)
+    }
+
+    /// Run a full sample (T timesteps), starting from reset state.
+    pub fn run(&mut self, sample: &Sample) -> RunResult {
+        assert_eq!(
+            sample.inputs,
+            self.config.inputs(),
+            "sample width does not match core input layer"
+        );
+        self.reset();
+        let n_out = self.config.outputs();
+        let mut counts = vec![0u32; n_out];
+        let mut layer_spikes = vec![0u64; self.layers.len()];
+        let mut stats = ActivityStats::default();
+        for t in 0..sample.t_steps {
+            let (out, st) = self.step(sample.step(t), &mut layer_spikes);
+            for (c, &s) in counts.iter_mut().zip(out) {
+                *c += s as u32;
+            }
+            stats.add(&st);
+        }
+        let prediction = argmax(&counts);
+        RunResult { counts, layer_spikes, stats, prediction }
+    }
+
+    /// Program trained weights (dense row-major per layer) — the wt_in bulk
+    /// path used when deploying an artifact's weight file.
+    pub fn load_weights(&mut self, per_layer: &[Vec<i32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            per_layer.len() == self.layers.len(),
+            "expected {} weight matrices, got {}",
+            self.layers.len(),
+            per_layer.len()
+        );
+        for (layer, w) in self.layers.iter_mut().zip(per_layer) {
+            layer.memory_mut().load_dense(w)?;
+        }
+        Ok(())
+    }
+}
+
+/// First-max argmax (ties resolve to the lowest index, like numpy).
+pub fn argmax(counts: &[u32]) -> usize {
+    let mut best = 0;
+    for (i, &c) in counts.iter().enumerate() {
+        if c > counts[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::Sample;
+    use crate::fixed::Q5_3;
+
+    fn tiny_core() -> Core {
+        let cfg = ModelConfig::parse_arch("4x3x2", Q5_3).unwrap();
+        let mut core = Core::new(cfg);
+        // Excitatory path: input 0..3 -> neuron 0 of layer 1 -> output 0.
+        for i in 0..4 {
+            core.layer_mut(0).memory_mut().write(i, 0, 8).unwrap(); // 1.0
+        }
+        core.layer_mut(1).memory_mut().write(0, 0, 16).unwrap(); // 2.0
+        core
+    }
+
+    #[test]
+    fn spikes_propagate_through_layers() {
+        let mut core = tiny_core();
+        let sample = Sample { spikes: vec![1, 1, 1, 1].repeat(5), t_steps: 5, inputs: 4, label: 0 };
+        let r = core.run(&sample);
+        assert!(r.layer_spikes[0] > 0, "hidden layer silent");
+        assert!(r.counts[0] > 0, "output neuron silent");
+        assert_eq!(r.prediction, 0);
+    }
+
+    #[test]
+    fn silent_input_is_silent() {
+        let mut core = tiny_core();
+        let sample = Sample { spikes: vec![0; 20], t_steps: 5, inputs: 4, label: 0 };
+        let r = core.run(&sample);
+        assert_eq!(r.layer_spikes, vec![0, 0]);
+        assert_eq!(r.counts, vec![0, 0]);
+    }
+
+    #[test]
+    fn run_resets_between_samples() {
+        let mut core = tiny_core();
+        let sample = Sample { spikes: vec![1, 1, 1, 1].repeat(5), t_steps: 5, inputs: 4, label: 0 };
+        let a = core.run(&sample);
+        let b = core.run(&sample);
+        assert_eq!(a.counts, b.counts, "state leaked across runs");
+    }
+
+    #[test]
+    fn stats_cycle_accounting() {
+        let mut core = tiny_core();
+        let sample = Sample { spikes: vec![1, 0, 0, 0].repeat(3), t_steps: 3, inputs: 4, label: 0 };
+        let r = core.run(&sample);
+        // mem cycles = (M1 + M2) per step = (4 + 3) * 3 steps
+        assert_eq!(r.stats.mem_cycles, 21);
+        assert_eq!(r.stats.spk_steps, 3);
+        assert_eq!(r.stats.neuron_updates, (3 + 2) * 3);
+    }
+
+    #[test]
+    fn argmax_ties_lowest() {
+        assert_eq!(argmax(&[3, 5, 5, 1]), 1);
+        assert_eq!(argmax(&[0, 0]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sample width")]
+    fn input_width_checked() {
+        let mut core = tiny_core();
+        let sample = Sample { spikes: vec![0; 10], t_steps: 2, inputs: 5, label: 0 };
+        core.run(&sample);
+    }
+}

@@ -1,0 +1,247 @@
+//! Extended neuron/synapse models — the paper's §I modularity claim made
+//! concrete: "QUANTISENC can be easily extended to support other types of
+//! neurons, e.g., Izhikevich and compartmental, and synapse, e.g.,
+//! conductance-based synapse (COBA)".
+//!
+//! Both models below run on the same signed Qn.q datapath, the same control
+//! registers idea (their parameters are run-time-programmable raw words),
+//! and slot into a layer the same way the LIF datapath does — they share
+//! ActGen (the weighted-sum front end) and replace VmemDyn/VmemSel.
+
+use crate::fixed::QSpec;
+
+/// Quantized Izhikevich neuron (Izhikevich 2003), forward-Euler:
+///
+///   v' = v + Δt·(0.04 v² + 5 v + 140 − u + I)
+///   u' = u + Δt·a·(b·v − u)
+///   spike when v ≥ 30 mV → v := c, u := u + d
+///
+/// All constants live in Qn.q control words (run-time programmable, like
+/// the LIF registers). Needs ≥ Q14.x integer headroom for the v² term in
+/// the mV regime (v² reaches ~4900); the constructor enforces it.
+#[derive(Debug, Clone)]
+pub struct IzhikevichNeuron {
+    pub v: i32,
+    pub u: i32,
+    qspec: QSpec,
+    // Control words (raw Qn.q).
+    pub a: i32,
+    pub b: i32,
+    pub c: i32,
+    pub d: i32,
+    k_sq: i32,    // 0.04
+    k_lin: i32,   // 5
+    k_bias: i32,  // 140
+    v_spike: i32, // 30
+    dt: i32,
+}
+
+/// Canonical parameter presets from the Izhikevich paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IzhPreset {
+    /// a=0.02, b=0.2, c=-65, d=8 — regular spiking (cortical excitatory).
+    RegularSpiking,
+    /// a=0.1, b=0.2, c=-65, d=2 — fast spiking (inhibitory interneuron).
+    FastSpiking,
+    /// a=0.02, b=0.2, c=-50, d=2 — chattering / bursting.
+    Chattering,
+}
+
+impl IzhikevichNeuron {
+    pub fn new(qspec: QSpec, preset: IzhPreset) -> anyhow::Result<IzhikevichNeuron> {
+        anyhow::ensure!(
+            qspec.n() >= 14,
+            "Izhikevich dynamics need >= Q14.x headroom (v^2 reaches ~4900 mV^2), got {qspec}"
+        );
+        let (a, b, c, d) = match preset {
+            IzhPreset::RegularSpiking => (0.02, 0.2, -65.0, 8.0),
+            IzhPreset::FastSpiking => (0.1, 0.2, -65.0, 2.0),
+            IzhPreset::Chattering => (0.02, 0.2, -50.0, 2.0),
+        };
+        Ok(IzhikevichNeuron {
+            v: qspec.from_float(-65.0),
+            u: qspec.from_float(b * -65.0),
+            qspec,
+            a: qspec.from_float(a),
+            b: qspec.from_float(b),
+            c: qspec.from_float(c),
+            d: qspec.from_float(d),
+            k_sq: qspec.from_float(0.04),
+            k_lin: qspec.from_float(5.0),
+            k_bias: qspec.from_float(140.0),
+            v_spike: qspec.from_float(30.0),
+            dt: qspec.from_float(0.5), // 0.5 ms Euler step (stability)
+        })
+    }
+
+    /// One Euler step with input current `i_in` (raw Qn.q). Returns spike.
+    ///
+    /// The v² term is computed with the *saturating* wide product rather
+    /// than the wrapping datapath multiply: in silicon this node gets a
+    /// wider intermediate (2W bits, like Fig. 6 pre-truncation) precisely
+    /// because a wrapped v² flips the parabola's sign and destroys the
+    /// dynamics. This is the one documented departure from the pure LIF
+    /// datapath and the reason the paper calls the extension "modular" —
+    /// only VmemDyn changes.
+    pub fn step(&mut self, i_in: i32) -> bool {
+        let qs = self.qspec;
+        // v^2 with saturation (wide product, then clamp into Qn.q).
+        let v2_wide = (self.v as i64 * self.v as i64) >> qs.q();
+        let v2 = v2_wide.clamp(qs.min_raw() as i64, qs.max_raw() as i64) as i32;
+        let quad = qs.mul(self.k_sq, v2);
+        let lin = qs.mul(self.k_lin, self.v);
+        let dv_wide = quad as i64 + lin as i64 + self.k_bias as i64 - self.u as i64 + i_in as i64;
+        let dv = dv_wide.clamp(qs.min_raw() as i64, qs.max_raw() as i64) as i32;
+        self.v = {
+            let step = qs.mul(self.dt, dv);
+            (self.v as i64 + step as i64).clamp(qs.min_raw() as i64, qs.max_raw() as i64) as i32
+        };
+        let du = qs.mul(self.a, qs.sub(qs.mul(self.b, self.v), self.u));
+        self.u = qs.add(self.u, qs.mul(self.dt, du));
+
+        if self.v >= self.v_spike {
+            self.v = self.c;
+            self.u = qs.add(self.u, self.d);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drive with constant current; return (spike count, v trace in floats).
+    pub fn run_constant(&mut self, i_in_f: f64, steps: usize) -> (usize, Vec<f64>) {
+        let i_raw = self.qspec.from_float(i_in_f);
+        let mut spikes = 0;
+        let mut trace = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            if self.step(i_raw) {
+                spikes += 1;
+            }
+            trace.push(self.qspec.to_float(self.v));
+        }
+        (spikes, trace)
+    }
+}
+
+/// Conductance-based (COBA) synapse state for one neuron: instead of the
+/// CUBA weighted sum feeding current directly (Eq. 6), spikes charge a
+/// conductance g that decays exponentially, and the delivered current is
+/// g·(E_rev − v): excitatory for v < E_rev, shunting as v approaches it.
+#[derive(Debug, Clone)]
+pub struct CobaSynapse {
+    pub g: i32,
+    qspec: QSpec,
+    /// Conductance decay per step (Qn.q raw), e.g. 0.25.
+    pub g_decay: i32,
+    /// Reversal potential (raw). 0 mV for excitatory AMPA-like, very
+    /// negative for inhibitory GABA-like.
+    pub e_rev: i32,
+}
+
+impl CobaSynapse {
+    pub fn new(qspec: QSpec, g_decay: f64, e_rev: f64) -> CobaSynapse {
+        CobaSynapse {
+            g: 0,
+            qspec,
+            g_decay: qspec.from_float(g_decay),
+            e_rev: qspec.from_float(e_rev),
+        }
+    }
+
+    /// One step: `weighted_spikes` is ActGen's weighted spike sum (the same
+    /// front end as CUBA — modularity point), `vmem` the neuron's membrane.
+    /// Returns the synaptic current to feed VmemDyn.
+    pub fn step(&mut self, weighted_spikes: i32, vmem: i32) -> i32 {
+        let qs = self.qspec;
+        // g decays, then integrates the arriving spikes.
+        self.g = qs.add(qs.sub(self.g, qs.mul(self.g_decay, self.g)), weighted_spikes);
+        qs.mul(self.g, qs.sub(self.e_rev, vmem))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{QSpec, Q5_3, Q9_7};
+
+    fn q14() -> QSpec {
+        QSpec::new(14, 10).unwrap()
+    }
+
+    #[test]
+    fn izh_requires_headroom() {
+        assert!(IzhikevichNeuron::new(Q5_3, IzhPreset::RegularSpiking).is_err());
+        assert!(IzhikevichNeuron::new(Q9_7, IzhPreset::RegularSpiking).is_err());
+        assert!(IzhikevichNeuron::new(q14(), IzhPreset::RegularSpiking).is_ok());
+    }
+
+    #[test]
+    fn izh_rests_without_input() {
+        let mut n = IzhikevichNeuron::new(q14(), IzhPreset::RegularSpiking).unwrap();
+        let (spikes, trace) = n.run_constant(0.0, 400);
+        assert_eq!(spikes, 0, "no drive, no spikes");
+        // v stays near the fixed point (between -80 and -50 mV).
+        assert!(trace.iter().all(|&v| (-80.0..=-50.0).contains(&v)), "{:?}", &trace[..8]);
+    }
+
+    #[test]
+    fn izh_spikes_under_drive_and_resets_to_c() {
+        let mut n = IzhikevichNeuron::new(q14(), IzhPreset::RegularSpiking).unwrap();
+        let (spikes, trace) = n.run_constant(10.0, 800);
+        assert!(spikes >= 3, "regular spiking expected, got {spikes}");
+        // After a spike v jumps to c = -65.
+        let c = -65.0;
+        assert!(trace.iter().any(|&v| (v - c).abs() < 1.0));
+    }
+
+    #[test]
+    fn fast_spiking_outpaces_regular() {
+        let mut rs = IzhikevichNeuron::new(q14(), IzhPreset::RegularSpiking).unwrap();
+        let mut fs = IzhikevichNeuron::new(q14(), IzhPreset::FastSpiking).unwrap();
+        let (s_rs, _) = rs.run_constant(10.0, 800);
+        let (s_fs, _) = fs.run_constant(10.0, 800);
+        assert!(
+            s_fs > s_rs,
+            "fast-spiking ({s_fs}) must fire more than regular ({s_rs}) — the preset's defining property"
+        );
+    }
+
+    #[test]
+    fn coba_excitatory_drives_toward_reversal() {
+        let qs = Q9_7;
+        let mut syn = CobaSynapse::new(qs, 0.25, 0.0); // E_rev = 0 (excitatory)
+        let w_spk = qs.from_float(0.5);
+        // Below reversal: positive (depolarising) current.
+        let i1 = syn.step(w_spk, qs.from_float(-65.0));
+        assert!(i1 > 0, "below E_rev must depolarise");
+        // At reversal: current vanishes (shunting) even with conductance up.
+        let mut syn2 = CobaSynapse::new(qs, 0.25, 0.0);
+        syn2.step(w_spk, 0);
+        let i2 = syn2.step(w_spk, 0);
+        assert_eq!(i2, 0, "at E_rev the driving force is zero");
+    }
+
+    #[test]
+    fn coba_inhibitory_hyperpolarises() {
+        let qs = Q9_7;
+        let mut syn = CobaSynapse::new(qs, 0.25, -80.0); // GABA-like
+        let i = syn.step(qs.from_float(0.5), qs.from_float(-65.0));
+        assert!(i < 0, "inhibitory reversal below vmem must hyperpolarise");
+    }
+
+    #[test]
+    fn coba_conductance_decays() {
+        let qs = Q9_7;
+        let mut syn = CobaSynapse::new(qs, 0.5, 0.0);
+        syn.step(qs.from_float(1.0), 0);
+        let g1 = syn.g;
+        syn.step(0, 0);
+        assert!(syn.g < g1, "g must decay without input spikes");
+        for _ in 0..100 {
+            syn.step(0, 0);
+        }
+        // Truncating fixed-point decay floors at one LSB (mul(0.5, 1) == 0
+        // in the Fig.-6 datapath) — the hardware behaviour, not a bug.
+        assert!(syn.g <= 1, "g must decay to the truncation floor, got {}", syn.g);
+    }
+}

@@ -1,0 +1,218 @@
+//! One hardware layer — N LIF neurons + their distributed synaptic memory +
+//! the ActGen address generator (paper Fig. 1b / Fig. 2 ActGen box).
+//!
+//! Per spk_clk timestep the address generator walks the M pre-synaptic rows
+//! (M mem_clk cycles). For each row with an input spike, every neuron j adds
+//! w[i][j] into its act register — a *wrapping* Qn.q add, exactly the
+//! hardware accumulator. Rows without a spike are clock-gated: the adds are
+//! skipped and only the gating ledger is charged (§VI-E "we gate the clock
+//! in the design when there is no input spike").
+
+use crate::config::registers::RegisterFile;
+use crate::config::{LayerConfig, MemKind};
+use crate::fixed::QSpec;
+
+use super::clock::ActivityStats;
+use super::memory::SynapticMemory;
+use super::neuron::LifNeuron;
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    mem: SynapticMemory,
+    neurons: Vec<LifNeuron>,
+    qspec: QSpec,
+    /// Scratch activation registers (one act_reg per neuron, Fig. 2).
+    act: Vec<i32>,
+}
+
+impl Layer {
+    pub fn new(cfg: &LayerConfig, qspec: QSpec, mem_kind: MemKind) -> Layer {
+        Layer {
+            mem: SynapticMemory::new(cfg.fan_in, cfg.neurons, cfg.topology, qspec, mem_kind),
+            neurons: vec![LifNeuron::new(); cfg.neurons],
+            qspec,
+            act: vec![0; cfg.neurons],
+        }
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.mem.m()
+    }
+
+    pub fn neurons(&self) -> usize {
+        self.mem.n()
+    }
+
+    pub fn memory(&self) -> &SynapticMemory {
+        &self.mem
+    }
+
+    pub fn memory_mut(&mut self) -> &mut SynapticMemory {
+        &mut self.mem
+    }
+
+    pub fn neuron_state(&self, j: usize) -> LifNeuron {
+        self.neurons[j]
+    }
+
+    pub fn vmem(&self) -> Vec<i32> {
+        self.neurons.iter().map(|n| n.vmem).collect()
+    }
+
+    pub fn reset(&mut self) {
+        for n in &mut self.neurons {
+            n.reset();
+        }
+    }
+
+    /// One spk_clk timestep. `spikes_in` has M entries (0/1);
+    /// `spikes_out` is filled with N entries. Returns activity stats.
+    pub fn step(&mut self, spikes_in: &[u8], spikes_out: &mut Vec<u8>) -> ActivityStats {
+        self.step_with(spikes_in, spikes_out, None)
+    }
+
+    /// As [`step`], with explicit registers (per-core register file is
+    /// borrowed by the core; `None` is only used in unit tests via the
+    /// default register values).
+    pub fn step_regs(
+        &mut self,
+        spikes_in: &[u8],
+        spikes_out: &mut Vec<u8>,
+        regs: &RegisterFile,
+    ) -> ActivityStats {
+        self.step_with(spikes_in, spikes_out, Some(regs))
+    }
+
+    fn step_with(
+        &mut self,
+        spikes_in: &[u8],
+        spikes_out: &mut Vec<u8>,
+        regs: Option<&RegisterFile>,
+    ) -> ActivityStats {
+        assert_eq!(spikes_in.len(), self.mem.m(), "fan-in mismatch");
+        let default_regs;
+        let regs = match regs {
+            Some(r) => r,
+            None => {
+                default_regs = RegisterFile::new(self.qspec);
+                &default_regs
+            }
+        };
+
+        let m = self.mem.m();
+        let n = self.mem.n();
+        let mut stats = ActivityStats { spk_steps: 1, mem_cycles: m as u64, ..Default::default() };
+
+        // --- ActGen: M mem_clk cycles over the weight rows.
+        //
+        // Hot path (see EXPERIMENTS.md §Perf): the hardware wraps the act
+        // register after every add, but addition mod 2^W is associative, so
+        // accumulating with plain i32 `wrapping_add` and wrapping once per
+        // timestep is bit-identical — for W < 32 the partial sums provably
+        // fit in i32 (M ≤ 2^15 rows × |w| < 2^15), and for W = 32 the i32
+        // wraparound *is* the mod-2^32 semantics.
+        self.act.fill(0);
+        for (i, &spk) in spikes_in.iter().enumerate() {
+            if spk == 0 {
+                // Clock-gated row: no accumulates happen.
+                stats.gated_ops += n as u64;
+                continue;
+            }
+            stats.synaptic_ops += n as u64;
+            let row = self.mem.row(i);
+            for (a, &w) in self.act.iter_mut().zip(row) {
+                *a = a.wrapping_add(w);
+            }
+        }
+        if self.qspec.width() < 32 {
+            for a in &mut self.act {
+                *a = self.qspec.wrap(*a as i64);
+            }
+        }
+
+        // --- Neuron updates (VmemDyn/SpkGen/VmemSel), parallel across j.
+        let snap = super::neuron::RegSnapshot::from(regs);
+        spikes_out.clear();
+        spikes_out.reserve(n);
+        for j in 0..n {
+            let out = self.neurons[j].step_snap(self.act[j], &snap, self.qspec);
+            stats.neuron_updates += 1;
+            if out.vmem_toggled {
+                stats.vmem_toggles += 1;
+            }
+            if out.spike {
+                stats.spikes += 1;
+            }
+            spikes_out.push(out.spike as u8);
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Topology;
+    use crate::fixed::Q5_3;
+
+    fn layer(m: usize, n: usize) -> Layer {
+        let cfg = LayerConfig { fan_in: m, neurons: n, topology: Topology::AllToAll };
+        Layer::new(&cfg, Q5_3, MemKind::Bram)
+    }
+
+    #[test]
+    fn weighted_sum_drives_spike() {
+        let mut l = layer(3, 1);
+        // Weights 3+7 = 10 = vth 1.25 in raw ⇒ spike (vth default = 8 raw).
+        l.memory_mut().write(0, 0, 3).unwrap();
+        l.memory_mut().write(2, 0, 7).unwrap();
+        let mut out = Vec::new();
+        let stats = l.step(&[1, 0, 1], &mut out);
+        assert_eq!(out, vec![1]);
+        assert_eq!(stats.spikes, 1);
+        assert_eq!(stats.mem_cycles, 3);
+    }
+
+    #[test]
+    fn clock_gating_ledger() {
+        let mut l = layer(4, 8);
+        let mut out = Vec::new();
+        let stats = l.step(&[1, 0, 0, 1], &mut out);
+        assert_eq!(stats.synaptic_ops, 16); // 2 active rows × 8 neurons
+        assert_eq!(stats.gated_ops, 16); // 2 gated rows × 8 neurons
+        assert_eq!(stats.gating_ratio(), 0.5);
+    }
+
+    #[test]
+    fn activation_wraps_like_hardware() {
+        let mut l = layer(4, 1);
+        for i in 0..4 {
+            l.memory_mut().write(i, 0, 100).unwrap();
+        }
+        let mut out = Vec::new();
+        l.step(&[1, 1, 1, 1], &mut out);
+        // 400 wraps to -112 in 8 bits; growth 1.0 ⇒ vmem = wrap(400) raw…
+        // (vmem must equal the wrapped activation, not saturate)
+        assert_eq!(l.vmem()[0], Q5_3.wrap(400));
+        assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut l = layer(2, 2);
+        l.memory_mut().write(0, 0, 4).unwrap();
+        let mut out = Vec::new();
+        l.step(&[1, 1], &mut out);
+        assert_ne!(l.vmem(), vec![0, 0]);
+        l.reset();
+        assert_eq!(l.vmem(), vec![0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "fan-in mismatch")]
+    fn input_arity_checked() {
+        let mut l = layer(3, 1);
+        let mut out = Vec::new();
+        l.step(&[1, 0], &mut out);
+    }
+}

@@ -1,0 +1,186 @@
+//! Distributed synaptic memory — paper §II/§III-A and Fig. 1b.
+//!
+//! Each layer owns an M×N weight matrix holding all pre-synaptic weights of
+//! its neurons ("all pre-synaptic weights are stored in their respective
+//! layer"). The access granularity is a single (pre, post) weight, which is
+//! what makes every weight individually programmable through wt_in.
+//!
+//! The implementation choice (BRAM / distributed LUT / register, Fig. 13)
+//! does not change function — only the resource/timing/power models in
+//! [`crate::hwmodel`] — but is carried here so a programmed core knows what
+//! it is "made of".
+
+use crate::config::{MemKind, Topology};
+use crate::fixed::QSpec;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum MemError {
+    #[error("weight address ({pre}, {post}) out of range for {m}x{n} memory")]
+    BadAddress { pre: usize, post: usize, m: usize, n: usize },
+    #[error("weight {value} does not fit {q}")]
+    OutOfRange { value: i32, q: String },
+    #[error("connection ({pre}, {post}) is pruned by topology {topo} (α=0: no storage exists)")]
+    Pruned { pre: usize, post: usize, topo: String },
+    #[error("expected {expect} weights for this memory, got {got}")]
+    BulkSize { expect: usize, got: usize },
+}
+
+/// One layer's synaptic weight memory (row-major [M × N], i32 Qn.q raw).
+#[derive(Debug, Clone)]
+pub struct SynapticMemory {
+    m: usize,
+    n: usize,
+    qspec: QSpec,
+    kind: MemKind,
+    topology: Topology,
+    mask: Vec<u8>,
+    weights: Vec<i32>,
+    /// Accepted wt_in writes (interface telemetry).
+    writes: u64,
+}
+
+impl SynapticMemory {
+    pub fn new(m: usize, n: usize, topology: Topology, qspec: QSpec, kind: MemKind) -> Self {
+        let mask = topology.mask(m, n).expect("topology validated by ModelConfig");
+        SynapticMemory { m, n, qspec, kind, topology, mask, weights: vec![0; m * n], writes: 0 }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn kind(&self) -> MemKind {
+        self.kind
+    }
+
+    pub fn qspec(&self) -> QSpec {
+        self.qspec
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// α=1 synapse count (physical storage words).
+    pub fn synapses(&self) -> usize {
+        self.mask.iter().map(|&x| x as usize).sum()
+    }
+
+    /// wt_in transaction: program one synaptic weight. Rejects out-of-range
+    /// addresses, values that don't fit the Qn.q word, and writes to pruned
+    /// (α=0) connections — which have no physical storage in the hardware.
+    pub fn write(&mut self, pre: usize, post: usize, value: i32) -> Result<(), MemError> {
+        if pre >= self.m || post >= self.n {
+            return Err(MemError::BadAddress { pre, post, m: self.m, n: self.n });
+        }
+        if !self.qspec.in_range(value) {
+            return Err(MemError::OutOfRange { value, q: self.qspec.name() });
+        }
+        if self.mask[pre * self.n + post] == 0 {
+            return Err(MemError::Pruned { pre, post, topo: self.topology.label() });
+        }
+        self.weights[pre * self.n + post] = value;
+        self.writes += 1;
+        Ok(())
+    }
+
+    #[inline]
+    pub fn read(&self, pre: usize, post: usize) -> Result<i32, MemError> {
+        if pre >= self.m || post >= self.n {
+            return Err(MemError::BadAddress { pre, post, m: self.m, n: self.n });
+        }
+        Ok(self.weights[pre * self.n + post])
+    }
+
+    /// One row (all post-synaptic weights of pre-neuron `pre`) — what the
+    /// address generator reads in one mem_clk cycle group.
+    #[inline]
+    pub fn row(&self, pre: usize) -> &[i32] {
+        &self.weights[pre * self.n..(pre + 1) * self.n]
+    }
+
+    /// Bulk-load a full dense [M × N] matrix (the artifact weight files).
+    /// Entries at pruned positions must be zero; others must fit Qn.q.
+    pub fn load_dense(&mut self, weights: &[i32]) -> Result<(), MemError> {
+        if weights.len() != self.m * self.n {
+            return Err(MemError::BulkSize { expect: self.m * self.n, got: weights.len() });
+        }
+        for (idx, &w) in weights.iter().enumerate() {
+            if self.mask[idx] == 0 {
+                if w != 0 {
+                    return Err(MemError::Pruned {
+                        pre: idx / self.n,
+                        post: idx % self.n,
+                        topo: self.topology.label(),
+                    });
+                }
+            } else if !self.qspec.in_range(w) {
+                return Err(MemError::OutOfRange { value: w, q: self.qspec.name() });
+            }
+        }
+        self.weights.copy_from_slice(weights);
+        self.writes += self.synapses() as u64;
+        Ok(())
+    }
+
+    pub fn dense(&self) -> &[i32] {
+        &self.weights
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q5_3;
+
+    fn mem() -> SynapticMemory {
+        SynapticMemory::new(4, 3, Topology::AllToAll, Q5_3, MemKind::Bram)
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut m = mem();
+        m.write(2, 1, -17).unwrap();
+        assert_eq!(m.read(2, 1).unwrap(), -17);
+        assert_eq!(m.read(0, 0).unwrap(), 0);
+        assert_eq!(m.writes(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_address_value() {
+        let mut m = mem();
+        assert!(matches!(m.write(4, 0, 1), Err(MemError::BadAddress { .. })));
+        assert!(matches!(m.write(0, 3, 1), Err(MemError::BadAddress { .. })));
+        assert!(matches!(m.write(0, 0, 400), Err(MemError::OutOfRange { .. })));
+        assert!(matches!(m.read(9, 9), Err(MemError::BadAddress { .. })));
+    }
+
+    #[test]
+    fn pruned_connections_have_no_storage() {
+        let mut m = SynapticMemory::new(3, 3, Topology::OneToOne, Q5_3, MemKind::Bram);
+        assert!(m.write(0, 0, 5).is_ok());
+        assert!(matches!(m.write(0, 1, 5), Err(MemError::Pruned { .. })));
+        assert_eq!(m.synapses(), 3);
+    }
+
+    #[test]
+    fn load_dense_validates() {
+        let mut m = SynapticMemory::new(2, 2, Topology::OneToOne, Q5_3, MemKind::Bram);
+        assert!(m.load_dense(&[1, 0, 0, 2]).is_ok());
+        assert!(matches!(m.load_dense(&[1, 9, 0, 2]), Err(MemError::Pruned { .. })));
+        assert!(matches!(m.load_dense(&[1, 0, 0]), Err(MemError::BulkSize { .. })));
+        assert!(matches!(m.load_dense(&[1, 0, 0, 4000]), Err(MemError::OutOfRange { .. })));
+    }
+
+    #[test]
+    fn row_view() {
+        let mut m = mem();
+        m.write(1, 0, 3).unwrap();
+        m.write(1, 2, -4).unwrap();
+        assert_eq!(m.row(1), &[3, 0, -4]);
+    }
+}

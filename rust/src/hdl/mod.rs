@@ -1,0 +1,37 @@
+//! Cycle-accurate simulator of the QUANTISENC digital core — the substrate
+//! substitution for the paper's Verilog RTL + Vivado simulation flow
+//! (DESIGN.md §1). Semantics are specified by the paper's Eqs. 1–10 and
+//! Figs. 1/2/6/8 and are **bit-exact** with the Python oracle
+//! (`kernels/ref.py`) and the Pallas kernel — cross-checked via the
+//! `golden_lif_*.json` vectors and via PJRT-executed HLO in the integration
+//! tests.
+//!
+//! Structure mirrors the hardware hierarchy (bottom-up, §II):
+//!
+//! * [`neuron`] — one LIF datapath: ActGen accumulate + VmemDyn + SpkGen +
+//!   VmemSel (Fig. 2), plus the refractory counter.
+//! * [`memory`] — a layer's distributed synaptic memory (M×N weight matrix)
+//!   with per-weight addressing (wt_in granularity) and the BRAM /
+//!   distributed-LUT / register implementation choice.
+//! * [`layer`] — N neurons + their synaptic memory + the address generator
+//!   (M `mem_clk` cycles per timestep), with clock-gating accounting.
+//! * [`core`] — K layers + the decoder's control registers; one spk_clk
+//!   step runs the layers in dataflow order.
+//! * [`aer`] — address-event-representation encoding of spike I/O.
+//! * [`clock`] — clock-domain bookkeeping and activity statistics that feed
+//!   the power model.
+
+pub mod aer;
+pub mod verilog;
+pub mod clock;
+pub mod extensions;
+pub mod core;
+pub mod layer;
+pub mod memory;
+pub mod neuron;
+
+pub use self::core::Core;
+pub use clock::ActivityStats;
+pub use layer::Layer;
+pub use memory::SynapticMemory;
+pub use neuron::LifNeuron;

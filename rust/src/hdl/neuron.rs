@@ -1,0 +1,260 @@
+//! The LIF neuron datapath — paper Fig. 2 (VmemDyn, SpkGen, VmemSel blocks;
+//! ActGen lives in [`super::layer`] because the accumulator walks the
+//! layer's synaptic memory).
+//!
+//! One call to [`LifNeuron::step`] is one `spk_clk` edge. The update order
+//! is the documented cross-language semantics (DESIGN.md §2):
+//!
+//! 1. refractory hold (counter > 0 ⇒ vmem held, no spike, counter--),
+//! 2. VmemDyn: v' = v − decay·v + growth·act (wrapping Qn.q, Eq. 3),
+//! 3. SpkGen: spike ⇔ v' ≥ Vth,
+//! 4. VmemSel: reset per Eq. 7 and refractory arm on spike.
+
+use crate::config::registers::{RegisterFile, ResetMode};
+use crate::fixed::QSpec;
+
+/// Decoded control registers, snapshotted once per timestep — the register
+/// file's values don't change inside a step, so the per-neuron hot loop
+/// reads this flat struct instead of going through the register file's
+/// accessors (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy)]
+pub struct RegSnapshot {
+    pub decay: i32,
+    pub growth: i32,
+    pub vth: i32,
+    pub vreset: i32,
+    pub mode: ResetMode,
+    pub refractory: i32,
+}
+
+impl From<&RegisterFile> for RegSnapshot {
+    fn from(r: &RegisterFile) -> RegSnapshot {
+        RegSnapshot {
+            decay: r.decay(),
+            growth: r.growth(),
+            vth: r.vth(),
+            vreset: r.vreset(),
+            mode: r.reset_mode(),
+            refractory: r.refractory(),
+        }
+    }
+}
+
+/// Architectural state of one neuron (the two registers of Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LifNeuron {
+    pub vmem: i32,
+    pub refcnt: i32,
+}
+
+impl Default for LifNeuron {
+    fn default() -> Self {
+        LifNeuron { vmem: 0, refcnt: 0 }
+    }
+}
+
+/// Outcome of one spk_clk step (spike bit + activity for the power model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepOut {
+    pub spike: bool,
+    /// Whether the vmem register toggled this cycle (clock-gating model:
+    /// an unchanged register burns no dynamic energy).
+    pub vmem_toggled: bool,
+}
+
+impl LifNeuron {
+    pub fn new() -> LifNeuron {
+        Self::default()
+    }
+
+    /// Reset to resting state (the pipeline's inter-stream settle, Fig. 8).
+    pub fn reset(&mut self) {
+        self.vmem = 0;
+        self.refcnt = 0;
+    }
+
+    /// One spk_clk edge given this neuron's activation `act` (already
+    /// accumulated by the layer's ActGen).
+    #[inline]
+    pub fn step(&mut self, act: i32, regs: &RegisterFile, qspec: QSpec) -> StepOut {
+        self.step_snap(act, &RegSnapshot::from(regs), qspec)
+    }
+
+    /// Hot-path variant taking a pre-decoded register snapshot.
+    #[inline]
+    pub fn step_snap(&mut self, act: i32, regs: &RegSnapshot, qspec: QSpec) -> StepOut {
+        let old_vmem = self.vmem;
+
+        if self.refcnt > 0 {
+            // Refractory: hold vmem, suppress spiking, count down (§III-A.2).
+            self.refcnt -= 1;
+            return StepOut { spike: false, vmem_toggled: false };
+        }
+
+        // VmemDyn (Eq. 3): v - decay*v + growth*act, all wrapping Qn.q.
+        let dv = qspec.mul(regs.decay, self.vmem);
+        let gi = qspec.mul(regs.growth, act);
+        let v_new = qspec.add(qspec.sub(self.vmem, dv), gi);
+
+        // SpkGen: threshold comparator.
+        let spike = v_new >= regs.vth;
+
+        // VmemSel (Eq. 7): reset mux + refractory arm.
+        self.vmem = if spike {
+            self.refcnt = regs.refractory;
+            match regs.mode {
+                ResetMode::Default => qspec.sub(v_new, qspec.mul(regs.decay, v_new)),
+                ResetMode::ToZero => 0,
+                ResetMode::BySubtraction => qspec.sub(v_new, regs.vth),
+                ResetMode::ToConstant => regs.vreset,
+            }
+        } else {
+            v_new
+        };
+
+        StepOut { spike, vmem_toggled: self.vmem != old_vmem }
+    }
+}
+
+/// Single-neuron dynamics probe — drives one neuron with a constant input
+/// current for `steps` spk_clk cycles and records the membrane trace.
+/// This regenerates the paper's Fig. 3 (R/C settings) and Fig. 4 (reset
+/// mechanisms); also used by Table X's per-setting spike counts.
+pub struct DynamicsProbe {
+    pub qspec: QSpec,
+    pub regs: RegisterFile,
+}
+
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Membrane potential per step, in value units (Qn.q → float).
+    pub vmem: Vec<f64>,
+    pub spikes: Vec<bool>,
+}
+
+impl Trace {
+    pub fn spike_count(&self) -> usize {
+        self.spikes.iter().filter(|&&s| s).count()
+    }
+}
+
+impl DynamicsProbe {
+    pub fn new(qspec: QSpec, regs: RegisterFile) -> DynamicsProbe {
+        DynamicsProbe { qspec, regs }
+    }
+
+    /// Apply a constant current `i_in` (value units) for `steps` cycles —
+    /// the paper's "step input of 40 ms" with Δt = 1 ms per cycle.
+    pub fn step_input(&self, i_in: f64, steps: usize) -> Trace {
+        let act = self.qspec.from_float(i_in);
+        let mut n = LifNeuron::new();
+        let mut vmem = Vec::with_capacity(steps);
+        let mut spikes = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let out = n.step(act, &self.regs, self.qspec);
+            vmem.push(self.qspec.to_float(n.vmem));
+            spikes.push(out.spike);
+        }
+        Trace { vmem, spikes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::registers::{RegisterFile, ResetMode};
+    use crate::fixed::{Q5_3, Q9_7};
+
+    fn regs(qs: crate::fixed::QSpec) -> RegisterFile {
+        RegisterFile::new(qs)
+    }
+
+    #[test]
+    fn silent_neuron_stays_at_rest() {
+        let mut n = LifNeuron::new();
+        let r = regs(Q5_3);
+        for _ in 0..10 {
+            let out = n.step(0, &r, Q5_3);
+            assert!(!out.spike);
+            assert_eq!(n.vmem, 0);
+        }
+    }
+
+    #[test]
+    fn decay_pulls_vmem_down() {
+        let mut n = LifNeuron { vmem: 80, refcnt: 0 };
+        let mut r = regs(Q5_3);
+        r.set_decay(0.25).unwrap();
+        r.set_vth(15.0).unwrap();
+        n.step(0, &r, Q5_3);
+        assert_eq!(n.vmem, 60); // 80 - 0.25*80
+    }
+
+    #[test]
+    fn spike_and_reset_modes() {
+        // act = 2.0 with vth = 1.0 fires; v_new = 16 raw (Q5.3).
+        for (mode, expect) in [
+            (ResetMode::ToZero, 0),
+            (ResetMode::BySubtraction, 8),
+            (ResetMode::ToConstant, Q5_3.from_float(0.5)),
+            (ResetMode::Default, 16 - Q5_3.mul(Q5_3.from_float(0.2), 16)),
+        ] {
+            let mut n = LifNeuron::new();
+            let mut r = regs(Q5_3);
+            r.set_reset_mode(mode).unwrap();
+            r.set_vreset(0.5).unwrap();
+            let out = n.step(Q5_3.from_float(2.0), &r, Q5_3);
+            assert!(out.spike);
+            assert_eq!(n.vmem, expect, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn refractory_blocks_and_holds() {
+        let mut n = LifNeuron::new();
+        let mut r = regs(Q5_3);
+        r.set_reset_mode(ResetMode::ToZero).unwrap();
+        r.set_refractory(3).unwrap();
+        let drive = Q5_3.from_float(2.0);
+        let pattern: Vec<bool> = (0..8).map(|_| n.step(drive, &r, Q5_3).spike).collect();
+        assert_eq!(pattern, vec![true, false, false, false, true, false, false, false]);
+    }
+
+    #[test]
+    fn fig4_reset_ordering() {
+        // Default ≥ subtraction ≥ zero spike counts over a step input.
+        let mut counts = Vec::new();
+        for mode in [ResetMode::Default, ResetMode::BySubtraction, ResetMode::ToZero] {
+            let mut r = regs(Q9_7);
+            r.set_vth(10.0).unwrap();
+            r.set_reset_mode(mode).unwrap();
+            let probe = DynamicsProbe::new(Q9_7, r);
+            counts.push(probe.step_input(20.0, 40).spike_count());
+        }
+        assert!(counts[0] >= counts[1] && counts[1] >= counts[2]);
+        assert!(counts[2] > 0);
+    }
+
+    #[test]
+    fn fig3_rc_ordering() {
+        // growth 1.0 / 0.2 / 0.1 / 0.02 (R = 500/100/50/10 MΩ at τ = 5 ms).
+        let mut counts = Vec::new();
+        for growth in [1.0, 0.2, 0.1, 0.02] {
+            let mut r = regs(Q9_7);
+            r.set_vth(10.0).unwrap();
+            r.set_growth(growth).unwrap();
+            let probe = DynamicsProbe::new(Q9_7, r);
+            counts.push(probe.step_input(20.0, 40).spike_count());
+        }
+        assert!(counts[0] > counts[1] && counts[1] > counts[2] && counts[2] >= counts[3]);
+        assert_eq!(*counts.last().unwrap(), 0, "R=10MΩ must never cross Vth");
+    }
+
+    #[test]
+    fn toggle_flag_tracks_vmem_change() {
+        let mut n = LifNeuron::new();
+        let r = regs(Q5_3);
+        assert!(!n.step(0, &r, Q5_3).vmem_toggled);
+        assert!(n.step(Q5_3.from_float(0.5), &r, Q5_3).vmem_toggled);
+    }
+}

@@ -1,0 +1,84 @@
+//! FPGA evaluation boards — paper Table III.
+
+/// Resource envelope of one FPGA platform.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Board {
+    pub name: &'static str,
+    pub technology: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub brams: f64,
+    pub dsps: u64,
+}
+
+/// AMD Virtex UltraScale — the paper's primary board.
+pub const VIRTEX_ULTRASCALE: Board = Board {
+    name: "Virtex UltraScale",
+    technology: "16nm FinFET",
+    luts: 537_600,
+    ffs: 1_075_200,
+    brams: 1728.0,
+    dsps: 768,
+};
+
+pub const VIRTEX_7: Board = Board {
+    name: "Virtex 7",
+    technology: "28nm",
+    luts: 303_600,
+    ffs: 607_200,
+    brams: 1030.0,
+    dsps: 2800,
+};
+
+pub const ZYNQ_ULTRASCALE: Board = Board {
+    name: "Zynq UltraScale",
+    technology: "16nm FinFET",
+    luts: 230_400,
+    ffs: 460_800,
+    brams: 312.0,
+    dsps: 1728,
+};
+
+impl Board {
+    pub fn all() -> [Board; 3] {
+        [VIRTEX_ULTRASCALE, VIRTEX_7, ZYNQ_ULTRASCALE]
+    }
+
+    pub fn by_name(name: &str) -> Option<Board> {
+        Board::all().into_iter().find(|b| b.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Whether a design's resource vector fits this board.
+    pub fn fits(&self, r: &super::resources::Resources) -> bool {
+        r.luts <= self.luts as f64
+            && r.ffs <= self.ffs as f64
+            && r.brams <= self.brams
+            && r.dsps <= self.dsps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_values() {
+        assert_eq!(VIRTEX_ULTRASCALE.luts, 537_600);
+        assert_eq!(VIRTEX_7.brams, 1030.0);
+        assert_eq!(ZYNQ_ULTRASCALE.ffs, 460_800);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Board::by_name("virtex 7").unwrap().luts, 303_600);
+        assert!(Board::by_name("spartan").is_none());
+    }
+
+    #[test]
+    fn fits_checks_all_axes() {
+        use super::super::resources::Resources;
+        let r = Resources { luts: 1e9, ..Default::default() };
+        assert!(!VIRTEX_ULTRASCALE.fits(&r));
+        assert!(VIRTEX_ULTRASCALE.fits(&Resources::default()));
+    }
+}

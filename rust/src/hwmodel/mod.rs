@@ -1,0 +1,27 @@
+//! Hardware models — the substitution for Vivado synthesis/implementation
+//! and Synopsys DC (DESIGN.md §1).
+//!
+//! The paper itself motivates this style of model (§VI-D): resource
+//! utilisation scales predictably with the configuration, so designers can
+//! estimate a design point *without* synthesis during design-space
+//! exploration. We implement exactly that predictive model, calibrated
+//! against every measurement published in the paper (Tables IV–XII,
+//! Figs. 13–14), and report per-cell relative error in EXPERIMENTS.md.
+//!
+//! * [`resources`] — LUT/FF/BRAM/DSP utilisation for neurons, connection
+//!   blocks, and full cores (Tables IV, V, VI, VII).
+//! * [`power`] — activity-driven dynamic power with clock gating
+//!   (Tables IV–VI, X, XI; Figs. 13/14). Driven by [`crate::hdl`]'s
+//!   measured [`crate::hdl::ActivityStats`], not by assumed rates.
+//! * [`timing`] — setup-slack vs spike frequency per memory type (Fig. 13).
+//! * [`boards`] — the three FPGA evaluation boards of Table III.
+//! * [`asic`] — early ASIC synthesis model (Table XII).
+
+pub mod asic;
+pub mod boards;
+pub mod power;
+pub mod resources;
+pub mod timing;
+
+pub use boards::Board;
+pub use resources::Resources;

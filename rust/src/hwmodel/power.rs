@@ -1,0 +1,219 @@
+//! Dynamic power model — activity-driven, clock-gated.
+//!
+//! The paper estimates power from post-implementation toggle rates (§IV).
+//! Our substitute drives the same kind of estimate from the cycle-accurate
+//! simulator's *measured* activity ([`crate::hdl::ActivityStats`]):
+//!
+//! `P_dyn(config, rate, f) = mem·quant·(f/f₀)·(syn/syn₀)·(P_base + P_act·rate/rate₀)`
+//!
+//! Calibration anchors (EXPERIMENTS.md reports per-cell errors):
+//! * Table X power-vs-spikes line: least-squares over the six published
+//!   (spikes/neuron, W) pairs gives `P = 0.253 + 0.0175·spikes` at the
+//!   baseline size and f₀ = 600 kHz ⇒ `P_base = 0.253 W`,
+//!   `P_act = 0.454 W` at the baseline rate (26 spikes / 150 steps).
+//!   The 7-spike point sits ~17 % above the global line (the paper's own
+//!   R/C sweep is not perfectly linear); per-cell errors are in
+//!   EXPERIMENTS.md.
+//! * Table VI rows 3–4: power scales ≈ linearly with synapse count.
+//! * Table VI row 2: Q9.7 = +18.5 % ⇒ quant scale `1 + 0.185·(W−8)/8`.
+//! * Fig. 13 subplot: distributed-LUT memory is 23 % below BRAM and 79 %
+//!   below register memory.
+//! * Fig. 14: performance/W peaks below the peak frequency — modelled by a
+//!   static floor (clock tree + leakage-like) plus a cubic high-frequency
+//!   term: `P_total(f) = α·P_op + β·P_op·(f/f₀) + γ·P_op·(f/f₀)³` with
+//!   α = 0.4, γ = 0.2·√(syn/syn₀), β = 1 − α − γ, which puts the baseline
+//!   architecture's optimum exactly at the paper's 600 kHz.
+
+use crate::config::{MemKind, ModelConfig, Topology};
+use crate::fixed::QSpec;
+use crate::hdl::ActivityStats;
+
+/// Baseline operating point (paper §VI-D).
+pub const F0_HZ: f64 = 600_000.0;
+const SYN0: f64 = 34_048.0;
+/// Paper Table X baseline: 26 spikes/neuron over a 150-step exposure.
+pub const RATE0: f64 = 26.0 / 150.0;
+const P_BASE_W: f64 = 0.253;
+const P_ACT_W: f64 = 0.454;
+/// Eq. 12: fixed-point operations per neuron per cycle.
+pub const N_OPS: f64 = 10.0;
+
+/// Memory-fabric power multiplier (Fig. 13 subplot).
+pub fn mem_scale(mem: MemKind) -> f64 {
+    match mem {
+        MemKind::Bram => 1.0,
+        MemKind::DistributedLut => 0.77,
+        MemKind::Register => 0.77 / 0.21, // LUT is 79% below register
+    }
+}
+
+/// Quantization power multiplier anchored at Q5.3 (Table VI row 2).
+pub fn quant_scale(qspec: QSpec) -> f64 {
+    (1.0 + 0.185 * (qspec.width() as f64 - 8.0) / 8.0).max(0.25)
+}
+
+/// Core dynamic power (W) at spike frequency `f_hz` for a measured
+/// per-neuron-per-step spike rate — the "Dynamic (Peak) Power" columns of
+/// Tables VI, X, XI.
+pub fn core_dynamic_w(config: &ModelConfig, spike_rate: f64, f_hz: f64) -> f64 {
+    let syn = config.total_synapses() as f64;
+    mem_scale(config.mem)
+        * quant_scale(config.qspec)
+        * (f_hz / F0_HZ)
+        * (syn / SYN0)
+        * (P_BASE_W + P_ACT_W * (spike_rate / RATE0))
+}
+
+/// Same, taking the simulator's activity ledger directly.
+pub fn core_dynamic_from_stats(config: &ModelConfig, stats: &ActivityStats, f_hz: f64) -> f64 {
+    core_dynamic_w(config, stats.spike_rate(), f_hz)
+}
+
+/// Total power including the static floor and the high-frequency term —
+/// the denominator of the Fig. 14 performance-per-watt curves.
+pub fn core_total_w(config: &ModelConfig, spike_rate: f64, f_hz: f64) -> f64 {
+    let p_op = core_dynamic_w(config, spike_rate, F0_HZ);
+    let syn = config.total_synapses() as f64;
+    let alpha = 0.4;
+    let gamma = 0.2 * (syn / SYN0).sqrt();
+    let beta = 1.0 - alpha - gamma;
+    let x = f_hz / F0_HZ;
+    p_op * (alpha + beta * x + gamma * x * x * x)
+}
+
+/// Eq. 12: total fixed-point operations per second at frequency `f_hz`.
+pub fn fixed_point_ops(config: &ModelConfig, f_hz: f64) -> f64 {
+    (config.total_synapses() as f64 + N_OPS * config.total_neurons() as f64) * f_hz
+}
+
+/// Performance per watt (GOPS/W) at `f_hz` — one point of Fig. 14.
+pub fn perf_per_watt(config: &ModelConfig, spike_rate: f64, f_hz: f64) -> f64 {
+    fixed_point_ops(config, f_hz) / core_total_w(config, spike_rate, f_hz) / 1e9
+}
+
+/// Sweep Fig. 14 and return (f_peak_hz, peak GOPS/W). The sweep is capped
+/// at the size-dependent timing limit (`timing::peak_frequency_scaled_hz`):
+/// large cores cannot be clocked at the baseline's frequencies, which is
+/// what pushes the paper's DVS/SHD designs to lower peak-perf/W points.
+pub fn peak_perf_per_watt(config: &ModelConfig, spike_rate: f64) -> (f64, f64) {
+    let f_cap = crate::hwmodel::timing::peak_frequency_scaled_hz(
+        config.mem,
+        config.total_synapses(),
+    );
+    let mut best = (0.0, 0.0);
+    let mut f = 10_000.0;
+    while f <= f_cap {
+        let ppw = perf_per_watt(config, spike_rate, f);
+        if ppw > best.1 {
+            best = (f, ppw);
+        }
+        f += 5_000.0;
+    }
+    best
+}
+
+/// Standalone connection-block power (Table V, mW after implementation).
+pub fn connection_block_power_mw(topology: Topology, fan_in: usize) -> f64 {
+    match topology {
+        Topology::OneToOne => 12.0,
+        Topology::Gaussian { radius } => {
+            let taps = ((2 * radius + 1) * (2 * radius + 1)) as f64;
+            16.4 + 0.0625 * taps
+        }
+        Topology::AllToAll => 14.67 + 0.0651 * fan_in as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{Q5_3, Q9_7};
+    use crate::util::stats::rel_err;
+
+    fn baseline() -> ModelConfig {
+        ModelConfig::parse_arch("256x128x10", Q5_3).unwrap()
+    }
+
+    #[test]
+    fn table10_power_line() {
+        // 26 spikes/neuron ⇒ 0.663 W; 7 ⇒ ~0.449 W; 45 ⇒ ~1.087 W.
+        let c = baseline();
+        for (spikes, watts, tol) in [(26.0, 0.663, 0.07), (7.0, 0.449, 0.25), (45.0, 1.087, 0.08)] {
+            let p = core_dynamic_w(&c, spikes / 150.0, F0_HZ);
+            assert!(rel_err(p, watts) < tol, "{spikes} spikes: {p} vs {watts}");
+        }
+    }
+
+    #[test]
+    fn table6_power_scaling() {
+        let c1 = baseline();
+        let c3 = ModelConfig::parse_arch("256x256x10", Q5_3).unwrap();
+        let p1 = core_dynamic_w(&c1, RATE0, F0_HZ);
+        let p3 = core_dynamic_w(&c3, RATE0, F0_HZ);
+        assert!(rel_err(p3 / p1, 2.0) < 0.01, "2x synapses ⇒ 2x power");
+        // Q9.7 = +18.5%.
+        let q97 = ModelConfig::parse_arch("256x128x10", Q9_7).unwrap();
+        assert!(rel_err(core_dynamic_w(&q97, RATE0, F0_HZ) / p1, 1.185) < 0.001);
+    }
+
+    #[test]
+    fn power_linear_in_frequency() {
+        let c = baseline();
+        let p6 = core_dynamic_w(&c, RATE0, 600e3);
+        let p3 = core_dynamic_w(&c, RATE0, 300e3);
+        assert!(rel_err(p6 / p3, 2.0) < 1e-9);
+    }
+
+    #[test]
+    fn mem_scales_fig13() {
+        assert_eq!(mem_scale(MemKind::Bram), 1.0);
+        assert!(rel_err(mem_scale(MemKind::DistributedLut), 0.77) < 1e-9);
+        assert!(mem_scale(MemKind::Register) > 3.0);
+    }
+
+    #[test]
+    fn fig14_baseline_peak_at_600khz() {
+        let c = baseline();
+        let (f_peak, ppw) = peak_perf_per_watt(&c, RATE0);
+        assert!((f_peak - 600e3).abs() <= 20e3, "peak at {f_peak}");
+        // Table XI: 36.6 GOPS/W. The paper computes this with Table VI's
+        // 0.623 W; our Table-X-calibrated line gives 0.707 W at the same
+        // point (the paper's own inter-table spread is 0.623 vs 0.663),
+        // hence ~12% relative error here — recorded in EXPERIMENTS.md.
+        assert!(rel_err(ppw, 36.6) < 0.15, "peak {ppw} GOPS/W");
+    }
+
+    #[test]
+    fn fig14_bigger_designs_peak_lower() {
+        let c1 = baseline();
+        let c4 = ModelConfig::parse_arch("256x256x256x10", Q5_3).unwrap();
+        let (f1, _) = peak_perf_per_watt(&c1, RATE0);
+        let (f4, _) = peak_perf_per_watt(&c4, RATE0);
+        assert!(f4 < f1, "larger design should peak at lower frequency");
+    }
+
+    #[test]
+    fn fixed_ops_eq12() {
+        let c = baseline();
+        assert_eq!(fixed_point_ops(&c, 600e3), (34048.0 + 10.0 * 394.0) * 600e3);
+    }
+
+    #[test]
+    fn table5_power_rows() {
+        assert_eq!(connection_block_power_mw(Topology::OneToOne, 1), 12.0);
+        let c3 = connection_block_power_mw(Topology::Gaussian { radius: 1 }, 20);
+        let fc128 = connection_block_power_mw(Topology::AllToAll, 128);
+        let fc512 = connection_block_power_mw(Topology::AllToAll, 512);
+        assert!(rel_err(c3, 17.0) < 0.02);
+        assert!(rel_err(fc128, 23.0) < 0.01);
+        assert!(rel_err(fc512, 48.0) < 0.01);
+    }
+
+    #[test]
+    fn stats_driven_power() {
+        let c = baseline();
+        let stats = ActivityStats { neuron_updates: 1000, spikes: 173, ..Default::default() };
+        let direct = core_dynamic_w(&c, 0.173, F0_HZ);
+        assert!(rel_err(core_dynamic_from_stats(&c, &stats, F0_HZ), direct) < 1e-9);
+    }
+}

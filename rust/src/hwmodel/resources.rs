@@ -1,0 +1,288 @@
+//! FPGA resource model — LUT/FF/BRAM/DSP utilisation.
+//!
+//! Calibration (see DESIGN.md §6 and EXPERIMENTS.md for per-cell errors):
+//!
+//! * **Single neuron vs quantization** (Table IV): the five published
+//!   (W → LUT/FF/DSP/power) points are anchors; unevaluated widths
+//!   interpolate piecewise-linearly. FFs are well fit by `4W + 3`; the
+//!   anchor table keeps the exact published values.
+//! * **Standalone connection blocks** (Table V): affine fits in the fan-in
+//!   (FC) or tap count (conv): `LUT = 286 + 1.047·M`, `FF = 60 + 3·M`
+//!   (FC rows), `LUT = 275 + 1·taps`, `FF = 51.9 + 3.125·taps` (conv rows).
+//! * **Full cores** (Table VI): utilisation is dominated by synaptic
+//!   plumbing: `LUT = 1.35·synapses + 8·neurons`, `FF = 0.28·synapses +
+//!   2.5·neurons`, `BRAM = 0.5` per compute neuron (exactly reproduces the
+//!   69/133/261 BRAM column), `DSP = 2·compute_neurons` for W ≥ 16.
+//!   Quantization scaling from Table VI row 2: Q9.7 multiplies LUTs by
+//!   1.045 and FFs by 1.422 relative to Q5.3.
+//! * Memory choice: distributed-LUT storage converts BRAM words into LUTs
+//!   (64 weight-bits/LUT-RAM); register storage converts them into FFs.
+
+use crate::config::{MemKind, ModelConfig, Topology};
+use crate::fixed::QSpec;
+
+/// A resource vector (fractional BRAMs are real on AMD parts: half-BRAM18).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Resources {
+    pub luts: f64,
+    pub ffs: f64,
+    pub brams: f64,
+    pub dsps: f64,
+}
+
+impl Resources {
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            luts: self.luts + o.luts,
+            ffs: self.ffs + o.ffs,
+            brams: self.brams + o.brams,
+            dsps: self.dsps + o.dsps,
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Resources {
+        Resources { luts: self.luts * s, ffs: self.ffs * s, brams: self.brams * s, dsps: self.dsps * s }
+    }
+}
+
+/// Table IV anchors: (width, LUTs, FFs, DSPs, dynamic peak power mW @100MHz).
+const NEURON_ANCHORS: [(f64, f64, f64, f64, f64); 5] = [
+    (1.0, 14.0, 11.0, 0.0, 3.0),
+    (4.0, 66.0, 19.0, 0.0, 4.0),
+    (8.0, 245.0, 35.0, 0.0, 6.0),
+    (16.0, 242.0, 68.0, 2.0, 14.0),
+    (32.0, 856.0, 132.0, 8.0, 27.0),
+];
+
+fn interp(anchors: &[(f64, f64)], x: f64) -> f64 {
+    if x <= anchors[0].0 {
+        return anchors[0].1;
+    }
+    for w in anchors.windows(2) {
+        let ((x0, y0), (x1, y1)) = (w[0], w[1]);
+        if x <= x1 {
+            return y0 + (x - x0) / (x1 - x0) * (y1 - y0);
+        }
+    }
+    anchors.last().unwrap().1
+}
+
+/// Single standalone LIF neuron (Table IV row for width W = n+q).
+pub fn lif_neuron(qspec: QSpec) -> Resources {
+    let w = qspec.width() as f64;
+    let col = |i: usize| -> Vec<(f64, f64)> {
+        NEURON_ANCHORS
+            .iter()
+            .map(|a| (a.0, [a.1, a.2, a.3, a.4][i]))
+            .collect()
+    };
+    Resources {
+        luts: interp(&col(0), w).round(),
+        ffs: interp(&col(1), w).round(),
+        brams: 0.0,
+        dsps: interp(&col(2), w).round(),
+    }
+}
+
+/// Single-neuron dynamic peak power (mW @ 100 MHz spike clock, Table IV).
+pub fn lif_neuron_power_mw(qspec: QSpec) -> f64 {
+    let w = qspec.width() as f64;
+    let anchors: Vec<(f64, f64)> = NEURON_ANCHORS.iter().map(|a| (a.0, a.4)).collect();
+    interp(&anchors, w)
+}
+
+/// Standalone neuron + connection block (Table V rows), Q5.3, per neuron.
+pub fn connection_block(topology: Topology, fan_in: usize, mem: MemKind) -> Resources {
+    let m = fan_in as f64;
+    match topology {
+        // Single published point (Table V row 1) used as an exact anchor.
+        Topology::OneToOne => Resources { luts: 296.0, ffs: 56.0, brams: 0.0, dsps: 0.0 },
+        Topology::Gaussian { radius } => {
+            // Table V reports the 2-D filter (taps = (2r+1)^2): 3×3 / 5×5.
+            let taps = ((2 * radius + 1) * (2 * radius + 1)) as f64;
+            let base = Resources {
+                luts: (275.0 + taps).round(),
+                ffs: (51.9 + 3.125 * taps).round(),
+                brams: 0.5,
+                dsps: 0.0,
+            };
+            apply_mem_kind(base, taps, MemKind::Bram, mem)
+        }
+        Topology::AllToAll => {
+            let base = Resources {
+                luts: (286.0 + 1.047 * m).round(),
+                ffs: (60.0 + 3.0 * m).round(),
+                brams: 0.5,
+                dsps: 0.0,
+            };
+            apply_mem_kind(base, m, MemKind::Bram, mem)
+        }
+    }
+}
+
+/// Convert the synaptic-storage component between memory kinds: BRAM words
+/// (8-bit Q5.3 baseline) become distributed-LUT RAM at 64 bits/LUT or
+/// flip-flops at 1 bit/FF.
+fn apply_mem_kind(base: Resources, words: f64, from: MemKind, to: MemKind) -> Resources {
+    if from == to {
+        return base;
+    }
+    let bits = words * 8.0;
+    let mut r = base;
+    // Strip the BRAM storage, then add the substitute fabric storage.
+    r.brams = 0.0;
+    match to {
+        MemKind::Bram => r.brams = base.brams,
+        MemKind::DistributedLut => r.luts += (bits / 64.0).ceil(),
+        MemKind::Register => r.ffs += bits,
+    }
+    r
+}
+
+/// Quantization scaling for full cores, anchored at Q5.3 (Table VI row 2:
+/// Q9.7 = +4.5% LUT, +42.2% FF). Scales linearly in (W − 8)/8.
+fn quant_scale(qspec: QSpec) -> (f64, f64) {
+    let d = (qspec.width() as f64 - 8.0) / 8.0;
+    ((1.0 + 0.045 * d).max(0.5), (1.0 + 0.422 * d).max(0.5))
+}
+
+/// Full-core utilisation (Table VI model). `config.mem` selects the
+/// synaptic storage fabric.
+pub fn core(config: &ModelConfig) -> Resources {
+    let syn = config.total_synapses() as f64;
+    let neurons = config.total_neurons() as f64;
+    let compute = config.compute_neurons() as f64;
+    let (ls, fs) = quant_scale(config.qspec);
+
+    let mut r = Resources {
+        luts: (1.35 * syn + 8.0 * neurons) * ls,
+        ffs: (0.28 * syn + 2.5 * neurons) * fs,
+        brams: 0.5 * compute,
+        dsps: if config.qspec.width() >= 16 { 2.0 * compute } else { 0.0 },
+    };
+    // Memory fabric substitution for the whole synaptic store.
+    let bits = syn * config.qspec.width() as f64;
+    match config.mem {
+        MemKind::Bram => {}
+        MemKind::DistributedLut => {
+            r.brams = 0.0;
+            r.luts += (bits / 64.0).ceil();
+        }
+        MemKind::Register => {
+            r.brams = 0.0;
+            r.ffs += bits;
+        }
+    }
+    r
+}
+
+/// Utilisation as fractions of a board (the percent columns of Table VI).
+pub fn utilisation(r: &Resources, board: &super::boards::Board) -> (f64, f64, f64, f64) {
+    (
+        r.luts / board.luts as f64,
+        r.ffs / board.ffs as f64,
+        r.brams / board.brams,
+        if board.dsps == 0 { 0.0 } else { r.dsps / board.dsps as f64 },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{Q17_15, Q1_0, Q5_3, Q9_7};
+    use crate::hwmodel::boards::VIRTEX_ULTRASCALE;
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn table4_anchors_exact() {
+        let r = lif_neuron(Q5_3);
+        assert_eq!((r.luts, r.ffs, r.dsps), (245.0, 35.0, 0.0));
+        let r = lif_neuron(Q9_7);
+        assert_eq!((r.luts, r.ffs, r.dsps), (242.0, 68.0, 2.0));
+        let r = lif_neuron(Q17_15);
+        assert_eq!((r.luts, r.ffs, r.dsps), (856.0, 132.0, 8.0));
+        assert_eq!(lif_neuron(Q1_0).luts, 14.0);
+        assert_eq!(lif_neuron_power_mw(Q17_15), 27.0);
+    }
+
+    #[test]
+    fn table4_ratios_hold() {
+        // Paper: 32-bit uses 61x more LUTs, 12x more FFs than binary.
+        let b = lif_neuron(Q1_0);
+        let w32 = lif_neuron(Q17_15);
+        assert!((w32.luts / b.luts - 61.0).abs() < 1.0);
+        assert!((w32.ffs / b.ffs - 12.0).abs() < 0.1);
+        // 9x more power.
+        assert!((lif_neuron_power_mw(Q17_15) / lif_neuron_power_mw(Q1_0) - 9.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn table5_fc_rows() {
+        for (m, lut, ff) in [(128usize, 420.0, 443.0), (256, 551.0, 829.0), (512, 822.0, 1599.0)] {
+            let r = connection_block(Topology::AllToAll, m, MemKind::Bram);
+            assert!(rel_err(r.luts, lut) < 0.02, "M={m} luts {} vs {lut}", r.luts);
+            assert!(rel_err(r.ffs, ff) < 0.02, "M={m} ffs {} vs {ff}", r.ffs);
+            assert_eq!(r.brams, 0.5);
+        }
+    }
+
+    #[test]
+    fn table5_conv_rows() {
+        let c3 = connection_block(Topology::Gaussian { radius: 1 }, 20, MemKind::Bram);
+        let c5 = connection_block(Topology::Gaussian { radius: 2 }, 20, MemKind::Bram);
+        assert!(rel_err(c3.luts, 284.0) < 0.02);
+        assert!(rel_err(c3.ffs, 80.0) < 0.02);
+        assert!(rel_err(c5.luts, 300.0) < 0.02);
+        assert!(rel_err(c5.ffs, 130.0) < 0.02);
+    }
+
+    #[test]
+    fn table6_baseline_core() {
+        let cfg = ModelConfig::parse_arch("256x128x10", Q5_3).unwrap();
+        let r = core(&cfg);
+        // Paper row 1: 8.97% LUTs, 0.98% FFs, 3.99% BRAMs of Virtex US.
+        let (l, f, b, d) = utilisation(&r, &VIRTEX_ULTRASCALE);
+        assert!(rel_err(l, 0.0897) < 0.05, "lut {l}");
+        assert!(rel_err(f, 0.0098) < 0.10, "ff {f}");
+        assert!(rel_err(b, 0.0399) < 0.01, "bram {b}");
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn table6_bram_column_exact() {
+        for (arch, brams) in [("256x128x10", 69.0), ("256x256x10", 133.0), ("256x256x256x10", 261.0)] {
+            let cfg = ModelConfig::parse_arch(arch, Q5_3).unwrap();
+            assert_eq!(core(&cfg).brams, brams, "{arch}");
+        }
+    }
+
+    #[test]
+    fn table6_q97_row() {
+        let q53 = core(&ModelConfig::parse_arch("256x128x10", Q5_3).unwrap());
+        let q97 = core(&ModelConfig::parse_arch("256x128x10", Q9_7).unwrap());
+        assert!(rel_err(q97.luts / q53.luts, 1.045) < 0.01);
+        assert!(rel_err(q97.ffs / q53.ffs, 1.422) < 0.01);
+        assert_eq!(q97.dsps, 276.0); // 2 DSP × 138 compute neurons
+        assert_eq!(q97.brams, q53.brams);
+    }
+
+    #[test]
+    fn mem_kind_conversions() {
+        let cfg = ModelConfig::parse_arch("256x128x10", Q5_3).unwrap();
+        let bram = core(&cfg);
+        let lut = core(&cfg.clone().with_mem(MemKind::DistributedLut));
+        let reg = core(&cfg.with_mem(MemKind::Register));
+        assert_eq!(lut.brams, 0.0);
+        assert_eq!(reg.brams, 0.0);
+        assert!(lut.luts > bram.luts);
+        assert!(reg.ffs > bram.ffs + 30000.0);
+    }
+
+    #[test]
+    fn interp_is_monotone_between_anchors() {
+        let w12 = QSpec::new(7, 5).unwrap(); // W=12, between anchors 8 and 16
+        let r = lif_neuron(w12);
+        assert!(r.luts >= 242.0 && r.luts <= 245.0);
+        assert!(r.ffs > 35.0 && r.ffs < 68.0);
+    }
+}

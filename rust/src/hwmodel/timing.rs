@@ -1,0 +1,104 @@
+//! Static-timing model — setup slack vs spike frequency per synaptic-memory
+//! fabric (paper Fig. 13).
+//!
+//! Setup slack = required time − arrival time at the worst endpoint. For a
+//! single-cycle spike-clock path, required time is the period 1/f and the
+//! arrival time is the fabric-dependent critical-path delay. Calibration:
+//! the paper's measured peak spike frequencies (least positive slack) are
+//! 925 kHz (BRAM), 850 kHz (distributed LUT) and 500 kHz (register file —
+//! "multiple timing violations at 600 kHz", peak 500 kHz), giving critical
+//! paths of 1081 ns / 1176 ns / 2000 ns respectively.
+
+use crate::config::MemKind;
+
+/// Critical-path delay of the spike-clock domain per memory fabric (ns).
+pub fn critical_path_ns(mem: MemKind) -> f64 {
+    match mem {
+        MemKind::Bram => 1.0e9 / 925_000.0,          // ≈ 1081 ns
+        MemKind::DistributedLut => 1.0e9 / 850_000.0, // ≈ 1176 ns
+        MemKind::Register => 1.0e9 / 500_000.0,       // = 2000 ns
+    }
+}
+
+/// Worst setup slack (ns) at spike frequency `f_hz` — one Fig. 13 point.
+/// Negative slack = timing violation.
+pub fn setup_slack_ns(mem: MemKind, f_hz: f64) -> f64 {
+    1.0e9 / f_hz - critical_path_ns(mem)
+}
+
+/// Peak spike frequency (Hz): the highest f with non-negative slack.
+pub fn peak_frequency_hz(mem: MemKind) -> f64 {
+    1.0e9 / critical_path_ns(mem)
+}
+
+/// Baseline synapse count the Fig. 13 critical paths were measured at.
+pub const SYN0: f64 = 34_048.0;
+
+/// Size-dependent peak frequency: routing/congestion stretches the critical
+/// path roughly linearly with the synaptic fabric, so larger cores close
+/// timing at proportionally lower spike frequencies. Calibrated against the
+/// paper's Table XI peak-perf/W operating points (smnist ≈ 600 kHz, DVS ≈
+/// 200 kHz, SHD ≈ 100 kHz — back-computed from Eq. 12 and the published
+/// GOPS/W), which fall off ≈ 1/size.
+pub fn peak_frequency_scaled_hz(mem: MemKind, synapses: usize) -> f64 {
+    let ratio = (synapses as f64 / SYN0).max(1.0);
+    peak_frequency_hz(mem) / ratio
+}
+
+/// True iff the design meets timing at `f_hz`.
+pub fn meets_timing(mem: MemKind, f_hz: f64) -> bool {
+    setup_slack_ns(mem, f_hz) >= 0.0
+}
+
+/// The Fig. 13 sweep grid (kHz): 100 → 1200.
+pub fn fig13_grid_hz() -> Vec<f64> {
+    [100, 200, 400, 600, 800, 1000, 1200].iter().map(|k| *k as f64 * 1e3).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_frequencies_match_paper() {
+        assert!((peak_frequency_hz(MemKind::Bram) - 925e3).abs() < 1.0);
+        assert!((peak_frequency_hz(MemKind::DistributedLut) - 850e3).abs() < 1.0);
+        assert!((peak_frequency_hz(MemKind::Register) - 500e3).abs() < 1.0);
+    }
+
+    #[test]
+    fn register_violates_at_600khz() {
+        // Paper: "multiple timing violations for register-based memory" at 600 kHz.
+        assert!(!meets_timing(MemKind::Register, 600e3));
+        assert!(meets_timing(MemKind::Bram, 600e3));
+        assert!(meets_timing(MemKind::DistributedLut, 600e3));
+    }
+
+    #[test]
+    fn all_positive_up_to_400khz() {
+        // Paper: slack positive for 100/200/400 kHz for all three fabrics.
+        for mem in MemKind::all() {
+            for f in [100e3, 200e3, 400e3] {
+                assert!(setup_slack_ns(mem, f) > 0.0, "{mem:?} at {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn slack_monotone_decreasing_in_f() {
+        for mem in MemKind::all() {
+            let mut prev = f64::INFINITY;
+            for f in fig13_grid_hz() {
+                let s = setup_slack_ns(mem, f);
+                assert!(s < prev);
+                prev = s;
+            }
+        }
+    }
+
+    #[test]
+    fn bram_supports_highest_peak() {
+        assert!(peak_frequency_hz(MemKind::Bram) > peak_frequency_hz(MemKind::DistributedLut));
+        assert!(peak_frequency_hz(MemKind::DistributedLut) > peak_frequency_hz(MemKind::Register));
+    }
+}

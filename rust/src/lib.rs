@@ -1,0 +1,50 @@
+//! # QUANTISENC — software-defined digital quantized spiking neural core
+//!
+//! A full reproduction of *"A Fully-Configurable Open-Source Software-Defined
+//! Digital Quantized Spiking Neural Core Architecture"* (Matinizadeh et al.,
+//! 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** (build time): Pallas kernel for the quantized LIF layer step
+//!   (`python/compile/kernels/lif.py`).
+//! * **L2** (build time): JAX SNN model, trainer, and AOT lowering to HLO
+//!   text (`python/compile/`).
+//! * **L3** (this crate): the request-path system — configuration, the
+//!   cycle-accurate digital core simulator, FPGA/ASIC hardware models, the
+//!   hardware-software interface with its control-register file, the
+//!   pipelined streaming coordinator, and the PJRT runtime that executes the
+//!   AOT artifacts. Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md §4 for the full system inventory):
+//!
+//! | module        | paper concept |
+//! |---------------|---------------|
+//! | [`fixed`]     | §III-C signed Qn.q arithmetic (Fig. 6)               |
+//! | [`config`]    | Table I static/dynamic configuration, Eq. 9/10       |
+//! | [`hdl`]       | Fig. 2 neuron, Fig. 1 layered core, AER, clocking    |
+//! | [`hwmodel`]   | FPGA resources/power/timing + ASIC (Tables IV–XII)   |
+//! | [`datasets`]  | synthetic spiking datasets (§VI-A substitution)      |
+//! | [`coordinator`]| §IV hardware-software interface + Fig. 8 pipelining |
+//! | [`runtime`]   | PJRT client executing the AOT HLO artifacts          |
+//! | [`baselines`] | non-pipelined dataflow [30] and Table VII designs    |
+//! | [`dse`]       | design-space exploration (Table IX)                  |
+//! | [`experiments`]| one generator per paper table/figure                |
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod dse;
+pub mod experiments;
+pub mod fixed;
+pub mod hdl;
+pub mod hwmodel;
+pub mod runtime;
+pub mod util;
+
+/// Canonical repo-relative artifacts directory.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    // Resolve relative to the crate root so binaries work from any cwd.
+    let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}

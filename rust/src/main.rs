@@ -1,0 +1,260 @@
+//! `repro` — the QUANTISENC leader binary.
+//!
+//! Subcommands (hand-rolled parsing; clap is not available offline):
+//!
+//! ```text
+//! repro table <id>            regenerate a paper table (4..12, g)
+//! repro figure <id>           regenerate a paper figure (3, 4, 10, 12, 13, 14)
+//! repro all                   every table & figure, in paper order
+//! repro serve [opts]          batched inference service over the PJRT path
+//! repro serve --hdl [opts]    …over the cycle-accurate core instead
+//! repro explore <arch> [Q]    DSE estimate for an architecture on all boards
+//! repro info                  artifact manifest + platform summary
+//! ```
+//!
+//! `serve` options: `--dataset smnist|dvs|shd` `--q Q5.3` `--n <samples>`
+//! `--cores <C>` `--pipeline`.
+
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+use quantisenc::coordinator::metrics::Telemetry;
+use quantisenc::coordinator::pipeline;
+use quantisenc::datasets::{Dataset, Split};
+use quantisenc::dse;
+use quantisenc::experiments;
+use quantisenc::fixed::QSpec;
+use quantisenc::hwmodel::Board;
+use quantisenc::runtime::artifacts::Manifest;
+use quantisenc::runtime::Runtime;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn manifest() -> Result<Manifest> {
+    Manifest::load(&quantisenc::artifacts_dir())
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "table" => {
+            let id = args.get(1).context("usage: repro table <id>")?;
+            let m = manifest().ok();
+            for t in experiments::run_table(id, m.as_ref())? {
+                println!("{t}");
+            }
+            Ok(())
+        }
+        "figure" => {
+            let id = args.get(1).context("usage: repro figure <id>")?;
+            let m = manifest().ok();
+            for t in experiments::run_figure(id, m.as_ref())? {
+                println!("{t}");
+            }
+            Ok(())
+        }
+        "all" => {
+            let m = manifest().ok();
+            for (kind, id) in experiments::ALL {
+                let tables = match *kind {
+                    "table" => experiments::run_table(id, m.as_ref()),
+                    _ => experiments::run_figure(id, m.as_ref()),
+                };
+                match tables {
+                    Ok(ts) => {
+                        for t in ts {
+                            println!("{t}");
+                        }
+                    }
+                    Err(e) => eprintln!("[skip] {kind} {id}: {e:#}"),
+                }
+            }
+            Ok(())
+        }
+        "serve" => serve(&args[1..]),
+        "explore" => {
+            let arch = args.get(1).context("usage: repro explore <arch> [Qn.q]")?;
+            let q = QSpec::parse(args.get(2).map(String::as_str).unwrap_or("Q5.3"))?;
+            for board in Board::all() {
+                let (p, fits) = dse::estimate(arch, q, &board)?;
+                println!(
+                    "{:18} {:>9.0} LUT {:>9.0} FF {:>6.1} BRAM {:>5.0} DSP  {:>7.3} W  {}",
+                    board.name,
+                    p.resources.luts,
+                    p.resources.ffs,
+                    p.resources.brams,
+                    p.resources.dsps,
+                    p.power_w,
+                    if fits { "FITS" } else { "does NOT fit" }
+                );
+            }
+            Ok(())
+        }
+        "info" => {
+            let m = manifest()?;
+            println!("artifacts: {}", m.root.display());
+            for ds in m.datasets() {
+                println!("  model {ds}: variants {:?}", m.variants(&ds)?);
+            }
+            println!("  kernels: {:?}", m.kernels());
+            let rt = Runtime::cpu()?;
+            println!("PJRT platform: {}", rt.platform());
+            Ok(())
+        }
+        "codegen" => {
+            // Emit Verilog HDL + self-checking SystemVerilog testbench for a
+            // configured core (paper §IV's software-defined flow artefacts).
+            let arch = args.get(1).context("usage: repro codegen <arch> [outdir]")?;
+            let outdir = std::path::PathBuf::from(
+                args.get(2).map(String::as_str).unwrap_or("generated_hdl"),
+            );
+            std::fs::create_dir_all(&outdir)?;
+            let cfg = quantisenc::config::ModelConfig::parse_arch(arch, QSpec::parse("Q5.3")?)?;
+            let top = quantisenc::hdl::verilog::emit_top(&cfg);
+            std::fs::write(outdir.join("quantisenc_top.v"), &top)?;
+            // Small random weights + a dataset-shaped stimulus for the TB.
+            let mut rng = quantisenc::datasets::rng::XorShift64Star::new(0xC0DE6E);
+            let weights: Vec<Vec<i32>> = cfg
+                .layers()
+                .iter()
+                .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(31) as i32 - 15).collect())
+                .collect();
+            let regs = quantisenc::config::registers::RegisterFile::new(cfg.qspec);
+            let t_steps = 8;
+            let spikes: Vec<u8> =
+                (0..t_steps * cfg.inputs()).map(|_| (rng.uniform() < 0.3) as u8).collect();
+            let sample = quantisenc::datasets::Sample {
+                spikes,
+                t_steps,
+                inputs: cfg.inputs(),
+                label: 0,
+            };
+            let tb = quantisenc::hdl::verilog::emit_testbench(&cfg, &weights, &regs, &sample)?;
+            std::fs::write(outdir.join("quantisenc_tb.sv"), &tb)?;
+            println!(
+                "wrote {} ({} bytes) and {} ({} bytes)",
+                outdir.join("quantisenc_top.v").display(),
+                top.len(),
+                outdir.join("quantisenc_tb.sv").display(),
+                tb.len()
+            );
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "repro — QUANTISENC reproduction CLI
+  table <id>      regenerate a paper table (4,5,6,7,8,9,10,11,12,g)
+  figure <id>     regenerate a paper figure (3,4,10,12,13,14)
+  all             everything, in paper order
+  serve           batched inference service (PJRT; --hdl for cycle-accurate)
+  explore <arch>  DSE estimate, e.g. repro explore 256x512x10 Q5.3
+  codegen <arch>  emit Verilog HDL + self-checking SV testbench (paper §IV)
+  info            artifact + platform summary";
+
+fn flag_val<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(String::as_str)
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let ds_name = flag_val(args, "--dataset").unwrap_or("smnist");
+    let qname = flag_val(args, "--q").unwrap_or("Q5.3");
+    let n: u64 = flag_val(args, "--n").unwrap_or("100").parse()?;
+    let cores: usize = flag_val(args, "--cores").unwrap_or("1").parse()?;
+    let use_hdl = args.iter().any(|a| a == "--hdl");
+    let use_pipeline = args.iter().any(|a| a == "--pipeline");
+    let dataset = Dataset::parse(ds_name).context("bad --dataset")?;
+
+    let m = manifest()?;
+    let art = m.model(ds_name, qname)?;
+    println!(
+        "serving {ds_name} ({}) {qname}, {n} requests, backend={}{}",
+        art.sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("x"),
+        if use_hdl { "hdl" } else { "pjrt" },
+        if use_pipeline { "+pipeline" } else { "" },
+    );
+
+    let mut tel = Telemetry::new();
+    tel.start();
+    if use_pipeline {
+        // Layer-pipelined streaming over the cycle-accurate core (Fig. 8).
+        let (config, core) = experiments::core_from_artifact(&art)?;
+        let samples: Vec<_> =
+            (0..n).map(|i| dataset.sample(i, Split::Test, art.t_steps)).collect();
+        let t0 = Instant::now();
+        let results = pipeline::run_pipelined(&config, &art.weights, &core.registers, &samples)?;
+        let dt = t0.elapsed();
+        tel.stop();
+        let correct =
+            results.iter().zip(&samples).filter(|(r, s)| r.prediction == s.label).count();
+        println!(
+            "pipelined: {} streams in {:.2?} ({:.1}/s), accuracy {:.1}%",
+            results.len(),
+            dt,
+            results.len() as f64 / dt.as_secs_f64(),
+            100.0 * correct as f64 / n as f64
+        );
+        return Ok(());
+    }
+
+    if use_hdl {
+        let (config, core) = experiments::core_from_artifact(&art)?;
+        let mut mc = quantisenc::coordinator::multicore::MultiCore::new(
+            &config,
+            &art.weights,
+            &core.registers,
+            cores,
+        )?;
+        let samples: Vec<_> =
+            (0..n).map(|i| dataset.sample(i, Split::Test, art.t_steps)).collect();
+        let t0 = Instant::now();
+        let results = mc.run_batch(&samples);
+        let per_req = t0.elapsed() / n.max(1) as u32;
+        for (r, s) in results.iter().zip(&samples) {
+            tel.record(per_req, &r.stats, Some(r.prediction == s.label));
+        }
+        tel.stop();
+        println!("{}", tel.summary());
+        let p = quantisenc::hwmodel::power::core_dynamic_from_stats(
+            &config,
+            &tel.activity,
+            quantisenc::hwmodel::power::F0_HZ,
+        );
+        println!("modelled dynamic power at 600 kHz: {p:.3} W");
+        return Ok(());
+    }
+
+    // Default: PJRT request path.
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_model(&art)?;
+    for i in 0..n {
+        let s = dataset.sample(i, Split::Test, art.t_steps);
+        let t0 = Instant::now();
+        let out = exe.run(&s.spikes)?;
+        tel.record(
+            t0.elapsed(),
+            &quantisenc::hdl::ActivityStats {
+                spikes: out.layer_spikes.iter().map(|&x| x as u64).sum(),
+                ..Default::default()
+            },
+            Some(out.prediction == s.label),
+        );
+    }
+    tel.stop();
+    println!("{}", tel.summary());
+    Ok(())
+}
+
+// -- codegen subcommand lives at the bottom to keep dispatch readable; it is
+// registered in `dispatch` via the fallthrough below.

@@ -1,0 +1,198 @@
+//! Artifact manifest + weight/golden file loading.
+//!
+//! `make artifacts` (the one-time Python build path) writes
+//! `artifacts/manifest.json` describing every lowered model variant; this
+//! module parses it and loads the binary weight files so the request path
+//! never touches Python.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::config::registers::NUM_REGS;
+use crate::util::json::Json;
+
+/// One deployable model variant (dataset × quantization).
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub dataset: String,
+    pub qname: String,
+    pub sizes: Vec<usize>,
+    pub t_steps: usize,
+    pub hlo_path: PathBuf,
+    pub layer_shapes: Vec<(usize, usize)>,
+    /// Dense row-major per-layer quantized weights from the .bin file.
+    pub weights: Vec<Vec<i32>>,
+    pub default_regs: [i32; NUM_REGS],
+    /// Float ("software") accuracy recorded at training time.
+    pub float_acc: f64,
+}
+
+/// Parsed manifest (the index of everything Python produced).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    json: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        Ok(Manifest { root: dir.to_path_buf(), json })
+    }
+
+    pub fn datasets(&self) -> Vec<String> {
+        self.json
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn variants(&self, dataset: &str) -> Result<Vec<String>> {
+        let v = self
+            .json
+            .req("models")?
+            .req(dataset)?
+            .req("variants")?
+            .as_obj()
+            .context("variants not an object")?;
+        Ok(v.keys().cloned().collect())
+    }
+
+    /// Load one model variant, including its weight file.
+    pub fn model(&self, dataset: &str, qname: &str) -> Result<ModelArtifact> {
+        let entry = self.json.req("models")?.req(dataset)?;
+        let sizes: Vec<usize> =
+            entry.req("sizes")?.i32_vec()?.into_iter().map(|x| x as usize).collect();
+        let t_steps = entry.req("t_steps")?.as_i64().context("t_steps")? as usize;
+        let float_acc = entry.req("float_acc")?.as_f64().unwrap_or(0.0);
+        let var = entry.req("variants")?.req(qname)?;
+
+        let hlo_path = self.root.join(var.req("hlo")?.as_str().context("hlo")?);
+        let layer_shapes: Vec<(usize, usize)> = var
+            .req("layer_shapes")?
+            .as_arr()
+            .context("layer_shapes")?
+            .iter()
+            .map(|s| {
+                let v = s.i32_vec()?;
+                anyhow::ensure!(v.len() == 2, "layer shape arity");
+                Ok((v[0] as usize, v[1] as usize))
+            })
+            .collect::<Result<_>>()?;
+
+        let regs_v = var.req("default_regs")?.i32_vec()?;
+        anyhow::ensure!(regs_v.len() == NUM_REGS, "register vector arity");
+        let mut default_regs = [0i32; NUM_REGS];
+        default_regs.copy_from_slice(&regs_v);
+
+        let wpath = self.root.join(var.req("weights")?.as_str().context("weights")?);
+        let weights = load_weight_file(&wpath, &layer_shapes)?;
+
+        Ok(ModelArtifact {
+            dataset: dataset.to_string(),
+            qname: qname.to_string(),
+            sizes,
+            t_steps,
+            hlo_path,
+            layer_shapes,
+            weights,
+            default_regs,
+            float_acc,
+        })
+    }
+
+    pub fn kernels(&self) -> Vec<String> {
+        self.json
+            .get("kernels")
+            .and_then(|m| m.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn kernel_hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let f = self.json.req("kernels")?.req(name)?.req("file")?;
+        Ok(self.root.join(f.as_str().context("kernel file")?))
+    }
+
+    /// Parse a golden-vector JSON file from the artifacts directory.
+    pub fn golden(&self, name: &str) -> Result<Json> {
+        let path = self.root.join(name);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading golden {}", path.display()))?;
+        Ok(Json::parse(&text)?)
+    }
+}
+
+/// Flat little-endian i32 weight file → per-layer dense matrices.
+pub fn load_weight_file(path: &Path, layer_shapes: &[(usize, usize)]) -> Result<Vec<Vec<i32>>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading weights {}", path.display()))?;
+    let total: usize = layer_shapes.iter().map(|(m, n)| m * n).sum();
+    anyhow::ensure!(
+        bytes.len() == total * 4,
+        "weight file {} has {} bytes, expected {}",
+        path.display(),
+        bytes.len(),
+        total * 4
+    );
+    let flat: Vec<i32> = bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let mut out = Vec::with_capacity(layer_shapes.len());
+    let mut off = 0;
+    for &(m, n) in layer_shapes {
+        out.push(flat[off..off + m * n].to_vec());
+        off += m * n;
+    }
+    Ok(out)
+}
+
+/// Float32 weight file (the "software" reference weights).
+pub fn load_float_weight_file(path: &Path, layer_shapes: &[(usize, usize)]) -> Result<Vec<Vec<f32>>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading weights {}", path.display()))?;
+    let total: usize = layer_shapes.iter().map(|(m, n)| m * n).sum();
+    anyhow::ensure!(bytes.len() == total * 4, "float weight file size mismatch");
+    let flat: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let mut out = Vec::with_capacity(layer_shapes.len());
+    let mut off = 0;
+    for &(m, n) in layer_shapes {
+        out.push(flat[off..off + m * n].to_vec());
+        off += m * n;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_file_roundtrip() {
+        let dir = std::env::temp_dir().join("q_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let vals: Vec<i32> = vec![1, -2, 3, -4, 5, 6, 7, -8, 9, 10];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let w = load_weight_file(&path, &[(2, 2), (2, 3)]).unwrap();
+        assert_eq!(w[0], vec![1, -2, 3, -4]);
+        assert_eq!(w[1], vec![5, 6, 7, -8, 9, 10]);
+        // wrong shape errors
+        assert!(load_weight_file(&path, &[(3, 3)]).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Minimal benchmark harness (criterion is not available in this offline
+//! image — `cargo bench` targets use `harness = false` with this runner).
+//!
+//! Methodology: warm-up runs, then timed iterations until both a minimum
+//! iteration count and a minimum wall-clock budget are met; reports
+//! mean / median / p95 per-iteration time and derived throughput.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            0.0
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+/// Run `f` repeatedly; at least `min_iters` iterations and `min_time` total.
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time: Duration, mut f: F) -> BenchResult {
+    // Warm-up (also primes caches/JIT'd executables).
+    for _ in 0..2.min(min_iters) {
+        f();
+    }
+    let mut samples_us: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples_us.len() < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        if samples_us.len() >= 10_000 {
+            break; // enough statistics for anything we time here
+        }
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples_us.len(),
+        mean: Duration::from_secs_f64(stats::mean(&samples_us) / 1e6),
+        median: Duration::from_secs_f64(stats::median(&samples_us) / 1e6),
+        p95: Duration::from_secs_f64(stats::percentile(&samples_us, 95.0) / 1e6),
+    };
+    println!(
+        "{:44} {:>7} iters  mean {:>12?}  median {:>12?}  p95 {:>12?}  ({:.1}/s)",
+        r.name,
+        r.iters,
+        r.mean,
+        r.median,
+        r.p95,
+        r.per_sec()
+    );
+    r
+}
+
+/// Standard knobs for repo benches.
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 10, Duration::from_millis(400), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let mut count = 0usize;
+        let r = bench("noop", 5, Duration::from_millis(1), || count += 1);
+        assert!(r.iters >= 5);
+        assert!(count >= r.iters);
+        assert!(r.per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Small self-contained utilities (no external deps are available offline).
+
+pub mod bench;
+pub mod json;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,144 @@
+//! ASCII table rendering for the experiment harness — every paper table /
+//! figure generator returns a [`Table`] that prints the same rows the paper
+//! reports, plus (where applicable) the paper's published value and the
+//! relative error of our model against it.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row arity mismatch in table {:?}",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Markdown rendering (used when writing EXPERIMENTS.md sections).
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out += &format!("| {} |\n", self.headers.join(" | "));
+        out += &format!("|{}|\n", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in &self.rows {
+            out += &format!("| {} |\n", row.join(" | "));
+        }
+        for n in &self.notes {
+            out += &format!("\n> {n}\n");
+        }
+        out
+    }
+}
+
+impl fmt::Display for Table {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let w = self.widths();
+        let line = |f: &mut fmt::Formatter<'_>| -> fmt::Result {
+            write!(f, "+")?;
+            for wi in &w {
+                write!(f, "{}+", "-".repeat(wi + 2))?;
+            }
+            writeln!(f)
+        };
+        writeln!(f, "\n== {} ==", self.title)?;
+        line(f)?;
+        write!(f, "|")?;
+        for (h, wi) in self.headers.iter().zip(&w) {
+            write!(f, " {h:<wi$} |")?;
+        }
+        writeln!(f)?;
+        line(f)?;
+        for row in &self.rows {
+            write!(f, "|")?;
+            for (c, wi) in row.iter().zip(&w) {
+                write!(f, " {c:<wi$} |")?;
+            }
+            writeln!(f)?;
+        }
+        line(f)?;
+        for n in &self.notes {
+            writeln!(f, "  note: {n}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Format helpers shared by experiment generators.
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+/// "paper / ours / err%" triple cell used throughout EXPERIMENTS.md.
+pub fn cmp_cell(ours: f64, paper: f64, digits: usize) -> String {
+    let err = super::stats::rel_err(ours, paper);
+    format!("{ours:.digits$} (paper {paper:.digits$}, err {:.1}%)", err * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.note("n");
+        let s = t.to_string();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("| 1"));
+        assert!(s.contains("note: n"));
+        let md = t.to_markdown();
+        assert!(md.contains("| a | bb |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn cmp_cell_formats() {
+        let c = cmp_cell(11.0, 10.0, 1);
+        assert!(c.contains("11.0") && c.contains("err 10.0%"), "{c}");
+    }
+}

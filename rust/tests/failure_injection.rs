@@ -1,0 +1,102 @@
+//! Failure injection: the system must reject malformed artifacts, bus
+//! transactions, and event streams with actionable errors — never panic,
+//! never partially apply.
+
+use std::path::PathBuf;
+
+use quantisenc::config::ModelConfig;
+use quantisenc::coordinator::interface::Device;
+use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::aer::{decode, AerEvent};
+use quantisenc::runtime::artifacts::{load_weight_file, Manifest};
+
+fn scratch_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("q_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_actionable() {
+    let err = Manifest::load(&scratch_dir("none")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "error must tell the user the fix: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_json_rejected() {
+    let dir = scratch_dir("badjson");
+    std::fs::write(dir.join("manifest.json"), "{ not json !").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn manifest_missing_keys_rejected() {
+    let dir = scratch_dir("nokeys");
+    std::fs::write(dir.join("manifest.json"), r#"{"models": {"smnist": {}}}"#).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let err = m.model("smnist", "Q5.3").unwrap_err();
+    assert!(format!("{err:#}").contains("missing json key"));
+    assert!(m.model("nonexistent", "Q5.3").is_err());
+}
+
+#[test]
+fn truncated_weight_file_rejected() {
+    let dir = scratch_dir("shortw");
+    let path = dir.join("w.bin");
+    std::fs::write(&path, [0u8; 10]).unwrap(); // not a multiple of the shape
+    let err = load_weight_file(&path, &[(2, 2)]).unwrap_err();
+    assert!(format!("{err:#}").contains("expected 16"));
+}
+
+#[test]
+fn device_rejects_out_of_range_bus_traffic() {
+    let cfg = ModelConfig::parse_arch("4x3x2", Q5_3).unwrap();
+    let mut d = Device::new(cfg);
+    // weight address out of range / value overflow / pruned α (via one-to-one)
+    assert!(d.write_weight(0, 99, 0, 1).is_err());
+    assert!(d.write_weight(0, 0, 0, 100_000).is_err());
+    assert!(d.write_weight(9, 0, 0, 1).is_err()); // bad layer address must error, not panic
+    // register: bad address, bad reset encoding, negative refractory
+    assert!(d.write_register(77, 0).is_err());
+    assert!(d.write_register(4, 17).is_err());
+    assert!(d.write_register(5, -3).is_err());
+}
+
+#[test]
+fn malformed_aer_streams_rejected() {
+    // Out-of-range address, out-of-range timestamp, unordered stream.
+    assert!(decode(&[AerEvent { t: 0, addr: 10 }], 2, 4).is_err());
+    assert!(decode(&[AerEvent { t: 9, addr: 0 }], 2, 4).is_err());
+    assert!(decode(
+        &[AerEvent { t: 1, addr: 2 }, AerEvent { t: 1, addr: 1 }],
+        2,
+        4
+    )
+    .is_err());
+}
+
+#[test]
+fn weight_file_with_out_of_range_values_rejected_by_core() {
+    let cfg = ModelConfig::parse_arch("2x2", Q5_3).unwrap();
+    let mut core = quantisenc::hdl::Core::new(cfg);
+    // 999 does not fit Q5.3's 8-bit word.
+    let err = core.load_weights(&[vec![0, 0, 0, 999]]).unwrap_err();
+    assert!(format!("{err:#}").contains("does not fit"));
+    // arity mismatch
+    assert!(core.load_weights(&[]).is_err());
+}
+
+#[test]
+fn pipeline_survives_zero_length_streams() {
+    use quantisenc::config::registers::RegisterFile;
+    use quantisenc::coordinator::pipeline::run_pipelined;
+    use quantisenc::datasets::Sample;
+    let cfg = ModelConfig::parse_arch("3x2", Q5_3).unwrap();
+    let regs = RegisterFile::new(Q5_3);
+    let samples = vec![Sample { spikes: vec![], t_steps: 0, inputs: 3, label: 0 }];
+    let out = run_pipelined(&cfg, &[vec![0; 6]], &regs, &samples).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].counts, vec![0, 0]);
+}

@@ -1,0 +1,152 @@
+//! Cross-language golden-vector parity: the Rust substrates must match the
+//! Python/JAX side bit-for-bit on fixed-point ops, multi-step LIF traces
+//! (all four reset modes), and dataset generation.
+
+use quantisenc::config::registers::RegisterFile;
+use quantisenc::config::{LayerConfig, MemKind, Topology};
+use quantisenc::datasets::{Dataset, Split};
+use quantisenc::fixed::QSpec;
+use quantisenc::hdl::Layer;
+use quantisenc::runtime::artifacts::Manifest;
+use quantisenc::util::json::Json;
+
+fn manifest() -> Manifest {
+    Manifest::load(&quantisenc::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn fixedpoint_ops_match_python() {
+    let g = manifest().golden("golden_fixedpoint.json").unwrap();
+    let cases = g.get("cases").unwrap().as_arr().unwrap();
+    assert_eq!(cases.len(), 256);
+    for c in cases {
+        let qs = QSpec::parse(c.get("q").unwrap().as_str().unwrap()).unwrap();
+        let a = c.get("a").unwrap().as_i64().unwrap() as i32;
+        let b = c.get("b").unwrap().as_i64().unwrap() as i32;
+        assert_eq!(qs.add(a, b) as i64, c.get("add").unwrap().as_i64().unwrap(), "{qs} add {a} {b}");
+        assert_eq!(qs.sub(a, b) as i64, c.get("sub").unwrap().as_i64().unwrap(), "{qs} sub {a} {b}");
+        assert_eq!(qs.mul(a, b) as i64, c.get("mul").unwrap().as_i64().unwrap(), "{qs} mul {a} {b}");
+    }
+}
+
+fn check_lif_golden(file: &str) {
+    let g = manifest().golden(file).unwrap();
+    let qs = QSpec::parse(g.get("q").unwrap().as_str().unwrap()).unwrap();
+    let m = g.get("m").unwrap().as_i64().unwrap() as usize;
+    let n = g.get("n").unwrap().as_i64().unwrap() as usize;
+    let weights: Vec<i32> = g
+        .get("weights")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .flat_map(|row| row.i32_vec().unwrap())
+        .collect();
+    let spikes_in: Vec<Vec<i32>> = g
+        .get("spikes_in")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.i32_vec().unwrap())
+        .collect();
+
+    for (mode, trace) in g.get("traces").unwrap().as_obj().unwrap() {
+        let regs_v = trace.get("regs").unwrap().i32_vec().unwrap();
+        let mut regs = RegisterFile::new(qs);
+        for (addr, &v) in regs_v.iter().enumerate() {
+            regs.write(addr, v).unwrap();
+        }
+        let cfg = LayerConfig { fan_in: m, neurons: n, topology: Topology::AllToAll };
+        let mut layer = Layer::new(&cfg, qs, MemKind::Bram);
+        layer.memory_mut().load_dense(&weights).unwrap();
+
+        let exp_spk = trace.get("spikes_out").unwrap().as_arr().unwrap();
+        let exp_vm = trace.get("vmem").unwrap().as_arr().unwrap();
+        let mut out = Vec::new();
+        for (t, spk_row) in spikes_in.iter().enumerate() {
+            let row_u8: Vec<u8> = spk_row.iter().map(|&x| x as u8).collect();
+            layer.step_regs(&row_u8, &mut out, &regs);
+            let got_spk: Vec<i32> = out.iter().map(|&s| s as i32).collect();
+            assert_eq!(got_spk, exp_spk[t].i32_vec().unwrap(), "{file} mode {mode} t={t} spikes");
+            assert_eq!(layer.vmem(), exp_vm[t].i32_vec().unwrap(), "{file} mode {mode} t={t} vmem");
+        }
+    }
+}
+
+#[test]
+fn lif_trace_q53_matches_python_all_reset_modes() {
+    check_lif_golden("golden_lif_q53.json");
+}
+
+#[test]
+fn lif_trace_q97_matches_python_all_reset_modes() {
+    check_lif_golden("golden_lif_q97.json");
+}
+
+#[test]
+fn dataset_generators_match_python() {
+    let g = manifest().golden("golden_datasets.json").unwrap();
+    for ds in Dataset::all() {
+        let entry = g.get(ds.label()).unwrap();
+        let t = entry.get("t").unwrap().as_i64().unwrap() as usize;
+        let sample = ds.sample(0, Split::Test, t);
+        assert_eq!(
+            sample.label as i64,
+            entry.get("label").unwrap().as_i64().unwrap(),
+            "{} label",
+            ds.label()
+        );
+        let exp_rows: Vec<i64> = entry
+            .get("spike_rows")
+            .unwrap()
+            .num_vec()
+            .unwrap()
+            .into_iter()
+            .map(|x| x as i64)
+            .collect();
+        let got_rows: Vec<i64> = sample.row_counts().iter().map(|&x| x as i64).collect();
+        // smnist is transcendental-free and must be exact; dvs/shd involve
+        // exp/cos whose final-ulp may differ between numpy and Rust libm.
+        if ds == Dataset::Smnist {
+            assert_eq!(got_rows, exp_rows, "smnist rows must be bit-exact");
+            let exp_first: Vec<i64> = entry
+                .get("first_row_indices")
+                .unwrap()
+                .num_vec()
+                .unwrap()
+                .into_iter()
+                .map(|x| x as i64)
+                .collect();
+            let got_first: Vec<i64> = (0..sample.inputs)
+                .filter(|&i| sample.spike(0, i) == 1)
+                .map(|i| i as i64)
+                .collect();
+            assert_eq!(got_first, exp_first);
+        } else {
+            let exp_nnz = entry.get("nnz").unwrap().as_i64().unwrap();
+            let got_nnz = sample.nnz() as i64;
+            let diff = (exp_nnz - got_nnz).abs() as f64;
+            assert!(
+                diff <= (exp_nnz as f64 * 0.001).max(1.0),
+                "{}: nnz {got_nnz} vs python {exp_nnz}",
+                ds.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_files_are_wellformed_json() {
+    let m = manifest();
+    for f in [
+        "golden_fixedpoint.json",
+        "golden_lif_q53.json",
+        "golden_lif_q97.json",
+        "golden_datasets.json",
+        "manifest.json",
+    ] {
+        let j = m.golden(f).unwrap();
+        assert!(matches!(j, Json::Obj(_)), "{f} not an object");
+    }
+}

@@ -1,0 +1,103 @@
+//! Integration: every paper table/figure generator runs against the real
+//! artifacts and reproduces the paper's qualitative shape (who wins, which
+//! way the trend points). Requires `make artifacts`.
+
+use quantisenc::experiments;
+use quantisenc::runtime::artifacts::Manifest;
+
+fn manifest() -> Manifest {
+    Manifest::load(&quantisenc::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn every_experiment_generates() {
+    let m = manifest();
+    for (kind, id) in experiments::ALL {
+        let r = match *kind {
+            "table" => experiments::run_table(id, Some(&m)),
+            _ => experiments::run_figure(id, Some(&m)),
+        };
+        let tables = r.unwrap_or_else(|e| panic!("{kind} {id} failed: {e:#}"));
+        assert!(!tables.is_empty(), "{kind} {id} produced no tables");
+        for t in &tables {
+            assert!(!t.rows.is_empty(), "{kind} {id}: empty table {}", t.title);
+            // Render both ways without panicking.
+            let _ = t.to_string();
+            let _ = t.to_markdown();
+        }
+    }
+}
+
+#[test]
+fn table8_quantization_ladder_trend() {
+    let m = manifest();
+    let t = experiments::accuracy::table8(&m).unwrap();
+    let row = &t.rows[0];
+    let parse = |s: &str| s.trim_end_matches('%').parse::<f64>().unwrap();
+    let (q97, q53, q31) = (parse(&row[2]), parse(&row[3]), parse(&row[4]));
+    assert!(q97 > 90.0, "Q9.7 should be near software: {q97}");
+    assert!(q53 > 85.0, "Q5.3 should stay high: {q53}");
+    assert!(q31 < q53, "4-bit must degrade: {q31} vs {q53}");
+    assert!(q31 > 15.0, "Q3.1 should beat chance after QAT: {q31}");
+}
+
+#[test]
+fn fig12_rmse_grows_as_precision_shrinks() {
+    let m = manifest();
+    let t = experiments::accuracy::fig12(&m).unwrap();
+    let rmse: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+    // rows are Q9.7, Q5.3, Q3.1
+    assert!(rmse[0] < rmse[1], "RMSE(Q9.7) < RMSE(Q5.3): {rmse:?}");
+    assert!(rmse[1] < rmse[2], "RMSE(Q5.3) < RMSE(Q3.1): {rmse:?}");
+}
+
+#[test]
+fn fig10_prediction_is_correct_digit() {
+    let m = manifest();
+    let tables = experiments::accuracy::fig10_11(&m).unwrap();
+    let note = tables[1].notes.join(" ");
+    assert!(note.contains("predicted 8"), "digit-8 example should classify as 8: {note}");
+}
+
+#[test]
+fn table10_dynamic_trends() {
+    let m = manifest();
+    let t = experiments::dynamic_cfg::table10(&m).unwrap();
+    let spikes: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+    let power: Vec<f64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+    // R/C rows 0..4: spikes monotonically non-increasing as R falls.
+    assert!(spikes[0] >= spikes[1] && spikes[1] >= spikes[2] && spikes[2] >= spikes[3], "{spikes:?}");
+    assert_eq!(spikes[3], 0.0, "R=10MΩ must be silent");
+    // Reset rows 4..7: default spikes most and burns most power.
+    assert!(spikes[4] > spikes[5] && spikes[5] >= spikes[6], "{spikes:?}");
+    assert!(power[4] > power[5], "{power:?}");
+    // Refractory rows 7..9: refractory 5 trims spikes vs 0.
+    assert!(spikes[8] < spikes[7], "{spikes:?}");
+}
+
+#[test]
+fn table11_smnist_is_smallest_and_most_efficient() {
+    let m = manifest();
+    let t = experiments::datasets_exp::table11(&m).unwrap();
+    let lut = |i: usize| t.rows[i][2].trim_end_matches('%').parse::<f64>().unwrap();
+    let ppw = |i: usize| t.rows[i][7].parse::<f64>().unwrap();
+    assert!(lut(0) < lut(1) && lut(0) < lut(2), "smnist smallest");
+    assert!(ppw(0) > ppw(1) && ppw(0) > ppw(2), "smnist most GOPS/W");
+    // accuracy column sane
+    for i in 0..3 {
+        let acc: f64 = t.rows[i][5].trim_end_matches('%').parse().unwrap();
+        assert!(acc > 50.0, "row {i} accuracy {acc}");
+    }
+}
+
+#[test]
+fn table6_utilisation_tracks_paper_within_10pct() {
+    let m = manifest();
+    let t = experiments::resources_exp::table6(&m).unwrap();
+    for row in &t.rows {
+        let ours: f64 = row[4].trim_end_matches('%').parse().unwrap();
+        let paper: f64 = row[5].trim_end_matches('%').parse().unwrap();
+        let err = (ours - paper).abs() / paper;
+        assert!(err < 0.10, "LUT% {ours} vs paper {paper} in {row:?}");
+    }
+}

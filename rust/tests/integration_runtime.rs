@@ -1,0 +1,192 @@
+//! Integration: PJRT runtime × artifacts × cycle-accurate hdl core.
+//!
+//! The strongest correctness statement in the repo: the AOT-compiled HLO
+//! (jax + Pallas, lowered at build time) and the Rust cycle-accurate
+//! simulator must produce **bit-identical** spike counts and per-layer
+//! spike totals on real dataset samples, with the same programmed weights
+//! and control registers. Requires `make artifacts`.
+
+use quantisenc::config::ModelConfig;
+use quantisenc::datasets::{Dataset, Split};
+use quantisenc::fixed::QSpec;
+use quantisenc::hdl::Core;
+use quantisenc::runtime::{artifacts::Manifest, Runtime};
+
+fn manifest() -> Manifest {
+    Manifest::load(&quantisenc::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_all_models() {
+    let m = manifest();
+    let ds = m.datasets();
+    for want in ["smnist", "dvs", "shd"] {
+        assert!(ds.contains(&want.to_string()), "{want} missing from manifest");
+    }
+    assert!(m.variants("smnist").unwrap().contains(&"Q5.3".to_string()));
+}
+
+#[test]
+fn pjrt_loads_and_runs_smnist() {
+    let m = manifest();
+    let art = m.model("smnist", "Q5.3").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_model(&art).unwrap();
+
+    let sample = Dataset::Smnist.sample(0, Split::Test, art.t_steps);
+    let out = exe.run(&sample.spikes).unwrap();
+    assert_eq!(out.counts.len(), 10);
+    assert!(out.counts.iter().sum::<i32>() > 0, "output layer silent");
+}
+
+#[test]
+fn hlo_and_hdl_core_are_bitexact() {
+    let m = manifest();
+    let art = m.model("smnist", "Q5.3").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_model(&art).unwrap();
+
+    let config = ModelConfig::parse_arch(
+        &art.sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("x"),
+        QSpec::parse(&art.qname).unwrap(),
+    )
+    .unwrap();
+    let mut core = Core::new(config);
+    core.load_weights(&art.weights).unwrap();
+    for (addr, &v) in art.default_regs.iter().enumerate() {
+        core.registers.write(addr, v).unwrap();
+    }
+
+    for i in 0..5u64 {
+        let sample = Dataset::Smnist.sample(i, Split::Test, art.t_steps);
+        let hlo = exe.run(&sample.spikes).unwrap();
+        let hdl = core.run(&sample);
+        let hdl_counts: Vec<i32> = hdl.counts.iter().map(|&c| c as i32).collect();
+        assert_eq!(hlo.counts, hdl_counts, "sample {i}: counts diverge");
+        let hdl_layer: Vec<i32> = hdl.layer_spikes.iter().map(|&c| c as i32).collect();
+        assert_eq!(hlo.layer_spikes, hdl_layer, "sample {i}: layer totals diverge");
+    }
+}
+
+#[test]
+fn quantized_accuracy_beats_chance_and_tracks_float() {
+    let m = manifest();
+    let art = m.model("smnist", "Q5.3").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_model(&art).unwrap();
+
+    let n = 60;
+    let mut correct = 0;
+    for i in 0..n {
+        let s = Dataset::Smnist.sample(i, Split::Test, art.t_steps);
+        if exe.run(&s.spikes).unwrap().prediction == s.label {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.6, "quantized accuracy {acc} too low (float was {})", art.float_acc);
+    assert!(acc <= art.float_acc + 0.15, "quantized can't beat float by much");
+}
+
+#[test]
+fn quantization_ladder_q97_at_least_q31() {
+    // Table VIII ordering: Q9.7 ≥ Q5.3 ≥ Q3.1 accuracy (weak form ≥ with
+    // small-sample slack handled by using the same 60 samples).
+    let m = manifest();
+    let rt = Runtime::cpu().unwrap();
+    let mut accs = std::collections::BTreeMap::new();
+    for q in ["Q9.7", "Q5.3", "Q3.1"] {
+        let art = m.model("smnist", q).unwrap();
+        let exe = rt.load_model(&art).unwrap();
+        let n = 60;
+        let mut correct = 0;
+        for i in 0..n {
+            let s = Dataset::Smnist.sample(i, Split::Test, art.t_steps);
+            if exe.run(&s.spikes).unwrap().prediction == s.label {
+                correct += 1;
+            }
+        }
+        accs.insert(q, correct as f64 / n as f64);
+    }
+    assert!(
+        accs["Q9.7"] + 0.05 >= accs["Q3.1"],
+        "higher precision should not lose badly: {accs:?}"
+    );
+}
+
+#[test]
+fn lif_step_kernel_artifact_matches_hdl_layer() {
+    use quantisenc::config::registers::RegisterFile;
+    use quantisenc::config::{LayerConfig, MemKind, Topology};
+    use quantisenc::datasets::rng::XorShift64Star;
+    use quantisenc::fixed::Q5_3;
+    use quantisenc::hdl::Layer;
+
+    let m = manifest();
+    let path = m.kernel_hlo_path("lif_step_Q53").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.compile_hlo_file(&path).unwrap();
+
+    // Random single-step case, 256 -> 128 (the artifact's baked shape).
+    let mut rng = XorShift64Star::new(0x99);
+    let (mm, nn) = (256usize, 128usize);
+    let weights: Vec<i32> = (0..mm * nn).map(|_| rng.below(256) as i32 - 128).collect();
+    let spikes: Vec<i32> = (0..mm).map(|_| (rng.uniform() < 0.3) as i32).collect();
+    let vmem: Vec<i32> = (0..nn).map(|_| rng.below(256) as i32 - 128).collect();
+    let refc: Vec<i32> = (0..nn).map(|_| rng.below(3) as i32).collect();
+    let regs = RegisterFile::new(Q5_3);
+    let regs_v: Vec<i32> = regs.vector().to_vec();
+
+    let args = [
+        xla::Literal::vec1(&spikes),
+        xla::Literal::vec1(&weights).reshape(&[mm as i64, nn as i64]).unwrap(),
+        xla::Literal::vec1(&vmem),
+        xla::Literal::vec1(&refc),
+        xla::Literal::vec1(&regs_v),
+    ];
+    let arg_refs: Vec<&xla::Literal> = args.iter().collect();
+    let result = exe.execute::<&xla::Literal>(&arg_refs).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let tup = result.to_tuple().unwrap();
+    let hlo_spikes = tup[0].to_vec::<i32>().unwrap();
+    let hlo_vmem = tup[1].to_vec::<i32>().unwrap();
+    let hlo_ref = tup[2].to_vec::<i32>().unwrap();
+
+    // hdl layer with the same state.
+    let cfg = LayerConfig { fan_in: mm, neurons: nn, topology: Topology::AllToAll };
+    let mut layer = Layer::new(&cfg, Q5_3, MemKind::Bram);
+    layer.memory_mut().load_dense(&weights).unwrap();
+    // Seed neuron state by direct construction: run a custom step.
+    // (Layer starts at rest; to match arbitrary vmem/refcnt we use the
+    // neuron API through a fresh layer is not enough — so instead compare
+    // through the rest state: zero vmem/refcnt.)
+    let spikes_u8: Vec<u8> = spikes.iter().map(|&x| x as u8).collect();
+    // Re-run HLO with rest state for the apples-to-apples comparison.
+    let zero = vec![0i32; nn];
+    let args2 = [
+        xla::Literal::vec1(&spikes),
+        xla::Literal::vec1(&weights).reshape(&[mm as i64, nn as i64]).unwrap(),
+        xla::Literal::vec1(&zero),
+        xla::Literal::vec1(&zero),
+        xla::Literal::vec1(&regs_v),
+    ];
+    let arg_refs2: Vec<&xla::Literal> = args2.iter().collect();
+    let r2 = exe.execute::<&xla::Literal>(&arg_refs2).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let tup2 = r2.to_tuple().unwrap();
+    let hlo_spikes0 = tup2[0].to_vec::<i32>().unwrap();
+    let hlo_vmem0 = tup2[1].to_vec::<i32>().unwrap();
+
+    let mut out = Vec::new();
+    layer.step_regs(&spikes_u8, &mut out, &regs);
+    let hdl_spikes: Vec<i32> = out.iter().map(|&s| s as i32).collect();
+    assert_eq!(hlo_spikes0, hdl_spikes, "single-step kernel vs hdl layer");
+    assert_eq!(hlo_vmem0, layer.vmem());
+
+    // And the arbitrary-state outputs at least have the right arity.
+    assert_eq!(hlo_spikes.len(), nn);
+    assert_eq!(hlo_vmem.len(), nn);
+    assert_eq!(hlo_ref.len(), nn);
+}

@@ -1,0 +1,246 @@
+//! Property tests over coordinator/core invariants (hand-rolled generators
+//! driven by the repo's xorshift PRNG — proptest is unavailable offline;
+//! each property runs across many randomized cases with printed seeds so
+//! failures are reproducible).
+
+use quantisenc::config::registers::{RegisterFile, ResetMode, NUM_REGS, REG_REFRACTORY, REG_RESET_MODE};
+use quantisenc::config::{ModelConfig, Topology};
+use quantisenc::coordinator::multicore::MultiCore;
+use quantisenc::coordinator::pipeline::run_pipelined;
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::Sample;
+use quantisenc::fixed::{QSpec, Q2_2, Q5_3, Q9_7};
+use quantisenc::hdl::{aer, Core};
+
+fn random_config(rng: &mut XorShift64Star) -> ModelConfig {
+    let qs = [Q2_2, Q5_3, Q9_7][rng.below(3) as usize];
+    let n_layers = 1 + rng.below(3) as usize;
+    let mut sizes = vec![4 + rng.below(28) as usize];
+    for _ in 0..n_layers {
+        sizes.push(2 + rng.below(24) as usize);
+    }
+    ModelConfig::new(&sizes, qs).unwrap()
+}
+
+fn random_weights(cfg: &ModelConfig, rng: &mut XorShift64Star) -> Vec<Vec<i32>> {
+    cfg.layers()
+        .iter()
+        .map(|l| {
+            let lim = cfg.qspec.max_raw().min(127) as u64;
+            (0..l.fan_in * l.neurons)
+                .map(|_| (rng.below(2 * lim + 1) as i32) - lim as i32)
+                .collect()
+        })
+        .collect()
+}
+
+fn random_samples(cfg: &ModelConfig, rng: &mut XorShift64Star, count: usize) -> Vec<Sample> {
+    (0..count)
+        .map(|_| {
+            let t_steps = 1 + rng.below(12) as usize;
+            let inputs = cfg.inputs();
+            let spikes = (0..t_steps * inputs).map(|_| (rng.uniform() < 0.3) as u8).collect();
+            Sample { spikes, t_steps, inputs, label: 0 }
+        })
+        .collect()
+}
+
+/// Pipelined scheduling must never change results, for any topology/shape.
+#[test]
+fn prop_pipeline_equals_sequential() {
+    let mut rng = XorShift64Star::new(0x5EED_01);
+    for case in 0..15 {
+        let cfg = random_config(&mut rng);
+        let weights = random_weights(&cfg, &mut rng);
+        let n_samples = 1 + rng.below(5) as usize;
+        let samples = random_samples(&cfg, &mut rng, n_samples);
+        let mut regs = RegisterFile::new(cfg.qspec);
+        regs.write(REG_RESET_MODE, rng.below(4) as i32).unwrap();
+        regs.write(REG_REFRACTORY, rng.below(4) as i32).unwrap();
+
+        let piped = run_pipelined(&cfg, &weights, &regs, &samples).unwrap();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs;
+        for (i, s) in samples.iter().enumerate() {
+            let seq = core.run(s);
+            assert_eq!(piped[i].counts, seq.counts, "case {case} ({}) stream {i}", cfg.arch_name());
+        }
+    }
+}
+
+/// Multicore batch sharding must be order- and core-count-invariant.
+#[test]
+fn prop_multicore_core_count_invariant() {
+    let mut rng = XorShift64Star::new(0x5EED_02);
+    for case in 0..8 {
+        let cfg = random_config(&mut rng);
+        let weights = random_weights(&cfg, &mut rng);
+        let samples = random_samples(&cfg, &mut rng, 6);
+        let regs = RegisterFile::new(cfg.qspec);
+        let base = MultiCore::new(&cfg, &weights, &regs, 1).unwrap().run_batch(&samples);
+        for cores in [2usize, 3, 5] {
+            let out = MultiCore::new(&cfg, &weights, &regs, cores).unwrap().run_batch(&samples);
+            for (a, b) in base.iter().zip(&out) {
+                assert_eq!(a.counts, b.counts, "case {case} cores {cores}");
+            }
+        }
+    }
+}
+
+/// AER encode/decode round-trips any binary spike matrix.
+#[test]
+fn prop_aer_roundtrip() {
+    let mut rng = XorShift64Star::new(0x5EED_03);
+    for _ in 0..50 {
+        let t = 1 + rng.below(20) as usize;
+        let w = 1 + rng.below(60) as usize;
+        let spikes: Vec<u8> = (0..t * w).map(|_| (rng.uniform() < 0.25) as u8).collect();
+        let events = aer::encode(&spikes, t, w);
+        assert_eq!(aer::decode(&events, t, w).unwrap(), spikes);
+    }
+}
+
+/// Core state is fully reset between runs: repeated runs are idempotent,
+/// for every reset mode and refractory setting.
+#[test]
+fn prop_run_idempotent_across_register_settings() {
+    let mut rng = XorShift64Star::new(0x5EED_04);
+    for _ in 0..10 {
+        let cfg = random_config(&mut rng);
+        let weights = random_weights(&cfg, &mut rng);
+        let samples = random_samples(&cfg, &mut rng, 1);
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        for mode in ResetMode::all() {
+            core.registers.set_reset_mode(mode).unwrap();
+            let a = core.run(&samples[0]);
+            let b = core.run(&samples[0]);
+            assert_eq!(a.counts, b.counts, "{mode:?}");
+            assert_eq!(a.stats, b.stats, "{mode:?}");
+        }
+    }
+}
+
+/// Raising Vth can only reduce (or keep) total spikes; zero input ⇒ silence.
+#[test]
+fn prop_vth_monotone_and_silence() {
+    let mut rng = XorShift64Star::new(0x5EED_05);
+    for _ in 0..10 {
+        let cfg = random_config(&mut rng);
+        let weights = random_weights(&cfg, &mut rng);
+        let sample = &random_samples(&cfg, &mut rng, 1)[0];
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        let mut prev = u64::MAX;
+        let max_v = cfg.qspec.to_float(cfg.qspec.max_raw());
+        for frac in [0.1, 0.4, 0.9] {
+            core.registers.set_vth(max_v * frac).unwrap();
+            let r = core.run(sample);
+            assert!(r.stats.spikes <= prev, "spikes must fall as Vth rises");
+            prev = r.stats.spikes;
+        }
+        let silent = Sample {
+            spikes: vec![0; sample.spikes.len()],
+            t_steps: sample.t_steps,
+            inputs: sample.inputs,
+            label: 0,
+        };
+        assert_eq!(core.run(&silent).stats.spikes, 0);
+    }
+}
+
+/// Activity accounting is conserved: gated + active synaptic slots equal
+/// (synapse-slots per step) × steps for all-to-all layers.
+#[test]
+fn prop_activity_conservation() {
+    let mut rng = XorShift64Star::new(0x5EED_06);
+    for _ in 0..10 {
+        let cfg = random_config(&mut rng);
+        let weights = random_weights(&cfg, &mut rng);
+        let sample = &random_samples(&cfg, &mut rng, 1)[0];
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        let r = core.run(sample);
+        let slots_per_step: u64 = cfg
+            .layers()
+            .iter()
+            .map(|l| (l.fan_in * l.neurons) as u64)
+            .sum();
+        assert_eq!(
+            r.stats.synaptic_ops + r.stats.gated_ops,
+            slots_per_step * sample.t_steps as u64
+        );
+        assert_eq!(r.stats.neuron_updates, cfg.compute_neurons() as u64 * sample.t_steps as u64);
+    }
+}
+
+/// Register file rejects every out-of-domain write and never partially
+/// applies one (failure injection across the whole address space).
+#[test]
+fn prop_register_file_rejects_cleanly() {
+    let mut rng = XorShift64Star::new(0x5EED_07);
+    for qs in [Q2_2, Q5_3, Q9_7] {
+        let mut rf = RegisterFile::new(qs);
+        let snapshot = rf.vector();
+        let mut rejected = 0;
+        for _ in 0..200 {
+            let addr = rng.below(10) as usize;
+            let val = (rng.next_u64() as i32) % 100_000;
+            let before = rf.vector();
+            if rf.write(addr, val).is_err() {
+                rejected += 1;
+                assert_eq!(rf.vector(), before, "failed write must not mutate");
+            }
+        }
+        assert!(rejected > 0, "generator never produced an invalid write");
+        // defaults still parseable as a valid configuration
+        assert!(ResetMode::from_i32(snapshot[4]).is_some());
+        let _ = snapshot;
+    }
+}
+
+/// One-to-one and gaussian cores never spike wider than their connectivity
+/// allows: a one-to-one layer's output spikes are bounded by its input's.
+#[test]
+fn prop_one_to_one_locality() {
+    let mut rng = XorShift64Star::new(0x5EED_08);
+    for _ in 0..10 {
+        let n = 4 + rng.below(20) as usize;
+        let cfg = ModelConfig::with_topologies(&[n, n], &[Topology::OneToOne], Q5_3).unwrap();
+        let mut core = Core::new(cfg.clone());
+        // Strong positive diagonal weights.
+        for i in 0..n {
+            core.layer_mut(0)
+                .memory_mut()
+                .write(i, i, Q5_3.from_float(2.0))
+                .unwrap();
+        }
+        let t_steps = 5;
+        let spikes: Vec<u8> = (0..t_steps * n).map(|_| (rng.uniform() < 0.5) as u8).collect();
+        let sample = Sample { spikes: spikes.clone(), t_steps, inputs: n, label: 0 };
+        let r = core.run(&sample);
+        // Neuron j can only spike if input j ever spiked.
+        for j in 0..n {
+            let input_ever: bool = (0..t_steps).any(|t| spikes[t * n + j] != 0);
+            if !input_ever {
+                // count output spikes of neuron j by rerunning trace
+                assert_eq!(r.counts[j] == 0, true, "neuron {j} spiked without input");
+            }
+        }
+    }
+}
+
+/// QSpec parse/name round-trips for every legal (n, q).
+#[test]
+fn prop_qspec_roundtrip_exhaustive() {
+    for n in 1u8..=32 {
+        for q in 0u8..=31 {
+            if (n as u32 + q as u32) <= 32 {
+                let qs = QSpec::new(n, q).unwrap();
+                assert_eq!(QSpec::parse(&qs.name()).unwrap(), qs);
+                assert_eq!(NUM_REGS, 6);
+            }
+        }
+    }
+}
