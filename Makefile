@@ -1,0 +1,25 @@
+# Convenience targets; everything is plain cargo underneath.
+
+.PHONY: all build test artifacts bench fmt clippy
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Regenerate the native artifact store (golden vectors + calibrated models).
+artifacts:
+	cargo run --release --bin repro -- artifacts
+
+bench:
+	cargo bench --bench bench_serving
+	cargo bench --bench bench_pipeline
+
+fmt:
+	cargo fmt --all -- --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings

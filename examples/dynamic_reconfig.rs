@@ -13,7 +13,7 @@ use quantisenc::hwmodel::power;
 use quantisenc::runtime::artifacts::Manifest;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load(&quantisenc::artifacts_dir())?;
+    let manifest = Manifest::load(&quantisenc::golden::ensure_artifacts()?)?;
     let art = manifest.model("smnist", "Q5.3")?;
     println!("deployed core: smnist Q5.3 — sweeping dynamic registers (weights untouched)\n");
     println!(

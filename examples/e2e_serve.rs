@@ -1,94 +1,88 @@
-//! End-to-end driver — the full three-layer stack on a real workload.
+//! End-to-end driver — the full native stack on a real workload.
 //!
-//! Pipeline proven here (run recorded in EXPERIMENTS.md):
+//! Pipeline proven here:
 //!
-//!   1. build-time (already done by `make artifacts`): JAX trains the SNN
-//!      with surrogate gradients on the synthetic spiking-MNIST set (loss
-//!      curve in artifacts/train_log_smnist.json), quantizes the weights to
-//!      Qn.q, lowers the Pallas-kernel forward to HLO text;
-//!   2. this binary (pure Rust, no Python): loads the artifact, compiles it
-//!      on the PJRT CPU client, serves batched requests, reports accuracy +
-//!      latency/throughput;
-//!   3. cross-checks the PJRT results bit-for-bit against the
-//!      cycle-accurate hdl core, and reports modelled hardware power from
-//!      the measured spike activity.
+//!   1. artifact bootstrap (pure Rust, no Python): the native calibrator in
+//!      `quantisenc::golden` synthesizes matched-filter weights from the
+//!      synthetic spiking-MNIST generator, fits the ridge readout, quantizes
+//!      to Qn.q, and writes the manifest + weight files;
+//!   2. this binary serves batched requests through the unified
+//!      `ServingEngine` (C sharded cores × per-layer pipelined stages with
+//!      bounded channels) and reports accuracy + latency/throughput;
+//!   3. cross-checks the engine's results bit-for-bit against the
+//!      sequential cycle-accurate `hdl::Core`, and reports modelled
+//!      hardware power from the measured spike activity.
 //!
 //! ```bash
-//! cargo run --release --example e2e_serve [n_requests]
+//! cargo run --release --example e2e_serve [n_requests] [cores]
 //! ```
 
 use std::time::Instant;
 
-use quantisenc::coordinator::metrics::Telemetry;
+use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
 use quantisenc::datasets::{Dataset, Split};
 use quantisenc::experiments;
 use quantisenc::hwmodel::power;
-use quantisenc::runtime::{artifacts::Manifest, Runtime};
-use quantisenc::util::json::Json;
+use quantisenc::runtime::artifacts::Manifest;
 
 fn main() -> anyhow::Result<()> {
     let n: u64 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let cores: usize = std::env::args().nth(2).map(|s| s.parse()).transpose()?.unwrap_or(4);
 
-    // --- Load the AOT artifact (trained + lowered at build time).
-    let manifest = Manifest::load(&quantisenc::artifacts_dir())?;
+    // --- Bootstrap + load the artifact store (generated natively on first run).
+    let manifest = Manifest::load(&quantisenc::golden::ensure_artifacts()?)?;
     let art = manifest.model("smnist", "Q5.3")?;
     println!(
-        "model: smnist {} {} (float acc at train time: {:.1}%)",
+        "model: smnist {} {} (float reference accuracy: {:.1}%)",
         art.sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("x"),
         art.qname,
         100.0 * art.float_acc
     );
-    // Show the training loss curve (logged by the L2 trainer).
-    if let Ok(log) = manifest.golden("train_log_smnist.json") {
-        if let (Some(losses), Some(accs)) = (log.get("loss"), log.get("eval_acc")) {
-            let l = losses.num_vec().unwrap_or_default();
-            let a = accs.num_vec().unwrap_or_default();
-            println!(
-                "training: {} steps, loss {:.3} -> {:.3}, eval acc {:?}",
-                l.len(),
-                l.first().unwrap_or(&0.0),
-                l.last().unwrap_or(&0.0),
-                a.iter().map(|x| format!("{:.1}%", 100.0 * x)).collect::<Vec<_>>()
-            );
-        }
-        let _ = Json::Null; // (silence unused-import paths on older rustc)
-    }
 
-    // --- Serve over the PJRT request path.
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let exe = rt.load_model(&art)?;
+    // --- Serve the batch through the ServingEngine.
+    let (config, core) = experiments::core_from_artifact(&art)?;
+    let mut engine = ServingEngine::new(
+        &config,
+        &art.weights,
+        &core.registers,
+        ServingOptions::with_cores(cores),
+    )?;
+    let samples: Vec<_> =
+        (0..n).map(|i| Dataset::Smnist.sample(i, Split::Test, art.t_steps)).collect();
 
-    let mut tel = Telemetry::new();
-    tel.start();
-    let mut predictions = Vec::with_capacity(n as usize);
-    for i in 0..n {
-        let s = Dataset::Smnist.sample(i, Split::Test, art.t_steps);
-        let t0 = Instant::now();
-        let out = exe.run(&s.spikes)?;
-        tel.record(t0.elapsed(), &Default::default(), Some(out.prediction == s.label));
-        predictions.push(out);
-    }
-    tel.stop();
-    println!("PJRT serving: {}", tel.summary());
+    let t0 = Instant::now();
+    let results = engine.run_batch(&samples)?;
+    let wall = t0.elapsed();
+    let correct = results.iter().zip(&samples).filter(|(r, s)| r.prediction == s.label).count();
+    // The engine is a batch API, so only batch-level wall clock is honest
+    // here; per-request latency percentiles belong to the per-request paths
+    // (`repro serve --multicore` records them via Telemetry).
+    println!(
+        "serving-engine ({} cores): {} requests in {:.2?} ({:.1}/s), accuracy {:.1}%",
+        engine.num_cores(),
+        results.len(),
+        wall,
+        results.len() as f64 / wall.as_secs_f64(),
+        100.0 * correct as f64 / results.len().max(1) as f64
+    );
 
-    // --- Cross-check a subset on the cycle-accurate core (bit-exactness)
-    //     and extract activity for the hardware power model.
-    let (config, mut core) = experiments::core_from_artifact(&art)?;
+    // --- Cross-check a subset on the sequential cycle-accurate core
+    //     (bit-exactness) and extract activity for the hardware power model.
+    let (_, mut seq_core) = experiments::core_from_artifact(&art)?;
     let mut stats = quantisenc::hdl::ActivityStats::default();
-    for i in 0..20u64 {
-        let s = Dataset::Smnist.sample(i, Split::Test, art.t_steps);
-        let r = core.run(&s);
-        let pjrt_counts: Vec<u32> = predictions[i as usize].counts.iter().map(|&c| c as u32).collect();
+    let check = 20.min(samples.len());
+    for (i, sample) in samples.iter().take(check).enumerate() {
+        let r = seq_core.run(sample);
         anyhow::ensure!(
-            r.counts == pjrt_counts,
-            "sample {i}: hdl {:?} != pjrt {:?}",
+            r.counts == results[i].counts,
+            "sample {i}: sequential {:?} != engine {:?}",
             r.counts,
-            pjrt_counts
+            results[i].counts
         );
+        anyhow::ensure!(r.prediction == results[i].prediction, "sample {i}: prediction diverged");
         stats.add(&r.stats);
     }
-    println!("hdl cross-check: 20/20 samples bit-exact with the PJRT path");
+    println!("hdl cross-check: {check}/{check} samples bit-exact with the sequential core");
     println!(
         "measured activity: {:.3} spikes/neuron/step, {:.0}% synaptic slots gated",
         stats.spike_rate(),

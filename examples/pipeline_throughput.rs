@@ -19,7 +19,7 @@ use quantisenc::runtime::artifacts::Manifest;
 
 fn main() -> anyhow::Result<()> {
     let n: u64 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(64);
-    let manifest = Manifest::load(&quantisenc::artifacts_dir())?;
+    let manifest = Manifest::load(&quantisenc::golden::ensure_artifacts()?)?;
     let art = manifest.model("smnist", "Q5.3")?;
     let (config, mut core) = core_from_artifact(&art)?;
     let samples: Vec<_> =

@@ -1,0 +1,60 @@
+//! Bench: the unified `ServingEngine` — throughput scaling with core count
+//! on the Table VI baseline architecture, with results asserted bit-identical
+//! to the sequential cycle-accurate core every round.
+
+use quantisenc::config::registers::RegisterFile;
+use quantisenc::config::ModelConfig;
+use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::{Dataset, Split};
+use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::Core;
+use quantisenc::util::bench::quick;
+
+fn main() {
+    println!("== bench_serving (ServingEngine scaling) ==");
+    let cfg = ModelConfig::parse_arch("256x128x10", Q5_3).unwrap();
+    let mut rng = XorShift64Star::new(0x5E_11);
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(255) as i32 - 127).collect())
+        .collect();
+    let regs = RegisterFile::new(Q5_3);
+    let samples: Vec<_> = (0..32u64).map(|i| Dataset::Smnist.sample(i, Split::Test, 40)).collect();
+
+    // Sequential reference (baseline + determinism oracle).
+    let mut core = Core::new(cfg.clone());
+    core.load_weights(&weights).unwrap();
+    core.registers = regs.clone();
+    let reference: Vec<_> = samples.iter().map(|s| core.run(s)).collect();
+    let seq = quick("sequential_core/32_streams_T40", || {
+        for s in &samples {
+            std::hint::black_box(core.run(s));
+        }
+    });
+
+    let mut throughputs = Vec::new();
+    for cores in [1usize, 2, 4, 8] {
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(cores)).unwrap();
+        // Determinism gate: every engine configuration must match the
+        // sequential core bit-for-bit before it is allowed on the chart.
+        let out = engine.run_batch(&samples).unwrap();
+        for (i, (r, want)) in out.iter().zip(&reference).enumerate() {
+            assert_eq!(r.counts, want.counts, "cores={cores} sample {i} diverged");
+            assert_eq!(r.prediction, want.prediction, "cores={cores} sample {i}");
+        }
+        let r = quick(&format!("serving_engine/{cores}_cores_32_streams_T40"), || {
+            std::hint::black_box(engine.run_batch(std::hint::black_box(&samples)).unwrap());
+        });
+        throughputs.push((cores, r.per_sec() * samples.len() as f64));
+    }
+
+    println!("\nbit-exactness: all core counts identical to the sequential core");
+    println!("throughput scaling (streams/sec, batch of {}):", samples.len());
+    println!("  sequential: {:>10.1}", seq.per_sec() * samples.len() as f64);
+    for (cores, tput) in &throughputs {
+        println!("  {cores} cores:    {tput:>10.1}");
+    }
+}

@@ -58,17 +58,37 @@ impl LayerConfig {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ConfigError {
-    #[error("need at least input + one layer, got {0} sizes")]
     TooFewLayers(usize),
-    #[error("layer {layer}: {source}")]
     Topology {
         layer: usize,
         source: super::topology::TopologyError,
     },
-    #[error("cannot parse architecture {0:?} (expected e.g. \"256x128x10\")")]
     Parse(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::TooFewLayers(n) => {
+                write!(f, "need at least input + one layer, got {n} sizes")
+            }
+            ConfigError::Topology { layer, source } => write!(f, "layer {layer}: {source}"),
+            ConfigError::Parse(s) => {
+                write!(f, "cannot parse architecture {s:?} (expected e.g. \"256x128x10\")")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Topology { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 /// A full core configuration, e.g. `256x128x10` at Q5.3 with BRAM memory.

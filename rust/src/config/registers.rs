@@ -58,17 +58,32 @@ impl ResetMode {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum RegisterError {
-    #[error("register address {0} out of range (decoder has {NUM_REGS} registers)")]
     BadAddress(usize),
-    #[error("invalid reset mode encoding {0}")]
     BadResetMode(i32),
-    #[error("refractory period must be >= 0, got {0}")]
     BadRefractory(i32),
-    #[error("register value {value} does not fit {q} (raw range [{min}, {max}])")]
     OutOfRange { value: i32, q: String, min: i32, max: i32 },
 }
+
+impl std::fmt::Display for RegisterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegisterError::BadAddress(a) => {
+                write!(f, "register address {a} out of range (decoder has {NUM_REGS} registers)")
+            }
+            RegisterError::BadResetMode(m) => write!(f, "invalid reset mode encoding {m}"),
+            RegisterError::BadRefractory(r) => {
+                write!(f, "refractory period must be >= 0, got {r}")
+            }
+            RegisterError::OutOfRange { value, q, min, max } => {
+                write!(f, "register value {value} does not fit {q} (raw range [{min}, {max}])")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegisterError {}
 
 /// The decoder's control-register file for one core.
 ///

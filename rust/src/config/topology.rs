@@ -15,13 +15,24 @@ pub enum Topology {
     Gaussian { radius: u32 },
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum TopologyError {
-    #[error("bad layer shape {m}x{n}")]
     BadShape { m: usize, n: usize },
-    #[error("one_to_one needs M == N, got {m} != {n}")]
     NotSquare { m: usize, n: usize },
 }
+
+impl std::fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TopologyError::BadShape { m, n } => write!(f, "bad layer shape {m}x{n}"),
+            TopologyError::NotSquare { m, n } => {
+                write!(f, "one_to_one needs M == N, got {m} != {n}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
 
 impl Topology {
     pub fn parse(s: &str) -> Option<Topology> {

@@ -8,6 +8,9 @@
 //!   cycle schedule (Eq. 11 real-time performance) plus a thread-based
 //!   streaming executor that overlaps layer processing across streams.
 //! * [`multicore`] — batch-level parallelism across QUANTISENC cores.
+//! * [`serving`] — the unified production request path: C sharded cores ×
+//!   per-layer pipelined stages with bounded channels, batch admission,
+//!   backpressure, and in-order results ([`serving::ServingEngine`]).
 //! * [`metrics`] — request-path telemetry (latency percentiles, throughput,
 //!   spike/power accounting).
 
@@ -15,3 +18,4 @@ pub mod interface;
 pub mod metrics;
 pub mod multicore;
 pub mod pipeline;
+pub mod serving;

@@ -23,8 +23,8 @@ use std::sync::mpsc;
 use crate::config::registers::RegisterFile;
 use crate::config::ModelConfig;
 use crate::datasets::Sample;
-use crate::hdl::core::argmax;
-use crate::hdl::layer::Layer;
+
+use super::serving::{build_layers, collector_loop, stage_loop, StageMsg};
 
 /// Analytic pipeline schedule — Eq. 11 and the Fig. 8 timing diagram.
 #[derive(Debug, Clone, Copy)]
@@ -100,91 +100,29 @@ pub fn run_pipelined(
     regs: &RegisterFile,
     samples: &[Sample],
 ) -> anyhow::Result<Vec<StreamResult>> {
-    enum Msg {
-        Step { stream: usize, spikes: Vec<u8> },
-        Flush { stream: usize },
-    }
-
-    let n_layers = config.num_layers();
-    anyhow::ensure!(weights.len() == n_layers, "weights arity");
     // Build the per-stage layers up front (programming weights via wt_in).
-    let mut layers: Vec<Layer> = config
-        .layers()
-        .iter()
-        .map(|l| Layer::new(l, config.qspec, config.mem))
-        .collect();
-    for (layer, w) in layers.iter_mut().zip(weights) {
-        layer.memory_mut().load_dense(w)?;
-    }
-
+    let layers = build_layers(config, weights)?;
     let n_out = config.outputs();
     std::thread::scope(|scope| {
         // Channel chain: injector -> stage 0 -> … -> stage K-1 -> collector.
-        let mut senders = Vec::new();
-        let mut receivers = Vec::new();
-        for _ in 0..=n_layers {
-            let (tx, rx) = mpsc::sync_channel::<Msg>(64);
-            senders.push(tx);
-            receivers.push(rx);
+        // Stage and collector bodies are the serving-engine primitives; this
+        // function only adds the scoped one-batch wiring around them.
+        let (injector, mut chain_rx) = mpsc::sync_channel::<StageMsg>(64);
+        for layer in layers {
+            let (tx, next_rx) = mpsc::sync_channel::<StageMsg>(64);
+            let stage_regs = regs.clone();
+            let rx = std::mem::replace(&mut chain_rx, next_rx);
+            scope.spawn(move || stage_loop(layer, stage_regs, rx, tx));
         }
-        let injector = senders.remove(0);
-        // Stages own their layer; receivers/senders pair off.
-        let mut stage_rx = receivers;
-        let collector_rx = stage_rx.pop().unwrap();
-        for (layer, rx) in layers.into_iter().zip(stage_rx) {
-            let tx = senders.remove(0);
-            let regs = regs.clone();
-            scope.spawn(move || {
-                let mut layer = layer;
-                let mut out = Vec::new();
-                for msg in rx {
-                    match msg {
-                        Msg::Step { stream, spikes } => {
-                            layer.step_regs(&spikes, &mut out, &regs);
-                            if tx.send(Msg::Step { stream, spikes: out.clone() }).is_err() {
-                                return;
-                            }
-                        }
-                        Msg::Flush { stream } => {
-                            // Fig. 8 settle: membranes back to rest.
-                            layer.reset();
-                            if tx.send(Msg::Flush { stream }).is_err() {
-                                return;
-                            }
-                        }
-                    }
-                }
-            });
-        }
+        let collector_rx = chain_rx;
 
         // Collector accumulates output-layer spike counts per stream.
         let collector = scope.spawn(move || {
             let mut results: Vec<StreamResult> = Vec::new();
-            let mut counts = vec![0u32; n_out];
-            let mut spikes_total = 0u64;
-            let mut current = usize::MAX;
-            for msg in collector_rx {
-                match msg {
-                    Msg::Step { stream, spikes } => {
-                        current = stream;
-                        for (c, &s) in counts.iter_mut().zip(&spikes) {
-                            *c += s as u32;
-                            spikes_total += s as u64;
-                        }
-                    }
-                    Msg::Flush { stream } => {
-                        debug_assert!(current == usize::MAX || current == stream);
-                        results.push(StreamResult {
-                            stream_id: stream,
-                            prediction: argmax(&counts),
-                            counts: std::mem::replace(&mut counts, vec![0u32; n_out]),
-                            spikes_total,
-                        });
-                        spikes_total = 0;
-                        current = usize::MAX;
-                    }
-                }
-            }
+            collector_loop(n_out, collector_rx, |r| {
+                results.push(r);
+                true
+            });
             results
         });
 
@@ -193,11 +131,11 @@ pub fn run_pipelined(
         for (stream, sample) in samples.iter().enumerate() {
             for t in 0..sample.t_steps {
                 injector
-                    .send(Msg::Step { stream, spikes: sample.step(t).to_vec() })
+                    .send(StageMsg::Step { stream, spikes: sample.step(t).to_vec() })
                     .map_err(|_| anyhow::anyhow!("pipeline stage died"))?;
             }
             injector
-                .send(Msg::Flush { stream })
+                .send(StageMsg::Flush { stream })
                 .map_err(|_| anyhow::anyhow!("pipeline stage died"))?;
         }
         drop(injector);
@@ -218,6 +156,20 @@ mod tests {
         assert!((m.pipelined_fps() - 41.67).abs() < 0.01, "{}", m.pipelined_fps());
         assert!((m.dataflow_fps() - 31.25).abs() < 0.01, "{}", m.dataflow_fps());
         assert!((m.speedup() - 4.0 / 3.0).abs() < 1e-6, "33.3% improvement");
+    }
+
+    #[test]
+    fn paper_numbers_to_three_decimals() {
+        // §VI-G / Eq. 11 at the paper's operating point, pinned to three
+        // decimal places: 1/(0.020 + 4/1000) = 41.667 fps pipelined vs
+        // 1/(0.020 + 3·4/1000) = 31.250 fps for the dataflow baseline [30].
+        let m = ScheduleModel::paper_baseline();
+        assert!((m.pipelined_fps() - 41.667).abs() < 5e-4, "{}", m.pipelined_fps());
+        assert!((m.dataflow_fps() - 31.250).abs() < 5e-4, "{}", m.dataflow_fps());
+        // Eq. 11 algebraic identity: fps == 1 / initiation interval.
+        assert!((m.pipelined_fps() * m.initiation_interval_s() - 1.0).abs() < 1e-12);
+        // The paper's 33.3% improvement claim, to three decimals: 4/3.
+        assert!((m.speedup() - 1.333).abs() < 5e-4, "{}", m.speedup());
     }
 
     #[test]

@@ -1,0 +1,435 @@
+//! Unified serving engine — the production request path.
+//!
+//! [`ServingEngine`] combines the two throughput mechanisms that previously
+//! lived separately in [`super::multicore`] (batch sharding across C cores,
+//! paper §IV footnote 1) and [`super::pipeline`] (per-layer stream
+//! pipelining, Fig. 8) into one engine:
+//!
+//! * **C shards**, each a persistent per-layer pipeline: one OS thread per
+//!   hardware layer owns that layer's synaptic memory and membrane state,
+//!   exactly like the distributed per-layer memory that makes QUANTISENC
+//!   streams overlap.
+//! * **Bounded channels** everywhere: admission blocks when the engine is
+//!   saturated (`queue_depth` messages per stage), which is the
+//!   backpressure story — a flooded engine slows producers instead of
+//!   buffering unboundedly.
+//! * **Deterministic, in-order results**: samples are assigned round-robin
+//!   (sample *i* → shard *i mod C*) and within a shard the stage chain is
+//!   FIFO, so merging shard outputs round-robin returns results in
+//!   submission order. Every stream is settled (membranes reset) between
+//!   samples, so results are bit-for-bit identical to a sequential
+//!   [`crate::hdl::Core`] run — asserted in tests and in
+//!   `benches/bench_serving.rs`.
+//!
+//! The per-stage loop ([`stage_loop`]) and the spike-count collector
+//! ([`collector_loop`]) are shared with [`super::pipeline::run_pipelined`],
+//! which is now a thin scoped-thread wrapper over the same primitives.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::registers::RegisterFile;
+use crate::config::ModelConfig;
+use crate::datasets::Sample;
+use crate::hdl::core::argmax;
+use crate::hdl::layer::Layer;
+
+pub use super::pipeline::StreamResult;
+
+/// Message flowing down a shard's stage chain: one timestep's spike vector,
+/// or the Fig.-8 settle marker that ends a stream.
+pub(crate) enum StageMsg {
+    Step { stream: usize, spikes: Vec<u8> },
+    Flush { stream: usize },
+}
+
+/// Body of one pipeline stage: owns one hardware layer, transforms spike
+/// vectors, resets its membranes at every stream boundary. Returns when the
+/// input channel closes or the downstream consumer disappears.
+pub(crate) fn stage_loop(
+    mut layer: Layer,
+    regs: RegisterFile,
+    rx: Receiver<StageMsg>,
+    tx: SyncSender<StageMsg>,
+) {
+    let mut out = Vec::new();
+    for msg in rx {
+        match msg {
+            StageMsg::Step { stream, spikes } => {
+                layer.step_regs(&spikes, &mut out, &regs);
+                if tx.send(StageMsg::Step { stream, spikes: out.clone() }).is_err() {
+                    return;
+                }
+            }
+            StageMsg::Flush { stream } => {
+                // Fig. 8 settle: membranes back to rest between streams.
+                layer.reset();
+                if tx.send(StageMsg::Flush { stream }).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Body of the terminal collector: accumulates output-layer spike counts per
+/// stream and emits one [`StreamResult`] per `Flush`. `emit` returning false
+/// stops the loop (downstream gone).
+pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
+    n_out: usize,
+    rx: Receiver<StageMsg>,
+    mut emit: F,
+) {
+    let mut counts = vec![0u32; n_out];
+    let mut spikes_total = 0u64;
+    for msg in rx {
+        match msg {
+            StageMsg::Step { spikes, .. } => {
+                for (c, &s) in counts.iter_mut().zip(&spikes) {
+                    *c += s as u32;
+                    spikes_total += s as u64;
+                }
+            }
+            StageMsg::Flush { stream } => {
+                let result = StreamResult {
+                    stream_id: stream,
+                    prediction: argmax(&counts),
+                    counts: std::mem::replace(&mut counts, vec![0u32; n_out]),
+                    spikes_total,
+                };
+                spikes_total = 0;
+                if !emit(result) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Build one shard's programmed layer chain (shared with
+/// [`super::pipeline::run_pipelined`]).
+pub(crate) fn build_layers(config: &ModelConfig, weights: &[Vec<i32>]) -> Result<Vec<Layer>> {
+    anyhow::ensure!(weights.len() == config.num_layers(), "weights arity");
+    let mut layers: Vec<Layer> = config
+        .layers()
+        .iter()
+        .map(|l| Layer::new(l, config.qspec, config.mem))
+        .collect();
+    for (layer, w) in layers.iter_mut().zip(weights) {
+        layer.memory_mut().load_dense(w)?;
+    }
+    Ok(layers)
+}
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingOptions {
+    /// Number of sharded cores C (each shard pipelines its layers).
+    pub cores: usize,
+    /// Bounded-channel capacity per stage — the admission/backpressure
+    /// window, in messages (one message ≈ one timestep of one stream).
+    pub queue_depth: usize,
+}
+
+impl Default for ServingOptions {
+    fn default() -> Self {
+        ServingOptions { cores: 2, queue_depth: 64 }
+    }
+}
+
+impl ServingOptions {
+    pub fn with_cores(cores: usize) -> ServingOptions {
+        ServingOptions { cores, ..Default::default() }
+    }
+}
+
+struct Shard {
+    in_tx: Option<SyncSender<StageMsg>>,
+    out_rx: Receiver<StreamResult>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+/// C sharded, per-layer-pipelined QUANTISENC cores behind one batched,
+/// backpressured, order-preserving API.
+pub struct ServingEngine {
+    shards: Vec<Shard>,
+    inputs: usize,
+    submitted: u64,
+    completed: u64,
+    /// Set when a batch failed mid-flight: in-flight state is then
+    /// indeterminate, so the engine refuses further batches (rebuild it).
+    poisoned: bool,
+}
+
+impl ServingEngine {
+    /// Build C identical programmed shards (persistent stage threads spin up
+    /// immediately and idle on their channels).
+    pub fn new(
+        config: &ModelConfig,
+        weights: &[Vec<i32>],
+        regs: &RegisterFile,
+        options: ServingOptions,
+    ) -> Result<ServingEngine> {
+        anyhow::ensure!(options.cores >= 1, "need at least one core");
+        anyhow::ensure!(options.queue_depth >= 1, "queue depth must be positive");
+        let n_out = config.outputs();
+        let mut shards = Vec::with_capacity(options.cores);
+        for _ in 0..options.cores {
+            let layers = build_layers(config, weights)?;
+            let mut threads = Vec::with_capacity(layers.len() + 1);
+            let (first_tx, mut chain_rx) = sync_channel::<StageMsg>(options.queue_depth);
+            for layer in layers {
+                let (tx, next_rx) = sync_channel::<StageMsg>(options.queue_depth);
+                let stage_regs = regs.clone();
+                let rx = std::mem::replace(&mut chain_rx, next_rx);
+                threads.push(std::thread::spawn(move || stage_loop(layer, stage_regs, rx, tx)));
+            }
+            let (out_tx, out_rx) = sync_channel::<StreamResult>(options.queue_depth);
+            let collector_rx = chain_rx;
+            threads.push(std::thread::spawn(move || {
+                collector_loop(n_out, collector_rx, |r| out_tx.send(r).is_ok())
+            }));
+            shards.push(Shard { in_tx: Some(first_tx), out_rx, threads });
+        }
+        Ok(ServingEngine {
+            shards,
+            inputs: config.inputs(),
+            submitted: 0,
+            completed: 0,
+            poisoned: false,
+        })
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Requests accepted / completed over the engine's lifetime.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.submitted, self.completed)
+    }
+
+    /// Serve a batch: admission feeds the shards round-robin under
+    /// backpressure while results are drained concurrently; returns one
+    /// result per sample, in submission order, bit-identical to a
+    /// sequential core.
+    pub fn run_batch(&mut self, samples: &[Sample]) -> Result<Vec<StreamResult>> {
+        anyhow::ensure!(
+            !self.poisoned,
+            "serving engine poisoned by an earlier failed batch; build a new engine"
+        );
+        for s in samples {
+            anyhow::ensure!(
+                s.inputs == self.inputs,
+                "sample width {} does not match engine input layer {}",
+                s.inputs,
+                self.inputs
+            );
+        }
+        let n_cores = self.shards.len();
+        let senders: Vec<SyncSender<StageMsg>> = self
+            .shards
+            .iter()
+            .map(|s| s.in_tx.as_ref().expect("engine not shut down").clone())
+            .collect();
+
+        let results = std::thread::scope(|scope| -> Result<Vec<StreamResult>> {
+            // Feeder: streams every sample to its shard (blocking on the
+            // bounded channels = admission control).
+            let feeder = scope.spawn(move || -> Result<()> {
+                for (stream, sample) in samples.iter().enumerate() {
+                    let tx = &senders[stream % n_cores];
+                    for t in 0..sample.t_steps {
+                        tx.send(StageMsg::Step { stream, spikes: sample.step(t).to_vec() })
+                            .map_err(|_| anyhow::anyhow!("serving shard died"))?;
+                    }
+                    tx.send(StageMsg::Flush { stream })
+                        .map_err(|_| anyhow::anyhow!("serving shard died"))?;
+                }
+                Ok(())
+            });
+
+            // Drainer (this thread): round-robin pop restores global order.
+            // recv_timeout (rather than recv) is a liveness bound, not a
+            // latency budget: it only fires if a shard produces *nothing*
+            // for a very long time (a wedged/dead pipeline), in which case
+            // the batch is abandoned with an error.
+            let mut results = Vec::with_capacity(samples.len());
+            let mut first_err: Option<anyhow::Error> = None;
+            for i in 0..samples.len() {
+                match self.shards[i % n_cores]
+                    .out_rx
+                    .recv_timeout(std::time::Duration::from_secs(3600))
+                {
+                    Ok(r) => {
+                        debug_assert_eq!(r.stream_id, i, "shard FIFO order violated");
+                        results.push(r);
+                    }
+                    Err(_) => {
+                        first_err =
+                            Some(anyhow::anyhow!("serving shard produced no result {i}"));
+                        break;
+                    }
+                }
+            }
+            if first_err.is_some() {
+                // Failure path: unblock the feeder by continuously draining
+                // every shard's output (discarding — order is gone) until
+                // the feeder exits; its sends either succeed into chains we
+                // keep empty or fail on the dead shard. The engine is then
+                // poisoned: leftover in-flight results make further batches
+                // unsound, and shutdown() drains them while joining.
+                while !feeder.is_finished() {
+                    for shard in &self.shards {
+                        while shard.out_rx.try_recv().is_ok() {}
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+            }
+            let fed = feeder.join().expect("feeder panicked");
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+            fed?;
+            Ok(results)
+        });
+
+        self.submitted += samples.len() as u64;
+        match results {
+            Ok(results) => {
+                self.completed += results.len() as u64;
+                Ok(results)
+            }
+            Err(e) => {
+                self.poisoned = true;
+                Err(e)
+            }
+        }
+    }
+
+    /// Drop the admission side and join all stage threads. Keeps draining
+    /// the output channels while waiting so a collector blocked on a full
+    /// channel (possible after a poisoned batch) can always make progress.
+    pub fn shutdown(&mut self) {
+        for shard in &mut self.shards {
+            shard.in_tx = None; // closes the chain; stages drain and exit
+        }
+        loop {
+            let mut all_done = true;
+            for shard in &self.shards {
+                while shard.out_rx.try_recv().is_ok() {}
+                if shard.threads.iter().any(|t| !t.is_finished()) {
+                    all_done = false;
+                }
+            }
+            if all_done {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        for shard in &mut self.shards {
+            for t in shard.threads.drain(..) {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+impl Drop for ServingEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{Dataset, Split};
+    use crate::fixed::Q5_3;
+    use crate::hdl::Core;
+
+    fn setup() -> (ModelConfig, Vec<Vec<i32>>, RegisterFile, Vec<Sample>) {
+        let cfg = ModelConfig::parse_arch("256x24x10", Q5_3).unwrap();
+        let mut rng = crate::datasets::rng::XorShift64Star::new(0x5E21);
+        let weights: Vec<Vec<i32>> = cfg
+            .layers()
+            .iter()
+            .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(15) as i32 - 7).collect())
+            .collect();
+        let regs = RegisterFile::new(Q5_3);
+        let samples: Vec<Sample> =
+            (0..9).map(|i| Dataset::Smnist.sample(i, Split::Test, 6)).collect();
+        (cfg, weights, regs, samples)
+    }
+
+    #[test]
+    fn engine_matches_sequential_core_bitexact() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        for cores in [1usize, 2, 3] {
+            let mut engine =
+                ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(cores))
+                    .unwrap();
+            let out = engine.run_batch(&samples).unwrap();
+            assert_eq!(out.len(), samples.len());
+            for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+                let seq = core.run(s);
+                assert_eq!(r.counts, seq.counts, "cores={cores} sample {i}");
+                assert_eq!(r.prediction, seq.prediction, "cores={cores} sample {i}");
+                assert_eq!(r.stream_id, i);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_is_reusable_across_batches() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        let a = engine.run_batch(&samples).unwrap();
+        let b = engine.run_batch(&samples).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.counts, y.counts, "state leaked across batches");
+        }
+        assert_eq!(engine.stats(), (2 * samples.len() as u64, 2 * samples.len() as u64));
+    }
+
+    #[test]
+    fn small_queue_depth_still_completes() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine = ServingEngine::new(
+            &cfg,
+            &weights,
+            &regs,
+            ServingOptions { cores: 2, queue_depth: 1 },
+        )
+        .unwrap();
+        let out = engine.run_batch(&samples).unwrap();
+        assert_eq!(out.len(), samples.len());
+    }
+
+    #[test]
+    fn empty_batch_and_bad_options() {
+        let (cfg, weights, regs, _) = setup();
+        assert!(ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(0)).is_err());
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::default()).unwrap();
+        assert!(engine.run_batch(&[]).unwrap().is_empty());
+        let bad = Sample { spikes: vec![0; 4], t_steps: 1, inputs: 4, label: 0 };
+        assert!(engine.run_batch(&[bad]).is_err());
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        let _ = engine.run_batch(&samples[..2]).unwrap();
+        engine.shutdown();
+        engine.shutdown();
+    }
+}

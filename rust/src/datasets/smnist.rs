@@ -52,6 +52,23 @@ fn segment_cells(seg: u8, dx: i64, dy: i64, thick: i64) -> Vec<(i64, i64)> {
     out
 }
 
+/// Binary support map (row-major, 256 cells) of a digit glyph at jitter
+/// (dx, dy) and stroke thickness. This is the generator geometry the
+/// native calibrator in [`crate::golden`] builds its matched filters from
+/// (the software-stack equivalent of training against the generator).
+pub(crate) fn support_map(digit: usize, dx: i64, dy: i64, thick: i64) -> [u8; INPUTS] {
+    assert!(digit < CLASSES, "digit out of range: {digit}");
+    let mut m = [0u8; INPUTS];
+    for &seg in SEGMENTS[digit] {
+        for (x, y) in segment_cells(seg, dx, dy, thick) {
+            if (0..GRID as i64).contains(&x) && (0..GRID as i64).contains(&y) {
+                m[y as usize * GRID + x as usize] = 1;
+            }
+        }
+    }
+    m
+}
+
 /// One jittered glyph image as 256 intensities in [0, 1] (row-major).
 pub fn digit_image(digit: usize, rng: &mut XorShift64Star) -> [f64; INPUTS] {
     assert!(digit < CLASSES, "digit out of range: {digit}");

@@ -30,13 +30,26 @@ pub const Q5_3: QSpec = QSpec { n: 5, q: 3 };
 pub const Q9_7: QSpec = QSpec { n: 9, q: 7 };
 pub const Q17_15: QSpec = QSpec { n: 17, q: 15 };
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum QSpecError {
-    #[error("invalid QSpec Q{n}.{q}: need n >= 1, total width <= 32")]
     Invalid { n: u8, q: u8 },
-    #[error("cannot parse QSpec name {0:?} (expected e.g. \"Q5.3\")")]
     Parse(String),
 }
+
+impl fmt::Display for QSpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QSpecError::Invalid { n, q } => {
+                write!(f, "invalid QSpec Q{n}.{q}: need n >= 1, total width <= 32")
+            }
+            QSpecError::Parse(s) => {
+                write!(f, "cannot parse QSpec name {s:?} (expected e.g. \"Q5.3\")")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QSpecError {}
 
 impl QSpec {
     pub const fn new_unchecked(n: u8, q: u8) -> QSpec {

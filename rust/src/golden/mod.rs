@@ -1,0 +1,469 @@
+//! Native golden-vector + artifact substrate.
+//!
+//! The seed repo assumed `make artifacts` ran a Python/JAX build step to
+//! produce `artifacts/` (manifest, weights, golden vectors). This module
+//! regenerates the whole store natively from the in-crate reference
+//! implementations, so a fresh checkout builds, tests, and serves with no
+//! Python anywhere:
+//!
+//! * `golden_fixedpoint.json` — Qn.q add/sub/mul vectors from
+//!   [`crate::fixed`]. Note the pinning semantics: on a machine where the
+//!   store persists, a later semantic change to the arithmetic trips the
+//!   parity tests against the recorded vectors; a fresh checkout
+//!   regenerates vectors and implementation together, so cross-*version*
+//!   drift is caught, cross-*implementation* drift (vs the optional Python
+//!   reference) is only caught when a Python-built store is present.
+//! * `golden_lif_q53.json` / `golden_lif_q97.json` — multi-step LIF layer
+//!   traces for all four Eq. 7 reset modes from [`crate::hdl::Layer`].
+//! * `golden_datasets.json` — determinism pins for the three synthetic
+//!   dataset generators.
+//! * `manifest.json` + per-variant quantized weight files + the float
+//!   reference weights — produced by the native calibrator in [`train`]
+//!   (smnist at Q9.7/Q5.3/Q3.1; dvs and shd at Q5.3), in exactly the JSON
+//!   schema [`crate::runtime::artifacts::Manifest`] parses.
+//!
+//! [`ensure_artifacts`] is the idempotent entry point used by tests,
+//! examples, and the CLI: it generates the store once per process (and
+//! skips generation entirely when a store with the current
+//! [`GOLDEN_VERSION`] already exists on disk).
+
+pub mod train;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use anyhow::{Context, Result};
+
+use crate::config::registers::{RegisterFile, ResetMode, REG_REFRACTORY, REG_RESET_MODE, REG_VRESET, REG_VTH};
+use crate::config::{LayerConfig, MemKind, Topology};
+use crate::datasets::rng::XorShift64Star;
+use crate::datasets::{Dataset, Split};
+use crate::fixed::{QSpec, Q17_15, Q2_2, Q3_1, Q5_3, Q9_7};
+use crate::hdl::Layer;
+use crate::util::json::Json;
+
+/// Version tag embedded in `manifest.json`; bump when the generator or the
+/// calibration algorithm changes so stale stores are rebuilt.
+pub const GOLDEN_VERSION: &str = "native-golden-v1";
+
+/// Idempotent artifact bootstrap: returns the artifacts directory,
+/// generating the store first if it is missing or stale. Safe to call from
+/// concurrent tests within one process (the mutex makes generation run
+/// once); failures are *not* cached, so a transient error (disk full,
+/// permissions) can be retried on the next call.
+pub fn ensure_artifacts() -> Result<PathBuf> {
+    static READY: OnceLock<PathBuf> = OnceLock::new();
+    static BUILDING: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    if let Some(p) = READY.get() {
+        return Ok(p.clone());
+    }
+    let _guard = BUILDING.lock().unwrap_or_else(|poison| poison.into_inner());
+    if let Some(p) = READY.get() {
+        return Ok(p.clone());
+    }
+    let dir = crate::artifacts_dir();
+    match store_state(&dir) {
+        // A foreign store (e.g. built by the Python AOT path) is trusted
+        // as-is — auto-bootstrap must never destroy trained artifacts.
+        StoreState::Current | StoreState::Foreign => {}
+        StoreState::Missing | StoreState::StaleNative => {
+            generate(&dir).context("generating artifacts")?;
+        }
+    }
+    let _ = READY.set(dir.clone());
+    Ok(dir)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum StoreState {
+    /// No parseable manifest.
+    Missing,
+    /// Native store at the current generator version.
+    Current,
+    /// Native store from an older generator version.
+    StaleNative,
+    /// A manifest without a `version` key — produced by something other
+    /// than this generator (e.g. the optional Python AOT path). Never
+    /// auto-clobbered; only an explicit [`generate`] replaces it.
+    Foreign,
+}
+
+fn store_state(dir: &Path) -> StoreState {
+    let path = dir.join("manifest.json");
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return StoreState::Missing,
+        // Unreadable (permissions, transient I/O): treat as foreign so the
+        // auto-bootstrap never deletes a store it cannot inspect; the
+        // subsequent Manifest::load reports the real error.
+        Err(_) => return StoreState::Foreign,
+    };
+    let Ok(json) = Json::parse(&text) else {
+        // A manifest that exists but does not parse is a half-written or
+        // damaged native store: safe to rebuild.
+        return StoreState::StaleNative;
+    };
+    match json.get("version").and_then(|v| v.as_str()) {
+        Some(v) if v == GOLDEN_VERSION => StoreState::Current,
+        Some(_) => StoreState::StaleNative,
+        None => StoreState::Foreign,
+    }
+}
+
+fn store_is_current(dir: &Path) -> bool {
+    store_state(dir) == StoreState::Current
+}
+
+/// Regenerate the full artifact store at `dir`, unconditionally replacing
+/// whatever is there (build in a sibling temp directory, then swap into
+/// place). This is the forced path behind `repro artifacts` /
+/// `make artifacts`, so it must repair a store whose manifest is current
+/// but whose data files are damaged; the only concession to a concurrent
+/// generator is the rename-failure fallback.
+pub fn generate(dir: &Path) -> Result<()> {
+    let parent = dir.parent().unwrap_or_else(|| Path::new("."));
+    std::fs::create_dir_all(parent)
+        .with_context(|| format!("creating {}", parent.display()))?;
+    let tmp = parent.join(format!(
+        ".artifacts-build-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    let result = generate_into(&tmp);
+    if result.is_err() {
+        let _ = std::fs::remove_dir_all(&tmp);
+        return result;
+    }
+    // Swap in with two renames (move the old store aside, move the new one
+    // in, delete the old one afterwards) so the window in which `dir` is
+    // absent is two metadata operations, not a recursive delete.
+    let old = parent.join(format!(".artifacts-old-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&old);
+    if dir.exists() {
+        std::fs::rename(dir, &old)
+            .with_context(|| format!("moving stale store {} aside", dir.display()))?;
+    }
+    match std::fs::rename(&tmp, dir) {
+        Ok(()) => {
+            let _ = std::fs::remove_dir_all(&old);
+            Ok(())
+        }
+        Err(e) => {
+            let _ = std::fs::remove_dir_all(&tmp);
+            // A concurrent generator may have installed a store in the
+            // window; accept it. Otherwise try to restore the old store.
+            if store_is_current(dir) {
+                let _ = std::fs::remove_dir_all(&old);
+                Ok(())
+            } else {
+                let _ = std::fs::rename(&old, dir);
+                Err(anyhow::anyhow!("installing artifacts at {}: {e}", dir.display()))
+            }
+        }
+    }
+}
+
+fn generate_into(dir: &Path) -> Result<()> {
+    write_json(&dir.join("golden_fixedpoint.json"), &fixedpoint_golden())?;
+    write_json(&dir.join("golden_lif_q53.json"), &lif_golden(Q5_3))?;
+    write_json(&dir.join("golden_lif_q97.json"), &lif_golden(Q9_7))?;
+    write_json(&dir.join("golden_datasets.json"), &datasets_golden())?;
+
+    std::fs::create_dir_all(dir.join("hlo"))?;
+    std::fs::create_dir_all(dir.join("kernels"))?;
+    let placeholder = "// HLO text artifacts are produced by the optional Python AOT path\n\
+                       // (python/compile/aot.py). The native build serves through the\n\
+                       // cycle-accurate hdl core; the PJRT runtime is gated on `--features pjrt`.\n";
+    std::fs::write(dir.join("kernels/lif_step_Q53.hlo"), placeholder)?;
+
+    let mut models = BTreeMap::new();
+    for ds in Dataset::all() {
+        let model = train::train(ds);
+        let variants: &[QSpec] = match ds {
+            Dataset::Smnist => &[Q9_7, Q5_3, Q3_1],
+            _ => &[Q5_3],
+        };
+        models.insert(ds.label().to_string(), model_entry(dir, &model, variants, placeholder)?);
+    }
+
+    let mut kernels = BTreeMap::new();
+    kernels.insert(
+        "lif_step_Q53".to_string(),
+        obj(vec![("file", Json::Str("kernels/lif_step_Q53.hlo".into()))]),
+    );
+
+    let manifest = obj(vec![
+        ("version", Json::Str(GOLDEN_VERSION.into())),
+        ("generator", Json::Str("quantisenc::golden (native, no Python)".into())),
+        ("models", Json::Obj(models)),
+        ("kernels", Json::Obj(kernels)),
+    ]);
+    write_json(&dir.join("manifest.json"), &manifest)?;
+    Ok(())
+}
+
+/// One manifest model entry + its weight files on disk.
+fn model_entry(
+    dir: &Path,
+    model: &train::TrainedModel,
+    variants: &[QSpec],
+    hlo_placeholder: &str,
+) -> Result<Json> {
+    let ds = model.dataset;
+    let layer_shapes: Vec<(usize, usize)> = model
+        .sizes
+        .windows(2)
+        .map(|w| (w[0], w[1]))
+        .collect();
+
+    // Float ("software") reference weights for smnist (Fig. 12 RMSE).
+    if ds == Dataset::Smnist {
+        let mut bytes = Vec::new();
+        for w in &model.weights {
+            for &v in w {
+                bytes.extend_from_slice(&(v as f32).to_le_bytes());
+            }
+        }
+        std::fs::write(dir.join("weights_smnist_float.bin"), bytes)?;
+    }
+
+    let mut variant_map = BTreeMap::new();
+    for &qs in variants {
+        let qname = qs.name();
+        let wfile = format!("weights_{}_{}.bin", ds.label(), qname);
+        let mut bytes = Vec::new();
+        for w in &model.weights {
+            for &v in w {
+                bytes.extend_from_slice(&qs.from_float(v).to_le_bytes());
+            }
+        }
+        std::fs::write(dir.join(&wfile), bytes)?;
+
+        let hlo_rel = format!("hlo/{}_{}.hlo", ds.label(), qname);
+        std::fs::write(dir.join(&hlo_rel), hlo_placeholder)?;
+
+        let mut regs = RegisterFile::new(qs);
+        regs.write(REG_VTH, qs.from_float(model.vth))
+            .expect("deployment vth must be representable");
+        let regs_json =
+            Json::Arr(regs.vector().iter().map(|&v| Json::Num(v as f64)).collect());
+
+        variant_map.insert(
+            qname,
+            obj(vec![
+                ("hlo", Json::Str(hlo_rel)),
+                (
+                    "layer_shapes",
+                    Json::Arr(
+                        layer_shapes
+                            .iter()
+                            .map(|&(m, n)| {
+                                Json::Arr(vec![Json::Num(m as f64), Json::Num(n as f64)])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("default_regs", regs_json),
+                ("weights", Json::Str(wfile)),
+            ]),
+        );
+    }
+
+    Ok(obj(vec![
+        (
+            "sizes",
+            Json::Arr(model.sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
+        ),
+        ("t_steps", Json::Num(model.t_steps as f64)),
+        ("float_acc", Json::Num(model.float_acc)),
+        ("variants", Json::Obj(variant_map)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Golden vector generators
+// ---------------------------------------------------------------------------
+
+/// 256 add/sub/mul cases cycling through the paper's quantization settings.
+fn fixedpoint_golden() -> Json {
+    let specs = [Q2_2, Q3_1, Q5_3, Q9_7, Q17_15];
+    let mut rng = XorShift64Star::new(0xF1CED_0077);
+    let mut cases = Vec::with_capacity(256);
+    for k in 0..256usize {
+        let qs = specs[k % specs.len()];
+        let a = qs.wrap(rng.next_u64() as i64);
+        let b = qs.wrap(rng.next_u64() as i64);
+        cases.push(obj(vec![
+            ("q", Json::Str(qs.name())),
+            ("a", Json::Num(a as f64)),
+            ("b", Json::Num(b as f64)),
+            ("add", Json::Num(qs.add(a, b) as f64)),
+            ("sub", Json::Num(qs.sub(a, b) as f64)),
+            ("mul", Json::Num(qs.mul(a, b) as f64)),
+        ]));
+    }
+    obj(vec![("cases", Json::Arr(cases))])
+}
+
+/// Multi-step LIF layer traces (all four reset modes) for one quantization.
+fn lif_golden(qs: QSpec) -> Json {
+    let (m, n, t_steps) = (6usize, 4usize, 12usize);
+    let mut rng = XorShift64Star::new(0x11F_0000 + qs.width() as u64);
+    let weights: Vec<i32> =
+        (0..m * n).map(|_| qs.from_float(2.0 * rng.uniform() - 1.0)).collect();
+    let spikes_in: Vec<Vec<i32>> = (0..t_steps)
+        .map(|_| (0..m).map(|_| (rng.uniform() < 0.4) as i32).collect())
+        .collect();
+
+    let mut traces = BTreeMap::new();
+    for mode in ResetMode::all() {
+        let mut regs = RegisterFile::new(qs);
+        regs.write(REG_RESET_MODE, mode as i32).unwrap();
+        if mode == ResetMode::ToConstant {
+            regs.write(REG_VRESET, qs.from_float(0.25)).unwrap();
+        }
+        if mode == ResetMode::ToZero {
+            regs.write(REG_REFRACTORY, 2).unwrap();
+        }
+        let cfg = LayerConfig { fan_in: m, neurons: n, topology: Topology::AllToAll };
+        let mut layer = Layer::new(&cfg, qs, MemKind::Bram);
+        layer.memory_mut().load_dense(&weights).unwrap();
+        let mut out = Vec::new();
+        let mut spikes_out = Vec::with_capacity(t_steps);
+        let mut vmem = Vec::with_capacity(t_steps);
+        for row in &spikes_in {
+            let row_u8: Vec<u8> = row.iter().map(|&x| x as u8).collect();
+            layer.step_regs(&row_u8, &mut out, &regs);
+            spikes_out.push(Json::Arr(out.iter().map(|&s| Json::Num(s as f64)).collect()));
+            vmem.push(Json::Arr(layer.vmem().iter().map(|&v| Json::Num(v as f64)).collect()));
+        }
+        let key = match mode {
+            ResetMode::Default => "default",
+            ResetMode::ToZero => "to_zero",
+            ResetMode::BySubtraction => "by_subtraction",
+            ResetMode::ToConstant => "to_constant",
+        };
+        traces.insert(
+            key.to_string(),
+            obj(vec![
+                (
+                    "regs",
+                    Json::Arr(regs.vector().iter().map(|&v| Json::Num(v as f64)).collect()),
+                ),
+                ("spikes_out", Json::Arr(spikes_out)),
+                ("vmem", Json::Arr(vmem)),
+            ]),
+        );
+    }
+
+    let weight_rows: Vec<Json> = (0..m)
+        .map(|i| {
+            Json::Arr(weights[i * n..(i + 1) * n].iter().map(|&w| Json::Num(w as f64)).collect())
+        })
+        .collect();
+    obj(vec![
+        ("q", Json::Str(qs.name())),
+        ("m", Json::Num(m as f64)),
+        ("n", Json::Num(n as f64)),
+        ("weights", Json::Arr(weight_rows)),
+        (
+            "spikes_in",
+            Json::Arr(
+                spikes_in
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|&x| Json::Num(x as f64)).collect()))
+                    .collect(),
+            ),
+        ),
+        ("traces", Json::Obj(traces)),
+    ])
+}
+
+/// Determinism pins for the three dataset generators.
+fn datasets_golden() -> Json {
+    let t = 12usize;
+    let mut entries = BTreeMap::new();
+    for ds in Dataset::all() {
+        let s = ds.sample(0, Split::Test, t);
+        let rows: Vec<Json> =
+            s.row_counts().iter().map(|&x| Json::Num(x as f64)).collect();
+        let first: Vec<Json> = (0..s.inputs)
+            .filter(|&i| s.spike(0, i) == 1)
+            .map(|i| Json::Num(i as f64))
+            .collect();
+        entries.insert(
+            ds.label().to_string(),
+            obj(vec![
+                ("t", Json::Num(t as f64)),
+                ("label", Json::Num(s.label as f64)),
+                ("spike_rows", Json::Arr(rows)),
+                ("first_row_indices", Json::Arr(first)),
+                ("nnz", Json::Num(s.nnz() as f64)),
+            ]),
+        );
+    }
+    Json::Obj(entries)
+}
+
+// ---------------------------------------------------------------------------
+// Small helpers
+// ---------------------------------------------------------------------------
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn write_json(path: &Path, json: &Json) -> Result<()> {
+    std::fs::write(path, json.to_string())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixedpoint_golden_shape_and_selfparity() {
+        let g = fixedpoint_golden();
+        let cases = g.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 256);
+        for c in cases {
+            let qs = QSpec::parse(c.get("q").unwrap().as_str().unwrap()).unwrap();
+            let a = c.get("a").unwrap().as_i64().unwrap() as i32;
+            let b = c.get("b").unwrap().as_i64().unwrap() as i32;
+            assert!(qs.in_range(a) && qs.in_range(b));
+            assert_eq!(qs.add(a, b) as i64, c.get("add").unwrap().as_i64().unwrap());
+        }
+    }
+
+    #[test]
+    fn lif_golden_covers_all_reset_modes() {
+        let g = lif_golden(Q5_3);
+        let traces = g.get("traces").unwrap().as_obj().unwrap();
+        assert_eq!(traces.len(), 4);
+        for key in ["default", "to_zero", "by_subtraction", "to_constant"] {
+            let tr = traces.get(key).unwrap();
+            assert_eq!(tr.get("spikes_out").unwrap().as_arr().unwrap().len(), 12);
+            assert_eq!(tr.get("vmem").unwrap().as_arr().unwrap().len(), 12);
+            assert_eq!(tr.get("regs").unwrap().i32_vec().unwrap().len(), 6);
+        }
+        // Round-trips through the strict JSON parser.
+        let reparsed = Json::parse(&g.to_string()).unwrap();
+        assert_eq!(reparsed.get("m").unwrap().as_i64(), Some(6));
+    }
+
+    #[test]
+    fn datasets_golden_is_deterministic() {
+        let a = datasets_golden().to_string();
+        let b = datasets_golden().to_string();
+        assert_eq!(a, b);
+        let j = Json::parse(&a).unwrap();
+        for ds in Dataset::all() {
+            let e = j.get(ds.label()).unwrap();
+            assert_eq!(e.get("t").unwrap().as_i64(), Some(12));
+            assert!(e.get("nnz").unwrap().as_i64().unwrap() > 0);
+        }
+    }
+}

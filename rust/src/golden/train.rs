@@ -1,0 +1,598 @@
+//! Native model synthesis — the request path's stand-in for the Python/JAX
+//! QAT training loop (DESIGN.md substitution policy: the deployment stack
+//! must be able to rebuild every artifact without Python).
+//!
+//! Each dataset gets a two-layer SNN whose weights are *calibrated*, not
+//! gradient-trained:
+//!
+//! * **smnist** — the hidden layer is a bank of shift×thickness matched
+//!   filters derived from the glyph generator's seven-segment geometry
+//!   (6 strong "anchor" weights on the most class-distinctive cells plus
+//!   strong negatives on rival-distinctive cells, one neuron per
+//!   (class, jitter bin)); the output layer is a ridge-regression readout
+//!   fitted on hidden spike counts over generated training samples, then
+//!   projected onto a fixed-point-friendly tier structure.
+//! * **dvs** — hidden matched filters estimated from class-mean spike-rate
+//!   prototypes, with a hand-structured primary/secondary pooling readout.
+//! * **shd** — prototype matched filters plus the ridge readout.
+//!
+//! The tier structure is what makes the quantization ladder behave like the
+//! paper's Table VIII: anchor weights survive Q3.1's coarse grid, fine
+//! weights survive Q5.3, and the continuous values only exist at Q9.7 and
+//! up — while per-neuron positive/negative mass caps keep worst-case
+//! activations inside even Q3.1's wrap range.
+
+use crate::datasets::rng::XorShift64Star;
+use crate::datasets::{smnist, Dataset, Split};
+
+/// Timesteps used for calibration and recorded in the manifest.
+pub const T_STEPS: usize = 30;
+
+/// Weight tiers (value units). See module docs for how these interact with
+/// the Qn.q grids.
+const ANCHOR_W: f64 = 0.38;
+const SMNIST_ANCHOR_NEG_W: f64 = 0.45;
+const PROTO_ANCHOR_NEG_W: f64 = 0.33;
+const FINE_CAP: f64 = 0.22;
+
+/// One calibrated model (float weights; quantization happens per variant).
+pub struct TrainedModel {
+    pub dataset: Dataset,
+    /// Layer sizes including the input layer, e.g. [256, 300, 10].
+    pub sizes: Vec<usize>,
+    pub t_steps: usize,
+    /// Deployment threshold voltage (value units) written to default_regs.
+    pub vth: f64,
+    /// Per-layer dense row-major float weights ([fan_in × neurons]).
+    pub weights: Vec<Vec<f64>>,
+    /// Float ("software") accuracy of the calibrated model on the test split.
+    pub float_acc: f64,
+}
+
+/// Per-dataset deployment threshold.
+pub fn deploy_vth(ds: Dataset) -> f64 {
+    match ds {
+        Dataset::Smnist => 1.5,
+        Dataset::Dvs => 1.0,
+        Dataset::Shd => 1.5,
+    }
+}
+
+fn neuron_rng(j: usize, seed_offset: u64) -> XorShift64Star {
+    XorShift64Star::new(
+        0x7EA1_0000u64
+            .wrapping_add((j as u64).wrapping_mul(0x9E37_79B9))
+            .wrapping_add(seed_offset),
+    )
+}
+
+/// Descending-order index sort by key (keys are jittered so ties are
+/// irrelevant in practice).
+fn argsort_desc(keys: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..keys.len()).collect();
+    idx.sort_by(|&a, &b| keys[b].partial_cmp(&keys[a]).expect("finite sort keys"));
+    idx
+}
+
+fn argsort_asc(keys: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..keys.len()).collect();
+    idx.sort_by(|&a, &b| keys[a].partial_cmp(&keys[b]).expect("finite sort keys"));
+    idx
+}
+
+// ---------------------------------------------------------------------------
+// smnist: geometry-derived shift×thickness anchor bank
+// ---------------------------------------------------------------------------
+
+/// Jitter bins matching the generator: dx ∈ [-2, 2], dy ∈ [-1, 1].
+fn shift_bins() -> Vec<(i64, i64)> {
+    let mut bins = Vec::with_capacity(15);
+    for dy in -1i64..=1 {
+        for dx in -2i64..=2 {
+            bins.push((dx, dy));
+        }
+    }
+    bins
+}
+
+/// Hidden bank [256 × H]: one neuron per (thickness, shift, class).
+/// Returns the weights together with H so callers cannot desync from the
+/// bank geometry.
+fn smnist_hidden() -> (Vec<f64>, usize) {
+    const C: usize = 10;
+    const M: usize = smnist::INPUTS;
+    let shifts = shift_bins();
+    let h = C * shifts.len() * 2;
+    let mut w1 = vec![0.0f64; M * h];
+    let mut b = 0usize;
+    for thick in [1i64, 2] {
+        for &(dx, dy) in &shifts {
+            let sup: Vec<[u8; M]> =
+                (0..C).map(|c| smnist::support_map(c, dx, dy, thick)).collect();
+            let dil: Vec<[u8; M]> =
+                (0..C).map(|c| smnist::support_map(c, dx, dy, (thick + 1).min(2))).collect();
+            let mut share = [0u32; M];
+            let mut union2 = [0u8; M];
+            for c in 0..C {
+                for i in 0..M {
+                    share[i] += sup[c][i] as u32;
+                    union2[i] |= dil[c][i];
+                }
+            }
+            for c in 0..C {
+                let j = b * C + c;
+                let mut rng = neuron_rng(j, 0);
+                // Rank the template's cells by class-distinctiveness
+                // (cells used by fewer classes rank higher).
+                let cells: Vec<usize> = (0..M).filter(|&i| sup[c][i] > 0).collect();
+                let dist: Vec<f64> = cells
+                    .iter()
+                    .map(|&i| (C as u32 - share[i]) as f64 + 0.001 * rng.uniform())
+                    .collect();
+                let order: Vec<usize> =
+                    argsort_desc(&dist).into_iter().map(|k| cells[k]).collect();
+                for &i in order.iter().take(6) {
+                    w1[i * h + j] = ANCHOR_W * (0.95 + 0.1 * rng.uniform());
+                }
+                // Negatives on cells that belong to rival glyphs only
+                // (dilated so thick-2 samples don't self-penalize).
+                let negset: Vec<usize> =
+                    (0..M).filter(|&i| union2[i] > 0 && dil[c][i] == 0).collect();
+                let rival: Vec<f64> = negset
+                    .iter()
+                    .map(|&i| share[i] as f64 + 0.001 * rng.uniform())
+                    .collect();
+                let norder: Vec<usize> =
+                    argsort_desc(&rival).into_iter().map(|k| negset[k]).collect();
+                for &i in norder.iter().take(4) {
+                    w1[i * h + j] = -SMNIST_ANCHOR_NEG_W * (0.9 + 0.2 * rng.uniform());
+                }
+                for &i in norder.iter().skip(4).take(8) {
+                    w1[i * h + j] = -(0.12 + 0.08 * rng.uniform());
+                }
+            }
+            b += 1;
+        }
+    }
+    (w1, h)
+}
+
+// ---------------------------------------------------------------------------
+// dvs / shd: prototype-estimated tiered matched filters
+// ---------------------------------------------------------------------------
+
+/// Class-mean spike-rate prototypes from the first K train samples per class.
+fn prototypes(ds: Dataset, k_per_class: usize) -> Vec<Vec<f64>> {
+    let c = ds.classes();
+    let m = ds.inputs();
+    let mut sums = vec![vec![0.0f64; m]; c];
+    let mut counts = vec![0usize; c];
+    let mut idx = 0u64;
+    while counts.iter().min().copied().unwrap_or(0) < k_per_class
+        && (idx as usize) < k_per_class * c * 8
+    {
+        let s = ds.sample(idx, Split::Train, T_STEPS);
+        if counts[s.label] < k_per_class {
+            for t in 0..s.t_steps {
+                for (i, &sp) in s.step(t).iter().enumerate() {
+                    if sp != 0 {
+                        sums[s.label][i] += 1.0;
+                    }
+                }
+            }
+            counts[s.label] += 1;
+        }
+        idx += 1;
+    }
+    for (cls, row) in sums.iter_mut().enumerate() {
+        let denom = (counts[cls].max(1) * T_STEPS) as f64;
+        for v in row.iter_mut() {
+            *v /= denom;
+        }
+    }
+    sums
+}
+
+/// Hidden bank [M × (C · n_bins)] from rate prototypes (one tiered matched
+/// filter per class, replicated per bin with jittered weights).
+fn proto_hidden(ds: Dataset, n_bins: usize) -> Vec<f64> {
+    let c = ds.classes();
+    let m = ds.inputs();
+    let protos = prototypes(ds, 20);
+    let cross: Vec<f64> =
+        (0..m).map(|i| protos.iter().map(|p| p[i]).sum::<f64>() / c as f64).collect();
+    let h = c * n_bins;
+    let seed_offset = if ds == Dataset::Dvs { 0u64 } else { 1u64 << 32 };
+    let mut w1 = vec![0.0f64; m * h];
+    for b in 0..n_bins {
+        for cls in 0..c {
+            let j = b * c + cls;
+            let mut rng = neuron_rng(j, seed_offset);
+            let d: Vec<f64> = (0..m).map(|i| protos[cls][i] - cross[i]).collect();
+            let order = argsort_desc(&d);
+            let mut w = vec![0.0f64; m];
+            let anchors: Vec<usize> =
+                order.iter().take(6).copied().filter(|&i| d[i] > 0.02).collect();
+            for &i in &anchors {
+                w[i] = ANCHOR_W * (0.95 + 0.1 * rng.uniform());
+            }
+            let fine: Vec<usize> =
+                order.iter().skip(6).take(54).copied().filter(|&i| d[i] > 0.01).collect();
+            let drive: f64 = w.iter().zip(&protos[cls]).map(|(a, p)| a * p).sum();
+            if !fine.is_empty() {
+                let mut base = vec![0.0f64; m];
+                for &i in &fine {
+                    base[i] = d[i] * (0.8 + 0.4 * rng.uniform());
+                }
+                let fd: f64 = base.iter().zip(&protos[cls]).map(|(a, p)| a * p).sum();
+                if fd > 1e-9 {
+                    let scale = (1.45 - drive).max(0.0) / fd;
+                    for v in base.iter_mut() {
+                        *v *= scale;
+                    }
+                }
+                for (wi, bi) in w.iter_mut().zip(&base) {
+                    *wi += bi.clamp(0.0, FINE_CAP);
+                }
+            }
+            let ordern = argsort_asc(&d);
+            let nanch: Vec<usize> =
+                ordern.iter().take(4).copied().filter(|&i| d[i] < -0.02).collect();
+            for &i in &nanch {
+                w[i] = -PROTO_ANCHOR_NEG_W * (0.9 + 0.2 * rng.uniform());
+            }
+            let nfine: Vec<usize> =
+                ordern.iter().skip(4).take(26).copied().filter(|&i| d[i] < -0.01).collect();
+            if !nfine.is_empty() {
+                let mut base = vec![0.0f64; m];
+                for &i in &nfine {
+                    base[i] = -d[i] * (0.8 + 0.4 * rng.uniform());
+                }
+                let pull: f64 = base.iter().zip(&cross).map(|(a, p)| a * p).sum();
+                if pull > 1e-9 {
+                    let scale = (0.9 / pull).min(1.0);
+                    for v in base.iter_mut() {
+                        *v *= scale;
+                    }
+                }
+                for (wi, bi) in w.iter_mut().zip(&base) {
+                    *wi -= bi.clamp(0.0, 0.18);
+                }
+            }
+            for i in 0..m {
+                w1[i * h + j] = w[i];
+            }
+        }
+    }
+    w1
+}
+
+/// Hand-structured pooling readout [H × C]: primary bins at ~0.5, secondary
+/// bins at ~0.2, a few cross-class inhibition taps (used by dvs).
+fn hand_readout(h: usize, c: usize, n_bins: usize) -> Vec<f64> {
+    let mut w2 = vec![0.0f64; h * c];
+    let mut rng = XorShift64Star::new(0x0077_0077);
+    let n_primary = 6usize.min(n_bins);
+    let mut prim: Vec<usize> = (0..n_primary)
+        .map(|i| {
+            (i as f64 * (n_bins - 1) as f64 / (n_primary - 1).max(1) as f64).round() as usize
+        })
+        .collect();
+    prim.sort_unstable();
+    prim.dedup();
+    for cls in 0..c {
+        for b in 0..n_bins {
+            let j = b * c + cls;
+            w2[j * c + cls] = if prim.contains(&b) {
+                0.5 + 0.08 * (rng.uniform() - 0.5)
+            } else {
+                0.18 + 0.04 * rng.uniform()
+            };
+        }
+        for r in 1..=4usize {
+            let c2 = (cls + r * 3 + 1) % c;
+            let b2 = (r * 2) % n_bins;
+            w2[(b2 * c + c2) * c + cls] = -(0.15 + 0.05 * rng.uniform());
+        }
+    }
+    w2
+}
+
+// ---------------------------------------------------------------------------
+// Float forward passes (calibration + float_acc reference)
+// ---------------------------------------------------------------------------
+
+/// One float LIF layer step (decay 0.2, reset-by-subtraction) shared by the
+/// count collector and the accuracy reference.
+fn float_layer_step(
+    w: &[f64],
+    n: usize,
+    active_in: &[usize],
+    v: &mut [f64],
+    vth: f64,
+    spikes_out: &mut Vec<usize>,
+    counts: Option<&mut [f64]>,
+) {
+    let mut act = vec![0.0f64; n];
+    for &i in active_in {
+        let row = &w[i * n..(i + 1) * n];
+        for (a, wv) in act.iter_mut().zip(row) {
+            *a += wv;
+        }
+    }
+    spikes_out.clear();
+    for j in 0..n {
+        let leaked = v[j] - 0.2 * v[j];
+        let mut vj = leaked + act[j];
+        if vj >= vth {
+            vj -= vth;
+            spikes_out.push(j);
+        }
+        v[j] = vj;
+    }
+    if let Some(counts) = counts {
+        for &j in spikes_out.iter() {
+            counts[j] += 1.0;
+        }
+    }
+}
+
+/// Hidden spike counts of one sample through the float hidden bank.
+fn hidden_counts(
+    w1: &[f64],
+    h: usize,
+    sample: &crate::datasets::Sample,
+    vth: f64,
+) -> Vec<f64> {
+    let mut v = vec![0.0f64; h];
+    let mut counts = vec![0.0f64; h];
+    let mut spikes = Vec::new();
+    for t in 0..sample.t_steps {
+        let active: Vec<usize> =
+            sample.step(t).iter().enumerate().filter(|(_, &s)| s != 0).map(|(i, _)| i).collect();
+        float_layer_step(w1, h, &active, &mut v, vth, &mut spikes, Some(&mut counts));
+    }
+    counts
+}
+
+/// Full float forward (both layers) → predicted class.
+fn float_predict(model: &TrainedModel, sample: &crate::datasets::Sample) -> usize {
+    let h = model.sizes[1];
+    let c = model.sizes[2];
+    let mut v1 = vec![0.0f64; h];
+    let mut v2 = vec![0.0f64; c];
+    let mut counts = vec![0.0f64; c];
+    let mut sp1 = Vec::new();
+    let mut sp2 = Vec::new();
+    for t in 0..sample.t_steps {
+        let active: Vec<usize> =
+            sample.step(t).iter().enumerate().filter(|(_, &s)| s != 0).map(|(i, _)| i).collect();
+        float_layer_step(&model.weights[0], h, &active, &mut v1, model.vth, &mut sp1, None);
+        float_layer_step(&model.weights[1], c, &sp1, &mut v2, model.vth, &mut sp2, Some(&mut counts));
+    }
+    let mut best = 0;
+    for (i, &x) in counts.iter().enumerate() {
+        if x > counts[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Ridge-regression readout
+// ---------------------------------------------------------------------------
+
+/// Solve A·X = B for X (A is n×n row-major, B is n×nc) by Gaussian
+/// elimination with partial pivoting. A here is XᵀX + λI: symmetric positive
+/// definite and well conditioned, so this is numerically safe.
+fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize, nc: usize) {
+    for k in 0..n {
+        // Partial pivot.
+        let mut piv = k;
+        for i in (k + 1)..n {
+            if a[i * n + k].abs() > a[piv * n + k].abs() {
+                piv = i;
+            }
+        }
+        if piv != k {
+            for col in 0..n {
+                a.swap(k * n + col, piv * n + col);
+            }
+            for col in 0..nc {
+                b.swap(k * nc + col, piv * nc + col);
+            }
+        }
+        let diag = a[k * n + k];
+        assert!(diag.abs() > 1e-12, "ridge system singular at row {k}");
+        for i in (k + 1)..n {
+            let f = a[i * n + k] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for col in k..n {
+                a[i * n + col] -= f * a[k * n + col];
+            }
+            for col in 0..nc {
+                b[i * nc + col] -= f * b[k * nc + col];
+            }
+        }
+    }
+    // Back substitution (result lands in b).
+    for k in (0..n).rev() {
+        let diag = a[k * n + k];
+        for col in 0..nc {
+            let mut acc = b[k * nc + col];
+            for jj in (k + 1)..n {
+                acc -= a[k * n + jj] * b[jj * nc + col];
+            }
+            b[k * nc + col] = acc / diag;
+        }
+    }
+}
+
+/// Fit the readout on hidden counts over generated training data, scale it,
+/// and project it onto the fixed-point tier structure: per class at most 6
+/// strong positive taps in [0.26, 0.6] and 4 strong negatives in
+/// [-0.6, -0.26] (the Q3.1 survivors, wrap-safe by construction), everything
+/// else capped to ±0.24 (alive at Q5.3, zero at Q3.1).
+fn ridge_readout(ds: Dataset, w1: &[f64], h: usize, k_per_class: usize, vth: f64) -> Vec<f64> {
+    const LAMBDA: f64 = 50.0;
+    const GAMMA: f64 = 15.0;
+    let c = ds.classes();
+    let mut xs: Vec<Vec<f64>> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut counts = vec![0usize; c];
+    let mut idx = 0u64;
+    while counts.iter().min().copied().unwrap_or(0) < k_per_class
+        && (idx as usize) < k_per_class * c * 8
+    {
+        let s = ds.sample(idx, Split::Train, T_STEPS);
+        if counts[s.label] < k_per_class {
+            xs.push(hidden_counts(w1, h, &s, vth));
+            labels.push(s.label);
+            counts[s.label] += 1;
+        }
+        idx += 1;
+    }
+    // A = XᵀX + λI, B = XᵀY.
+    let mut a = vec![0.0f64; h * h];
+    let mut b = vec![0.0f64; h * c];
+    for (x, &l) in xs.iter().zip(&labels) {
+        for i in 0..h {
+            if x[i] == 0.0 {
+                continue;
+            }
+            for j in 0..h {
+                a[i * h + j] += x[i] * x[j];
+            }
+            b[i * c + l] += x[i];
+        }
+    }
+    for i in 0..h {
+        a[i * h + i] += LAMBDA;
+    }
+    solve_linear(&mut a, &mut b, h, c);
+    // Scale + tier projection.
+    let mut w2 = vec![0.0f64; h * c];
+    for cls in 0..c {
+        let col: Vec<f64> = (0..h).map(|j| b[j * c + cls] * GAMMA).collect();
+        let order = argsort_desc(&col);
+        for (rank, &j) in order.iter().enumerate() {
+            let v = col[j];
+            if v > 0.0 {
+                w2[j * c + cls] =
+                    if rank < 6 { v.clamp(0.26, 0.6) } else { v.min(0.24) };
+            }
+        }
+        let ordern = argsort_asc(&col);
+        for (rank, &j) in ordern.iter().enumerate() {
+            let v = col[j];
+            if v < 0.0 {
+                w2[j * c + cls] =
+                    if rank < 4 { v.clamp(-0.6, -0.26) } else { v.max(-0.24) };
+            }
+        }
+    }
+    w2
+}
+
+// ---------------------------------------------------------------------------
+// Public entry point
+// ---------------------------------------------------------------------------
+
+/// Calibrate one dataset's model (hidden bank + readout + float accuracy).
+pub fn train(ds: Dataset) -> TrainedModel {
+    let m = ds.inputs();
+    let c = ds.classes();
+    let vth = deploy_vth(ds);
+    let (w1, h) = match ds {
+        Dataset::Smnist => smnist_hidden(),
+        Dataset::Dvs => {
+            let n_bins = 20;
+            (proto_hidden(ds, n_bins), c * n_bins)
+        }
+        Dataset::Shd => {
+            let n_bins = 14;
+            (proto_hidden(ds, n_bins), c * n_bins)
+        }
+    };
+    let w2 = match ds {
+        Dataset::Smnist => ridge_readout(ds, &w1, h, 60, vth),
+        Dataset::Dvs => hand_readout(h, c, 20),
+        Dataset::Shd => ridge_readout(ds, &w1, h, 20, vth),
+    };
+    let mut model = TrainedModel {
+        dataset: ds,
+        sizes: vec![m, h, c],
+        t_steps: T_STEPS,
+        vth,
+        weights: vec![w1, w2],
+        float_acc: 0.0,
+    };
+    let n_eval = if ds == Dataset::Smnist { 100 } else { 40 };
+    let mut correct = 0usize;
+    for i in 0..n_eval {
+        let s = ds.sample(i as u64, Split::Test, T_STEPS);
+        if float_predict(&model, &s) == s.label {
+            correct += 1;
+        }
+    }
+    model.float_acc = correct as f64 / n_eval as f64;
+    model
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{Q3_1, Q5_3};
+
+    #[test]
+    fn solver_inverts_small_system() {
+        // A = [[2,1],[1,3]], B = [[5],[10]] -> x = [1, 3].
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![5.0, 10.0];
+        solve_linear(&mut a, &mut b, 2, 1);
+        assert!((b[0] - 1.0).abs() < 1e-12 && (b[1] - 3.0).abs() < 1e-12, "{b:?}");
+    }
+
+    #[test]
+    fn smnist_bank_is_wrap_safe() {
+        let (w1, h) = smnist_hidden();
+        assert_eq!(h, 300, "bank geometry: 10 classes x 15 shifts x 2 thicknesses");
+        for j in 0..h {
+            let (mut pos, mut neg) = (0.0f64, 0.0f64);
+            for i in 0..smnist::INPUTS {
+                let q = Q3_1.to_float(Q3_1.from_float(w1[i * h + j]));
+                if q > 0.0 {
+                    pos += q;
+                } else {
+                    neg += q;
+                }
+            }
+            // Q3.1 value range is [-4, 3.5]; simultaneous activation of every
+            // positive (or negative) input must not wrap the act register.
+            assert!(pos <= 3.5 + 1e-9, "neuron {j}: Q3.1 positive mass {pos}");
+            assert!(neg >= -4.0 - 1e-9, "neuron {j}: Q3.1 negative mass {neg}");
+        }
+    }
+
+    #[test]
+    fn anchors_survive_q31_and_fine_survives_q53() {
+        let (w1, _h) = smnist_hidden();
+        let mut q31_alive = 0usize;
+        let mut q53_alive = 0usize;
+        let mut total = 0usize;
+        for v in w1.iter().filter(|v| **v != 0.0) {
+            total += 1;
+            if Q3_1.from_float(*v) != 0 {
+                q31_alive += 1;
+            }
+            if Q5_3.from_float(*v) != 0 {
+                q53_alive += 1;
+            }
+        }
+        assert_eq!(q53_alive, total, "every nonzero weight must survive Q5.3");
+        assert!(q31_alive > 0 && q31_alive < total, "Q3.1 must keep only the anchor tier");
+    }
+}

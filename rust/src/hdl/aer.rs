@@ -13,15 +13,30 @@ pub struct AerEvent {
     pub addr: u32,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum AerError {
-    #[error("event address {addr} out of range (layer width {width})")]
     BadAddress { addr: u32, width: usize },
-    #[error("event timestamp {t} out of range (stream has {t_steps} steps)")]
     BadTime { t: u32, t_steps: usize },
-    #[error("event stream not ordered at index {index} ({prev:?} then {cur:?})")]
     Unordered { index: usize, prev: (u32, u32), cur: (u32, u32) },
 }
+
+impl std::fmt::Display for AerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AerError::BadAddress { addr, width } => {
+                write!(f, "event address {addr} out of range (layer width {width})")
+            }
+            AerError::BadTime { t, t_steps } => {
+                write!(f, "event timestamp {t} out of range (stream has {t_steps} steps)")
+            }
+            AerError::Unordered { index, prev, cur } => {
+                write!(f, "event stream not ordered at index {index} ({prev:?} then {cur:?})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AerError {}
 
 /// Dense row-major [T × N] spike matrix → ordered AER events.
 pub fn encode(spikes: &[u8], t_steps: usize, width: usize) -> Vec<AerEvent> {

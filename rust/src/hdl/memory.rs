@@ -13,17 +13,33 @@
 use crate::config::{MemKind, Topology};
 use crate::fixed::QSpec;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum MemError {
-    #[error("weight address ({pre}, {post}) out of range for {m}x{n} memory")]
     BadAddress { pre: usize, post: usize, m: usize, n: usize },
-    #[error("weight {value} does not fit {q}")]
     OutOfRange { value: i32, q: String },
-    #[error("connection ({pre}, {post}) is pruned by topology {topo} (α=0: no storage exists)")]
     Pruned { pre: usize, post: usize, topo: String },
-    #[error("expected {expect} weights for this memory, got {got}")]
     BulkSize { expect: usize, got: usize },
 }
+
+impl std::fmt::Display for MemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemError::BadAddress { pre, post, m, n } => {
+                write!(f, "weight address ({pre}, {post}) out of range for {m}x{n} memory")
+            }
+            MemError::OutOfRange { value, q } => write!(f, "weight {value} does not fit {q}"),
+            MemError::Pruned { pre, post, topo } => write!(
+                f,
+                "connection ({pre}, {post}) is pruned by topology {topo} (α=0: no storage exists)"
+            ),
+            MemError::BulkSize { expect, got } => {
+                write!(f, "expected {expect} weights for this memory, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MemError {}
 
 /// One layer's synaptic weight memory (row-major [M × N], i32 Qn.q raw).
 #[derive(Debug, Clone)]

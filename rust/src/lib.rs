@@ -23,8 +23,9 @@
 //! | [`hdl`]       | Fig. 2 neuron, Fig. 1 layered core, AER, clocking    |
 //! | [`hwmodel`]   | FPGA resources/power/timing + ASIC (Tables IV–XII)   |
 //! | [`datasets`]  | synthetic spiking datasets (§VI-A substitution)      |
-//! | [`coordinator`]| §IV hardware-software interface + Fig. 8 pipelining |
-//! | [`runtime`]   | PJRT client executing the AOT HLO artifacts          |
+//! | [`coordinator`]| §IV interface, Fig. 8 pipelining, [`coordinator::serving`] engine |
+//! | [`golden`]    | native artifact/golden-vector substrate (no Python)  |
+//! | [`runtime`]   | artifact manifest; PJRT executor behind `--features pjrt` |
 //! | [`baselines`] | non-pipelined dataflow [30] and Table VII designs    |
 //! | [`dse`]       | design-space exploration (Table IX)                  |
 //! | [`experiments`]| one generator per paper table/figure                |
@@ -36,6 +37,7 @@ pub mod datasets;
 pub mod dse;
 pub mod experiments;
 pub mod fixed;
+pub mod golden;
 pub mod hdl;
 pub mod hwmodel;
 pub mod runtime;

@@ -3,30 +3,31 @@
 //! Subcommands (hand-rolled parsing; clap is not available offline):
 //!
 //! ```text
+//! repro artifacts             (re)generate the native artifact store
 //! repro table <id>            regenerate a paper table (4..12, g)
 //! repro figure <id>           regenerate a paper figure (3, 4, 10, 12, 13, 14)
 //! repro all                   every table & figure, in paper order
-//! repro serve [opts]          batched inference service over the PJRT path
-//! repro serve --hdl [opts]    …over the cycle-accurate core instead
+//! repro serve [opts]          batched inference over the ServingEngine
 //! repro explore <arch> [Q]    DSE estimate for an architecture on all boards
+//! repro codegen <arch>        emit Verilog HDL + self-checking testbench
 //! repro info                  artifact manifest + platform summary
 //! ```
 //!
 //! `serve` options: `--dataset smnist|dvs|shd` `--q Q5.3` `--n <samples>`
-//! `--cores <C>` `--pipeline`.
+//! `--cores <C>` `--pipeline` `--multicore` `--pjrt` (needs `--features pjrt`).
 
 use anyhow::{Context, Result};
 use std::time::Instant;
 
 use quantisenc::coordinator::metrics::Telemetry;
 use quantisenc::coordinator::pipeline;
+use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
 use quantisenc::datasets::{Dataset, Split};
 use quantisenc::dse;
 use quantisenc::experiments;
 use quantisenc::fixed::QSpec;
 use quantisenc::hwmodel::Board;
 use quantisenc::runtime::artifacts::Manifest;
-use quantisenc::runtime::Runtime;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -36,13 +37,23 @@ fn main() {
     }
 }
 
+/// Load the manifest, bootstrapping the native artifact store if needed.
 fn manifest() -> Result<Manifest> {
-    Manifest::load(&quantisenc::artifacts_dir())
+    Manifest::load(&quantisenc::golden::ensure_artifacts()?)
 }
 
 fn dispatch(args: &[String]) -> Result<()> {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     match cmd {
+        "artifacts" => {
+            let dir = quantisenc::artifacts_dir();
+            println!("generating native artifact store at {} ...", dir.display());
+            let t0 = Instant::now();
+            quantisenc::golden::generate(&dir)?;
+            let m = Manifest::load(&dir)?;
+            println!("done in {:.1?}: models {:?}", t0.elapsed(), m.datasets());
+            Ok(())
+        }
         "table" => {
             let id = args.get(1).context("usage: repro table <id>")?;
             let m = manifest().ok();
@@ -103,8 +114,15 @@ fn dispatch(args: &[String]) -> Result<()> {
                 println!("  model {ds}: variants {:?}", m.variants(&ds)?);
             }
             println!("  kernels: {:?}", m.kernels());
-            let rt = Runtime::cpu()?;
-            println!("PJRT platform: {}", rt.platform());
+            #[cfg(feature = "pjrt")]
+            {
+                match quantisenc::runtime::Runtime::cpu() {
+                    Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+                    Err(e) => println!("PJRT runtime unavailable: {e:#}"),
+                }
+            }
+            #[cfg(not(feature = "pjrt"))]
+            println!("PJRT runtime: disabled (rebuild with --features pjrt)");
             Ok(())
         }
         "codegen" => {
@@ -155,10 +173,12 @@ fn dispatch(args: &[String]) -> Result<()> {
 }
 
 const HELP: &str = "repro — QUANTISENC reproduction CLI
+  artifacts       (re)generate the native artifact store (no Python needed)
   table <id>      regenerate a paper table (4,5,6,7,8,9,10,11,12,g)
   figure <id>     regenerate a paper figure (3,4,10,12,13,14)
   all             everything, in paper order
-  serve           batched inference service (PJRT; --hdl for cycle-accurate)
+  serve           batched inference service (ServingEngine; --pipeline /
+                  --multicore for the legacy paths, --pjrt with the feature)
   explore <arch>  DSE estimate, e.g. repro explore 256x512x10 Q5.3
   codegen <arch>  emit Verilog HDL + self-checking SV testbench (paper §IV)
   info            artifact + platform summary";
@@ -171,22 +191,32 @@ fn serve(args: &[String]) -> Result<()> {
     let ds_name = flag_val(args, "--dataset").unwrap_or("smnist");
     let qname = flag_val(args, "--q").unwrap_or("Q5.3");
     let n: u64 = flag_val(args, "--n").unwrap_or("100").parse()?;
-    let cores: usize = flag_val(args, "--cores").unwrap_or("1").parse()?;
-    let use_hdl = args.iter().any(|a| a == "--hdl");
+    let cores: usize = flag_val(args, "--cores").unwrap_or("2").parse()?;
     let use_pipeline = args.iter().any(|a| a == "--pipeline");
+    let use_multicore = args.iter().any(|a| a == "--multicore" || a == "--hdl");
+    let use_pjrt = args.iter().any(|a| a == "--pjrt");
     let dataset = Dataset::parse(ds_name).context("bad --dataset")?;
 
     let m = manifest()?;
     let art = m.model(ds_name, qname)?;
+    let backend = if use_pjrt {
+        "pjrt"
+    } else if use_pipeline {
+        "pipeline"
+    } else if use_multicore {
+        "multicore"
+    } else {
+        "serving-engine"
+    };
     println!(
-        "serving {ds_name} ({}) {qname}, {n} requests, backend={}{}",
+        "serving {ds_name} ({}) {qname}, {n} requests, backend={backend}",
         art.sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("x"),
-        if use_hdl { "hdl" } else { "pjrt" },
-        if use_pipeline { "+pipeline" } else { "" },
     );
 
-    let mut tel = Telemetry::new();
-    tel.start();
+    if use_pjrt {
+        return serve_pjrt(&art, dataset, n);
+    }
+
     if use_pipeline {
         // Layer-pipelined streaming over the cycle-accurate core (Fig. 8).
         let (config, core) = experiments::core_from_artifact(&art)?;
@@ -195,7 +225,6 @@ fn serve(args: &[String]) -> Result<()> {
         let t0 = Instant::now();
         let results = pipeline::run_pipelined(&config, &art.weights, &core.registers, &samples)?;
         let dt = t0.elapsed();
-        tel.stop();
         let correct =
             results.iter().zip(&samples).filter(|(r, s)| r.prediction == s.label).count();
         println!(
@@ -208,7 +237,9 @@ fn serve(args: &[String]) -> Result<()> {
         return Ok(());
     }
 
-    if use_hdl {
+    if use_multicore {
+        let mut tel = Telemetry::new();
+        tel.start();
         let (config, core) = experiments::core_from_artifact(&art)?;
         let mut mc = quantisenc::coordinator::multicore::MultiCore::new(
             &config,
@@ -235,9 +266,42 @@ fn serve(args: &[String]) -> Result<()> {
         return Ok(());
     }
 
-    // Default: PJRT request path.
-    let rt = Runtime::cpu()?;
-    let exe = rt.load_model(&art)?;
+    // Default: the unified ServingEngine (C sharded cores × pipelined layers).
+    let (config, core) = experiments::core_from_artifact(&art)?;
+    let mut engine = ServingEngine::new(
+        &config,
+        &art.weights,
+        &core.registers,
+        ServingOptions::with_cores(cores),
+    )?;
+    let samples: Vec<_> = (0..n).map(|i| dataset.sample(i, Split::Test, art.t_steps)).collect();
+    let t0 = Instant::now();
+    let results = engine.run_batch(&samples)?;
+    let dt = t0.elapsed();
+    let correct = results.iter().zip(&samples).filter(|(r, s)| r.prediction == s.label).count();
+    let (submitted, completed) = engine.stats();
+    println!(
+        "serving-engine: {} streams on {} cores in {:.2?} ({:.1}/s), accuracy {:.1}%, \
+         admitted={submitted} completed={completed}",
+        results.len(),
+        engine.num_cores(),
+        dt,
+        results.len() as f64 / dt.as_secs_f64(),
+        100.0 * correct as f64 / n as f64
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(
+    art: &quantisenc::runtime::artifacts::ModelArtifact,
+    dataset: Dataset,
+    n: u64,
+) -> Result<()> {
+    let rt = quantisenc::runtime::Runtime::cpu()?;
+    let exe = rt.load_model(art)?;
+    let mut tel = Telemetry::new();
+    tel.start();
     for i in 0..n {
         let s = dataset.sample(i, Split::Test, art.t_steps);
         let t0 = Instant::now();
@@ -256,5 +320,11 @@ fn serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-// -- codegen subcommand lives at the bottom to keep dispatch readable; it is
-// registered in `dispatch` via the fallthrough below.
+#[cfg(not(feature = "pjrt"))]
+fn serve_pjrt(
+    _art: &quantisenc::runtime::artifacts::ModelArtifact,
+    _dataset: Dataset,
+    _n: u64,
+) -> Result<()> {
+    anyhow::bail!("the PJRT backend is feature-gated: rebuild with `--features pjrt`")
+}

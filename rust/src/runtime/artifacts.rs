@@ -27,7 +27,43 @@ pub struct ModelArtifact {
     pub float_acc: f64,
 }
 
-/// Parsed manifest (the index of everything Python produced).
+/// Typed artifact-store failures, each carrying its own actionable message
+/// (so a missing store reports the fix instead of surfacing as a test-time
+/// panic): `Missing` means nobody has built the artifacts yet, `Unreadable`
+/// means the store exists but could not be read (the I/O error is
+/// preserved), `Corrupt` means `manifest.json` is not valid JSON.
+#[derive(Debug)]
+pub enum ArtifactsError {
+    /// `manifest.json` is absent from the artifacts directory.
+    Missing { dir: PathBuf },
+    /// `manifest.json` exists but reading it failed (permissions, I/O).
+    Unreadable { path: PathBuf, detail: String },
+    /// `manifest.json` exists but is not valid JSON.
+    Corrupt { path: PathBuf, detail: String },
+}
+
+impl std::fmt::Display for ArtifactsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactsError::Missing { dir } => write!(
+                f,
+                "artifacts missing: no manifest.json in {} — run `make artifacts` \
+                 (or call quantisenc::golden::ensure_artifacts()) first",
+                dir.display()
+            ),
+            ArtifactsError::Unreadable { path, detail } => {
+                write!(f, "artifacts unreadable: {}: {detail}", path.display())
+            }
+            ArtifactsError::Corrupt { path, detail } => {
+                write!(f, "artifacts corrupt: {} does not parse: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactsError {}
+
+/// Parsed manifest (the index of everything the build path produced).
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub root: PathBuf,
@@ -37,9 +73,17 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
-        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(ArtifactsError::Missing { dir: dir.to_path_buf() }.into())
+            }
+            Err(e) => {
+                return Err(ArtifactsError::Unreadable { path, detail: e.to_string() }.into())
+            }
+        };
+        let json = Json::parse(&text)
+            .map_err(|e| ArtifactsError::Corrupt { path: path.clone(), detail: e.to_string() })?;
         Ok(Manifest { root: dir.to_path_buf(), json })
     }
 

@@ -1,140 +1,159 @@
-//! PJRT runtime — loads the AOT HLO artifacts produced by
-//! `python/compile/aot.py` and executes them on the request path.
-//!
-//! This is the rust side of the three-layer bridge: HLO **text** (never a
-//! serialized proto — jax ≥ 0.5 emits 64-bit instruction ids which
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids) is parsed by
-//! `HloModuleProto::from_text_file`, compiled once per model variant on the
-//! PJRT CPU client, and executed with i32 literals.
+//! Runtime layer — artifact loading plus (behind the `pjrt` feature) the
+//! PJRT executor for the AOT HLO artifacts.
 //!
 //! * [`artifacts`] — manifest parsing, weight-file loading, golden vectors.
-//! * [`ModelExecutable`] — a compiled dataset forward: feed a spike train +
-//!   weights + control registers, get class counts and per-layer spike
-//!   totals (bit-exact with `hdl::Core::run`).
+//!   Always available; the native substrate in [`crate::golden`] can
+//!   regenerate every artifact the manifest describes without Python.
+//! * [`Runtime`] / [`ModelExecutable`] (feature `pjrt`) — loads the AOT HLO
+//!   text produced by `python/compile/aot.py` and executes it on the PJRT
+//!   CPU client. Off by default so the stock build carries zero XLA
+//!   dependencies; the workspace ships a vendored API stub, and pointing
+//!   the `xla` path dependency at the real bindings enables execution.
+//!
+//! HLO is shipped as **text** (never a serialized proto — jax ≥ 0.5 emits
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids).
 
 pub mod artifacts;
 
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod pjrt_runtime {
+    use anyhow::{Context, Result};
+    use std::path::Path;
 
-use crate::config::registers::NUM_REGS;
+    use crate::config::registers::NUM_REGS;
+    use crate::runtime::artifacts;
 
-/// Shared PJRT CPU client (one per process; compilation is cached per
-/// executable, mirroring "one compiled executable per model variant").
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    /// Shared PJRT CPU client (one per process; compilation is cached per
+    /// executable, mirroring "one compiled executable per model variant").
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text file.
-    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))
-    }
-
-    /// Load + compile a dataset forward artifact described by the manifest.
-    pub fn load_model(&self, art: &artifacts::ModelArtifact) -> Result<ModelExecutable> {
-        let exe = self.compile_hlo_file(&art.hlo_path)?;
-        Ok(ModelExecutable {
-            exe,
-            t_steps: art.t_steps,
-            inputs: art.layer_shapes[0].0,
-            layer_shapes: art.layer_shapes.clone(),
-            weights: art.weights.clone(),
-            regs: art.default_regs,
-        })
-    }
-}
-
-/// A compiled dataset forward: `(spikes [T,N_in], W_1..W_K, regs[6]) ->
-/// (counts [n_out], layer_spike_totals [K])`.
-pub struct ModelExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    pub t_steps: usize,
-    pub inputs: usize,
-    pub layer_shapes: Vec<(usize, usize)>,
-    /// Currently-programmed weights (dense row-major per layer) — the wt_in
-    /// state. Mutable at run time, exactly like the hardware's synaptic
-    /// memory.
-    pub weights: Vec<Vec<i32>>,
-    /// Currently-programmed control registers — the cfg_in state.
-    pub regs: [i32; NUM_REGS],
-}
-
-/// Inference result from the PJRT path.
-#[derive(Debug, Clone)]
-pub struct PjrtRun {
-    pub counts: Vec<i32>,
-    pub layer_spikes: Vec<i32>,
-    pub prediction: usize,
-}
-
-impl ModelExecutable {
-    /// Execute one sample (spike train as row-major [T × N_in] 0/1 bytes).
-    pub fn run(&self, spikes: &[u8]) -> Result<PjrtRun> {
-        anyhow::ensure!(
-            spikes.len() == self.t_steps * self.inputs,
-            "spike train shape mismatch: got {}, expected {}x{}",
-            spikes.len(),
-            self.t_steps,
-            self.inputs
-        );
-        let spikes_i32: Vec<i32> = spikes.iter().map(|&x| x as i32).collect();
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(2 + self.weights.len());
-        args.push(
-            xla::Literal::vec1(&spikes_i32)
-                .reshape(&[self.t_steps as i64, self.inputs as i64])?,
-        );
-        for (w, &(m, n)) in self.weights.iter().zip(&self.layer_shapes) {
-            args.push(xla::Literal::vec1(w).reshape(&[m as i64, n as i64])?);
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Ok(Runtime { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
         }
-        let regs: Vec<i32> = self.regs.to_vec();
-        args.push(xla::Literal::vec1(&regs));
 
-        let arg_refs: Vec<&xla::Literal> = args.iter().collect();
-        let result = self.exe.execute::<&xla::Literal>(&arg_refs)?[0][0].to_literal_sync()?;
-        // Lowered with return_tuple=True: (counts, layer_spike_totals).
-        let counts_lit = result.to_tuple()?;
-        anyhow::ensure!(counts_lit.len() == 2, "expected 2-tuple output, got {}", counts_lit.len());
-        let counts = counts_lit[0].to_vec::<i32>()?;
-        let layer_spikes = counts_lit[1].to_vec::<i32>()?;
-        let mut prediction = 0;
-        for (i, &c) in counts.iter().enumerate() {
-            if c > counts[prediction] {
-                prediction = i;
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text file.
+        pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        }
+
+        /// Load + compile a dataset forward artifact described by the manifest.
+        pub fn load_model(&self, art: &artifacts::ModelArtifact) -> Result<ModelExecutable> {
+            let exe = self.compile_hlo_file(&art.hlo_path)?;
+            Ok(ModelExecutable {
+                exe,
+                t_steps: art.t_steps,
+                inputs: art.layer_shapes[0].0,
+                layer_shapes: art.layer_shapes.clone(),
+                weights: art.weights.clone(),
+                regs: art.default_regs,
+            })
+        }
+    }
+
+    /// A compiled dataset forward: `(spikes [T,N_in], W_1..W_K, regs[6]) ->
+    /// (counts [n_out], layer_spike_totals [K])`.
+    pub struct ModelExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        pub t_steps: usize,
+        pub inputs: usize,
+        pub layer_shapes: Vec<(usize, usize)>,
+        /// Currently-programmed weights (dense row-major per layer) — the wt_in
+        /// state. Mutable at run time, exactly like the hardware's synaptic
+        /// memory.
+        pub weights: Vec<Vec<i32>>,
+        /// Currently-programmed control registers — the cfg_in state.
+        pub regs: [i32; NUM_REGS],
+    }
+
+    /// Inference result from the PJRT path.
+    #[derive(Debug, Clone)]
+    pub struct PjrtRun {
+        pub counts: Vec<i32>,
+        pub layer_spikes: Vec<i32>,
+        pub prediction: usize,
+    }
+
+    impl ModelExecutable {
+        /// Execute one sample (spike train as row-major [T × N_in] 0/1 bytes).
+        pub fn run(&self, spikes: &[u8]) -> Result<PjrtRun> {
+            anyhow::ensure!(
+                spikes.len() == self.t_steps * self.inputs,
+                "spike train shape mismatch: got {}, expected {}x{}",
+                spikes.len(),
+                self.t_steps,
+                self.inputs
+            );
+            let spikes_i32: Vec<i32> = spikes.iter().map(|&x| x as i32).collect();
+            let mut args: Vec<xla::Literal> = Vec::with_capacity(2 + self.weights.len());
+            args.push(
+                xla::Literal::vec1(&spikes_i32)
+                    .reshape(&[self.t_steps as i64, self.inputs as i64])?,
+            );
+            for (w, &(m, n)) in self.weights.iter().zip(&self.layer_shapes) {
+                args.push(xla::Literal::vec1(w).reshape(&[m as i64, n as i64])?);
             }
+            let regs: Vec<i32> = self.regs.to_vec();
+            args.push(xla::Literal::vec1(&regs));
+
+            let arg_refs: Vec<&xla::Literal> = args.iter().collect();
+            let result = self.exe.execute::<&xla::Literal>(&arg_refs)?[0][0].to_literal_sync()?;
+            // Lowered with return_tuple=True: (counts, layer_spike_totals).
+            let counts_lit = result.to_tuple()?;
+            anyhow::ensure!(
+                counts_lit.len() == 2,
+                "expected 2-tuple output, got {}",
+                counts_lit.len()
+            );
+            let counts = counts_lit[0].to_vec::<i32>()?;
+            let layer_spikes = counts_lit[1].to_vec::<i32>()?;
+            let mut prediction = 0;
+            for (i, &c) in counts.iter().enumerate() {
+                if c > counts[prediction] {
+                    prediction = i;
+                }
+            }
+            Ok(PjrtRun { counts, layer_spikes, prediction })
         }
-        Ok(PjrtRun { counts, layer_spikes, prediction })
-    }
 
-    /// cfg_in: program the control-register vector.
-    pub fn program_regs(&mut self, regs: [i32; NUM_REGS]) {
-        self.regs = regs;
-    }
+        /// cfg_in: program the control-register vector.
+        pub fn program_regs(&mut self, regs: [i32; NUM_REGS]) {
+            self.regs = regs;
+        }
 
-    /// wt_in: program a single synaptic weight (per-weight addressing).
-    pub fn program_weight(&mut self, layer: usize, pre: usize, post: usize, w: i32) -> Result<()> {
-        let (m, n) = *self
-            .layer_shapes
-            .get(layer)
-            .with_context(|| format!("layer {layer} out of range"))?;
-        anyhow::ensure!(pre < m && post < n, "weight address ({pre},{post}) out of {m}x{n}");
-        self.weights[layer][pre * n + post] = w;
-        Ok(())
+        /// wt_in: program a single synaptic weight (per-weight addressing).
+        pub fn program_weight(
+            &mut self,
+            layer: usize,
+            pre: usize,
+            post: usize,
+            w: i32,
+        ) -> Result<()> {
+            let (m, n) = *self
+                .layer_shapes
+                .get(layer)
+                .with_context(|| format!("layer {layer} out of range"))?;
+            anyhow::ensure!(pre < m && post < n, "weight address ({pre},{post}) out of {m}x{n}");
+            self.weights[layer][pre * n + post] = w;
+            Ok(())
+        }
     }
 }
 
-// PJRT-dependent tests live in rust/tests/ (integration) because they need
-// the built artifacts directory.
+#[cfg(feature = "pjrt")]
+pub use pjrt_runtime::{ModelExecutable, PjrtRun, Runtime};
+
+// PJRT-dependent tests live in rust/tests/integration_runtime.rs (gated on
+// the `pjrt` feature in Cargo.toml) because they need the built artifacts.

@@ -1,6 +1,9 @@
-//! Cross-language golden-vector parity: the Rust substrates must match the
-//! Python/JAX side bit-for-bit on fixed-point ops, multi-step LIF traces
-//! (all four reset modes), and dataset generation.
+//! Golden-vector parity: the runtime substrates must match the recorded
+//! golden vectors bit-for-bit on fixed-point ops, multi-step LIF traces
+//! (all four reset modes), and dataset generation. The vectors are
+//! regenerated natively by `quantisenc::golden` (no Python step), so these
+//! tests pin the on-disk contract a deployed store must satisfy — any
+//! semantic drift between the generator and the simulator trips them.
 
 use quantisenc::config::registers::RegisterFile;
 use quantisenc::config::{LayerConfig, MemKind, Topology};
@@ -11,7 +14,8 @@ use quantisenc::runtime::artifacts::Manifest;
 use quantisenc::util::json::Json;
 
 fn manifest() -> Manifest {
-    Manifest::load(&quantisenc::artifacts_dir()).expect("run `make artifacts` first")
+    let dir = quantisenc::golden::ensure_artifacts().expect("native artifact bootstrap");
+    Manifest::load(&dir).expect("load generated manifest")
 }
 
 #[test]

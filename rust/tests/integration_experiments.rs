@@ -1,12 +1,14 @@
 //! Integration: every paper table/figure generator runs against the real
 //! artifacts and reproduces the paper's qualitative shape (who wins, which
-//! way the trend points). Requires `make artifacts`.
+//! way the trend points). The artifact store is bootstrapped natively on
+//! first use — no Python step required.
 
 use quantisenc::experiments;
 use quantisenc::runtime::artifacts::Manifest;
 
 fn manifest() -> Manifest {
-    Manifest::load(&quantisenc::artifacts_dir()).expect("run `make artifacts` first")
+    let dir = quantisenc::golden::ensure_artifacts().expect("native artifact bootstrap");
+    Manifest::load(&dir).expect("load generated manifest")
 }
 
 #[test]

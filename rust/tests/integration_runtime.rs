@@ -13,7 +13,8 @@ use quantisenc::hdl::Core;
 use quantisenc::runtime::{artifacts::Manifest, Runtime};
 
 fn manifest() -> Manifest {
-    Manifest::load(&quantisenc::artifacts_dir()).expect("run `make artifacts` first")
+    let dir = quantisenc::golden::ensure_artifacts().expect("native artifact bootstrap");
+    Manifest::load(&dir).expect("load generated manifest")
 }
 
 #[test]

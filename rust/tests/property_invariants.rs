@@ -7,9 +7,10 @@ use quantisenc::config::registers::{RegisterFile, ResetMode, NUM_REGS, REG_REFRA
 use quantisenc::config::{ModelConfig, Topology};
 use quantisenc::coordinator::multicore::MultiCore;
 use quantisenc::coordinator::pipeline::run_pipelined;
+use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
 use quantisenc::datasets::rng::XorShift64Star;
 use quantisenc::datasets::Sample;
-use quantisenc::fixed::{QSpec, Q2_2, Q5_3, Q9_7};
+use quantisenc::fixed::{QSpec, Q17_15, Q2_2, Q3_1, Q5_3, Q9_7};
 use quantisenc::hdl::{aer, Core};
 
 fn random_config(rng: &mut XorShift64Star) -> ModelConfig {
@@ -227,6 +228,94 @@ fn prop_one_to_one_locality() {
                 // count output spikes of neuron j by rerunning trace
                 assert_eq!(r.counts[j] == 0, true, "neuron {j} spiked without input");
             }
+        }
+    }
+}
+
+/// Fixed-point saturation: `from_float` clamps to [min_raw, max_raw] for
+/// arbitrary (including non-finite-free extreme) floats, and the clamped
+/// value round-trips through `to_float`/`from_float`.
+#[test]
+fn prop_from_float_saturates_to_bounds() {
+    let mut rng = XorShift64Star::new(0x5EED_10);
+    for qs in [Q2_2, Q3_1, Q5_3, Q9_7, Q17_15] {
+        let max_v = qs.to_float(qs.max_raw());
+        let min_v = qs.to_float(qs.min_raw());
+        for _ in 0..300 {
+            let x = (rng.uniform() - 0.5) * 1e7;
+            let raw = qs.from_float(x);
+            assert!(qs.in_range(raw), "{qs}: from_float({x}) -> {raw} out of range");
+            if x >= max_v {
+                assert_eq!(raw, qs.max_raw(), "{qs}: {x} must saturate high");
+            }
+            if x <= min_v {
+                assert_eq!(raw, qs.min_raw(), "{qs}: {x} must saturate low");
+            }
+            // Representable values are fixed points of the conversion.
+            assert_eq!(qs.from_float(qs.to_float(raw)), raw, "{qs} round-trip of {raw}");
+        }
+    }
+}
+
+/// Sign-extension round-trips: any in-range raw value is a fixed point of
+/// `wrap`, and wrapping is periodic with period 2^W (the silicon register
+/// semantics).
+#[test]
+fn prop_wrap_sign_extension_roundtrip() {
+    let mut rng = XorShift64Star::new(0x5EED_11);
+    for qs in [Q2_2, Q3_1, Q5_3, Q9_7, Q17_15] {
+        let period = 1i128 << qs.width();
+        for _ in 0..300 {
+            let raw = qs.wrap(rng.next_u64() as i64);
+            assert_eq!(qs.wrap(raw as i64), raw, "{qs}: wrap must fix in-range values");
+            // Shift by a few whole periods (stay inside i64).
+            let k = (rng.below(7) as i128) - 3;
+            let shifted = raw as i128 + k * period;
+            if shifted >= i64::MIN as i128 && shifted <= i64::MAX as i128 {
+                assert_eq!(qs.wrap(shifted as i64), raw, "{qs}: wrap must be mod-2^W");
+            }
+        }
+    }
+}
+
+/// The unified ServingEngine must equal the sequential core bit-for-bit for
+/// random topologies, register files (all reset modes / refractory values),
+/// and core counts — and must agree with MultiCore on the same batch.
+#[test]
+fn prop_serving_engine_equals_sequential_core() {
+    let mut rng = XorShift64Star::new(0x5EED_12);
+    for case in 0..8 {
+        let cfg = random_config(&mut rng);
+        let weights = random_weights(&cfg, &mut rng);
+        let samples = random_samples(&cfg, &mut rng, 5);
+        let mut regs = RegisterFile::new(cfg.qspec);
+        regs.write(REG_RESET_MODE, rng.below(4) as i32).unwrap();
+        regs.write(REG_REFRACTORY, rng.below(4) as i32).unwrap();
+
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        let reference: Vec<_> = samples.iter().map(|s| core.run(s)).collect();
+
+        for cores in [1usize, 3] {
+            let mut engine =
+                ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(cores))
+                    .unwrap();
+            let out = engine.run_batch(&samples).unwrap();
+            assert_eq!(out.len(), samples.len());
+            for (i, (r, want)) in out.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    r.counts, want.counts,
+                    "case {case} cores {cores} sample {i} ({})",
+                    cfg.arch_name()
+                );
+                assert_eq!(r.prediction, want.prediction, "case {case} cores {cores} sample {i}");
+            }
+        }
+
+        let mc = MultiCore::new(&cfg, &weights, &regs, 2).unwrap().run_batch(&samples);
+        for (r, want) in mc.iter().zip(&reference) {
+            assert_eq!(r.counts, want.counts, "case {case}: MultiCore diverged");
         }
     }
 }
