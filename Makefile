@@ -1,6 +1,6 @@
 # Convenience targets; everything is plain cargo underneath.
 
-.PHONY: all build test artifacts bench fmt clippy
+.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology fmt clippy
 
 all: build
 
@@ -17,6 +17,17 @@ artifacts:
 bench:
 	cargo bench --bench bench_serving
 	cargo bench --bench bench_pipeline
+
+# Compile-check every bench target without running it (CI rot guard).
+bench-norun:
+	cargo bench --no-run
+
+# Quick smoke: run the topology benches and emit BENCH_topology.json with
+# per-topology storage words, synaptic ops/step, and step latency.
+bench-topology:
+	BENCH_TOPOLOGY_JSON=BENCH_topology.json cargo bench --bench bench_layer
+
+bench-smoke: bench-topology
 
 fmt:
 	cargo fmt --all -- --check

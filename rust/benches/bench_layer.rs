@@ -1,13 +1,39 @@
 //! Bench: one-layer timestep per connection modality — the workload behind
-//! paper Table V (one-to-one, conv 3x3/5x5, FC-128/256/512).
+//! paper Table V (one-to-one, conv 3x3/5x5, FC-128/256/512), now measuring
+//! the topology-aware sparse stores: each case reports its physical storage
+//! words, the synaptic accumulates actually performed per step, and the
+//! step latency, so the O(nnz) win of banded/diagonal storage over the
+//! dense walk is visible in the output.
+//!
+//! Set `BENCH_TOPOLOGY_JSON=<path>` to additionally emit the results as a
+//! JSON report (the Makefile `bench-smoke` target writes
+//! `BENCH_topology.json`).
+
+use std::collections::BTreeMap;
 
 use quantisenc::config::{LayerConfig, MemKind, Topology};
 use quantisenc::datasets::rng::XorShift64Star;
 use quantisenc::fixed::Q5_3;
 use quantisenc::hdl::Layer;
 use quantisenc::util::bench::quick;
+use quantisenc::util::json::Json;
 
-fn bench_topology(name: &str, m: usize, n: usize, topo: Topology, density: f64) {
+struct CaseResult {
+    name: String,
+    topology: String,
+    m: usize,
+    n: usize,
+    /// Physical storage words (α=1 synapses) vs the dense M×N footprint.
+    words: usize,
+    dense_words: usize,
+    /// Synaptic accumulates in one timestep of the benchmarked spike vector.
+    synaptic_ops: u64,
+    gated_ops: u64,
+    mean_us: f64,
+    steps_per_sec: f64,
+}
+
+fn bench_topology(name: &str, m: usize, n: usize, topo: Topology, density: f64) -> CaseResult {
     let cfg = LayerConfig { fan_in: m, neurons: n, topology: topo };
     let mut layer = Layer::new(&cfg, Q5_3, MemKind::Bram);
     let mut rng = XorShift64Star::new(0xB0B);
@@ -23,23 +49,95 @@ fn bench_topology(name: &str, m: usize, n: usize, topo: Topology, density: f64) 
             }
         }
     }
-    let spikes: Vec<u8> = (0..m).map(|_| (rng.uniform() < density) as u8).collect();
+    // Spike stream from a dedicated, shape-seeded generator so every
+    // topology of the same (m, density) sees the identical input — the
+    // synaptic-op comparison across topologies is then apples-to-apples.
+    let mut srng = XorShift64Star::new(0x5EED ^ ((m as u64) << 20) ^ (density * 1e3) as u64);
+    let spikes: Vec<u8> = (0..m).map(|_| (srng.uniform() < density) as u8).collect();
     let mut out = Vec::new();
-    quick(&format!("layer_step/{name}"), || {
+    let stats = layer.step(&spikes, &mut out);
+    let r = quick(&format!("layer_step/{name}"), || {
         std::hint::black_box(layer.step(std::hint::black_box(&spikes), &mut out));
     });
+    CaseResult {
+        name: name.to_string(),
+        topology: topo.label(),
+        m,
+        n,
+        words: layer.memory().synapses(),
+        dense_words: m * n,
+        synaptic_ops: stats.synaptic_ops,
+        gated_ops: stats.gated_ops,
+        mean_us: r.mean.as_secs_f64() * 1e6,
+        steps_per_sec: r.per_sec(),
+    }
+}
+
+fn case_json(c: &CaseResult) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(c.name.clone()));
+    o.insert("topology".to_string(), Json::Str(c.topology.clone()));
+    o.insert("m".to_string(), Json::Num(c.m as f64));
+    o.insert("n".to_string(), Json::Num(c.n as f64));
+    o.insert("storage_words".to_string(), Json::Num(c.words as f64));
+    o.insert("dense_words".to_string(), Json::Num(c.dense_words as f64));
+    o.insert("synaptic_ops_per_step".to_string(), Json::Num(c.synaptic_ops as f64));
+    o.insert("gated_ops_per_step".to_string(), Json::Num(c.gated_ops as f64));
+    o.insert("mean_us".to_string(), Json::Num(c.mean_us));
+    o.insert("steps_per_sec".to_string(), Json::Num(c.steps_per_sec));
+    Json::Obj(o)
 }
 
 fn main() {
-    println!("== bench_layer (Table V workload) ==");
-    bench_topology("one_to_one_128", 128, 128, Topology::OneToOne, 0.3);
-    bench_topology("conv3x3_256", 256, 256, Topology::Gaussian { radius: 1 }, 0.3);
-    bench_topology("conv5x5_256", 256, 256, Topology::Gaussian { radius: 2 }, 0.3);
-    bench_topology("fc_128", 128, 128, Topology::AllToAll, 0.3);
-    bench_topology("fc_256", 256, 256, Topology::AllToAll, 0.3);
-    bench_topology("fc_512", 512, 512, Topology::AllToAll, 0.3);
+    println!("== bench_layer (Table V workload, topology-aware stores) ==");
+    let mut cases = Vec::new();
+    cases.push(bench_topology("one_to_one_128", 128, 128, Topology::OneToOne, 0.3));
+    cases.push(bench_topology("conv3x3_256", 256, 256, Topology::Gaussian { radius: 1 }, 0.3));
+    cases.push(bench_topology("conv5x5_256", 256, 256, Topology::Gaussian { radius: 2 }, 0.3));
+    cases.push(bench_topology("fc_128", 128, 128, Topology::AllToAll, 0.3));
+    cases.push(bench_topology("fc_256", 256, 256, Topology::AllToAll, 0.3));
+    cases.push(bench_topology("fc_512", 512, 512, Topology::AllToAll, 0.3));
+    // The acceptance-point comparison: N=400 at matched spike streams.
+    cases.push(bench_topology("one_to_one_400", 400, 400, Topology::OneToOne, 0.3));
+    cases.push(bench_topology("gaussian_r1_400", 400, 400, Topology::Gaussian { radius: 1 }, 0.3));
+    cases.push(bench_topology("gaussian_r2_400", 400, 400, Topology::Gaussian { radius: 2 }, 0.3));
+    cases.push(bench_topology("fc_400", 400, 400, Topology::AllToAll, 0.3));
     // Gating sensitivity: the same FC layer at different input densities.
     for density in [0.05, 0.3, 0.9] {
-        bench_topology(&format!("fc_256_density_{density}"), 256, 256, Topology::AllToAll, density);
+        cases.push(bench_topology(
+            &format!("fc_256_density_{density}"),
+            256,
+            256,
+            Topology::AllToAll,
+            density,
+        ));
+    }
+
+    println!("\nstorage + per-step synaptic work (one timestep, density 0.3 unless noted):");
+    for c in &cases {
+        println!(
+            "  {:24} {:>9} words (dense {:>9})  {:>8} synaptic ops/step",
+            c.name, c.words, c.dense_words, c.synaptic_ops
+        );
+    }
+    let find = |name: &str| cases.iter().find(|c| c.name == name).unwrap();
+    let (gauss, full) = (find("gaussian_r1_400"), find("fc_400"));
+    println!(
+        "\ngaussian_r1_400 vs fc_400: {:.1}x fewer synaptic ops, {:.1}x fewer storage words",
+        full.synaptic_ops as f64 / gauss.synaptic_ops as f64,
+        full.words as f64 / gauss.words as f64
+    );
+
+    if let Ok(path) = std::env::var("BENCH_TOPOLOGY_JSON") {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("bench_layer/topology".to_string()));
+        root.insert(
+            "ops_ratio_fc400_over_gaussian_r1_400".to_string(),
+            Json::Num(full.synaptic_ops as f64 / gauss.synaptic_ops as f64),
+        );
+        root.insert("cases".to_string(), Json::Arr(cases.iter().map(case_json).collect()));
+        let json = Json::Obj(root);
+        std::fs::write(&path, format!("{json}\n")).expect("write BENCH_TOPOLOGY_JSON");
+        println!("wrote {path}");
     }
 }

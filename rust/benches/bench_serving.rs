@@ -3,13 +3,65 @@
 //! to the sequential cycle-accurate core every round.
 
 use quantisenc::config::registers::RegisterFile;
-use quantisenc::config::ModelConfig;
+use quantisenc::config::{ModelConfig, Topology};
 use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
 use quantisenc::datasets::rng::XorShift64Star;
-use quantisenc::datasets::{Dataset, Split};
+use quantisenc::datasets::{Dataset, Sample, Split};
 use quantisenc::fixed::Q5_3;
 use quantisenc::hdl::Core;
 use quantisenc::util::bench::quick;
+
+/// Serving throughput over a sparse (Gaussian radius-1) wide layer — the
+/// topology-aware store makes the first layer's synaptic work O(3·N)
+/// instead of O(N²) per active row, which is what lets a fixed engine
+/// serve much wider input layers.
+fn bench_sparse_topology() {
+    let cfg = ModelConfig::with_topologies(
+        &[400, 400, 10],
+        &[Topology::Gaussian { radius: 1 }, Topology::AllToAll],
+        Q5_3,
+    )
+    .unwrap();
+    let mut rng = XorShift64Star::new(0x5E_22);
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| {
+            let mask = l.topology.mask(l.fan_in, l.neurons).unwrap();
+            mask.iter()
+                .map(|&a| if a == 0 { 0 } else { rng.below(255) as i32 - 127 })
+                .collect()
+        })
+        .collect();
+    let regs = RegisterFile::new(Q5_3);
+    let samples: Vec<Sample> = (0..16)
+        .map(|_| {
+            let t_steps = 20;
+            let spikes = (0..t_steps * 400).map(|_| (rng.uniform() < 0.3) as u8).collect();
+            Sample { spikes, t_steps, inputs: 400, label: 0 }
+        })
+        .collect();
+
+    // Determinism gate against the sequential core.
+    let mut core = Core::new(cfg.clone());
+    core.load_weights(&weights).unwrap();
+    core.registers = regs.clone();
+    let reference: Vec<_> = samples.iter().map(|s| core.run(s)).collect();
+    let mut engine =
+        ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+    let out = engine.run_batch(&samples).unwrap();
+    for (i, (r, want)) in out.iter().zip(&reference).enumerate() {
+        assert_eq!(r.counts, want.counts, "gaussian serving sample {i} diverged");
+    }
+    println!(
+        "gaussian_r1 400x400x10 shard stores {} words (dense would be {})",
+        engine.synapse_words_per_shard(),
+        400 * 400 + 400 * 10
+    );
+    quick("serving_engine/gaussian_r1_400_16_streams_T20", || {
+        std::hint::black_box(engine.run_batch(std::hint::black_box(&samples)).unwrap());
+    });
+}
 
 fn main() {
     println!("== bench_serving (ServingEngine scaling) ==");
@@ -57,4 +109,7 @@ fn main() {
     for (cores, tput) in &throughputs {
         println!("  {cores} cores:    {tput:>10.1}");
     }
+
+    println!("\n== bench_serving (sparse topology) ==");
+    bench_sparse_topology();
 }

@@ -90,6 +90,43 @@ impl Topology {
     pub fn synapse_count(&self, m: usize, n: usize) -> Result<usize, TopologyError> {
         Ok(self.mask(m, n)?.iter().map(|&x| x as usize).sum())
     }
+
+    /// Every row's contiguous `[lo, hi]` column window of α=1 entries
+    /// (`None` for fully pruned rows), computed in one mask pass. Every
+    /// topology here produces contiguous per-row windows (all-to-all: the
+    /// full row; one-to-one: the diagonal element; Gaussian: the receptive
+    /// field, whose centre is monotone in the column index) — the invariant
+    /// that makes the banded storage in [`crate::hdl::SynapticMemory`]
+    /// exact. That storage is built through this method, and the invariant
+    /// is asserted here, so the window extraction has exactly one
+    /// implementation.
+    pub fn row_windows(
+        &self,
+        m: usize,
+        n: usize,
+    ) -> Result<Vec<Option<(usize, usize)>>, TopologyError> {
+        let mask = self.mask(m, n)?;
+        let mut out = Vec::with_capacity(m);
+        for i in 0..m {
+            let row = &mask[i * n..(i + 1) * n];
+            match row.iter().position(|&x| x == 1) {
+                None => out.push(None),
+                Some(lo) => {
+                    let hi = n - 1 - row.iter().rev().position(|&x| x == 1).unwrap();
+                    let nnz = row.iter().filter(|&&x| x == 1).count();
+                    assert_eq!(
+                        nnz,
+                        hi - lo + 1,
+                        "non-contiguous α window in row {i} of {m}x{n} {} mask",
+                        self.label()
+                    );
+                    out.push(Some((lo, hi)));
+                }
+            }
+        }
+        Ok(out)
+    }
+
 }
 
 /// Eq. 10 polarity: fold α·β·ω into signed weights (float domain).
@@ -186,5 +223,31 @@ mod tests {
     #[test]
     fn zero_shape_rejected() {
         assert!(Topology::AllToAll.mask(0, 3).is_err());
+    }
+
+    #[test]
+    fn row_windows_cover_mask_exactly() {
+        for (topo, m, n) in [
+            (Topology::AllToAll, 5usize, 7usize),
+            (Topology::OneToOne, 6, 6),
+            (Topology::Gaussian { radius: 1 }, 8, 8),
+            (Topology::Gaussian { radius: 2 }, 16, 4),
+            (Topology::Gaussian { radius: 1 }, 3, 9),
+        ] {
+            let mask = topo.mask(m, n).unwrap();
+            let windows = topo.row_windows(m, n).unwrap();
+            assert_eq!(windows.len(), m);
+            for (i, win) in windows.iter().enumerate() {
+                let row = &mask[i * n..(i + 1) * n];
+                let nnz = row.iter().filter(|&&x| x == 1).count();
+                match *win {
+                    None => assert_eq!(nnz, 0, "{topo:?} row {i}"),
+                    Some((lo, hi)) => {
+                        assert_eq!(nnz, hi - lo + 1, "{topo:?} row {i} window not contiguous");
+                        assert!(row[lo] == 1 && row[hi] == 1, "{topo:?} row {i}");
+                    }
+                }
+            }
+        }
     }
 }

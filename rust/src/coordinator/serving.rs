@@ -109,7 +109,10 @@ pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
 }
 
 /// Build one shard's programmed layer chain (shared with
-/// [`super::pipeline::run_pipelined`]).
+/// [`super::pipeline::run_pipelined`]). Weights arrive as the artifact
+/// store's dense matrices and are scattered into each layer's
+/// topology-aware store — a Gaussian/one-to-one shard only allocates the
+/// synapses its topology instantiates.
 pub(crate) fn build_layers(config: &ModelConfig, weights: &[Vec<i32>]) -> Result<Vec<Layer>> {
     anyhow::ensure!(weights.len() == config.num_layers(), "weights arity");
     let mut layers: Vec<Layer> = config
@@ -156,6 +159,8 @@ struct Shard {
 pub struct ServingEngine {
     shards: Vec<Shard>,
     inputs: usize,
+    /// Physical synaptic storage words per shard (topology-aware stores).
+    synapse_words: usize,
     submitted: u64,
     completed: u64,
     /// Set when a batch failed mid-flight: in-flight state is then
@@ -176,8 +181,13 @@ impl ServingEngine {
         anyhow::ensure!(options.queue_depth >= 1, "queue depth must be positive");
         let n_out = config.outputs();
         let mut shards = Vec::with_capacity(options.cores);
-        for _ in 0..options.cores {
+        let mut synapse_words = 0usize;
+        for shard_idx in 0..options.cores {
             let layers = build_layers(config, weights)?;
+            if shard_idx == 0 {
+                // Shards are identical; measure the footprint once.
+                synapse_words = layers.iter().map(|l| l.memory().synapses()).sum();
+            }
             let mut threads = Vec::with_capacity(layers.len() + 1);
             let (first_tx, mut chain_rx) = sync_channel::<StageMsg>(options.queue_depth);
             for layer in layers {
@@ -196,6 +206,7 @@ impl ServingEngine {
         Ok(ServingEngine {
             shards,
             inputs: config.inputs(),
+            synapse_words,
             submitted: 0,
             completed: 0,
             poisoned: false,
@@ -204,6 +215,13 @@ impl ServingEngine {
 
     pub fn num_cores(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Physical synaptic storage words per shard — measured from the
+    /// topology-aware stores, so a Gaussian/one-to-one engine reports its
+    /// actual (sparse) memory footprint, not the dense M×N size.
+    pub fn synapse_words_per_shard(&self) -> usize {
+        self.synapse_words
     }
 
     /// Requests accepted / completed over the engine's lifetime.
@@ -421,6 +439,47 @@ mod tests {
         assert!(engine.run_batch(&[]).unwrap().is_empty());
         let bad = Sample { spikes: vec![0; 4], t_steps: 1, inputs: 4, label: 0 };
         assert!(engine.run_batch(&[bad]).is_err());
+    }
+
+    #[test]
+    fn sparse_topology_engine_is_bitexact_and_reports_footprint() {
+        use crate::config::Topology;
+        let cfg = ModelConfig::with_topologies(
+            &[40, 40, 10],
+            &[Topology::Gaussian { radius: 1 }, Topology::AllToAll],
+            Q5_3,
+        )
+        .unwrap();
+        let mut rng = crate::datasets::rng::XorShift64Star::new(0x5EAC);
+        let weights: Vec<Vec<i32>> = cfg
+            .layers()
+            .iter()
+            .map(|l| {
+                let mask = l.topology.mask(l.fan_in, l.neurons).unwrap();
+                mask.iter()
+                    .map(|&a| if a == 0 { 0 } else { rng.below(15) as i32 - 7 })
+                    .collect()
+            })
+            .collect();
+        let regs = RegisterFile::new(Q5_3);
+        let samples: Vec<Sample> = (0..6)
+            .map(|_| {
+                let t_steps = 8;
+                let spikes = (0..t_steps * 40).map(|_| (rng.uniform() < 0.3) as u8).collect();
+                Sample { spikes, t_steps, inputs: 40, label: 0 }
+            })
+            .collect();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        // Banded first layer: 3*40 - 2 words, not the dense 1600.
+        assert_eq!(engine.synapse_words_per_shard(), (3 * 40 - 2) + 40 * 10);
+        assert_eq!(engine.synapse_words_per_shard(), cfg.total_synapses());
+        let out = engine.run_batch(&samples).unwrap();
+        for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+            assert_eq!(r.counts, core.run(s).counts, "sample {i}");
+        }
     }
 
     #[test]

@@ -22,6 +22,13 @@
 //!   (smnist at Q9.7/Q5.3/Q3.1; dvs and shd at Q5.3), in exactly the JSON
 //!   schema [`crate::runtime::artifacts::Manifest`] parses.
 //!
+//! Weight files are serialized **dense** (`[M × N]` row-major, zeros at
+//! pruned positions) regardless of topology — the on-disk contract is the
+//! dense view. At load time `SynapticMemory::load_dense` scatters each
+//! matrix into the layer's topology-aware store (banded for Gaussian,
+//! diagonal for one-to-one), so the artifact format is stable while the
+//! in-memory representation is sparse.
+//!
 //! [`ensure_artifacts`] is the idempotent entry point used by tests,
 //! examples, and the CLI: it generates the store once per process (and
 //! skips generation entirely when a store with the current

@@ -43,10 +43,12 @@ pub struct ActivityStats {
     pub spk_steps: u64,
     /// mem_clk cycles consumed by address generators (M per layer per step).
     pub mem_cycles: u64,
-    /// Synaptic accumulates that actually fired (input spike present —
-    /// the un-gated fraction of mem_cycles × N).
+    /// Synaptic accumulates that actually fired (input spike present).
+    /// Charged per *physical* (α=1) slot of the topology-aware store, so a
+    /// Gaussian radius-1 row adds ≤ 2r+1 here, not N; per step,
+    /// `synaptic_ops + gated_ops` equals the layer's stored synapse count.
     pub synaptic_ops: u64,
-    /// Synaptic accumulate slots skipped by clock gating (no input spike).
+    /// Physical synaptic slots skipped by clock gating (no input spike).
     pub gated_ops: u64,
     /// Neuron vmem-register toggles.
     pub vmem_toggles: u64,

@@ -108,7 +108,9 @@ impl Core {
     }
 
     /// Program trained weights (dense row-major per layer) — the wt_in bulk
-    /// path used when deploying an artifact's weight file.
+    /// path used when deploying an artifact's weight file. Each layer's
+    /// dense matrix is scattered into its topology-aware store (see
+    /// [`super::memory::SynapticMemory`]): pruned entries must be zero.
     pub fn load_weights(&mut self, per_layer: &[Vec<i32>]) -> anyhow::Result<()> {
         anyhow::ensure!(
             per_layer.len() == self.layers.len(),
@@ -120,6 +122,29 @@ impl Core {
             layer.memory_mut().load_dense(w)?;
         }
         Ok(())
+    }
+
+    /// Program trained weights in packed per-topology layout — exactly the
+    /// physical words each layer stores (see
+    /// [`super::memory::SynapticMemory::load_packed`]).
+    pub fn load_packed_weights(&mut self, per_layer: &[Vec<i32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            per_layer.len() == self.layers.len(),
+            "expected {} packed weight payloads, got {}",
+            self.layers.len(),
+            per_layer.len()
+        );
+        for (layer, w) in self.layers.iter_mut().zip(per_layer) {
+            layer.memory_mut().load_packed(w)?;
+        }
+        Ok(())
+    }
+
+    /// Physical synaptic storage words across all layers, measured from the
+    /// actual topology-aware stores (not the static mask model) — what the
+    /// resource/power models charge for.
+    pub fn synapse_words(&self) -> usize {
+        self.layers.iter().map(|l| l.memory().synapses()).sum()
     }
 }
 
@@ -194,6 +219,48 @@ mod tests {
     fn argmax_ties_lowest() {
         assert_eq!(argmax(&[3, 5, 5, 1]), 1);
         assert_eq!(argmax(&[0, 0]), 0);
+    }
+
+    #[test]
+    fn synapse_words_follow_topology() {
+        use crate::config::Topology;
+        let dense = Core::new(ModelConfig::parse_arch("4x3x2", Q5_3).unwrap());
+        assert_eq!(dense.synapse_words(), 4 * 3 + 3 * 2);
+        let cfg = ModelConfig::with_topologies(
+            &[6, 6, 6],
+            &[Topology::OneToOne, Topology::Gaussian { radius: 1 }],
+            Q5_3,
+        )
+        .unwrap();
+        let sparse = Core::new(cfg.clone());
+        assert_eq!(sparse.synapse_words(), 6 + 16);
+        assert_eq!(sparse.synapse_words(), cfg.total_synapses());
+    }
+
+    #[test]
+    fn packed_weights_equal_dense_weights() {
+        use crate::config::Topology;
+        let cfg = ModelConfig::with_topologies(
+            &[5, 5, 2],
+            &[Topology::Gaussian { radius: 1 }, Topology::AllToAll],
+            Q5_3,
+        )
+        .unwrap();
+        let mut a = Core::new(cfg.clone());
+        let mut b = Core::new(cfg.clone());
+        // Program a via single writes, then load b from a's packed payloads.
+        for i in 0..5 {
+            a.layer_mut(0).memory_mut().write(i, i, 7).unwrap();
+        }
+        a.layer_mut(1).memory_mut().write(3, 1, -9).unwrap();
+        let packed: Vec<Vec<i32>> =
+            a.layers().iter().map(|l| l.memory().packed().to_vec()).collect();
+        b.load_packed_weights(&packed).unwrap();
+        let sample = Sample { spikes: vec![1; 15], t_steps: 3, inputs: 5, label: 0 };
+        assert_eq!(a.run(&sample).counts, b.run(&sample).counts);
+        // Arity and size failures surface as errors, not panics.
+        assert!(b.load_packed_weights(&[]).is_err());
+        assert!(b.load_packed_weights(&[vec![0; 3], vec![0; 10]]).is_err());
     }
 
     #[test]

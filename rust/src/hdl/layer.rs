@@ -2,11 +2,17 @@
 //! the ActGen address generator (paper Fig. 1b / Fig. 2 ActGen box).
 //!
 //! Per spk_clk timestep the address generator walks the M pre-synaptic rows
-//! (M mem_clk cycles). For each row with an input spike, every neuron j adds
-//! w[i][j] into its act register — a *wrapping* Qn.q add, exactly the
-//! hardware accumulator. Rows without a spike are clock-gated: the adds are
-//! skipped and only the gating ledger is charged (§VI-E "we gate the clock
-//! in the design when there is no input spike").
+//! (M mem_clk cycles). For each row with an input spike, every *stored*
+//! synapse (i, j) adds w[i][j] into neuron j's act register — a *wrapping*
+//! Qn.q add, exactly the hardware accumulator. The walk goes through the
+//! topology-aware store ([`SynapticMemory::accumulate_row`]), so synaptic
+//! work is O(row nnz), not O(N): a Gaussian radius-1 row touches ≤ 3
+//! registers, a one-to-one row exactly 1. Rows without a spike are
+//! clock-gated: the adds are skipped and only the gating ledger is charged
+//! with the row's stored-synapse count (§VI-E "we gate the clock in the
+//! design when there is no input spike"). `synaptic_ops + gated_ops` per
+//! step therefore equals the layer's physical synapse count — the α=1
+//! words — for every topology.
 
 use crate::config::registers::RegisterFile;
 use crate::config::{LayerConfig, MemKind};
@@ -110,19 +116,18 @@ impl Layer {
         // accumulating with plain i32 `wrapping_add` and wrapping once per
         // timestep is bit-identical — for W < 32 the partial sums provably
         // fit in i32 (M ≤ 2^15 rows × |w| < 2^15), and for W = 32 the i32
-        // wraparound *is* the mod-2^32 semantics.
+        // wraparound *is* the mod-2^32 semantics. Accumulation goes through
+        // the topology-aware store: only stored (α=1) synapses are touched
+        // and charged, so sparse topologies do O(nnz) work per active row.
         self.act.fill(0);
         for (i, &spk) in spikes_in.iter().enumerate() {
             if spk == 0 {
-                // Clock-gated row: no accumulates happen.
-                stats.gated_ops += n as u64;
+                // Clock-gated row: no accumulates happen; the ledger is
+                // charged for the row's physical synapse slots only.
+                stats.gated_ops += self.mem.row_synapses(i) as u64;
                 continue;
             }
-            stats.synaptic_ops += n as u64;
-            let row = self.mem.row(i);
-            for (a, &w) in self.act.iter_mut().zip(row) {
-                *a = a.wrapping_add(w);
-            }
+            stats.synaptic_ops += self.mem.accumulate_row(i, &mut self.act);
         }
         if self.qspec.width() < 32 {
             for a in &mut self.act {
@@ -214,5 +219,40 @@ mod tests {
         let mut l = layer(3, 1);
         let mut out = Vec::new();
         l.step(&[1, 0], &mut out);
+    }
+
+    #[test]
+    fn sparse_topologies_charge_only_stored_synapses() {
+        // One-to-one 4x4: 1 synapse per row.
+        let cfg = LayerConfig { fan_in: 4, neurons: 4, topology: Topology::OneToOne };
+        let mut l = Layer::new(&cfg, Q5_3, MemKind::Bram);
+        let mut out = Vec::new();
+        let stats = l.step(&[1, 0, 1, 0], &mut out);
+        assert_eq!(stats.synaptic_ops, 2);
+        assert_eq!(stats.gated_ops, 2);
+        assert_eq!(stats.mem_cycles, 4);
+
+        // Gaussian radius-1 6x6: tridiagonal, rows have 2/3/3/3/3/2 words.
+        let cfg = LayerConfig { fan_in: 6, neurons: 6, topology: Topology::Gaussian { radius: 1 } };
+        let mut l = Layer::new(&cfg, Q5_3, MemKind::Bram);
+        let stats = l.step(&[1, 1, 1, 1, 1, 1], &mut out);
+        assert_eq!(stats.synaptic_ops, 16);
+        assert_eq!(stats.gated_ops, 0);
+        let stats = l.step(&[0, 0, 0, 0, 0, 0], &mut out);
+        assert_eq!(stats.synaptic_ops, 0);
+        assert_eq!(stats.gated_ops, 16);
+    }
+
+    #[test]
+    fn one_to_one_accumulates_diagonal_only() {
+        let cfg = LayerConfig { fan_in: 3, neurons: 3, topology: Topology::OneToOne };
+        let mut l = Layer::new(&cfg, Q5_3, MemKind::Bram);
+        for i in 0..3 {
+            l.memory_mut().write(i, i, 10).unwrap(); // 1.25 > vth 1.0
+        }
+        let mut out = Vec::new();
+        let stats = l.step(&[0, 1, 0], &mut out);
+        assert_eq!(out, vec![0, 1, 0]);
+        assert_eq!(stats.synaptic_ops, 1);
     }
 }

@@ -1,14 +1,55 @@
-//! Distributed synaptic memory — paper §II/§III-A and Fig. 1b.
+//! Distributed synaptic memory — paper §II/§III-A and Figs. 1b/13.
 //!
-//! Each layer owns an M×N weight matrix holding all pre-synaptic weights of
-//! its neurons ("all pre-synaptic weights are stored in their respective
-//! layer"). The access granularity is a single (pre, post) weight, which is
-//! what makes every weight individually programmable through wt_in.
+//! Each layer owns the pre-synaptic weights of its neurons ("all
+//! pre-synaptic weights are stored in their respective layer"). The access
+//! granularity is a single (pre, post) weight, which is what makes every
+//! weight individually programmable through wt_in.
+//!
+//! # Topology-aware storage
+//!
+//! QUANTISENC's distributed memory only instantiates the synapses a
+//! topology actually has (Fig. 13: the one-to-one and Gaussian connection
+//! blocks use a small fraction of the all-to-all block's resources). The
+//! store mirrors that:
+//!
+//! * [`Topology::AllToAll`] — dense row-major `[M × N]` words, exactly the
+//!   full FC connection block.
+//! * [`Topology::OneToOne`] — a single diagonal vector of `N` words
+//!   (`α_ij = 1` iff `i == j`), the paper's one-to-one block.
+//! * [`Topology::Gaussian { radius }`] — *banded* rows: every pre-synaptic
+//!   row `i` stores only its contiguous α=1 column window (at most
+//!   `2·radius + 1` wide for equal-width layers, the paper's `|i − j| ≤ r`
+//!   receptive field; windows are clipped at the grid edges and rescaled
+//!   for unequal widths). Row windows are concatenated CSR-style with a
+//!   per-row start column and offset.
+//!
+//! All three layouts sit behind the same accessors: [`accumulate_row`]
+//! (the fused walk the ActGen hot loop uses — synaptic work is O(nnz)
+//! instead of O(N) per active row), [`row_nonzero`] (iterate the stored
+//! `(post, weight)` pairs of a row, the inspection/differential-test
+//! view of the same window), and materialized [`row`]/[`dense`] views
+//! for artifacts.
+//!
+//! Bulk programming has two shapes: [`load_dense`] takes the artifact
+//! store's full `[M × N]` matrix (pruned entries must be zero), while
+//! [`load_packed`] takes exactly the physical words in canonical order
+//! (row-major over stored positions). [`MemError::BulkSize`] reports the
+//! *per-topology* payload size of whichever path rejected it — `M × N` for
+//! the dense path, [`synapses`] for the packed path — never a blanket
+//! dense-size assumption.
 //!
 //! The implementation choice (BRAM / distributed LUT / register, Fig. 13)
 //! does not change function — only the resource/timing/power models in
 //! [`crate::hwmodel`] — but is carried here so a programmed core knows what
 //! it is "made of".
+//!
+//! [`row_nonzero`]: SynapticMemory::row_nonzero
+//! [`accumulate_row`]: SynapticMemory::accumulate_row
+//! [`row`]: SynapticMemory::row
+//! [`dense`]: SynapticMemory::dense
+//! [`load_dense`]: SynapticMemory::load_dense
+//! [`load_packed`]: SynapticMemory::load_packed
+//! [`synapses`]: SynapticMemory::synapses
 
 use crate::config::{MemKind, Topology};
 use crate::fixed::QSpec;
@@ -18,6 +59,10 @@ pub enum MemError {
     BadAddress { pre: usize, post: usize, m: usize, n: usize },
     OutOfRange { value: i32, q: String },
     Pruned { pre: usize, post: usize, topo: String },
+    /// A bulk payload had the wrong length. `expect` is the payload size of
+    /// the rejecting path for *this* memory's topology: the dense `M × N`
+    /// word count for [`SynapticMemory::load_dense`], the physical
+    /// (α=1) word count for [`SynapticMemory::load_packed`].
     BulkSize { expect: usize, got: usize },
 }
 
@@ -41,7 +86,47 @@ impl std::fmt::Display for MemError {
 
 impl std::error::Error for MemError {}
 
-/// One layer's synaptic weight memory (row-major [M × N], i32 Qn.q raw).
+/// Physical weight storage, chosen per topology (see module docs).
+#[derive(Debug, Clone)]
+enum Store {
+    /// All-to-all: dense row-major `[M × N]`.
+    Dense(Vec<i32>),
+    /// One-to-one: the diagonal only (`M == N` words).
+    Diagonal(Vec<i32>),
+    /// Gaussian: per-row contiguous column windows, concatenated.
+    /// Row `i` covers columns `[starts[i], starts[i] + len_i)` with
+    /// `len_i = offsets[i+1] - offsets[i]` and weights at
+    /// `weights[offsets[i]..offsets[i+1]]`.
+    Banded { starts: Vec<usize>, offsets: Vec<usize>, weights: Vec<i32> },
+}
+
+/// Iterator over one row's stored `(post, weight)` pairs — every α=1
+/// position of the row, in ascending column order. All three topologies
+/// store contiguous per-row windows, so this is a window walk.
+pub struct RowNonzero<'a> {
+    start: usize,
+    k: usize,
+    weights: &'a [i32],
+}
+
+impl<'a> Iterator for RowNonzero<'a> {
+    type Item = (usize, i32);
+
+    fn next(&mut self) -> Option<(usize, i32)> {
+        let &w = self.weights.get(self.k)?;
+        let item = (self.start + self.k, w);
+        self.k += 1;
+        Some(item)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.weights.len() - self.k;
+        (rem, Some(rem))
+    }
+}
+
+/// One layer's synaptic weight memory (i32 Qn.q raw words in a
+/// topology-aware store — see module docs for the three layouts).
 #[derive(Debug, Clone)]
 pub struct SynapticMemory {
     m: usize,
@@ -49,16 +134,43 @@ pub struct SynapticMemory {
     qspec: QSpec,
     kind: MemKind,
     topology: Topology,
-    mask: Vec<u8>,
-    weights: Vec<i32>,
+    store: Store,
     /// Accepted wt_in writes (interface telemetry).
     writes: u64,
 }
 
 impl SynapticMemory {
     pub fn new(m: usize, n: usize, topology: Topology, qspec: QSpec, kind: MemKind) -> Self {
-        let mask = topology.mask(m, n).expect("topology validated by ModelConfig");
-        SynapticMemory { m, n, qspec, kind, topology, mask, weights: vec![0; m * n], writes: 0 }
+        // One mask pass: validates the shape for every topology and, for
+        // the banded store, extracts (and asserts) the contiguous per-row
+        // α=1 windows — the single implementation of the window invariant
+        // lives in `Topology::row_windows`.
+        let windows = topology.row_windows(m, n).expect("topology validated by ModelConfig");
+        let store = match topology {
+            Topology::AllToAll => Store::Dense(vec![0; m * n]),
+            Topology::OneToOne => Store::Diagonal(vec![0; n]),
+            Topology::Gaussian { .. } => {
+                let mut starts = Vec::with_capacity(m);
+                let mut offsets = Vec::with_capacity(m + 1);
+                offsets.push(0usize);
+                for win in windows {
+                    let base = *offsets.last().unwrap();
+                    match win {
+                        Some((lo, hi)) => {
+                            starts.push(lo);
+                            offsets.push(base + (hi - lo + 1));
+                        }
+                        None => {
+                            starts.push(0);
+                            offsets.push(base);
+                        }
+                    }
+                }
+                let total = *offsets.last().unwrap();
+                Store::Banded { starts, offsets, weights: vec![0; total] }
+            }
+        };
+        SynapticMemory { m, n, qspec, kind, topology, store, writes: 0 }
     }
 
     pub fn m(&self) -> usize {
@@ -77,13 +189,62 @@ impl SynapticMemory {
         self.qspec
     }
 
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
     pub fn writes(&self) -> u64 {
         self.writes
     }
 
-    /// α=1 synapse count (physical storage words).
+    /// Flat view of the physical word vector.
+    fn words(&self) -> &[i32] {
+        match &self.store {
+            Store::Dense(w) | Store::Diagonal(w) => w,
+            Store::Banded { weights, .. } => weights,
+        }
+    }
+
+    fn words_mut(&mut self) -> &mut [i32] {
+        match &mut self.store {
+            Store::Dense(w) | Store::Diagonal(w) => w,
+            Store::Banded { weights, .. } => weights,
+        }
+    }
+
+    /// Row `pre`'s stored window: (first column, range into the word
+    /// vector). Every stored position of the row is inside this window.
+    fn row_range(&self, pre: usize) -> (usize, std::ops::Range<usize>) {
+        match &self.store {
+            Store::Dense(_) => (0, pre * self.n..(pre + 1) * self.n),
+            Store::Diagonal(_) => (pre, pre..pre + 1),
+            Store::Banded { starts, offsets, .. } => {
+                (starts[pre], offsets[pre]..offsets[pre + 1])
+            }
+        }
+    }
+
+    /// Storage slot of (pre, post), or `None` for pruned (α=0) positions.
+    /// Callers must have bounds-checked `pre`/`post`.
+    fn slot(&self, pre: usize, post: usize) -> Option<usize> {
+        let (lo, range) = self.row_range(pre);
+        if post >= lo && post < lo + range.len() {
+            Some(range.start + (post - lo))
+        } else {
+            None
+        }
+    }
+
+    /// α=1 synapse count == physical storage words. This is the number the
+    /// resource/power models charge for: it is what the core is made of.
     pub fn synapses(&self) -> usize {
-        self.mask.iter().map(|&x| x as usize).sum()
+        self.words().len()
+    }
+
+    /// Physical words stored for row `pre` (the row's α=1 count).
+    #[inline]
+    pub fn row_synapses(&self, pre: usize) -> usize {
+        self.row_range(pre).1.len()
     }
 
     /// wt_in transaction: program one synaptic weight. Rejects out-of-range
@@ -96,55 +257,140 @@ impl SynapticMemory {
         if !self.qspec.in_range(value) {
             return Err(MemError::OutOfRange { value, q: self.qspec.name() });
         }
-        if self.mask[pre * self.n + post] == 0 {
-            return Err(MemError::Pruned { pre, post, topo: self.topology.label() });
+        match self.slot(pre, post) {
+            Some(s) => {
+                self.words_mut()[s] = value;
+                self.writes += 1;
+                Ok(())
+            }
+            None => Err(MemError::Pruned { pre, post, topo: self.topology.label() }),
         }
-        self.weights[pre * self.n + post] = value;
-        self.writes += 1;
-        Ok(())
     }
 
+    /// Read one weight; pruned (α=0) positions read as hardwired zero.
     #[inline]
     pub fn read(&self, pre: usize, post: usize) -> Result<i32, MemError> {
         if pre >= self.m || post >= self.n {
             return Err(MemError::BadAddress { pre, post, m: self.m, n: self.n });
         }
-        Ok(self.weights[pre * self.n + post])
+        Ok(self.slot(pre, post).map_or(0, |s| self.words()[s]))
     }
 
-    /// One row (all post-synaptic weights of pre-neuron `pre`) — what the
-    /// address generator reads in one mem_clk cycle group.
+    /// One full row (all N post-synaptic weights of pre-neuron `pre`),
+    /// materialized on demand with zeros at pruned positions — the dense
+    /// view artifacts and inspection tools expect.
+    pub fn row(&self, pre: usize) -> Vec<i32> {
+        assert!(pre < self.m, "row {pre} out of range for {} rows", self.m);
+        let mut out = vec![0i32; self.n];
+        let (lo, range) = self.row_range(pre);
+        out[lo..lo + range.len()].copy_from_slice(&self.words()[range]);
+        out
+    }
+
+    /// Iterate row `pre`'s stored `(post, weight)` pairs — the O(row nnz)
+    /// sparse view over the same window [`accumulate_row`] walks (which is
+    /// what the ActGen hot loop calls); use this for inspection, artifact
+    /// tooling, and the conformance suites.
+    ///
+    /// [`accumulate_row`]: SynapticMemory::accumulate_row
+    pub fn row_nonzero(&self, pre: usize) -> RowNonzero<'_> {
+        assert!(pre < self.m, "row {pre} out of range for {} rows", self.m);
+        let (lo, range) = self.row_range(pre);
+        RowNonzero { start: lo, k: 0, weights: &self.words()[range] }
+    }
+
+    /// Accumulate row `pre` into the activation registers with wrapping
+    /// adds (the hardware ActGen accumulate), touching only stored
+    /// positions. Returns the number of synaptic accumulates performed
+    /// (the row's α=1 count). `act` must have N entries.
     #[inline]
-    pub fn row(&self, pre: usize) -> &[i32] {
-        &self.weights[pre * self.n..(pre + 1) * self.n]
+    pub fn accumulate_row(&self, pre: usize, act: &mut [i32]) -> u64 {
+        debug_assert_eq!(act.len(), self.n, "activation register arity");
+        let (lo, range) = self.row_range(pre);
+        let w = &self.words()[range];
+        for (a, &wi) in act[lo..lo + w.len()].iter_mut().zip(w) {
+            *a = a.wrapping_add(wi);
+        }
+        w.len() as u64
     }
 
-    /// Bulk-load a full dense [M × N] matrix (the artifact weight files).
+    /// Bulk-load a full dense `[M × N]` matrix (the artifact weight files).
     /// Entries at pruned positions must be zero; others must fit Qn.q.
+    /// Validates the whole payload before mutating (never partially
+    /// applies).
     pub fn load_dense(&mut self, weights: &[i32]) -> Result<(), MemError> {
         if weights.len() != self.m * self.n {
             return Err(MemError::BulkSize { expect: self.m * self.n, got: weights.len() });
         }
         for (idx, &w) in weights.iter().enumerate() {
-            if self.mask[idx] == 0 {
-                if w != 0 {
-                    return Err(MemError::Pruned {
-                        pre: idx / self.n,
-                        post: idx % self.n,
-                        topo: self.topology.label(),
-                    });
+            let (pre, post) = (idx / self.n, idx % self.n);
+            match self.slot(pre, post) {
+                None => {
+                    if w != 0 {
+                        return Err(MemError::Pruned {
+                            pre,
+                            post,
+                            topo: self.topology.label(),
+                        });
+                    }
                 }
-            } else if !self.qspec.in_range(w) {
-                return Err(MemError::OutOfRange { value: w, q: self.qspec.name() });
+                Some(_) => {
+                    if !self.qspec.in_range(w) {
+                        return Err(MemError::OutOfRange { value: w, q: self.qspec.name() });
+                    }
+                }
             }
         }
-        self.weights.copy_from_slice(weights);
+        for i in 0..self.m {
+            let (lo, range) = self.row_range(i);
+            let src_lo = i * self.n + lo;
+            let src = &weights[src_lo..src_lo + range.len()];
+            self.words_mut()[range].copy_from_slice(src);
+        }
         self.writes += self.synapses() as u64;
         Ok(())
     }
 
-    pub fn dense(&self) -> &[i32] {
-        &self.weights
+    /// Bulk-load the packed per-topology payload: exactly [`synapses`]
+    /// words in canonical order (row-major over stored positions — for the
+    /// diagonal store that is the diagonal itself; for banded rows the
+    /// concatenated windows). Rejects wrong sizes with the *packed* size in
+    /// [`MemError::BulkSize::expect`] and out-of-range words without
+    /// mutating.
+    ///
+    /// [`synapses`]: SynapticMemory::synapses
+    pub fn load_packed(&mut self, packed: &[i32]) -> Result<(), MemError> {
+        let expect = self.synapses();
+        if packed.len() != expect {
+            return Err(MemError::BulkSize { expect, got: packed.len() });
+        }
+        for &w in packed {
+            if !self.qspec.in_range(w) {
+                return Err(MemError::OutOfRange { value: w, q: self.qspec.name() });
+            }
+        }
+        self.words_mut().copy_from_slice(packed);
+        self.writes += expect as u64;
+        Ok(())
+    }
+
+    /// The packed physical payload (see [`SynapticMemory::load_packed`] for
+    /// the canonical order). Zero-copy; `packed().len() == synapses()`.
+    pub fn packed(&self) -> &[i32] {
+        self.words()
+    }
+
+    /// The full dense `[M × N]` matrix, materialized on demand with zeros
+    /// at pruned positions — what the artifact writers serialize.
+    pub fn dense(&self) -> Vec<i32> {
+        let mut out = vec![0i32; self.m * self.n];
+        for i in 0..self.m {
+            let (lo, range) = self.row_range(i);
+            let dst_lo = i * self.n + lo;
+            let len = range.len();
+            out[dst_lo..dst_lo + len].copy_from_slice(&self.words()[range]);
+        }
+        out
     }
 }
 
@@ -197,6 +443,109 @@ mod tests {
         let mut m = mem();
         m.write(1, 0, 3).unwrap();
         m.write(1, 2, -4).unwrap();
-        assert_eq!(m.row(1), &[3, 0, -4]);
+        assert_eq!(m.row(1), vec![3, 0, -4]);
+    }
+
+    #[test]
+    fn diagonal_store_is_n_words() {
+        let mut m = SynapticMemory::new(4, 4, Topology::OneToOne, Q5_3, MemKind::Bram);
+        assert_eq!(m.synapses(), 4);
+        m.write(2, 2, 9).unwrap();
+        assert_eq!(m.row(2), vec![0, 0, 9, 0]);
+        assert_eq!(m.packed(), &[0, 0, 9, 0]);
+        assert_eq!(m.row_nonzero(2).collect::<Vec<_>>(), vec![(2, 9)]);
+        assert_eq!(m.row_synapses(2), 1);
+    }
+
+    #[test]
+    fn banded_store_matches_mask() {
+        // 6x6 radius-1 gaussian: tridiagonal, 3*6 - 2 = 16 words.
+        let topo = Topology::Gaussian { radius: 1 };
+        let mut m = SynapticMemory::new(6, 6, topo, Q5_3, MemKind::Bram);
+        assert_eq!(m.synapses(), 16);
+        let mask = topo.mask(6, 6).unwrap();
+        for i in 0..6 {
+            assert_eq!(
+                m.row_synapses(i),
+                mask[i * 6..(i + 1) * 6].iter().filter(|&&x| x == 1).count(),
+                "row {i}"
+            );
+        }
+        m.write(2, 1, -5).unwrap();
+        m.write(2, 3, 7).unwrap();
+        assert_eq!(m.row(2), vec![0, -5, 0, 7, 0, 0]);
+        assert_eq!(m.read(2, 1).unwrap(), -5);
+        assert_eq!(m.read(2, 5).unwrap(), 0); // pruned reads as zero
+        assert_eq!(
+            m.row_nonzero(2).collect::<Vec<_>>(),
+            vec![(1, -5), (2, 0), (3, 7)]
+        );
+    }
+
+    #[test]
+    fn accumulate_row_equals_dense_row_add() {
+        let topo = Topology::Gaussian { radius: 2 };
+        let mut m = SynapticMemory::new(8, 8, topo, Q5_3, MemKind::Bram);
+        let mask = topo.mask(8, 8).unwrap();
+        let mut dense = vec![0i32; 64];
+        for i in 0..8 {
+            for j in 0..8 {
+                if mask[i * 8 + j] == 1 {
+                    let w = (i * 8 + j) as i32 % 11 - 5;
+                    m.write(i, j, w).unwrap();
+                    dense[i * 8 + j] = w;
+                }
+            }
+        }
+        for i in 0..8 {
+            let mut act = vec![1i32; 8];
+            let ops = m.accumulate_row(i, &mut act);
+            let want: Vec<i32> = (0..8).map(|j| 1 + dense[i * 8 + j]).collect();
+            assert_eq!(act, want, "row {i}");
+            assert_eq!(ops, m.row_synapses(i) as u64);
+        }
+        assert_eq!(m.dense(), dense);
+    }
+
+    #[test]
+    fn packed_roundtrip_all_topologies() {
+        for topo in [
+            Topology::AllToAll,
+            Topology::OneToOne,
+            Topology::Gaussian { radius: 1 },
+        ] {
+            let mut a = SynapticMemory::new(5, 5, topo, Q5_3, MemKind::Bram);
+            let payload: Vec<i32> = (0..a.synapses()).map(|k| (k as i32 % 9) - 4).collect();
+            a.load_packed(&payload).unwrap();
+            assert_eq!(a.packed(), &payload[..], "{topo:?}");
+            // dense -> load_dense into a twin -> identical packed view
+            let mut b = SynapticMemory::new(5, 5, topo, Q5_3, MemKind::Bram);
+            b.load_dense(&a.dense()).unwrap();
+            assert_eq!(b.packed(), a.packed(), "{topo:?}");
+            assert_eq!(b.writes(), a.synapses() as u64);
+        }
+    }
+
+    #[test]
+    fn bulk_size_reports_per_topology_payload() {
+        // Regression: the packed path's BulkSize must carry the packed
+        // (per-topology) size, not the dense M×N size.
+        let mut d = SynapticMemory::new(8, 8, Topology::OneToOne, Q5_3, MemKind::Bram);
+        assert_eq!(
+            d.load_packed(&[1, 2, 3]).unwrap_err(),
+            MemError::BulkSize { expect: 8, got: 3 }
+        );
+        let mut g = SynapticMemory::new(8, 8, Topology::Gaussian { radius: 1 }, Q5_3, MemKind::Bram);
+        let nnz = g.synapses(); // 3*8 - 2
+        assert_eq!(nnz, 22);
+        assert_eq!(
+            g.load_packed(&vec![0; nnz + 1]).unwrap_err(),
+            MemError::BulkSize { expect: nnz, got: nnz + 1 }
+        );
+        // The dense path still reports the dense payload size.
+        assert_eq!(
+            g.load_dense(&[0; 3]).unwrap_err(),
+            MemError::BulkSize { expect: 64, got: 3 }
+        );
     }
 }

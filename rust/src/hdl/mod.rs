@@ -10,8 +10,9 @@
 //!
 //! * [`neuron`] — one LIF datapath: ActGen accumulate + VmemDyn + SpkGen +
 //!   VmemSel (Fig. 2), plus the refractory counter.
-//! * [`memory`] — a layer's distributed synaptic memory (M×N weight matrix)
-//!   with per-weight addressing (wt_in granularity) and the BRAM /
+//! * [`memory`] — a layer's distributed synaptic memory in a
+//!   topology-aware store (dense, diagonal, or banded per Eq. 9) with
+//!   per-weight addressing (wt_in granularity) and the BRAM /
 //!   distributed-LUT / register implementation choice.
 //! * [`layer`] — N neurons + their synaptic memory + the address generator
 //!   (M `mem_clk` cycles per timestep), with clock-gating accounting.

@@ -54,9 +54,27 @@ pub fn quant_scale(qspec: QSpec) -> f64 {
 
 /// Core dynamic power (W) at spike frequency `f_hz` for a measured
 /// per-neuron-per-step spike rate — the "Dynamic (Peak) Power" columns of
-/// Tables VI, X, XI.
+/// Tables VI, X, XI. Synapse count from the static topology model; see
+/// [`core_dynamic_instance_w`] for the store-measured variant.
 pub fn core_dynamic_w(config: &ModelConfig, spike_rate: f64, f_hz: f64) -> f64 {
-    let syn = config.total_synapses() as f64;
+    dynamic_w_with_synapses(config, config.total_synapses(), spike_rate, f_hz)
+}
+
+/// As [`core_dynamic_w`], but with the synapse count measured from an
+/// instantiated core's topology-aware stores
+/// ([`crate::hdl::Core::synapse_words`]) — a sparse (one-to-one/Gaussian)
+/// core is charged only for the synapses it physically stores.
+pub fn core_dynamic_instance_w(core: &crate::hdl::Core, spike_rate: f64, f_hz: f64) -> f64 {
+    dynamic_w_with_synapses(core.config(), core.synapse_words(), spike_rate, f_hz)
+}
+
+fn dynamic_w_with_synapses(
+    config: &ModelConfig,
+    synapses: usize,
+    spike_rate: f64,
+    f_hz: f64,
+) -> f64 {
+    let syn = synapses as f64;
     mem_scale(config.mem)
         * quant_scale(config.qspec)
         * (f_hz / F0_HZ)
@@ -215,5 +233,21 @@ mod tests {
         let stats = ActivityStats { neuron_updates: 1000, spikes: 173, ..Default::default() };
         let direct = core_dynamic_w(&c, 0.173, F0_HZ);
         assert!(rel_err(core_dynamic_from_stats(&c, &stats, F0_HZ), direct) < 1e-9);
+    }
+
+    #[test]
+    fn instance_power_matches_static_model() {
+        let sparse = ModelConfig::with_topologies(
+            &[32, 32, 32],
+            &[Topology::OneToOne, Topology::Gaussian { radius: 1 }],
+            Q5_3,
+        )
+        .unwrap();
+        for cfg in [baseline(), sparse] {
+            let core = crate::hdl::Core::new(cfg.clone());
+            let a = core_dynamic_instance_w(&core, RATE0, F0_HZ);
+            let b = core_dynamic_w(&cfg, RATE0, F0_HZ);
+            assert!(rel_err(a, b) < 1e-12, "{}: {a} vs {b}", cfg.arch_name());
+        }
     }
 }

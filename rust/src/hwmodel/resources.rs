@@ -147,9 +147,24 @@ fn quant_scale(qspec: QSpec) -> (f64, f64) {
 }
 
 /// Full-core utilisation (Table VI model). `config.mem` selects the
-/// synaptic storage fabric.
+/// synaptic storage fabric. The synapse count comes from the static
+/// topology model; [`core_instance`] measures it from an instantiated
+/// core's actual stores instead.
 pub fn core(config: &ModelConfig) -> Resources {
-    let syn = config.total_synapses() as f64;
+    core_with_synapses(config, config.total_synapses())
+}
+
+/// As [`core`], but with the synapse count measured from an instantiated
+/// core's topology-aware stores ([`crate::hdl::Core::synapse_words`]) —
+/// resource reporting driven by what the core is physically made of. The
+/// static mask model and the physical store agree exactly (asserted in
+/// tests), so this differs from [`core`] only in provenance.
+pub fn core_instance(core: &crate::hdl::Core) -> Resources {
+    core_with_synapses(core.config(), core.synapse_words())
+}
+
+fn core_with_synapses(config: &ModelConfig, synapses: usize) -> Resources {
+    let syn = synapses as f64;
     let neurons = config.total_neurons() as f64;
     let compute = config.compute_neurons() as f64;
     let (ls, fs) = quant_scale(config.qspec);
@@ -276,6 +291,24 @@ mod tests {
         assert_eq!(reg.brams, 0.0);
         assert!(lut.luts > bram.luts);
         assert!(reg.ffs > bram.ffs + 30000.0);
+    }
+
+    #[test]
+    fn instance_resources_match_static_model() {
+        // The sparse stores and the mask model must charge identical
+        // synapse counts, for dense and sparse topologies alike.
+        let dense = ModelConfig::parse_arch("256x128x10", Q5_3).unwrap();
+        let sparse = ModelConfig::with_topologies(
+            &[64, 64, 10],
+            &[Topology::Gaussian { radius: 2 }, Topology::AllToAll],
+            Q9_7,
+        )
+        .unwrap();
+        for cfg in [dense, sparse] {
+            let inst = crate::hdl::Core::new(cfg.clone());
+            assert_eq!(core_instance(&inst), core(&cfg), "{}", cfg.arch_name());
+            assert_eq!(inst.synapse_words(), cfg.total_synapses());
+        }
     }
 
     #[test]

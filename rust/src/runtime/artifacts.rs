@@ -21,6 +21,9 @@ pub struct ModelArtifact {
     pub hlo_path: PathBuf,
     pub layer_shapes: Vec<(usize, usize)>,
     /// Dense row-major per-layer quantized weights from the .bin file.
+    /// The dense `[M × N]` layout is the on-disk contract for every
+    /// topology; `hdl::SynapticMemory::load_dense` scatters it into the
+    /// topology-aware (banded/diagonal) store at deploy time.
     pub weights: Vec<Vec<i32>>,
     pub default_regs: [i32; NUM_REGS],
     /// Float ("software") accuracy recorded at training time.

@@ -4,10 +4,12 @@
 
 use std::path::PathBuf;
 
-use quantisenc::config::ModelConfig;
+use quantisenc::config::{MemKind, ModelConfig, Topology};
 use quantisenc::coordinator::interface::Device;
 use quantisenc::fixed::Q5_3;
 use quantisenc::hdl::aer::{decode, AerEvent};
+use quantisenc::hdl::memory::MemError;
+use quantisenc::hdl::SynapticMemory;
 use quantisenc::runtime::artifacts::{load_weight_file, Manifest};
 
 fn scratch_dir(name: &str) -> PathBuf {
@@ -86,6 +88,78 @@ fn weight_file_with_out_of_range_values_rejected_by_core() {
     assert!(format!("{err:#}").contains("does not fit"));
     // arity mismatch
     assert!(core.load_weights(&[]).is_err());
+}
+
+#[test]
+fn sparse_store_rejects_out_of_band_addresses() {
+    // Gaussian radius-1 8x8: only |i - j| <= 1 has physical storage.
+    let mut g = SynapticMemory::new(8, 8, Topology::Gaussian { radius: 1 }, Q5_3, MemKind::Bram);
+    for (pre, post) in [(0usize, 5usize), (0, 2), (7, 0), (3, 6), (5, 3)] {
+        let err = g.write(pre, post, 1).unwrap_err();
+        assert_eq!(
+            err,
+            MemError::Pruned { pre, post, topo: "gaussian:1".into() },
+            "({pre},{post}) must be outside the band"
+        );
+    }
+    // The same addresses read as hardwired zero, never as an error.
+    assert_eq!(g.read(0, 5).unwrap(), 0);
+    // Failed writes leave the store untouched and uncounted.
+    assert_eq!(g.writes(), 0);
+    assert!(g.dense().iter().all(|&w| w == 0));
+    // Truly out-of-bounds addresses are BadAddress, not Pruned.
+    assert!(matches!(g.write(8, 0, 1), Err(MemError::BadAddress { .. })));
+}
+
+#[test]
+fn sparse_store_rejects_out_of_range_at_band_edges() {
+    let mut g = SynapticMemory::new(8, 8, Topology::Gaussian { radius: 1 }, Q5_3, MemKind::Bram);
+    // (0,1) and (7,6) are the first/last band-edge slots: storage exists,
+    // but the Q5.3 word range is still enforced.
+    assert!(matches!(g.write(0, 1, 4000), Err(MemError::OutOfRange { .. })));
+    assert!(matches!(g.write(7, 6, -4000), Err(MemError::OutOfRange { .. })));
+    // An out-of-range word delivered at a band edge via the packed bulk
+    // path is rejected without mutating.
+    let nnz = g.synapses();
+    let mut packed = vec![0i32; nnz];
+    *packed.last_mut().unwrap() = 9000;
+    assert!(matches!(g.load_packed(&packed), Err(MemError::OutOfRange { .. })));
+    assert_eq!(g.writes(), 0);
+    // In-range edge writes succeed.
+    g.write(0, 1, Q5_3.max_raw()).unwrap();
+    g.write(7, 6, Q5_3.min_raw()).unwrap();
+    assert_eq!(g.read(0, 1).unwrap(), Q5_3.max_raw());
+}
+
+#[test]
+fn bulk_size_reports_per_topology_payload_sizes() {
+    // Regression for the dense-size assumption: the packed bulk path must
+    // report the per-topology physical payload in `expect` — diagonal = N,
+    // banded = nnz — while the dense path keeps reporting M×N.
+    let mut one = SynapticMemory::new(8, 8, Topology::OneToOne, Q5_3, MemKind::Bram);
+    assert_eq!(
+        one.load_packed(&[1, 2, 3]).unwrap_err(),
+        MemError::BulkSize { expect: 8, got: 3 }
+    );
+    let mut g = SynapticMemory::new(8, 8, Topology::Gaussian { radius: 2 }, Q5_3, MemKind::Bram);
+    let nnz = g.synapses(); // 5*8 - 2 - 4 band words clipped at the edges
+    assert_eq!(nnz, 34);
+    assert_eq!(
+        g.load_packed(&vec![0; 64]).unwrap_err(),
+        MemError::BulkSize { expect: nnz, got: 64 },
+        "banded bulk load must not assume the dense size"
+    );
+    assert_eq!(
+        g.load_dense(&vec![0; nnz]).unwrap_err(),
+        MemError::BulkSize { expect: 64, got: nnz },
+        "dense bulk load still expects the dense matrix"
+    );
+    // All-to-all: packed and dense coincide.
+    let mut full = SynapticMemory::new(4, 3, Topology::AllToAll, Q5_3, MemKind::Bram);
+    assert_eq!(
+        full.load_packed(&[0; 5]).unwrap_err(),
+        MemError::BulkSize { expect: 12, got: 5 }
+    );
 }
 
 #[test]

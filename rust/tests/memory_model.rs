@@ -1,0 +1,246 @@
+//! Seeded property test: `SynapticMemory` against a naive HashMap model.
+//!
+//! The model is the obviously-correct specification: a map from (pre, post)
+//! to the last accepted weight, empty outside the topology's α=1 set. The
+//! production store (dense / diagonal / banded) must agree with it after
+//! arbitrary interleavings of single writes, bulk dense loads, bulk packed
+//! loads, and reads — including the failure cases: pruned-write rejection,
+//! out-of-range values, bad addresses, wrong payload sizes. `writes()`
+//! accounting and the `dense()` / `row_nonzero()` views are cross-checked
+//! throughout. Hand-rolled generators over the repo's xorshift PRNG
+//! (proptest is unavailable offline); seeds are printed in assertions so
+//! failures reproduce.
+
+use std::collections::HashMap;
+
+use quantisenc::config::{MemKind, Topology};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::fixed::{Q3_1, Q5_3, Q9_7};
+use quantisenc::hdl::memory::MemError;
+use quantisenc::hdl::SynapticMemory;
+
+fn check_views(mem: &SynapticMemory, model: &HashMap<(usize, usize), i32>, mask: &[u8], ctx: &str) {
+    let (m, n) = (mem.m(), mem.n());
+    // dense() agrees with the model everywhere (zero where unset/pruned).
+    let dense = mem.dense();
+    assert_eq!(dense.len(), m * n, "{ctx}");
+    for pre in 0..m {
+        for post in 0..n {
+            let want = model.get(&(pre, post)).copied().unwrap_or(0);
+            assert_eq!(dense[pre * n + post], want, "{ctx}: dense ({pre},{post})");
+            assert_eq!(mem.read(pre, post).unwrap(), want, "{ctx}: read ({pre},{post})");
+        }
+        // row() is the dense row.
+        assert_eq!(mem.row(pre), dense[pre * n..(pre + 1) * n].to_vec(), "{ctx}: row {pre}");
+        // row_nonzero() visits exactly the α=1 positions, ascending, with
+        // the model's values.
+        let visited: Vec<(usize, i32)> = mem.row_nonzero(pre).collect();
+        let expect: Vec<(usize, i32)> = (0..n)
+            .filter(|&j| mask[pre * n + j] == 1)
+            .map(|j| (j, model.get(&(pre, j)).copied().unwrap_or(0)))
+            .collect();
+        assert_eq!(visited, expect, "{ctx}: row_nonzero {pre}");
+        assert_eq!(mem.row_synapses(pre), expect.len(), "{ctx}: row_synapses {pre}");
+    }
+    // synapses() is the α=1 count.
+    let nnz: usize = mask.iter().map(|&a| a as usize).sum();
+    assert_eq!(mem.synapses(), nnz, "{ctx}");
+    assert_eq!(mem.packed().len(), nnz, "{ctx}");
+}
+
+#[test]
+fn memory_agrees_with_hashmap_model() {
+    let topologies = [
+        Topology::AllToAll,
+        Topology::OneToOne,
+        Topology::Gaussian { radius: 1 },
+        Topology::Gaussian { radius: 2 },
+    ];
+    let qspecs = [Q9_7, Q5_3, Q3_1];
+    let mut rng = XorShift64Star::new(0x3E3E_0001);
+
+    for (case, (&topo, &qs)) in topologies
+        .iter()
+        .flat_map(|t| qspecs.iter().map(move |q| (t, q)))
+        .enumerate()
+    {
+        // One-to-one needs square layers; vary shapes for the others.
+        let (m, n) = match topo {
+            Topology::OneToOne => (9usize, 9usize),
+            _ => (6 + (case % 5), 5 + (case % 7)),
+        };
+        let ctx = format!("case {case} {topo:?} {} {m}x{n}", qs.name());
+        let mask = topo.mask(m, n).unwrap();
+        let mut mem = SynapticMemory::new(m, n, topo, qs, MemKind::Bram);
+        let mut model: HashMap<(usize, usize), i32> = HashMap::new();
+        let mut accepted_writes = 0u64;
+        let lim = qs.max_raw();
+
+        for step in 0..400 {
+            let op = rng.below(100);
+            if op < 70 {
+                // Single wt_in write; addresses/values sometimes invalid.
+                let pre = rng.below(m as u64 + 2) as usize;
+                let post = rng.below(n as u64 + 2) as usize;
+                // Range [-2*lim, 2*lim]: roughly half out of range.
+                let val = (rng.below(4 * lim as u64 + 1) as i32) - 2 * lim;
+                let before = mem.dense();
+                let result = mem.write(pre, post, val);
+                if pre >= m || post >= n {
+                    assert_eq!(
+                        result,
+                        Err(MemError::BadAddress { pre, post, m, n }),
+                        "{ctx} step {step}"
+                    );
+                } else if !qs.in_range(val) {
+                    assert!(
+                        matches!(&result, Err(MemError::OutOfRange { .. })),
+                        "{ctx} step {step}: write({pre},{post},{val}) -> {result:?}"
+                    );
+                } else if mask[pre * n + post] == 0 {
+                    assert!(
+                        matches!(&result, Err(MemError::Pruned { .. })),
+                        "{ctx} step {step}: write({pre},{post},{val}) -> {result:?}"
+                    );
+                } else {
+                    assert_eq!(result, Ok(()), "{ctx} step {step}");
+                    model.insert((pre, post), val);
+                    accepted_writes += 1;
+                }
+                if result.is_err() {
+                    // Failed transactions must not mutate the store.
+                    assert_eq!(mem.dense(), before, "{ctx} step {step}: failed write mutated");
+                }
+            } else if op < 80 {
+                // Bulk dense load: valid masked matrix, or (sometimes) a
+                // corrupted one that must be rejected without mutating.
+                let corrupt = rng.below(3) == 0;
+                let mut dense: Vec<i32> = mask
+                    .iter()
+                    .map(|&a| {
+                        if a == 0 {
+                            0
+                        } else {
+                            (rng.below(2 * lim as u64 + 1) as i32) - lim
+                        }
+                    })
+                    .collect();
+                if corrupt {
+                    let before = mem.dense();
+                    let w_before = mem.writes();
+                    // Either a pruned-position violation (if any pruned
+                    // slot exists) or an out-of-range value.
+                    if rng.below(2) == 0 && mask.iter().any(|&a| a == 0) {
+                        let idx = (0..mask.len()).find(|&i| mask[i] == 0).unwrap();
+                        dense[idx] = 1;
+                        assert!(
+                            matches!(mem.load_dense(&dense), Err(MemError::Pruned { .. })),
+                            "{ctx} step {step}"
+                        );
+                    } else {
+                        let idx = (0..mask.len()).find(|&i| mask[i] == 1).unwrap();
+                        dense[idx] = 2 * lim + 1;
+                        assert!(
+                            matches!(mem.load_dense(&dense), Err(MemError::OutOfRange { .. })),
+                            "{ctx} step {step}"
+                        );
+                    }
+                    assert_eq!(mem.dense(), before, "{ctx} step {step}: failed load mutated");
+                    assert_eq!(mem.writes(), w_before, "{ctx} step {step}");
+                } else {
+                    mem.load_dense(&dense).unwrap();
+                    model.clear();
+                    for (idx, &w) in dense.iter().enumerate() {
+                        if mask[idx] == 1 {
+                            model.insert((idx / n, idx % n), w);
+                        }
+                    }
+                    accepted_writes += mem.synapses() as u64;
+                }
+            } else if op < 90 {
+                // Bulk packed load of the per-topology payload.
+                let nnz = mem.synapses();
+                if rng.below(3) == 0 {
+                    let bad_len = if rng.below(2) == 0 { nnz + 1 } else { m * n + 1 };
+                    assert_eq!(
+                        mem.load_packed(&vec![0; bad_len]),
+                        Err(MemError::BulkSize { expect: nnz, got: bad_len }),
+                        "{ctx} step {step}"
+                    );
+                } else {
+                    let packed: Vec<i32> = (0..nnz)
+                        .map(|_| (rng.below(2 * lim as u64 + 1) as i32) - lim)
+                        .collect();
+                    mem.load_packed(&packed).unwrap();
+                    // Rebuild the model by walking the sparse view itself —
+                    // then check_views verifies it against dense()/read().
+                    model.clear();
+                    let mut k = 0usize;
+                    for pre in 0..m {
+                        for j in 0..n {
+                            if mask[pre * n + j] == 1 {
+                                model.insert((pre, j), packed[k]);
+                                k += 1;
+                            }
+                        }
+                    }
+                    assert_eq!(k, nnz, "{ctx} step {step}");
+                    accepted_writes += nnz as u64;
+                }
+            } else {
+                // Reads of arbitrary (possibly bad) addresses.
+                let pre = rng.below(m as u64 + 2) as usize;
+                let post = rng.below(n as u64 + 2) as usize;
+                match mem.read(pre, post) {
+                    Ok(v) => {
+                        assert!(pre < m && post < n, "{ctx} step {step}");
+                        assert_eq!(v, model.get(&(pre, post)).copied().unwrap_or(0));
+                    }
+                    Err(e) => {
+                        assert!(pre >= m || post >= n, "{ctx} step {step}: {e}");
+                    }
+                }
+            }
+
+            if step % 97 == 0 {
+                check_views(&mem, &model, &mask, &ctx);
+            }
+        }
+
+        assert_eq!(mem.writes(), accepted_writes, "{ctx}: writes() accounting");
+        check_views(&mem, &model, &mask, &ctx);
+    }
+}
+
+/// `dense()` round-trips through `load_dense` into a fresh store, and
+/// `packed()` through `load_packed`, for every topology × quantization.
+#[test]
+fn bulk_roundtrips_preserve_contents() {
+    let mut rng = XorShift64Star::new(0x3E3E_0002);
+    for topo in [
+        Topology::AllToAll,
+        Topology::OneToOne,
+        Topology::Gaussian { radius: 1 },
+        Topology::Gaussian { radius: 3 },
+    ] {
+        for qs in [Q9_7, Q5_3, Q3_1] {
+            let (m, n) = (11usize, 11usize);
+            let mask = topo.mask(m, n).unwrap();
+            let lim = qs.max_raw();
+            let mut a = SynapticMemory::new(m, n, topo, qs, MemKind::Bram);
+            let dense: Vec<i32> = mask
+                .iter()
+                .map(|&x| if x == 0 { 0 } else { (rng.below(2 * lim as u64 + 1) as i32) - lim })
+                .collect();
+            a.load_dense(&dense).unwrap();
+            assert_eq!(a.dense(), dense);
+
+            let mut b = SynapticMemory::new(m, n, topo, qs, MemKind::Bram);
+            b.load_packed(a.packed()).unwrap();
+            assert_eq!(b.dense(), dense, "{topo:?} {} packed roundtrip", qs.name());
+            for pre in 0..m {
+                assert!(b.row_nonzero(pre).eq(a.row_nonzero(pre)), "{topo:?} row {pre}");
+            }
+        }
+    }
+}

@@ -13,23 +13,46 @@ use quantisenc::datasets::Sample;
 use quantisenc::fixed::{QSpec, Q17_15, Q2_2, Q3_1, Q5_3, Q9_7};
 use quantisenc::hdl::{aer, Core};
 
+/// Random architecture over all three connection topologies (Eq. 9): every
+/// layer independently draws all-to-all, one-to-one (forcing equal widths),
+/// or a Gaussian receptive field of radius 1–3 — so every property below
+/// covers the sparse (diagonal/banded) synaptic stores, not just the dense
+/// one.
 fn random_config(rng: &mut XorShift64Star) -> ModelConfig {
     let qs = [Q2_2, Q5_3, Q9_7][rng.below(3) as usize];
     let n_layers = 1 + rng.below(3) as usize;
     let mut sizes = vec![4 + rng.below(28) as usize];
+    let mut topos = Vec::with_capacity(n_layers);
     for _ in 0..n_layers {
-        sizes.push(2 + rng.below(24) as usize);
+        let prev = *sizes.last().unwrap();
+        match rng.below(4) {
+            0 => {
+                sizes.push(prev);
+                topos.push(Topology::OneToOne);
+            }
+            1 => {
+                sizes.push(2 + rng.below(24) as usize);
+                topos.push(Topology::Gaussian { radius: 1 + rng.below(3) as u32 });
+            }
+            _ => {
+                sizes.push(2 + rng.below(24) as usize);
+                topos.push(Topology::AllToAll);
+            }
+        }
     }
-    ModelConfig::new(&sizes, qs).unwrap()
+    ModelConfig::with_topologies(&sizes, &topos, qs).unwrap()
 }
 
+/// Dense per-layer matrices with random weights at α=1 positions and zeros
+/// at pruned positions (the artifact-file contract for sparse topologies).
 fn random_weights(cfg: &ModelConfig, rng: &mut XorShift64Star) -> Vec<Vec<i32>> {
     cfg.layers()
         .iter()
         .map(|l| {
             let lim = cfg.qspec.max_raw().min(127) as u64;
-            (0..l.fan_in * l.neurons)
-                .map(|_| (rng.below(2 * lim + 1) as i32) - lim as i32)
+            let mask = l.topology.mask(l.fan_in, l.neurons).unwrap();
+            mask.iter()
+                .map(|&a| if a == 0 { 0 } else { (rng.below(2 * lim + 1) as i32) - lim as i32 })
                 .collect()
         })
         .collect()
@@ -152,7 +175,8 @@ fn prop_vth_monotone_and_silence() {
 }
 
 /// Activity accounting is conserved: gated + active synaptic slots equal
-/// (synapse-slots per step) × steps for all-to-all layers.
+/// (physical α=1 synapses per step) × steps, for every topology — the
+/// sparse stores only ever charge the slots they actually instantiate.
 #[test]
 fn prop_activity_conservation() {
     let mut rng = XorShift64Star::new(0x5EED_06);
@@ -163,11 +187,8 @@ fn prop_activity_conservation() {
         let mut core = Core::new(cfg.clone());
         core.load_weights(&weights).unwrap();
         let r = core.run(sample);
-        let slots_per_step: u64 = cfg
-            .layers()
-            .iter()
-            .map(|l| (l.fan_in * l.neurons) as u64)
-            .sum();
+        let slots_per_step = cfg.total_synapses() as u64;
+        assert_eq!(slots_per_step, core.synapse_words() as u64);
         assert_eq!(
             r.stats.synaptic_ops + r.stats.gated_ops,
             slots_per_step * sample.t_steps as u64
