@@ -2,6 +2,11 @@
 //! performance/power trade-off on an already-deployed core purely by
 //! programming control registers (cfg_in), never touching the weights.
 //!
+//! This is the single-core view (one `hdl::Core` behind its register
+//! file). For the same sweep on the *serving* path — one live
+//! `ServingEngine` reprogrammed mid-stream through the epoch-tagged
+//! control plane — see `examples/live_reconfig.rs`.
+//!
 //! ```bash
 //! cargo run --release --example dynamic_reconfig
 //! ```

@@ -1,9 +1,11 @@
 //! Bench: the unified `ServingEngine` — throughput scaling with core count
 //! on the Table VI baseline architecture, with results asserted bit-identical
-//! to the sequential cycle-accurate core every round.
+//! to the sequential cycle-accurate core every round, plus the cost of the
+//! live control plane (reconfigure-per-batch vs rebuild-per-config).
 
 use quantisenc::config::registers::RegisterFile;
 use quantisenc::config::{ModelConfig, Topology};
+use quantisenc::coordinator::control::ReconfigProgram;
 use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
 use quantisenc::datasets::rng::XorShift64Star;
 use quantisenc::datasets::{Dataset, Sample, Split};
@@ -63,6 +65,52 @@ fn bench_sparse_topology() {
     });
 }
 
+/// The Table X sweep pattern: visit several register configs over the same
+/// deployed weights. Compares reprogramming one live engine through the
+/// control plane against tearing the engine down and rebuilding it per
+/// config — the §VI-I "software-defined" dividend on the serving path.
+fn bench_live_reconfig() {
+    let cfg = ModelConfig::parse_arch("256x128x10", Q5_3).unwrap();
+    let mut rng = XorShift64Star::new(0x5E_33);
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(255) as i32 - 127).collect())
+        .collect();
+    let base = RegisterFile::new(Q5_3);
+    let samples: Vec<_> = (0..8u64).map(|i| Dataset::Smnist.sample(i, Split::Test, 20)).collect();
+    let configs: Vec<RegisterFile> = [0.8, 1.0, 1.2, 1.5]
+        .iter()
+        .map(|&vth| {
+            let mut r = base.clone();
+            r.set_vth(vth).unwrap();
+            r
+        })
+        .collect();
+
+    let mut engine =
+        ServingEngine::new(&cfg, &weights, &base, ServingOptions::with_cores(2)).unwrap();
+    let live = quick("reconfig/control_plane_4_configs_8_streams", || {
+        let control = engine.control_plane();
+        for regs in &configs {
+            control.apply(ReconfigProgram::from_registers(regs)).unwrap();
+            std::hint::black_box(engine.run_batch(std::hint::black_box(&samples)).unwrap());
+        }
+    });
+    let rebuild = quick("reconfig/rebuild_engine_4_configs_8_streams", || {
+        for regs in &configs {
+            let mut fresh =
+                ServingEngine::new(&cfg, &weights, regs, ServingOptions::with_cores(2)).unwrap();
+            std::hint::black_box(fresh.run_batch(std::hint::black_box(&samples)).unwrap());
+        }
+    });
+    println!(
+        "reconfigure-live vs rebuild-per-config: {:.2}x (cfg_in beats so far: {})",
+        rebuild.mean.as_secs_f64() / live.mean.as_secs_f64(),
+        engine.bus().cfg_writes
+    );
+}
+
 fn main() {
     println!("== bench_serving (ServingEngine scaling) ==");
     let cfg = ModelConfig::parse_arch("256x128x10", Q5_3).unwrap();
@@ -112,4 +160,7 @@ fn main() {
 
     println!("\n== bench_serving (sparse topology) ==");
     bench_sparse_topology();
+
+    println!("\n== bench_serving (live control plane) ==");
+    bench_live_reconfig();
 }

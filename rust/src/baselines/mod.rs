@@ -1,13 +1,16 @@
 //! Baseline and comparator designs.
 //!
-//! * [`dataflow`] — the non-pipelined layer-by-layer dataflow execution of
-//!   Gyro [30]: every stream pays the full K·L layer latency (the §VI-G
-//!   comparison point, 31.25 fps vs our 41.67 fps).
-//! * [`sota`] — the published comparison designs of Tables II and VII
-//!   ([28] overlay DNN, [33]/[34] Euler LIF neurons, [35] HLS-optimised
-//!   SELM). These are *literature constants with citations* — the paper's
-//!   authors did not re-implement them either; they are the fixed columns
-//!   our measured/modelled numbers are compared against.
+//! * [`DataflowBaseline`] — the non-pipelined layer-by-layer dataflow
+//!   execution of Gyro \[30\]: every stream pays the full K·L layer
+//!   latency (the §VI-G comparison point, 31.25 fps vs our 41.67 fps —
+//!   see [`crate::coordinator::pipeline::ScheduleModel`]).
+//! * [`SotaDesign`] and the `EULER_*` / `BEST_*` / `PAPER_OURS_*`
+//!   constants — the published comparison designs of Tables II and VII
+//!   (\[28\] overlay DNN, \[33\]/\[34\] Euler LIF neurons, \[35\]
+//!   HLS-optimised SELM). These are *literature constants with citations*
+//!   — the paper's authors did not re-implement them either; they are the
+//!   fixed columns our measured/modelled numbers
+//!   ([`crate::experiments::resources_exp`]) are compared against.
 
 use crate::config::ModelConfig;
 use crate::datasets::Sample;

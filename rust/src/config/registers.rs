@@ -146,6 +146,21 @@ impl RegisterFile {
         Ok(())
     }
 
+    /// Apply a whole cfg_in register *program* (an ordered list of
+    /// `(address, raw value)` writes) atomically: either every write lands
+    /// or the file is untouched and the first offending write's error is
+    /// returned. This is the unit the live control plane
+    /// ([`crate::coordinator::control::ReconfigProgram`]) broadcasts to a
+    /// serving engine's cores.
+    pub fn apply_program(&mut self, writes: &[(usize, i32)]) -> Result<(), RegisterError> {
+        let mut staged = self.clone();
+        for &(addr, value) in writes {
+            staged.write(addr, value)?;
+        }
+        *self = staged;
+        Ok(())
+    }
+
     pub fn read(&self, addr: usize) -> Result<i32, RegisterError> {
         self.regs.get(addr).copied().ok_or(RegisterError::BadAddress(addr))
     }
@@ -260,6 +275,24 @@ mod tests {
         // failed writes must not bump the counter or mutate state
         assert_eq!(rf.writes(), 0);
         assert_eq!(rf.vth(), Q5_3.from_float(1.0));
+    }
+
+    #[test]
+    fn apply_program_is_all_or_nothing() {
+        let mut rf = RegisterFile::new(Q5_3);
+        rf.apply_program(&[(REG_VTH, 12), (REG_REFRACTORY, 3)]).unwrap();
+        assert_eq!(rf.vth(), 12);
+        assert_eq!(rf.refractory(), 3);
+        // A bad write anywhere in the program must leave the file untouched,
+        // even if earlier writes were individually valid.
+        let before = rf.vector();
+        let err = rf.apply_program(&[(REG_VTH, 4), (REG_RESET_MODE, 9)]).unwrap_err();
+        assert_eq!(err, RegisterError::BadResetMode(9));
+        assert_eq!(rf.vector(), before);
+        assert_eq!(rf.apply_program(&[(NUM_REGS, 0)]), Err(RegisterError::BadAddress(NUM_REGS)));
+        // The empty program is a no-op.
+        rf.apply_program(&[]).unwrap();
+        assert_eq!(rf.vector(), before);
     }
 
     #[test]

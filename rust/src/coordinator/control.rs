@@ -1,0 +1,490 @@
+//! Live control plane — run-time cfg_in/wt_in reprogramming of a serving
+//! engine (paper §II, §III-A, §VI-I Table X).
+//!
+//! The paper's headline claim is that QUANTISENC is *software-defined*: the
+//! LIF dynamics are reprogrammed at run time through the decoder's control
+//! registers (cfg_in) and the synaptic memories through wt_in, on an
+//! already-deployed core. [`ControlPlane`] is that claim on the production
+//! request path: it applies a [`ReconfigProgram`] (a batch of register
+//! writes plus per-layer packed weight swaps) to a live
+//! [`ServingEngine`](super::serving::ServingEngine) **without draining
+//! traffic**.
+//!
+//! ## Epoch semantics
+//!
+//! Every accepted program is assigned a monotonically increasing **config
+//! epoch** (the engine is built at epoch 0). Reconfiguration rides the
+//! engine's existing bounded stage channels as epoch-tagged control
+//! messages, broadcast to every shard at a *sample boundary* of the
+//! admission feed. Because each shard's stage chain is FIFO, every
+//! in-flight sample is processed entirely under one epoch, and each
+//! [`StreamResult`](super::serving::StreamResult) carries the epoch it was
+//! computed under. Per epoch, results are bit-identical to a freshly built
+//! engine with that configuration — proven by
+//! `rust/tests/control_plane.rs`.
+//!
+//! ## Validation
+//!
+//! [`ControlPlane::apply`] validates the whole program against the engine's
+//! geometry (register address space and value domains, per-layer packed
+//! payload sizes, Qn.q weight ranges) *before* assigning an epoch, and
+//! rejects with a typed [`ControlError`] without mutating anything. Stages
+//! therefore apply accepted programs infallibly — a half-applied
+//! reconfiguration cannot exist.
+//!
+//! ## Bus accounting
+//!
+//! Accepted programs are charged to the engine's AXI ledger
+//! ([`BusStats`]): each register write is one cfg beat and each packed
+//! weight word one wt beat, **per shard** (the broadcast physically
+//! programs every core), on the same ledger that meters spk_in/spk_out
+//! data traffic. Beats are charged at *admission* (when the epoch is
+//! assigned) — a program admitted right before engine shutdown is already
+//! on the ledger, mirroring a posted AXI write that was issued even if
+//! the device is torn down before acting on it.
+//!
+//! ```
+//! use quantisenc::config::registers::RegisterFile;
+//! use quantisenc::config::ModelConfig;
+//! use quantisenc::coordinator::control::ReconfigProgram;
+//! use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
+//! use quantisenc::datasets::Sample;
+//! use quantisenc::fixed::Q5_3;
+//!
+//! let cfg = ModelConfig::parse_arch("4x3x2", Q5_3)?;
+//! let weights = vec![vec![4; 12], vec![4; 6]];
+//! let regs = RegisterFile::new(Q5_3);
+//! let mut engine = ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2))?;
+//! let control = engine.control_plane();
+//!
+//! // Reprogram the threshold on the live engine: one cfg_in program.
+//! let mut vth_regs = regs.clone();
+//! vth_regs.set_vth(2.0)?;
+//! let epoch = control.apply(ReconfigProgram::from_registers(&vth_regs))?;
+//! assert_eq!(epoch, 1);
+//!
+//! // The next admitted sample is served under epoch 1.
+//! let sample = Sample { spikes: vec![1; 8], t_steps: 2, inputs: 4, label: 0 };
+//! let results = engine.run_batch(&[sample])?;
+//! assert_eq!(results[0].epoch, 1);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::registers::{RegisterError, RegisterFile, NUM_REGS};
+use crate::fixed::QSpec;
+
+use super::interface::BusStats;
+
+/// A batch of cfg_in register writes plus wt_in packed weight swaps — the
+/// unit of run-time reconfiguration.
+///
+/// Programs are *declarative*: they carry raw register values (the cfg_in
+/// bus encoding) and per-layer packed weight payloads (exactly the
+/// physical words the layer's topology-aware store holds, see
+/// [`crate::hdl::SynapticMemory::load_packed`]). Build one with the
+/// builder methods, or snapshot a whole [`RegisterFile`] with
+/// [`ReconfigProgram::from_registers`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReconfigProgram {
+    /// cfg_in register writes, applied in order: `(address, raw value)`.
+    pub cfg: Vec<(usize, i32)>,
+    /// wt_in bulk swaps: `(layer index, packed payload)` in stored order.
+    pub weights: Vec<(usize, Vec<i32>)>,
+}
+
+impl ReconfigProgram {
+    pub fn new() -> ReconfigProgram {
+        ReconfigProgram::default()
+    }
+
+    /// Append one cfg_in register write (builder style).
+    pub fn write(mut self, addr: usize, value: i32) -> ReconfigProgram {
+        self.cfg.push((addr, value));
+        self
+    }
+
+    /// Append one wt_in packed weight swap for `layer` (builder style).
+    pub fn swap_weights(mut self, layer: usize, packed: Vec<i32>) -> ReconfigProgram {
+        self.weights.push((layer, packed));
+        self
+    }
+
+    /// Snapshot a full register file as an absolute 6-write cfg_in program
+    /// — the idiom for "set the core to exactly this operating point"
+    /// (each Table X row is one such program).
+    pub fn from_registers(regs: &RegisterFile) -> ReconfigProgram {
+        let v = regs.vector();
+        ReconfigProgram {
+            cfg: (0..NUM_REGS).map(|a| (a, v[a])).collect(),
+            weights: Vec::new(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cfg.is_empty() && self.weights.is_empty()
+    }
+
+    /// cfg_in bus beats this program costs per programmed core.
+    pub fn cfg_beats(&self) -> u64 {
+        self.cfg.len() as u64
+    }
+
+    /// wt_in bus beats this program costs per programmed core.
+    pub fn wt_beats(&self) -> u64 {
+        self.weights.iter().map(|(_, w)| w.len() as u64).sum()
+    }
+
+    /// Validate this program's wt_in payloads against a target geometry:
+    /// `packed_sizes[k]` is layer k's physical word count and `qspec` the
+    /// word format. Shared by the engine's control plane and the
+    /// single-core [`Device`](super::interface::Device) so the two paths
+    /// cannot drift.
+    pub fn validate_weights(
+        &self,
+        qspec: QSpec,
+        packed_sizes: &[usize],
+    ) -> Result<(), ControlError> {
+        for (layer, payload) in &self.weights {
+            let layers = packed_sizes.len();
+            if *layer >= layers {
+                return Err(ControlError::BadLayer { layer: *layer, layers });
+            }
+            let expect = packed_sizes[*layer];
+            if payload.len() != expect {
+                return Err(ControlError::PayloadSize {
+                    layer: *layer,
+                    expect,
+                    got: payload.len(),
+                });
+            }
+            for (index, &value) in payload.iter().enumerate() {
+                if !qspec.in_range(value) {
+                    return Err(ControlError::WeightOutOfRange {
+                        layer: *layer,
+                        index,
+                        value,
+                        q: qspec.name(),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Typed rejection of a malformed [`ReconfigProgram`] — nothing is applied
+/// and no epoch is assigned.
+#[derive(Debug, PartialEq)]
+pub enum ControlError {
+    /// A cfg_in write was rejected by the register file (bad address, bad
+    /// reset-mode encoding, negative refractory, value outside Qn.q).
+    Register(RegisterError),
+    /// A wt_in swap addressed a layer the engine does not have.
+    BadLayer { layer: usize, layers: usize },
+    /// A wt_in payload does not match the layer's physical word count.
+    PayloadSize { layer: usize, expect: usize, got: usize },
+    /// A wt_in payload word does not fit the engine's Qn.q format.
+    WeightOutOfRange { layer: usize, index: usize, value: i32, q: String },
+}
+
+impl std::fmt::Display for ControlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ControlError::Register(e) => write!(f, "cfg_in program rejected: {e}"),
+            ControlError::BadLayer { layer, layers } => {
+                write!(f, "wt_in swap addresses layer {layer}, engine has {layers} layers")
+            }
+            ControlError::PayloadSize { layer, expect, got } => write!(
+                f,
+                "wt_in payload for layer {layer} has {got} words, its store holds {expect}"
+            ),
+            ControlError::WeightOutOfRange { layer, index, value, q } => write!(
+                f,
+                "wt_in payload for layer {layer} word {index} = {value} does not fit {q}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ControlError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ControlError::Register(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<RegisterError> for ControlError {
+    fn from(e: RegisterError) -> ControlError {
+        ControlError::Register(e)
+    }
+}
+
+/// Engine-side shared state behind every [`ControlPlane`] handle: the
+/// pending program queue, the epoch counter, the shadow register file, and
+/// the AXI ledger. Owned by the engine via `Arc`.
+pub(crate) struct ControlShared {
+    /// Validated programs awaiting broadcast at the next sample boundary,
+    /// in epoch order.
+    pending: Mutex<Vec<(u64, Arc<ReconfigProgram>)>>,
+    /// Next epoch to assign; the engine's construction config is epoch 0.
+    next_epoch: AtomicU64,
+    /// Shadow register file tracking every accepted cfg_in program — what
+    /// the engine's decoder registers will read once the program lands.
+    regs: Mutex<RegisterFile>,
+    /// The engine-wide AXI transaction ledger (§IV bus model): control
+    /// beats (cfg/wt × shards) and data beats (spk_in/spk_out) together.
+    bus: Mutex<BusStats>,
+    /// Validation geometry, captured at engine construction.
+    qspec: QSpec,
+    packed_sizes: Vec<usize>,
+    cores: usize,
+}
+
+impl ControlShared {
+    pub(crate) fn new(regs: RegisterFile, packed_sizes: Vec<usize>, cores: usize) -> ControlShared {
+        ControlShared {
+            pending: Mutex::new(Vec::new()),
+            next_epoch: AtomicU64::new(1),
+            qspec: regs.qspec(),
+            regs: Mutex::new(regs),
+            bus: Mutex::new(BusStats::default()),
+            packed_sizes,
+            cores,
+        }
+    }
+
+    /// Validate a program against the engine geometry without mutating
+    /// anything. Register writes are staged on a clone of the shadow file
+    /// (all-or-nothing), payloads are checked for layer address, size, and
+    /// Qn.q range.
+    pub(crate) fn validate(&self, program: &ReconfigProgram) -> Result<(), ControlError> {
+        program.validate_weights(self.qspec, &self.packed_sizes)?;
+        self.regs.lock().unwrap().clone().apply_program(&program.cfg)?;
+        Ok(())
+    }
+
+    /// Queue a validated program for broadcast at the next sample boundary.
+    /// Assigns the epoch, commits the shadow registers, and charges the
+    /// bus ledger. Used by [`ControlPlane::apply`].
+    pub(crate) fn admit(&self, program: ReconfigProgram) -> Result<u64, ControlError> {
+        self.validate(&program)?;
+        let mut pending = self.pending.lock().unwrap();
+        let epoch = self.commit(&program);
+        pending.push((epoch, Arc::new(program)));
+        Ok(epoch)
+    }
+
+    /// Assign an epoch to an already-validated program and account for it
+    /// (shadow registers + bus beats). The caller delivers the program.
+    pub(crate) fn commit(&self, program: &ReconfigProgram) -> u64 {
+        self.regs
+            .lock()
+            .unwrap()
+            .apply_program(&program.cfg)
+            .expect("program validated before commit");
+        let mut bus = self.bus.lock().unwrap();
+        bus.cfg_writes += program.cfg_beats() * self.cores as u64;
+        bus.wt_writes += program.wt_beats() * self.cores as u64;
+        self.next_epoch.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Epoch-assign an in-band program while draining any async-pending
+    /// ones ahead of it, preserving epoch delivery order.
+    pub(crate) fn commit_in_band(
+        &self,
+        program: ReconfigProgram,
+    ) -> (Vec<(u64, Arc<ReconfigProgram>)>, u64, Arc<ReconfigProgram>) {
+        let mut pending = self.pending.lock().unwrap();
+        let drained = std::mem::take(&mut *pending);
+        let epoch = self.commit(&program);
+        (drained, epoch, Arc::new(program))
+    }
+
+    /// Drain programs queued by [`ControlPlane::apply`], in epoch order.
+    pub(crate) fn take_pending(&self) -> Vec<(u64, Arc<ReconfigProgram>)> {
+        std::mem::take(&mut *self.pending.lock().unwrap())
+    }
+
+    pub(crate) fn epoch(&self) -> u64 {
+        self.next_epoch.load(Ordering::SeqCst) - 1
+    }
+
+    pub(crate) fn registers(&self) -> RegisterFile {
+        self.regs.lock().unwrap().clone()
+    }
+
+    pub(crate) fn bus(&self) -> BusStats {
+        *self.bus.lock().unwrap()
+    }
+
+    pub(crate) fn charge_spk_in(&self, events: u64) {
+        self.bus.lock().unwrap().spk_in_events += events;
+    }
+
+    pub(crate) fn charge_spk_out(&self, events: u64) {
+        self.bus.lock().unwrap().spk_out_events += events;
+    }
+}
+
+/// A cloneable, thread-safe handle for reprogramming a live
+/// [`ServingEngine`](super::serving::ServingEngine).
+///
+/// Obtained from
+/// [`ServingEngine::control_plane`](super::serving::ServingEngine::control_plane);
+/// may be moved to another thread and used **while the engine is serving**
+/// — accepted programs land at the next sample boundary of the admission
+/// feed, so no in-flight sample ever observes a half-applied config.
+///
+/// ```
+/// use quantisenc::config::registers::{RegisterFile, REG_VTH};
+/// use quantisenc::config::ModelConfig;
+/// use quantisenc::coordinator::control::{ControlError, ReconfigProgram};
+/// use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
+/// use quantisenc::fixed::Q5_3;
+///
+/// let cfg = ModelConfig::parse_arch("4x3x2", Q5_3)?;
+/// let weights = vec![vec![4; 12], vec![4; 6]];
+/// let regs = RegisterFile::new(Q5_3);
+/// let mut engine = ServingEngine::new(&cfg, &weights, &regs, ServingOptions::default())?;
+/// let control = engine.control_plane();
+/// assert_eq!(control.epoch(), 0);
+///
+/// // Malformed programs are rejected with a typed error, epoch unchanged.
+/// let err = control.apply(ReconfigProgram::new().write(99, 0)).unwrap_err();
+/// assert!(matches!(err, ControlError::Register(_)));
+/// assert_eq!(control.epoch(), 0);
+///
+/// // A valid program bumps the epoch and is charged to the AXI ledger.
+/// control.apply(ReconfigProgram::new().write(REG_VTH, 16))?;
+/// assert_eq!(control.epoch(), 1);
+/// assert!(control.bus().cfg_writes > 0);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Clone)]
+pub struct ControlPlane {
+    shared: Arc<ControlShared>,
+}
+
+impl ControlPlane {
+    pub(crate) fn from_shared(shared: Arc<ControlShared>) -> ControlPlane {
+        ControlPlane { shared }
+    }
+
+    /// Validate and admit a reconfiguration program. Returns the config
+    /// epoch the program was assigned; every sample admitted after the
+    /// program lands carries this epoch in its
+    /// [`StreamResult::epoch`](super::serving::StreamResult::epoch).
+    ///
+    /// The program is broadcast to every shard at the next sample boundary
+    /// of the engine's admission feed (immediately at the start of the
+    /// next batch if the engine is idle). Rejection is all-or-nothing: a
+    /// [`ControlError`] means no register, weight, epoch, or bus state
+    /// changed.
+    pub fn apply(&self, program: ReconfigProgram) -> Result<u64, ControlError> {
+        self.shared.admit(program)
+    }
+
+    /// The latest assigned config epoch (0 until the first successful
+    /// [`apply`](ControlPlane::apply)).
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch()
+    }
+
+    /// Shadow copy of the decoder registers after every accepted program —
+    /// what the engine's cores read once all admitted programs land.
+    pub fn registers(&self) -> RegisterFile {
+        self.shared.registers()
+    }
+
+    /// The engine-wide AXI ledger: cfg/wt control beats (charged per
+    /// shard) plus spk_in/spk_out data beats, on one meter.
+    pub fn bus(&self) -> BusStats {
+        self.shared.bus()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::registers::{REG_RESET_MODE, REG_VTH};
+    use crate::fixed::Q5_3;
+
+    fn shared() -> ControlShared {
+        ControlShared::new(RegisterFile::new(Q5_3), vec![12, 6], 2)
+    }
+
+    #[test]
+    fn program_builder_and_beats() {
+        let p = ReconfigProgram::new().write(REG_VTH, 4).swap_weights(1, vec![0; 6]);
+        assert_eq!(p.cfg_beats(), 1);
+        assert_eq!(p.wt_beats(), 6);
+        assert!(!p.is_empty());
+        assert!(ReconfigProgram::new().is_empty());
+        let full = ReconfigProgram::from_registers(&RegisterFile::new(Q5_3));
+        assert_eq!(full.cfg_beats(), NUM_REGS as u64);
+    }
+
+    #[test]
+    fn admit_assigns_epochs_and_charges_bus() {
+        let s = shared();
+        assert_eq!(s.epoch(), 0);
+        let e1 = s.admit(ReconfigProgram::new().write(REG_VTH, 4)).unwrap();
+        let e2 = s.admit(ReconfigProgram::new().swap_weights(0, vec![1; 12])).unwrap();
+        assert_eq!((e1, e2), (1, 2));
+        // Per-shard charging: 1 cfg write × 2 shards, 12 wt words × 2 shards.
+        assert_eq!(s.bus().cfg_writes, 2);
+        assert_eq!(s.bus().wt_writes, 24);
+        assert_eq!(s.take_pending().len(), 2);
+        assert!(s.take_pending().is_empty());
+        // Shadow registers track the accepted writes.
+        assert_eq!(s.registers().vth(), 4);
+    }
+
+    #[test]
+    fn rejection_is_total() {
+        let s = shared();
+        // One good write followed by a bad one: nothing may stick.
+        let p = ReconfigProgram::new().write(REG_VTH, 4).write(REG_RESET_MODE, 9);
+        assert!(matches!(s.admit(p), Err(ControlError::Register(_))));
+        assert!(matches!(
+            s.admit(ReconfigProgram::new().swap_weights(7, vec![])),
+            Err(ControlError::BadLayer { layer: 7, layers: 2 })
+        ));
+        assert_eq!(
+            s.admit(ReconfigProgram::new().swap_weights(0, vec![0; 3])),
+            Err(ControlError::PayloadSize { layer: 0, expect: 12, got: 3 })
+        );
+        assert!(matches!(
+            s.admit(ReconfigProgram::new().swap_weights(1, vec![9000; 6])),
+            Err(ControlError::WeightOutOfRange { layer: 1, index: 0, .. })
+        ));
+        assert_eq!(s.epoch(), 0);
+        assert_eq!(s.bus(), BusStats::default());
+        assert_eq!(s.registers().vth(), RegisterFile::new(Q5_3).vth());
+        assert!(s.take_pending().is_empty());
+    }
+
+    #[test]
+    fn in_band_commit_preserves_epoch_order() {
+        let s = shared();
+        s.admit(ReconfigProgram::new().write(REG_VTH, 4)).unwrap();
+        let (drained, epoch, _) = s.commit_in_band(ReconfigProgram::new().write(REG_VTH, 5));
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].0, 1);
+        assert_eq!(epoch, 2);
+        assert!(s.take_pending().is_empty());
+    }
+
+    #[test]
+    fn control_error_display_is_actionable() {
+        let e = ControlError::PayloadSize { layer: 1, expect: 6, got: 3 };
+        assert!(e.to_string().contains("layer 1"));
+        let e: ControlError = RegisterError::BadAddress(99).into();
+        assert!(e.to_string().contains("cfg_in program rejected"));
+    }
+}

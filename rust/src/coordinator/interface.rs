@@ -17,7 +17,15 @@ use crate::hdl::aer::{self, AerEvent};
 use crate::hdl::core::RunResult;
 use crate::hdl::Core;
 
+use super::control::{ControlError, ReconfigProgram};
+
 /// AXI transaction ledger (one beat per word; the §IV bus model).
+///
+/// Both the single-core [`Device`] and the sharded
+/// [`ServingEngine`](super::serving::ServingEngine) meter their traffic on
+/// this ledger: cfg_in/wt_in control beats and spk_in/spk_out data beats,
+/// one counter set, so reconfiguration cost is directly comparable to data
+/// cost ([`BusStats::beats`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct BusStats {
     pub wt_writes: u64,
@@ -108,6 +116,31 @@ impl Device {
         Ok(())
     }
 
+    /// Apply a whole [`ReconfigProgram`] — the same cfg_in/wt_in unit the
+    /// live serving engine's [`super::control::ControlPlane`] broadcasts —
+    /// to this single deployed core. Rejection is all-or-nothing with a
+    /// typed [`ControlError`]; an accepted program charges one cfg beat
+    /// per register write and one wt beat per packed word, like the
+    /// engine's per-shard accounting with C = 1.
+    pub fn apply_program(&mut self, program: &ReconfigProgram) -> Result<(), ControlError> {
+        // Validate wt_in payloads first (same shared check as the engine's
+        // control plane) so the register commit never has to be rolled
+        // back.
+        let packed_sizes: Vec<usize> =
+            self.core.layers().iter().map(|l| l.memory().synapses()).collect();
+        program.validate_weights(self.core.config().qspec, &packed_sizes)?;
+        self.core.registers.apply_program(&program.cfg)?;
+        for (k, payload) in &program.weights {
+            self.core
+                .layer_mut(*k)
+                .load_packed(payload)
+                .expect("payload validated above");
+        }
+        self.bus.cfg_writes += program.cfg_beats();
+        self.bus.wt_writes += program.wt_beats();
+        Ok(())
+    }
+
     // --- spk_in / spk_out ----------------------------------------------------
 
     /// Stream one sample as AER events and return the result + output events.
@@ -191,6 +224,35 @@ mod tests {
         assert!(result.counts[0] > 0);
         assert_eq!(out_events.iter().map(|_| 1u32).sum::<u32>() as u32, result.counts.iter().sum::<u32>());
         assert_eq!(d.bus().spk_in_events, 20);
+    }
+
+    #[test]
+    fn apply_program_is_atomic_and_metered() {
+        let mut d = device();
+        let beats_before = d.bus().beats();
+        // cfg write + a full wt_in swap of layer 1 (3x2 all-to-all = 6 words).
+        let prog = ReconfigProgram::new()
+            .write(crate::config::registers::REG_VTH, 24)
+            .swap_weights(1, vec![5; 6]);
+        d.apply_program(&prog).unwrap();
+        assert_eq!(d.core().registers.vth(), 24);
+        assert_eq!(d.core().layers()[1].memory().read(2, 1).unwrap(), 5);
+        assert_eq!(d.bus().beats(), beats_before + 1 + 6);
+        // A program with any invalid part must change nothing.
+        let before = (d.bus(), d.core().registers.clone());
+        let bad = ReconfigProgram::new()
+            .write(crate::config::registers::REG_VTH, 8)
+            .swap_weights(9, vec![0; 6]);
+        assert_eq!(
+            d.apply_program(&bad),
+            Err(ControlError::BadLayer { layer: 9, layers: 2 })
+        );
+        assert_eq!(d.bus(), before.0);
+        assert_eq!(d.core().registers, before.1);
+        assert!(matches!(
+            d.apply_program(&ReconfigProgram::new().swap_weights(1, vec![0; 2])),
+            Err(ControlError::PayloadSize { layer: 1, expect: 6, got: 2 })
+        ));
     }
 
     #[test]

@@ -1,12 +1,16 @@
 //! Request-path telemetry: latency percentiles, throughput, activity and
 //! power accounting — what the §IV software stack reports back to the
 //! application ("visualize hardware output" plus the performance numbers
-//! the paper's evaluation tables are built from).
+//! the paper's evaluation tables are built from). Also carries the AXI
+//! ledger ([`BusStats`]) of the serving path it observed, so one summary
+//! line reports data *and* control-plane traffic.
 
 use std::time::{Duration, Instant};
 
 use crate::hdl::ActivityStats;
 use crate::util::stats;
+
+use super::interface::BusStats;
 
 #[derive(Debug, Default, Clone)]
 pub struct Telemetry {
@@ -14,6 +18,13 @@ pub struct Telemetry {
     pub activity: ActivityStats,
     pub requests: u64,
     pub correct: u64,
+    /// Snapshot of the serving path's AXI ledger (cfg/wt control beats +
+    /// spk data beats) — set via [`Telemetry::record_bus`].
+    pub bus: BusStats,
+    /// Highest `StreamResult::epoch` observed + 1 — an upper bound on the
+    /// number of distinct configs that served traffic in this window
+    /// (epochs that were assigned but never served a sample still count).
+    pub reconfigs: u64,
     started: Option<Instant>,
     elapsed: Duration,
 }
@@ -42,6 +53,18 @@ impl Telemetry {
         }
     }
 
+    /// Adopt the serving path's AXI ledger so [`Telemetry::summary`]
+    /// reports bus occupancy next to the request metrics.
+    pub fn record_bus(&mut self, bus: BusStats) {
+        self.bus = bus;
+    }
+
+    /// Note that a sample was served under config `epoch` (see
+    /// [`Telemetry::reconfigs`] for the exact counting semantics).
+    pub fn record_epoch(&mut self, epoch: u64) {
+        self.reconfigs = self.reconfigs.max(epoch + 1);
+    }
+
     pub fn accuracy(&self) -> f64 {
         if self.requests == 0 {
             0.0
@@ -67,9 +90,11 @@ impl Telemetry {
         stats::mean(&self.latencies_us)
     }
 
-    /// One-line ops summary (the CLI's serving report).
+    /// One-line ops summary (the CLI's serving report). Includes the AXI
+    /// ledger when one was recorded, so cfg/wt reconfiguration beats show
+    /// up next to the data traffic they share the bus with.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} acc={:.1}% thr={:.1}/s lat(mean/p50/p99)={:.0}/{:.0}/{:.0}us spikes={} gating={:.0}%",
             self.requests,
             100.0 * self.accuracy(),
@@ -79,7 +104,19 @@ impl Telemetry {
             self.latency_us(99.0),
             self.activity.spikes,
             100.0 * self.activity.gating_ratio(),
-        )
+        );
+        if self.bus.beats() > 0 {
+            s.push_str(&format!(
+                " bus={}b (cfg={} wt={})",
+                self.bus.beats(),
+                self.bus.cfg_writes,
+                self.bus.wt_writes
+            ));
+        }
+        if self.reconfigs > 1 {
+            s.push_str(&format!(" epochs={}", self.reconfigs));
+        }
+        s
     }
 }
 
@@ -113,5 +150,19 @@ mod tests {
         assert_eq!(t.accuracy(), 0.0);
         assert_eq!(t.throughput_rps(), 0.0);
         assert_eq!(t.latency_us(99.0), 0.0);
+        assert!(!t.summary().contains("bus="), "no ledger recorded, none reported");
+    }
+
+    #[test]
+    fn bus_and_epochs_surface_in_summary() {
+        let mut t = Telemetry::new();
+        t.record_bus(BusStats { cfg_writes: 12, wt_writes: 3, spk_in_events: 5, spk_out_events: 0 });
+        t.record_epoch(0);
+        t.record_epoch(2);
+        t.record_epoch(1);
+        let s = t.summary();
+        assert!(s.contains("bus=20b (cfg=12 wt=3)"), "{s}");
+        assert!(s.contains("epochs=3"), "{s}");
+        assert_eq!(t.reconfigs, 3);
     }
 }

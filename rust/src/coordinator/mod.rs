@@ -11,9 +11,19 @@
 //! * [`serving`] — the unified production request path: C sharded cores ×
 //!   per-layer pipelined stages with bounded channels, batch admission,
 //!   backpressure, and in-order results ([`serving::ServingEngine`]).
+//! * [`control`] — the live control plane ([`control::ControlPlane`]):
+//!   run-time cfg_in/wt_in reprogramming of a serving engine, delivered as
+//!   epoch-tagged control messages on the same bounded stage channels as
+//!   the data, validated up front, and charged to the same AXI ledger
+//!   ([`interface::BusStats`]) as data traffic.
 //! * [`metrics`] — request-path telemetry (latency percentiles, throughput,
-//!   spike/power accounting).
+//!   spike/power accounting, bus-beat reporting).
+//!
+//! See `ARCHITECTURE.md` at the repo root for the module map, the
+//! paper-section cross-reference, and the dataflow diagram of the sharded
+//! pipelined engine with the control-message path.
 
+pub mod control;
 pub mod interface;
 pub mod metrics;
 pub mod multicore;

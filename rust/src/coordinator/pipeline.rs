@@ -23,6 +23,7 @@ use std::sync::mpsc;
 use crate::config::registers::RegisterFile;
 use crate::config::ModelConfig;
 use crate::datasets::Sample;
+use crate::hdl::ActivityStats;
 
 use super::serving::{build_layers, collector_loop, stage_loop, StageMsg};
 
@@ -78,13 +79,23 @@ impl ScheduleModel {
     }
 }
 
-/// Result of one stream through the pipelined executor.
+/// Result of one stream through the pipelined executor / serving engine.
 #[derive(Debug, Clone)]
 pub struct StreamResult {
     pub stream_id: usize,
     pub counts: Vec<u32>,
     pub prediction: usize,
+    /// Output-layer spikes for this stream (the spk_out event count).
     pub spikes_total: u64,
+    /// Config epoch this stream was processed under: 0 is the
+    /// construction-time configuration; each accepted
+    /// [`crate::coordinator::control::ControlPlane`] program increments it.
+    /// Always 0 for [`run_pipelined`], which has no control plane.
+    pub epoch: u64,
+    /// Full activity ledger for this stream, accumulated across every
+    /// stage — bit-identical to the `stats` of a sequential
+    /// [`crate::hdl::Core::run`] on the same sample.
+    pub stats: ActivityStats,
 }
 
 /// Thread-per-layer pipelined execution of a batch of samples.
@@ -108,11 +119,11 @@ pub fn run_pipelined(
         // Stage and collector bodies are the serving-engine primitives; this
         // function only adds the scoped one-batch wiring around them.
         let (injector, mut chain_rx) = mpsc::sync_channel::<StageMsg>(64);
-        for layer in layers {
+        for (layer_idx, layer) in layers.into_iter().enumerate() {
             let (tx, next_rx) = mpsc::sync_channel::<StageMsg>(64);
             let stage_regs = regs.clone();
             let rx = std::mem::replace(&mut chain_rx, next_rx);
-            scope.spawn(move || stage_loop(layer, stage_regs, rx, tx));
+            scope.spawn(move || stage_loop(layer_idx, layer, stage_regs, rx, tx));
         }
         let collector_rx = chain_rx;
 
@@ -135,7 +146,7 @@ pub fn run_pipelined(
                     .map_err(|_| anyhow::anyhow!("pipeline stage died"))?;
             }
             injector
-                .send(StageMsg::Flush { stream })
+                .send(StageMsg::Flush { stream, stats: ActivityStats::default() })
                 .map_err(|_| anyhow::anyhow!("pipeline stage died"))?;
         }
         drop(injector);
@@ -214,6 +225,8 @@ mod tests {
             let seq = core.run(sample);
             assert_eq!(piped[i].counts, seq.counts, "stream {i}");
             assert_eq!(piped[i].prediction, seq.prediction);
+            assert_eq!(piped[i].stats, seq.stats, "stream {i} activity ledger");
+            assert_eq!(piped[i].epoch, 0, "no control plane here: epoch stays 0");
         }
         // Streams come back in order.
         assert!(piped.windows(2).all(|w| w[0].stream_id < w[1].stream_id));

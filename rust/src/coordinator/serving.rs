@@ -20,12 +20,23 @@
 //!   samples, so results are bit-for-bit identical to a sequential
 //!   [`crate::hdl::Core`] run — asserted in tests and in
 //!   `benches/bench_serving.rs`.
+//! * **Live reconfiguration**: the engine is *software-defined* after
+//!   deployment. A [`ControlPlane`] handle (see
+//!   [`ServingEngine::control_plane`]) applies cfg_in register programs and
+//!   wt_in packed weight swaps while traffic is flowing: accepted programs
+//!   ride the same bounded stage channels as epoch-tagged
+//!   `StageMsg::Reconfig` control messages, broadcast to every shard at a
+//!   sample boundary, so each sample is processed entirely under one config
+//!   epoch and each [`StreamResult`] reports the epoch it was computed
+//!   under. [`ServingEngine::run_session`] additionally schedules
+//!   reconfigurations *in-band*, at exact positions in the request stream.
 //!
-//! The per-stage loop ([`stage_loop`]) and the spike-count collector
-//! ([`collector_loop`]) are shared with [`super::pipeline::run_pipelined`],
+//! The per-stage loop (`stage_loop`) and the spike-count collector
+//! (`collector_loop`) are shared with [`super::pipeline::run_pipelined`],
 //! which is now a thin scoped-thread wrapper over the same primitives.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
@@ -35,38 +46,77 @@ use crate::config::ModelConfig;
 use crate::datasets::Sample;
 use crate::hdl::core::argmax;
 use crate::hdl::layer::Layer;
+use crate::hdl::ActivityStats;
+
+use super::control::{ControlPlane, ControlShared, ReconfigProgram};
+use super::interface::BusStats;
 
 pub use super::pipeline::StreamResult;
 
 /// Message flowing down a shard's stage chain: one timestep's spike vector,
-/// or the Fig.-8 settle marker that ends a stream.
+/// the Fig.-8 settle marker that ends a stream (accumulating the stream's
+/// activity ledger as it passes each stage), or an epoch-tagged cfg_in/wt_in
+/// reconfiguration broadcast by the control plane.
 pub(crate) enum StageMsg {
     Step { stream: usize, spikes: Vec<u8> },
-    Flush { stream: usize },
+    Flush { stream: usize, stats: ActivityStats },
+    Reconfig { epoch: u64, program: Arc<ReconfigProgram> },
 }
 
-/// Body of one pipeline stage: owns one hardware layer, transforms spike
-/// vectors, resets its membranes at every stream boundary. Returns when the
+/// Body of one pipeline stage: owns hardware layer `layer_idx`, transforms
+/// spike vectors, resets its membranes at every stream boundary, and applies
+/// the slice of each control-plane program that addresses it (all register
+/// writes — the decoder registers are core-global — plus its own layer's
+/// weight payload). Control messages are applied *between* streams by
+/// construction: they arrive through the same FIFO as the data, so every
+/// stream is processed entirely under one config epoch. Returns when the
 /// input channel closes or the downstream consumer disappears.
 pub(crate) fn stage_loop(
+    layer_idx: usize,
     mut layer: Layer,
-    regs: RegisterFile,
+    mut regs: RegisterFile,
     rx: Receiver<StageMsg>,
     tx: SyncSender<StageMsg>,
 ) {
     let mut out = Vec::new();
+    // Activity accumulated by this stage for the stream in flight.
+    let mut acc = ActivityStats::default();
     for msg in rx {
         match msg {
             StageMsg::Step { stream, spikes } => {
-                layer.step_regs(&spikes, &mut out, &regs);
+                let mut st = layer.step_regs(&spikes, &mut out, &regs);
+                if layer_idx != 0 {
+                    // One spk_clk edge per *core* timestep, not per layer —
+                    // matches `Core::step`'s accounting bit-for-bit.
+                    st.spk_steps = 0;
+                }
+                acc.add(&st);
                 if tx.send(StageMsg::Step { stream, spikes: out.clone() }).is_err() {
                     return;
                 }
             }
-            StageMsg::Flush { stream } => {
+            StageMsg::Flush { stream, stats: mut upstream } => {
                 // Fig. 8 settle: membranes back to rest between streams.
                 layer.reset();
-                if tx.send(StageMsg::Flush { stream }).is_err() {
+                upstream.add(&acc);
+                acc = ActivityStats::default();
+                if tx.send(StageMsg::Flush { stream, stats: upstream }).is_err() {
+                    return;
+                }
+            }
+            StageMsg::Reconfig { epoch, program } => {
+                // Programs are validated by the control plane before they
+                // are admitted, so stage-side application is infallible —
+                // a half-applied config cannot exist.
+                regs.apply_program(&program.cfg).expect("program validated by control plane");
+                for (k, payload) in &program.weights {
+                    if *k == layer_idx {
+                        layer
+                            .load_packed(payload)
+                            .expect("payload validated by control plane");
+                    }
+                }
+                if tx.send(StageMsg::Reconfig { epoch, program }).is_err() {
                     return;
                 }
             }
@@ -75,8 +125,10 @@ pub(crate) fn stage_loop(
 }
 
 /// Body of the terminal collector: accumulates output-layer spike counts per
-/// stream and emits one [`StreamResult`] per `Flush`. `emit` returning false
-/// stops the loop (downstream gone).
+/// stream, tracks the config epoch announced by [`StageMsg::Reconfig`]
+/// markers, and emits one [`StreamResult`] per `Flush` (carrying the epoch
+/// and the full activity ledger the stages accumulated). `emit` returning
+/// false stops the loop (downstream gone).
 pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
     n_out: usize,
     rx: Receiver<StageMsg>,
@@ -84,6 +136,7 @@ pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
 ) {
     let mut counts = vec![0u32; n_out];
     let mut spikes_total = 0u64;
+    let mut epoch = 0u64;
     for msg in rx {
         match msg {
             StageMsg::Step { spikes, .. } => {
@@ -92,17 +145,22 @@ pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
                     spikes_total += s as u64;
                 }
             }
-            StageMsg::Flush { stream } => {
+            StageMsg::Flush { stream, stats } => {
                 let result = StreamResult {
                     stream_id: stream,
                     prediction: argmax(&counts),
                     counts: std::mem::replace(&mut counts, vec![0u32; n_out]),
                     spikes_total,
+                    epoch,
+                    stats,
                 };
                 spikes_total = 0;
                 if !emit(result) {
                     return;
                 }
+            }
+            StageMsg::Reconfig { epoch: e, .. } => {
+                epoch = e;
             }
         }
     }
@@ -148,6 +206,16 @@ impl ServingOptions {
     }
 }
 
+/// One operation in a [`ServingEngine::run_session`] request stream: admit
+/// a sample, or reconfigure the engine *at exactly this point* in the
+/// stream (all earlier samples finish under the old epoch, all later ones
+/// run under the new one — deterministically, unlike the asynchronous
+/// [`ControlPlane::apply`] whose boundary depends on arrival time).
+pub enum SessionOp<'a> {
+    Submit(&'a Sample),
+    Reconfig(ReconfigProgram),
+}
+
 struct Shard {
     in_tx: Option<SyncSender<StageMsg>>,
     out_rx: Receiver<StreamResult>,
@@ -155,12 +223,37 @@ struct Shard {
 }
 
 /// C sharded, per-layer-pipelined QUANTISENC cores behind one batched,
-/// backpressured, order-preserving API.
+/// backpressured, order-preserving, **run-time reprogrammable** API.
+///
+/// ```
+/// use quantisenc::config::registers::RegisterFile;
+/// use quantisenc::config::ModelConfig;
+/// use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
+/// use quantisenc::datasets::Sample;
+/// use quantisenc::fixed::Q5_3;
+///
+/// let cfg = ModelConfig::parse_arch("4x3x2", Q5_3)?;
+/// let weights = vec![vec![4; 12], vec![4; 6]];
+/// let regs = RegisterFile::new(Q5_3);
+/// let mut engine = ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2))?;
+///
+/// let samples: Vec<Sample> = (0..4)
+///     .map(|_| Sample { spikes: vec![1; 8], t_steps: 2, inputs: 4, label: 0 })
+///     .collect();
+/// let results = engine.run_batch(&samples)?;
+/// assert_eq!(results.len(), 4);
+/// // Results come back in submission order, tagged with the config epoch
+/// // (0 = the construction-time configuration).
+/// assert!(results.iter().enumerate().all(|(i, r)| r.stream_id == i && r.epoch == 0));
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct ServingEngine {
     shards: Vec<Shard>,
     inputs: usize,
     /// Physical synaptic storage words per shard (topology-aware stores).
     synapse_words: usize,
+    /// Control-plane state shared with every [`ControlPlane`] handle.
+    control: Arc<ControlShared>,
     submitted: u64,
     completed: u64,
     /// Set when a batch failed mid-flight: in-flight state is then
@@ -182,19 +275,25 @@ impl ServingEngine {
         let n_out = config.outputs();
         let mut shards = Vec::with_capacity(options.cores);
         let mut synapse_words = 0usize;
+        let mut packed_sizes: Vec<usize> = Vec::new();
         for shard_idx in 0..options.cores {
             let layers = build_layers(config, weights)?;
             if shard_idx == 0 {
-                // Shards are identical; measure the footprint once.
-                synapse_words = layers.iter().map(|l| l.memory().synapses()).sum();
+                // Shards are identical; measure the footprint once. The
+                // per-layer word counts double as the control plane's
+                // wt_in payload-size contract.
+                packed_sizes = layers.iter().map(|l| l.memory().synapses()).collect();
+                synapse_words = packed_sizes.iter().sum();
             }
             let mut threads = Vec::with_capacity(layers.len() + 1);
             let (first_tx, mut chain_rx) = sync_channel::<StageMsg>(options.queue_depth);
-            for layer in layers {
+            for (layer_idx, layer) in layers.into_iter().enumerate() {
                 let (tx, next_rx) = sync_channel::<StageMsg>(options.queue_depth);
                 let stage_regs = regs.clone();
                 let rx = std::mem::replace(&mut chain_rx, next_rx);
-                threads.push(std::thread::spawn(move || stage_loop(layer, stage_regs, rx, tx)));
+                threads.push(std::thread::spawn(move || {
+                    stage_loop(layer_idx, layer, stage_regs, rx, tx)
+                }));
             }
             let (out_tx, out_rx) = sync_channel::<StreamResult>(options.queue_depth);
             let collector_rx = chain_rx;
@@ -203,10 +302,12 @@ impl ServingEngine {
             }));
             shards.push(Shard { in_tx: Some(first_tx), out_rx, threads });
         }
+        let control = Arc::new(ControlShared::new(regs.clone(), packed_sizes, options.cores));
         Ok(ServingEngine {
             shards,
             inputs: config.inputs(),
             synapse_words,
+            control,
             submitted: 0,
             completed: 0,
             poisoned: false,
@@ -229,22 +330,70 @@ impl ServingEngine {
         (self.submitted, self.completed)
     }
 
+    /// A cloneable, thread-safe [`ControlPlane`] handle for reprogramming
+    /// this engine while it serves — see [`super::control`] for the epoch
+    /// and validation semantics.
+    pub fn control_plane(&self) -> ControlPlane {
+        ControlPlane::from_shared(self.control.clone())
+    }
+
+    /// The engine's AXI transaction ledger ([`BusStats`], §IV bus model):
+    /// cfg_in/wt_in control beats charged by the control plane (per shard)
+    /// and spk_in/spk_out data beats metered by admission and drain — one
+    /// ledger for control and data traffic.
+    pub fn bus(&self) -> BusStats {
+        self.control.bus()
+    }
+
+    /// The config epoch the *next* admitted sample will be served under
+    /// (0 until the first accepted reconfiguration).
+    pub fn epoch(&self) -> u64 {
+        self.control.epoch()
+    }
+
     /// Serve a batch: admission feeds the shards round-robin under
     /// backpressure while results are drained concurrently; returns one
     /// result per sample, in submission order, bit-identical to a
-    /// sequential core.
+    /// sequential core. Control-plane programs admitted via
+    /// [`ControlPlane::apply`] are broadcast at sample boundaries of this
+    /// feed (and before the first sample).
     pub fn run_batch(&mut self, samples: &[Sample]) -> Result<Vec<StreamResult>> {
+        let ops: Vec<SessionOp> = samples.iter().map(SessionOp::Submit).collect();
+        self.run_session(&ops)
+    }
+
+    /// Serve a request stream that interleaves samples with in-band
+    /// reconfigurations. Each [`SessionOp::Reconfig`] takes effect at
+    /// exactly its position: samples before it complete under the previous
+    /// epoch, samples after it under the new one, with no drain in between
+    /// — the control message simply flows down the same bounded channels
+    /// behind the last sample's data. Returns one result per
+    /// [`SessionOp::Submit`], in submission order, each tagged with its
+    /// epoch.
+    ///
+    /// In-band programs are validated up front; an invalid program fails
+    /// the call before any sample is admitted (the engine stays healthy).
+    pub fn run_session(&mut self, ops: &[SessionOp]) -> Result<Vec<StreamResult>> {
         anyhow::ensure!(
             !self.poisoned,
             "serving engine poisoned by an earlier failed batch; build a new engine"
         );
-        for s in samples {
-            anyhow::ensure!(
-                s.inputs == self.inputs,
-                "sample width {} does not match engine input layer {}",
-                s.inputs,
-                self.inputs
-            );
+        let mut n_samples = 0usize;
+        for op in ops {
+            match op {
+                SessionOp::Submit(s) => {
+                    anyhow::ensure!(
+                        s.inputs == self.inputs,
+                        "sample width {} does not match engine input layer {}",
+                        s.inputs,
+                        self.inputs
+                    );
+                    n_samples += 1;
+                }
+                SessionOp::Reconfig(program) => {
+                    self.control.validate(program)?;
+                }
+            }
         }
         let n_cores = self.shards.len();
         let senders: Vec<SyncSender<StageMsg>> = self
@@ -252,19 +401,53 @@ impl ServingEngine {
             .iter()
             .map(|s| s.in_tx.as_ref().expect("engine not shut down").clone())
             .collect();
+        let control = self.control.clone();
 
         let results = std::thread::scope(|scope| -> Result<Vec<StreamResult>> {
             // Feeder: streams every sample to its shard (blocking on the
-            // bounded channels = admission control).
+            // bounded channels = admission control) and broadcasts control
+            // programs to *all* shards at sample boundaries, so the FIFO
+            // position of a Reconfig is identical in every chain.
             let feeder = scope.spawn(move || -> Result<()> {
-                for (stream, sample) in samples.iter().enumerate() {
-                    let tx = &senders[stream % n_cores];
-                    for t in 0..sample.t_steps {
-                        tx.send(StageMsg::Step { stream, spikes: sample.step(t).to_vec() })
-                            .map_err(|_| anyhow::anyhow!("serving shard died"))?;
+                let dead = || anyhow::anyhow!("serving shard died");
+                let broadcast = |epoch: u64, program: &Arc<ReconfigProgram>| -> Result<()> {
+                    for tx in &senders {
+                        tx.send(StageMsg::Reconfig { epoch, program: program.clone() })
+                            .map_err(|_| dead())?;
                     }
-                    tx.send(StageMsg::Flush { stream })
-                        .map_err(|_| anyhow::anyhow!("serving shard died"))?;
+                    Ok(())
+                };
+                let mut stream = 0usize;
+                for op in ops {
+                    // Programs applied asynchronously through a ControlPlane
+                    // handle land here, at the next sample boundary.
+                    for (epoch, program) in control.take_pending() {
+                        broadcast(epoch, &program)?;
+                    }
+                    match op {
+                        SessionOp::Submit(sample) => {
+                            let tx = &senders[stream % n_cores];
+                            for t in 0..sample.t_steps {
+                                tx.send(StageMsg::Step {
+                                    stream,
+                                    spikes: sample.step(t).to_vec(),
+                                })
+                                .map_err(|_| dead())?;
+                            }
+                            tx.send(StageMsg::Flush { stream, stats: ActivityStats::default() })
+                                .map_err(|_| dead())?;
+                            control.charge_spk_in(sample.nnz() as u64);
+                            stream += 1;
+                        }
+                        SessionOp::Reconfig(program) => {
+                            let (drained, epoch, program) =
+                                control.commit_in_band(program.clone());
+                            for (e, p) in drained {
+                                broadcast(e, &p)?;
+                            }
+                            broadcast(epoch, &program)?;
+                        }
+                    }
                 }
                 Ok(())
             });
@@ -274,15 +457,16 @@ impl ServingEngine {
             // latency budget: it only fires if a shard produces *nothing*
             // for a very long time (a wedged/dead pipeline), in which case
             // the batch is abandoned with an error.
-            let mut results = Vec::with_capacity(samples.len());
+            let mut results = Vec::with_capacity(n_samples);
             let mut first_err: Option<anyhow::Error> = None;
-            for i in 0..samples.len() {
+            for i in 0..n_samples {
                 match self.shards[i % n_cores]
                     .out_rx
                     .recv_timeout(std::time::Duration::from_secs(3600))
                 {
                     Ok(r) => {
                         debug_assert_eq!(r.stream_id, i, "shard FIFO order violated");
+                        self.control.charge_spk_out(r.spikes_total);
                         results.push(r);
                     }
                     Err(_) => {
@@ -314,7 +498,7 @@ impl ServingEngine {
             Ok(results)
         });
 
-        self.submitted += samples.len() as u64;
+        self.submitted += n_samples as u64;
         match results {
             Ok(results) => {
                 self.completed += results.len() as u64;
@@ -364,6 +548,7 @@ impl Drop for ServingEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::registers::REG_VTH;
     use crate::datasets::{Dataset, Split};
     use crate::fixed::Q5_3;
     use crate::hdl::Core;
@@ -398,7 +583,9 @@ mod tests {
                 let seq = core.run(s);
                 assert_eq!(r.counts, seq.counts, "cores={cores} sample {i}");
                 assert_eq!(r.prediction, seq.prediction, "cores={cores} sample {i}");
+                assert_eq!(r.stats, seq.stats, "cores={cores} sample {i} activity ledger");
                 assert_eq!(r.stream_id, i);
+                assert_eq!(r.epoch, 0);
             }
         }
     }
@@ -490,5 +677,104 @@ mod tests {
         let _ = engine.run_batch(&samples[..2]).unwrap();
         engine.shutdown();
         engine.shutdown();
+    }
+
+    #[test]
+    fn in_band_reconfig_splits_epochs_deterministically() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(3)).unwrap();
+        let mut raised = regs.clone();
+        raised.set_vth(4.0).unwrap();
+        let ops: Vec<SessionOp> = samples[..3]
+            .iter()
+            .map(SessionOp::Submit)
+            .chain(std::iter::once(SessionOp::Reconfig(ReconfigProgram::from_registers(
+                &raised,
+            ))))
+            .chain(samples[3..6].iter().map(SessionOp::Submit))
+            .collect();
+        let out = engine.run_session(&ops).unwrap();
+        assert_eq!(out.len(), 6);
+        assert!(out[..3].iter().all(|r| r.epoch == 0), "pre-reconfig samples at epoch 0");
+        assert!(out[3..].iter().all(|r| r.epoch == 1), "post-reconfig samples at epoch 1");
+
+        // Per epoch, bit-identical to a sequential core with that config.
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        for (i, s) in samples[..3].iter().enumerate() {
+            assert_eq!(out[i].counts, core.run(s).counts, "epoch 0 sample {i}");
+        }
+        core.registers = raised;
+        for (i, s) in samples[3..6].iter().enumerate() {
+            assert_eq!(out[3 + i].counts, core.run(s).counts, "epoch 1 sample {i}");
+        }
+        assert_eq!(engine.epoch(), 1);
+    }
+
+    #[test]
+    fn async_apply_lands_at_batch_boundary() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        let control = engine.control_plane();
+        let a = engine.run_batch(&samples[..4]).unwrap();
+        assert!(a.iter().all(|r| r.epoch == 0));
+        let epoch = control
+            .apply(ReconfigProgram::new().write(REG_VTH, Q5_3.from_float(4.0)))
+            .unwrap();
+        assert_eq!(epoch, 1);
+        let b = engine.run_batch(&samples[..4]).unwrap();
+        assert!(b.iter().all(|r| r.epoch == 1), "pending program must land before the batch");
+        // Raising the threshold can only reduce (or keep) spiking.
+        let spikes_a: u64 = a.iter().map(|r| r.stats.spikes).sum();
+        let spikes_b: u64 = b.iter().map(|r| r.stats.spikes).sum();
+        assert!(spikes_b <= spikes_a, "vth raise increased spiking ({spikes_a} -> {spikes_b})");
+    }
+
+    #[test]
+    fn weight_swap_on_live_engine_is_bitexact() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        // New last-layer weights, delivered packed (all-to-all: packed ==
+        // dense row-major).
+        let mut rng = crate::datasets::rng::XorShift64Star::new(0xBEEF);
+        let new_last: Vec<i32> =
+            (0..weights[1].len()).map(|_| rng.below(15) as i32 - 7).collect();
+        let ops = [
+            SessionOp::Submit(&samples[0]),
+            SessionOp::Reconfig(ReconfigProgram::new().swap_weights(1, new_last.clone())),
+            SessionOp::Submit(&samples[1]),
+        ];
+        let out = engine.run_session(&ops).unwrap();
+        assert_eq!((out[0].epoch, out[1].epoch), (0, 1));
+
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        assert_eq!(out[0].counts, core.run(&samples[0]).counts);
+        core.load_weights(&[weights[0].clone(), new_last]).unwrap();
+        assert_eq!(out[1].counts, core.run(&samples[1]).counts, "swapped weights diverged");
+        // wt beats charged per shard on the same ledger as data traffic.
+        let bus = engine.bus();
+        assert_eq!(bus.wt_writes, 2 * weights[1].len() as u64);
+        assert!(bus.spk_in_events > 0 && bus.beats() > bus.wt_writes);
+    }
+
+    #[test]
+    fn invalid_in_band_program_fails_before_admission() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        let ops = [
+            SessionOp::Submit(&samples[0]),
+            SessionOp::Reconfig(ReconfigProgram::new().write(99, 0)),
+        ];
+        assert!(engine.run_session(&ops).is_err());
+        // The engine is not poisoned: validation failed up front, nothing
+        // was admitted.
+        let out = engine.run_batch(&samples[..2]).unwrap();
+        assert_eq!(out.len(), 2);
     }
 }

@@ -1,6 +1,17 @@
 //! Design-space exploration — paper Table IX (largest wide/deep
 //! configuration per FPGA board) and the general "estimate without
 //! synthesising" workflow the paper motivates in §VI-D.
+//!
+//! The explorer walks candidate architectures through the analytic
+//! hardware models — [`crate::hwmodel::resources`] for LUT/FF/BRAM
+//! occupancy against a [`crate::hwmodel::Board`]'s budget and
+//! [`crate::hwmodel::power`] for the dynamic-power operating point — so a
+//! design is sized in microseconds instead of a synthesis run. Two search
+//! shapes reproduce Table IX: [`largest_wide`] (binary search over the
+//! hidden width H of `in × H × out`) and [`largest_deep`] (deepest stack
+//! of fixed-width hidden layers that still fits). The CLI exposes this as
+//! `repro table 9`, and [`crate::experiments::dse_exp`] renders the
+//! paper-facing table.
 
 use crate::config::ModelConfig;
 use crate::fixed::QSpec;

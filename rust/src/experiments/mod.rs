@@ -16,7 +16,9 @@ pub mod throughput;
 
 use anyhow::{Context, Result};
 
+use crate::config::registers::RegisterFile;
 use crate::config::ModelConfig;
+use crate::coordinator::serving::{ServingEngine, ServingOptions};
 use crate::datasets::{Dataset, Split};
 use crate::fixed::QSpec;
 use crate::hdl::{ActivityStats, Core};
@@ -74,16 +76,41 @@ pub const ALL: &[(&str, &str)] = &[
     ("table", "12"),
 ];
 
-/// Build a programmed cycle-accurate core from an artifact.
-pub fn core_from_artifact(art: &ModelArtifact) -> Result<(ModelConfig, Core)> {
+/// The artifact's deployment target: parsed architecture + the default
+/// register file it ships with. Single source of truth for both the
+/// single-core ([`core_from_artifact`]) and serving-engine
+/// ([`engine_from_artifact`]) deployment paths.
+fn artifact_config_regs(art: &ModelArtifact) -> Result<(ModelConfig, RegisterFile)> {
     let arch = art.sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("x");
     let config = ModelConfig::parse_arch(&arch, QSpec::parse(&art.qname)?)?;
+    let mut regs = RegisterFile::new(config.qspec);
+    for (addr, &v) in art.default_regs.iter().enumerate() {
+        regs.write(addr, v)?;
+    }
+    Ok((config, regs))
+}
+
+/// Build a programmed cycle-accurate core from an artifact.
+pub fn core_from_artifact(art: &ModelArtifact) -> Result<(ModelConfig, Core)> {
+    let (config, regs) = artifact_config_regs(art)?;
     let mut core = Core::new(config.clone());
     core.load_weights(&art.weights)?;
-    for (addr, &v) in art.default_regs.iter().enumerate() {
-        core.registers.write(addr, v)?;
-    }
+    core.registers = regs;
     Ok((config, core))
+}
+
+/// Deploy an artifact as a live [`ServingEngine`] (the §IV "deployed
+/// device" in its production form): parse the architecture, program the
+/// weights into every shard, and program the artifact's default registers.
+/// Returns the config alongside the engine; reconfigure the running engine
+/// afterwards through [`ServingEngine::control_plane`].
+pub fn engine_from_artifact(
+    art: &ModelArtifact,
+    options: ServingOptions,
+) -> Result<(ModelConfig, ServingEngine)> {
+    let (config, regs) = artifact_config_regs(art)?;
+    let engine = ServingEngine::new(&config, &art.weights, &regs, options)?;
+    Ok((config, engine))
 }
 
 /// Measured evaluation of a programmed core over the synthetic test split:
@@ -115,4 +142,35 @@ pub fn evaluate_core(core: &mut Core, dataset: Dataset, n: u64, t_steps: usize) 
         spikes_per_neuron_150: spike_rate * 150.0,
         stats,
     }
+}
+
+/// As [`evaluate_core`], but through a live [`ServingEngine`]: the batch is
+/// served by the deployed engine and accuracy/activity are read from the
+/// engine's own results (each [`crate::coordinator::serving::StreamResult`]
+/// carries the full per-stream activity ledger), so spikes, accuracy, and
+/// the power derived from the spike rate all come from the *same deployed
+/// instance* — the §VI-I methodology.
+pub fn evaluate_engine(
+    engine: &mut ServingEngine,
+    dataset: Dataset,
+    n: u64,
+    t_steps: usize,
+) -> Result<Measured> {
+    let samples: Vec<_> = (0..n).map(|i| dataset.sample(i, Split::Test, t_steps)).collect();
+    let results = engine.run_batch(&samples)?;
+    let mut stats = ActivityStats::default();
+    let mut correct = 0u64;
+    for (r, s) in results.iter().zip(&samples) {
+        stats.add(&r.stats);
+        if r.prediction == s.label {
+            correct += 1;
+        }
+    }
+    let spike_rate = stats.spike_rate();
+    Ok(Measured {
+        accuracy: correct as f64 / n.max(1) as f64,
+        spike_rate,
+        spikes_per_neuron_150: spike_rate * 150.0,
+        stats,
+    })
 }

@@ -135,7 +135,7 @@ impl Core {
             per_layer.len()
         );
         for (layer, w) in self.layers.iter_mut().zip(per_layer) {
-            layer.memory_mut().load_packed(w)?;
+            layer.load_packed(w)?;
         }
         Ok(())
     }

@@ -57,6 +57,16 @@ impl Layer {
         &mut self.mem
     }
 
+    /// Bulk wt_in reprogramming: swap this layer's synaptic memory for a
+    /// packed payload (exactly [`SynapticMemory::synapses`] words in stored
+    /// order). Membrane state is untouched — the paper's run-time weight
+    /// path programs memory while the neurons keep their dynamics. This is
+    /// what a serving-engine stage applies when a control-plane program
+    /// addresses its layer.
+    pub fn load_packed(&mut self, packed: &[i32]) -> Result<(), super::memory::MemError> {
+        self.mem.load_packed(packed)
+    }
+
     pub fn neuron_state(&self, j: usize) -> LifNeuron {
         self.neurons[j]
     }
@@ -77,7 +87,7 @@ impl Layer {
         self.step_with(spikes_in, spikes_out, None)
     }
 
-    /// As [`step`], with explicit registers (per-core register file is
+    /// As [`Layer::step`], with explicit registers (per-core register file is
     /// borrowed by the core; `None` is only used in unit tests via the
     /// default register values).
     pub fn step_regs(

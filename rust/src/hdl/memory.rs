@@ -355,8 +355,8 @@ impl SynapticMemory {
     /// words in canonical order (row-major over stored positions — for the
     /// diagonal store that is the diagonal itself; for banded rows the
     /// concatenated windows). Rejects wrong sizes with the *packed* size in
-    /// [`MemError::BulkSize::expect`] and out-of-range words without
-    /// mutating.
+    /// [`MemError::BulkSize`]'s `expect` field and out-of-range words
+    /// without mutating.
     ///
     /// [`synapses`]: SynapticMemory::synapses
     pub fn load_packed(&mut self, packed: &[i32]) -> Result<(), MemError> {

@@ -154,11 +154,11 @@ pub fn core(config: &ModelConfig) -> Resources {
     core_with_synapses(config, config.total_synapses())
 }
 
-/// As [`core`], but with the synapse count measured from an instantiated
+/// As [`core()`], but with the synapse count measured from an instantiated
 /// core's topology-aware stores ([`crate::hdl::Core::synapse_words`]) —
 /// resource reporting driven by what the core is physically made of. The
 /// static mask model and the physical store agree exactly (asserted in
-/// tests), so this differs from [`core`] only in provenance.
+/// tests), so this differs from [`core()`] only in provenance.
 pub fn core_instance(core: &crate::hdl::Core) -> Resources {
     core_with_synapses(core.config(), core.synapse_words())
 }

@@ -14,7 +14,10 @@
 //!   pipelined streaming coordinator, and the PJRT runtime that executes the
 //!   AOT artifacts. Python never runs on the request path.
 //!
-//! Module map (see DESIGN.md §4 for the full system inventory):
+//! Module map (see `ARCHITECTURE.md` at the repo root for the layering
+//! diagram, the paper-section → module cross-reference, and the serving
+//! engine's control-message dataflow; DESIGN.md §4 has the full system
+//! inventory):
 //!
 //! | module        | paper concept |
 //! |---------------|---------------|
@@ -23,7 +26,7 @@
 //! | [`hdl`]       | Fig. 2 neuron, Fig. 1 layered core, AER, clocking    |
 //! | [`hwmodel`]   | FPGA resources/power/timing + ASIC (Tables IV–XII)   |
 //! | [`datasets`]  | synthetic spiking datasets (§VI-A substitution)      |
-//! | [`coordinator`]| §IV interface, Fig. 8 pipelining, [`coordinator::serving`] engine |
+//! | [`coordinator`]| §IV interface, Fig. 8 pipelining, [`coordinator::serving`] engine, [`coordinator::control`] live reconfiguration (§VI-I) |
 //! | [`golden`]    | native artifact/golden-vector substrate (no Python)  |
 //! | [`runtime`]   | artifact manifest; PJRT executor behind `--features pjrt` |
 //! | [`baselines`] | non-pipelined dataflow [30] and Table VII designs    |

@@ -275,20 +275,26 @@ fn serve(args: &[String]) -> Result<()> {
         ServingOptions::with_cores(cores),
     )?;
     let samples: Vec<_> = (0..n).map(|i| dataset.sample(i, Split::Test, art.t_steps)).collect();
+    let mut tel = Telemetry::new();
+    tel.start();
     let t0 = Instant::now();
     let results = engine.run_batch(&samples)?;
     let dt = t0.elapsed();
-    let correct = results.iter().zip(&samples).filter(|(r, s)| r.prediction == s.label).count();
+    let per_req = dt / n.max(1) as u32;
+    for (r, s) in results.iter().zip(&samples) {
+        tel.record(per_req, &r.stats, Some(r.prediction == s.label));
+        tel.record_epoch(r.epoch);
+    }
+    tel.stop();
+    tel.record_bus(engine.bus());
     let (submitted, completed) = engine.stats();
     println!(
-        "serving-engine: {} streams on {} cores in {:.2?} ({:.1}/s), accuracy {:.1}%, \
-         admitted={submitted} completed={completed}",
+        "serving-engine: {} streams on {} cores in {:.2?}, admitted={submitted} completed={completed}",
         results.len(),
         engine.num_cores(),
         dt,
-        results.len() as f64 / dt.as_secs_f64(),
-        100.0 * correct as f64 / n as f64
     );
+    println!("{}", tel.summary());
     Ok(())
 }
 

@@ -4,7 +4,7 @@
 //! * [`artifacts`] — manifest parsing, weight-file loading, golden vectors.
 //!   Always available; the native substrate in [`crate::golden`] can
 //!   regenerate every artifact the manifest describes without Python.
-//! * [`Runtime`] / [`ModelExecutable`] (feature `pjrt`) — loads the AOT HLO
+//! * `Runtime` / `ModelExecutable` (feature `pjrt`) — loads the AOT HLO
 //!   text produced by `python/compile/aot.py` and executes it on the PJRT
 //!   CPU client. Off by default so the stock build carries zero XLA
 //!   dependencies; the workspace ships a vendored API stub, and pointing

@@ -1,0 +1,204 @@
+//! Epoch-consistency suite for the live control plane: reconfiguring a
+//! serving engine mid-stream must yield results that are, per epoch,
+//! bit-identical to a freshly built engine with that epoch's configuration
+//! — across topologies, for cfg_in register programs and wt_in weight
+//! swaps, delivered in-band and asynchronously.
+
+use quantisenc::config::registers::{RegisterFile, ResetMode, REG_VTH};
+use quantisenc::config::{ModelConfig, Topology};
+use quantisenc::coordinator::control::{ControlError, ReconfigProgram};
+use quantisenc::coordinator::serving::{ServingEngine, ServingOptions, SessionOp};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::Sample;
+use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::Core;
+
+fn topology_configs() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig::parse_arch("24x16x8", Q5_3).unwrap(),
+        ModelConfig::with_topologies(&[20, 20, 20], &[Topology::OneToOne, Topology::OneToOne], Q5_3)
+            .unwrap(),
+        ModelConfig::with_topologies(
+            &[24, 24, 8],
+            &[Topology::Gaussian { radius: 2 }, Topology::AllToAll],
+            Q5_3,
+        )
+        .unwrap(),
+    ]
+}
+
+fn mask_weights(cfg: &ModelConfig, rng: &mut XorShift64Star) -> Vec<Vec<i32>> {
+    cfg.layers()
+        .iter()
+        .map(|l| {
+            let mask = l.topology.mask(l.fan_in, l.neurons).unwrap();
+            mask.iter()
+                .map(|&a| if a == 0 { 0 } else { rng.below(15) as i32 - 7 })
+                .collect()
+        })
+        .collect()
+}
+
+fn rand_samples(cfg: &ModelConfig, rng: &mut XorShift64Star, count: usize) -> Vec<Sample> {
+    (0..count)
+        .map(|_| {
+            let t_steps = 2 + rng.below(8) as usize;
+            let inputs = cfg.inputs();
+            let spikes = (0..t_steps * inputs).map(|_| (rng.uniform() < 0.3) as u8).collect();
+            Sample { spikes, t_steps, inputs, label: 0 }
+        })
+        .collect()
+}
+
+/// The acceptance property: ≥ 2 reconfig epochs × 3 topologies, interleaved
+/// with streaming samples in one live session, compared per epoch against a
+/// *freshly built* engine with that epoch's exact configuration.
+#[test]
+fn prop_live_reconfig_is_bitexact_per_epoch() {
+    let mut rng = XorShift64Star::new(0xC0117401);
+    for (case, cfg) in topology_configs().into_iter().enumerate() {
+        let weights = mask_weights(&cfg, &mut rng);
+        let samples = rand_samples(&cfg, &mut rng, 9);
+        let regs0 = RegisterFile::new(Q5_3);
+
+        // Epoch 1: raise vth + change reset mode. Epoch 2: swap the last
+        // layer's weights (packed payload) on top of epoch 1's registers.
+        let mut regs1 = regs0.clone();
+        regs1.set_vth(2.0).unwrap();
+        regs1.set_reset_mode(ResetMode::ToZero).unwrap();
+        let swapped: Vec<Vec<i32>> = {
+            let mut w = weights.clone();
+            let last = w.len() - 1;
+            w[last] = mask_weights(&cfg, &mut rng)[last].clone();
+            w
+        };
+        // Packed payload for the last layer, derived via a scratch core so
+        // the test exercises the same packed layout the stages load.
+        let mut scratch = Core::new(cfg.clone());
+        scratch.load_weights(&swapped).unwrap();
+        let packed_last = scratch.layers().last().unwrap().memory().packed().to_vec();
+
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs0, ServingOptions::with_cores(2)).unwrap();
+        let ops: Vec<SessionOp> = samples[..3]
+            .iter()
+            .map(SessionOp::Submit)
+            .chain([SessionOp::Reconfig(ReconfigProgram::from_registers(&regs1))])
+            .chain(samples[3..6].iter().map(SessionOp::Submit))
+            .chain([SessionOp::Reconfig(
+                ReconfigProgram::new().swap_weights(cfg.num_layers() - 1, packed_last),
+            )])
+            .chain(samples[6..9].iter().map(SessionOp::Submit))
+            .collect();
+        let live = engine.run_session(&ops).unwrap();
+        assert_eq!(live.len(), 9, "case {case}");
+        for (i, r) in live.iter().enumerate() {
+            assert_eq!(r.stream_id, i, "case {case}: order preserved across reconfigs");
+            assert_eq!(r.epoch, (i / 3) as u64, "case {case} sample {i}: wrong epoch");
+        }
+
+        // Reference: a freshly built engine per epoch, never reconfigured.
+        let epochs: [(&RegisterFile, &Vec<Vec<i32>>); 3] =
+            [(&regs0, &weights), (&regs1, &weights), (&regs1, &swapped)];
+        for (e, &(regs, w)) in epochs.iter().enumerate() {
+            let mut fresh =
+                ServingEngine::new(&cfg, w, regs, ServingOptions::with_cores(1)).unwrap();
+            let want = fresh.run_batch(&samples[e * 3..(e + 1) * 3]).unwrap();
+            for (i, (lr, fr)) in live[e * 3..(e + 1) * 3].iter().zip(&want).enumerate() {
+                assert_eq!(
+                    lr.counts, fr.counts,
+                    "case {case} epoch {e} sample {i}: live engine diverged from fresh build"
+                );
+                assert_eq!(lr.prediction, fr.prediction, "case {case} epoch {e} sample {i}");
+                assert_eq!(
+                    lr.stats, fr.stats,
+                    "case {case} epoch {e} sample {i}: activity ledger diverged"
+                );
+            }
+            // And against the sequential core, closing the loop to the
+            // cycle-accurate reference.
+            let mut core = Core::new(cfg.clone());
+            core.load_weights(w).unwrap();
+            core.registers = (*regs).clone();
+            for (i, s) in samples[e * 3..(e + 1) * 3].iter().enumerate() {
+                let seq = core.run(s);
+                assert_eq!(live[e * 3 + i].counts, seq.counts, "case {case} epoch {e} vs core");
+                assert_eq!(live[e * 3 + i].stats, seq.stats, "case {case} epoch {e} vs core");
+            }
+        }
+    }
+}
+
+/// Asynchronous applies through a cloned handle on another thread: whatever
+/// epoch each result reports, it must match a fresh engine built with that
+/// epoch's config (the grouping is timing-dependent, the bit-exactness is
+/// not).
+#[test]
+fn async_reconfig_results_match_their_reported_epoch() {
+    let cfg = ModelConfig::parse_arch("24x16x8", Q5_3).unwrap();
+    let mut rng = XorShift64Star::new(0xA57C);
+    let weights = mask_weights(&cfg, &mut rng);
+    let samples = rand_samples(&cfg, &mut rng, 12);
+    let regs0 = RegisterFile::new(Q5_3);
+    let mut regs1 = regs0.clone();
+    regs1.set_vth(3.0).unwrap();
+
+    let mut engine =
+        ServingEngine::new(&cfg, &weights, &regs0, ServingOptions::with_cores(2)).unwrap();
+    let control = engine.control_plane();
+    let applier = std::thread::spawn(move || {
+        control.apply(ReconfigProgram::from_registers(&regs1)).unwrap()
+    });
+    let first = engine.run_batch(&samples[..6]).unwrap();
+    let epoch = applier.join().unwrap();
+    assert_eq!(epoch, 1);
+    let second = engine.run_batch(&samples[6..]).unwrap();
+    assert!(second.iter().all(|r| r.epoch == 1), "pending program must land by next batch");
+
+    let mut regs1 = regs0.clone();
+    regs1.set_vth(3.0).unwrap();
+    let per_epoch = [&regs0, &regs1];
+    let mut core = Core::new(cfg.clone());
+    core.load_weights(&weights).unwrap();
+    for (batch, offset) in [(&first, 0usize), (&second, 6)] {
+        for r in batch.iter() {
+            core.registers = per_epoch[r.epoch as usize].clone();
+            let seq = core.run(&samples[offset + r.stream_id]);
+            assert_eq!(r.counts, seq.counts, "stream {} epoch {}", r.stream_id, r.epoch);
+        }
+    }
+}
+
+/// Typed rejection: a malformed program never changes the engine, its
+/// epoch, or its ledger — and the live path keeps serving afterwards.
+#[test]
+fn rejected_programs_leave_engine_serving() {
+    let cfg = ModelConfig::parse_arch("16x8x4", Q5_3).unwrap();
+    let mut rng = XorShift64Star::new(0xBAD);
+    let weights = mask_weights(&cfg, &mut rng);
+    let samples = rand_samples(&cfg, &mut rng, 4);
+    let regs = RegisterFile::new(Q5_3);
+    let mut engine =
+        ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+    let control = engine.control_plane();
+    let bus0 = control.bus();
+
+    assert!(matches!(
+        control.apply(ReconfigProgram::new().write(6, 0)),
+        Err(ControlError::Register(_))
+    ));
+    assert!(matches!(
+        control.apply(ReconfigProgram::new().write(REG_VTH, 30_000)),
+        Err(ControlError::Register(_))
+    ));
+    assert!(matches!(
+        control.apply(ReconfigProgram::new().swap_weights(5, vec![])),
+        Err(ControlError::BadLayer { .. })
+    ));
+    assert_eq!(control.epoch(), 0);
+    assert_eq!(control.bus(), bus0);
+
+    let out = engine.run_batch(&samples).unwrap();
+    assert_eq!(out.len(), 4);
+    assert!(out.iter().all(|r| r.epoch == 0));
+}

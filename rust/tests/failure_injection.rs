@@ -163,6 +163,66 @@ fn bulk_size_reports_per_topology_payload_sizes() {
 }
 
 #[test]
+fn reset_mode_from_i32_rejects_all_out_of_range_encodings() {
+    use quantisenc::config::registers::ResetMode;
+    // The decoder accepts exactly the four Eq. 7 encodings; everything
+    // else — including the integer extremes — must decode to None, never
+    // wrap or panic.
+    for x in [-1, 4, 5, 17, 100, i32::MIN, i32::MAX, i32::MIN + 3, -4] {
+        assert_eq!(ResetMode::from_i32(x), None, "encoding {x} must be rejected");
+    }
+    for mode in ResetMode::all() {
+        assert_eq!(ResetMode::from_i32(mode as i32), Some(mode), "{mode:?} round-trips");
+    }
+}
+
+#[test]
+fn control_plane_rejects_malformed_programs_with_typed_errors() {
+    use quantisenc::config::registers::{RegisterError, RegisterFile, NUM_REGS, REG_RESET_MODE};
+    use quantisenc::coordinator::control::{ControlError, ReconfigProgram};
+    use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
+
+    let cfg = ModelConfig::parse_arch("8x6x4", Q5_3).unwrap();
+    let weights = vec![vec![0; 48], vec![0; 24]];
+    let regs = RegisterFile::new(Q5_3);
+    let engine = ServingEngine::new(&cfg, &weights, &regs, ServingOptions::default()).unwrap();
+    let control = engine.control_plane();
+
+    // cfg_in: out-of-range register index → typed RegisterError inside the
+    // ControlError, with the address preserved.
+    for addr in [NUM_REGS, NUM_REGS + 1, 99, usize::MAX] {
+        match control.apply(ReconfigProgram::new().write(addr, 0)) {
+            Err(ControlError::Register(RegisterError::BadAddress(a))) => assert_eq!(a, addr),
+            other => panic!("address {addr}: expected BadAddress, got {other:?}"),
+        }
+    }
+    // cfg_in: bad reset encoding and out-of-range value are register-typed
+    // too, and a good write ahead of a bad one must not stick.
+    let p = ReconfigProgram::new().write(2, 4).write(REG_RESET_MODE, 9);
+    assert_eq!(
+        control.apply(p),
+        Err(ControlError::Register(RegisterError::BadResetMode(9)))
+    );
+    assert_eq!(control.registers().vector(), regs.vector(), "partial apply leaked");
+    // wt_in: layer address, payload size, and word range all typed.
+    assert_eq!(
+        control.apply(ReconfigProgram::new().swap_weights(2, vec![])),
+        Err(ControlError::BadLayer { layer: 2, layers: 2 })
+    );
+    assert_eq!(
+        control.apply(ReconfigProgram::new().swap_weights(1, vec![0; 5])),
+        Err(ControlError::PayloadSize { layer: 1, expect: 24, got: 5 })
+    );
+    assert!(matches!(
+        control.apply(ReconfigProgram::new().swap_weights(0, vec![1000; 48])),
+        Err(ControlError::WeightOutOfRange { layer: 0, .. })
+    ));
+    // Nothing was admitted: epoch and ledger untouched.
+    assert_eq!(control.epoch(), 0);
+    assert_eq!(control.bus().beats(), 0);
+}
+
+#[test]
 fn pipeline_survives_zero_length_streams() {
     use quantisenc::config::registers::RegisterFile;
     use quantisenc::coordinator::pipeline::run_pipelined;
