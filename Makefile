@@ -1,6 +1,6 @@
 # Convenience targets; everything is plain cargo underneath.
 
-.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology fmt clippy
+.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology bench-hotpath fmt clippy
 
 all: build
 
@@ -22,12 +22,23 @@ bench:
 bench-norun:
 	cargo bench --no-run
 
-# Quick smoke: run the topology benches and emit BENCH_topology.json with
-# per-topology storage words, synaptic ops/step, and step latency.
+# Quick smoke: run the topology + hot-path benches and emit
+# BENCH_topology.json (per-topology storage words, synaptic ops/step, step
+# latency) and BENCH_hotpath.json (scalar-vs-packed layer step latency +
+# serving-engine samples/s) in one bench_layer pass.
 bench-topology:
-	BENCH_TOPOLOGY_JSON=BENCH_topology.json cargo bench --bench bench_layer
+	BENCH_TOPOLOGY_JSON=BENCH_topology.json BENCH_HOTPATH_JSON=BENCH_hotpath.json \
+		cargo bench --bench bench_layer
 
-bench-smoke: bench-topology
+# Merge serving-engine throughput into BENCH_hotpath.json.
+bench-hotpath: bench-topology
+	BENCH_HOTPATH_JSON=BENCH_hotpath.json cargo bench --bench bench_serving
+
+# bench-smoke runs everything above, then validates the reports (required
+# keys present, >=5x topology ops reduction, >=3x packed layer-step
+# speedup at N=400 / 2% firing, positive engine throughput).
+bench-smoke: bench-hotpath
+	cargo run --release --bin repro -- bench-check BENCH_topology.json BENCH_hotpath.json
 
 fmt:
 	cargo fmt --all -- --check

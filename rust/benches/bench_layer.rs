@@ -8,13 +8,24 @@
 //! Set `BENCH_TOPOLOGY_JSON=<path>` to additionally emit the results as a
 //! JSON report (the Makefile `bench-smoke` target writes
 //! `BENCH_topology.json`).
+//!
+//! A second section benchmarks the **event-driven hot path**: the packed
+//! [`SpikePlane`] datapath (`Layer::step_plane` — trailing_zeros row
+//! iteration, bulk gating charge, SoA quiescence skip) against the retained
+//! dense scalar reference (`Layer::step_scalar`) on the same layer, same
+//! weights, same spike stream — after a 200-step bit-exactness pre-gate.
+//! Set `BENCH_HOTPATH_JSON=<path>` to emit `BENCH_hotpath.json` (per-case
+//! scalar/packed ns-per-step and the N=400 @ 2%-firing speedup the
+//! acceptance gate checks; `bench_serving` merges its engine throughput
+//! into the same file and `repro bench-check` validates it).
 
 use std::collections::BTreeMap;
 
+use quantisenc::config::registers::RegisterFile;
 use quantisenc::config::{LayerConfig, MemKind, Topology};
 use quantisenc::datasets::rng::XorShift64Star;
 use quantisenc::fixed::Q5_3;
-use quantisenc::hdl::Layer;
+use quantisenc::hdl::{Layer, SpikePlane};
 use quantisenc::util::bench::quick;
 use quantisenc::util::json::Json;
 
@@ -88,6 +99,96 @@ fn case_json(c: &CaseResult) -> Json {
     Json::Obj(o)
 }
 
+struct HotpathResult {
+    name: String,
+    topology: String,
+    n: usize,
+    firing_rate: f64,
+    firing_rows: usize,
+    scalar_ns: f64,
+    packed_ns: f64,
+    speedup: f64,
+}
+
+/// Scalar-reference vs packed-plane step latency on an N×N layer of the
+/// given topology at the given input firing rate. Both paths are first
+/// proven bit-identical over 200 steps of the benchmarked stream (vmem,
+/// spikes, full ledger), then timed on twin layers with the same weights.
+///
+/// The acceptance case is Gaussian radius-1 at N = 400 / 2% firing — the
+/// paper's conv3x3-analog connectivity, where event-driven execution pays
+/// off fully: ~8 firing rows touch ≤ 24 of 400 neurons, so the packed
+/// path retires ~24 synaptic accumulates, ~24 full LIF updates, and ~376
+/// three-compare quiescence skips, while the scalar reference still scans
+/// all 400 rows and runs all 400 LIF updates. The all-to-all cases are
+/// reported alongside (there every firing row touches all N activation
+/// registers, so only the row scan is saved and the win is modest).
+fn bench_hotpath_case(name: &str, n: usize, topo: Topology, firing: f64) -> HotpathResult {
+    let cfg = LayerConfig { fan_in: n, neurons: n, topology: topo };
+    let mut rng = XorShift64Star::new(0x407_407);
+    let mask = topo.mask(n, n).unwrap();
+    let weights: Vec<i32> = mask
+        .iter()
+        .map(|&a| if a == 0 { 0 } else { rng.below(255) as i32 - 127 })
+        .collect();
+    let regs = RegisterFile::new(Q5_3);
+    let mut srng = XorShift64Star::new(0xF1_7E ^ ((n as u64) << 16) ^ (firing * 1e4) as u64);
+    let mut spikes: Vec<u8> = (0..n).map(|_| (srng.uniform() < firing) as u8).collect();
+    if spikes.iter().all(|&s| s == 0) {
+        spikes[0] = 1; // keep the nominal rate non-degenerate
+    }
+    let firing_rows = spikes.iter().filter(|&&s| s != 0).count();
+    let plane = SpikePlane::from_bytes(&spikes);
+
+    let mut scalar = Layer::new(&cfg, Q5_3, MemKind::Bram);
+    scalar.memory_mut().load_dense(&weights).unwrap();
+    let mut packed = scalar.clone();
+
+    // Bit-exactness pre-gate: the twins must stay identical while the
+    // membrane state evolves under the benchmarked stream.
+    let mut out_b = Vec::new();
+    let mut out_p = SpikePlane::default();
+    for t in 0..200 {
+        let s = scalar.step_scalar(&spikes, &mut out_b, &regs);
+        let p = packed.step_plane(&plane, &mut out_p, &regs);
+        assert_eq!(out_p.to_bytes(), out_b, "{name} t={t} spikes diverged");
+        assert_eq!(packed.vmem_slice(), scalar.vmem_slice(), "{name} t={t} vmem diverged");
+        assert_eq!(p, s, "{name} t={t} ledger diverged");
+    }
+
+    let rs = quick(&format!("hotpath/{name}/scalar"), || {
+        std::hint::black_box(scalar.step_scalar(std::hint::black_box(&spikes), &mut out_b, &regs));
+    });
+    let rp = quick(&format!("hotpath/{name}/packed"), || {
+        std::hint::black_box(packed.step_plane(std::hint::black_box(&plane), &mut out_p, &regs));
+    });
+    let scalar_ns = rs.median.as_secs_f64() * 1e9;
+    let packed_ns = rp.median.as_secs_f64() * 1e9;
+    HotpathResult {
+        name: name.to_string(),
+        topology: topo.label(),
+        n,
+        firing_rate: firing,
+        firing_rows,
+        scalar_ns,
+        packed_ns,
+        speedup: scalar_ns / packed_ns,
+    }
+}
+
+fn hotpath_json(c: &HotpathResult) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(c.name.clone()));
+    o.insert("topology".to_string(), Json::Str(c.topology.clone()));
+    o.insert("n".to_string(), Json::Num(c.n as f64));
+    o.insert("firing_rate".to_string(), Json::Num(c.firing_rate));
+    o.insert("firing_rows".to_string(), Json::Num(c.firing_rows as f64));
+    o.insert("scalar_ns_per_step".to_string(), Json::Num(c.scalar_ns));
+    o.insert("packed_ns_per_step".to_string(), Json::Num(c.packed_ns));
+    o.insert("speedup".to_string(), Json::Num(c.speedup));
+    Json::Obj(o)
+}
+
 fn main() {
     println!("== bench_layer (Table V workload, topology-aware stores) ==");
     let mut cases = Vec::new();
@@ -138,6 +239,45 @@ fn main() {
         root.insert("cases".to_string(), Json::Arr(cases.iter().map(case_json).collect()));
         let json = Json::Obj(root);
         std::fs::write(&path, format!("{json}\n")).expect("write BENCH_TOPOLOGY_JSON");
+        println!("wrote {path}");
+    }
+
+    println!("\n== bench_layer (event-driven hot path: scalar reference vs packed planes) ==");
+    let g1 = Topology::Gaussian { radius: 1 };
+    let hp_cases = vec![
+        bench_hotpath_case("gaussian_r1_400_firing_2pct", 400, g1, 0.02),
+        bench_hotpath_case("gaussian_r1_400_firing_5pct", 400, g1, 0.05),
+        bench_hotpath_case("one_to_one_400_firing_2pct", 400, Topology::OneToOne, 0.02),
+        bench_hotpath_case("fc_400_firing_2pct", 400, Topology::AllToAll, 0.02),
+        bench_hotpath_case("fc_400_firing_30pct", 400, Topology::AllToAll, 0.30),
+        bench_hotpath_case("fc_256_firing_2pct", 256, Topology::AllToAll, 0.02),
+    ];
+    println!("\nlayer step latency, scalar reference vs packed event-driven path:");
+    for c in &hp_cases {
+        println!(
+            "  {:28} ({:>3} firing rows)  scalar {:>9.0} ns  packed {:>9.0} ns  {:>5.1}x",
+            c.name, c.firing_rows, c.scalar_ns, c.packed_ns, c.speedup
+        );
+    }
+    let accept = hp_cases.iter().find(|c| c.name == "gaussian_r1_400_firing_2pct").unwrap();
+    println!(
+        "\nacceptance point N=400 @ 2% firing (gaussian r1): {:.1}x (gate: >= 3x)",
+        accept.speedup
+    );
+
+    if let Ok(path) = std::env::var("BENCH_HOTPATH_JSON") {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("hotpath".to_string()));
+        root.insert(
+            "layer_speedup_n400_2pct".to_string(),
+            Json::Num(accept.speedup),
+        );
+        root.insert(
+            "layer_cases".to_string(),
+            Json::Arr(hp_cases.iter().map(hotpath_json).collect()),
+        );
+        let json = Json::Obj(root);
+        std::fs::write(&path, format!("{json}\n")).expect("write BENCH_HOTPATH_JSON");
         println!("wrote {path}");
     }
 }

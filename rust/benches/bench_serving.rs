@@ -3,6 +3,8 @@
 //! to the sequential cycle-accurate core every round, plus the cost of the
 //! live control plane (reconfigure-per-batch vs rebuild-per-config).
 
+use std::collections::BTreeMap;
+
 use quantisenc::config::registers::RegisterFile;
 use quantisenc::config::{ModelConfig, Topology};
 use quantisenc::coordinator::control::ReconfigProgram;
@@ -12,6 +14,7 @@ use quantisenc::datasets::{Dataset, Sample, Split};
 use quantisenc::fixed::Q5_3;
 use quantisenc::hdl::Core;
 use quantisenc::util::bench::quick;
+use quantisenc::util::json::Json;
 
 /// Serving throughput over a sparse (Gaussian radius-1) wide layer — the
 /// topology-aware store makes the first layer's synaptic work O(3·N)
@@ -163,4 +166,48 @@ fn main() {
 
     println!("\n== bench_serving (live control plane) ==");
     bench_live_reconfig();
+
+    // Merge engine throughput into the hot-path perf report written by
+    // bench_layer (the BENCH_hotpath.json the Makefile's bench-smoke
+    // validates and CI archives): end-to-end samples/s for every core
+    // count on the zero-alloc packed streaming path, next to the
+    // sequential-core baseline.
+    if let Ok(path) = std::env::var("BENCH_HOTPATH_JSON") {
+        // The layer section must already exist (bench_layer writes it, and
+        // the Makefile runs it first). Failing loudly here beats writing an
+        // engine-only report that `repro bench-check` would reject with a
+        // confusing missing-key error.
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            panic!("{path}: no hot-path report to merge into ({e}); run bench_layer first")
+        });
+        let mut root = match Json::parse(&text) {
+            Ok(Json::Obj(o)) => o,
+            other => panic!("{path}: not a JSON object ({other:?}); rerun bench_layer"),
+        };
+        let mut engine = BTreeMap::new();
+        engine.insert("streams".to_string(), Json::Num(samples.len() as f64));
+        engine.insert("t_steps".to_string(), Json::Num(40.0));
+        engine.insert(
+            "sequential_samples_per_s".to_string(),
+            Json::Num(seq.per_sec() * samples.len() as f64),
+        );
+        engine.insert(
+            "by_cores".to_string(),
+            Json::Arr(
+                throughputs
+                    .iter()
+                    .map(|&(cores, tput)| {
+                        let mut o = BTreeMap::new();
+                        o.insert("cores".to_string(), Json::Num(cores as f64));
+                        o.insert("samples_per_s".to_string(), Json::Num(tput));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        root.insert("engine".to_string(), Json::Obj(engine));
+        let json = Json::Obj(root);
+        std::fs::write(&path, format!("{json}\n")).expect("write BENCH_HOTPATH_JSON");
+        println!("merged engine throughput into {path}");
+    }
 }

@@ -14,9 +14,10 @@
 //!
 //! Every accepted program is assigned a monotonically increasing **config
 //! epoch** (the engine is built at epoch 0). Reconfiguration rides the
-//! engine's existing bounded stage channels as epoch-tagged control
-//! messages, broadcast to every shard at a *sample boundary* of the
-//! admission feed. Because each shard's stage chain is FIFO, every
+//! engine's existing bounded stage channels — the same FIFOs that carry
+//! the recycled bit-packed spike planes of the data path — as epoch-tagged
+//! control messages, broadcast to every shard at a *sample boundary* of
+//! the admission feed. Because each shard's stage chain is FIFO, every
 //! in-flight sample is processed entirely under one epoch, and each
 //! [`StreamResult`](super::serving::StreamResult) carries the epoch it was
 //! computed under. Per epoch, results are bit-identical to a freshly built

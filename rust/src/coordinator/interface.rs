@@ -143,16 +143,27 @@ impl Device {
 
     // --- spk_in / spk_out ----------------------------------------------------
 
-    /// Stream one sample as AER events and return the result + output events.
-    pub fn infer_aer(&mut self, events: &[AerEvent], t_steps: usize) -> Result<(RunResult, Vec<AerEvent>)> {
+    /// Stream one sample as AER events and return the result + output
+    /// events. Fully event-driven end-to-end: spk_in decodes straight into
+    /// bit-packed planes, the core steps on planes, and spk_out events
+    /// come off the output plane in the same single pass (the dense
+    /// [T × N] buffer and the second deterministic re-run of the old
+    /// implementation are both gone). Bit-identical to
+    /// [`Core::run`] on the decoded sample.
+    pub fn infer_aer(
+        &mut self,
+        events: &[AerEvent],
+        t_steps: usize,
+    ) -> Result<(RunResult, Vec<AerEvent>)> {
         let width = self.core.config().inputs();
-        let spikes = aer::decode(events, t_steps, width)?;
+        let planes = aer::decode_planes(events, t_steps, width)?;
         self.bus.spk_in_events += events.len() as u64;
-        let sample = Sample { spikes, t_steps, inputs: width, label: 0 };
-        let result = self.core.run(&sample); // events already counted above
-        // Output events: reconstruct from counts is lossy; stream per-step
-        // outputs instead by re-walking (cheap for the output layer width).
-        let out_events = self.last_output_events(&sample)?;
+        let mut out_events = Vec::new();
+        let result = self.core.run_with(
+            t_steps,
+            |t, plane| plane.copy_from(&planes[t]),
+            |t, out| aer::extend_from_plane(&mut out_events, t as u32, out),
+        );
         self.bus.spk_out_events += out_events.len() as u64;
         Ok((result, out_events))
     }
@@ -161,21 +172,6 @@ impl Device {
     pub fn infer_dense(&mut self, sample: &Sample) -> RunResult {
         self.bus.spk_in_events += sample.nnz() as u64;
         self.core.run(sample)
-    }
-
-    fn last_output_events(&mut self, sample: &Sample) -> Result<Vec<AerEvent>> {
-        // Re-run recording per-step output spikes (deterministic, so this
-        // matches the counts of the result already computed).
-        self.core.reset();
-        let n_layers = self.core.config().sizes().len() - 1;
-        let mut layer_spikes = vec![0u64; n_layers];
-        let width = self.core.config().outputs();
-        let mut dense = Vec::with_capacity(sample.t_steps * width);
-        for t in 0..sample.t_steps {
-            let (out, _) = self.core.step(sample.step(t), &mut layer_spikes);
-            dense.extend_from_slice(&out);
-        }
-        Ok(aer::encode(&dense, sample.t_steps, width))
     }
 }
 

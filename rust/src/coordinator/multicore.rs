@@ -4,7 +4,10 @@
 //! A [`MultiCore`] owns C identical programmed cores and shards a batch of
 //! samples across them with worker threads. Results are returned in input
 //! order and must be identical to a single core processing the batch
-//! sequentially (determinism is asserted in tests).
+//! sequentially (determinism is asserted in tests). Each worker runs the
+//! event-driven packed datapath ([`crate::hdl::Core::run`] encodes every
+//! timestep into a recycled bit-packed [`crate::hdl::SpikePlane`]), so the
+//! per-core hot loop does O(popcount) ActGen work per step.
 
 use anyhow::Result;
 

@@ -19,10 +19,12 @@
 //!   performance evidence and the executor is the correctness evidence.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 
 use crate::config::registers::RegisterFile;
 use crate::config::ModelConfig;
 use crate::datasets::Sample;
+use crate::hdl::spikes::PlanePool;
 use crate::hdl::ActivityStats;
 
 use super::serving::{build_layers, collector_loop, stage_loop, StageMsg};
@@ -114,6 +116,9 @@ pub fn run_pipelined(
     // Build the per-stage layers up front (programming weights via wt_in).
     let layers = build_layers(config, weights)?;
     let n_out = config.outputs();
+    // Recycled-plane free list shared by the injector and the collector
+    // (one-shot executor: allocate on first use, recycle across streams).
+    let pool = Arc::new(PlanePool::new());
     std::thread::scope(|scope| {
         // Channel chain: injector -> stage 0 -> … -> stage K-1 -> collector.
         // Stage and collector bodies are the serving-engine primitives; this
@@ -123,14 +128,15 @@ pub fn run_pipelined(
             let (tx, next_rx) = mpsc::sync_channel::<StageMsg>(64);
             let stage_regs = regs.clone();
             let rx = std::mem::replace(&mut chain_rx, next_rx);
-            scope.spawn(move || stage_loop(layer_idx, layer, stage_regs, rx, tx));
+            scope.spawn(move || stage_loop(layer_idx, layer, stage_regs, rx, tx, Vec::new()));
         }
         let collector_rx = chain_rx;
 
         // Collector accumulates output-layer spike counts per stream.
+        let collector_pool = pool.clone();
         let collector = scope.spawn(move || {
             let mut results: Vec<StreamResult> = Vec::new();
-            collector_loop(n_out, collector_rx, |r| {
+            collector_loop(n_out, collector_rx, collector_pool, |r| {
                 results.push(r);
                 true
             });
@@ -141,8 +147,10 @@ pub fn run_pipelined(
         // bounded channels providing backpressure).
         for (stream, sample) in samples.iter().enumerate() {
             for t in 0..sample.t_steps {
+                let mut plane = pool.take();
+                sample.step_plane_into(t, &mut plane);
                 injector
-                    .send(StageMsg::Step { stream, spikes: sample.step(t).to_vec() })
+                    .send(StageMsg::Step { stream, plane })
                     .map_err(|_| anyhow::anyhow!("pipeline stage died"))?;
             }
             injector

@@ -31,6 +31,15 @@
 //!   under. [`ServingEngine::run_session`] additionally schedules
 //!   reconfigurations *in-band*, at exact positions in the request stream.
 //!
+//! * **Zero-alloc streaming**: stage channels carry bit-packed
+//!   [`SpikePlane`]s recycled through buffer pools — each stage reuses the
+//!   plane it consumed as a future output buffer, the collector returns
+//!   drained planes to an engine-wide [`PlanePool`] the feeder draws from,
+//!   and the pool is pre-filled at construction to cover the engine's
+//!   maximum in-flight footprint, so the steady-state streaming path
+//!   performs **zero plane allocations** (debug-asserted on every batch
+//!   via [`PlanePool::misses`]).
+//!
 //! The per-stage loop (`stage_loop`) and the spike-count collector
 //! (`collector_loop`) are shared with [`super::pipeline::run_pipelined`],
 //! which is now a thin scoped-thread wrapper over the same primitives.
@@ -46,6 +55,7 @@ use crate::config::ModelConfig;
 use crate::datasets::Sample;
 use crate::hdl::core::argmax;
 use crate::hdl::layer::Layer;
+use crate::hdl::spikes::{PlanePool, SpikePlane};
 use crate::hdl::ActivityStats;
 
 use super::control::{ControlPlane, ControlShared, ReconfigProgram};
@@ -53,12 +63,13 @@ use super::interface::BusStats;
 
 pub use super::pipeline::StreamResult;
 
-/// Message flowing down a shard's stage chain: one timestep's spike vector,
-/// the Fig.-8 settle marker that ends a stream (accumulating the stream's
-/// activity ledger as it passes each stage), or an epoch-tagged cfg_in/wt_in
+/// Message flowing down a shard's stage chain: one timestep's bit-packed
+/// spike plane (a recycled pool buffer — see the module docs), the Fig.-8
+/// settle marker that ends a stream (accumulating the stream's activity
+/// ledger as it passes each stage), or an epoch-tagged cfg_in/wt_in
 /// reconfiguration broadcast by the control plane.
 pub(crate) enum StageMsg {
-    Step { stream: usize, spikes: Vec<u8> },
+    Step { stream: usize, plane: SpikePlane },
     Flush { stream: usize, stats: ActivityStats },
     Reconfig { epoch: u64, program: Arc<ReconfigProgram> },
 }
@@ -77,21 +88,27 @@ pub(crate) fn stage_loop(
     mut regs: RegisterFile,
     rx: Receiver<StageMsg>,
     tx: SyncSender<StageMsg>,
+    mut pool: Vec<SpikePlane>,
 ) {
-    let mut out = Vec::new();
     // Activity accumulated by this stage for the stream in flight.
     let mut acc = ActivityStats::default();
     for msg in rx {
         match msg {
-            StageMsg::Step { stream, spikes } => {
-                let mut st = layer.step_regs(&spikes, &mut out, &regs);
+            StageMsg::Step { stream, plane } => {
+                // Output buffer from the stage-local free list; the consumed
+                // input plane is recycled into the same list below, so a
+                // pre-filled stage never allocates (and each plane's word
+                // storage settles at max(fan_in, neurons) words).
+                let mut out = pool.pop().unwrap_or_default();
+                let mut st = layer.step_plane(&plane, &mut out, &regs);
                 if layer_idx != 0 {
                     // One spk_clk edge per *core* timestep, not per layer —
                     // matches `Core::step`'s accounting bit-for-bit.
                     st.spk_steps = 0;
                 }
                 acc.add(&st);
-                if tx.send(StageMsg::Step { stream, spikes: out.clone() }).is_err() {
+                pool.push(plane);
+                if tx.send(StageMsg::Step { stream, plane: out }).is_err() {
                     return;
                 }
             }
@@ -127,11 +144,13 @@ pub(crate) fn stage_loop(
 /// Body of the terminal collector: accumulates output-layer spike counts per
 /// stream, tracks the config epoch announced by [`StageMsg::Reconfig`]
 /// markers, and emits one [`StreamResult`] per `Flush` (carrying the epoch
-/// and the full activity ledger the stages accumulated). `emit` returning
-/// false stops the loop (downstream gone).
+/// and the full activity ledger the stages accumulated). Drained planes are
+/// returned to `pool`, closing the feeder → stages → collector recycle
+/// loop. `emit` returning false stops the loop (downstream gone).
 pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
     n_out: usize,
     rx: Receiver<StageMsg>,
+    pool: Arc<PlanePool>,
     mut emit: F,
 ) {
     let mut counts = vec![0u32; n_out];
@@ -139,11 +158,13 @@ pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
     let mut epoch = 0u64;
     for msg in rx {
         match msg {
-            StageMsg::Step { spikes, .. } => {
-                for (c, &s) in counts.iter_mut().zip(&spikes) {
-                    *c += s as u32;
-                    spikes_total += s as u64;
+            StageMsg::Step { plane, .. } => {
+                debug_assert_eq!(plane.len(), n_out, "output plane arity");
+                for j in plane.iter_ones() {
+                    counts[j] += 1;
+                    spikes_total += 1;
                 }
+                pool.put(plane);
             }
             StageMsg::Flush { stream, stats } => {
                 let result = StreamResult {
@@ -254,6 +275,11 @@ pub struct ServingEngine {
     synapse_words: usize,
     /// Control-plane state shared with every [`ControlPlane`] handle.
     control: Arc<ControlShared>,
+    /// Engine-wide recycled [`SpikePlane`] free list: the feeder draws
+    /// input planes here, the collectors return drained output planes.
+    /// Pre-filled to the maximum in-flight footprint, so steady-state
+    /// streaming allocates nothing ([`ServingEngine::plane_pool_misses`]).
+    plane_pool: Arc<PlanePool>,
     submitted: u64,
     completed: u64,
     /// Set when a batch failed mid-flight: in-flight state is then
@@ -273,6 +299,18 @@ impl ServingEngine {
         anyhow::ensure!(options.cores >= 1, "need at least one core");
         anyhow::ensure!(options.queue_depth >= 1, "queue depth must be positive");
         let n_out = config.outputs();
+        let max_width = config.sizes().iter().copied().max().unwrap_or(1);
+        // Upper bound on planes simultaneously *outside* the shared pool,
+        // per shard: every bounded-channel slot of the K+1 stage channels
+        // can hold one Step plane, each of the K stages holds at most two
+        // in hand (input being processed + output just popped), plus one
+        // each in the feeder's and collector's hands. Pre-filling past this
+        // bound means `PlanePool::take` never allocates in steady state —
+        // the zero-alloc invariant `run_session` debug-asserts.
+        let per_shard = (config.num_layers() + 1) * options.queue_depth
+            + 2 * config.num_layers()
+            + 4;
+        let plane_pool = Arc::new(PlanePool::prefilled(options.cores * per_shard, max_width));
         let mut shards = Vec::with_capacity(options.cores);
         let mut synapse_words = 0usize;
         let mut packed_sizes: Vec<usize> = Vec::new();
@@ -291,14 +329,21 @@ impl ServingEngine {
                 let (tx, next_rx) = sync_channel::<StageMsg>(options.queue_depth);
                 let stage_regs = regs.clone();
                 let rx = std::mem::replace(&mut chain_rx, next_rx);
+                // Two pre-sized planes per stage-local free list cover the
+                // one output buffer a stage ever needs in hand.
+                let stage_pool = vec![
+                    SpikePlane::with_line_capacity(max_width),
+                    SpikePlane::with_line_capacity(max_width),
+                ];
                 threads.push(std::thread::spawn(move || {
-                    stage_loop(layer_idx, layer, stage_regs, rx, tx)
+                    stage_loop(layer_idx, layer, stage_regs, rx, tx, stage_pool)
                 }));
             }
             let (out_tx, out_rx) = sync_channel::<StreamResult>(options.queue_depth);
             let collector_rx = chain_rx;
+            let collector_pool = plane_pool.clone();
             threads.push(std::thread::spawn(move || {
-                collector_loop(n_out, collector_rx, |r| out_tx.send(r).is_ok())
+                collector_loop(n_out, collector_rx, collector_pool, |r| out_tx.send(r).is_ok())
             }));
             shards.push(Shard { in_tx: Some(first_tx), out_rx, threads });
         }
@@ -308,6 +353,7 @@ impl ServingEngine {
             inputs: config.inputs(),
             synapse_words,
             control,
+            plane_pool,
             submitted: 0,
             completed: 0,
             poisoned: false,
@@ -328,6 +374,14 @@ impl ServingEngine {
     /// Requests accepted / completed over the engine's lifetime.
     pub fn stats(&self) -> (u64, u64) {
         (self.submitted, self.completed)
+    }
+
+    /// Times the streaming path had to allocate a spike plane because the
+    /// recycled-buffer pool was dry. Stays 0 for the engine's whole
+    /// lifetime (the pool is pre-filled past the in-flight bound); the
+    /// engine debug-asserts this after every batch.
+    pub fn plane_pool_misses(&self) -> u64 {
+        self.plane_pool.misses()
     }
 
     /// A cloneable, thread-safe [`ControlPlane`] handle for reprogramming
@@ -402,6 +456,8 @@ impl ServingEngine {
             .map(|s| s.in_tx.as_ref().expect("engine not shut down").clone())
             .collect();
         let control = self.control.clone();
+        let plane_pool = self.plane_pool.clone();
+        let pool_misses_before = self.plane_pool.misses();
 
         let results = std::thread::scope(|scope| -> Result<Vec<StreamResult>> {
             // Feeder: streams every sample to its shard (blocking on the
@@ -428,11 +484,12 @@ impl ServingEngine {
                         SessionOp::Submit(sample) => {
                             let tx = &senders[stream % n_cores];
                             for t in 0..sample.t_steps {
-                                tx.send(StageMsg::Step {
-                                    stream,
-                                    spikes: sample.step(t).to_vec(),
-                                })
-                                .map_err(|_| dead())?;
+                                // Encode straight into a recycled pool
+                                // plane — no per-timestep Vec allocation.
+                                let mut plane = plane_pool.take();
+                                sample.step_plane_into(t, &mut plane);
+                                tx.send(StageMsg::Step { stream, plane })
+                                    .map_err(|_| dead())?;
                             }
                             tx.send(StageMsg::Flush { stream, stats: ActivityStats::default() })
                                 .map_err(|_| dead())?;
@@ -501,6 +558,14 @@ impl ServingEngine {
         self.submitted += n_samples as u64;
         match results {
             Ok(results) => {
+                // Zero-alloc invariant: the pre-filled pool covers the
+                // engine's maximum in-flight footprint, so steady-state
+                // streaming must not have allocated a single plane.
+                debug_assert_eq!(
+                    self.plane_pool.misses(),
+                    pool_misses_before,
+                    "steady-state streaming allocated spike planes (pool underprovisioned)"
+                );
                 self.completed += results.len() as u64;
                 Ok(results)
             }
@@ -666,6 +731,31 @@ mod tests {
         let out = engine.run_batch(&samples).unwrap();
         for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
             assert_eq!(r.counts, core.run(s).counts, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn streaming_is_zero_alloc_after_construction() {
+        // The recycled-plane pool is pre-filled at construction, so no
+        // batch — first or later, even at queue_depth 1 — may allocate a
+        // single spike plane on the streaming path.
+        let (cfg, weights, regs, samples) = setup();
+        for depth in [1usize, 4, 64] {
+            let mut engine = ServingEngine::new(
+                &cfg,
+                &weights,
+                &regs,
+                ServingOptions { cores: 2, queue_depth: depth },
+            )
+            .unwrap();
+            for _ in 0..3 {
+                engine.run_batch(&samples).unwrap();
+            }
+            assert_eq!(
+                engine.plane_pool_misses(),
+                0,
+                "queue_depth {depth}: streaming path allocated planes"
+            );
         }
     }
 

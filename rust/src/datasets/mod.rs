@@ -54,6 +54,15 @@ impl Sample {
         &self.spikes[t * self.inputs..(t + 1) * self.inputs]
     }
 
+    /// Encode timestep `t` directly into a bit-packed plane (recycled
+    /// buffer — the serving feeder's zero-alloc encoder: no intermediate
+    /// `Vec<u8>` is ever cloned onto the stage channels). One-shot callers
+    /// can build a fresh plane with
+    /// [`SpikePlane::from_bytes`](crate::hdl::SpikePlane::from_bytes)`(sample.step(t))`.
+    pub fn step_plane_into(&self, t: usize, plane: &mut crate::hdl::SpikePlane) {
+        plane.load_bytes(self.step(t));
+    }
+
     pub fn nnz(&self) -> usize {
         self.spikes.iter().map(|&x| x as usize).sum()
     }
@@ -186,6 +195,20 @@ mod tests {
     fn row_counts_sum_to_nnz() {
         let s = Dataset::Shd.sample(3, Split::Train, 10);
         assert_eq!(s.row_counts().iter().sum::<usize>(), s.nnz());
+    }
+
+    #[test]
+    fn packed_plane_encoding_matches_bytes() {
+        let s = Dataset::Smnist.sample(2, Split::Test, 5);
+        let mut recycled = crate::hdl::SpikePlane::default();
+        let mut total_ones = 0usize;
+        for t in 0..s.t_steps {
+            s.step_plane_into(t, &mut recycled);
+            assert_eq!(recycled, crate::hdl::SpikePlane::from_bytes(s.step(t)), "t={t}");
+            assert_eq!(recycled.to_bytes(), s.step(t), "t={t}");
+            total_ones += recycled.count_ones();
+        }
+        assert_eq!(total_ones, s.nnz());
     }
 
     #[test]

@@ -126,7 +126,7 @@ pub fn fig12(manifest: &Manifest) -> Result<Table> {
             let mut layer_spikes = vec![0u64; art.layer_shapes.len()];
             for tstep in 0..sample.t_steps {
                 core.step(sample.step(tstep), &mut layer_spikes);
-                for v in core.layers()[0].vmem() {
+                for &v in core.layers()[0].vmem_slice() {
                     hw_trace.push(qs.to_float(v) / scale);
                 }
             }

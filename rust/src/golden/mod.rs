@@ -344,7 +344,8 @@ fn lif_golden(qs: QSpec) -> Json {
             let row_u8: Vec<u8> = row.iter().map(|&x| x as u8).collect();
             layer.step_regs(&row_u8, &mut out, &regs);
             spikes_out.push(Json::Arr(out.iter().map(|&s| Json::Num(s as f64)).collect()));
-            vmem.push(Json::Arr(layer.vmem().iter().map(|&v| Json::Num(v as f64)).collect()));
+            let vm = layer.vmem_slice();
+            vmem.push(Json::Arr(vm.iter().map(|&v| Json::Num(v as f64)).collect()));
         }
         let key = match mode {
             ResetMode::Default => "default",

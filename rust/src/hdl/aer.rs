@@ -7,6 +7,8 @@
 //! (out-of-range addresses, unordered timestamps) — the failure-injection
 //! tests exercise these paths.
 
+use super::spikes::SpikePlane;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AerEvent {
     pub t: u32,
@@ -52,9 +54,16 @@ pub fn encode(spikes: &[u8], t_steps: usize, width: usize) -> Vec<AerEvent> {
     out
 }
 
-/// Ordered AER events → dense [T × N] spike matrix, with validation.
-pub fn decode(events: &[AerEvent], t_steps: usize, width: usize) -> Result<Vec<u8>, AerError> {
-    let mut out = vec![0u8; t_steps * width];
+/// The one validating walk over an event stream (shared by [`decode`] and
+/// [`decode_planes`] so the two decoders can never diverge): checks
+/// addresses, timestamps, and (t, addr) ordering, and hands each valid
+/// event's `(t, addr)` to `sink`.
+fn validate_events(
+    events: &[AerEvent],
+    t_steps: usize,
+    width: usize,
+    mut sink: impl FnMut(usize, usize),
+) -> Result<(), AerError> {
     let mut prev: Option<(u32, u32)> = None;
     for (index, ev) in events.iter().enumerate() {
         if ev.addr as usize >= width {
@@ -69,8 +78,40 @@ pub fn decode(events: &[AerEvent], t_steps: usize, width: usize) -> Result<Vec<u
             }
         }
         prev = Some((ev.t, ev.addr));
-        out[ev.t as usize * width + ev.addr as usize] = 1;
+        sink(ev.t as usize, ev.addr as usize);
     }
+    Ok(())
+}
+
+/// Ordered AER events → dense [T × N] spike matrix, with validation.
+pub fn decode(events: &[AerEvent], t_steps: usize, width: usize) -> Result<Vec<u8>, AerError> {
+    let mut out = vec![0u8; t_steps * width];
+    validate_events(events, t_steps, width, |t, addr| out[t * width + addr] = 1)?;
+    Ok(out)
+}
+
+/// Append timestep `t`'s firing addresses from a bit-packed plane —
+/// [`SpikePlane::iter_ones`] yields ascending addresses, so a stream built
+/// timestep-by-timestep is ordered by construction. This is the
+/// event-driven spk_out path (`Device::infer_aer` streams output events
+/// straight off the core's output plane): cost is O(events), never
+/// O(width).
+pub fn extend_from_plane(out: &mut Vec<AerEvent>, t: u32, plane: &SpikePlane) {
+    for addr in plane.iter_ones() {
+        out.push(AerEvent { t, addr: addr as u32 });
+    }
+}
+
+/// Ordered AER events → bit-packed planes (one per timestep), with the
+/// same validation as [`decode`] (one shared walk — see
+/// `validate_events`).
+pub fn decode_planes(
+    events: &[AerEvent],
+    t_steps: usize,
+    width: usize,
+) -> Result<Vec<SpikePlane>, AerError> {
+    let mut out = vec![SpikePlane::new(width); t_steps];
+    validate_events(events, t_steps, width, |t, addr| out[t].set(addr))?;
     Ok(out)
 }
 
@@ -107,6 +148,30 @@ mod tests {
         assert!(matches!(decode(&bad_t, 2, 3), Err(AerError::BadTime { .. })));
         let unordered = [AerEvent { t: 1, addr: 0 }, AerEvent { t: 0, addr: 0 }];
         assert!(matches!(decode(&unordered, 2, 3), Err(AerError::Unordered { .. })));
+    }
+
+    #[test]
+    fn plane_codecs_match_byte_codecs() {
+        let spikes = vec![0u8, 1, 0, 1, 1, 0, 0, 0, 1];
+        let (t_steps, width) = (3, 3);
+        let byte_ev = encode(&spikes, t_steps, width);
+        let planes: Vec<SpikePlane> = (0..t_steps)
+            .map(|t| SpikePlane::from_bytes(&spikes[t * width..(t + 1) * width]))
+            .collect();
+        // Re-encoding each decoded plane reproduces the stream (ordering by
+        // construction), and decode agrees with the dense decoder.
+        let decoded = decode_planes(&byte_ev, t_steps, width).unwrap();
+        assert_eq!(decoded, planes);
+        let mut re_encoded = Vec::new();
+        for (t, p) in decoded.iter().enumerate() {
+            extend_from_plane(&mut re_encoded, t as u32, p);
+        }
+        assert_eq!(re_encoded, byte_ev);
+        // Same validation as the dense decoder (one shared walk).
+        let bad = [AerEvent { t: 0, addr: 9 }];
+        assert!(matches!(decode_planes(&bad, 2, 3), Err(AerError::BadAddress { .. })));
+        let unordered = [AerEvent { t: 1, addr: 0 }, AerEvent { t: 0, addr: 0 }];
+        assert!(matches!(decode_planes(&unordered, 2, 3), Err(AerError::Unordered { .. })));
     }
 
     #[test]

@@ -10,15 +10,21 @@ use crate::datasets::Sample;
 
 use super::clock::ActivityStats;
 use super::layer::Layer;
+use super::spikes::SpikePlane;
 
 #[derive(Debug, Clone)]
 pub struct Core {
     config: ModelConfig,
     layers: Vec<Layer>,
     pub registers: RegisterFile,
-    /// Ping-pong spike buffers to avoid per-step allocation on the hot path.
-    buf_a: Vec<u8>,
-    buf_b: Vec<u8>,
+    /// Ping-pong bit-packed spike planes — zero allocation on the hot path;
+    /// every layer hop is event-driven ([`Layer::step_plane`]).
+    buf_a: SpikePlane,
+    buf_b: SpikePlane,
+    /// Scratch plane backing the byte-slice [`Core::step`] adapter.
+    in_scratch: SpikePlane,
+    /// Dense expansion of the output plane for the byte-slice adapter.
+    out_bytes: Vec<u8>,
 }
 
 /// Result of running one full input stream (sample) through the core.
@@ -42,8 +48,16 @@ impl Core {
             .map(|l| Layer::new(l, config.qspec, config.mem))
             .collect();
         let registers = RegisterFile::new(config.qspec);
-        let buf_a = Vec::with_capacity(config.inputs().max(config.outputs()));
-        Core { config, layers, registers, buf_a, buf_b: Vec::new() }
+        let max_width = config.sizes().iter().copied().max().unwrap_or(1);
+        Core {
+            config,
+            layers,
+            registers,
+            buf_a: SpikePlane::with_line_capacity(max_width),
+            buf_b: SpikePlane::with_line_capacity(max_width),
+            in_scratch: SpikePlane::with_line_capacity(max_width),
+            out_bytes: Vec::new(),
+        }
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -65,23 +79,40 @@ impl Core {
         }
     }
 
-    /// One spk_clk timestep: feed one input spike vector through all layers.
-    /// Returns the output layer's spikes (borrowed from the internal
-    /// ping-pong buffer — zero allocation on the hot path) and the step's
-    /// activity; per-layer spike counts accumulate into `layer_spikes`.
-    pub fn step(&mut self, spikes_in: &[u8], layer_spikes: &mut [u64]) -> (&[u8], ActivityStats) {
+    /// One spk_clk timestep over bit-packed planes: feed one input spike
+    /// plane through all layers. Returns the output layer's plane (borrowed
+    /// from the internal ping-pong buffer — zero allocation on the hot
+    /// path) and the step's activity; per-layer spike counts accumulate
+    /// into `layer_spikes`.
+    pub fn step_plane(
+        &mut self,
+        spikes_in: &SpikePlane,
+        layer_spikes: &mut [u64],
+    ) -> (&SpikePlane, ActivityStats) {
         assert_eq!(layer_spikes.len(), self.layers.len());
         let mut total = ActivityStats::default();
-        self.buf_a.clear();
-        self.buf_a.extend_from_slice(spikes_in);
+        self.buf_a.copy_from(spikes_in);
         for (k, layer) in self.layers.iter_mut().enumerate() {
-            let stats = layer.step_regs(&self.buf_a, &mut self.buf_b, &self.registers);
+            let stats = layer.step_plane(&self.buf_a, &mut self.buf_b, &self.registers);
             layer_spikes[k] += stats.spikes;
             total.add(&stats);
             std::mem::swap(&mut self.buf_a, &mut self.buf_b);
         }
         total.spk_steps = 1; // one core timestep, not one per layer
         (&self.buf_a, total)
+    }
+
+    /// Byte-slice adapter over [`Core::step_plane`] — packs the input into
+    /// a recycled scratch plane and expands the output plane to 0/1 bytes
+    /// (kept for external callers; zero steady-state allocation).
+    pub fn step(&mut self, spikes_in: &[u8], layer_spikes: &mut [u64]) -> (&[u8], ActivityStats) {
+        self.in_scratch.load_bytes(spikes_in);
+        let plane = std::mem::take(&mut self.in_scratch);
+        let (_, stats) = self.step_plane(&plane, layer_spikes);
+        self.in_scratch = plane;
+        self.out_bytes.clear();
+        self.buf_a.append_bytes_to(&mut self.out_bytes);
+        (&self.out_bytes, stats)
     }
 
     /// Run a full sample (T timesteps), starting from reset state.
@@ -91,18 +122,37 @@ impl Core {
             self.config.inputs(),
             "sample width does not match core input layer"
         );
+        self.run_with(sample.t_steps, |t, plane| plane.load_bytes(sample.step(t)), |_, _| {})
+    }
+
+    /// The one per-sample accumulation loop (reset → T plane steps →
+    /// counts/layer_spikes/stats/argmax), shared by [`Core::run`] and the
+    /// AER device interface so the two request paths can never
+    /// desynchronize: `load` fills the input plane for each timestep,
+    /// `on_step` observes each output plane (e.g. to stream spk_out
+    /// events).
+    pub fn run_with(
+        &mut self,
+        t_steps: usize,
+        mut load: impl FnMut(usize, &mut SpikePlane),
+        mut on_step: impl FnMut(usize, &SpikePlane),
+    ) -> RunResult {
         self.reset();
         let n_out = self.config.outputs();
         let mut counts = vec![0u32; n_out];
         let mut layer_spikes = vec![0u64; self.layers.len()];
         let mut stats = ActivityStats::default();
-        for t in 0..sample.t_steps {
-            let (out, st) = self.step(sample.step(t), &mut layer_spikes);
-            for (c, &s) in counts.iter_mut().zip(out) {
-                *c += s as u32;
+        let mut input = std::mem::take(&mut self.in_scratch);
+        for t in 0..t_steps {
+            load(t, &mut input);
+            let (out, st) = self.step_plane(&input, &mut layer_spikes);
+            for j in out.iter_ones() {
+                counts[j] += 1;
             }
+            on_step(t, out);
             stats.add(&st);
         }
+        self.in_scratch = input;
         let prediction = argmax(&counts);
         RunResult { counts, layer_spikes, stats, prediction }
     }
@@ -261,6 +311,26 @@ mod tests {
         // Arity and size failures surface as errors, not panics.
         assert!(b.load_packed_weights(&[]).is_err());
         assert!(b.load_packed_weights(&[vec![0; 3], vec![0; 10]]).is_err());
+    }
+
+    #[test]
+    fn plane_step_matches_byte_step() {
+        use super::super::spikes::SpikePlane;
+        let mut a = tiny_core();
+        let mut b = tiny_core();
+        let mut ls_a = vec![0u64; 2];
+        let mut ls_b = vec![0u64; 2];
+        let mut plane = SpikePlane::default();
+        for t in 0..6usize {
+            let spikes: Vec<u8> = (0..4).map(|i| ((t + i) % 3 != 0) as u8).collect();
+            plane.load_bytes(&spikes);
+            let (out_b, st_b) = b.step(&spikes, &mut ls_b);
+            let (out_bytes, st_a) = (out_b.to_vec(), st_b);
+            let (out_a, st) = a.step_plane(&plane, &mut ls_a);
+            assert_eq!(out_a.to_bytes(), out_bytes, "t={t}");
+            assert_eq!(st, st_a, "t={t}");
+        }
+        assert_eq!(ls_a, ls_b);
     }
 
     #[test]

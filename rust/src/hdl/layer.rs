@@ -6,13 +6,36 @@
 //! synapse (i, j) adds w[i][j] into neuron j's act register — a *wrapping*
 //! Qn.q add, exactly the hardware accumulator. The walk goes through the
 //! topology-aware store ([`SynapticMemory::accumulate_row`]), so synaptic
-//! work is O(row nnz), not O(N): a Gaussian radius-1 row touches ≤ 3
-//! registers, a one-to-one row exactly 1. Rows without a spike are
-//! clock-gated: the adds are skipped and only the gating ledger is charged
-//! with the row's stored-synapse count (§VI-E "we gate the clock in the
-//! design when there is no input spike"). `synaptic_ops + gated_ops` per
-//! step therefore equals the layer's physical synapse count — the α=1
-//! words — for every topology.
+//! work is O(row nnz), not O(N). Rows without a spike are clock-gated: the
+//! adds are skipped and only the gating ledger is charged with the row's
+//! stored-synapse count (§VI-E "we gate the clock in the design when there
+//! is no input spike"). `synaptic_ops + gated_ops` per step therefore
+//! equals the layer's physical synapse count — the α=1 words — for every
+//! topology.
+//!
+//! # Event-driven hot path
+//!
+//! The production datapath is **packed**: [`Layer::step_plane`] takes a
+//! bit-packed [`SpikePlane`] and
+//!
+//! * iterates only the *firing* rows via `trailing_zeros` (O(popcount)
+//!   instead of an O(M) branch-per-row scan),
+//! * charges `gated_ops` in bulk from a per-row physical-synapse prefix
+//!   sum built at construction (total α=1 words minus the firing rows'
+//!   words — identical to summing the gated rows one by one),
+//! * keeps the neuron bank in struct-of-arrays form (`vmem[]`/`refcnt[]`
+//!   slices) and skips every neuron that is *provably inert* this step:
+//!   `act == 0`, `refcnt == 0`, and `vmem` inside the decay fixed-point
+//!   hold range below threshold
+//!   ([`neuron::quiescent_hold_range`] — bit-identical by construction,
+//!   re-checked against the full datapath by a `debug_assert`).
+//!
+//! The byte-slice API ([`Layer::step`]/[`Layer::step_regs`]) survives as a
+//! thin adapter over scratch planes, and [`Layer::step_scalar`] retains the
+//! dense reference walk (branch per row, full LIF update per neuron) as
+//! the differential-testing and benchmarking baseline — the
+//! `sparse_parity` suite proves the two paths bit-identical in vmem,
+//! spikes, and activity ledgers across all topologies and Q formats.
 
 use crate::config::registers::RegisterFile;
 use crate::config::{LayerConfig, MemKind};
@@ -20,24 +43,55 @@ use crate::fixed::QSpec;
 
 use super::clock::ActivityStats;
 use super::memory::SynapticMemory;
-use super::neuron::LifNeuron;
+use super::neuron::{self, LifNeuron, RegSnapshot};
+use super::spikes::SpikePlane;
 
 #[derive(Debug, Clone)]
 pub struct Layer {
     mem: SynapticMemory,
-    neurons: Vec<LifNeuron>,
     qspec: QSpec,
+    /// Struct-of-arrays neuron bank: membrane registers…
+    vmem: Vec<i32>,
+    /// …and refractory counters, one lane per neuron (Fig. 2's two
+    /// registers, laid out for the linear sweep of the hot loop).
+    refcnt: Vec<i32>,
     /// Scratch activation registers (one act_reg per neuron, Fig. 2).
     act: Vec<i32>,
+    /// Whether `act` holds residue from the previous step (lets a step with
+    /// zero firing rows skip the O(N) clear entirely).
+    act_dirty: bool,
+    /// `row_words_prefix[i]` = physical (α=1) synapse words stored in rows
+    /// `[0, i)`; the last entry is the layer's total word count. Charges the
+    /// clock-gating ledger in bulk on the packed path.
+    row_words_prefix: Vec<u64>,
+    /// Lazily-built default register snapshot for `step`'s `None`-regs path
+    /// (unit-driven layers) — built once, not per timestep.
+    default_snap: Option<RegSnapshot>,
+    /// Scratch planes backing the byte-slice adapter API.
+    in_scratch: SpikePlane,
+    out_scratch: SpikePlane,
 }
 
 impl Layer {
     pub fn new(cfg: &LayerConfig, qspec: QSpec, mem_kind: MemKind) -> Layer {
+        let mem = SynapticMemory::new(cfg.fan_in, cfg.neurons, cfg.topology, qspec, mem_kind);
+        let mut row_words_prefix = Vec::with_capacity(cfg.fan_in + 1);
+        row_words_prefix.push(0u64);
+        for i in 0..cfg.fan_in {
+            let prev = *row_words_prefix.last().unwrap();
+            row_words_prefix.push(prev + mem.row_synapses(i) as u64);
+        }
         Layer {
-            mem: SynapticMemory::new(cfg.fan_in, cfg.neurons, cfg.topology, qspec, mem_kind),
-            neurons: vec![LifNeuron::new(); cfg.neurons],
+            mem,
             qspec,
+            vmem: vec![0; cfg.neurons],
+            refcnt: vec![0; cfg.neurons],
             act: vec![0; cfg.neurons],
+            act_dirty: false,
+            row_words_prefix,
+            default_snap: None,
+            in_scratch: SpikePlane::default(),
+            out_scratch: SpikePlane::default(),
         }
     }
 
@@ -68,17 +122,24 @@ impl Layer {
     }
 
     pub fn neuron_state(&self, j: usize) -> LifNeuron {
-        self.neurons[j]
+        LifNeuron { vmem: self.vmem[j], refcnt: self.refcnt[j] }
     }
 
+    /// Borrow the membrane registers of the struct-of-arrays neuron bank —
+    /// the zero-copy probe view (prefer this over [`Layer::vmem`]).
+    pub fn vmem_slice(&self) -> &[i32] {
+        &self.vmem
+    }
+
+    /// Membrane registers as a fresh `Vec` (allocating; kept for artifact
+    /// writers and older callers — prefer [`Layer::vmem_slice`]).
     pub fn vmem(&self) -> Vec<i32> {
-        self.neurons.iter().map(|n| n.vmem).collect()
+        self.vmem.clone()
     }
 
     pub fn reset(&mut self) {
-        for n in &mut self.neurons {
-            n.reset();
-        }
+        self.vmem.fill(0);
+        self.refcnt.fill(0);
     }
 
     /// One spk_clk timestep. `spikes_in` has M entries (0/1);
@@ -99,22 +160,153 @@ impl Layer {
         self.step_with(spikes_in, spikes_out, Some(regs))
     }
 
+    /// Byte-slice adapter over the packed datapath: packs `spikes_in` into
+    /// a recycled scratch plane, runs [`Layer::step_plane`], and expands the
+    /// output plane back to 0/1 bytes. Zero allocation once the scratch
+    /// planes have seen this layer's widths.
     fn step_with(
         &mut self,
         spikes_in: &[u8],
         spikes_out: &mut Vec<u8>,
         regs: Option<&RegisterFile>,
     ) -> ActivityStats {
-        assert_eq!(spikes_in.len(), self.mem.m(), "fan-in mismatch");
-        let default_regs;
-        let regs = match regs {
-            Some(r) => r,
-            None => {
-                default_regs = RegisterFile::new(self.qspec);
-                &default_regs
-            }
+        let snap = match regs {
+            Some(r) => RegSnapshot::from(r),
+            None => self.default_snapshot(),
         };
+        self.in_scratch.load_bytes(spikes_in);
+        let in_plane = std::mem::take(&mut self.in_scratch);
+        let mut out_plane = std::mem::take(&mut self.out_scratch);
+        let stats = self.step_plane_snap(&in_plane, &mut out_plane, &snap);
+        spikes_out.clear();
+        out_plane.append_bytes_to(spikes_out);
+        self.in_scratch = in_plane;
+        self.out_scratch = out_plane;
+        stats
+    }
 
+    /// The default-register snapshot, built on first use and cached (this
+    /// sits on the per-timestep path for unit-driven layers).
+    fn default_snapshot(&mut self) -> RegSnapshot {
+        if self.default_snap.is_none() {
+            self.default_snap = Some(RegSnapshot::from(&RegisterFile::new(self.qspec)));
+        }
+        self.default_snap.unwrap()
+    }
+
+    /// One spk_clk timestep over packed planes — the event-driven hot path
+    /// (see the module docs for what makes it fast). `spikes_in` must have
+    /// M lines; `spikes_out` is resized to N lines with the firing neurons
+    /// set. Bit-identical to [`Layer::step_scalar`] in dynamics *and*
+    /// activity ledger.
+    pub fn step_plane(
+        &mut self,
+        spikes_in: &SpikePlane,
+        spikes_out: &mut SpikePlane,
+        regs: &RegisterFile,
+    ) -> ActivityStats {
+        self.step_plane_snap(spikes_in, spikes_out, &RegSnapshot::from(regs))
+    }
+
+    fn step_plane_snap(
+        &mut self,
+        spikes_in: &SpikePlane,
+        spikes_out: &mut SpikePlane,
+        snap: &RegSnapshot,
+    ) -> ActivityStats {
+        assert_eq!(spikes_in.len(), self.mem.m(), "fan-in mismatch");
+        let m = self.mem.m();
+        let n = self.mem.n();
+        let total_words = *self.row_words_prefix.last().unwrap();
+        let mut stats = ActivityStats { spk_steps: 1, mem_cycles: m as u64, ..Default::default() };
+
+        // --- ActGen, event-driven: visit only the firing rows (the
+        // hardware's clock gating as control flow). Accumulation is the
+        // same once-per-step wrapping scheme as the scalar reference (see
+        // `step_scalar` for the associativity argument); gating is charged
+        // in bulk: gated_ops = total α=1 words − the firing rows' words.
+        if self.act_dirty {
+            self.act.fill(0);
+            self.act_dirty = false;
+        }
+        let mut syn = 0u64;
+        let (mut touched_lo, mut touched_hi) = (usize::MAX, 0usize);
+        for i in spikes_in.iter_ones() {
+            let (lo, width) = self.mem.row_window(i);
+            syn += self.mem.accumulate_row(i, &mut self.act);
+            if width > 0 {
+                touched_lo = touched_lo.min(lo);
+                touched_hi = touched_hi.max(lo + width);
+            }
+        }
+        if syn > 0 {
+            self.act_dirty = true;
+        }
+        stats.synaptic_ops = syn;
+        stats.gated_ops = total_words - syn;
+        // Wrap only the column span the firing rows could have touched:
+        // untouched act registers are zero by invariant and wrap(0) == 0,
+        // so this is bit-identical to the scalar reference's full-width
+        // wrap while costing O(touched) on sparse (banded/diagonal) rows.
+        if self.qspec.width() < 32 && syn > 0 {
+            for a in &mut self.act[touched_lo..touched_hi] {
+                *a = self.qspec.wrap(*a as i64);
+            }
+        }
+
+        // --- Neuron updates over the SoA bank, with the quiescence fast
+        // path: a neuron with no input, no refractory hold, and a membrane
+        // at its decay fixed point below threshold provably cannot change
+        // state or fire — skip it. The ledger still charges one
+        // neuron_update per neuron (the datapath is evaluated every cycle
+        // in hardware; only *toggles* burn dynamic power).
+        let (hold_lo, hold_hi) = neuron::quiescent_hold_range(snap, self.qspec);
+        spikes_out.resize_clear(n);
+        stats.neuron_updates += n as u64;
+        for j in 0..n {
+            let act = self.act[j];
+            if act == 0 && self.refcnt[j] == 0 && self.vmem[j] >= hold_lo && self.vmem[j] <= hold_hi
+            {
+                #[cfg(debug_assertions)]
+                {
+                    // Differential check of the quiescence proof: the full
+                    // datapath must agree that nothing happens.
+                    let (mut v2, mut r2) = (self.vmem[j], self.refcnt[j]);
+                    let out = neuron::step_soa(&mut v2, &mut r2, act, snap, self.qspec);
+                    debug_assert!(
+                        !out.spike && !out.vmem_toggled && v2 == self.vmem[j] && r2 == 0,
+                        "quiescence fast path diverged at neuron {j} (vmem {})",
+                        self.vmem[j]
+                    );
+                }
+                continue;
+            }
+            let out =
+                neuron::step_soa(&mut self.vmem[j], &mut self.refcnt[j], act, snap, self.qspec);
+            if out.vmem_toggled {
+                stats.vmem_toggles += 1;
+            }
+            if out.spike {
+                stats.spikes += 1;
+                spikes_out.set(j);
+            }
+        }
+        stats
+    }
+
+    /// The dense scalar reference datapath: branch over all M byte lanes,
+    /// charge gated rows one at a time, run the full LIF update on every
+    /// neuron. Semantically identical to [`Layer::step_plane`] (proven
+    /// differentially in `rust/tests/sparse_parity.rs`); kept as the
+    /// conformance oracle and the `BENCH_hotpath.json` baseline.
+    pub fn step_scalar(
+        &mut self,
+        spikes_in: &[u8],
+        spikes_out: &mut Vec<u8>,
+        regs: &RegisterFile,
+    ) -> ActivityStats {
+        assert_eq!(spikes_in.len(), self.mem.m(), "fan-in mismatch");
+        let snap = RegSnapshot::from(regs);
         let m = self.mem.m();
         let n = self.mem.n();
         let mut stats = ActivityStats { spk_steps: 1, mem_cycles: m as u64, ..Default::default() };
@@ -130,6 +322,7 @@ impl Layer {
         // the topology-aware store: only stored (α=1) synapses are touched
         // and charged, so sparse topologies do O(nnz) work per active row.
         self.act.fill(0);
+        self.act_dirty = false;
         for (i, &spk) in spikes_in.iter().enumerate() {
             if spk == 0 {
                 // Clock-gated row: no accumulates happen; the ledger is
@@ -139,6 +332,9 @@ impl Layer {
             }
             stats.synaptic_ops += self.mem.accumulate_row(i, &mut self.act);
         }
+        if stats.synaptic_ops > 0 {
+            self.act_dirty = true;
+        }
         if self.qspec.width() < 32 {
             for a in &mut self.act {
                 *a = self.qspec.wrap(*a as i64);
@@ -146,11 +342,12 @@ impl Layer {
         }
 
         // --- Neuron updates (VmemDyn/SpkGen/VmemSel), parallel across j.
-        let snap = super::neuron::RegSnapshot::from(regs);
         spikes_out.clear();
         spikes_out.reserve(n);
         for j in 0..n {
-            let out = self.neurons[j].step_snap(self.act[j], &snap, self.qspec);
+            let act = self.act[j];
+            let out =
+                neuron::step_soa(&mut self.vmem[j], &mut self.refcnt[j], act, &snap, self.qspec);
             stats.neuron_updates += 1;
             if out.vmem_toggled {
                 stats.vmem_toggles += 1;
@@ -219,8 +416,9 @@ mod tests {
         let mut out = Vec::new();
         l.step(&[1, 1], &mut out);
         assert_ne!(l.vmem(), vec![0, 0]);
+        assert_eq!(l.vmem(), l.vmem_slice().to_vec());
         l.reset();
-        assert_eq!(l.vmem(), vec![0, 0]);
+        assert_eq!(l.vmem_slice(), &[0, 0]);
     }
 
     #[test]
@@ -264,5 +462,51 @@ mod tests {
         let stats = l.step(&[0, 1, 0], &mut out);
         assert_eq!(out, vec![0, 1, 0]);
         assert_eq!(stats.synaptic_ops, 1);
+    }
+
+    #[test]
+    fn plane_and_scalar_paths_interleave_consistently() {
+        // Alternating packed and scalar steps on the same layer must walk
+        // the same trajectory as scalar-only on a twin (the act scratch /
+        // dirty-flag handshake between the paths is state-free).
+        let mut mixed = layer(16, 8);
+        let mut scalar = layer(16, 8);
+        let weights: Vec<i32> = (0..16 * 8).map(|k| (k as i32 % 13) - 6).collect();
+        mixed.memory_mut().load_dense(&weights).unwrap();
+        scalar.memory_mut().load_dense(&weights).unwrap();
+        let regs = RegisterFile::new(Q5_3);
+        let mut out_b = Vec::new();
+        let mut ref_b = Vec::new();
+        let mut plane_in = SpikePlane::default();
+        let mut plane_out = SpikePlane::default();
+        for t in 0..40usize {
+            let spikes: Vec<u8> = (0..16).map(|i| ((t * 7 + i) % 5 == 0) as u8).collect();
+            let ref_stats = scalar.step_scalar(&spikes, &mut ref_b, &regs);
+            let stats = if t % 2 == 0 {
+                plane_in.load_bytes(&spikes);
+                let s = mixed.step_plane(&plane_in, &mut plane_out, &regs);
+                out_b.clear();
+                plane_out.append_bytes_to(&mut out_b);
+                s
+            } else {
+                mixed.step_scalar(&spikes, &mut out_b, &regs)
+            };
+            assert_eq!(out_b, ref_b, "t={t}");
+            assert_eq!(mixed.vmem_slice(), scalar.vmem_slice(), "t={t}");
+            assert_eq!(stats, ref_stats, "t={t}");
+        }
+    }
+
+    #[test]
+    fn zero_spike_step_skips_work_but_keeps_ledger() {
+        let mut l = layer(8, 4);
+        l.memory_mut().write(0, 0, 9).unwrap();
+        let mut out = Vec::new();
+        l.step(&[1; 8], &mut out); // dirty the act registers
+        let stats = l.step(&[0; 8], &mut out);
+        assert_eq!(stats.synaptic_ops, 0);
+        assert_eq!(stats.gated_ops, 32);
+        assert_eq!(stats.neuron_updates, 4);
+        assert_eq!(out, vec![0, 0, 0, 0]);
     }
 }

@@ -247,6 +247,16 @@ impl SynapticMemory {
         self.row_range(pre).1.len()
     }
 
+    /// Row `pre`'s stored column window as `(first column, width)` — every
+    /// α=1 position of the row lies inside it. The packed ActGen uses this
+    /// to bound its post-accumulation wrap pass to the columns any firing
+    /// row could have touched.
+    #[inline]
+    pub fn row_window(&self, pre: usize) -> (usize, usize) {
+        let (lo, range) = self.row_range(pre);
+        (lo, range.len())
+    }
+
     /// wt_in transaction: program one synaptic weight. Rejects out-of-range
     /// addresses, values that don't fit the Qn.q word, and writes to pruned
     /// (α=0) connections — which have no physical storage in the hardware.

@@ -19,6 +19,8 @@
 //! * [`core`] — K layers + the decoder's control registers; one spk_clk
 //!   step runs the layers in dataflow order.
 //! * [`aer`] — address-event-representation encoding of spike I/O.
+//! * [`spikes`] — bit-packed [`SpikePlane`] spike vectors (the event-driven
+//!   hot-path wire format) and the recycled-buffer [`PlanePool`].
 //! * [`clock`] — clock-domain bookkeeping and activity statistics that feed
 //!   the power model.
 
@@ -30,9 +32,11 @@ pub mod core;
 pub mod layer;
 pub mod memory;
 pub mod neuron;
+pub mod spikes;
 
 pub use self::core::Core;
 pub use clock::ActivityStats;
 pub use layer::Layer;
 pub use memory::SynapticMemory;
 pub use neuron::LifNeuron;
+pub use spikes::{PlanePool, SpikePlane};

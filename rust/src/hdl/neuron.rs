@@ -83,37 +83,86 @@ impl LifNeuron {
     /// Hot-path variant taking a pre-decoded register snapshot.
     #[inline]
     pub fn step_snap(&mut self, act: i32, regs: &RegSnapshot, qspec: QSpec) -> StepOut {
-        let old_vmem = self.vmem;
-
-        if self.refcnt > 0 {
-            // Refractory: hold vmem, suppress spiking, count down (§III-A.2).
-            self.refcnt -= 1;
-            return StepOut { spike: false, vmem_toggled: false };
-        }
-
-        // VmemDyn (Eq. 3): v - decay*v + growth*act, all wrapping Qn.q.
-        let dv = qspec.mul(regs.decay, self.vmem);
-        let gi = qspec.mul(regs.growth, act);
-        let v_new = qspec.add(qspec.sub(self.vmem, dv), gi);
-
-        // SpkGen: threshold comparator.
-        let spike = v_new >= regs.vth;
-
-        // VmemSel (Eq. 7): reset mux + refractory arm.
-        self.vmem = if spike {
-            self.refcnt = regs.refractory;
-            match regs.mode {
-                ResetMode::Default => qspec.sub(v_new, qspec.mul(regs.decay, v_new)),
-                ResetMode::ToZero => 0,
-                ResetMode::BySubtraction => qspec.sub(v_new, regs.vth),
-                ResetMode::ToConstant => regs.vreset,
-            }
-        } else {
-            v_new
-        };
-
-        StepOut { spike, vmem_toggled: self.vmem != old_vmem }
+        step_soa(&mut self.vmem, &mut self.refcnt, act, regs, qspec)
     }
+}
+
+/// The LIF datapath on bare (vmem, refcnt) registers — the single
+/// implementation behind both [`LifNeuron::step_snap`] and the layer's
+/// struct-of-arrays neuron bank (`vmem[]`/`refcnt[]` slices), so the scalar
+/// reference path and the packed event-driven path run bit-identical
+/// arithmetic by construction.
+#[inline]
+pub fn step_soa(
+    vmem: &mut i32,
+    refcnt: &mut i32,
+    act: i32,
+    regs: &RegSnapshot,
+    qspec: QSpec,
+) -> StepOut {
+    let old_vmem = *vmem;
+
+    if *refcnt > 0 {
+        // Refractory: hold vmem, suppress spiking, count down (§III-A.2).
+        *refcnt -= 1;
+        return StepOut { spike: false, vmem_toggled: false };
+    }
+
+    // VmemDyn (Eq. 3): v - decay*v + growth*act, all wrapping Qn.q.
+    let dv = qspec.mul(regs.decay, *vmem);
+    let gi = qspec.mul(regs.growth, act);
+    let v_new = qspec.add(qspec.sub(*vmem, dv), gi);
+
+    // SpkGen: threshold comparator.
+    let spike = v_new >= regs.vth;
+
+    // VmemSel (Eq. 7): reset mux + refractory arm.
+    *vmem = if spike {
+        *refcnt = regs.refractory;
+        match regs.mode {
+            ResetMode::Default => qspec.sub(v_new, qspec.mul(regs.decay, v_new)),
+            ResetMode::ToZero => 0,
+            ResetMode::BySubtraction => qspec.sub(v_new, regs.vth),
+            ResetMode::ToConstant => regs.vreset,
+        }
+    } else {
+        v_new
+    };
+
+    StepOut { spike, vmem_toggled: *vmem != old_vmem }
+}
+
+/// Inclusive `vmem` range `[lo, hi]` inside which a neuron with `act == 0`
+/// and `refcnt == 0` is **provably inert** for one step: the full datapath
+/// would leave `vmem` unchanged, emit no spike, and toggle no register.
+/// The layer's packed hot path skips such neurons exactly
+/// ([`crate::hdl::Layer::step_plane`]), and the skip is re-checked against
+/// the real datapath by a `debug_assert` there.
+///
+/// Proof sketch (all ops are the wrapping Qn.q of [`QSpec`]):
+/// with `act == 0`, `gi = mul(growth, 0) = 0` and
+/// `v' = add(sub(v, mul(decay, v)), 0)`. If `0 <= decay·v <= 2^q − 1` the
+/// arithmetic-shift truncation makes `mul(decay, v) == 0`, so
+/// `v' = wrap(wrap(v)) = v` (stored vmem is always W-bit representable).
+/// Requiring additionally `v < vth` makes the SpkGen comparator false, so
+/// VmemSel passes `v'` through and the refractory counter stays 0. The
+/// range is conservative (a wrapped product that lands on 0 also holds but
+/// is not claimed) — neurons outside it simply take the full datapath.
+pub fn quiescent_hold_range(regs: &RegSnapshot, qspec: QSpec) -> (i32, i32) {
+    let max_prod: i64 = qspec.scale() - 1; // decay·v must stay in [0, 2^q − 1]
+    let (lo, hi) = if regs.decay == 0 {
+        (i32::MIN, i32::MAX)
+    } else if regs.decay > 0 {
+        (0, (max_prod / regs.decay as i64) as i32)
+    } else {
+        // decay < 0: 0 <= decay·v needs v <= 0; truncating division of a
+        // positive by a negative yields -floor(max_prod/|decay|).
+        ((max_prod / regs.decay as i64) as i32, 0)
+    };
+    if regs.vth == i32::MIN {
+        return (1, 0); // no v satisfies v < vth: empty range
+    }
+    (lo, hi.min(regs.vth - 1))
 }
 
 /// Single-neuron dynamics probe — drives one neuron with a constant input
@@ -248,6 +297,61 @@ mod tests {
         }
         assert!(counts[0] > counts[1] && counts[1] > counts[2] && counts[2] >= counts[3]);
         assert_eq!(*counts.last().unwrap(), 0, "R=10MΩ must never cross Vth");
+    }
+
+    #[test]
+    fn quiescent_hold_range_is_sound_exhaustively() {
+        // Every Q5.3 vmem value inside the claimed hold range must be a
+        // true fixed point of the zero-activation datapath: state, spike
+        // output, and toggle flag all unchanged. Sweeps positive, zero and
+        // negative raw decay (the latter only reachable via raw cfg_in
+        // writes, but the fast path must stay sound there too) and low /
+        // negative thresholds.
+        let qs = Q5_3;
+        for decay in [0i32, 1, 2, Q5_3.from_float(0.2), Q5_3.from_float(0.875), 127, -3, -128] {
+            for vth in [Q5_3.from_float(1.0), 1, 0, -16, 127] {
+                let snap = RegSnapshot {
+                    decay,
+                    growth: qs.from_float(1.0),
+                    vth,
+                    vreset: 0,
+                    mode: ResetMode::Default,
+                    refractory: 2,
+                };
+                let (lo, hi) = quiescent_hold_range(&snap, qs);
+                for v in qs.min_raw()..=qs.max_raw() {
+                    if v < lo || v > hi {
+                        continue;
+                    }
+                    let (mut v2, mut r2) = (v, 0);
+                    let out = step_soa(&mut v2, &mut r2, 0, &snap, qs);
+                    assert!(
+                        !out.spike && !out.vmem_toggled && v2 == v && r2 == 0,
+                        "hold range unsound at v={v} decay={decay} vth={vth}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hold_range_excludes_threshold_crossers() {
+        // A vmem sitting at/above vth is never claimed quiescent (it would
+        // fire), and an empty range is returned for vth == i32::MIN.
+        let qs = Q5_3;
+        let snap = RegSnapshot {
+            decay: 0,
+            growth: 8,
+            vth: 4,
+            vreset: 0,
+            mode: ResetMode::ToZero,
+            refractory: 0,
+        };
+        let (lo, hi) = quiescent_hold_range(&snap, qs);
+        assert!(lo <= hi && hi == 3, "decay 0 holds everything below vth: [{lo}, {hi}]");
+        let snap = RegSnapshot { vth: i32::MIN, ..snap };
+        let (lo, hi) = quiescent_hold_range(&snap, qs);
+        assert!(lo > hi, "vth == i32::MIN must yield an empty hold range");
     }
 
     #[test]

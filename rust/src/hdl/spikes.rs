@@ -1,0 +1,309 @@
+//! Bit-packed spike planes — the event-driven wire format of the hot path.
+//!
+//! A [`SpikePlane`] is one timestep's spike vector packed one bit per
+//! pre-synaptic line into `u64` words (line `i` is bit `i % 64` of word
+//! `i / 64`). This is the software mirror of what makes QUANTISENC fast in
+//! hardware: the design clock-gates every synaptic row with no input spike
+//! (§VI-E), so per step the ActGen only *does work* proportional to the
+//! number of firing rows. With a packed plane the simulator walks exactly
+//! those rows via [`u64::trailing_zeros`] — O(popcount) iteration instead
+//! of an O(M) branch-per-row scan — and the gating ledger is charged in
+//! bulk from a precomputed per-row synapse prefix sum
+//! (see [`crate::hdl::Layer::step_plane`]).
+//!
+//! Planes are also the unit of **buffer recycling** on the serving path:
+//! [`PlanePool`] is a shared free-list the engine pre-fills at construction
+//! so the steady-state streaming path performs zero plane allocations
+//! (asserted in debug builds by
+//! [`crate::coordinator::serving::ServingEngine`]). A recycled plane keeps
+//! its word allocation across [`SpikePlane::load_bytes`]/
+//! [`SpikePlane::resize_clear`] calls of any width it has already seen.
+//!
+//! Invariant: bits at positions `>= len` are always zero, so derived
+//! equality, [`SpikePlane::count_ones`], and word-level consumers never see
+//! ghost spikes in the tail word.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Words needed to hold `lines` one-bit lanes.
+#[inline]
+const fn words_for(lines: usize) -> usize {
+    lines.div_ceil(64)
+}
+
+/// One timestep's spike vector, bit-packed (one `u64` word per 64 lines).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SpikePlane {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl SpikePlane {
+    /// An all-zero plane of `len` lines.
+    pub fn new(len: usize) -> SpikePlane {
+        SpikePlane { words: vec![0; words_for(len)], len }
+    }
+
+    /// An empty plane whose word storage can hold `lines` lines without
+    /// reallocating — what pools pre-fill with.
+    pub fn with_line_capacity(lines: usize) -> SpikePlane {
+        SpikePlane { words: Vec::with_capacity(words_for(lines)), len: 0 }
+    }
+
+    /// Number of lines (bits) in the plane.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The packed word view (tail bits beyond `len` are zero by invariant).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Set the plane to `len` all-zero lines, reusing the existing word
+    /// allocation (no allocation once the plane has seen this width).
+    pub fn resize_clear(&mut self, len: usize) {
+        self.words.clear();
+        self.words.resize(words_for(len), 0);
+        self.len = len;
+    }
+
+    /// Mark line `i` as firing. Out-of-range lines are rejected (a silent
+    /// tail-word write would break the ghost-bit invariant).
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        assert!(i < self.len, "line {i} out of range for plane of {}", self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Whether line `i` fired.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "line {i} out of range for plane of {}", self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of firing lines (popcount over the packed words).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate the firing line indices in ascending order. Each word is
+    /// consumed with `trailing_zeros` / clear-lowest-set, so a sparse plane
+    /// costs O(popcount + len/64), not O(len).
+    pub fn iter_ones(&self) -> Ones<'_> {
+        Ones { words: &self.words, word_pos: 0, cur: 0, cur_base: 0 }
+    }
+
+    /// Pack a dense byte vector (any non-zero byte = spike) into this
+    /// plane, reusing the word allocation.
+    pub fn load_bytes(&mut self, bytes: &[u8]) {
+        self.resize_clear(bytes.len());
+        for (wi, chunk) in bytes.chunks(64).enumerate() {
+            let mut w = 0u64;
+            for (bi, &b) in chunk.iter().enumerate() {
+                w |= ((b != 0) as u64) << bi;
+            }
+            self.words[wi] = w;
+        }
+    }
+
+    /// A fresh plane packed from a dense byte vector.
+    pub fn from_bytes(bytes: &[u8]) -> SpikePlane {
+        let mut p = SpikePlane::default();
+        p.load_bytes(bytes);
+        p
+    }
+
+    /// Append the dense 0/1 byte expansion of this plane to `out`.
+    pub fn append_bytes_to(&self, out: &mut Vec<u8>) {
+        out.reserve(self.len);
+        for (wi, &w) in self.words.iter().enumerate() {
+            let lanes = (self.len - wi * 64).min(64);
+            for bit in 0..lanes {
+                out.push(((w >> bit) & 1) as u8);
+            }
+        }
+    }
+
+    /// The dense 0/1 byte expansion (allocating; adapters and tests).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len);
+        self.append_bytes_to(&mut out);
+        out
+    }
+
+    /// Become a copy of `other`, reusing this plane's word allocation.
+    pub fn copy_from(&mut self, other: &SpikePlane) {
+        self.words.clear();
+        self.words.extend_from_slice(&other.words);
+        self.len = other.len;
+    }
+}
+
+/// Iterator over a plane's firing line indices (see
+/// [`SpikePlane::iter_ones`]).
+pub struct Ones<'a> {
+    words: &'a [u64],
+    word_pos: usize,
+    cur: u64,
+    cur_base: usize,
+}
+
+impl Iterator for Ones<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        while self.cur == 0 {
+            if self.word_pos == self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.word_pos];
+            self.cur_base = self.word_pos * 64;
+            self.word_pos += 1;
+        }
+        let t = self.cur.trailing_zeros() as usize;
+        self.cur &= self.cur - 1; // clear lowest set bit
+        Some(self.cur_base + t)
+    }
+}
+
+/// Thread-safe free-list of recycled [`SpikePlane`] buffers.
+///
+/// The serving engine pre-fills one pool per engine with enough planes to
+/// cover its maximum in-flight footprint (every bounded-channel slot plus
+/// every stage's in-hand planes), so [`PlanePool::take`] never has to
+/// allocate in steady state; each fallback allocation is counted in
+/// [`PlanePool::misses`], which is what the engine's zero-alloc
+/// debug-assert checks.
+#[derive(Debug, Default)]
+pub struct PlanePool {
+    free: Mutex<Vec<SpikePlane>>,
+    misses: AtomicU64,
+}
+
+impl PlanePool {
+    /// An empty pool: every `take` until the first `put` is a (counted)
+    /// allocation. Used by one-shot executors that don't pre-size.
+    pub fn new() -> PlanePool {
+        PlanePool::default()
+    }
+
+    /// A pool pre-filled with `count` planes whose word storage already
+    /// covers `line_capacity` lines.
+    pub fn prefilled(count: usize, line_capacity: usize) -> PlanePool {
+        let free = (0..count).map(|_| SpikePlane::with_line_capacity(line_capacity)).collect();
+        PlanePool { free: Mutex::new(free), misses: AtomicU64::new(0) }
+    }
+
+    /// Pop a recycled plane, or allocate (and count a miss) if the pool is
+    /// dry. The returned plane has unspecified contents — load or
+    /// `resize_clear` it before use.
+    pub fn take(&self) -> SpikePlane {
+        if let Some(p) = self.free.lock().unwrap().pop() {
+            return p;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        SpikePlane::default()
+    }
+
+    /// Return a plane to the free list.
+    pub fn put(&self, plane: SpikePlane) {
+        self.free.lock().unwrap().push(plane);
+    }
+
+    /// Planes currently resting in the free list.
+    pub fn available(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// Times `take` found the pool dry and had to allocate.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_count() {
+        let mut p = SpikePlane::new(130);
+        assert_eq!(p.len(), 130);
+        assert_eq!(p.count_ones(), 0);
+        for i in [0usize, 63, 64, 127, 129] {
+            p.set(i);
+            assert!(p.get(i));
+        }
+        assert_eq!(p.count_ones(), 5);
+        assert!(!p.get(1));
+        assert_eq!(p.iter_ones().collect::<Vec<_>>(), vec![0, 63, 64, 127, 129]);
+    }
+
+    #[test]
+    fn bytes_roundtrip_and_nonbinary_bytes() {
+        let bytes = vec![0u8, 1, 0, 2, 255, 0, 1];
+        let p = SpikePlane::from_bytes(&bytes);
+        assert_eq!(p.len(), 7);
+        assert_eq!(p.count_ones(), 4); // any non-zero byte is a spike
+        assert_eq!(p.to_bytes(), vec![0, 1, 0, 1, 1, 0, 1]);
+    }
+
+    #[test]
+    fn empty_and_word_boundary_planes() {
+        assert_eq!(SpikePlane::new(0).to_bytes(), Vec::<u8>::new());
+        assert_eq!(SpikePlane::new(0).iter_ones().count(), 0);
+        for len in [63usize, 64, 65, 128] {
+            let bytes = vec![1u8; len];
+            let p = SpikePlane::from_bytes(&bytes);
+            assert_eq!(p.count_ones(), len);
+            assert_eq!(p.iter_ones().collect::<Vec<_>>(), (0..len).collect::<Vec<_>>());
+            assert_eq!(p.to_bytes(), bytes);
+        }
+    }
+
+    #[test]
+    fn recycling_keeps_tail_invariant() {
+        // A plane that held a wide all-ones vector must not leak ghost
+        // spikes when recycled for a narrower one.
+        let mut p = SpikePlane::from_bytes(&vec![1u8; 200]);
+        p.load_bytes(&[0, 1, 0]);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.count_ones(), 1);
+        assert_eq!(p.iter_ones().collect::<Vec<_>>(), vec![1]);
+        p.resize_clear(100);
+        assert_eq!(p.count_ones(), 0);
+    }
+
+    #[test]
+    fn copy_from_matches_clone() {
+        let a = SpikePlane::from_bytes(&[1, 0, 1, 1, 0]);
+        let mut b = SpikePlane::from_bytes(&vec![1u8; 90]);
+        b.copy_from(&a);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pool_recycles_and_counts_misses() {
+        let pool = PlanePool::prefilled(2, 128);
+        assert_eq!(pool.available(), 2);
+        let a = pool.take();
+        let b = pool.take();
+        assert_eq!(pool.misses(), 0);
+        let c = pool.take(); // dry: allocates
+        assert_eq!(pool.misses(), 1);
+        pool.put(a);
+        pool.put(b);
+        pool.put(c);
+        assert_eq!(pool.available(), 3);
+        let _ = pool.take();
+        assert_eq!(pool.misses(), 1);
+    }
+}

@@ -73,7 +73,7 @@ fn check_lif_golden(file: &str) {
             layer.step_regs(&row_u8, &mut out, &regs);
             let got_spk: Vec<i32> = out.iter().map(|&s| s as i32).collect();
             assert_eq!(got_spk, exp_spk[t].i32_vec().unwrap(), "{file} mode {mode} t={t} spikes");
-            assert_eq!(layer.vmem(), exp_vm[t].i32_vec().unwrap(), "{file} mode {mode} t={t} vmem");
+            assert_eq!(layer.vmem_slice(), exp_vm[t].i32_vec().unwrap(), "{file} mode {mode} t={t} vmem");
         }
     }
 }

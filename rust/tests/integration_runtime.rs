@@ -184,7 +184,7 @@ fn lif_step_kernel_artifact_matches_hdl_layer() {
     layer.step_regs(&spikes_u8, &mut out, &regs);
     let hdl_spikes: Vec<i32> = out.iter().map(|&s| s as i32).collect();
     assert_eq!(hlo_spikes0, hdl_spikes, "single-step kernel vs hdl layer");
-    assert_eq!(hlo_vmem0, layer.vmem());
+    assert_eq!(hlo_vmem0, layer.vmem_slice());
 
     // And the arbitrary-state outputs at least have the right arity.
     assert_eq!(hlo_spikes.len(), nn);

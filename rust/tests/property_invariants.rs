@@ -11,7 +11,7 @@ use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
 use quantisenc::datasets::rng::XorShift64Star;
 use quantisenc::datasets::Sample;
 use quantisenc::fixed::{QSpec, Q17_15, Q2_2, Q3_1, Q5_3, Q9_7};
-use quantisenc::hdl::{aer, Core};
+use quantisenc::hdl::{aer, Core, SpikePlane};
 
 /// Random architecture over all three connection topologies (Eq. 9): every
 /// layer independently draws all-to-all, one-to-one (forcing equal widths),
@@ -338,6 +338,54 @@ fn prop_serving_engine_equals_sequential_core() {
         for (r, want) in mc.iter().zip(&reference) {
             assert_eq!(r.counts, want.counts, "case {case}: MultiCore diverged");
         }
+    }
+}
+
+/// SpikePlane properties over random bitmaps: `iter_ones` yields exactly
+/// the firing indices in ascending order, popcount equals the byte nnz,
+/// the byte round-trip is lossless, and `get` agrees with the source bytes
+/// — across lengths straddling the u64 word boundaries, including a
+/// recycled (previously wider, all-ones) buffer that must not leak ghost
+/// tail bits.
+#[test]
+fn prop_spike_plane_random_bitmaps() {
+    let mut rng = XorShift64Star::new(0x5B17_B175);
+    let mut recycled = SpikePlane::from_bytes(&vec![1u8; 321]);
+    for case in 0..300 {
+        let len = match case % 5 {
+            0 => rng.below(4) as usize,          // degenerate: 0..3 lines
+            1 => 63 + rng.below(3) as usize,     // word boundary 63/64/65
+            2 => 127 + rng.below(3) as usize,    // boundary 127/128/129
+            _ => rng.below(320) as usize,
+        };
+        let density = [0.0, 0.02, 0.5, 1.0][rng.below(4) as usize];
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.uniform() < density) as u8).collect();
+
+        let fresh = SpikePlane::from_bytes(&bytes);
+        recycled.load_bytes(&bytes); // reuses the 321-line allocation
+        for plane in [&fresh, &recycled] {
+            assert_eq!(plane.len(), len, "case {case}");
+            let ones: Vec<usize> = plane.iter_ones().collect();
+            let want: Vec<usize> = bytes
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b != 0)
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(ones, want, "case {case} len {len}: iteration order/content");
+            assert_eq!(plane.count_ones(), want.len(), "case {case} popcount");
+            assert_eq!(plane.to_bytes(), bytes, "case {case} byte round-trip");
+            for (i, &b) in bytes.iter().enumerate() {
+                assert_eq!(plane.get(i), b != 0, "case {case} line {i}");
+            }
+            // Tail invariant: no ghost bits beyond len in the last word.
+            assert_eq!(
+                plane.words().iter().map(|w| w.count_ones() as usize).sum::<usize>(),
+                want.len(),
+                "case {case} tail bits"
+            );
+        }
+        assert_eq!(fresh, recycled, "case {case} equality across allocations");
     }
 }
 

@@ -15,12 +15,22 @@
 //! charges physical slots only), while the dense twin charges full N-wide
 //! rows. Neuron-side counters (spikes, vmem toggles, neuron updates,
 //! mem cycles) must agree exactly between the pair.
+//!
+//! A second differential axis runs **packed-vs-scalar twins**
+//! (`assert_packed_scalar_parity`): the event-driven bit-packed datapath
+//! (`Layer::step_plane` — trailing_zeros row iteration, bulk gated-ops
+//! charge from the per-row synapse prefix sum, SoA quiescence skip) against
+//! the retained dense scalar reference (`Layer::step_scalar`), across all
+//! three topologies and Q9.7/Q5.3/Q3.1 — bit-identical vmem, spikes, and
+//! activity ledgers required every step. Note the dense-vs-sparse suite
+//! above *also* exercises the packed path (the byte `step_regs` API is an
+//! adapter over it), so the two axes compose.
 
 use quantisenc::config::registers::{RegisterFile, REG_REFRACTORY, REG_RESET_MODE};
 use quantisenc::config::{LayerConfig, MemKind, Topology};
 use quantisenc::datasets::rng::XorShift64Star;
 use quantisenc::fixed::{QSpec, Q3_1, Q5_3, Q9_7};
-use quantisenc::hdl::Layer;
+use quantisenc::hdl::{Layer, SpikePlane};
 
 const T_STEPS: usize = 220;
 
@@ -81,7 +91,7 @@ fn assert_sparse_dense_parity(topo: Topology, m: usize, n: usize, qs: QSpec, see
 
         // Bit-identical dynamics.
         assert_eq!(sparse_out, dense_out, "{topo:?} {} t={t} spikes", qs.name());
-        assert_eq!(sparse.vmem(), dense.vmem(), "{topo:?} {} t={t} vmem", qs.name());
+        assert_eq!(sparse.vmem_slice(), dense.vmem_slice(), "{topo:?} {} t={t} vmem", qs.name());
 
         // Neuron-side ledger entries agree exactly.
         assert_eq!(s_stats.spikes, d_stats.spikes, "t={t}");
@@ -145,6 +155,84 @@ fn gaussian_rectangular_parity() {
     for (m, n, seed) in [(32usize, 8usize, 0xEC7_1u64), (8, 32, 0xEC7_2), (30, 7, 0xEC7_3)] {
         assert_sparse_dense_parity(Topology::Gaussian { radius: 1 }, m, n, Q5_3, seed);
         assert_sparse_dense_parity(Topology::Gaussian { radius: 2 }, m, n, Q5_3, seed + 16);
+    }
+}
+
+/// Packed-vs-scalar differential gate: drive one layer through the
+/// event-driven packed-plane datapath (`step_plane`: trailing_zeros row
+/// iteration, bulk gating charge, SoA quiescence skip) and a twin through
+/// the retained dense scalar reference (`step_scalar`: branch per row,
+/// full LIF update per neuron). Every step must be **bit-identical** in
+/// spike output, membrane trace, and the complete activity ledger
+/// (synaptic/gated ops, toggles, neuron updates, mem cycles, spk steps).
+/// The spike stream sweeps firing densities 0 / 2% / 35% / 90% so the
+/// quiescence fast path, the zero-spike shortcut, and dense saturation are
+/// all exercised.
+fn assert_packed_scalar_parity(topo: Topology, m: usize, n: usize, qs: QSpec, seed: u64) {
+    let mut rng = XorShift64Star::new(seed);
+    let weights = masked_random_weights(topo, m, n, qs, &mut rng);
+
+    let cfg = LayerConfig { fan_in: m, neurons: n, topology: topo };
+    let mut scalar = Layer::new(&cfg, qs, MemKind::Bram);
+    let mut packed = Layer::new(&cfg, qs, MemKind::Bram);
+    scalar.memory_mut().load_dense(&weights).unwrap();
+    packed.memory_mut().load_dense(&weights).unwrap();
+
+    // Exercise the neuron datapath beyond defaults on half the cases.
+    let mut regs = RegisterFile::new(qs);
+    if seed % 2 == 1 {
+        regs.write(REG_RESET_MODE, 2).unwrap(); // by-subtraction
+        regs.write(REG_REFRACTORY, 1).unwrap();
+    }
+
+    let mut scalar_out = Vec::new();
+    let mut plane_in = SpikePlane::default();
+    let mut plane_out = SpikePlane::default();
+    for t in 0..T_STEPS {
+        let density = [0.0, 0.02, 0.35, 0.9][t % 4];
+        let spikes: Vec<u8> = (0..m).map(|_| (rng.uniform() < density) as u8).collect();
+
+        let s_stats = scalar.step_scalar(&spikes, &mut scalar_out, &regs);
+        plane_in.load_bytes(&spikes);
+        let p_stats = packed.step_plane(&plane_in, &mut plane_out, &regs);
+
+        assert_eq!(plane_out.len(), n, "t={t} output plane arity");
+        assert_eq!(plane_out.to_bytes(), scalar_out, "{topo:?} {} t={t} spikes", qs.name());
+        assert_eq!(
+            packed.vmem_slice(),
+            scalar.vmem_slice(),
+            "{topo:?} {} t={t} vmem",
+            qs.name()
+        );
+        assert_eq!(p_stats, s_stats, "{topo:?} {} t={t} activity ledger", qs.name());
+        // Ledger invariant: per step the two op classes partition the
+        // layer's physical (α=1) words, on both paths.
+        let words = packed.memory().synapses() as u64;
+        assert_eq!(p_stats.synaptic_ops + p_stats.gated_ops, words, "t={t}");
+    }
+}
+
+#[test]
+fn packed_vs_scalar_all_to_all_all_qspecs() {
+    for (k, qs) in [Q9_7, Q5_3, Q3_1].into_iter().enumerate() {
+        assert_packed_scalar_parity(Topology::AllToAll, 80, 64, qs, 0x9AC_0 + k as u64);
+    }
+}
+
+#[test]
+fn packed_vs_scalar_one_to_one_all_qspecs() {
+    for (k, qs) in [Q9_7, Q5_3, Q3_1].into_iter().enumerate() {
+        assert_packed_scalar_parity(Topology::OneToOne, 70, 70, qs, 0x9AC_1 + k as u64);
+    }
+}
+
+#[test]
+fn packed_vs_scalar_gaussian_all_qspecs() {
+    for (k, qs) in [Q9_7, Q5_3, Q3_1].into_iter().enumerate() {
+        let g1 = Topology::Gaussian { radius: 1 };
+        let g2 = Topology::Gaussian { radius: 2 };
+        assert_packed_scalar_parity(g1, 66, 66, qs, 0x9AC_2 + k as u64);
+        assert_packed_scalar_parity(g2, 66, 40, qs, 0x9AC_3 + k as u64);
     }
 }
 
