@@ -30,15 +30,19 @@ bench-topology:
 	BENCH_TOPOLOGY_JSON=BENCH_topology.json BENCH_HOTPATH_JSON=BENCH_hotpath.json \
 		cargo bench --bench bench_layer
 
-# Merge serving-engine throughput into BENCH_hotpath.json.
+# Merge serving-engine throughput into BENCH_hotpath.json and emit the
+# lane-batched serving report (BENCH_batched.json).
 bench-hotpath: bench-topology
-	BENCH_HOTPATH_JSON=BENCH_hotpath.json cargo bench --bench bench_serving
+	BENCH_HOTPATH_JSON=BENCH_hotpath.json BENCH_BATCHED_JSON=BENCH_batched.json \
+		cargo bench --bench bench_serving
 
 # bench-smoke runs everything above, then validates the reports (required
 # keys present, >=5x topology ops reduction, >=3x packed layer-step
-# speedup at N=400 / 2% firing, positive engine throughput).
+# speedup at N=400 / 2% firing, positive engine throughput, and >=2x
+# lane-64 serving samples/s with zero matrix-pool misses).
 bench-smoke: bench-hotpath
-	cargo run --release --bin repro -- bench-check BENCH_topology.json BENCH_hotpath.json
+	cargo run --release --bin repro -- bench-check \
+		BENCH_topology.json BENCH_hotpath.json BENCH_batched.json
 
 fmt:
 	cargo fmt --all -- --check

@@ -25,7 +25,7 @@ use quantisenc::config::registers::RegisterFile;
 use quantisenc::config::{LayerConfig, MemKind, Topology};
 use quantisenc::datasets::rng::XorShift64Star;
 use quantisenc::fixed::Q5_3;
-use quantisenc::hdl::{Layer, SpikePlane};
+use quantisenc::hdl::{ActivityStats, Layer, SpikeMatrix, SpikePlane};
 use quantisenc::util::bench::quick;
 use quantisenc::util::json::Json;
 
@@ -176,6 +176,71 @@ fn bench_hotpath_case(name: &str, n: usize, topo: Topology, firing: f64) -> Hotp
     }
 }
 
+/// Lane-batched layer stepping: one `Layer::step_lanes` call carrying 64
+/// independent spike streams vs 64 single-sample `step_plane` calls on a
+/// twin — same weights, same streams, proven bit-identical (per-lane vmem,
+/// spikes, ledger) over a pre-gate before timing. The reported speedup is
+/// per *sample-step*: the lane path fetches each firing line's synaptic
+/// row once for all 64 lanes instead of once per lane.
+fn bench_lane_case(name: &str, n: usize, topo: Topology, firing: f64) -> (String, f64) {
+    const LANES: usize = 64;
+    let cfg = LayerConfig { fan_in: n, neurons: n, topology: topo };
+    let mut rng = XorShift64Star::new(0x1A4E ^ (n as u64) << 8);
+    let mask = topo.mask(n, n).unwrap();
+    let weights: Vec<i32> = mask
+        .iter()
+        .map(|&a| if a == 0 { 0 } else { rng.below(255) as i32 - 127 })
+        .collect();
+    let regs = RegisterFile::new(Q5_3);
+    let streams: Vec<Vec<u8>> =
+        (0..LANES).map(|_| (0..n).map(|_| (rng.uniform() < firing) as u8).collect()).collect();
+    let mut matrix = SpikeMatrix::new(n, LANES);
+    for (l, s) in streams.iter().enumerate() {
+        matrix.load_lane_bytes(l, s);
+    }
+    let planes: Vec<SpikePlane> = streams.iter().map(|s| SpikePlane::from_bytes(s)).collect();
+
+    let mut batched = Layer::new(&cfg, Q5_3, MemKind::Bram);
+    batched.memory_mut().load_dense(&weights).unwrap();
+    let mut twins: Vec<Layer> = (0..LANES).map(|_| batched.clone()).collect();
+
+    // Bit-exactness pre-gate over 50 steps of evolving membrane state.
+    let mut mat_out = SpikeMatrix::default();
+    let mut stats = vec![ActivityStats::default(); LANES];
+    let mut plane_out = SpikePlane::default();
+    let mut gather = SpikePlane::default();
+    for t in 0..50 {
+        batched.step_lanes(&matrix, &mut mat_out, &regs, u64::MAX, &mut stats);
+        for (l, twin) in twins.iter_mut().enumerate() {
+            let want = twin.step_plane(&planes[l], &mut plane_out, &regs);
+            mat_out.lane_plane_into(l, &mut gather);
+            assert_eq!(gather, plane_out, "{name} t={t} lane {l} spikes diverged");
+            assert_eq!(batched.lane_vmem(l), twin.vmem_slice(), "{name} t={t} lane {l} vmem");
+            assert_eq!(stats[l], want, "{name} t={t} lane {l} ledger");
+        }
+    }
+
+    let rb = quick(&format!("lanes/{name}/batched_x64"), || {
+        std::hint::black_box(batched.step_lanes(
+            std::hint::black_box(&matrix),
+            &mut mat_out,
+            &regs,
+            u64::MAX,
+            &mut stats,
+        ));
+    });
+    let twin = &mut twins[0];
+    let rs = quick(&format!("lanes/{name}/single_x1"), || {
+        for p in &planes {
+            std::hint::black_box(twin.step_plane(std::hint::black_box(p), &mut plane_out, &regs));
+        }
+    });
+    // Per-sample-step cost: batched does 64 sample-steps per call, the
+    // single-sample loop runs the same 64 streams through one layer.
+    let speedup = rs.median.as_secs_f64() / rb.median.as_secs_f64();
+    (name.to_string(), speedup)
+}
+
 fn hotpath_json(c: &HotpathResult) -> Json {
     let mut o = BTreeMap::new();
     o.insert("name".to_string(), Json::Str(c.name.clone()));
@@ -265,6 +330,17 @@ fn main() {
         accept.speedup
     );
 
+    println!("\n== bench_layer (lane-batched stepping: 64 lanes per call vs 64 single steps) ==");
+    let lane_cases = vec![
+        bench_lane_case("gaussian_r1_400_firing_30pct", 400, g1, 0.30),
+        bench_lane_case("gaussian_r1_400_firing_2pct", 400, g1, 0.02),
+        bench_lane_case("fc_256_firing_2pct", 256, Topology::AllToAll, 0.02),
+    ];
+    println!("\nper-sample-step speedup of the 64-lane batched path:");
+    for (name, speedup) in &lane_cases {
+        println!("  {name:28} {speedup:>5.1}x");
+    }
+
     if let Ok(path) = std::env::var("BENCH_HOTPATH_JSON") {
         let mut root = BTreeMap::new();
         root.insert("bench".to_string(), Json::Str("hotpath".to_string()));
@@ -275,6 +351,20 @@ fn main() {
         root.insert(
             "layer_cases".to_string(),
             Json::Arr(hp_cases.iter().map(hotpath_json).collect()),
+        );
+        root.insert(
+            "lane_cases".to_string(),
+            Json::Arr(
+                lane_cases
+                    .iter()
+                    .map(|(name, speedup)| {
+                        let mut o = BTreeMap::new();
+                        o.insert("name".to_string(), Json::Str(name.clone()));
+                        o.insert("lane64_speedup_per_sample_step".to_string(), Json::Num(*speedup));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
         );
         let json = Json::Obj(root);
         std::fs::write(&path, format!("{json}\n")).expect("write BENCH_HOTPATH_JSON");

@@ -24,7 +24,7 @@ use std::sync::Arc;
 use crate::config::registers::RegisterFile;
 use crate::config::ModelConfig;
 use crate::datasets::Sample;
-use crate::hdl::spikes::PlanePool;
+use crate::hdl::spikes::{MatrixPool, PlanePool};
 use crate::hdl::ActivityStats;
 
 use super::serving::{build_layers, collector_loop, stage_loop, StageMsg};
@@ -119,6 +119,9 @@ pub fn run_pipelined(
     // Recycled-plane free list shared by the injector and the collector
     // (one-shot executor: allocate on first use, recycle across streams).
     let pool = Arc::new(PlanePool::new());
+    // The one-shot executor never lane-batches, but the shared collector
+    // body wants a matrix pool handle.
+    let mat_pool = Arc::new(MatrixPool::new());
     std::thread::scope(|scope| {
         // Channel chain: injector -> stage 0 -> … -> stage K-1 -> collector.
         // Stage and collector bodies are the serving-engine primitives; this
@@ -128,15 +131,18 @@ pub fn run_pipelined(
             let (tx, next_rx) = mpsc::sync_channel::<StageMsg>(64);
             let stage_regs = regs.clone();
             let rx = std::mem::replace(&mut chain_rx, next_rx);
-            scope.spawn(move || stage_loop(layer_idx, layer, stage_regs, rx, tx, Vec::new()));
+            scope.spawn(move || {
+                stage_loop(layer_idx, layer, stage_regs, rx, tx, Vec::new(), Vec::new())
+            });
         }
         let collector_rx = chain_rx;
 
         // Collector accumulates output-layer spike counts per stream.
         let collector_pool = pool.clone();
+        let collector_mats = mat_pool.clone();
         let collector = scope.spawn(move || {
             let mut results: Vec<StreamResult> = Vec::new();
-            collector_loop(n_out, collector_rx, collector_pool, |r| {
+            collector_loop(n_out, collector_rx, collector_pool, collector_mats, |r| {
                 results.push(r);
                 true
             });

@@ -39,6 +39,18 @@
 //!   maximum in-flight footprint, so the steady-state streaming path
 //!   performs **zero plane allocations** (debug-asserted on every batch
 //!   via [`PlanePool::misses`]).
+//! * **Lane batching** ([`ServingOptions::lane_width`] > 1): the feeder
+//!   packs up to 64 round-robin-assigned samples per shard into one
+//!   [`SpikeMatrix`] per timestep; every stage steps all lanes at once
+//!   ([`crate::hdl::Layer::step_lanes`]) with each synaptic row fetched
+//!   **once** per firing line and every channel hop amortized across the
+//!   whole group, lanes of ragged batches are masked out as their streams
+//!   end, and the collector demuxes lane results back into in-order
+//!   [`StreamResult`]s — bit-identical (counts, epochs, per-stream
+//!   activity ledgers) to the single-sample path, which remains the
+//!   `lane_width == 1` fallback and conformance oracle. Matrices recycle
+//!   through a pre-filled [`MatrixPool`] with the same zero-alloc
+//!   contract.
 //!
 //! The per-stage loop (`stage_loop`) and the spike-count collector
 //! (`collector_loop`) are shared with [`super::pipeline::run_pipelined`],
@@ -55,7 +67,7 @@ use crate::config::ModelConfig;
 use crate::datasets::Sample;
 use crate::hdl::core::argmax;
 use crate::hdl::layer::Layer;
-use crate::hdl::spikes::{PlanePool, SpikePlane};
+use crate::hdl::spikes::{MatrixPool, PlanePool, SpikeMatrix, SpikePlane};
 use crate::hdl::ActivityStats;
 
 use super::control::{ControlPlane, ControlShared, ReconfigProgram};
@@ -66,11 +78,22 @@ pub use super::pipeline::StreamResult;
 /// Message flowing down a shard's stage chain: one timestep's bit-packed
 /// spike plane (a recycled pool buffer — see the module docs), the Fig.-8
 /// settle marker that ends a stream (accumulating the stream's activity
-/// ledger as it passes each stage), or an epoch-tagged cfg_in/wt_in
-/// reconfiguration broadcast by the control plane.
+/// ledger as it passes each stage), their lane-batched twins (one
+/// [`SpikeMatrix`] carrying up to 64 samples' spikes per timestep, one
+/// group flush carrying the per-lane ledgers and stream ids), or an
+/// epoch-tagged cfg_in/wt_in reconfiguration broadcast by the control
+/// plane.
 pub(crate) enum StageMsg {
     Step { stream: usize, plane: SpikePlane },
     Flush { stream: usize, stats: ActivityStats },
+    /// One timestep of a lane group: `active` masks the lanes still
+    /// streaming (ragged stream lengths), so per-lane ledgers stay
+    /// bit-identical to single-sample runs.
+    StepLanes { matrix: SpikeMatrix, active: u64 },
+    /// End of a lane group: `streams[l]` is lane `l`'s stream id;
+    /// `stats[l]` accumulates lane `l`'s activity as the marker passes
+    /// each stage (the lane twin of `Flush`).
+    FlushLanes { streams: Vec<usize>, stats: Vec<ActivityStats> },
     Reconfig { epoch: u64, program: Arc<ReconfigProgram> },
 }
 
@@ -89,9 +112,15 @@ pub(crate) fn stage_loop(
     rx: Receiver<StageMsg>,
     tx: SyncSender<StageMsg>,
     mut pool: Vec<SpikePlane>,
+    mut mat_pool: Vec<SpikeMatrix>,
 ) {
     // Activity accumulated by this stage for the stream in flight.
     let mut acc = ActivityStats::default();
+    // Lane-batched twins: per-lane accumulators for the group in flight
+    // and the per-step scratch `Layer::step_lanes` writes into (sized on
+    // first use; the engine keeps the lane width constant).
+    let mut acc_lanes: Vec<ActivityStats> = Vec::new();
+    let mut lane_scratch: Vec<ActivityStats> = Vec::new();
     for msg in rx {
         match msg {
             StageMsg::Step { stream, plane } => {
@@ -121,6 +150,42 @@ pub(crate) fn stage_loop(
                     return;
                 }
             }
+            StageMsg::StepLanes { matrix, active } => {
+                let lanes = matrix.lanes();
+                if acc_lanes.len() != lanes {
+                    acc_lanes.resize(lanes, ActivityStats::default());
+                    lane_scratch.resize(lanes, ActivityStats::default());
+                }
+                let mut out = mat_pool.pop().unwrap_or_default();
+                layer.step_lanes(&matrix, &mut out, &regs, active, &mut lane_scratch);
+                for (l, st) in lane_scratch.iter_mut().enumerate() {
+                    if layer_idx != 0 {
+                        // One spk_clk edge per core timestep per lane.
+                        st.spk_steps = 0;
+                    }
+                    acc_lanes[l].add(st);
+                }
+                mat_pool.push(matrix);
+                if tx.send(StageMsg::StepLanes { matrix: out, active }).is_err() {
+                    return;
+                }
+            }
+            StageMsg::FlushLanes { streams, stats: mut upstream } => {
+                // Settle every lane's membranes between groups; fold this
+                // stage's per-lane ledgers into the marker (zip tolerates a
+                // ragged final group shorter than the lane width, and a
+                // zero-step group that never sized the accumulators).
+                layer.reset();
+                for (st, lane_acc) in upstream.iter_mut().zip(&acc_lanes) {
+                    st.add(lane_acc);
+                }
+                for lane_acc in acc_lanes.iter_mut() {
+                    *lane_acc = ActivityStats::default();
+                }
+                if tx.send(StageMsg::FlushLanes { streams, stats: upstream }).is_err() {
+                    return;
+                }
+            }
             StageMsg::Reconfig { epoch, program } => {
                 // Programs are validated by the control plane before they
                 // are admitted, so stage-side application is infallible —
@@ -141,20 +206,88 @@ pub(crate) fn stage_loop(
     }
 }
 
+/// Send one lane group down a shard's chain: `t_max` lane-matrix steps
+/// (lane `l` = `group[l]`, masked out once its stream ends — ragged
+/// lengths never leak across lanes) followed by the group flush carrying
+/// the lanes' stream ids. Matrices come from the engine pool and are
+/// always `lane_width` wide, so a ragged final group reuses the same
+/// stage lane banks (its high lanes simply never go active).
+fn feed_group(
+    tx: &SyncSender<StageMsg>,
+    streams: &mut Vec<usize>,
+    group: &mut Vec<&Sample>,
+    matrix_pool: &MatrixPool,
+    lane_width: usize,
+    inputs: usize,
+) -> Result<()> {
+    if group.is_empty() {
+        return Ok(());
+    }
+    let dead = || anyhow::anyhow!("serving shard died");
+    let t_max = group.iter().map(|s| s.t_steps).max().unwrap_or(0);
+    for t in 0..t_max {
+        let mut matrix = matrix_pool.take();
+        matrix.resize_clear(inputs, lane_width);
+        let mut active = 0u64;
+        for (l, s) in group.iter().enumerate() {
+            if t < s.t_steps {
+                matrix.load_lane_bytes(l, s.step(t));
+                active |= 1 << l;
+            }
+        }
+        tx.send(StageMsg::StepLanes { matrix, active }).map_err(|_| dead())?;
+    }
+    tx.send(StageMsg::FlushLanes {
+        streams: std::mem::take(streams),
+        stats: vec![ActivityStats::default(); group.len()],
+    })
+    .map_err(|_| dead())?;
+    group.clear();
+    Ok(())
+}
+
+/// Flush every shard's partial lane group, **ordered by first stream id**
+/// so the global submission order of groups on the channels is preserved
+/// (the deadlock-freedom and in-order-drain arguments rely on it). Called
+/// before any reconfiguration broadcast — so an epoch boundary lands
+/// exactly between samples — and at end of session.
+fn flush_pending_groups(
+    pending: &mut [(Vec<usize>, Vec<&Sample>)],
+    senders: &[SyncSender<StageMsg>],
+    matrix_pool: &MatrixPool,
+    lane_width: usize,
+    inputs: usize,
+) -> Result<()> {
+    let mut order: Vec<usize> = (0..pending.len()).filter(|&s| !pending[s].0.is_empty()).collect();
+    order.sort_by_key(|&s| pending[s].0[0]);
+    for s in order {
+        let (streams, group) = &mut pending[s];
+        feed_group(&senders[s], streams, group, matrix_pool, lane_width, inputs)?;
+    }
+    Ok(())
+}
+
 /// Body of the terminal collector: accumulates output-layer spike counts per
 /// stream, tracks the config epoch announced by [`StageMsg::Reconfig`]
 /// markers, and emits one [`StreamResult`] per `Flush` (carrying the epoch
-/// and the full activity ledger the stages accumulated). Drained planes are
-/// returned to `pool`, closing the feeder → stages → collector recycle
-/// loop. `emit` returning false stops the loop (downstream gone).
+/// and the full activity ledger the stages accumulated). Lane-batched
+/// groups are **demuxed** here: per-lane spike counters accumulate from
+/// each output [`SpikeMatrix`]'s lane-words, and a `FlushLanes` marker
+/// emits one in-order result per lane. Drained planes/matrices are
+/// returned to their pools, closing the feeder → stages → collector
+/// recycle loop. `emit` returning false stops the loop (downstream gone).
 pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
     n_out: usize,
     rx: Receiver<StageMsg>,
     pool: Arc<PlanePool>,
+    mat_pool: Arc<MatrixPool>,
     mut emit: F,
 ) {
     let mut counts = vec![0u32; n_out];
     let mut spikes_total = 0u64;
+    // Lane demux state, sized on the first lane-batched step.
+    let mut lane_counts: Vec<Vec<u32>> = Vec::new();
+    let mut lane_spikes: Vec<u64> = Vec::new();
     let mut epoch = 0u64;
     for msg in rx {
         match msg {
@@ -178,6 +311,47 @@ pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
                 spikes_total = 0;
                 if !emit(result) {
                     return;
+                }
+            }
+            StageMsg::StepLanes { matrix, .. } => {
+                debug_assert_eq!(matrix.lines(), n_out, "output matrix arity");
+                if lane_counts.len() != matrix.lanes() {
+                    lane_counts.resize(matrix.lanes(), vec![0u32; n_out]);
+                    lane_spikes.resize(matrix.lanes(), 0);
+                }
+                for (j, &word) in matrix.words().iter().enumerate() {
+                    let mut bits = word;
+                    while bits != 0 {
+                        let l = bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        lane_counts[l][j] += 1;
+                        lane_spikes[l] += 1;
+                    }
+                }
+                mat_pool.put(matrix);
+            }
+            StageMsg::FlushLanes { streams, stats } => {
+                for (l, (stream, lane_stats)) in streams.into_iter().zip(stats).enumerate() {
+                    // A zero-step group may never have sized the demux
+                    // state; such lanes have all-zero counts.
+                    let counts = if l < lane_counts.len() {
+                        std::mem::replace(&mut lane_counts[l], vec![0u32; n_out])
+                    } else {
+                        vec![0u32; n_out]
+                    };
+                    let spikes_total =
+                        if l < lane_spikes.len() { std::mem::take(&mut lane_spikes[l]) } else { 0 };
+                    let result = StreamResult {
+                        stream_id: stream,
+                        prediction: argmax(&counts),
+                        counts,
+                        spikes_total,
+                        epoch,
+                        stats: lane_stats,
+                    };
+                    if !emit(result) {
+                        return;
+                    }
                 }
             }
             StageMsg::Reconfig { epoch: e, .. } => {
@@ -211,19 +385,31 @@ pub struct ServingOptions {
     /// Number of sharded cores C (each shard pipelines its layers).
     pub cores: usize,
     /// Bounded-channel capacity per stage — the admission/backpressure
-    /// window, in messages (one message ≈ one timestep of one stream).
+    /// window, in messages (one message ≈ one timestep of one stream,
+    /// or of one whole lane group in batched mode).
     pub queue_depth: usize,
+    /// Samples stepped concurrently per shard message (1..=64). At 1 the
+    /// engine runs the single-sample packed path; above 1 each shard packs
+    /// `lane_width` round-robin-assigned samples into one [`SpikeMatrix`]
+    /// per timestep, so every synaptic row fetch and every channel hop is
+    /// amortized across the batch. Results are bit-identical either way.
+    pub lane_width: usize,
 }
 
 impl Default for ServingOptions {
     fn default() -> Self {
-        ServingOptions { cores: 2, queue_depth: 64 }
+        ServingOptions { cores: 2, queue_depth: 64, lane_width: 1 }
     }
 }
 
 impl ServingOptions {
     pub fn with_cores(cores: usize) -> ServingOptions {
         ServingOptions { cores, ..Default::default() }
+    }
+
+    /// Lane-batched engine: C shards × `lane_width` samples per step.
+    pub fn with_lanes(cores: usize, lane_width: usize) -> ServingOptions {
+        ServingOptions { cores, lane_width, ..Default::default() }
     }
 }
 
@@ -280,6 +466,12 @@ pub struct ServingEngine {
     /// Pre-filled to the maximum in-flight footprint, so steady-state
     /// streaming allocates nothing ([`ServingEngine::plane_pool_misses`]).
     plane_pool: Arc<PlanePool>,
+    /// The lane-batched twin of `plane_pool`: recycled [`SpikeMatrix`]
+    /// buffers for `lane_width > 1` engines, pre-filled to the same
+    /// in-flight bound ([`ServingEngine::matrix_pool_misses`]).
+    matrix_pool: Arc<MatrixPool>,
+    /// Samples packed per lane group (1 = single-sample path).
+    lane_width: usize,
     submitted: u64,
     completed: u64,
     /// Set when a batch failed mid-flight: in-flight state is then
@@ -298,19 +490,35 @@ impl ServingEngine {
     ) -> Result<ServingEngine> {
         anyhow::ensure!(options.cores >= 1, "need at least one core");
         anyhow::ensure!(options.queue_depth >= 1, "queue depth must be positive");
+        anyhow::ensure!(
+            (1..=64).contains(&options.lane_width),
+            "lane width must be 1..=64 (one bit per sample in a u64 lane word)"
+        );
+        let lanes = options.lane_width;
         let n_out = config.outputs();
         let max_width = config.sizes().iter().copied().max().unwrap_or(1);
-        // Upper bound on planes simultaneously *outside* the shared pool,
-        // per shard: every bounded-channel slot of the K+1 stage channels
-        // can hold one Step plane, each of the K stages holds at most two
-        // in hand (input being processed + output just popped), plus one
-        // each in the feeder's and collector's hands. Pre-filling past this
-        // bound means `PlanePool::take` never allocates in steady state —
-        // the zero-alloc invariant `run_session` debug-asserts.
+        // Upper bound on planes (or lane matrices, in batched mode)
+        // simultaneously *outside* the shared pool, per shard: every
+        // bounded-channel slot of the K+1 stage channels can hold one Step
+        // buffer, each of the K stages holds at most two in hand (input
+        // being processed + output just popped), plus one each in the
+        // feeder's and collector's hands. Pre-filling past this bound means
+        // the pool never allocates in steady state — the zero-alloc
+        // invariant `run_session` debug-asserts. Only the active mode's
+        // pool is pre-filled (the other is never drawn from).
         let per_shard = (config.num_layers() + 1) * options.queue_depth
             + 2 * config.num_layers()
             + 4;
-        let plane_pool = Arc::new(PlanePool::prefilled(options.cores * per_shard, max_width));
+        let plane_pool = Arc::new(if lanes == 1 {
+            PlanePool::prefilled(options.cores * per_shard, max_width)
+        } else {
+            PlanePool::new()
+        });
+        let matrix_pool = Arc::new(if lanes > 1 {
+            MatrixPool::prefilled(options.cores * per_shard, max_width)
+        } else {
+            MatrixPool::new()
+        });
         let mut shards = Vec::with_capacity(options.cores);
         let mut synapse_words = 0usize;
         let mut packed_sizes: Vec<usize> = Vec::new();
@@ -329,21 +537,42 @@ impl ServingEngine {
                 let (tx, next_rx) = sync_channel::<StageMsg>(options.queue_depth);
                 let stage_regs = regs.clone();
                 let rx = std::mem::replace(&mut chain_rx, next_rx);
-                // Two pre-sized planes per stage-local free list cover the
-                // one output buffer a stage ever needs in hand.
-                let stage_pool = vec![
-                    SpikePlane::with_line_capacity(max_width),
-                    SpikePlane::with_line_capacity(max_width),
-                ];
+                // Two pre-sized buffers per stage-local free list cover the
+                // one output buffer a stage ever needs in hand (planes on
+                // the single-sample path, lane matrices in batched mode).
+                let (stage_pool, stage_mats) = if lanes == 1 {
+                    (
+                        vec![
+                            SpikePlane::with_line_capacity(max_width),
+                            SpikePlane::with_line_capacity(max_width),
+                        ],
+                        Vec::new(),
+                    )
+                } else {
+                    (
+                        Vec::new(),
+                        vec![
+                            SpikeMatrix::with_line_capacity(max_width),
+                            SpikeMatrix::with_line_capacity(max_width),
+                        ],
+                    )
+                };
                 threads.push(std::thread::spawn(move || {
-                    stage_loop(layer_idx, layer, stage_regs, rx, tx, stage_pool)
+                    stage_loop(layer_idx, layer, stage_regs, rx, tx, stage_pool, stage_mats)
                 }));
             }
-            let (out_tx, out_rx) = sync_channel::<StreamResult>(options.queue_depth);
+            // In lane mode a single FlushLanes emits up to lane_width
+            // results at once; the result channel must absorb a whole
+            // group so the collector never wedges mid-flush.
+            let (out_tx, out_rx) =
+                sync_channel::<StreamResult>(options.queue_depth.max(lanes) + lanes);
             let collector_rx = chain_rx;
             let collector_pool = plane_pool.clone();
+            let collector_mats = matrix_pool.clone();
             threads.push(std::thread::spawn(move || {
-                collector_loop(n_out, collector_rx, collector_pool, |r| out_tx.send(r).is_ok())
+                collector_loop(n_out, collector_rx, collector_pool, collector_mats, |r| {
+                    out_tx.send(r).is_ok()
+                })
             }));
             shards.push(Shard { in_tx: Some(first_tx), out_rx, threads });
         }
@@ -354,10 +583,17 @@ impl ServingEngine {
             synapse_words,
             control,
             plane_pool,
+            matrix_pool,
+            lane_width: lanes,
             submitted: 0,
             completed: 0,
             poisoned: false,
         })
+    }
+
+    /// Samples stepped per shard message (1 = single-sample path).
+    pub fn lane_width(&self) -> usize {
+        self.lane_width
     }
 
     pub fn num_cores(&self) -> usize {
@@ -382,6 +618,14 @@ impl ServingEngine {
     /// engine debug-asserts this after every batch.
     pub fn plane_pool_misses(&self) -> u64 {
         self.plane_pool.misses()
+    }
+
+    /// Lane-batched twin of [`ServingEngine::plane_pool_misses`]: times the
+    /// batched streaming path had to allocate a [`SpikeMatrix`] because the
+    /// recycled-buffer pool was dry. Stays 0 for the engine's lifetime;
+    /// debug-asserted after every batch.
+    pub fn matrix_pool_misses(&self) -> u64 {
+        self.matrix_pool.misses()
     }
 
     /// A cloneable, thread-safe [`ControlPlane`] handle for reprogramming
@@ -457,13 +701,21 @@ impl ServingEngine {
             .collect();
         let control = self.control.clone();
         let plane_pool = self.plane_pool.clone();
+        let matrix_pool = self.matrix_pool.clone();
+        let lane_width = self.lane_width;
+        let inputs = self.inputs;
         let pool_misses_before = self.plane_pool.misses();
+        let mat_misses_before = self.matrix_pool.misses();
 
         let results = std::thread::scope(|scope| -> Result<Vec<StreamResult>> {
             // Feeder: streams every sample to its shard (blocking on the
             // bounded channels = admission control) and broadcasts control
             // programs to *all* shards at sample boundaries, so the FIFO
-            // position of a Reconfig is identical in every chain.
+            // position of a Reconfig is identical in every chain. In
+            // lane-batched mode (`lane_width > 1`) each shard's samples are
+            // packed into lane groups sent as one SpikeMatrix per timestep;
+            // partial groups are flushed in stream order before any
+            // reconfiguration broadcast, so epoch semantics are unchanged.
             let feeder = scope.spawn(move || -> Result<()> {
                 let dead = || anyhow::anyhow!("serving shard died");
                 let broadcast = |epoch: u64, program: &Arc<ReconfigProgram>| -> Result<()> {
@@ -473,15 +725,31 @@ impl ServingEngine {
                     }
                     Ok(())
                 };
+                // Per-shard lane group under construction (stream ids +
+                // samples); unused on the single-sample path.
+                let mut pending: Vec<(Vec<usize>, Vec<&Sample>)> =
+                    vec![(Vec::new(), Vec::new()); n_cores];
                 let mut stream = 0usize;
                 for op in ops {
                     // Programs applied asynchronously through a ControlPlane
-                    // handle land here, at the next sample boundary.
-                    for (epoch, program) in control.take_pending() {
-                        broadcast(epoch, &program)?;
+                    // handle land here, at the next sample boundary (group
+                    // boundary in lane mode: partial groups go first so
+                    // already-admitted samples keep the old epoch).
+                    let async_programs = control.take_pending();
+                    if !async_programs.is_empty() {
+                        flush_pending_groups(
+                            &mut pending,
+                            &senders,
+                            &matrix_pool,
+                            lane_width,
+                            inputs,
+                        )?;
+                        for (epoch, program) in async_programs {
+                            broadcast(epoch, &program)?;
+                        }
                     }
                     match op {
-                        SessionOp::Submit(sample) => {
+                        SessionOp::Submit(sample) if lane_width == 1 => {
                             let tx = &senders[stream % n_cores];
                             for t in 0..sample.t_steps {
                                 // Encode straight into a recycled pool
@@ -496,7 +764,32 @@ impl ServingEngine {
                             control.charge_spk_in(sample.nnz() as u64);
                             stream += 1;
                         }
+                        SessionOp::Submit(sample) => {
+                            let shard = stream % n_cores;
+                            pending[shard].0.push(stream);
+                            pending[shard].1.push(*sample);
+                            control.charge_spk_in(sample.nnz() as u64);
+                            stream += 1;
+                            if pending[shard].1.len() == lane_width {
+                                let (streams, group) = &mut pending[shard];
+                                feed_group(
+                                    &senders[shard],
+                                    streams,
+                                    group,
+                                    &matrix_pool,
+                                    lane_width,
+                                    inputs,
+                                )?;
+                            }
+                        }
                         SessionOp::Reconfig(program) => {
+                            flush_pending_groups(
+                                &mut pending,
+                                &senders,
+                                &matrix_pool,
+                                lane_width,
+                                inputs,
+                            )?;
                             let (drained, epoch, program) =
                                 control.commit_in_band(program.clone());
                             for (e, p) in drained {
@@ -506,7 +799,7 @@ impl ServingEngine {
                         }
                     }
                 }
-                Ok(())
+                flush_pending_groups(&mut pending, &senders, &matrix_pool, lane_width, inputs)
             });
 
             // Drainer (this thread): round-robin pop restores global order.
@@ -565,6 +858,11 @@ impl ServingEngine {
                     self.plane_pool.misses(),
                     pool_misses_before,
                     "steady-state streaming allocated spike planes (pool underprovisioned)"
+                );
+                debug_assert_eq!(
+                    self.matrix_pool.misses(),
+                    mat_misses_before,
+                    "steady-state lane streaming allocated spike matrices (pool underprovisioned)"
                 );
                 self.completed += results.len() as u64;
                 Ok(results)
@@ -675,7 +973,7 @@ mod tests {
             &cfg,
             &weights,
             &regs,
-            ServingOptions { cores: 2, queue_depth: 1 },
+            ServingOptions { cores: 2, queue_depth: 1, ..Default::default() },
         )
         .unwrap();
         let out = engine.run_batch(&samples).unwrap();
@@ -745,7 +1043,7 @@ mod tests {
                 &cfg,
                 &weights,
                 &regs,
-                ServingOptions { cores: 2, queue_depth: depth },
+                ServingOptions { cores: 2, queue_depth: depth, ..Default::default() },
             )
             .unwrap();
             for _ in 0..3 {
@@ -755,6 +1053,131 @@ mod tests {
                 engine.plane_pool_misses(),
                 0,
                 "queue_depth {depth}: streaming path allocated planes"
+            );
+        }
+    }
+
+    /// Ragged samples (unequal stream lengths) for the lane-batched gates.
+    fn ragged_samples(count: usize) -> Vec<Sample> {
+        (0..count as u64)
+            .map(|i| {
+                let mut s = Dataset::Smnist.sample(i, Split::Test, 3 + (i % 5) as usize);
+                s.label = i as usize % 10;
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lane_batched_engine_matches_single_sample_engine_bitexact() {
+        // Lane widths 2 / 7 / 64 on ragged batches (count not a multiple of
+        // the width, unequal stream lengths) must be bit-identical — counts,
+        // prediction, stream order, epoch, and the full per-stream activity
+        // ledger — to the single-sample engine and the sequential core.
+        let (cfg, weights, regs, _) = setup();
+        let samples = ragged_samples(13);
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        for cores in [1usize, 2] {
+            for lane_width in [2usize, 7, 64] {
+                let mut engine = ServingEngine::new(
+                    &cfg,
+                    &weights,
+                    &regs,
+                    ServingOptions::with_lanes(cores, lane_width),
+                )
+                .unwrap();
+                assert_eq!(engine.lane_width(), lane_width);
+                let out = engine.run_batch(&samples).unwrap();
+                assert_eq!(out.len(), samples.len());
+                for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+                    let seq = core.run(s);
+                    let ctx = format!("cores={cores} lanes={lane_width} sample {i}");
+                    assert_eq!(r.stream_id, i, "{ctx}");
+                    assert_eq!(r.counts, seq.counts, "{ctx}");
+                    assert_eq!(r.prediction, seq.prediction, "{ctx}");
+                    assert_eq!(r.stats, seq.stats, "{ctx} activity ledger");
+                    assert_eq!(r.epoch, 0, "{ctx}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_batched_engine_is_reusable_and_zero_alloc() {
+        let (cfg, weights, regs, _) = setup();
+        let samples = ragged_samples(10);
+        for depth in [1usize, 4] {
+            let mut engine = ServingEngine::new(
+                &cfg,
+                &weights,
+                &regs,
+                ServingOptions { cores: 2, queue_depth: depth, lane_width: 4 },
+            )
+            .unwrap();
+            let a = engine.run_batch(&samples).unwrap();
+            let b = engine.run_batch(&samples).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.counts, y.counts, "lane state leaked across batches");
+            }
+            assert_eq!(
+                engine.matrix_pool_misses(),
+                0,
+                "queue_depth {depth}: lane streaming allocated matrices"
+            );
+            assert_eq!(engine.plane_pool_misses(), 0, "queue_depth {depth}");
+        }
+    }
+
+    #[test]
+    fn lane_batched_in_band_reconfig_splits_epochs_deterministically() {
+        // A reconfiguration mid-session on a lane-batched engine must land
+        // exactly between samples 3 and 4 even though 3 is mid-group (the
+        // feeder flushes partial groups before broadcasting).
+        let (cfg, weights, regs, _) = setup();
+        let samples = ragged_samples(8);
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_lanes(2, 64)).unwrap();
+        let mut raised = regs.clone();
+        raised.set_vth(4.0).unwrap();
+        let ops: Vec<SessionOp> = samples[..3]
+            .iter()
+            .map(SessionOp::Submit)
+            .chain(std::iter::once(SessionOp::Reconfig(ReconfigProgram::from_registers(
+                &raised,
+            ))))
+            .chain(samples[3..].iter().map(SessionOp::Submit))
+            .collect();
+        let out = engine.run_session(&ops).unwrap();
+        assert_eq!(out.len(), 8);
+        assert!(out[..3].iter().all(|r| r.epoch == 0), "pre-reconfig samples at epoch 0");
+        assert!(out[3..].iter().all(|r| r.epoch == 1), "post-reconfig samples at epoch 1");
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        for (i, s) in samples[..3].iter().enumerate() {
+            assert_eq!(out[i].counts, core.run(s).counts, "epoch 0 sample {i}");
+        }
+        core.registers = raised;
+        for (i, s) in samples[3..].iter().enumerate() {
+            assert_eq!(out[3 + i].counts, core.run(s).counts, "epoch 1 sample {i}");
+        }
+    }
+
+    #[test]
+    fn lane_width_validated() {
+        let (cfg, weights, regs, _) = setup();
+        for lane_width in [0usize, 65] {
+            assert!(
+                ServingEngine::new(
+                    &cfg,
+                    &weights,
+                    &regs,
+                    ServingOptions { cores: 2, queue_depth: 8, lane_width },
+                )
+                .is_err(),
+                "lane width {lane_width} must be rejected"
             );
         }
     }

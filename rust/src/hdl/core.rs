@@ -10,7 +10,7 @@ use crate::datasets::Sample;
 
 use super::clock::ActivityStats;
 use super::layer::Layer;
-use super::spikes::SpikePlane;
+use super::spikes::{SpikeMatrix, SpikePlane};
 
 #[derive(Debug, Clone)]
 pub struct Core {
@@ -25,6 +25,12 @@ pub struct Core {
     in_scratch: SpikePlane,
     /// Dense expansion of the output plane for the byte-slice adapter.
     out_bytes: Vec<u8>,
+    /// Ping-pong lane matrices + scratch for the lane-batched path
+    /// ([`Core::step_lanes`] / [`Core::run_lanes`]).
+    mat_a: SpikeMatrix,
+    mat_b: SpikeMatrix,
+    mat_in_scratch: SpikeMatrix,
+    lane_scratch: Vec<ActivityStats>,
 }
 
 /// Result of running one full input stream (sample) through the core.
@@ -57,6 +63,10 @@ impl Core {
             buf_b: SpikePlane::with_line_capacity(max_width),
             in_scratch: SpikePlane::with_line_capacity(max_width),
             out_bytes: Vec::new(),
+            mat_a: SpikeMatrix::with_line_capacity(max_width),
+            mat_b: SpikeMatrix::with_line_capacity(max_width),
+            mat_in_scratch: SpikeMatrix::with_line_capacity(max_width),
+            lane_scratch: Vec::new(),
         }
     }
 
@@ -155,6 +165,104 @@ impl Core {
         self.in_scratch = input;
         let prediction = argmax(&counts);
         RunResult { counts, layer_spikes, stats, prediction }
+    }
+
+    /// One spk_clk timestep for up to 64 independent samples — feeds one
+    /// lane [`SpikeMatrix`] through all layers on the lane-batched datapath
+    /// ([`Layer::step_lanes`]: every synaptic row fetched once per firing
+    /// line and scattered across the batch). `active` masks the live lanes;
+    /// `layer_spikes[k · L + l]` accumulates layer `k`'s spikes in lane
+    /// `l`; `step_stats[l]` is overwritten with lane `l`'s ledger for this
+    /// step (summed over layers, one spk_clk edge per active lane — the
+    /// same accounting as [`Core::step_plane`]). Returns the output
+    /// layer's lane matrix, borrowed from the internal ping-pong buffer.
+    pub fn step_lanes(
+        &mut self,
+        spikes_in: &SpikeMatrix,
+        active: u64,
+        layer_spikes: &mut [u64],
+        step_stats: &mut [ActivityStats],
+    ) -> &SpikeMatrix {
+        let lanes = spikes_in.lanes();
+        assert_eq!(layer_spikes.len(), self.layers.len() * lanes, "layer_spikes arity");
+        assert_eq!(step_stats.len(), lanes, "per-lane stats arity");
+        for st in step_stats.iter_mut() {
+            *st = ActivityStats::default();
+        }
+        let mut scratch = std::mem::take(&mut self.lane_scratch);
+        scratch.clear();
+        scratch.resize(lanes, ActivityStats::default());
+        self.mat_a.copy_from(spikes_in);
+        for (k, layer) in self.layers.iter_mut().enumerate() {
+            layer.step_lanes(&self.mat_a, &mut self.mat_b, &self.registers, active, &mut scratch);
+            for (l, st) in scratch.iter_mut().enumerate() {
+                if k != 0 {
+                    // One spk_clk edge per *core* timestep per lane, not
+                    // one per layer — matches `Core::step_plane`.
+                    st.spk_steps = 0;
+                }
+                layer_spikes[k * lanes + l] += st.spikes;
+                step_stats[l].add(st);
+            }
+            std::mem::swap(&mut self.mat_a, &mut self.mat_b);
+        }
+        self.lane_scratch = scratch;
+        &self.mat_a
+    }
+
+    /// Run up to 64 full samples concurrently on the lane-batched datapath,
+    /// starting from reset state: lane `l` carries `samples[l]`, ragged
+    /// stream lengths are masked out as lanes finish, and each returned
+    /// [`RunResult`] is **bit-identical** (counts, layer spikes, activity
+    /// ledger, prediction) to `self.run(&samples[l])` — the conformance
+    /// contract the twin gates in `rust/tests/sparse_parity.rs` and the
+    /// core unit tests pin down.
+    pub fn run_lanes(&mut self, samples: &[Sample]) -> Vec<RunResult> {
+        let lanes = samples.len();
+        assert!((1..=64).contains(&lanes), "lane batch of {lanes} samples (need 1..=64)");
+        for s in samples {
+            assert_eq!(s.inputs, self.config.inputs(), "sample width does not match core input");
+        }
+        self.reset();
+        let n_out = self.config.outputs();
+        let n_layers = self.layers.len();
+        let t_max = samples.iter().map(|s| s.t_steps).max().unwrap_or(0);
+        let mut counts = vec![0u32; lanes * n_out];
+        let mut layer_spikes = vec![0u64; n_layers * lanes];
+        let mut totals = vec![ActivityStats::default(); lanes];
+        let mut step_stats = vec![ActivityStats::default(); lanes];
+        let mut input = std::mem::take(&mut self.mat_in_scratch);
+        for t in 0..t_max {
+            input.resize_clear(self.config.inputs(), lanes);
+            let mut active = 0u64;
+            for (l, s) in samples.iter().enumerate() {
+                if t < s.t_steps {
+                    input.load_lane_bytes(l, s.step(t));
+                    active |= 1 << l;
+                }
+            }
+            let out = self.step_lanes(&input, active, &mut layer_spikes, &mut step_stats);
+            for (j, &word) in out.words().iter().enumerate() {
+                let mut bits = word;
+                while bits != 0 {
+                    let l = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    counts[l * n_out + j] += 1;
+                }
+            }
+            for (l, st) in step_stats.iter().enumerate() {
+                totals[l].add(st);
+            }
+        }
+        self.mat_in_scratch = input;
+        (0..lanes)
+            .map(|l| {
+                let counts = counts[l * n_out..(l + 1) * n_out].to_vec();
+                let layer_spikes = (0..n_layers).map(|k| layer_spikes[k * lanes + l]).collect();
+                let prediction = argmax(&counts);
+                RunResult { counts, layer_spikes, stats: totals[l], prediction }
+            })
+            .collect()
     }
 
     /// Program trained weights (dense row-major per layer) — the wt_in bulk
@@ -331,6 +439,74 @@ mod tests {
             assert_eq!(st, st_a, "t={t}");
         }
         assert_eq!(ls_a, ls_b);
+    }
+
+    #[test]
+    fn run_lanes_matches_per_sample_run_including_ragged() {
+        // A ragged 5-lane batch (unequal stream lengths, one silent lane)
+        // must be bit-identical per lane to sequential Core::run — counts,
+        // per-layer spikes, prediction, and the full activity ledger.
+        let mut batched = tiny_core();
+        let mut seq = tiny_core();
+        let mut rng = crate::datasets::rng::XorShift64Star::new(0x1A4E5);
+        let samples: Vec<Sample> = [7usize, 3, 7, 1, 5]
+            .iter()
+            .enumerate()
+            .map(|(l, &t_steps)| {
+                let density = if l == 3 { 0.0 } else { 0.4 };
+                let spikes =
+                    (0..t_steps * 4).map(|_| (rng.uniform() < density) as u8).collect();
+                Sample { spikes, t_steps, inputs: 4, label: 0 }
+            })
+            .collect();
+        let out = batched.run_lanes(&samples);
+        assert_eq!(out.len(), samples.len());
+        for (l, (r, s)) in out.iter().zip(&samples).enumerate() {
+            let want = seq.run(s);
+            assert_eq!(r.counts, want.counts, "lane {l} counts");
+            assert_eq!(r.layer_spikes, want.layer_spikes, "lane {l} layer spikes");
+            assert_eq!(r.stats, want.stats, "lane {l} ledger");
+            assert_eq!(r.prediction, want.prediction, "lane {l}");
+        }
+        // Lane runs are idempotent (state fully reset between batches).
+        let again = batched.run_lanes(&samples);
+        for (a, b) in out.iter().zip(&again) {
+            assert_eq!(a.counts, b.counts, "state leaked across lane batches");
+        }
+    }
+
+    #[test]
+    fn step_lanes_matches_step_plane_per_lane() {
+        use super::super::spikes::SpikeMatrix;
+        let mut batched = tiny_core();
+        let mut single = tiny_core();
+        let lanes = 3usize;
+        let mut layer_spikes = vec![0u64; 2 * lanes];
+        let mut ls_single = vec![0u64; 2];
+        let mut step_stats = vec![ActivityStats::default(); lanes];
+        let mut mat = SpikeMatrix::default();
+        let mut plane = crate::hdl::SpikePlane::default();
+        // Lane 1 mirrors the single-sample core; other lanes carry noise.
+        for t in 0..6usize {
+            mat.resize_clear(4, lanes);
+            let spikes: Vec<u8> = (0..4).map(|i| ((t + i) % 3 != 0) as u8).collect();
+            mat.load_lane_bytes(0, &[1, 1, 1, 1]);
+            mat.load_lane_bytes(1, &spikes);
+            let out = batched.step_lanes(&mat, 0b111, &mut layer_spikes, &mut step_stats);
+            let mut lane1 = crate::hdl::SpikePlane::default();
+            out.lane_plane_into(1, &mut lane1);
+            plane.load_bytes(&spikes);
+            let (want_out, want_stats) = single.step_plane(&plane, &mut ls_single);
+            assert_eq!(&lane1, want_out, "t={t}");
+            assert_eq!(step_stats[1], want_stats, "t={t}");
+        }
+        assert_eq!(vec![layer_spikes[1], layer_spikes[lanes + 1]], ls_single);
+    }
+
+    #[test]
+    #[should_panic(expected = "lane batch")]
+    fn run_lanes_rejects_empty_batch() {
+        tiny_core().run_lanes(&[]);
     }
 
     #[test]

@@ -36,6 +36,19 @@
 //! the differential-testing and benchmarking baseline — the
 //! `sparse_parity` suite proves the two paths bit-identical in vmem,
 //! spikes, and activity ledgers across all topologies and Q formats.
+//!
+//! # Lane-batched datapath
+//!
+//! [`Layer::step_lanes`] steps up to 64 *independent samples* per call
+//! over a [`SpikeMatrix`] (one `u64` lane-word per pre-synaptic line): any
+//! line with a nonzero lane-word has its synaptic row fetched **once**
+//! and scattered into every firing lane, so the dominant weight-memory
+//! traffic is amortized across the whole batch — the software counterpart
+//! of QUANTISENC streaming many samples through its layer pipeline while
+//! each synaptic word is read once per spike (§V). Neuron state sits in a
+//! lane-major SoA bank; per-lane activity ledgers and dynamics are
+//! bit-identical to single-sample [`Layer::step_plane`] runs, including
+//! masked-out (finished) lanes of ragged batches.
 
 use crate::config::registers::RegisterFile;
 use crate::config::{LayerConfig, MemKind};
@@ -44,7 +57,7 @@ use crate::fixed::QSpec;
 use super::clock::ActivityStats;
 use super::memory::SynapticMemory;
 use super::neuron::{self, LifNeuron, RegSnapshot};
-use super::spikes::SpikePlane;
+use super::spikes::{SpikeMatrix, SpikePlane};
 
 #[derive(Debug, Clone)]
 pub struct Layer {
@@ -70,6 +83,17 @@ pub struct Layer {
     /// Scratch planes backing the byte-slice adapter API.
     in_scratch: SpikePlane,
     out_scratch: SpikePlane,
+    /// Lane-batched neuron bank, **lane-major** (`lane_vmem[j * lanes +
+    /// l]` is neuron `j`'s membrane in lane `l`) so one neuron's lanes are
+    /// contiguous for [`neuron::step_soa_lanes`]. Allocated on the first
+    /// [`Layer::step_lanes`] call; `lanes == 0` until then.
+    lanes: usize,
+    lane_vmem: Vec<i32>,
+    lane_refcnt: Vec<i32>,
+    /// Lane-major activation registers (`[j * lanes + l]`), with the same
+    /// dirty-flag clear protocol as the single-sample `act` scratch.
+    lane_act: Vec<i32>,
+    lane_act_dirty: bool,
 }
 
 impl Layer {
@@ -92,6 +116,11 @@ impl Layer {
             default_snap: None,
             in_scratch: SpikePlane::default(),
             out_scratch: SpikePlane::default(),
+            lanes: 0,
+            lane_vmem: Vec::new(),
+            lane_refcnt: Vec::new(),
+            lane_act: Vec::new(),
+            lane_act_dirty: false,
         }
     }
 
@@ -137,9 +166,52 @@ impl Layer {
         self.vmem.clone()
     }
 
+    /// Reset every membrane register to rest — the single-sample bank and
+    /// (if allocated) every lane of the lane-batched bank.
     pub fn reset(&mut self) {
         self.vmem.fill(0);
         self.refcnt.fill(0);
+        self.lane_vmem.fill(0);
+        self.lane_refcnt.fill(0);
+    }
+
+    /// Current lane-bank width (0 until the first [`Layer::step_lanes`]).
+    pub fn lane_width(&self) -> usize {
+        self.lanes
+    }
+
+    /// Lane `lane`'s architectural state of neuron `j` (lane-batched bank).
+    pub fn lane_neuron_state(&self, j: usize, lane: usize) -> LifNeuron {
+        assert!(lane < self.lanes, "lane {lane} out of range for {} lanes", self.lanes);
+        LifNeuron {
+            vmem: self.lane_vmem[j * self.lanes + lane],
+            refcnt: self.lane_refcnt[j * self.lanes + lane],
+        }
+    }
+
+    /// Gather lane `lane`'s membrane registers out of the lane-major bank
+    /// (allocating probe view for conformance tests — the lane twin of
+    /// [`Layer::vmem_slice`]).
+    pub fn lane_vmem(&self, lane: usize) -> Vec<i32> {
+        assert!(lane < self.lanes, "lane {lane} out of range for {} lanes", self.lanes);
+        (0..self.mem.n()).map(|j| self.lane_vmem[j * self.lanes + lane]).collect()
+    }
+
+    /// Size the lane-batched bank for `lanes` concurrent samples. Changing
+    /// the width resets all lane state (a new batch geometry cannot
+    /// continue old streams).
+    fn ensure_lanes(&mut self, lanes: usize) {
+        if self.lanes != lanes {
+            let n = self.mem.n();
+            self.lanes = lanes;
+            self.lane_vmem.clear();
+            self.lane_vmem.resize(n * lanes, 0);
+            self.lane_refcnt.clear();
+            self.lane_refcnt.resize(n * lanes, 0);
+            self.lane_act.clear();
+            self.lane_act.resize(n * lanes, 0);
+            self.lane_act_dirty = false;
+        }
     }
 
     /// One spk_clk timestep. `spikes_in` has M entries (0/1);
@@ -292,6 +364,160 @@ impl Layer {
             }
         }
         stats
+    }
+
+    /// One spk_clk timestep for up to 64 independent samples at once — the
+    /// **lane-batched** hot path. `spikes_in` is an M-line
+    /// [`SpikeMatrix`] (bit `l` of line `i`'s word = lane `l` fired line
+    /// `i`); `active` masks the lanes that are still streaming (finished
+    /// lanes keep their state frozen and charge nothing); `step_stats[l]`
+    /// is **overwritten** with lane `l`'s ledger for this step (all-zero
+    /// for inactive lanes).
+    ///
+    /// What makes it fast: each line whose lane-word is nonzero has its
+    /// synaptic row fetched from the topology store **once**
+    /// ([`SynapticMemory::row_slice`]) and each stored weight scattered
+    /// into every firing lane via `trailing_zeros` — weight-memory traffic
+    /// drops from O(spikes × nnz) to O(lines-with-any-spike × nnz), which
+    /// is the software mirror of QUANTISENC amortizing one distributed-
+    /// memory read over a whole pipelined stream batch. Neuron state lives
+    /// in a lane-major SoA bank (`vmem[j·L + l]`) stepped by
+    /// [`neuron::step_soa_lanes`], so every lane is **bit-identical** —
+    /// membrane trace, spikes, and complete activity ledger — to running
+    /// that lane's stream alone through [`Layer::step_plane`] (proven in
+    /// `rust/tests/sparse_parity.rs`, including ragged batches).
+    pub fn step_lanes(
+        &mut self,
+        spikes_in: &SpikeMatrix,
+        spikes_out: &mut SpikeMatrix,
+        regs: &RegisterFile,
+        active: u64,
+        step_stats: &mut [ActivityStats],
+    ) {
+        self.step_lanes_snap(spikes_in, spikes_out, &RegSnapshot::from(regs), active, step_stats)
+    }
+
+    fn step_lanes_snap(
+        &mut self,
+        spikes_in: &SpikeMatrix,
+        spikes_out: &mut SpikeMatrix,
+        snap: &RegSnapshot,
+        active: u64,
+        step_stats: &mut [ActivityStats],
+    ) {
+        assert_eq!(spikes_in.lines(), self.mem.m(), "fan-in mismatch");
+        let lanes = spikes_in.lanes();
+        assert!((1..=64).contains(&lanes), "lane width {lanes} out of range");
+        assert_eq!(step_stats.len(), lanes, "per-lane stats arity");
+        assert_eq!(active & !spikes_in.lane_mask(), 0, "active mask wider than the matrix");
+        self.ensure_lanes(lanes);
+        let m = self.mem.m();
+        let n = self.mem.n();
+        let total_words = *self.row_words_prefix.last().unwrap();
+
+        // --- ActGen, lane-batched: every line with any firing lane has its
+        // row read once and scattered. Per lane the accumulated multiset of
+        // weights equals the single-sample walk's (wrapping add is
+        // commutative), and skipping stored zeros is the identity — the
+        // ledger still charges the full α=1 row per firing lane.
+        if self.lane_act_dirty {
+            self.lane_act.fill(0);
+            self.lane_act_dirty = false;
+        }
+        let mut syn = [0u64; 64];
+        let mut any_syn = false;
+        let (mut touched_lo, mut touched_hi) = (usize::MAX, 0usize);
+        for (i, &word) in spikes_in.words().iter().enumerate() {
+            let fired = word & active;
+            if fired == 0 {
+                continue;
+            }
+            let (lo, row) = self.mem.row_slice(i);
+            if row.is_empty() {
+                continue;
+            }
+            any_syn = true;
+            touched_lo = touched_lo.min(lo);
+            touched_hi = touched_hi.max(lo + row.len());
+            let nnz = row.len() as u64;
+            let mut bits = fired;
+            while bits != 0 {
+                syn[bits.trailing_zeros() as usize] += nnz;
+                bits &= bits - 1;
+            }
+            for (k, &wt) in row.iter().enumerate() {
+                if wt == 0 {
+                    continue;
+                }
+                let base = (lo + k) * lanes;
+                let mut bits = fired;
+                while bits != 0 {
+                    let l = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    let a = &mut self.lane_act[base + l];
+                    *a = a.wrapping_add(wt);
+                }
+            }
+        }
+        if any_syn {
+            self.lane_act_dirty = true;
+            // Wrap only the touched column span × all lanes: untouched
+            // registers are zero and wrap(0) == 0, exactly as on the
+            // single-sample packed path.
+            if self.qspec.width() < 32 {
+                for a in &mut self.lane_act[touched_lo * lanes..touched_hi * lanes] {
+                    *a = self.qspec.wrap(*a as i64);
+                }
+            }
+        }
+
+        // --- Per-lane ledger: identical to what L separate single-sample
+        // steps would charge (active lanes only).
+        for (l, st) in step_stats.iter_mut().enumerate() {
+            *st = if (active >> l) & 1 == 1 {
+                ActivityStats {
+                    spk_steps: 1,
+                    mem_cycles: m as u64,
+                    synaptic_ops: syn[l],
+                    gated_ops: total_words - syn[l],
+                    neuron_updates: n as u64,
+                    ..Default::default()
+                }
+            } else {
+                ActivityStats::default()
+            };
+        }
+
+        // --- Neuron updates over the lane-major SoA bank, one neuron's
+        // lanes at a time (quiescence fast path applied per lane inside
+        // step_soa_lanes).
+        let hold = neuron::quiescent_hold_range(snap, self.qspec);
+        spikes_out.resize_clear(n, lanes);
+        for j in 0..n {
+            let base = j * lanes;
+            let out = neuron::step_soa_lanes(
+                &mut self.lane_vmem[base..base + lanes],
+                &mut self.lane_refcnt[base..base + lanes],
+                &self.lane_act[base..base + lanes],
+                active,
+                hold,
+                snap,
+                self.qspec,
+            );
+            if out.spikes != 0 {
+                spikes_out.set_line_word(j, out.spikes);
+                let mut bits = out.spikes;
+                while bits != 0 {
+                    step_stats[bits.trailing_zeros() as usize].spikes += 1;
+                    bits &= bits - 1;
+                }
+            }
+            let mut bits = out.toggles;
+            while bits != 0 {
+                step_stats[bits.trailing_zeros() as usize].vmem_toggles += 1;
+                bits &= bits - 1;
+            }
+        }
     }
 
     /// The dense scalar reference datapath: branch over all M byte lanes,
@@ -495,6 +721,89 @@ mod tests {
             assert_eq!(mixed.vmem_slice(), scalar.vmem_slice(), "t={t}");
             assert_eq!(stats, ref_stats, "t={t}");
         }
+    }
+
+    #[test]
+    fn lane_step_matches_per_lane_plane_twins() {
+        // 5 lanes with distinct spike streams on one lane-batched layer vs
+        // 5 single-sample packed twins: every lane's spikes, vmem trace,
+        // and per-step ledger must be bit-identical, with lane 3 finishing
+        // early (masked out) and lane 1 all-silent.
+        use crate::hdl::spikes::SpikeMatrix;
+        let (m, n, lanes) = (12usize, 9usize, 5usize);
+        let cfg = LayerConfig { fan_in: m, neurons: n, topology: Topology::AllToAll };
+        let weights: Vec<i32> = (0..m * n).map(|k| (k as i32 % 15) - 7).collect();
+        let mut batched = Layer::new(&cfg, Q5_3, MemKind::Bram);
+        batched.memory_mut().load_dense(&weights).unwrap();
+        let mut twins: Vec<Layer> = (0..lanes)
+            .map(|_| {
+                let mut l = Layer::new(&cfg, Q5_3, MemKind::Bram);
+                l.memory_mut().load_dense(&weights).unwrap();
+                l
+            })
+            .collect();
+        let regs = RegisterFile::new(Q5_3);
+        let lens = [30usize, 30, 30, 11, 24]; // ragged stream lengths
+        let mut mat_in = SpikeMatrix::default();
+        let mut mat_out = SpikeMatrix::default();
+        let mut plane_in = SpikePlane::default();
+        let mut plane_out = SpikePlane::default();
+        let mut stats = vec![ActivityStats::default(); lanes];
+        for t in 0..30usize {
+            mat_in.resize_clear(m, lanes);
+            let mut active = 0u64;
+            let mut streams: Vec<Vec<u8>> = Vec::new();
+            for (l, &len) in lens.iter().enumerate() {
+                let spikes: Vec<u8> = (0..m)
+                    .map(|i| (l != 1 && (t * 5 + i * 3 + l * 7) % 4 == 0) as u8)
+                    .collect();
+                if t < len {
+                    mat_in.load_lane_bytes(l, &spikes);
+                    active |= 1 << l;
+                }
+                streams.push(spikes);
+            }
+            batched.step_lanes(&mat_in, &mut mat_out, &regs, active, &mut stats);
+            assert_eq!((mat_out.lines(), mat_out.lanes()), (n, lanes), "t={t}");
+            for (l, twin) in twins.iter_mut().enumerate() {
+                if t >= lens[l] {
+                    assert_eq!(stats[l], ActivityStats::default(), "t={t} masked lane {l}");
+                    continue;
+                }
+                plane_in.load_bytes(&streams[l]);
+                let want = twin.step_plane(&plane_in, &mut plane_out, &regs);
+                mat_out.lane_plane_into(l, &mut plane_in); // reuse as gather buf
+                assert_eq!(plane_in, plane_out, "t={t} lane {l} spikes");
+                assert_eq!(batched.lane_vmem(l), twin.vmem_slice(), "t={t} lane {l} vmem");
+                assert_eq!(stats[l], want, "t={t} lane {l} ledger");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_reset_and_width_switch_clear_state() {
+        use crate::hdl::spikes::SpikeMatrix;
+        let mut l = layer(4, 3);
+        l.memory_mut().write(0, 0, 9).unwrap();
+        let regs = RegisterFile::new(Q5_3);
+        let mut mat_in = SpikeMatrix::new(4, 2);
+        mat_in.set(0, 0);
+        mat_in.set(0, 1);
+        let mut mat_out = SpikeMatrix::default();
+        let mut stats = vec![ActivityStats::default(); 2];
+        l.step_lanes(&mat_in, &mut mat_out, &regs, 0b11, &mut stats);
+        assert_eq!(l.lane_width(), 2);
+        assert_ne!(l.lane_vmem(0), vec![0; 3]);
+        assert_eq!(l.lane_vmem(0), l.lane_vmem(1));
+        assert_eq!(l.lane_neuron_state(0, 0).vmem, l.lane_vmem(0)[0]);
+        l.reset();
+        assert_eq!(l.lane_vmem(0), vec![0; 3]);
+        // A different lane width reallocates a fresh (zero) bank.
+        let mat3 = SpikeMatrix::new(4, 3);
+        let mut stats3 = vec![ActivityStats::default(); 3];
+        l.step_lanes(&mat3, &mut mat_out, &regs, 0b111, &mut stats3);
+        assert_eq!(l.lane_width(), 3);
+        assert_eq!(l.lane_vmem(2), vec![0; 3]);
     }
 
     #[test]

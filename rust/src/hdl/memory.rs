@@ -286,15 +286,38 @@ impl SynapticMemory {
         Ok(self.slot(pre, post).map_or(0, |s| self.words()[s]))
     }
 
+    /// Row `pre`'s stored window as `(first column, weight words)` —
+    /// zero-copy. This is the **one weight fetch per row** of the
+    /// lane-batched ActGen ([`crate::hdl::Layer::step_lanes`]): the slice
+    /// is read once and scattered into every active lane, so weight-memory
+    /// traffic is amortized across the whole batch.
+    #[inline]
+    pub fn row_slice(&self, pre: usize) -> (usize, &[i32]) {
+        let (lo, range) = self.row_range(pre);
+        (lo, &self.words()[range])
+    }
+
     /// One full row (all N post-synaptic weights of pre-neuron `pre`),
     /// materialized on demand with zeros at pruned positions — the dense
     /// view artifacts and inspection tools expect.
     pub fn row(&self, pre: usize) -> Vec<i32> {
-        assert!(pre < self.m, "row {pre} out of range for {} rows", self.m);
-        let mut out = vec![0i32; self.n];
-        let (lo, range) = self.row_range(pre);
-        out[lo..lo + range.len()].copy_from_slice(&self.words()[range]);
+        let mut out = Vec::new();
+        self.row_into(pre, &mut out);
         out
+    }
+
+    /// As [`SynapticMemory::row`], but materializing into `buf` (cleared
+    /// and resized to N) so repeated callers — row sweeps, [`dense`] —
+    /// reuse one scratch allocation instead of building a fresh `Vec` per
+    /// row.
+    ///
+    /// [`dense`]: SynapticMemory::dense
+    pub fn row_into(&self, pre: usize, buf: &mut Vec<i32>) {
+        assert!(pre < self.m, "row {pre} out of range for {} rows", self.m);
+        buf.clear();
+        buf.resize(self.n, 0);
+        let (lo, range) = self.row_range(pre);
+        buf[lo..lo + range.len()].copy_from_slice(&self.words()[range]);
     }
 
     /// Iterate row `pre`'s stored `(post, weight)` pairs — the O(row nnz)
@@ -391,7 +414,10 @@ impl SynapticMemory {
     }
 
     /// The full dense `[M × N]` matrix, materialized on demand with zeros
-    /// at pruned positions — what the artifact writers serialize.
+    /// at pruned positions — what the artifact writers serialize. One
+    /// output allocation; each row's stored window is copied straight into
+    /// place (row sweeps that want a per-row view should reuse a scratch
+    /// buffer via [`SynapticMemory::row_into`] instead).
     pub fn dense(&self) -> Vec<i32> {
         let mut out = vec![0i32; self.m * self.n];
         for i in 0..self.m {
@@ -454,6 +480,26 @@ mod tests {
         m.write(1, 0, 3).unwrap();
         m.write(1, 2, -4).unwrap();
         assert_eq!(m.row(1), vec![3, 0, -4]);
+    }
+
+    #[test]
+    fn row_into_reuses_buffer_and_matches_row() {
+        // One scratch buffer swept over every row of every topology must
+        // reproduce row() exactly, including stale-content overwrite.
+        for topo in [Topology::AllToAll, Topology::OneToOne, Topology::Gaussian { radius: 1 }] {
+            let mut m = SynapticMemory::new(6, 6, topo, Q5_3, MemKind::Bram);
+            let payload: Vec<i32> = (0..m.synapses()).map(|k| (k as i32 % 7) - 3).collect();
+            m.load_packed(&payload).unwrap();
+            let mut buf = vec![99i32; 40]; // stale, oversized
+            for pre in 0..6 {
+                m.row_into(pre, &mut buf);
+                assert_eq!(buf, m.row(pre), "{topo:?} row {pre}");
+                // And the zero-copy window agrees with the dense row.
+                let (lo, w) = m.row_slice(pre);
+                assert_eq!(&buf[lo..lo + w.len()], w, "{topo:?} row {pre} window");
+                assert!(buf[..lo].iter().chain(&buf[lo + w.len()..]).all(|&x| x == 0));
+            }
+        }
     }
 
     #[test]

@@ -20,7 +20,8 @@
 //!   step runs the layers in dataflow order.
 //! * [`aer`] — address-event-representation encoding of spike I/O.
 //! * [`spikes`] — bit-packed [`SpikePlane`] spike vectors (the event-driven
-//!   hot-path wire format) and the recycled-buffer [`PlanePool`].
+//!   hot-path wire format), their 64-sample lane-batched transpose
+//!   [`SpikeMatrix`], and the recycled-buffer [`PlanePool`]/[`MatrixPool`].
 //! * [`clock`] — clock-domain bookkeeping and activity statistics that feed
 //!   the power model.
 
@@ -39,4 +40,4 @@ pub use clock::ActivityStats;
 pub use layer::Layer;
 pub use memory::SynapticMemory;
 pub use neuron::LifNeuron;
-pub use spikes::{PlanePool, SpikePlane};
+pub use spikes::{MatrixPool, PlanePool, SpikeMatrix, SpikePlane};

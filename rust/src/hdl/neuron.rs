@@ -132,6 +132,67 @@ pub fn step_soa(
     StepOut { spike, vmem_toggled: *vmem != old_vmem }
 }
 
+/// Per-lane outcome of one neuron's lane-batched step: bit `l` of each
+/// word refers to lane `l` (mirroring the [`crate::hdl::SpikeMatrix`]
+/// lane-word layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LaneStepOut {
+    /// Lanes in which this neuron spiked.
+    pub spikes: u64,
+    /// Lanes in which the vmem register toggled.
+    pub toggles: u64,
+}
+
+/// One spk_clk edge for a single neuron across up to 64 independent lanes
+/// (samples): `vmem`/`refcnt`/`act` are the neuron's lane-major slices
+/// (`slice[l]` = lane `l`'s register), and only lanes set in `active` are
+/// evaluated — masked-out lanes (finished streams) keep their state
+/// untouched and charge nothing. Each active lane runs the exact
+/// [`step_soa`] datapath, with the same quiescence fast path the packed
+/// single-sample hot loop uses (`hold` is the precomputed
+/// [`quiescent_hold_range`]; the skip is re-checked against the full
+/// datapath in debug builds), so every lane is bit-identical to a
+/// single-sample run by construction.
+#[inline]
+pub fn step_soa_lanes(
+    vmem: &mut [i32],
+    refcnt: &mut [i32],
+    act: &[i32],
+    active: u64,
+    hold: (i32, i32),
+    regs: &RegSnapshot,
+    qspec: QSpec,
+) -> LaneStepOut {
+    let mut out = LaneStepOut::default();
+    let mut bits = active;
+    while bits != 0 {
+        let l = bits.trailing_zeros() as usize;
+        bits &= bits - 1;
+        let a = act[l];
+        if a == 0 && refcnt[l] == 0 && vmem[l] >= hold.0 && vmem[l] <= hold.1 {
+            #[cfg(debug_assertions)]
+            {
+                let (mut v2, mut r2) = (vmem[l], refcnt[l]);
+                let o = step_soa(&mut v2, &mut r2, a, regs, qspec);
+                debug_assert!(
+                    !o.spike && !o.vmem_toggled && v2 == vmem[l] && r2 == 0,
+                    "lane quiescence fast path diverged at lane {l} (vmem {})",
+                    vmem[l]
+                );
+            }
+            continue;
+        }
+        let o = step_soa(&mut vmem[l], &mut refcnt[l], a, regs, qspec);
+        if o.spike {
+            out.spikes |= 1 << l;
+        }
+        if o.vmem_toggled {
+            out.toggles |= 1 << l;
+        }
+    }
+    out
+}
+
 /// Inclusive `vmem` range `[lo, hi]` inside which a neuron with `act == 0`
 /// and `refcnt == 0` is **provably inert** for one step: the full datapath
 /// would leave `vmem` unchanged, emit no spike, and toggle no register.
@@ -352,6 +413,70 @@ mod tests {
         let snap = RegSnapshot { vth: i32::MIN, ..snap };
         let (lo, hi) = quiescent_hold_range(&snap, qs);
         assert!(lo > hi, "vth == i32::MIN must yield an empty hold range");
+    }
+
+    #[test]
+    fn step_soa_lanes_matches_per_lane_step_soa() {
+        // 64 lanes with distinct (vmem, refcnt, act) states: the lane-word
+        // step must equal calling step_soa independently per lane, and
+        // masked-out lanes must be left byte-identical.
+        let qs = Q5_3;
+        let snap = RegSnapshot {
+            decay: qs.from_float(0.2),
+            growth: qs.from_float(1.0),
+            vth: qs.from_float(1.0),
+            vreset: 0,
+            mode: ResetMode::BySubtraction,
+            refractory: 2,
+        };
+        let hold = quiescent_hold_range(&snap, qs);
+        let lanes = 64usize;
+        let mut vmem: Vec<i32> = (0..lanes).map(|l| (l as i32 * 5) % 40 - 10).collect();
+        let mut refcnt: Vec<i32> = (0..lanes).map(|l| (l as i32) % 3).collect();
+        let act: Vec<i32> = (0..lanes).map(|l| ((l as i32 * 7) % 30) - 6).collect();
+        let active: u64 = 0xF0F0_F0F0_F0F0_F0F3;
+        let (v0, r0) = (vmem.clone(), refcnt.clone());
+
+        let mut want_spikes = 0u64;
+        let mut want_toggles = 0u64;
+        let mut want_v = v0.clone();
+        let mut want_r = r0.clone();
+        for l in 0..lanes {
+            if (active >> l) & 1 == 0 {
+                continue;
+            }
+            let o = step_soa(&mut want_v[l], &mut want_r[l], act[l], &snap, qs);
+            if o.spike {
+                want_spikes |= 1 << l;
+            }
+            if o.vmem_toggled {
+                want_toggles |= 1 << l;
+            }
+        }
+
+        let out = step_soa_lanes(&mut vmem, &mut refcnt, &act, active, hold, &snap, qs);
+        assert_eq!(out.spikes, want_spikes);
+        assert_eq!(out.toggles, want_toggles);
+        assert_eq!(vmem, want_v);
+        assert_eq!(refcnt, want_r);
+        for l in 0..lanes {
+            if (active >> l) & 1 == 0 {
+                assert_eq!((vmem[l], refcnt[l]), (v0[l], r0[l]), "masked lane {l} mutated");
+            }
+        }
+    }
+
+    #[test]
+    fn step_soa_lanes_inactive_mask_is_inert() {
+        let qs = Q5_3;
+        let snap = RegSnapshot::from(&regs(qs));
+        let hold = quiescent_hold_range(&snap, qs);
+        let mut vmem = vec![30i32; 4];
+        let mut refcnt = vec![0i32; 4];
+        let act = vec![qs.from_float(2.0); 4];
+        let out = step_soa_lanes(&mut vmem, &mut refcnt, &act, 0, hold, &snap, qs);
+        assert_eq!(out, LaneStepOut::default());
+        assert_eq!(vmem, vec![30; 4]);
     }
 
     #[test]

@@ -22,6 +22,23 @@
 //! Invariant: bits at positions `>= len` are always zero, so derived
 //! equality, [`SpikePlane::count_ones`], and word-level consumers never see
 //! ghost spikes in the tail word.
+//!
+//! # Lane batching
+//!
+//! [`SpikeMatrix`] is the transpose of up to 64 pooled planes: one `u64`
+//! **lane-word per pre-synaptic line**, bit `l` of line `i`'s word saying
+//! "sample (lane) `l` fired line `i` this timestep". This is the wire
+//! format of the lane-batched datapath
+//! ([`crate::hdl::Layer::step_lanes`]): walking the lines whose lane-word
+//! is nonzero lets the ActGen fetch each synaptic row from the topology
+//! store **once** and scatter it into every active lane via
+//! `trailing_zeros`, amortizing weight-memory traffic across the whole
+//! batch — the software analogue of QUANTISENC streaming many samples
+//! through one synaptic memory read port. [`MatrixPool`] mirrors
+//! [`PlanePool`] for the batched serving path's recycled buffers.
+//!
+//! Invariant (mirroring the plane tail rule): bits at lane positions
+//! `>= lanes` are zero in every line word.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -174,6 +191,203 @@ impl Iterator for Ones<'_> {
     }
 }
 
+/// One timestep's spikes for up to 64 concurrent samples: a transposed
+/// stack of [`SpikePlane`]s with one `u64` **lane-word per line** (bit `l`
+/// of line `i`'s word = lane `l` fired line `i`). See the module docs for
+/// why this layout amortizes synaptic-row fetches across the batch.
+///
+/// Invariant: bits at lane positions `>= lanes` are zero in every word.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SpikeMatrix {
+    /// `words[i]` is line `i`'s lane-word.
+    words: Vec<u64>,
+    lines: usize,
+    lanes: usize,
+}
+
+impl SpikeMatrix {
+    /// An all-zero matrix of `lines` lines × `lanes` lanes (`lanes` ≤ 64).
+    pub fn new(lines: usize, lanes: usize) -> SpikeMatrix {
+        let mut m = SpikeMatrix::default();
+        m.resize_clear(lines, lanes);
+        m
+    }
+
+    /// An empty matrix whose word storage can hold `lines` lines without
+    /// reallocating — what pools pre-fill with.
+    pub fn with_line_capacity(lines: usize) -> SpikeMatrix {
+        SpikeMatrix { words: Vec::with_capacity(lines), lines: 0, lanes: 0 }
+    }
+
+    pub fn lines(&self) -> usize {
+        self.lines
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Mask with one bit set per lane (`lanes` low bits).
+    #[inline]
+    pub fn lane_mask(&self) -> u64 {
+        lane_mask(self.lanes)
+    }
+
+    /// Set the matrix to `lines` all-zero lines of `lanes` lanes, reusing
+    /// the word allocation (no allocation once the matrix has seen this
+    /// line count).
+    pub fn resize_clear(&mut self, lines: usize, lanes: usize) {
+        assert!(lanes <= 64, "lane width {lanes} exceeds the 64-bit lane word");
+        self.words.clear();
+        self.words.resize(lines, 0);
+        self.lines = lines;
+        self.lanes = lanes;
+    }
+
+    /// The per-line lane-words (tail lane bits are zero by invariant).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Line `i`'s lane-word.
+    #[inline]
+    pub fn line_word(&self, i: usize) -> u64 {
+        self.words[i]
+    }
+
+    /// Overwrite line `i`'s lane-word (bits `>= lanes` must be clear).
+    #[inline]
+    pub fn set_line_word(&mut self, i: usize, word: u64) {
+        debug_assert_eq!(word & !self.lane_mask(), 0, "ghost lane bits in line {i}");
+        self.words[i] = word;
+    }
+
+    /// Mark (line, lane) as firing.
+    #[inline]
+    pub fn set(&mut self, line: usize, lane: usize) {
+        assert!(line < self.lines && lane < self.lanes, "({line},{lane}) out of range");
+        self.words[line] |= 1u64 << lane;
+    }
+
+    /// Whether (line, lane) fired.
+    #[inline]
+    pub fn get(&self, line: usize, lane: usize) -> bool {
+        assert!(line < self.lines && lane < self.lanes, "({line},{lane}) out of range");
+        (self.words[line] >> lane) & 1 == 1
+    }
+
+    /// Total spikes across all lines and lanes.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Transpose one plane into lane `lane` (OR-in; the matrix must have
+    /// been `resize_clear`ed to this plane's length first).
+    pub fn set_lane_from_plane(&mut self, lane: usize, plane: &SpikePlane) {
+        assert!(lane < self.lanes, "lane {lane} out of range for {} lanes", self.lanes);
+        assert_eq!(plane.len(), self.lines, "plane length != matrix lines");
+        let bit = 1u64 << lane;
+        for i in plane.iter_ones() {
+            self.words[i] |= bit;
+        }
+    }
+
+    /// Pack a dense byte vector (any non-zero byte = spike) into lane
+    /// `lane` (OR-in) — the serving feeder's zero-copy lane encoder.
+    pub fn load_lane_bytes(&mut self, lane: usize, bytes: &[u8]) {
+        assert!(lane < self.lanes, "lane {lane} out of range for {} lanes", self.lanes);
+        assert_eq!(bytes.len(), self.lines, "byte length != matrix lines");
+        let bit = 1u64 << lane;
+        for (w, &b) in self.words.iter_mut().zip(bytes) {
+            if b != 0 {
+                *w |= bit;
+            }
+        }
+    }
+
+    /// Gather lane `lane` back out as a bit-packed plane (the demux
+    /// inverse of [`SpikeMatrix::set_lane_from_plane`]), reusing `out`'s
+    /// allocation.
+    pub fn lane_plane_into(&self, lane: usize, out: &mut SpikePlane) {
+        assert!(lane < self.lanes, "lane {lane} out of range for {} lanes", self.lanes);
+        out.resize_clear(self.lines);
+        for (i, &w) in self.words.iter().enumerate() {
+            if (w >> lane) & 1 == 1 {
+                out.set(i);
+            }
+        }
+    }
+
+    /// Become a copy of `other`, reusing this matrix's word allocation.
+    pub fn copy_from(&mut self, other: &SpikeMatrix) {
+        self.words.clear();
+        self.words.extend_from_slice(&other.words);
+        self.lines = other.lines;
+        self.lanes = other.lanes;
+    }
+}
+
+/// Mask with the `lanes` low bits set.
+#[inline]
+pub const fn lane_mask(lanes: usize) -> u64 {
+    if lanes >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+
+/// Thread-safe free-list of recycled [`SpikeMatrix`] buffers — the
+/// lane-batched serving path's mirror of [`PlanePool`], with the same
+/// pre-fill / zero-steady-state-allocation contract (each dry-pool
+/// fallback allocation is counted in [`MatrixPool::misses`]).
+#[derive(Debug, Default)]
+pub struct MatrixPool {
+    free: Mutex<Vec<SpikeMatrix>>,
+    misses: AtomicU64,
+}
+
+impl MatrixPool {
+    /// An empty pool: every `take` until the first `put` is a (counted)
+    /// allocation.
+    pub fn new() -> MatrixPool {
+        MatrixPool::default()
+    }
+
+    /// A pool pre-filled with `count` matrices whose word storage already
+    /// covers `line_capacity` lines.
+    pub fn prefilled(count: usize, line_capacity: usize) -> MatrixPool {
+        let free = (0..count).map(|_| SpikeMatrix::with_line_capacity(line_capacity)).collect();
+        MatrixPool { free: Mutex::new(free), misses: AtomicU64::new(0) }
+    }
+
+    /// Pop a recycled matrix, or allocate (and count a miss) if the pool
+    /// is dry. The returned matrix has unspecified contents —
+    /// `resize_clear` it before use.
+    pub fn take(&self) -> SpikeMatrix {
+        if let Some(m) = self.free.lock().unwrap().pop() {
+            return m;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        SpikeMatrix::default()
+    }
+
+    /// Return a matrix to the free list.
+    pub fn put(&self, matrix: SpikeMatrix) {
+        self.free.lock().unwrap().push(matrix);
+    }
+
+    /// Matrices currently resting in the free list.
+    pub fn available(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// Times `take` found the pool dry and had to allocate.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
 /// Thread-safe free-list of recycled [`SpikePlane`] buffers.
 ///
 /// The serving engine pre-fills one pool per engine with enough planes to
@@ -288,6 +502,102 @@ mod tests {
         let mut b = SpikePlane::from_bytes(&vec![1u8; 90]);
         b.copy_from(&a);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn matrix_set_get_and_lane_words() {
+        let mut m = SpikeMatrix::new(5, 3);
+        assert_eq!((m.lines(), m.lanes()), (5, 3));
+        assert_eq!(m.lane_mask(), 0b111);
+        m.set(0, 0);
+        m.set(0, 2);
+        m.set(4, 1);
+        assert_eq!(m.line_word(0), 0b101);
+        assert_eq!(m.line_word(4), 0b010);
+        assert!(m.get(0, 2) && !m.get(0, 1));
+        assert_eq!(m.count_ones(), 3);
+        assert_eq!(lane_mask(64), u64::MAX);
+        assert_eq!(lane_mask(1), 1);
+    }
+
+    #[test]
+    fn matrix_transposes_planes_and_demuxes_back() {
+        // L planes in, transpose to lane-words, gather each lane back out:
+        // a lossless round-trip including the 64-lane full-word case.
+        for lanes in [1usize, 3, 64] {
+            let lines = 130;
+            let planes: Vec<SpikePlane> = (0..lanes)
+                .map(|l| {
+                    let bytes: Vec<u8> =
+                        (0..lines).map(|i| ((i * 7 + l * 13) % 5 == 0) as u8).collect();
+                    SpikePlane::from_bytes(&bytes)
+                })
+                .collect();
+            let mut m = SpikeMatrix::new(lines, lanes);
+            for (l, p) in planes.iter().enumerate() {
+                m.set_lane_from_plane(l, p);
+            }
+            let total: usize = planes.iter().map(|p| p.count_ones()).sum();
+            assert_eq!(m.count_ones(), total, "lanes={lanes}");
+            let mut back = SpikePlane::default();
+            for (l, p) in planes.iter().enumerate() {
+                m.lane_plane_into(l, &mut back);
+                assert_eq!(&back, p, "lane {l} of {lanes}");
+            }
+            // Per-line words agree with a bit-by-bit gather.
+            for i in 0..lines {
+                let mut want = 0u64;
+                for (l, p) in planes.iter().enumerate() {
+                    want |= (p.get(i) as u64) << l;
+                }
+                assert_eq!(m.line_word(i), want, "line {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_recycle_clears_previous_contents() {
+        let mut m = SpikeMatrix::new(100, 64);
+        for i in 0..100 {
+            m.set_line_word(i, u64::MAX);
+        }
+        m.resize_clear(40, 5);
+        assert_eq!((m.lines(), m.lanes()), (40, 5));
+        assert_eq!(m.count_ones(), 0);
+        m.load_lane_bytes(4, &[1; 40]);
+        assert_eq!(m.count_ones(), 40);
+        assert_eq!(m.line_word(0), 0b10000);
+    }
+
+    #[test]
+    fn matrix_copy_from_matches_clone() {
+        let mut a = SpikeMatrix::new(9, 7);
+        a.set(3, 2);
+        a.set(8, 6);
+        let mut b = SpikeMatrix::new(200, 64);
+        b.copy_from(&a);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn matrix_rejects_out_of_range_lane() {
+        let mut m = SpikeMatrix::new(4, 2);
+        m.set(0, 2);
+    }
+
+    #[test]
+    fn matrix_pool_recycles_and_counts_misses() {
+        let pool = MatrixPool::prefilled(1, 256);
+        let a = pool.take();
+        assert_eq!(pool.misses(), 0);
+        let b = pool.take(); // dry: allocates
+        assert_eq!(pool.misses(), 1);
+        pool.put(a);
+        pool.put(b);
+        assert_eq!(pool.available(), 2);
+        let _ = pool.take();
+        assert_eq!(pool.misses(), 1);
     }
 
     #[test]

@@ -15,7 +15,8 @@
 //! ```
 //!
 //! `serve` options: `--dataset smnist|dvs|shd` `--q Q5.3` `--n <samples>`
-//! `--cores <C>` `--pipeline` `--multicore` `--pjrt` (needs `--features pjrt`).
+//! `--cores <C>` `--lanes <L>` (1..=64 samples per shard message)
+//! `--pipeline` `--multicore` `--pjrt` (needs `--features pjrt`).
 
 use anyhow::{Context, Result};
 use std::time::Instant;
@@ -184,7 +185,9 @@ fn dispatch(args: &[String]) -> Result<()> {
 /// required keys present, and the acceptance thresholds met — ≥ 5× fewer
 /// synaptic ops for the Gaussian-r1 topology report, ≥ 3× layer-step
 /// speedup at N=400 / 2% firing plus positive engine throughput for the
-/// event-driven hot-path report.
+/// event-driven hot-path report, and ≥ 2× serving samples/s at lane width
+/// 64 vs 1 (gaussian-r1 N=400, zero pool misses) for the lane-batched
+/// report.
 fn bench_check(path: &str) -> Result<()> {
     use quantisenc::util::json::Json;
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
@@ -240,6 +243,44 @@ fn bench_check(path: &str) -> Result<()> {
                 by_cores.len()
             );
         }
+        "batched" => {
+            let speedup = json
+                .req("speedup_lane64_over_lane1")?
+                .as_f64()
+                .context("batched speedup must be numeric")?;
+            // Wall-clock gate on the lane-batched serving path: lane width
+            // 64 must serve ≥ 2× the samples/s of lane width 1 on the
+            // gaussian-r1 N=400 case. BENCH_GATE_MIN_BATCH_SPEEDUP
+            // overrides it for heavily contended runners.
+            let min_speedup = std::env::var("BENCH_GATE_MIN_BATCH_SPEEDUP")
+                .ok()
+                .and_then(|v| v.parse::<f64>().ok())
+                .unwrap_or(2.0);
+            anyhow::ensure!(
+                speedup >= min_speedup,
+                "{path}: lane-64 serving speedup {speedup:.2}x below the \
+                 {min_speedup}x gate (gaussian r1, N=400)"
+            );
+            let misses = json
+                .req("matrix_pool_misses")?
+                .as_f64()
+                .context("matrix_pool_misses numeric")?;
+            anyhow::ensure!(
+                misses == 0.0,
+                "{path}: lane-batched streaming allocated {misses} matrices (pool must not miss)"
+            );
+            let lanes = json.req("by_lane_width")?.as_arr().context("by_lane_width array")?;
+            anyhow::ensure!(!lanes.is_empty(), "{path}: empty by_lane_width");
+            for c in lanes {
+                let sps = c.req("samples_per_s")?.as_f64().context("samples_per_s numeric")?;
+                anyhow::ensure!(sps > 0.0, "{path}: non-positive batched throughput");
+            }
+            println!(
+                "{path}: OK (lane-64 serving speedup {speedup:.1}x over {} lane widths, \
+                 zero pool misses)",
+                lanes.len()
+            );
+        }
         other => anyhow::bail!("{path}: unknown bench report kind {other:?}"),
     }
     Ok(())
@@ -250,7 +291,8 @@ const HELP: &str = "repro — QUANTISENC reproduction CLI
   table <id>      regenerate a paper table (4,5,6,7,8,9,10,11,12,g)
   figure <id>     regenerate a paper figure (3,4,10,12,13,14)
   all             everything, in paper order
-  serve           batched inference service (ServingEngine; --pipeline /
+  serve           batched inference service (ServingEngine; --lanes <L> for
+                  the 64-sample lane-batched datapath, --pipeline /
                   --multicore for the legacy paths, --pjrt with the feature)
   explore <arch>  DSE estimate, e.g. repro explore 256x512x10 Q5.3
   codegen <arch>  emit Verilog HDL + self-checking SV testbench (paper §IV)
@@ -266,9 +308,15 @@ fn serve(args: &[String]) -> Result<()> {
     let qname = flag_val(args, "--q").unwrap_or("Q5.3");
     let n: u64 = flag_val(args, "--n").unwrap_or("100").parse()?;
     let cores: usize = flag_val(args, "--cores").unwrap_or("2").parse()?;
+    let lanes: usize = flag_val(args, "--lanes").unwrap_or("1").parse()?;
     let use_pipeline = args.iter().any(|a| a == "--pipeline");
     let use_multicore = args.iter().any(|a| a == "--multicore" || a == "--hdl");
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
+    anyhow::ensure!(
+        lanes <= 1 || !(use_pipeline || use_multicore || use_pjrt),
+        "--lanes is a ServingEngine knob; it does nothing on the \
+         --pipeline/--multicore/--pjrt backends — drop one of the flags"
+    );
     let dataset = Dataset::parse(ds_name).context("bad --dataset")?;
 
     let m = manifest()?;
@@ -340,13 +388,14 @@ fn serve(args: &[String]) -> Result<()> {
         return Ok(());
     }
 
-    // Default: the unified ServingEngine (C sharded cores × pipelined layers).
+    // Default: the unified ServingEngine (C sharded cores × pipelined
+    // layers, optionally stepping `--lanes` samples per shard message).
     let (config, core) = experiments::core_from_artifact(&art)?;
     let mut engine = ServingEngine::new(
         &config,
         &art.weights,
         &core.registers,
-        ServingOptions::with_cores(cores),
+        ServingOptions::with_lanes(cores, lanes),
     )?;
     let samples: Vec<_> = (0..n).map(|i| dataset.sample(i, Split::Test, art.t_steps)).collect();
     let mut tel = Telemetry::new();

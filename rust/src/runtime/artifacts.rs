@@ -43,6 +43,10 @@ pub enum ArtifactsError {
     Unreadable { path: PathBuf, detail: String },
     /// `manifest.json` exists but is not valid JSON.
     Corrupt { path: PathBuf, detail: String },
+    /// An artifact path is not valid UTF-8 but a consumer (the XLA text
+    /// loader) requires a `&str` path — surfaced as a typed error instead
+    /// of a `to_str().unwrap()` panic.
+    NonUtf8Path { path: PathBuf },
 }
 
 impl std::fmt::Display for ArtifactsError {
@@ -59,6 +63,9 @@ impl std::fmt::Display for ArtifactsError {
             }
             ArtifactsError::Corrupt { path, detail } => {
                 write!(f, "artifacts corrupt: {} does not parse: {detail}", path.display())
+            }
+            ArtifactsError::NonUtf8Path { path } => {
+                write!(f, "artifact path {} is not valid UTF-8", path.display())
             }
         }
     }

@@ -41,7 +41,12 @@ mod pjrt_runtime {
 
         /// Load + compile an HLO text file.
         pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            // The XLA loader wants a &str path; a non-UTF-8 path is a typed
+            // artifact error, not a panic.
+            let path_str = path.to_str().ok_or_else(|| {
+                artifacts::ArtifactsError::NonUtf8Path { path: path.to_path_buf() }
+            })?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
                 .with_context(|| format!("parsing HLO text {}", path.display()))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             self.client

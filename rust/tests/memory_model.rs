@@ -24,14 +24,17 @@ fn check_views(mem: &SynapticMemory, model: &HashMap<(usize, usize), i32>, mask:
     // dense() agrees with the model everywhere (zero where unset/pruned).
     let dense = mem.dense();
     assert_eq!(dense.len(), m * n, "{ctx}");
+    let mut row_buf = Vec::new(); // one scratch for the whole row sweep
     for pre in 0..m {
         for post in 0..n {
             let want = model.get(&(pre, post)).copied().unwrap_or(0);
             assert_eq!(dense[pre * n + post], want, "{ctx}: dense ({pre},{post})");
             assert_eq!(mem.read(pre, post).unwrap(), want, "{ctx}: read ({pre},{post})");
         }
-        // row() is the dense row.
-        assert_eq!(mem.row(pre), dense[pre * n..(pre + 1) * n].to_vec(), "{ctx}: row {pre}");
+        // row_into() (and the allocating row()) is the dense row.
+        mem.row_into(pre, &mut row_buf);
+        assert_eq!(row_buf, dense[pre * n..(pre + 1) * n], "{ctx}: row {pre}");
+        assert_eq!(mem.row(pre), row_buf, "{ctx}: row() twin {pre}");
         // row_nonzero() visits exactly the α=1 positions, ascending, with
         // the model's values.
         let visited: Vec<(usize, i32)> = mem.row_nonzero(pre).collect();

@@ -11,7 +11,7 @@ use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
 use quantisenc::datasets::rng::XorShift64Star;
 use quantisenc::datasets::Sample;
 use quantisenc::fixed::{QSpec, Q17_15, Q2_2, Q3_1, Q5_3, Q9_7};
-use quantisenc::hdl::{aer, Core, SpikePlane};
+use quantisenc::hdl::{aer, Core, PlanePool, SpikeMatrix, SpikePlane};
 
 /// Random architecture over all three connection topologies (Eq. 9): every
 /// layer independently draws all-to-all, one-to-one (forcing equal widths),
@@ -318,19 +318,27 @@ fn prop_serving_engine_equals_sequential_core() {
         core.registers = regs.clone();
         let reference: Vec<_> = samples.iter().map(|s| core.run(s)).collect();
 
-        for cores in [1usize, 3] {
-            let mut engine =
-                ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(cores))
-                    .unwrap();
+        for (cores, lane_width) in [(1usize, 1usize), (3, 1), (2, 4), (1, 64)] {
+            let mut engine = ServingEngine::new(
+                &cfg,
+                &weights,
+                &regs,
+                ServingOptions::with_lanes(cores, lane_width),
+            )
+            .unwrap();
             let out = engine.run_batch(&samples).unwrap();
             assert_eq!(out.len(), samples.len());
             for (i, (r, want)) in out.iter().zip(&reference).enumerate() {
                 assert_eq!(
                     r.counts, want.counts,
-                    "case {case} cores {cores} sample {i} ({})",
+                    "case {case} cores {cores} lanes {lane_width} sample {i} ({})",
                     cfg.arch_name()
                 );
-                assert_eq!(r.prediction, want.prediction, "case {case} cores {cores} sample {i}");
+                assert_eq!(
+                    r.prediction, want.prediction,
+                    "case {case} cores {cores} lanes {lane_width} sample {i}"
+                );
+                assert_eq!(r.stats, want.stats, "case {case} cores {cores} lanes {lane_width}");
             }
         }
 
@@ -386,6 +394,143 @@ fn prop_spike_plane_random_bitmaps() {
             );
         }
         assert_eq!(fresh, recycled, "case {case} equality across allocations");
+    }
+}
+
+/// A pre-filled [`PlanePool`] must never miss under recycle churn from
+/// multiple threads: as long as each thread holds at most one plane at a
+/// time and the pool is pre-filled with one plane per thread, every `take`
+/// finds a recycled buffer — the multi-threaded statement of the serving
+/// engine's zero-alloc invariant.
+#[test]
+fn prop_plane_pool_zero_misses_under_concurrent_churn() {
+    use std::sync::Arc;
+    for threads in [2usize, 4, 8] {
+        let pool = Arc::new(PlanePool::prefilled(threads, 256));
+        std::thread::scope(|scope| {
+            for tid in 0..threads {
+                let pool = pool.clone();
+                scope.spawn(move || {
+                    let mut rng = XorShift64Star::new(0xC0_11 + tid as u64);
+                    for _ in 0..500 {
+                        let mut plane = pool.take();
+                        let len = 1 + rng.below(256) as usize;
+                        plane.resize_clear(len);
+                        plane.set(len - 1);
+                        assert_eq!(plane.count_ones(), 1);
+                        pool.put(plane);
+                    }
+                });
+            }
+        });
+        assert_eq!(pool.misses(), 0, "{threads} churning threads drained a full pool");
+        assert_eq!(pool.available(), threads);
+    }
+}
+
+/// `Topology::row_windows` band edges: radii at or beyond the layer width
+/// degenerate to full rows, single-column/single-row layers clip to the
+/// grid, and every window — first and last rows especially — agrees with
+/// an independent mask scan on non-square shapes.
+#[test]
+fn prop_row_windows_band_edges() {
+    // Saturated radius: once r covers the whole pre-index range (r >= n
+    // suffices for square layers, r >= m + n for any shape), every row's
+    // window degenerates to the full [0, n-1] span.
+    for (m, n, radius) in [
+        (6usize, 6usize, 6u32), // square: r == n already saturates
+        (6, 6, 1000),
+        (4, 9, 13),
+        (9, 4, 13),
+        (9, 4, 1000),
+    ] {
+        let topo = Topology::Gaussian { radius };
+        let windows = topo.row_windows(m, n).unwrap();
+        assert_eq!(windows.len(), m);
+        for (i, win) in windows.iter().enumerate() {
+            assert_eq!(*win, Some((0, n - 1)), "r={radius} {m}x{n} row {i} not full");
+        }
+    }
+    // n = 1 (single post neuron): the window is column 0 for rows inside
+    // the receptive field and None (fully pruned) outside it — the
+    // first/last rows of a tall layer are exactly where clipping bites.
+    for (m, radius) in [(1usize, 0u32), (7, 0), (7, 1), (12, 2)] {
+        let topo = Topology::Gaussian { radius };
+        let mask = topo.mask(m, 1).unwrap();
+        let windows = topo.row_windows(m, 1).unwrap();
+        for (i, win) in windows.iter().enumerate() {
+            match *win {
+                None => assert_eq!(mask[i], 0, "m={m} r={radius} row {i}"),
+                Some((lo, hi)) => {
+                    assert_eq!((lo, hi), (0, 0), "m={m} r={radius} row {i}");
+                    assert_eq!(mask[i], 1, "m={m} r={radius} row {i}");
+                }
+            }
+        }
+        // Centre row is always connected; fully-pruned rows only at edges.
+        assert!(windows[(m - 1) / 2].is_some(), "m={m} r={radius} centre row pruned");
+    }
+    // Non-square M×N sweeps: first/last-row windows and every in-between
+    // row must match the mask's first/last α=1 columns exactly.
+    let mut rng = XorShift64Star::new(0x8A2D_0);
+    for _ in 0..40 {
+        let m = 1 + rng.below(24) as usize;
+        let n = 1 + rng.below(24) as usize;
+        let radius = rng.below(6) as u32;
+        let topo = Topology::Gaussian { radius };
+        let mask = topo.mask(m, n).unwrap();
+        let windows = topo.row_windows(m, n).unwrap();
+        for (i, win) in windows.iter().enumerate() {
+            let row = &mask[i * n..(i + 1) * n];
+            let first = row.iter().position(|&x| x == 1);
+            let last = row.iter().rposition(|&x| x == 1);
+            assert_eq!(
+                *win,
+                first.map(|lo| (lo, last.unwrap())),
+                "{m}x{n} r={radius} row {i} (first/last rows included)"
+            );
+        }
+    }
+}
+
+/// SpikeMatrix transpose round-trip: L random planes in, lane-words out,
+/// each lane gathered back must equal its source plane, and a recycled
+/// (previously wider, denser) matrix must not leak ghost lane bits.
+#[test]
+fn prop_spike_matrix_transpose_roundtrip() {
+    let mut rng = XorShift64Star::new(0x7A05_B);
+    let mut recycled = SpikeMatrix::new(300, 64);
+    for case in 0..60 {
+        recycled.resize_clear(300, 64);
+        for i in 0..300 {
+            recycled.set_line_word(i, u64::MAX); // dirty it
+        }
+        let lines = 1 + rng.below(280) as usize;
+        let lanes = 1 + rng.below(64) as usize;
+        let density = [0.0, 0.05, 0.5, 1.0][rng.below(4) as usize];
+        let planes: Vec<SpikePlane> = (0..lanes)
+            .map(|_| {
+                let bytes: Vec<u8> =
+                    (0..lines).map(|_| (rng.uniform() < density) as u8).collect();
+                SpikePlane::from_bytes(&bytes)
+            })
+            .collect();
+        recycled.resize_clear(lines, lanes);
+        for (l, p) in planes.iter().enumerate() {
+            recycled.set_lane_from_plane(l, p);
+        }
+        let want: usize = planes.iter().map(|p| p.count_ones()).sum();
+        assert_eq!(recycled.count_ones(), want, "case {case} ghost lane bits");
+        let mut back = SpikePlane::default();
+        for (l, p) in planes.iter().enumerate() {
+            recycled.lane_plane_into(l, &mut back);
+            assert_eq!(&back, p, "case {case} lane {l}");
+        }
+        assert_eq!(
+            recycled.words().iter().map(|w| (w & !recycled.lane_mask())).sum::<u64>(),
+            0,
+            "case {case}: bits beyond lane {lanes}"
+        );
     }
 }
 

@@ -25,12 +25,21 @@
 //! activity ledgers required every step. Note the dense-vs-sparse suite
 //! above *also* exercises the packed path (the byte `step_regs` API is an
 //! adapter over it), so the two axes compose.
+//!
+//! A third axis runs the **lane-exactness twin gate**
+//! (`assert_lane_parity`): the 64-sample lane-batched datapath
+//! (`Layer::step_lanes` — one synaptic-row fetch per firing line scattered
+//! across all active lanes, lane-major SoA neuron bank) against per-lane
+//! single-sample packed twins, across all three topologies and
+//! Q9.7/Q5.3/Q3.1 at 0/2/35/90% firing, including ragged batches (lane
+//! counts 3/37/64 and per-lane unequal stream lengths with masked-out
+//! finished lanes).
 
 use quantisenc::config::registers::{RegisterFile, REG_REFRACTORY, REG_RESET_MODE};
 use quantisenc::config::{LayerConfig, MemKind, Topology};
 use quantisenc::datasets::rng::XorShift64Star;
 use quantisenc::fixed::{QSpec, Q3_1, Q5_3, Q9_7};
-use quantisenc::hdl::{Layer, SpikePlane};
+use quantisenc::hdl::{ActivityStats, Layer, SpikeMatrix, SpikePlane};
 
 const T_STEPS: usize = 220;
 
@@ -233,6 +242,120 @@ fn packed_vs_scalar_gaussian_all_qspecs() {
         let g2 = Topology::Gaussian { radius: 2 };
         assert_packed_scalar_parity(g1, 66, 66, qs, 0x9AC_2 + k as u64);
         assert_packed_scalar_parity(g2, 66, 40, qs, 0x9AC_3 + k as u64);
+    }
+}
+
+/// Lane-exactness twin gate: drive one lane-batched layer
+/// (`Layer::step_lanes`, `lanes` concurrent streams in one `SpikeMatrix`)
+/// against `lanes` independent single-sample packed twins
+/// (`Layer::step_plane` — the PR 4 hot path). Every lane must be
+/// **bit-identical** every step: spike output, membrane trace, and the
+/// complete per-lane activity ledger. Streams are ragged — lane `l` ends
+/// after `T_STEPS - (l % 9)` steps and is masked out of `active` from then
+/// on (its twin stops stepping), so finished lanes must freeze exactly.
+/// Firing density sweeps 0 / 2% / 35% / 90% per step, per lane.
+fn assert_lane_parity(topo: Topology, m: usize, n: usize, qs: QSpec, seed: u64, lanes: usize) {
+    let mut rng = XorShift64Star::new(seed);
+    let weights = masked_random_weights(topo, m, n, qs, &mut rng);
+
+    let cfg = LayerConfig { fan_in: m, neurons: n, topology: topo };
+    let mut batched = Layer::new(&cfg, qs, MemKind::Bram);
+    batched.memory_mut().load_dense(&weights).unwrap();
+    let mut twins: Vec<Layer> = (0..lanes).map(|_| batched.clone()).collect();
+
+    let mut regs = RegisterFile::new(qs);
+    if seed % 2 == 1 {
+        regs.write(REG_RESET_MODE, 2).unwrap(); // by-subtraction
+        regs.write(REG_REFRACTORY, 1).unwrap();
+    }
+
+    let lens: Vec<usize> = (0..lanes).map(|l| T_STEPS - (l % 9)).collect();
+    let mut mat_in = SpikeMatrix::default();
+    let mut mat_out = SpikeMatrix::default();
+    let mut stats = vec![ActivityStats::default(); lanes];
+    let mut plane_in = SpikePlane::default();
+    let mut plane_out = SpikePlane::default();
+    let mut gather = SpikePlane::default();
+    let mut frozen: Vec<Vec<i32>> = vec![Vec::new(); lanes];
+    for t in 0..T_STEPS {
+        mat_in.resize_clear(m, lanes);
+        let mut active = 0u64;
+        let mut streams: Vec<Vec<u8>> = Vec::with_capacity(lanes);
+        for (l, &len) in lens.iter().enumerate() {
+            let density = [0.0, 0.02, 0.35, 0.9][(t + l) % 4];
+            let spikes: Vec<u8> = (0..m).map(|_| (rng.uniform() < density) as u8).collect();
+            if t < len {
+                mat_in.load_lane_bytes(l, &spikes);
+                active |= 1 << l;
+            }
+            streams.push(spikes);
+        }
+        batched.step_lanes(&mat_in, &mut mat_out, &regs, active, &mut stats);
+        assert_eq!((mat_out.lines(), mat_out.lanes()), (n, lanes), "t={t}");
+        for (l, twin) in twins.iter_mut().enumerate() {
+            let ctx = || format!("{topo:?} {} lanes={lanes} t={t} lane {l}", qs.name());
+            if t >= lens[l] {
+                // Finished lane: no ledger charge, state frozen at its
+                // last stepped value.
+                assert_eq!(stats[l], ActivityStats::default(), "{} masked ledger", ctx());
+                assert_eq!(batched.lane_vmem(l), frozen[l], "{} frozen vmem", ctx());
+                assert!(
+                    mat_out.words().iter().all(|&w| (w >> l) & 1 == 0),
+                    "{} masked lane spiked",
+                    ctx()
+                );
+                continue;
+            }
+            plane_in.load_bytes(&streams[l]);
+            let want = twin.step_plane(&plane_in, &mut plane_out, &regs);
+            mat_out.lane_plane_into(l, &mut gather);
+            assert_eq!(gather, plane_out, "{} spikes", ctx());
+            assert_eq!(batched.lane_vmem(l), twin.vmem_slice(), "{} vmem", ctx());
+            assert_eq!(stats[l], want, "{} activity ledger", ctx());
+            if t + 1 == lens[l] {
+                frozen[l] = twin.vmem_slice().to_vec();
+            }
+        }
+    }
+}
+
+#[test]
+fn lane64_vs_single_sample_all_to_all_all_qspecs() {
+    for (k, qs) in [Q9_7, Q5_3, Q3_1].into_iter().enumerate() {
+        assert_lane_parity(Topology::AllToAll, 48, 40, qs, 0x1A4E_0 + k as u64, 64);
+    }
+}
+
+#[test]
+fn lane64_vs_single_sample_one_to_one_all_qspecs() {
+    for (k, qs) in [Q9_7, Q5_3, Q3_1].into_iter().enumerate() {
+        assert_lane_parity(Topology::OneToOne, 44, 44, qs, 0x1A4E_1 + k as u64, 64);
+    }
+}
+
+#[test]
+fn lane64_vs_single_sample_gaussian_all_qspecs() {
+    for (k, qs) in [Q9_7, Q5_3, Q3_1].into_iter().enumerate() {
+        assert_lane_parity(Topology::Gaussian { radius: 1 }, 48, 48, qs, 0x1A4E_2 + k as u64, 64);
+        assert_lane_parity(Topology::Gaussian { radius: 2 }, 48, 32, qs, 0x1A4E_3 + k as u64, 64);
+    }
+}
+
+#[test]
+fn ragged_lane_batches_stay_exact() {
+    // Lane counts that are not a multiple of 64 (a ragged final group) on
+    // every topology — combined with the per-lane unequal stream lengths
+    // assert_lane_parity always applies.
+    for (k, (topo, m, n)) in [
+        (Topology::AllToAll, 40usize, 36usize),
+        (Topology::OneToOne, 40, 40),
+        (Topology::Gaussian { radius: 1 }, 40, 40),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        assert_lane_parity(topo, m, n, Q5_3, 0x8A66_0 + k as u64, 37);
+        assert_lane_parity(topo, m, n, Q9_7, 0x8A66_4 + k as u64, 3);
     }
 }
 
