@@ -1,6 +1,6 @@
 # Convenience targets; everything is plain cargo underneath.
 
-.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology bench-hotpath fmt clippy
+.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology bench-hotpath bench-serving fmt clippy
 
 all: build
 
@@ -36,13 +36,24 @@ bench-hotpath: bench-topology
 	BENCH_HOTPATH_JSON=BENCH_hotpath.json BENCH_BATCHED_JSON=BENCH_batched.json \
 		cargo bench --bench bench_serving
 
+# Hermetic front-door SLO run: an in-process TCP server on an ephemeral
+# port, open-loop Poisson load with in-band reconfigs, every network
+# result verified bit-exactly against the sequential core. Emits
+# BENCH_serving_slo.json (p50/p99 latency, samples/s, reject rate).
+bench-serving:
+	cargo run --release --bin repro -- loadgen \
+		--sessions 2 --n 64 --rate 0 --reconfig-every 16 --pool 16 \
+		--out BENCH_serving_slo.json
+
 # bench-smoke runs everything above, then validates the reports (required
 # keys present, >=5x topology ops reduction, >=3x packed layer-step
-# speedup at N=400 / 2% firing, positive engine throughput, and >=2x
-# lane-64 serving samples/s with zero matrix-pool misses).
-bench-smoke: bench-hotpath
+# speedup at N=400 / 2% firing, positive engine throughput, >=2x lane-64
+# serving samples/s with zero matrix-pool misses, and a clean oracle-
+# verified front-door SLO report).
+bench-smoke: bench-hotpath bench-serving
 	cargo run --release --bin repro -- bench-check \
-		BENCH_topology.json BENCH_hotpath.json BENCH_batched.json
+		BENCH_topology.json BENCH_hotpath.json BENCH_batched.json \
+		BENCH_serving_slo.json
 
 fmt:
 	cargo fmt --all -- --check

@@ -1,0 +1,469 @@
+//! Client side of the network front door: [`WireClient`] (a thin typed
+//! handle over the [`super::wire`] frame protocol) and the open-loop load
+//! generator behind `repro loadgen`.
+//!
+//! The load generator measures the server the way the paper's evaluation
+//! measures the core — offered load in, latency/throughput out — but at
+//! the serving boundary: Poisson (optionally bursty) arrivals per
+//! session, client-clocked request latency, typed `Overloaded` rejections
+//! counted against offered load, and (when the caller supplies an oracle)
+//! bit-exact verification of every spike count that comes back.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::datasets::rng::XorShift64Star;
+use crate::datasets::{Dataset, Sample, Split};
+use crate::hdl::ActivityStats;
+
+use super::control::ReconfigProgram;
+use super::metrics::Telemetry;
+use super::wire::{self, ErrorCode, Frame, WireError};
+
+/// Engine geometry reported by the server's `HelloAck`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HelloInfo {
+    pub inputs: u32,
+    pub outputs: u32,
+    pub cores: u16,
+    pub lane_width: u16,
+}
+
+/// Write half of a connection (own thread-safe handle after
+/// [`WireClient::into_split`]).
+pub struct ClientSender {
+    writer: BufWriter<TcpStream>,
+}
+
+impl ClientSender {
+    /// Send one frame and flush it onto the socket.
+    pub fn send(&mut self, frame: &Frame) -> Result<(), WireError> {
+        wire::write_frame(&mut self.writer, frame)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    pub fn submit(&mut self, session: u32, sample_id: u64, s: &Sample) -> Result<(), WireError> {
+        self.send(&wire::submit_from_sample(session, sample_id, s))
+    }
+
+    pub fn reconfig(
+        &mut self,
+        session: u32,
+        request: u64,
+        program: &ReconfigProgram,
+    ) -> Result<(), WireError> {
+        let frame = wire::program_to_wire(session, request, program)?;
+        self.send(&frame)
+    }
+}
+
+/// Read half of a connection.
+pub struct ClientReceiver {
+    reader: BufReader<TcpStream>,
+    max_frame_len: u32,
+}
+
+impl ClientReceiver {
+    /// Configure a socket read timeout; with one set,
+    /// [`ClientReceiver::next_frame`] returns [`WireError::Idle`] when it
+    /// fires between frames.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)
+    }
+
+    /// Read one frame; `Ok(None)` is a clean server-side close.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, WireError> {
+        wire::read_frame(&mut self.reader, self.max_frame_len)
+    }
+}
+
+/// A connected, handshaken client. Blocking and single-threaded; call
+/// [`WireClient::into_split`] to drive sends and receives from separate
+/// threads (the load generator's open-loop mode).
+pub struct WireClient {
+    sender: ClientSender,
+    receiver: ClientReceiver,
+    pub hello: HelloInfo,
+}
+
+impl WireClient {
+    /// Connect and perform the `Hello`/`HelloAck` handshake.
+    pub fn connect(addr: &str) -> Result<WireClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let mut client = WireClient {
+            sender: ClientSender { writer: BufWriter::new(stream) },
+            receiver: ClientReceiver { reader, max_frame_len: wire::DEFAULT_MAX_FRAME_LEN },
+            hello: HelloInfo { inputs: 0, outputs: 0, cores: 0, lane_width: 0 },
+        };
+        client.send(&Frame::Hello { version: wire::VERSION })?;
+        match client.recv()? {
+            Frame::HelloAck { version: _, inputs, outputs, cores, lane_width } => {
+                client.hello = HelloInfo { inputs, outputs, cores, lane_width };
+            }
+            other => bail!("expected HelloAck, got {other:?}"),
+        }
+        Ok(client)
+    }
+
+    pub fn send(&mut self, frame: &Frame) -> Result<(), WireError> {
+        self.sender.send(frame)
+    }
+
+    /// Block until the next frame arrives (treats a server close as an
+    /// error — the serving protocol never half-closes mid-conversation).
+    pub fn recv(&mut self) -> Result<Frame> {
+        loop {
+            match self.receiver.next_frame() {
+                Ok(Some(f)) => return Ok(f),
+                Ok(None) => bail!("server closed the connection"),
+                Err(WireError::Idle) => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Open a session; returns `(session id, granted in-flight quota)`.
+    /// `max_inflight == 0` asks for the server default.
+    pub fn open_session(&mut self, max_inflight: u32) -> Result<(u32, u32)> {
+        self.send(&Frame::OpenSession { max_inflight })?;
+        match self.recv()? {
+            Frame::SessionOpened { session, max_inflight } => Ok((session, max_inflight)),
+            Frame::Error { code, message, .. } => {
+                bail!("server refused session ({code:?}): {message}")
+            }
+            other => bail!("expected SessionOpened, got {other:?}"),
+        }
+    }
+
+    pub fn submit(&mut self, session: u32, sample_id: u64, s: &Sample) -> Result<(), WireError> {
+        self.sender.submit(session, sample_id, s)
+    }
+
+    pub fn reconfig(
+        &mut self,
+        session: u32,
+        request: u64,
+        program: &ReconfigProgram,
+    ) -> Result<(), WireError> {
+        self.sender.reconfig(session, request, program)
+    }
+
+    /// Split into independently-owned halves for concurrent send/receive.
+    pub fn into_split(self) -> (ClientSender, ClientReceiver) {
+        (self.sender, self.receiver)
+    }
+}
+
+/// Open-loop load profile. Arrivals are Poisson at `rate_hz` per session
+/// (optionally clustered into back-to-back bursts of `burst_len`, with
+/// inter-burst gaps stretched to preserve the mean rate); `rate_hz == 0`
+/// submits as fast as the socket accepts.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadgenOptions {
+    pub sessions: usize,
+    pub samples_per_session: u64,
+    pub rate_hz: f64,
+    pub burst_len: u64,
+    /// Send an (empty, count-preserving) `Reconfig` after every k-th
+    /// sample; 0 disables. Exercises the in-band control path under load.
+    pub reconfig_every: u64,
+    pub dataset: Dataset,
+    pub t_steps: usize,
+    /// Distinct samples cycled through per session (sample id i maps to
+    /// pool index `i % pool`).
+    pub pool: usize,
+    pub max_inflight: u32,
+    pub seed: u64,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> LoadgenOptions {
+        LoadgenOptions {
+            sessions: 2,
+            samples_per_session: 64,
+            rate_hz: 500.0,
+            burst_len: 1,
+            reconfig_every: 0,
+            dataset: Dataset::Smnist,
+            t_steps: 6,
+            pool: 16,
+            max_inflight: 32,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// Aggregated load-generator outcome — the numbers behind
+/// `BENCH_serving_slo.json`.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub sessions: usize,
+    pub submitted: u64,
+    pub results_ok: u64,
+    pub reconfig_acks: u64,
+    pub rejects: u64,
+    /// Non-overload error frames received (protocol-level trouble).
+    pub errors: u64,
+    /// Results whose spike counts diverged from the caller's oracle.
+    pub result_mismatches: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub samples_per_sec: f64,
+    pub reject_rate: f64,
+    pub elapsed_s: f64,
+    /// True when an oracle was supplied and every result was checked.
+    pub verified: bool,
+}
+
+/// The deterministic sample set both the load generator and any oracle
+/// must share: pool index `i` is `dataset.sample(i, Test, t_steps)`.
+pub fn sample_pool(dataset: Dataset, pool: usize, t_steps: usize) -> Vec<Sample> {
+    (0..pool as u64).map(|i| dataset.sample(i, Split::Test, t_steps)).collect()
+}
+
+/// Exponential inter-arrival gap (seconds) for a Poisson process at
+/// `rate` Hz, from one uniform draw in [0, 1).
+fn exp_gap(u: f64, rate: f64) -> f64 {
+    -(1.0 - u).ln() / rate
+}
+
+struct SessionOutcome {
+    latencies_us: Vec<f64>,
+    submitted: u64,
+    results_ok: u64,
+    reconfig_acks: u64,
+    rejects: u64,
+    errors: u64,
+    result_mismatches: u64,
+}
+
+/// Reconfig request ids live in their own keyspace so they can never
+/// collide with sample ids in the pending-latency map.
+const RECONFIG_ID_BASE: u64 = 1 << 63;
+
+/// Run the open-loop load generator against a front door at `addr`.
+///
+/// `oracle`, when given, holds the expected spike counts per pool index
+/// (loadgen reconfigs are empty programs, so counts are epoch-invariant);
+/// every `Result` frame is then verified bit-exactly against it.
+pub fn run_loadgen(
+    addr: &str,
+    opts: &LoadgenOptions,
+    oracle: Option<&[Vec<u32>]>,
+) -> Result<LoadReport> {
+    anyhow::ensure!(opts.sessions >= 1, "need at least one session");
+    anyhow::ensure!(opts.pool >= 1, "need at least one pooled sample");
+    anyhow::ensure!(opts.burst_len >= 1, "burst_len must be positive");
+    if let Some(o) = oracle {
+        anyhow::ensure!(o.len() == opts.pool, "oracle must cover the sample pool");
+    }
+    let pool = sample_pool(opts.dataset, opts.pool, opts.t_steps);
+    let mut tel = Telemetry::new();
+    tel.start();
+    let outcomes: Vec<Result<SessionOutcome>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..opts.sessions)
+            .map(|s| {
+                let pool = &pool;
+                scope.spawn(move || run_session_worker(addr, opts, s as u64, pool, oracle))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("loadgen worker panicked")).collect()
+    });
+    tel.stop();
+    let mut report = LoadReport {
+        sessions: opts.sessions,
+        submitted: 0,
+        results_ok: 0,
+        reconfig_acks: 0,
+        rejects: 0,
+        errors: 0,
+        result_mismatches: 0,
+        p50_us: 0.0,
+        p99_us: 0.0,
+        mean_us: 0.0,
+        samples_per_sec: 0.0,
+        reject_rate: 0.0,
+        elapsed_s: 0.0,
+        verified: oracle.is_some(),
+    };
+    for outcome in outcomes {
+        let o = outcome?;
+        report.submitted += o.submitted;
+        report.results_ok += o.results_ok;
+        report.reconfig_acks += o.reconfig_acks;
+        report.rejects += o.rejects;
+        report.errors += o.errors;
+        report.result_mismatches += o.result_mismatches;
+        for us in o.latencies_us {
+            tel.record(Duration::from_secs_f64(us / 1e6), &ActivityStats::default(), None);
+        }
+        for _ in 0..o.rejects {
+            tel.record_reject();
+        }
+    }
+    report.p50_us = tel.latency_us(50.0);
+    report.p99_us = tel.latency_us(99.0);
+    report.mean_us = tel.mean_latency_us();
+    report.samples_per_sec = tel.throughput_rps();
+    report.reject_rate = tel.reject_rate();
+    report.elapsed_s = report.results_ok as f64
+        / if report.samples_per_sec > 0.0 { report.samples_per_sec } else { f64::INFINITY };
+    Ok(report)
+}
+
+fn run_session_worker(
+    addr: &str,
+    opts: &LoadgenOptions,
+    session_idx: u64,
+    pool: &[Sample],
+    oracle: Option<&[Vec<u32>]>,
+) -> Result<SessionOutcome> {
+    let client = WireClient::connect(addr)?;
+    anyhow::ensure!(
+        client.hello.inputs as usize == pool[0].inputs,
+        "engine expects {} inputs, pool samples have {}",
+        client.hello.inputs,
+        pool[0].inputs
+    );
+    let mut client = client;
+    let (session, _granted) = client.open_session(opts.max_inflight)?;
+    let (mut tx, rx) = client.into_split();
+    rx.set_read_timeout(Some(Duration::from_secs(1)))?;
+    let mut rx = rx;
+
+    let n = opts.samples_per_session;
+    let n_reconfigs = if opts.reconfig_every > 0 { n / opts.reconfig_every } else { 0 };
+    let expected_replies = n + n_reconfigs;
+    let pending: Mutex<HashMap<u64, Instant>> = Mutex::new(HashMap::new());
+    let sender_done = AtomicBool::new(false);
+
+    std::thread::scope(|scope| {
+        let receiver = scope.spawn(|| -> Result<SessionOutcome> {
+            let mut out = SessionOutcome {
+                latencies_us: Vec::new(),
+                submitted: 0,
+                results_ok: 0,
+                reconfig_acks: 0,
+                rejects: 0,
+                errors: 0,
+                result_mismatches: 0,
+            };
+            let mut seen = 0u64;
+            let mut idle_strikes = 0u32;
+            while seen < expected_replies {
+                let frame = match rx.next_frame() {
+                    Ok(Some(f)) => f,
+                    Ok(None) => bail!("server closed mid-session after {seen} replies"),
+                    Err(WireError::Idle) => {
+                        idle_strikes += 1;
+                        // Give the server a long leash while the sender is
+                        // still pacing itself, a short one once everything
+                        // has been submitted.
+                        let limit = if sender_done.load(Ordering::Acquire) { 30 } else { 600 };
+                        if idle_strikes > limit {
+                            bail!("timed out waiting for replies ({seen}/{expected_replies})");
+                        }
+                        continue;
+                    }
+                    Err(e) => return Err(e.into()),
+                };
+                idle_strikes = 0;
+                seen += 1;
+                match frame {
+                    Frame::Result { sample, counts, .. } => {
+                        if let Some(t0) = pending.lock().unwrap().remove(&sample) {
+                            out.latencies_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                        }
+                        if let Some(expected) = oracle {
+                            let idx = (sample % pool.len() as u64) as usize;
+                            if counts != expected[idx] {
+                                out.result_mismatches += 1;
+                            }
+                        }
+                        out.results_ok += 1;
+                    }
+                    Frame::ReconfigAck { .. } => out.reconfig_acks += 1,
+                    Frame::Error { code: ErrorCode::Overloaded, reference, .. } => {
+                        pending.lock().unwrap().remove(&reference);
+                        out.rejects += 1;
+                    }
+                    Frame::Error { reference, .. } => {
+                        pending.lock().unwrap().remove(&reference);
+                        out.errors += 1;
+                    }
+                    other => bail!("unexpected frame mid-session: {other:?}"),
+                }
+            }
+            Ok(out)
+        });
+
+        let sent: Result<u64> = (|| {
+            let mut rng = XorShift64Star::new(
+                opts.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(session_idx + 1),
+            );
+            let start = Instant::now();
+            let mut next_at = 0.0f64;
+            let mut reconfigs_sent = 0u64;
+            for i in 0..n {
+                if opts.rate_hz > 0.0 && i % opts.burst_len == 0 {
+                    // One exponential gap per burst, at rate/burst_len, so
+                    // the long-run sample rate stays rate_hz.
+                    next_at += exp_gap(rng.uniform(), opts.rate_hz / opts.burst_len as f64);
+                    let target = Duration::from_secs_f64(next_at);
+                    let elapsed = start.elapsed();
+                    if target > elapsed {
+                        std::thread::sleep(target - elapsed);
+                    }
+                }
+                let sample = &pool[(i % pool.len() as u64) as usize];
+                // Insert before send: the reply can beat a post-send insert.
+                pending.lock().unwrap().insert(i, Instant::now());
+                tx.submit(session, i, sample)?;
+                if opts.reconfig_every > 0 && (i + 1) % opts.reconfig_every == 0 {
+                    reconfigs_sent += 1;
+                    tx.reconfig(session, RECONFIG_ID_BASE | reconfigs_sent, &ReconfigProgram::new())?;
+                }
+            }
+            Ok(n)
+        })();
+        sender_done.store(true, Ordering::Release);
+
+        let mut outcome = receiver.join().expect("loadgen receiver panicked")?;
+        outcome.submitted = sent?;
+        Ok(outcome)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_gap_matches_rate() {
+        // Mean of many exponential draws at 100 Hz ≈ 10 ms.
+        let mut rng = XorShift64Star::new(42);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| exp_gap(rng.uniform(), 100.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.01).abs() < 0.001, "mean gap {mean}");
+    }
+
+    #[test]
+    fn sample_pool_is_deterministic() {
+        let a = sample_pool(Dataset::Smnist, 4, 6);
+        let b = sample_pool(Dataset::Smnist, 4, 6);
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.spikes, y.spikes, "pool must be reproducible for oracle checks");
+        }
+    }
+}

@@ -72,7 +72,7 @@
 //! ```
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::config::registers::{RegisterError, RegisterFile, NUM_REGS};
 use crate::fixed::QSpec;
@@ -94,6 +94,12 @@ pub struct ReconfigProgram {
     pub cfg: Vec<(usize, i32)>,
     /// wt_in bulk swaps: `(layer index, packed payload)` in stored order.
     pub weights: Vec<(usize, Vec<i32>)>,
+    /// Fault-injection hook: make the named pipeline stage panic when this
+    /// program lands, instead of applying it. Never set on real programs —
+    /// it exists so tests can prove a worker panic surfaces as
+    /// [`ServingError::WorkerPanicked`](super::serving::ServingError) and
+    /// not a process abort. Not carried on the wire.
+    pub chaos_panic_stage: Option<usize>,
 }
 
 impl ReconfigProgram {
@@ -121,7 +127,15 @@ impl ReconfigProgram {
         ReconfigProgram {
             cfg: (0..NUM_REGS).map(|a| (a, v[a])).collect(),
             weights: Vec::new(),
+            chaos_panic_stage: None,
         }
+    }
+
+    /// Arm the fault-injection hook: stage `stage` panics when this
+    /// program lands (see [`ReconfigProgram::chaos_panic_stage`]).
+    pub fn chaos_panic(mut self, stage: usize) -> ReconfigProgram {
+        self.chaos_panic_stage = Some(stage);
+        self
     }
 
     pub fn is_empty(&self) -> bool {
@@ -246,6 +260,17 @@ pub(crate) struct ControlShared {
     cores: usize,
 }
 
+/// Lock a control-plane mutex, recovering from poisoning. Every structure
+/// behind these locks is a plain ledger (a Vec, a register file, a beat
+/// counter) whose every mutation is complete before the guard drops, so a
+/// panic elsewhere while holding the lock cannot leave it half-written —
+/// the poisoned state is always valid. Without this, one panicking worker
+/// would permanently take down telemetry and reconfig for every other
+/// tenant's handle (the mutex-poison cascade).
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 impl ControlShared {
     pub(crate) fn new(regs: RegisterFile, packed_sizes: Vec<usize>, cores: usize) -> ControlShared {
         ControlShared {
@@ -265,7 +290,7 @@ impl ControlShared {
     /// Qn.q range.
     pub(crate) fn validate(&self, program: &ReconfigProgram) -> Result<(), ControlError> {
         program.validate_weights(self.qspec, &self.packed_sizes)?;
-        self.regs.lock().unwrap().clone().apply_program(&program.cfg)?;
+        relock(&self.regs).clone().apply_program(&program.cfg)?;
         Ok(())
     }
 
@@ -274,7 +299,7 @@ impl ControlShared {
     /// bus ledger. Used by [`ControlPlane::apply`].
     pub(crate) fn admit(&self, program: ReconfigProgram) -> Result<u64, ControlError> {
         self.validate(&program)?;
-        let mut pending = self.pending.lock().unwrap();
+        let mut pending = relock(&self.pending);
         let epoch = self.commit(&program);
         pending.push((epoch, Arc::new(program)));
         Ok(epoch)
@@ -283,12 +308,10 @@ impl ControlShared {
     /// Assign an epoch to an already-validated program and account for it
     /// (shadow registers + bus beats). The caller delivers the program.
     pub(crate) fn commit(&self, program: &ReconfigProgram) -> u64 {
-        self.regs
-            .lock()
-            .unwrap()
+        relock(&self.regs)
             .apply_program(&program.cfg)
             .expect("program validated before commit");
-        let mut bus = self.bus.lock().unwrap();
+        let mut bus = relock(&self.bus);
         bus.cfg_writes += program.cfg_beats() * self.cores as u64;
         bus.wt_writes += program.wt_beats() * self.cores as u64;
         self.next_epoch.fetch_add(1, Ordering::SeqCst)
@@ -300,7 +323,7 @@ impl ControlShared {
         &self,
         program: ReconfigProgram,
     ) -> (Vec<(u64, Arc<ReconfigProgram>)>, u64, Arc<ReconfigProgram>) {
-        let mut pending = self.pending.lock().unwrap();
+        let mut pending = relock(&self.pending);
         let drained = std::mem::take(&mut *pending);
         let epoch = self.commit(&program);
         (drained, epoch, Arc::new(program))
@@ -308,7 +331,7 @@ impl ControlShared {
 
     /// Drain programs queued by [`ControlPlane::apply`], in epoch order.
     pub(crate) fn take_pending(&self) -> Vec<(u64, Arc<ReconfigProgram>)> {
-        std::mem::take(&mut *self.pending.lock().unwrap())
+        std::mem::take(&mut *relock(&self.pending))
     }
 
     pub(crate) fn epoch(&self) -> u64 {
@@ -316,19 +339,19 @@ impl ControlShared {
     }
 
     pub(crate) fn registers(&self) -> RegisterFile {
-        self.regs.lock().unwrap().clone()
+        relock(&self.regs).clone()
     }
 
     pub(crate) fn bus(&self) -> BusStats {
-        *self.bus.lock().unwrap()
+        *relock(&self.bus)
     }
 
     pub(crate) fn charge_spk_in(&self, events: u64) {
-        self.bus.lock().unwrap().spk_in_events += events;
+        relock(&self.bus).spk_in_events += events;
     }
 
     pub(crate) fn charge_spk_out(&self, events: u64) {
-        self.bus.lock().unwrap().spk_out_events += events;
+        relock(&self.bus).spk_out_events += events;
     }
 }
 
@@ -388,6 +411,14 @@ impl ControlPlane {
     /// changed.
     pub fn apply(&self, program: ReconfigProgram) -> Result<u64, ControlError> {
         self.shared.admit(program)
+    }
+
+    /// Validate a program against the engine geometry without admitting it
+    /// — no epoch, register, or bus state changes. The network front door
+    /// uses this to reject one tenant's malformed `Reconfig` frame with a
+    /// typed per-request error before it reaches the shared engine.
+    pub fn validate(&self, program: &ReconfigProgram) -> Result<(), ControlError> {
+        self.shared.validate(program)
     }
 
     /// The latest assigned config epoch (0 until the first successful
@@ -479,6 +510,55 @@ mod tests {
         assert_eq!(drained[0].0, 1);
         assert_eq!(epoch, 2);
         assert!(s.take_pending().is_empty());
+    }
+
+    #[test]
+    fn poisoned_locks_recover() {
+        // A worker that panics while holding a control-plane lock must not
+        // take down telemetry/reconfig for every other handle. Poison all
+        // three mutexes deliberately, then prove the full API still works.
+        let s = Arc::new(shared());
+        for which in 0..3 {
+            let s2 = Arc::clone(&s);
+            // Hold exactly one lock per thread: a panicked unwrap on an
+            // already-poisoned sibling would skip the one we target.
+            let _ = std::thread::spawn(move || match which {
+                0 => {
+                    let _g = s2.bus.lock().unwrap();
+                    panic!("deliberate poison");
+                }
+                1 => {
+                    let _g = s2.regs.lock().unwrap();
+                    panic!("deliberate poison");
+                }
+                _ => {
+                    let _g = s2.pending.lock().unwrap();
+                    panic!("deliberate poison");
+                }
+            })
+            .join();
+        }
+        assert!(s.bus.is_poisoned() && s.regs.is_poisoned() && s.pending.is_poisoned());
+        // Every accessor recovers: admit, ledger charging, reads, drains.
+        let epoch = s.admit(ReconfigProgram::new().write(REG_VTH, 4)).unwrap();
+        assert_eq!(epoch, 1);
+        s.charge_spk_in(3);
+        s.charge_spk_out(2);
+        assert_eq!(s.bus().cfg_writes, 2); // 1 write × 2 shards
+        assert_eq!(s.bus().spk_in_events, 3);
+        assert_eq!(s.registers().vth(), 4);
+        assert_eq!(s.take_pending().len(), 1);
+        // Rejection still validates against the recovered shadow file.
+        assert!(s.admit(ReconfigProgram::new().write(99, 0)).is_err());
+    }
+
+    #[test]
+    fn chaos_program_builder() {
+        let p = ReconfigProgram::new().write(REG_VTH, 4).chaos_panic(1);
+        assert_eq!(p.chaos_panic_stage, Some(1));
+        assert!(ReconfigProgram::from_registers(&RegisterFile::new(Q5_3))
+            .chaos_panic_stage
+            .is_none());
     }
 
     #[test]

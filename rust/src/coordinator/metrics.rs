@@ -25,6 +25,10 @@ pub struct Telemetry {
     /// number of distinct configs that served traffic in this window
     /// (epochs that were assigned but never served a sample still count).
     pub reconfigs: u64,
+    /// Requests turned away by admission control (the front door's typed
+    /// `Overloaded` rejections). Not counted in [`Telemetry::requests`],
+    /// so throughput and latency describe served traffic only.
+    pub rejects: u64,
     started: Option<Instant>,
     elapsed: Duration,
 }
@@ -50,6 +54,21 @@ impl Telemetry {
         self.requests += 1;
         if correct == Some(true) {
             self.correct += 1;
+        }
+    }
+
+    /// Count one admission-control rejection (`Overloaded`).
+    pub fn record_reject(&mut self) {
+        self.rejects += 1;
+    }
+
+    /// Rejected fraction of all requests that reached the front door.
+    pub fn reject_rate(&self) -> f64 {
+        let offered = self.requests + self.rejects;
+        if offered == 0 {
+            0.0
+        } else {
+            self.rejects as f64 / offered as f64
         }
     }
 
@@ -116,6 +135,9 @@ impl Telemetry {
         if self.reconfigs > 1 {
             s.push_str(&format!(" epochs={}", self.reconfigs));
         }
+        if self.rejects > 0 {
+            s.push_str(&format!(" rejects={} ({:.1}%)", self.rejects, 100.0 * self.reject_rate()));
+        }
         s
     }
 }
@@ -164,5 +186,19 @@ mod tests {
         assert!(s.contains("bus=20b (cfg=12 wt=3)"), "{s}");
         assert!(s.contains("epochs=3"), "{s}");
         assert_eq!(t.reconfigs, 3);
+    }
+
+    #[test]
+    fn rejects_surface_in_summary_and_rate() {
+        let mut t = Telemetry::new();
+        assert_eq!(t.reject_rate(), 0.0, "no offered load, no rate");
+        for _ in 0..3 {
+            t.record(Duration::from_micros(100), &ActivityStats::default(), None);
+        }
+        t.record_reject();
+        assert_eq!(t.rejects, 1);
+        assert_eq!(t.requests, 3, "rejects are not served requests");
+        assert!((t.reject_rate() - 0.25).abs() < 1e-12);
+        assert!(t.summary().contains("rejects=1 (25.0%)"), "{}", t.summary());
     }
 }

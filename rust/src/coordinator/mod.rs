@@ -18,14 +18,26 @@
 //!   ([`interface::BusStats`]) as data traffic.
 //! * [`metrics`] — request-path telemetry (latency percentiles, throughput,
 //!   spike/power accounting, bus-beat reporting).
+//! * [`wire`] — the network front door's frame grammar: a std-only,
+//!   length-prefixed binary spike-frame/AER protocol carrying bit-packed
+//!   spike trains, control-plane programs, and results.
+//! * [`server`] — the TCP front door ([`server::SpikeServer`]):
+//!   multiplexes many concurrent client sessions onto one lane-batched
+//!   [`serving::ServingEngine`] with per-session admission control and
+//!   per-tenant reconfiguration through the control plane's epochs.
+//! * [`client`] — the matching client ([`client::WireClient`]) and the
+//!   open-loop load generator behind `repro loadgen`.
 //!
 //! See `ARCHITECTURE.md` at the repo root for the module map, the
 //! paper-section cross-reference, and the dataflow diagram of the sharded
 //! pipelined engine with the control-message path.
 
+pub mod client;
 pub mod control;
 pub mod interface;
 pub mod metrics;
 pub mod multicore;
 pub mod pipeline;
+pub mod server;
 pub mod serving;
+pub mod wire;

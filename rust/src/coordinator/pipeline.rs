@@ -27,7 +27,9 @@ use crate::datasets::Sample;
 use crate::hdl::spikes::{MatrixPool, PlanePool};
 use crate::hdl::ActivityStats;
 
-use super::serving::{build_layers, collector_loop, stage_loop, StageMsg};
+use super::serving::{
+    build_layers, collector_loop, panic_message, stage_loop, ServingError, StageMsg,
+};
 
 /// Analytic pipeline schedule — Eq. 11 and the Fig. 8 timing diagram.
 #[derive(Debug, Clone, Copy)]
@@ -125,15 +127,18 @@ pub fn run_pipelined(
     std::thread::scope(|scope| {
         // Channel chain: injector -> stage 0 -> … -> stage K-1 -> collector.
         // Stage and collector bodies are the serving-engine primitives; this
-        // function only adds the scoped one-batch wiring around them.
+        // function only adds the scoped one-batch wiring around them. Every
+        // handle is kept and joined explicitly below: a scope-exit auto-join
+        // re-raises worker panics and would abort the process.
         let (injector, mut chain_rx) = mpsc::sync_channel::<StageMsg>(64);
+        let mut stages = Vec::new();
         for (layer_idx, layer) in layers.into_iter().enumerate() {
             let (tx, next_rx) = mpsc::sync_channel::<StageMsg>(64);
             let stage_regs = regs.clone();
             let rx = std::mem::replace(&mut chain_rx, next_rx);
-            scope.spawn(move || {
+            stages.push(scope.spawn(move || {
                 stage_loop(layer_idx, layer, stage_regs, rx, tx, Vec::new(), Vec::new())
-            });
+            }));
         }
         let collector_rx = chain_rx;
 
@@ -150,21 +155,56 @@ pub fn run_pipelined(
         });
 
         // Inject the streams back-to-back (the d+s stagger emerges from the
-        // bounded channels providing backpressure).
-        for (stream, sample) in samples.iter().enumerate() {
+        // bounded channels providing backpressure). A dead stage stops the
+        // feed but must not early-return: the explicit joins below still
+        // have to run to convert a panic into a typed error.
+        let mut feed_err = None;
+        'feed: for (stream, sample) in samples.iter().enumerate() {
             for t in 0..sample.t_steps {
                 let mut plane = pool.take();
                 sample.step_plane_into(t, &mut plane);
-                injector
-                    .send(StageMsg::Step { stream, plane })
-                    .map_err(|_| anyhow::anyhow!("pipeline stage died"))?;
+                if injector.send(StageMsg::Step { stream, plane }).is_err() {
+                    feed_err = Some(anyhow::anyhow!("pipeline stage died"));
+                    break 'feed;
+                }
             }
-            injector
+            if injector
                 .send(StageMsg::Flush { stream, stats: ActivityStats::default() })
-                .map_err(|_| anyhow::anyhow!("pipeline stage died"))?;
+                .is_err()
+            {
+                feed_err = Some(anyhow::anyhow!("pipeline stage died"));
+                break 'feed;
+            }
         }
+        // Closing the injector drains the chain: stages exit front-to-back,
+        // then the collector returns — so these joins cannot block.
         drop(injector);
-        Ok(collector.join().expect("collector panicked"))
+        let mut panicked: Option<ServingError> = None;
+        for (k, handle) in stages.into_iter().enumerate() {
+            if let Err(payload) = handle.join() {
+                panicked.get_or_insert(ServingError::WorkerPanicked {
+                    worker: format!("pipeline stage {k}"),
+                    message: panic_message(payload),
+                });
+            }
+        }
+        let results = match collector.join() {
+            Ok(r) => Some(r),
+            Err(payload) => {
+                panicked.get_or_insert(ServingError::WorkerPanicked {
+                    worker: "pipeline collector".to_string(),
+                    message: panic_message(payload),
+                });
+                None
+            }
+        };
+        if let Some(err) = panicked {
+            return Err(err.into());
+        }
+        if let Some(e) = feed_err {
+            return Err(e);
+        }
+        Ok(results.expect("collector joined cleanly"))
     })
 }
 

@@ -1,0 +1,705 @@
+//! The network front door — a std-only TCP server that multiplexes many
+//! concurrent client sessions onto one lane-batched
+//! [`ServingEngine`](super::serving::ServingEngine).
+//!
+//! The paper's host↔core interface (spk_in / cfg_in / wt_in, §IV) becomes
+//! a socket: clients speak the [`super::wire`] frame protocol, submit
+//! bit-packed spike trains, and reprogram the core per-tenant through the
+//! same [`ControlPlane`] epoch machinery in-process callers use —
+//! NeuroCoreX exposes its FPGA emulator over a UART configure/stimulate
+//! protocol; this is the same idea with a production transport.
+//!
+//! ## Architecture
+//!
+//! ```text
+//! accept loop ──spawns──▶ per-connection reader ──bounded queue──▶ pump ──▶ ServingEngine
+//!                         (admission control,                     (sole engine owner:
+//!                          frame validation)                       micro-batches ops into
+//!                               │                                  run_session calls)
+//!                               ▼                                        │
+//!                         per-connection writer ◀──reply channels────────┘
+//! ```
+//!
+//! * **One pump thread owns the engine.** Readers never touch it; they
+//!   enqueue validated [`PumpMsg`]s on one bounded queue. The pump drains
+//!   the queue into micro-batches (up to [`ServerOptions::max_batch`] ops
+//!   per [`ServingEngine::run_session`] call), so concurrent sessions are
+//!   folded into the engine's lane-batched datapath, and in-band
+//!   `Reconfig` ops land at exact sample boundaries of the merged stream.
+//! * **Admission control is per session and typed.** Each session carries
+//!   a granted in-flight quota; a `SubmitSample` over quota — or arriving
+//!   while the pump queue is full — is rejected immediately with
+//!   [`ErrorCode::Overloaded`] and is never enqueued. Backpressure
+//!   reaches the client as a frame, not as TCP stall.
+//! * **One tenant's failure stays that tenant's failure.** Malformed
+//!   programs are rejected per-request (`BadProgram`) via
+//!   [`ControlPlane::validate`] before they reach the shared engine;
+//!   protocol violations kill only the offending connection (`BadFrame`);
+//!   and if the engine itself dies (e.g. a worker panic surfacing as
+//!   [`ServingError::WorkerPanicked`](super::serving::ServingError)), the
+//!   server answers every subsequent request with a typed `Internal`
+//!   error — the process and every connection stay alive.
+//!
+//! ## Epoch acks
+//!
+//! The pump is the engine's only epoch source, so accepted `Reconfig`s
+//! are acked deterministically: the k-th program accepted in a batch gets
+//! epoch `epoch_before_batch + k`, exactly what `run_session` assigns
+//! when the op lands.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::datasets::Sample;
+
+use super::control::{ControlPlane, ReconfigProgram};
+use super::serving::{ServingEngine, SessionOp};
+use super::wire::{self, ErrorCode, Frame, WireError};
+
+/// Front-door tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOptions {
+    /// Per-session in-flight sample quota granted when a client requests 0
+    /// (and the cap on what it may request).
+    pub max_inflight: u32,
+    /// Bound of the reader→pump queue; a full queue rejects with
+    /// `Overloaded` instead of stalling readers.
+    pub queue_capacity: usize,
+    /// Maximum ops folded into one `run_session` call.
+    pub max_batch: usize,
+    /// Admission bound on a sample's timestep count.
+    pub max_t_steps: u32,
+    /// Frame-length cap handed to the wire codec.
+    pub max_frame_len: u32,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions {
+            max_inflight: 64,
+            queue_capacity: 256,
+            max_batch: 64,
+            max_t_steps: 4096,
+            max_frame_len: wire::DEFAULT_MAX_FRAME_LEN,
+        }
+    }
+}
+
+/// Monotonic front-door counters (snapshot via [`SpikeServer::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    pub connections: u64,
+    pub sessions: u64,
+    pub samples_served: u64,
+    pub reconfigs_applied: u64,
+    pub rejects_overloaded: u64,
+    /// `BadSession` + `BadSample` + `BadProgram` rejections.
+    pub rejects_bad: u64,
+    /// Connections killed for frame-grammar violations.
+    pub protocol_errors: u64,
+    /// Engine failures observed by the pump (the engine stops serving but
+    /// the server keeps answering with typed `Internal` errors).
+    pub engine_failures: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    connections: AtomicU64,
+    sessions: AtomicU64,
+    samples_served: AtomicU64,
+    reconfigs_applied: AtomicU64,
+    rejects_overloaded: AtomicU64,
+    rejects_bad: AtomicU64,
+    protocol_errors: AtomicU64,
+    engine_failures: AtomicU64,
+}
+
+impl Counters {
+    fn bump(c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> ServerStats {
+        ServerStats {
+            connections: self.connections.load(Ordering::Relaxed),
+            sessions: self.sessions.load(Ordering::Relaxed),
+            samples_served: self.samples_served.load(Ordering::Relaxed),
+            reconfigs_applied: self.reconfigs_applied.load(Ordering::Relaxed),
+            rejects_overloaded: self.rejects_overloaded.load(Ordering::Relaxed),
+            rejects_bad: self.rejects_bad.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            engine_failures: self.engine_failures.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Engine geometry advertised in `HelloAck` and used for reader-side
+/// sample validation (captured before the engine moves into the pump).
+#[derive(Debug, Clone, Copy)]
+struct Geometry {
+    inputs: u32,
+    outputs: u32,
+    cores: u16,
+    lane_width: u16,
+}
+
+/// One validated client op travelling reader → pump. Carries its reply
+/// channel (the connection's writer) and its session's in-flight counter,
+/// which the pump decrements once the op is answered.
+enum PumpMsg {
+    Submit {
+        session: u32,
+        sample_id: u64,
+        sample: Sample,
+        inflight: Arc<AtomicU32>,
+        reply: Sender<Frame>,
+    },
+    Reconfig {
+        session: u32,
+        request: u64,
+        program: ReconfigProgram,
+        inflight: Arc<AtomicU32>,
+        reply: Sender<Frame>,
+    },
+}
+
+/// The TCP front door. Owns the accept loop, the engine pump, and (through
+/// them) every connection thread; dropping or [`SpikeServer::shutdown`]ting
+/// it tears the whole stack down, engine included.
+pub struct SpikeServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    pump: Option<JoinHandle<()>>,
+    counters: Arc<Counters>,
+}
+
+impl SpikeServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// serving `engine` in background threads. The engine moves into the
+    /// pump thread — the server is its sole owner from here on.
+    pub fn bind(engine: ServingEngine, addr: &str, options: ServerOptions) -> Result<SpikeServer> {
+        anyhow::ensure!(options.max_inflight >= 1, "max_inflight must be positive");
+        anyhow::ensure!(options.queue_capacity >= 1, "queue_capacity must be positive");
+        anyhow::ensure!(options.max_batch >= 1, "max_batch must be positive");
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let geometry = Geometry {
+            inputs: engine.inputs() as u32,
+            outputs: engine.outputs() as u32,
+            cores: engine.num_cores() as u16,
+            lane_width: engine.lane_width() as u16,
+        };
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(Counters::default());
+        let (pump_tx, pump_rx) = mpsc::sync_channel::<PumpMsg>(options.queue_capacity);
+        let pump = {
+            let shutdown = shutdown.clone();
+            let counters = counters.clone();
+            std::thread::spawn(move || pump_loop(engine, pump_rx, shutdown, counters, options))
+        };
+        let accept = {
+            let shutdown = shutdown.clone();
+            let counters = counters.clone();
+            std::thread::spawn(move || {
+                accept_loop(listener, pump_tx, shutdown, counters, options, geometry)
+            })
+        };
+        Ok(SpikeServer { addr, shutdown, accept: Some(accept), pump: Some(pump), counters })
+    }
+
+    /// The bound address (resolves the actual port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.counters.snapshot()
+    }
+
+    /// Stop accepting, close every connection, drain the pump, and shut
+    /// the engine down. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SpikeServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    pump_tx: SyncSender<PumpMsg>,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    options: ServerOptions,
+    geometry: Geometry,
+) {
+    // Session ids are globally unique so logs and errors stay unambiguous
+    // across connections.
+    let session_ids = Arc::new(AtomicU32::new(1));
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                Counters::bump(&counters.connections);
+                let pump_tx = pump_tx.clone();
+                let shutdown = shutdown.clone();
+                let counters = counters.clone();
+                let session_ids = session_ids.clone();
+                conns.push(std::thread::spawn(move || {
+                    connection_loop(
+                        stream,
+                        pump_tx,
+                        shutdown,
+                        counters,
+                        options,
+                        geometry,
+                        session_ids,
+                    )
+                }));
+                // Reap finished connection threads so a long-lived server
+                // does not accumulate handles.
+                conns.retain(|h| !h.is_finished());
+            }
+            // Non-blocking listener: poll the shutdown flag between
+            // accepts (std has no accept timeout).
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    // Readers observe the flag via their read timeouts and exit; their
+    // pump senders drop with them, and dropping ours lets the pump see a
+    // disconnected queue even if it missed the flag.
+    drop(pump_tx);
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Send a typed rejection frame (best-effort: a dead writer means the
+/// connection is going away anyway).
+fn reject(reply: &Sender<Frame>, code: ErrorCode, session: u32, reference: u64, message: String) {
+    let _ = reply.send(Frame::Error { code, session, reference, message });
+}
+
+fn connection_loop(
+    stream: TcpStream,
+    pump_tx: SyncSender<PumpMsg>,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    options: ServerOptions,
+    geometry: Geometry,
+    session_ids: Arc<AtomicU32>,
+) {
+    let _ = stream.set_nodelay(true);
+    // The read timeout is the shutdown poll interval, not a client SLA:
+    // an idle socket surfaces as WireError::Idle and we just re-check the
+    // flag.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
+    let writer = std::thread::spawn(move || writer_loop(write_half, reply_rx));
+    let mut reader = BufReader::new(stream);
+    // Connection-local sessions: id → (in-flight counter, granted quota).
+    let mut sessions: HashMap<u32, (Arc<AtomicU32>, u32)> = HashMap::new();
+    let mut hello_done = false;
+    let fatal: Option<WireError> = loop {
+        let frame = match wire::read_frame(&mut reader, options.max_frame_len) {
+            Ok(Some(f)) => f,
+            Ok(None) => break None, // clean EOF
+            Err(WireError::Idle) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                continue;
+            }
+            Err(e) => break Some(e),
+        };
+        match frame {
+            Frame::Hello { version } => {
+                if version != wire::VERSION {
+                    break Some(WireError::BadValue("unsupported protocol version"));
+                }
+                hello_done = true;
+                let _ = reply_tx.send(Frame::HelloAck {
+                    version: wire::VERSION,
+                    inputs: geometry.inputs,
+                    outputs: geometry.outputs,
+                    cores: geometry.cores,
+                    lane_width: geometry.lane_width,
+                });
+            }
+            _ if !hello_done => break Some(WireError::BadValue("first frame must be Hello")),
+            Frame::OpenSession { max_inflight } => {
+                let granted = if max_inflight == 0 {
+                    options.max_inflight
+                } else {
+                    max_inflight.min(options.max_inflight)
+                };
+                let id = session_ids.fetch_add(1, Ordering::Relaxed);
+                sessions.insert(id, (Arc::new(AtomicU32::new(0)), granted));
+                Counters::bump(&counters.sessions);
+                let _ = reply_tx.send(Frame::SessionOpened { session: id, max_inflight: granted });
+            }
+            Frame::SubmitSample { session, sample, t_steps, inputs, spikes } => {
+                let Some((inflight, quota)) = sessions.get(&session) else {
+                    Counters::bump(&counters.rejects_bad);
+                    reject(
+                        &reply_tx,
+                        ErrorCode::BadSession,
+                        session,
+                        sample,
+                        format!("session {session} not open on this connection"),
+                    );
+                    continue;
+                };
+                if inputs != geometry.inputs || t_steps > options.max_t_steps {
+                    Counters::bump(&counters.rejects_bad);
+                    reject(
+                        &reply_tx,
+                        ErrorCode::BadSample,
+                        session,
+                        sample,
+                        format!(
+                            "sample geometry {inputs}x{t_steps} outside engine bounds \
+                             ({}x<= {})",
+                            geometry.inputs, options.max_t_steps
+                        ),
+                    );
+                    continue;
+                }
+                // Admission control: the session's quota first (this reader
+                // is the counter's only incrementer, so load+add is safe),
+                // then the shared pump queue.
+                if inflight.load(Ordering::Acquire) >= *quota {
+                    Counters::bump(&counters.rejects_overloaded);
+                    reject(
+                        &reply_tx,
+                        ErrorCode::Overloaded,
+                        session,
+                        sample,
+                        format!("session {session} already has {quota} samples in flight"),
+                    );
+                    continue;
+                }
+                inflight.fetch_add(1, Ordering::AcqRel);
+                let msg = PumpMsg::Submit {
+                    session,
+                    sample_id: sample,
+                    sample: wire::sample_from_submit(t_steps, inputs, &spikes),
+                    inflight: inflight.clone(),
+                    reply: reply_tx.clone(),
+                };
+                match pump_tx.try_send(msg) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+                        Counters::bump(&counters.rejects_overloaded);
+                        reject(
+                            &reply_tx,
+                            ErrorCode::Overloaded,
+                            session,
+                            sample,
+                            "server admission queue is full".to_string(),
+                        );
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+                        reject(
+                            &reply_tx,
+                            ErrorCode::Internal,
+                            session,
+                            sample,
+                            "server is shutting down".to_string(),
+                        );
+                    }
+                }
+            }
+            Frame::Reconfig { session, request, cfg, weights } => {
+                let Some((inflight, quota)) = sessions.get(&session) else {
+                    Counters::bump(&counters.rejects_bad);
+                    reject(
+                        &reply_tx,
+                        ErrorCode::BadSession,
+                        session,
+                        request,
+                        format!("session {session} not open on this connection"),
+                    );
+                    continue;
+                };
+                // Reconfigs occupy an in-flight slot too: one uniform bound
+                // on what a session may have queued.
+                if inflight.load(Ordering::Acquire) >= *quota {
+                    Counters::bump(&counters.rejects_overloaded);
+                    reject(
+                        &reply_tx,
+                        ErrorCode::Overloaded,
+                        session,
+                        request,
+                        format!("session {session} already has {quota} requests in flight"),
+                    );
+                    continue;
+                }
+                inflight.fetch_add(1, Ordering::AcqRel);
+                let msg = PumpMsg::Reconfig {
+                    session,
+                    request,
+                    program: wire::program_from_wire(&cfg, &weights),
+                    inflight: inflight.clone(),
+                    reply: reply_tx.clone(),
+                };
+                match pump_tx.try_send(msg) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+                        Counters::bump(&counters.rejects_overloaded);
+                        reject(
+                            &reply_tx,
+                            ErrorCode::Overloaded,
+                            session,
+                            request,
+                            "server admission queue is full".to_string(),
+                        );
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+                        reject(
+                            &reply_tx,
+                            ErrorCode::Internal,
+                            session,
+                            request,
+                            "server is shutting down".to_string(),
+                        );
+                    }
+                }
+            }
+            // Server→client frames arriving from a client violate the
+            // protocol.
+            Frame::HelloAck { .. }
+            | Frame::SessionOpened { .. }
+            | Frame::Result { .. }
+            | Frame::ReconfigAck { .. }
+            | Frame::Error { .. } => {
+                break Some(WireError::BadValue("client sent a server-side frame"));
+            }
+        }
+    };
+    if let Some(e) = fatal {
+        // Protocol violations kill this connection only: send the typed
+        // error, then close (the writer drains and exits when the last
+        // reply sender — possibly held by the pump for in-flight ops —
+        // drops).
+        Counters::bump(&counters.protocol_errors);
+        reject(&reply_tx, ErrorCode::BadFrame, 0, 0, e.to_string());
+    }
+    drop(reply_tx);
+    let _ = writer.join();
+}
+
+/// Connection writer: serializes reply frames onto the socket, batching
+/// whatever is queued behind one flush. Never blocks the pump (the reply
+/// channel is unbounded and bounded in practice by the admission quotas);
+/// after a write error it keeps draining and discarding so senders are
+/// never wedged on a dead peer.
+fn writer_loop(stream: TcpStream, rx: Receiver<Frame>) {
+    let mut w = BufWriter::new(stream);
+    let mut dead = false;
+    while let Ok(frame) = rx.recv() {
+        if !dead && wire::write_frame(&mut w, &frame).is_err() {
+            dead = true;
+        }
+        while let Ok(f) = rx.try_recv() {
+            if !dead && wire::write_frame(&mut w, &f).is_err() {
+                dead = true;
+            }
+        }
+        if !dead && w.flush().is_err() {
+            dead = true;
+        }
+    }
+}
+
+/// What one batch slot owes the client: a `Result` for a submit, a
+/// `ReconfigAck` (epoch pre-assigned — the pump is the only epoch source)
+/// for an accepted program.
+enum Slot {
+    Sample { index: usize },
+    Ack { session: u32, request: u64, epoch: u64, inflight: Arc<AtomicU32>, reply: Sender<Frame> },
+}
+
+/// The engine pump: the sole owner of the [`ServingEngine`]. Drains the
+/// reader queue into micro-batches, folds them into `run_session` calls
+/// (submits and in-band reconfigs in arrival order), and distributes
+/// results/acks/errors back onto each connection's reply channel.
+fn pump_loop(
+    mut engine: ServingEngine,
+    rx: Receiver<PumpMsg>,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    options: ServerOptions,
+) {
+    let control = engine.control_plane();
+    // Once the engine fails (worker panic, wedged shard) it stops serving,
+    // but the pump keeps answering every request with a typed Internal
+    // error — the process and all other tenants' connections stay alive.
+    let mut engine_dead: Option<String> = None;
+    loop {
+        let first = match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(m) => m,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        let mut batch = vec![first];
+        while batch.len() < options.max_batch {
+            match rx.try_recv() {
+                Ok(m) => batch.push(m),
+                Err(_) => break,
+            }
+        }
+        if let Some(msg) = &engine_dead {
+            for op in batch {
+                let (reply, inflight, session, reference) = match &op {
+                    PumpMsg::Submit { reply, inflight, session, sample_id, .. } => {
+                        (reply.clone(), inflight.clone(), *session, *sample_id)
+                    }
+                    PumpMsg::Reconfig { reply, inflight, session, request, .. } => {
+                        (reply.clone(), inflight.clone(), *session, *request)
+                    }
+                };
+                reject(&reply, ErrorCode::Internal, session, reference, msg.clone());
+                inflight.fetch_sub(1, Ordering::AcqRel);
+            }
+            continue;
+        }
+        // Decompose the batch: samples (kept alive for the borrow in
+        // SessionOp::Submit), per-submit reply metadata, and the op plan
+        // in arrival order. Malformed programs are rejected here,
+        // per-tenant, without failing anyone else's batch.
+        let mut samples: Vec<Sample> = Vec::new();
+        let mut submit_meta: Vec<(u32, u64, Arc<AtomicU32>, Sender<Frame>)> = Vec::new();
+        let mut programs: Vec<ReconfigProgram> = Vec::new();
+        let mut plan: Vec<Slot> = Vec::new();
+        let epoch_before = control.epoch();
+        let mut accepted_programs = 0u64;
+        for op in batch {
+            match op {
+                PumpMsg::Submit { session, sample_id, sample, inflight, reply } => {
+                    samples.push(sample);
+                    submit_meta.push((session, sample_id, inflight, reply));
+                    plan.push(Slot::Sample { index: samples.len() - 1 });
+                }
+                PumpMsg::Reconfig { session, request, program, inflight, reply } => {
+                    match control.validate(&program) {
+                        Ok(()) => {
+                            accepted_programs += 1;
+                            programs.push(program);
+                            plan.push(Slot::Ack {
+                                session,
+                                request,
+                                epoch: epoch_before + accepted_programs,
+                                inflight,
+                                reply,
+                            });
+                        }
+                        Err(e) => {
+                            Counters::bump(&counters.rejects_bad);
+                            reject(&reply, ErrorCode::BadProgram, session, request, e.to_string());
+                            inflight.fetch_sub(1, Ordering::AcqRel);
+                        }
+                    }
+                }
+            }
+        }
+        if plan.is_empty() {
+            continue;
+        }
+        let mut program_iter = programs.into_iter();
+        let ops: Vec<SessionOp> = plan
+            .iter()
+            .map(|slot| match slot {
+                Slot::Sample { index } => SessionOp::Submit(&samples[*index]),
+                Slot::Ack { .. } => SessionOp::Reconfig(
+                    program_iter.next().expect("one program per ack slot"),
+                ),
+            })
+            .collect();
+        match engine.run_session(&ops) {
+            Ok(results) => {
+                debug_assert_eq!(results.len(), submit_meta.len(), "one result per submit");
+                let mut result_iter = results.into_iter();
+                for slot in plan {
+                    match slot {
+                        Slot::Sample { index } => {
+                            let (session, sample_id, inflight, reply) = &submit_meta[index];
+                            if let Some(r) = result_iter.next() {
+                                Counters::bump(&counters.samples_served);
+                                let _ = reply.send(Frame::Result {
+                                    session: *session,
+                                    sample: *sample_id,
+                                    epoch: r.epoch,
+                                    prediction: r.prediction as u32,
+                                    spikes_total: r.spikes_total,
+                                    counts: r.counts,
+                                });
+                            }
+                            inflight.fetch_sub(1, Ordering::AcqRel);
+                        }
+                        Slot::Ack { session, request, epoch, inflight, reply } => {
+                            Counters::bump(&counters.reconfigs_applied);
+                            let _ = reply.send(Frame::ReconfigAck { session, request, epoch });
+                            inflight.fetch_sub(1, Ordering::AcqRel);
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                Counters::bump(&counters.engine_failures);
+                let msg = format!("serving engine failed: {e:#}");
+                engine_dead = Some(msg.clone());
+                for slot in plan {
+                    match slot {
+                        Slot::Sample { index } => {
+                            let (session, sample_id, inflight, reply) = &submit_meta[index];
+                            reject(reply, ErrorCode::Internal, *session, *sample_id, msg.clone());
+                            inflight.fetch_sub(1, Ordering::AcqRel);
+                        }
+                        Slot::Ack { session, request, inflight, reply, .. } => {
+                            reject(&reply, ErrorCode::Internal, session, request, msg.clone());
+                            inflight.fetch_sub(1, Ordering::AcqRel);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Engine drops here: its Drop joins every shard thread.
+}

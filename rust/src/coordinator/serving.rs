@@ -75,6 +75,46 @@ use super::interface::BusStats;
 
 pub use super::pipeline::StreamResult;
 
+/// Typed failure of the serving data path.
+///
+/// The variant that matters operationally is [`WorkerPanicked`]
+/// (`ServingError::WorkerPanicked`): a stage/feeder/collector thread
+/// panicking used to take down the whole process via
+/// `join().expect(...)` — fatal once many tenants share one engine
+/// behind the network front door. A panic now surfaces as this error
+/// (carrying the panic payload's message), the engine shuts itself down,
+/// and the process — and every other tenant's connection — stays alive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServingError {
+    /// A worker thread panicked; `worker` names it and `message` is the
+    /// stringified panic payload. The engine is shut down but droppable.
+    WorkerPanicked { worker: String, message: String },
+}
+
+impl std::fmt::Display for ServingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServingError::WorkerPanicked { worker, message } => {
+                write!(f, "serving {worker} panicked: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServingError {}
+
+/// Stringify a `JoinHandle::join` panic payload (panics carry `&str` or
+/// `String` in practice; anything else is reported opaquely).
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
 /// Message flowing down a shard's stage chain: one timestep's bit-packed
 /// spike plane (a recycled pool buffer — see the module docs), the Fig.-8
 /// settle marker that ends a stream (accumulating the stream's activity
@@ -187,6 +227,12 @@ pub(crate) fn stage_loop(
                 }
             }
             StageMsg::Reconfig { epoch, program } => {
+                if program.chaos_panic_stage == Some(layer_idx) {
+                    // Fault-injection hook (see ReconfigProgram): prove a
+                    // worker panic becomes ServingError::WorkerPanicked,
+                    // not a process abort.
+                    panic!("chaos program panicked stage {layer_idx}");
+                }
                 // Programs are validated by the control plane before they
                 // are admitted, so stage-side application is infallible —
                 // a half-applied config cannot exist.
@@ -457,6 +503,7 @@ struct Shard {
 pub struct ServingEngine {
     shards: Vec<Shard>,
     inputs: usize,
+    outputs: usize,
     /// Physical synaptic storage words per shard (topology-aware stores).
     synapse_words: usize,
     /// Control-plane state shared with every [`ControlPlane`] handle.
@@ -580,6 +627,7 @@ impl ServingEngine {
         Ok(ServingEngine {
             shards,
             inputs: config.inputs(),
+            outputs: n_out,
             synapse_words,
             control,
             plane_pool,
@@ -594,6 +642,18 @@ impl ServingEngine {
     /// Samples stepped per shard message (1 = single-sample path).
     pub fn lane_width(&self) -> usize {
         self.lane_width
+    }
+
+    /// Spike lines of the input layer (spk_in width) — the sample width
+    /// every admitted stream must match.
+    pub fn inputs(&self) -> usize {
+        self.inputs
+    }
+
+    /// Neurons of the output layer (spk_out width) — the arity of every
+    /// [`StreamResult::counts`].
+    pub fn outputs(&self) -> usize {
+        self.outputs
     }
 
     pub fn num_cores(&self) -> usize {
@@ -840,7 +900,18 @@ impl ServingEngine {
                     std::thread::sleep(std::time::Duration::from_millis(10));
                 }
             }
-            let fed = feeder.join().expect("feeder panicked");
+            // The feeder is joined explicitly (never `expect`ed): a panic
+            // there must become a typed error, not a process abort.
+            let fed = match feeder.join() {
+                Ok(r) => r,
+                Err(payload) => {
+                    return Err(ServingError::WorkerPanicked {
+                        worker: "session feeder".to_string(),
+                        message: panic_message(payload),
+                    }
+                    .into())
+                }
+            };
             if let Some(e) = first_err {
                 return Err(e);
             }
@@ -869,9 +940,50 @@ impl ServingEngine {
             }
             Err(e) => {
                 self.poisoned = true;
-                Err(e)
+                // If the batch died because a shard worker panicked,
+                // surface the typed panic error instead of the generic
+                // drain failure, then leave the engine shut down but
+                // droppable (Drop re-runs the idempotent shutdown).
+                let panicked = self.harvest_worker_panic();
+                self.shutdown();
+                match panicked {
+                    Some(err) => Err(err.into()),
+                    None => Err(e),
+                }
             }
         }
+    }
+
+    /// After a failed batch, reap every shard thread that has already
+    /// exited and report the first panic payload found. Only finished
+    /// threads are joined (a healthy upstream stage may be parked on its
+    /// input channel), and a panicked thread finishes unwinding within
+    /// microseconds of killing the batch — polled briefly to close that
+    /// race without ever blocking on a live worker.
+    fn harvest_worker_panic(&mut self) -> Option<ServingError> {
+        for _ in 0..50 {
+            let mut found = None;
+            for (shard_idx, shard) in self.shards.iter_mut().enumerate() {
+                let mut i = 0;
+                while i < shard.threads.len() {
+                    if shard.threads[i].is_finished() {
+                        if let Err(payload) = shard.threads.remove(i).join() {
+                            found.get_or_insert(ServingError::WorkerPanicked {
+                                worker: format!("shard {shard_idx} worker"),
+                                message: panic_message(payload),
+                            });
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            if found.is_some() {
+                return found;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        None
     }
 
     /// Drop the admission side and join all stage threads. Keeps draining
@@ -1273,6 +1385,65 @@ mod tests {
         let bus = engine.bus();
         assert_eq!(bus.wt_writes, 2 * weights[1].len() as u64);
         assert!(bus.spk_in_events > 0 && bus.beats() > bus.wt_writes);
+    }
+
+    #[test]
+    fn panicked_worker_yields_typed_error_not_abort() {
+        // The headline bugfix: a panicking stage thread used to take the
+        // whole process down through `join().expect(...)`. Inject a panic
+        // into stage 1 of every shard via a chaos program and require a
+        // typed ServingError::WorkerPanicked instead — the process (and
+        // every other tenant) stays alive.
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        let ops = [
+            SessionOp::Submit(&samples[0]),
+            SessionOp::Reconfig(ReconfigProgram::new().chaos_panic(1)),
+            SessionOp::Submit(&samples[1]),
+        ];
+        let err = engine.run_session(&ops).unwrap_err();
+        let ServingError::WorkerPanicked { worker, message } = err
+            .downcast_ref::<ServingError>()
+            .expect("panic must surface as the typed ServingError");
+        assert!(worker.contains("shard"), "panic attributed to a shard worker: {worker}");
+        assert!(message.contains("chaos"), "panic payload preserved: {message}");
+        // Shut-down-but-droppable: the engine refuses further batches with
+        // a poisoned-engine error, and dropping it is clean.
+        let refused = engine.run_batch(&samples[..1]).unwrap_err();
+        assert!(refused.to_string().contains("poisoned"), "{refused}");
+        drop(engine);
+    }
+
+    #[test]
+    fn panicked_pipeline_stage_yields_typed_error() {
+        // Same contract for the one-shot scoped executor: a worker panic
+        // must become ServingError::WorkerPanicked, never a scope-exit
+        // abort. Drive the shared stage_loop directly with a chaos program.
+        let chain = std::thread::scope(|scope| {
+            let (tx_in, rx_in) = sync_channel::<StageMsg>(4);
+            let (tx_out, rx_out) = sync_channel::<StageMsg>(4);
+            let cfg = ModelConfig::parse_arch("4x3", Q5_3).unwrap();
+            let layer = build_layers(&cfg, &[vec![0; 12]]).unwrap().remove(0);
+            let handle = scope.spawn(move || {
+                stage_loop(
+                    0,
+                    layer,
+                    RegisterFile::new(Q5_3),
+                    rx_in,
+                    tx_out,
+                    Vec::new(),
+                    Vec::new(),
+                )
+            });
+            let program = Arc::new(ReconfigProgram::new().chaos_panic(0));
+            tx_in.send(StageMsg::Reconfig { epoch: 1, program }).unwrap();
+            drop(tx_in);
+            drop(rx_out);
+            handle.join()
+        });
+        let payload = chain.expect_err("stage must have panicked");
+        assert!(panic_message(payload).contains("chaos"));
     }
 
     #[test]

@@ -1,0 +1,724 @@
+//! Binary spike-frame wire protocol — the network front door's frame
+//! grammar (std-only, zero-dep, mirroring the transport/core split of
+//! FEAGI's `feagi-transports` next to the neural core crates).
+//!
+//! The paper's hardware–software interface streams spikes onto the core
+//! through three channels (spk_in, cfg_in, wt_in); this module is the
+//! network twin of that interface: a compact, length-prefixed binary
+//! framing that carries bit-packed spike trains ([`Frame::SubmitSample`]),
+//! control-plane programs ([`Frame::Reconfig`] → cfg_in/wt_in), and their
+//! results back ([`Frame::Result`]) over one TCP byte stream.
+//!
+//! ## Frame grammar
+//!
+//! Every frame on the wire is
+//!
+//! ```text
+//! u32 LE  body length N (1 ..= max_frame_len)
+//! u8      frame type (see the [`Frame`] discriminants)
+//! ...     N-1 bytes of type-specific payload, all integers LE
+//! ```
+//!
+//! | type | frame            | payload |
+//! |------|------------------|---------|
+//! | 1    | `Hello`          | magic `u32` (`QSNC`), version `u16` |
+//! | 2    | `HelloAck`       | version `u16`, inputs `u32`, outputs `u32`, cores `u16`, lane_width `u16` |
+//! | 3    | `OpenSession`    | requested max in-flight `u32` (0 = server default) |
+//! | 4    | `SessionOpened`  | session `u32`, granted max in-flight `u32` |
+//! | 5    | `SubmitSample`   | session `u32`, sample id `u64`, t_steps `u32`, inputs `u32`, bit-packed spikes `⌈t·i/8⌉` bytes |
+//! | 6    | `Reconfig`       | session `u32`, request id `u64`, n_cfg `u16`, n_cfg × (addr `u16`, value `i32`), n_swap `u16`, n_swap × (layer `u16`, words `u32`, words × `i32`) |
+//! | 7    | `Result`         | session `u32`, sample id `u64`, epoch `u64`, prediction `u32`, spikes_total `u64`, n_counts `u16`, n_counts × `u32` |
+//! | 8    | `ReconfigAck`    | session `u32`, request id `u64`, epoch `u64` |
+//! | 9    | `Error`          | code `u16`, session `u32`, reference id `u64`, msg_len `u16`, UTF-8 message |
+//!
+//! Spike payloads are bit-packed row-major (timestep-major, LSB-first
+//! within each byte) — the AER-flavoured dense encoding: 8 spike lines per
+//! byte instead of one, so a 700-input SHD step is 88 bytes on the wire.
+//!
+//! ## Robustness contract
+//!
+//! Decoding NEVER panics and never trusts a length field it has not
+//! checked against the bytes actually present: every read is
+//! bounds-checked ([`WireError::Truncated`]), oversized frames are
+//! rejected before allocation ([`WireError::TooLarge`]), undecoded
+//! trailing bytes are an error ([`WireError::TrailingBytes`]), and all
+//! rejections are typed [`WireError`]s — property/fuzz-tested in
+//! `rust/tests/wire_protocol.rs` against random, truncated, and garbage
+//! frames.
+
+use std::io::{self, Read, Write};
+
+use super::control::ReconfigProgram;
+use crate::datasets::Sample;
+
+/// First payload word of every [`Frame::Hello`]: `"QSNC"` little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"QSNC");
+
+/// Protocol version spoken by this build.
+pub const VERSION: u16 = 1;
+
+/// Default cap on one frame's body length (16 MiB): large enough for a
+/// full wt_in weight swap of any shipped model, small enough that a
+/// hostile length prefix cannot balloon server memory.
+pub const DEFAULT_MAX_FRAME_LEN: u32 = 16 * 1024 * 1024;
+
+/// Typed rejection codes carried by [`Frame::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Admission control refused the sample: the session already has its
+    /// full in-flight quota (or the server queue is full). Back off and
+    /// resubmit; nothing was enqueued.
+    Overloaded,
+    /// The frame referenced a session id this connection never opened.
+    BadSession,
+    /// A `Reconfig` program failed control-plane validation; nothing was
+    /// applied and no epoch was burned.
+    BadProgram,
+    /// A `SubmitSample` did not match the engine geometry (input width or
+    /// timestep bounds).
+    BadSample,
+    /// The byte stream violated the frame grammar; the server closes the
+    /// connection after sending this.
+    BadFrame,
+    /// The serving engine failed (e.g. a worker panicked). The process
+    /// stays alive but this engine no longer serves.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_u16(self) -> u16 {
+        match self {
+            ErrorCode::Overloaded => 1,
+            ErrorCode::BadSession => 2,
+            ErrorCode::BadProgram => 3,
+            ErrorCode::BadSample => 4,
+            ErrorCode::BadFrame => 5,
+            ErrorCode::Internal => 6,
+        }
+    }
+
+    pub fn from_u16(v: u16) -> Option<ErrorCode> {
+        Some(match v {
+            1 => ErrorCode::Overloaded,
+            2 => ErrorCode::BadSession,
+            3 => ErrorCode::BadProgram,
+            4 => ErrorCode::BadSample,
+            5 => ErrorCode::BadFrame,
+            6 => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+/// One protocol frame (see the module-level grammar table).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Hello { version: u16 },
+    HelloAck { version: u16, inputs: u32, outputs: u32, cores: u16, lane_width: u16 },
+    OpenSession { max_inflight: u32 },
+    SessionOpened { session: u32, max_inflight: u32 },
+    /// One spike-train sample: `spikes` is the bit-packed row-major
+    /// `t_steps × inputs` binary matrix (LSB-first), exactly
+    /// `(t_steps * inputs + 7) / 8` bytes.
+    SubmitSample { session: u32, sample: u64, t_steps: u32, inputs: u32, spikes: Vec<u8> },
+    Reconfig { session: u32, request: u64, cfg: Vec<(u16, i32)>, weights: Vec<(u16, Vec<i32>)> },
+    Result {
+        session: u32,
+        sample: u64,
+        epoch: u64,
+        prediction: u32,
+        spikes_total: u64,
+        counts: Vec<u32>,
+    },
+    ReconfigAck { session: u32, request: u64, epoch: u64 },
+    Error { code: ErrorCode, session: u32, reference: u64, message: String },
+}
+
+/// Typed decode/transport failure. Every malformed input maps here — the
+/// codec never panics on wire data.
+#[derive(Debug)]
+pub enum WireError {
+    /// Transport-level I/O failure (includes read timeouts).
+    Io(io::Error),
+    /// The byte stream ended (or the frame body ran out) mid-field.
+    Truncated { what: &'static str },
+    /// A length prefix exceeded the configured frame cap.
+    TooLarge { len: u32, max: u32 },
+    /// A frame body decoded cleanly but left undecoded bytes behind.
+    TrailingBytes { frame: &'static str, extra: usize },
+    /// Unknown frame type byte.
+    BadType(u8),
+    /// A `Hello` carried the wrong magic word.
+    BadMagic(u32),
+    /// A field held a value outside its domain (bad error code, bit-pack
+    /// arity mismatch, non-UTF-8 message, ...).
+    BadValue(&'static str),
+    /// The socket was idle past its read timeout *between* frames — not a
+    /// protocol violation; callers poll their shutdown flag and retry.
+    Idle,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+            WireError::Truncated { what } => write!(f, "truncated frame: {what}"),
+            WireError::TooLarge { len, max } => {
+                write!(f, "frame length {len} exceeds the {max}-byte cap")
+            }
+            WireError::TrailingBytes { frame, extra } => {
+                write!(f, "{frame} frame has {extra} trailing bytes")
+            }
+            WireError::BadType(t) => write!(f, "unknown frame type {t:#04x}"),
+            WireError::BadMagic(m) => {
+                write!(f, "bad hello magic {m:#010x} (expected {MAGIC:#010x})")
+            }
+            WireError::BadValue(what) => write!(f, "bad field value: {what}"),
+            WireError::Idle => write!(f, "socket idle past its read timeout"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// Bounds-checked little-endian reader over one frame body.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { what });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, WireError> {
+        let s = self.take(2, what)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn i32(&mut self, what: &'static str) -> Result<i32, WireError> {
+        Ok(self.u32(what)? as i32)
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, WireError> {
+        let s = self.take(8, what)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+}
+
+impl Frame {
+    /// Human-readable frame name (diagnostics and trailing-byte errors).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::HelloAck { .. } => "HelloAck",
+            Frame::OpenSession { .. } => "OpenSession",
+            Frame::SessionOpened { .. } => "SessionOpened",
+            Frame::SubmitSample { .. } => "SubmitSample",
+            Frame::Reconfig { .. } => "Reconfig",
+            Frame::Result { .. } => "Result",
+            Frame::ReconfigAck { .. } => "ReconfigAck",
+            Frame::Error { .. } => "Error",
+        }
+    }
+
+    fn type_byte(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 1,
+            Frame::HelloAck { .. } => 2,
+            Frame::OpenSession { .. } => 3,
+            Frame::SessionOpened { .. } => 4,
+            Frame::SubmitSample { .. } => 5,
+            Frame::Reconfig { .. } => 6,
+            Frame::Result { .. } => 7,
+            Frame::ReconfigAck { .. } => 8,
+            Frame::Error { .. } => 9,
+        }
+    }
+
+    /// Serialize this frame's body (everything after the length prefix).
+    /// Encoding is infallible for frames built through the typed API;
+    /// arity overflows (> u16::MAX cfg writes, counts, ...) are reported
+    /// as [`WireError::BadValue`] instead of being silently truncated.
+    pub fn encode(&self) -> Result<Vec<u8>, WireError> {
+        let mut out = Vec::with_capacity(16);
+        out.push(self.type_byte());
+        match self {
+            Frame::Hello { version } => {
+                out.extend_from_slice(&MAGIC.to_le_bytes());
+                out.extend_from_slice(&version.to_le_bytes());
+            }
+            Frame::HelloAck { version, inputs, outputs, cores, lane_width } => {
+                out.extend_from_slice(&version.to_le_bytes());
+                out.extend_from_slice(&inputs.to_le_bytes());
+                out.extend_from_slice(&outputs.to_le_bytes());
+                out.extend_from_slice(&cores.to_le_bytes());
+                out.extend_from_slice(&lane_width.to_le_bytes());
+            }
+            Frame::OpenSession { max_inflight } => {
+                out.extend_from_slice(&max_inflight.to_le_bytes());
+            }
+            Frame::SessionOpened { session, max_inflight } => {
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&max_inflight.to_le_bytes());
+            }
+            Frame::SubmitSample { session, sample, t_steps, inputs, spikes } => {
+                let expect = packed_len(*t_steps as u64 * *inputs as u64);
+                if spikes.len() as u64 != expect {
+                    return Err(WireError::BadValue("spike payload arity"));
+                }
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&sample.to_le_bytes());
+                out.extend_from_slice(&t_steps.to_le_bytes());
+                out.extend_from_slice(&inputs.to_le_bytes());
+                out.extend_from_slice(spikes);
+            }
+            Frame::Reconfig { session, request, cfg, weights } => {
+                if cfg.len() > u16::MAX as usize || weights.len() > u16::MAX as usize {
+                    return Err(WireError::BadValue("reconfig arity"));
+                }
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&request.to_le_bytes());
+                out.extend_from_slice(&(cfg.len() as u16).to_le_bytes());
+                for (addr, value) in cfg {
+                    out.extend_from_slice(&addr.to_le_bytes());
+                    out.extend_from_slice(&value.to_le_bytes());
+                }
+                out.extend_from_slice(&(weights.len() as u16).to_le_bytes());
+                for (layer, payload) in weights {
+                    if payload.len() > u32::MAX as usize {
+                        return Err(WireError::BadValue("weight payload arity"));
+                    }
+                    out.extend_from_slice(&layer.to_le_bytes());
+                    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                    for w in payload {
+                        out.extend_from_slice(&w.to_le_bytes());
+                    }
+                }
+            }
+            Frame::Result { session, sample, epoch, prediction, spikes_total, counts } => {
+                if counts.len() > u16::MAX as usize {
+                    return Err(WireError::BadValue("counts arity"));
+                }
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&sample.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
+                out.extend_from_slice(&prediction.to_le_bytes());
+                out.extend_from_slice(&spikes_total.to_le_bytes());
+                out.extend_from_slice(&(counts.len() as u16).to_le_bytes());
+                for c in counts {
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+            }
+            Frame::ReconfigAck { session, request, epoch } => {
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&request.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
+            }
+            Frame::Error { code, session, reference, message } => {
+                let msg = message.as_bytes();
+                if msg.len() > u16::MAX as usize {
+                    return Err(WireError::BadValue("error message length"));
+                }
+                out.extend_from_slice(&code.as_u16().to_le_bytes());
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&reference.to_le_bytes());
+                out.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+                out.extend_from_slice(msg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode one frame body (the bytes after the length prefix). Every
+    /// failure is a typed [`WireError`]; this function never panics on
+    /// arbitrary input and never allocates more than the body it was
+    /// handed (counts are validated against the bytes actually present
+    /// before any buffer is sized from them).
+    pub fn decode(body: &[u8]) -> Result<Frame, WireError> {
+        let mut c = Cursor::new(body);
+        let t = c.u8("frame type")?;
+        let frame = match t {
+            1 => {
+                let magic = c.u32("hello magic")?;
+                if magic != MAGIC {
+                    return Err(WireError::BadMagic(magic));
+                }
+                Frame::Hello { version: c.u16("hello version")? }
+            }
+            2 => Frame::HelloAck {
+                version: c.u16("helloack version")?,
+                inputs: c.u32("helloack inputs")?,
+                outputs: c.u32("helloack outputs")?,
+                cores: c.u16("helloack cores")?,
+                lane_width: c.u16("helloack lane width")?,
+            },
+            3 => Frame::OpenSession { max_inflight: c.u32("open max_inflight")? },
+            4 => Frame::SessionOpened {
+                session: c.u32("opened session")?,
+                max_inflight: c.u32("opened max_inflight")?,
+            },
+            5 => {
+                let session = c.u32("submit session")?;
+                let sample = c.u64("submit sample id")?;
+                let t_steps = c.u32("submit t_steps")?;
+                let inputs = c.u32("submit inputs")?;
+                let expect = packed_len(t_steps as u64 * inputs as u64);
+                if c.remaining() as u64 != expect {
+                    // Too few is truncation, too many is trailing garbage;
+                    // either way the declared geometry and the payload
+                    // disagree.
+                    return Err(WireError::BadValue("spike payload arity"));
+                }
+                let spikes = c.take(expect as usize, "submit spikes")?.to_vec();
+                Frame::SubmitSample { session, sample, t_steps, inputs, spikes }
+            }
+            6 => {
+                let session = c.u32("reconfig session")?;
+                let request = c.u64("reconfig request id")?;
+                let n_cfg = c.u16("reconfig n_cfg")? as usize;
+                let mut cfg = Vec::new();
+                for _ in 0..n_cfg {
+                    let addr = c.u16("reconfig cfg addr")?;
+                    let value = c.i32("reconfig cfg value")?;
+                    cfg.push((addr, value));
+                }
+                let n_swap = c.u16("reconfig n_swap")? as usize;
+                let mut weights = Vec::new();
+                for _ in 0..n_swap {
+                    let layer = c.u16("reconfig swap layer")?;
+                    let words = c.u32("reconfig swap words")? as usize;
+                    // Validate the byte count *before* sizing a buffer from
+                    // the attacker-controlled word count.
+                    let raw = c.take(
+                        words.checked_mul(4).ok_or(WireError::BadValue("swap word count"))?,
+                        "reconfig swap payload",
+                    )?;
+                    let payload = raw
+                        .chunks_exact(4)
+                        .map(|s| i32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+                        .collect();
+                    weights.push((layer, payload));
+                }
+                Frame::Reconfig { session, request, cfg, weights }
+            }
+            7 => {
+                let session = c.u32("result session")?;
+                let sample = c.u64("result sample id")?;
+                let epoch = c.u64("result epoch")?;
+                let prediction = c.u32("result prediction")?;
+                let spikes_total = c.u64("result spikes_total")?;
+                let n = c.u16("result n_counts")? as usize;
+                let raw = c.take(
+                    n.checked_mul(4).ok_or(WireError::BadValue("counts arity"))?,
+                    "result counts",
+                )?;
+                let counts =
+                    raw.chunks_exact(4).map(|s| u32::from_le_bytes([s[0], s[1], s[2], s[3]])).collect();
+                Frame::Result { session, sample, epoch, prediction, spikes_total, counts }
+            }
+            8 => Frame::ReconfigAck {
+                session: c.u32("ack session")?,
+                request: c.u64("ack request id")?,
+                epoch: c.u64("ack epoch")?,
+            },
+            9 => {
+                let code = ErrorCode::from_u16(c.u16("error code")?)
+                    .ok_or(WireError::BadValue("error code"))?;
+                let session = c.u32("error session")?;
+                let reference = c.u64("error reference")?;
+                let n = c.u16("error msg_len")? as usize;
+                let raw = c.take(n, "error message")?;
+                let message = std::str::from_utf8(raw)
+                    .map_err(|_| WireError::BadValue("error message utf-8"))?
+                    .to_string();
+                Frame::Error { code, session, reference, message }
+            }
+            other => return Err(WireError::BadType(other)),
+        };
+        if c.remaining() != 0 {
+            return Err(WireError::TrailingBytes { frame: frame.name(), extra: c.remaining() });
+        }
+        Ok(frame)
+    }
+}
+
+/// Bytes needed to bit-pack `bits` spike lines.
+fn packed_len(bits: u64) -> u64 {
+    (bits + 7) / 8
+}
+
+/// Bit-pack a 0/1 byte vector LSB-first (the wire spike encoding).
+pub fn pack_bits(bits: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; (bits.len() + 7) / 8];
+    for (i, &b) in bits.iter().enumerate() {
+        if b != 0 {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+/// Expand `n` LSB-first packed bits back to a 0/1 byte vector.
+pub fn unpack_bits(packed: &[u8], n: usize) -> Vec<u8> {
+    (0..n).map(|i| (packed[i / 8] >> (i % 8)) & 1).collect()
+}
+
+/// Encode a [`Sample`] as a `SubmitSample` frame.
+pub fn submit_from_sample(session: u32, sample_id: u64, s: &Sample) -> Frame {
+    Frame::SubmitSample {
+        session,
+        sample: sample_id,
+        t_steps: s.t_steps as u32,
+        inputs: s.inputs as u32,
+        spikes: pack_bits(&s.spikes),
+    }
+}
+
+/// Reassemble the [`Sample`] carried by a `SubmitSample` frame (label 0 —
+/// the wire carries stimuli, not supervision).
+pub fn sample_from_submit(t_steps: u32, inputs: u32, spikes: &[u8]) -> Sample {
+    let n = t_steps as usize * inputs as usize;
+    Sample { spikes: unpack_bits(spikes, n), t_steps: t_steps as usize, inputs: inputs as usize, label: 0 }
+}
+
+/// Convert a wire `Reconfig` frame into a control-plane program (the
+/// validation against engine geometry happens in the control plane, not
+/// here).
+pub fn program_from_wire(cfg: &[(u16, i32)], weights: &[(u16, Vec<i32>)]) -> ReconfigProgram {
+    let mut p = ReconfigProgram::new();
+    for &(addr, value) in cfg {
+        p = p.write(addr as usize, value);
+    }
+    for (layer, payload) in weights {
+        p = p.swap_weights(*layer as usize, payload.clone());
+    }
+    p
+}
+
+/// Encode a control-plane program as a wire `Reconfig` frame. Fails with
+/// [`WireError::BadValue`] if an address or layer index does not fit the
+/// wire's `u16` fields (no real engine is near either bound).
+pub fn program_to_wire(
+    session: u32,
+    request: u64,
+    program: &ReconfigProgram,
+) -> Result<Frame, WireError> {
+    let mut cfg = Vec::with_capacity(program.cfg.len());
+    for &(addr, value) in &program.cfg {
+        if addr > u16::MAX as usize {
+            return Err(WireError::BadValue("cfg address beyond u16"));
+        }
+        cfg.push((addr as u16, value));
+    }
+    let mut weights = Vec::with_capacity(program.weights.len());
+    for (layer, payload) in &program.weights {
+        if *layer > u16::MAX as usize {
+            return Err(WireError::BadValue("layer index beyond u16"));
+        }
+        weights.push((*layer as u16, payload.clone()));
+    }
+    Ok(Frame::Reconfig { session, request, cfg, weights })
+}
+
+/// Write one length-prefixed frame. The caller flushes (batching several
+/// frames per flush is the intended fast path).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), WireError> {
+    let body = frame.encode()?;
+    let len = u32::try_from(body.len()).map_err(|_| WireError::BadValue("frame too long"))?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&body)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.
+///
+/// * `Ok(None)` — the peer closed the stream cleanly *between* frames.
+/// * `Err(WireError::Idle)` — a read timeout fired between frames (the
+///   socket has a timeout configured); poll your shutdown flag and retry.
+/// * any other error — protocol violation or transport failure.
+pub fn read_frame<R: Read>(r: &mut R, max_len: u32) -> Result<Option<Frame>, WireError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(WireError::Truncated { what: "length prefix" })
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if got == 0
+                    && matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                return Err(WireError::Idle);
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 {
+        return Err(WireError::Truncated { what: "empty frame body" });
+    }
+    if len > max_len {
+        return Err(WireError::TooLarge { len, max: max_len });
+    }
+    let mut body = vec![0u8; len as usize];
+    let mut filled = 0usize;
+    while filled < body.len() {
+        match r.read(&mut body[filled..]) {
+            Ok(0) => return Err(WireError::Truncated { what: "frame body" }),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Frame::decode(&body).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let bits: Vec<u8> = (0..37).map(|i| (i % 3 == 0) as u8).collect();
+        let packed = pack_bits(&bits);
+        assert_eq!(packed.len(), 5);
+        assert_eq!(unpack_bits(&packed, bits.len()), bits);
+        assert!(pack_bits(&[]).is_empty());
+        assert!(unpack_bits(&[], 0).is_empty());
+    }
+
+    #[test]
+    fn frame_roundtrip_through_a_stream() {
+        let frames = vec![
+            Frame::Hello { version: VERSION },
+            Frame::HelloAck { version: 1, inputs: 256, outputs: 10, cores: 2, lane_width: 64 },
+            Frame::OpenSession { max_inflight: 0 },
+            Frame::SessionOpened { session: 7, max_inflight: 64 },
+            Frame::SubmitSample {
+                session: 7,
+                sample: 42,
+                t_steps: 3,
+                inputs: 5,
+                spikes: pack_bits(&[1, 0, 1, 0, 0, 1, 1, 1, 0, 0, 0, 0, 1, 0, 1]),
+            },
+            Frame::Reconfig {
+                session: 7,
+                request: 9,
+                cfg: vec![(2, 16), (0, -3)],
+                weights: vec![(1, vec![1, -7, 0])],
+            },
+            Frame::Result {
+                session: 7,
+                sample: 42,
+                epoch: 1,
+                prediction: 3,
+                spikes_total: 17,
+                counts: vec![0, 1, 2, 9],
+            },
+            Frame::ReconfigAck { session: 7, request: 9, epoch: 1 },
+            Frame::Error {
+                code: ErrorCode::Overloaded,
+                session: 7,
+                reference: 43,
+                message: "session quota full".into(),
+            },
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = io::Cursor::new(buf);
+        for f in &frames {
+            let got = read_frame(&mut r, DEFAULT_MAX_FRAME_LEN).unwrap().unwrap();
+            assert_eq!(&got, f);
+        }
+        assert!(read_frame(&mut r, DEFAULT_MAX_FRAME_LEN).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn oversized_and_malformed_frames_are_typed_errors() {
+        // Hostile length prefix: rejected before any allocation.
+        let mut r = io::Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(matches!(read_frame(&mut r, 1024), Err(WireError::TooLarge { .. })));
+        // Zero-length body.
+        let mut r = io::Cursor::new(0u32.to_le_bytes().to_vec());
+        assert!(matches!(read_frame(&mut r, 1024), Err(WireError::Truncated { .. })));
+        // Unknown type byte.
+        assert!(matches!(Frame::decode(&[0xEE]), Err(WireError::BadType(0xEE))));
+        // Bad magic.
+        let mut body = vec![1u8];
+        body.extend_from_slice(&0xDEADBEEFu32.to_le_bytes());
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        assert!(matches!(Frame::decode(&body), Err(WireError::BadMagic(0xDEADBEEF))));
+        // Trailing bytes.
+        let mut ok = Frame::OpenSession { max_inflight: 4 }.encode().unwrap();
+        ok.push(0);
+        assert!(matches!(Frame::decode(&ok), Err(WireError::TrailingBytes { .. })));
+        // Spike arity mismatch.
+        let bad = Frame::SubmitSample {
+            session: 1,
+            sample: 1,
+            t_steps: 8,
+            inputs: 8,
+            spikes: vec![0; 3], // needs 8
+        };
+        assert!(matches!(bad.encode(), Err(WireError::BadValue(_))));
+    }
+
+    #[test]
+    fn program_conversion_roundtrip() {
+        let p = ReconfigProgram::new().write(2, 16).swap_weights(1, vec![3, -3]);
+        let f = program_to_wire(9, 1, &p).unwrap();
+        match &f {
+            Frame::Reconfig { cfg, weights, .. } => {
+                assert_eq!(program_from_wire(cfg, weights), p);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

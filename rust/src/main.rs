@@ -8,6 +8,7 @@
 //! repro figure <id>           regenerate a paper figure (3, 4, 10, 12, 13, 14)
 //! repro all                   every table & figure, in paper order
 //! repro serve [opts]          batched inference over the ServingEngine
+//! repro loadgen [opts]        open-loop load generator for the front door
 //! repro explore <arch> [Q]    DSE estimate for an architecture on all boards
 //! repro codegen <arch>        emit Verilog HDL + self-checking testbench
 //! repro bench-check <json>..  validate BENCH_*.json perf reports
@@ -16,13 +17,23 @@
 //!
 //! `serve` options: `--dataset smnist|dvs|shd` `--q Q5.3` `--n <samples>`
 //! `--cores <C>` `--lanes <L>` (1..=64 samples per shard message)
-//! `--pipeline` `--multicore` `--pjrt` (needs `--features pjrt`).
+//! `--pipeline` `--multicore` `--pjrt` (needs `--features pjrt`),
+//! `--listen <addr>` to expose the engine as the TCP front door instead
+//! of running a local batch.
+//!
+//! `loadgen` options: `--addr <host:port>` (omit for hermetic mode: an
+//! in-process server on an ephemeral port with bit-exact result
+//! verification against the sequential core), `--sessions` `--n`
+//! `--rate <Hz>` `--burst <len>` `--reconfig-every <k>` `--pool`
+//! `--inflight` `--seed` `--out <BENCH_serving_slo.json>`.
 
 use anyhow::{Context, Result};
 use std::time::Instant;
 
+use quantisenc::coordinator::client::{self, LoadgenOptions};
 use quantisenc::coordinator::metrics::Telemetry;
 use quantisenc::coordinator::pipeline;
+use quantisenc::coordinator::server::{ServerOptions, SpikeServer};
 use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
 use quantisenc::datasets::{Dataset, Split};
 use quantisenc::dse;
@@ -91,6 +102,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         "serve" => serve(&args[1..]),
+        "loadgen" => loadgen(&args[1..]),
         "explore" => {
             let arch = args.get(1).context("usage: repro explore <arch> [Qn.q]")?;
             let q = QSpec::parse(args.get(2).map(String::as_str).unwrap_or("Q5.3"))?;
@@ -185,9 +197,11 @@ fn dispatch(args: &[String]) -> Result<()> {
 /// required keys present, and the acceptance thresholds met — ≥ 5× fewer
 /// synaptic ops for the Gaussian-r1 topology report, ≥ 3× layer-step
 /// speedup at N=400 / 2% firing plus positive engine throughput for the
-/// event-driven hot-path report, and ≥ 2× serving samples/s at lane width
+/// event-driven hot-path report, ≥ 2× serving samples/s at lane width
 /// 64 vs 1 (gaussian-r1 N=400, zero pool misses) for the lane-batched
-/// report.
+/// report, and — for the `serving_slo` front-door report — positive
+/// throughput, zero protocol errors, zero oracle mismatches, and a p99
+/// latency under the (generous, overridable) CI bound.
 fn bench_check(path: &str) -> Result<()> {
     use quantisenc::util::json::Json;
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
@@ -281,6 +295,38 @@ fn bench_check(path: &str) -> Result<()> {
                 lanes.len()
             );
         }
+        "serving_slo" => {
+            let ok = json.req("results_ok")?.as_f64().context("results_ok numeric")?;
+            anyhow::ensure!(ok > 0.0, "{path}: no results served");
+            let sps = json.req("samples_per_sec")?.as_f64().context("samples_per_sec numeric")?;
+            anyhow::ensure!(sps > 0.0, "{path}: non-positive serving throughput");
+            let p99 = json.req("p99_us")?.as_f64().context("p99_us numeric")?;
+            // A deliberately generous CI bound: the gate exists to catch a
+            // wedged pump or a pathological regression (seconds-scale
+            // tails), not to benchmark shared runners.
+            // BENCH_GATE_MAX_P99_US overrides it.
+            let max_p99 = std::env::var("BENCH_GATE_MAX_P99_US")
+                .ok()
+                .and_then(|v| v.parse::<f64>().ok())
+                .unwrap_or(2_000_000.0);
+            anyhow::ensure!(
+                p99 > 0.0 && p99 <= max_p99,
+                "{path}: p99 latency {p99:.0}us outside (0, {max_p99:.0}]us"
+            );
+            let perr = json.req("protocol_errors")?.as_f64().context("protocol_errors numeric")?;
+            anyhow::ensure!(perr == 0.0, "{path}: {perr} protocol errors on the wire");
+            let mism =
+                json.req("result_mismatches")?.as_f64().context("result_mismatches numeric")?;
+            anyhow::ensure!(mism == 0.0, "{path}: {mism} results diverged from the oracle");
+            let rr = json.req("reject_rate")?.as_f64().context("reject_rate numeric")?;
+            anyhow::ensure!((0.0..=1.0).contains(&rr), "{path}: reject_rate {rr} out of range");
+            println!(
+                "{path}: OK ({ok:.0} results at {sps:.1}/s, p50/p99 {:.0}/{p99:.0}us, \
+                 reject rate {:.1}%)",
+                json.req("p50_us")?.as_f64().unwrap_or(0.0),
+                100.0 * rr,
+            );
+        }
         other => anyhow::bail!("{path}: unknown bench report kind {other:?}"),
     }
     Ok(())
@@ -293,7 +339,11 @@ const HELP: &str = "repro — QUANTISENC reproduction CLI
   all             everything, in paper order
   serve           batched inference service (ServingEngine; --lanes <L> for
                   the 64-sample lane-batched datapath, --pipeline /
-                  --multicore for the legacy paths, --pjrt with the feature)
+                  --multicore for the legacy paths, --pjrt with the feature,
+                  --listen <addr> for the TCP spike-frame front door)
+  loadgen         open-loop load generator for the front door (--addr, or
+                  hermetic with an oracle-verified in-process server);
+                  writes BENCH_serving_slo.json for bench-check
   explore <arch>  DSE estimate, e.g. repro explore 256x512x10 Q5.3
   codegen <arch>  emit Verilog HDL + self-checking SV testbench (paper §IV)
   bench-check <f> validate BENCH_*.json perf reports (the bench-smoke gate)
@@ -334,6 +384,37 @@ fn serve(args: &[String]) -> Result<()> {
         "serving {ds_name} ({}) {qname}, {n} requests, backend={backend}",
         art.sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("x"),
     );
+
+    if let Some(listen) = flag_val(args, "--listen") {
+        anyhow::ensure!(
+            !(use_pipeline || use_multicore || use_pjrt),
+            "--listen exposes the ServingEngine backend only"
+        );
+        let (_config, engine) =
+            experiments::engine_from_artifact(&art, ServingOptions::with_lanes(cores, lanes))?;
+        let server = SpikeServer::bind(engine, listen, ServerOptions::default())?;
+        println!(
+            "front door listening on {} ({ds_name} {qname}, {cores} cores, lane width {lanes}); \
+             stop with Ctrl-C",
+            server.local_addr()
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(30));
+            let s = server.stats();
+            println!(
+                "conns={} sessions={} served={} reconfigs={} overloaded={} bad={} \
+                 protocol_errors={} engine_failures={}",
+                s.connections,
+                s.sessions,
+                s.samples_served,
+                s.reconfigs_applied,
+                s.rejects_overloaded,
+                s.rejects_bad,
+                s.protocol_errors,
+                s.engine_failures,
+            );
+        }
+    }
 
     if use_pjrt {
         return serve_pjrt(&art, dataset, n);
@@ -418,6 +499,108 @@ fn serve(args: &[String]) -> Result<()> {
         dt,
     );
     println!("{}", tel.summary());
+    Ok(())
+}
+
+/// `repro loadgen` — drive the network front door with open-loop Poisson
+/// (optionally bursty) traffic and write the `BENCH_serving_slo.json`
+/// report that `repro bench-check` gates on.
+///
+/// With `--addr` it measures a server someone else is running; without
+/// it, it is hermetic: it binds an in-process [`SpikeServer`] on an
+/// ephemeral localhost port, computes a sequential `Core::run` oracle for
+/// the sample pool, and verifies every network result bit-exactly.
+fn loadgen(args: &[String]) -> Result<()> {
+    let ds_name = flag_val(args, "--dataset").unwrap_or("smnist");
+    let opts = LoadgenOptions {
+        sessions: flag_val(args, "--sessions").unwrap_or("2").parse()?,
+        samples_per_session: flag_val(args, "--n").unwrap_or("64").parse()?,
+        rate_hz: flag_val(args, "--rate").unwrap_or("500").parse()?,
+        burst_len: flag_val(args, "--burst").unwrap_or("1").parse()?,
+        reconfig_every: flag_val(args, "--reconfig-every").unwrap_or("16").parse()?,
+        dataset: Dataset::parse(ds_name).context("bad --dataset")?,
+        t_steps: flag_val(args, "--t").unwrap_or("6").parse()?,
+        pool: flag_val(args, "--pool").unwrap_or("16").parse()?,
+        max_inflight: flag_val(args, "--inflight").unwrap_or("32").parse()?,
+        seed: flag_val(args, "--seed").unwrap_or("4269").parse()?,
+    };
+    let out_path = flag_val(args, "--out").unwrap_or("BENCH_serving_slo.json");
+
+    let (report, server_protocol_errors) = if let Some(addr) = flag_val(args, "--addr") {
+        println!(
+            "loadgen against {addr}: {} sessions x {} samples at {} Hz ...",
+            opts.sessions, opts.samples_per_session, opts.rate_hz
+        );
+        // A remote server's weights are unknown — no oracle, latency and
+        // protocol health only.
+        (client::run_loadgen(addr, &opts, None)?, 0u64)
+    } else {
+        let qname = flag_val(args, "--q").unwrap_or("Q5.3");
+        let cores: usize = flag_val(args, "--cores").unwrap_or("2").parse()?;
+        let lanes: usize = flag_val(args, "--lanes").unwrap_or("8").parse()?;
+        let m = manifest()?;
+        let art = m.model(ds_name, qname)?;
+        let (_config, mut core) = experiments::core_from_artifact(&art)?;
+        let oracle: Vec<Vec<u32>> = client::sample_pool(opts.dataset, opts.pool, opts.t_steps)
+            .iter()
+            .map(|s| core.run(s).counts)
+            .collect();
+        let (_config, engine) =
+            experiments::engine_from_artifact(&art, ServingOptions::with_lanes(cores, lanes))?;
+        let mut server = SpikeServer::bind(engine, "127.0.0.1:0", ServerOptions::default())?;
+        let addr = server.local_addr().to_string();
+        println!(
+            "loadgen (hermetic) on {addr}: {} sessions x {} samples at {} Hz, \
+             reconfig every {}, oracle-verified ...",
+            opts.sessions, opts.samples_per_session, opts.rate_hz, opts.reconfig_every
+        );
+        let report = client::run_loadgen(&addr, &opts, Some(&oracle))?;
+        server.shutdown();
+        (report, server.stats().protocol_errors)
+    };
+
+    println!(
+        "loadgen: ok={} reconfig_acks={} rejects={} ({:.1}%) errors={} mismatches={} \
+         p50={:.0}us p99={:.0}us {:.1} samples/s",
+        report.results_ok,
+        report.reconfig_acks,
+        report.rejects,
+        100.0 * report.reject_rate,
+        report.errors,
+        report.result_mismatches,
+        report.p50_us,
+        report.p99_us,
+        report.samples_per_sec,
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"serving_slo\",\n  \"sessions\": {},\n  \"samples_per_session\": {},\n  \
+         \"submitted\": {},\n  \"results_ok\": {},\n  \"reconfig_acks\": {},\n  \"rejects\": {},\n  \
+         \"reject_rate\": {:.6},\n  \"errors\": {},\n  \"protocol_errors\": {},\n  \
+         \"result_mismatches\": {},\n  \"verified\": {},\n  \"p50_us\": {:.1},\n  \
+         \"p99_us\": {:.1},\n  \"mean_us\": {:.1},\n  \"samples_per_sec\": {:.2}\n}}\n",
+        report.sessions,
+        opts.samples_per_session,
+        report.submitted,
+        report.results_ok,
+        report.reconfig_acks,
+        report.rejects,
+        report.reject_rate,
+        report.errors,
+        server_protocol_errors + report.errors,
+        report.result_mismatches,
+        report.verified,
+        report.p50_us,
+        report.p99_us,
+        report.mean_us,
+        report.samples_per_sec,
+    );
+    std::fs::write(out_path, &json)?;
+    println!("wrote {out_path}");
+    anyhow::ensure!(
+        report.result_mismatches == 0,
+        "{} network results diverged from the sequential oracle",
+        report.result_mismatches
+    );
     Ok(())
 }
 

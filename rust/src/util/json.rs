@@ -32,7 +32,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), pos: 0 };
+        let mut p = Parser { b: text.as_bytes(), pos: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -99,9 +99,15 @@ impl Json {
     }
 }
 
+/// Recursion bound for nested arrays/objects: deep enough for any real
+/// manifest, shallow enough that adversarial `[[[[…` input cannot blow the
+/// parser's stack.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -138,22 +144,63 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek().ok_or_else(|| self.err("eof"))? {
+        let c = self.peek().ok_or_else(|| self.err("eof"))?;
+        match c {
             b'n' => self.lit("null", Json::Null),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
             b'"' => Ok(Json::Str(self.string()?)),
-            b'[' => self.array(),
-            b'{' => self.object(),
+            b'[' | b'{' => {
+                self.depth += 1;
+                if self.depth > MAX_DEPTH {
+                    return Err(self.err("nesting too deep"));
+                }
+                let v = if c == b'[' { self.array() } else { self.object() };
+                self.depth -= 1;
+                v
+            }
             b'-' | b'0'..=b'9' => self.number(),
             _ => Err(self.err("unexpected byte")),
         }
+    }
+
+    /// Four hex digits of a `\uXXXX` escape (strict: `+`/whitespace that
+    /// `from_str_radix` would tolerate are rejected).
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.pos + 4 > self.b.len() {
+            return Err(self.err("short \\u escape"));
+        }
+        let digits = &self.b[self.pos..self.pos + 4];
+        if !digits.iter().all(|d| d.is_ascii_hexdigit()) {
+            return Err(self.err("bad \\u hex"));
+        }
+        let hex = std::str::from_utf8(digits).map_err(|_| self.err("bad \\u escape"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u hex"))?;
+        self.pos += 4;
+        Ok(cp)
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
         self.eat(b'"')?;
         let mut out = String::new();
         loop {
+            // Copy the longest run of plain bytes as one slice. The input
+            // came in as &str, and a run bounded by ASCII delimiters sits
+            // on char boundaries, so any multi-byte UTF-8 inside it is
+            // already valid — pushing bytes one at a time as `c as char`
+            // would mangle it into Latin-1.
+            let start = self.pos;
+            while let Some(c) = self.peek() {
+                if c == b'"' || c == b'\\' || c < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            if self.pos > start {
+                let run = std::str::from_utf8(&self.b[start..self.pos])
+                    .map_err(|_| self.err("invalid utf-8 in string"))?;
+                out.push_str(run);
+            }
             let c = self.peek().ok_or_else(|| self.err("eof in string"))?;
             self.pos += 1;
             match c {
@@ -171,20 +218,35 @@ impl<'a> Parser<'a> {
                         b'r' => out.push('\r'),
                         b't' => out.push('\t'),
                         b'u' => {
-                            if self.pos + 4 > self.b.len() {
-                                return Err(self.err("short \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u hex"))?;
-                            self.pos += 4;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let hi = self.hex4()?;
+                            let ch = match hi {
+                                // UTF-16 high surrogate: only valid as the
+                                // first half of a \uD8xx\uDCxx pair.
+                                0xD800..=0xDBFF => {
+                                    if self.peek() != Some(b'\\')
+                                        || self.b.get(self.pos + 1) != Some(&b'u')
+                                    {
+                                        return Err(self.err("lone high surrogate"));
+                                    }
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..=0xDFFF).contains(&lo) {
+                                        return Err(self.err("invalid low surrogate"));
+                                    }
+                                    let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(cp)
+                                        .ok_or_else(|| self.err("bad surrogate pair"))?
+                                }
+                                0xDC00..=0xDFFF => return Err(self.err("lone low surrogate")),
+                                _ => char::from_u32(hi)
+                                    .ok_or_else(|| self.err("bad \\u codepoint"))?,
+                            };
+                            out.push(ch);
                         }
                         _ => return Err(self.err("bad escape")),
                     }
                 }
-                _ => out.push(c as char),
+                _ => return Err(self.err("raw control character in string")),
             }
         }
     }
@@ -333,7 +395,58 @@ mod tests {
 
     #[test]
     fn unicode_escape() {
-        assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse(r#""\u0041""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse(r#""\u00e9""#).unwrap(), Json::Str("é".into()));
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // U+1F600 encoded as a UTF-16 pair, the way serde_json and
+        // JSON.stringify emit astral-plane characters.
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+        assert_eq!(
+            Json::parse(r#""x\ud83d\ude00y""#).unwrap(),
+            Json::Str("x\u{1F600}y".into())
+        );
+    }
+
+    #[test]
+    fn lone_surrogates_rejected() {
+        assert!(Json::parse(r#""\ud83d""#).is_err(), "lone high surrogate");
+        assert!(Json::parse(r#""\ude00""#).is_err(), "lone low surrogate");
+        assert!(Json::parse(r#""\ud83dA""#).is_err(), "high + non-surrogate");
+        assert!(Json::parse(r#""\ud83dx""#).is_err(), "high + literal");
+        assert!(Json::parse(r#""\ud83d\n""#).is_err(), "high + simple escape");
+    }
+
+    #[test]
+    fn multibyte_utf8_passes_through() {
+        // Raw (unescaped) multi-byte characters must survive intact, not
+        // be re-encoded byte-by-byte as Latin-1.
+        assert_eq!(Json::parse("\"héllo — 😀\"").unwrap(), Json::Str("héllo — 😀".into()));
+        let j = Json::parse("\"日本語\"").unwrap();
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j, "display roundtrip");
+    }
+
+    #[test]
+    fn bad_hex_and_control_chars_rejected() {
+        assert!(Json::parse(r#""\uZZZZ""#).is_err());
+        assert!(Json::parse(r#""\u+12f""#).is_err(), "from_str_radix leniency must not leak");
+        assert!(Json::parse("\"a\nb\"").is_err(), "raw control character in string");
+    }
+
+    #[test]
+    fn depth_cap_guards_the_stack() {
+        let deep_ok = format!("{}0{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep_ok).is_ok());
+        let too_deep = format!("{}0{}", "[".repeat(5000), "]".repeat(5000));
+        let err = Json::parse(&too_deep).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+        let mixed = format!("{}0", r#"[{"k":"#.repeat(3000));
+        assert!(Json::parse(&mixed).is_err());
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! End-to-end suite for the network front door: concurrent TCP clients
+//! must get results bit-identical to the sequential `Core::run` oracle —
+//! including across an in-band per-tenant reconfiguration — and every
+//! failure mode (overload, bad session, bad program, bad sample, garbage
+//! bytes) must come back as a typed per-request error that leaves the
+//! server and every other tenant serving.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use quantisenc::config::registers::{RegisterFile, REG_VTH};
+use quantisenc::config::ModelConfig;
+use quantisenc::coordinator::client::{self, LoadgenOptions, WireClient};
+use quantisenc::coordinator::control::ReconfigProgram;
+use quantisenc::coordinator::server::{ServerOptions, SpikeServer};
+use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
+use quantisenc::coordinator::wire::{self, ErrorCode, Frame, DEFAULT_MAX_FRAME_LEN};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::{Dataset, Sample, Split};
+use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::Core;
+
+/// The shared fixture: a 256x24x10 core with seeded random weights (the
+/// same construction as the serving-engine unit suite).
+fn fixture() -> (ModelConfig, Vec<Vec<i32>>, RegisterFile) {
+    let cfg = ModelConfig::parse_arch("256x24x10", Q5_3).unwrap();
+    let mut rng = XorShift64Star::new(0x5E21);
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(15) as i32 - 7).collect())
+        .collect();
+    let regs = RegisterFile::new(Q5_3);
+    (cfg, weights, regs)
+}
+
+fn spawn_server(cores: usize, lanes: usize, options: ServerOptions) -> SpikeServer {
+    let (cfg, weights, regs) = fixture();
+    let engine =
+        ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_lanes(cores, lanes))
+            .unwrap();
+    SpikeServer::bind(engine, "127.0.0.1:0", options).unwrap()
+}
+
+#[test]
+fn hello_reports_engine_geometry() {
+    let server = spawn_server(2, 4, ServerOptions::default());
+    let addr = server.local_addr().to_string();
+    let client = WireClient::connect(&addr).unwrap();
+    assert_eq!(client.hello.inputs, 256);
+    assert_eq!(client.hello.outputs, 10);
+    assert_eq!(client.hello.cores, 2);
+    assert_eq!(client.hello.lane_width, 4);
+}
+
+#[test]
+fn concurrent_sessions_bitexact_with_inband_reconfig() {
+    let (cfg, weights, regs) = fixture();
+    // Per-epoch oracles: epoch 0 is the construction registers; epoch 1 is
+    // the raised threshold the reconfig below programs.
+    let raised_vth = regs.vth() + 8; // +1.0 in Q5.3
+    let samples: Vec<Sample> = (0..6).map(|i| Dataset::Smnist.sample(i, Split::Test, 6)).collect();
+    let mut core = Core::new(cfg.clone());
+    core.load_weights(&weights).unwrap();
+    core.registers = regs.clone();
+    let base: Vec<Vec<u32>> = samples.iter().map(|s| core.run(s).counts).collect();
+    core.registers.apply_program(&[(REG_VTH, raised_vth)]).unwrap();
+    let raised: Vec<Vec<u32>> = samples.iter().map(|s| core.run(s).counts).collect();
+
+    let engine =
+        ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_lanes(2, 4)).unwrap();
+    let mut server = SpikeServer::bind(engine, "127.0.0.1:0", ServerOptions::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // Three concurrent sessions; session 0 reprograms the core in-band
+    // after its third sample. The shared engine serves everyone, so every
+    // result is checked against the oracle its epoch tag selects.
+    let verify = |epoch: u64, i: usize, counts: &[u32], who: &str| {
+        let expect = if epoch == 0 { &base[i] } else { &raised[i] };
+        assert_eq!(counts, expect.as_slice(), "{who}: sample {i} under epoch {epoch}");
+    };
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..3usize)
+            .map(|c| {
+                let samples = &samples;
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut client = WireClient::connect(&addr).unwrap();
+                    let (session, granted) = client.open_session(0).unwrap();
+                    assert!(granted >= 6, "server default quota covers the test");
+                    let reconfigures = c == 0;
+                    for (i, s) in samples.iter().enumerate() {
+                        client.submit(session, i as u64, s).unwrap();
+                        if reconfigures && i == 2 {
+                            let program = ReconfigProgram::new().write(REG_VTH, raised_vth);
+                            client.reconfig(session, 77, &program).unwrap();
+                        }
+                    }
+                    // Per-session replies preserve submission order, with
+                    // the ack interleaved exactly where the reconfig was.
+                    let mut acked_epoch = None;
+                    for i in 0..samples.len() {
+                        match client.recv().unwrap() {
+                            Frame::Result { sample, epoch, counts, .. } => {
+                                assert_eq!(sample, i as u64, "client {c}: results in order");
+                                if reconfigures && i > 2 {
+                                    assert!(
+                                        epoch >= 1,
+                                        "client {c}: in-band reconfig must precede sample {i}"
+                                    );
+                                }
+                                verify(epoch, i, &counts, &format!("client {c}"));
+                            }
+                            other => panic!("client {c}: expected Result, got {other:?}"),
+                        }
+                        if reconfigures && i == 2 {
+                            match client.recv().unwrap() {
+                                Frame::ReconfigAck { request, epoch, .. } => {
+                                    assert_eq!(request, 77);
+                                    assert!(epoch >= 1);
+                                    acked_epoch = Some(epoch);
+                                }
+                                other => panic!("client 0: expected ReconfigAck, got {other:?}"),
+                            }
+                        }
+                    }
+                    acked_epoch
+                })
+            })
+            .collect();
+        let acks: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(acks[0].is_some(), "the reconfiguring session got its ack");
+    });
+
+    let stats = server.stats();
+    assert_eq!(stats.samples_served, 18, "3 sessions x 6 samples");
+    assert_eq!(stats.reconfigs_applied, 1);
+    assert_eq!(stats.protocol_errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn overload_is_a_typed_reject_not_a_stall() {
+    // Quota of 2 in-flight; six long samples submitted back-to-back. The
+    // first two are admitted, and at least one of the rest must bounce
+    // with Overloaded while they run. Every request gets exactly one
+    // reply, and the session keeps serving afterwards.
+    let server = spawn_server(1, 1, ServerOptions { max_inflight: 2, ..Default::default() });
+    let addr = server.local_addr().to_string();
+    let mut client = WireClient::connect(&addr).unwrap();
+    let (session, granted) = client.open_session(2).unwrap();
+    assert_eq!(granted, 2);
+    let slow = Dataset::Smnist.sample(0, Split::Test, 400);
+    for i in 0..6u64 {
+        client.submit(session, i, &slow).unwrap();
+    }
+    let (mut oks, mut rejects) = (0u32, 0u32);
+    for _ in 0..6 {
+        match client.recv().unwrap() {
+            Frame::Result { .. } => oks += 1,
+            Frame::Error { code: ErrorCode::Overloaded, .. } => rejects += 1,
+            other => panic!("expected Result or Overloaded, got {other:?}"),
+        }
+    }
+    assert!(oks >= 2, "admitted samples are served (oks={oks})");
+    assert!(rejects >= 1, "over-quota samples bounce (rejects={rejects})");
+    assert_eq!(oks + rejects, 6, "one reply per request");
+    // The reject is not sticky: quota freed, the session serves again.
+    client.submit(session, 100, &slow).unwrap();
+    assert!(matches!(client.recv().unwrap(), Frame::Result { sample: 100, .. }));
+}
+
+#[test]
+fn bad_requests_get_typed_errors_and_leave_the_session_serving() {
+    let server = spawn_server(1, 1, ServerOptions::default());
+    let addr = server.local_addr().to_string();
+    let mut client = WireClient::connect(&addr).unwrap();
+    let (session, _) = client.open_session(0).unwrap();
+    let good = Dataset::Smnist.sample(0, Split::Test, 6);
+
+    // Unknown session id.
+    client.submit(session + 999, 1, &good).unwrap();
+    assert!(matches!(
+        client.recv().unwrap(),
+        Frame::Error { code: ErrorCode::BadSession, reference: 1, .. }
+    ));
+
+    // Sample geometry the engine cannot take (wrong input width).
+    let narrow = Sample { spikes: vec![0; 12], t_steps: 3, inputs: 4, label: 0 };
+    client.submit(session, 2, &narrow).unwrap();
+    assert!(matches!(
+        client.recv().unwrap(),
+        Frame::Error { code: ErrorCode::BadSample, reference: 2, .. }
+    ));
+
+    // A program the control plane rejects (bad register address) burns
+    // nothing and fails only this request.
+    let bad_program = ReconfigProgram::new().write(99, 0);
+    client.reconfig(session, 3, &bad_program).unwrap();
+    assert!(matches!(
+        client.recv().unwrap(),
+        Frame::Error { code: ErrorCode::BadProgram, reference: 3, .. }
+    ));
+
+    // The session is untouched: a valid submit still serves at epoch 0.
+    client.submit(session, 4, &good).unwrap();
+    assert!(matches!(client.recv().unwrap(), Frame::Result { sample: 4, epoch: 0, .. }));
+
+    let stats = server.stats();
+    assert_eq!(stats.rejects_bad, 3);
+    assert_eq!(stats.samples_served, 1);
+}
+
+#[test]
+fn garbage_bytes_kill_only_the_offending_connection() {
+    let server = spawn_server(1, 1, ServerOptions::default());
+    let addr = server.local_addr().to_string();
+
+    // A connection that speaks garbage gets a typed BadFrame error and a
+    // close...
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    {
+        use std::io::Write;
+        // Length prefix 4, then an unknown frame type.
+        raw.write_all(&[4, 0, 0, 0, 0xEE, 1, 2, 3]).unwrap();
+        raw.flush().unwrap();
+    }
+    match wire::read_frame(&mut raw, DEFAULT_MAX_FRAME_LEN).unwrap() {
+        Some(Frame::Error { code: ErrorCode::BadFrame, .. }) => {}
+        other => panic!("expected BadFrame error, got {other:?}"),
+    }
+    assert!(
+        wire::read_frame(&mut raw, DEFAULT_MAX_FRAME_LEN).unwrap().is_none(),
+        "server closes the bad connection"
+    );
+
+    // ...while a well-behaved connection is unaffected.
+    let mut client = WireClient::connect(&addr).unwrap();
+    let (session, _) = client.open_session(0).unwrap();
+    let good = Dataset::Smnist.sample(0, Split::Test, 6);
+    client.submit(session, 0, &good).unwrap();
+    assert!(matches!(client.recv().unwrap(), Frame::Result { .. }));
+    assert_eq!(server.stats().protocol_errors, 1);
+}
+
+#[test]
+fn loadgen_verifies_bitexact_against_the_oracle() {
+    // The full measurement path: open-loop load generator (unpaced, with
+    // in-band reconfigs every 8 samples) against an in-process server,
+    // verified result-by-result against the sequential core.
+    let (cfg, weights, regs) = fixture();
+    let opts = LoadgenOptions {
+        sessions: 2,
+        samples_per_session: 24,
+        rate_hz: 0.0,
+        burst_len: 1,
+        reconfig_every: 8,
+        dataset: Dataset::Smnist,
+        t_steps: 6,
+        pool: 8,
+        max_inflight: 32,
+        seed: 0xBEEF,
+    };
+    let mut core = Core::new(cfg.clone());
+    core.load_weights(&weights).unwrap();
+    core.registers = regs.clone();
+    let oracle: Vec<Vec<u32>> = client::sample_pool(opts.dataset, opts.pool, opts.t_steps)
+        .iter()
+        .map(|s| core.run(s).counts)
+        .collect();
+    let engine =
+        ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_lanes(2, 4)).unwrap();
+    let mut server = SpikeServer::bind(engine, "127.0.0.1:0", ServerOptions::default()).unwrap();
+    let report = client::run_loadgen(&server.local_addr().to_string(), &opts, Some(&oracle))
+        .expect("loadgen run");
+    server.shutdown();
+
+    assert_eq!(report.submitted, 48);
+    assert_eq!(report.results_ok, 48, "quota 32 > 24 in flight: nothing may bounce");
+    assert_eq!(report.rejects, 0);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.reconfig_acks, 6, "2 sessions x (24 / 8) in-band reconfigs");
+    assert_eq!(report.result_mismatches, 0, "network results bit-identical to Core::run");
+    assert!(report.verified);
+    assert!(report.p50_us > 0.0 && report.p99_us >= report.p50_us);
+    assert!(report.samples_per_sec > 0.0);
+}

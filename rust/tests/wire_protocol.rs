@@ -1,0 +1,236 @@
+//! Property/fuzz tests for the network front door's wire codec
+//! (`coordinator::wire`): random frames round-trip bit-exactly, and no
+//! input — truncated, oversized, bit-flipped, or pure garbage — can make
+//! the decoder panic or accept a malformed frame silently.
+
+use quantisenc::coordinator::wire::{
+    self, ErrorCode, Frame, WireError, DEFAULT_MAX_FRAME_LEN, VERSION,
+};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::{Dataset, Split};
+
+/// Draw one random-but-valid frame of every variant class.
+fn random_frame(rng: &mut XorShift64Star) -> Frame {
+    match rng.below(9) {
+        0 => Frame::Hello { version: VERSION },
+        1 => Frame::HelloAck {
+            version: rng.next_u64() as u16,
+            inputs: rng.below(1 << 20) as u32,
+            outputs: rng.below(1 << 12) as u32,
+            cores: rng.below(64) as u16,
+            lane_width: (1 + rng.below(64)) as u16,
+        },
+        2 => Frame::OpenSession { max_inflight: rng.below(1 << 16) as u32 },
+        3 => Frame::SessionOpened {
+            session: rng.next_u64() as u32,
+            max_inflight: rng.below(1 << 16) as u32,
+        },
+        4 => {
+            let t_steps = 1 + rng.below(24) as u32;
+            let inputs = 1 + rng.below(300) as u32;
+            let bits: Vec<u8> =
+                (0..t_steps as usize * inputs as usize).map(|_| (rng.uniform() < 0.2) as u8).collect();
+            Frame::SubmitSample {
+                session: rng.next_u64() as u32,
+                sample: rng.next_u64(),
+                t_steps,
+                inputs,
+                spikes: wire::pack_bits(&bits),
+            }
+        }
+        5 => {
+            let cfg: Vec<(u16, i32)> =
+                (0..rng.below(5)).map(|_| (rng.below(32) as u16, rng.next_u64() as i32)).collect();
+            let weights: Vec<(u16, Vec<i32>)> = (0..rng.below(3))
+                .map(|_| {
+                    let words = rng.below(40) as usize;
+                    (rng.below(4) as u16, (0..words).map(|_| rng.next_u64() as i32).collect())
+                })
+                .collect();
+            Frame::Reconfig { session: rng.next_u64() as u32, request: rng.next_u64(), cfg, weights }
+        }
+        6 => {
+            let counts: Vec<u32> = (0..rng.below(20)).map(|_| rng.next_u64() as u32).collect();
+            Frame::Result {
+                session: rng.next_u64() as u32,
+                sample: rng.next_u64(),
+                epoch: rng.below(1 << 20),
+                prediction: rng.below(16) as u32,
+                spikes_total: rng.below(1 << 30),
+                counts,
+            }
+        }
+        7 => Frame::ReconfigAck {
+            session: rng.next_u64() as u32,
+            request: rng.next_u64(),
+            epoch: rng.below(1 << 20),
+        },
+        _ => {
+            let code = ErrorCode::from_u16(1 + rng.below(6) as u16).unwrap();
+            let msg: String =
+                (0..rng.below(40)).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+            Frame::Error {
+                code,
+                session: rng.next_u64() as u32,
+                reference: rng.next_u64(),
+                message: msg,
+            }
+        }
+    }
+}
+
+#[test]
+fn random_frames_roundtrip_bit_exactly() {
+    let mut rng = XorShift64Star::new(0x51DE_CA7);
+    for _ in 0..2000 {
+        let frame = random_frame(&mut rng);
+        let body = frame.encode().expect("valid frames encode");
+        let back = Frame::decode(&body)
+            .unwrap_or_else(|e| panic!("decode of {frame:?} failed: {e}"));
+        assert_eq!(frame, back);
+    }
+}
+
+#[test]
+fn every_truncation_is_a_typed_error_never_a_panic() {
+    let mut rng = XorShift64Star::new(0x7A_BC01);
+    for _ in 0..300 {
+        let frame = random_frame(&mut rng);
+        let body = frame.encode().unwrap();
+        for cut in 0..body.len() {
+            match Frame::decode(&body[..cut]) {
+                Ok(f) => {
+                    // A prefix that still decodes must not silently drop
+                    // payload: it can only happen if the cut removed
+                    // nothing the decoder reads, which the trailing-bytes
+                    // check forbids for every variant.
+                    panic!("truncated body decoded to {f:?} (cut {cut}/{})", body.len());
+                }
+                Err(WireError::Truncated { .. })
+                | Err(WireError::BadValue(_))
+                | Err(WireError::BadType(_))
+                | Err(WireError::BadMagic(_)) => {}
+                Err(e) => panic!("unexpected error class for truncation: {e}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn garbage_bodies_never_panic() {
+    let mut rng = XorShift64Star::new(0xBAD_F00D);
+    for _ in 0..5000 {
+        let len = rng.below(200) as usize + 1;
+        let body: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        // Any outcome but a panic is acceptable; a successful decode must
+        // re-encode (the grammar has no unparseable-but-valid frames).
+        if let Ok(f) = Frame::decode(&body) {
+            f.encode().expect("decoded frames must re-encode");
+        }
+    }
+}
+
+#[test]
+fn bit_flips_never_panic_and_often_reject() {
+    let mut rng = XorShift64Star::new(0xF11B_1234);
+    for _ in 0..400 {
+        let frame = random_frame(&mut rng);
+        let mut body = frame.encode().unwrap();
+        let byte = rng.below(body.len() as u64) as usize;
+        body[byte] ^= 1 << rng.below(8);
+        if let Ok(f) = Frame::decode(&body) {
+            f.encode().expect("mutated-but-valid frames must re-encode");
+        }
+    }
+}
+
+#[test]
+fn trailing_bytes_are_rejected() {
+    let mut rng = XorShift64Star::new(0x7_1A11);
+    for _ in 0..200 {
+        let frame = random_frame(&mut rng);
+        let mut body = frame.encode().unwrap();
+        body.push(0xAB);
+        match Frame::decode(&body) {
+            Err(WireError::TrailingBytes { .. }) => {}
+            // Variants whose last field is length-counted may instead see
+            // the extra byte as a truncated next element — also typed.
+            Err(WireError::Truncated { .. }) | Err(WireError::BadValue(_)) => {}
+            other => panic!("trailing byte not rejected: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn hostile_length_prefix_is_capped_before_allocation() {
+    // 4 GiB-1 length prefix: must be rejected by the cap, not allocated.
+    let mut stream: &[u8] = &[0xFF, 0xFF, 0xFF, 0xFF, 0x01];
+    match wire::read_frame(&mut stream, DEFAULT_MAX_FRAME_LEN) {
+        Err(WireError::TooLarge { len, max }) => {
+            assert_eq!(len, u32::MAX);
+            assert_eq!(max, DEFAULT_MAX_FRAME_LEN);
+        }
+        other => panic!("expected TooLarge, got {other:?}"),
+    }
+    // Zero-length frames are equally invalid.
+    let mut empty: &[u8] = &[0, 0, 0, 0];
+    assert!(matches!(
+        wire::read_frame(&mut empty, DEFAULT_MAX_FRAME_LEN),
+        Err(WireError::Truncated { .. })
+    ));
+}
+
+#[test]
+fn submit_sample_payload_arity_is_enforced() {
+    // A SubmitSample whose spike payload does not match t_steps × inputs
+    // must be rejected — the decoder may not trust the counts.
+    let frame = Frame::SubmitSample {
+        session: 1,
+        sample: 2,
+        t_steps: 4,
+        inputs: 16,
+        spikes: wire::pack_bits(&vec![1u8; 4 * 16]),
+    };
+    let good = frame.encode().unwrap();
+    assert!(Frame::decode(&good).is_ok());
+    // Claim more timesteps than the payload carries.
+    let frame = Frame::SubmitSample {
+        session: 1,
+        sample: 2,
+        t_steps: 4,
+        inputs: 16,
+        spikes: vec![0u8; 3],
+    };
+    assert!(frame.encode().is_err(), "encoder refuses arity mismatch too");
+}
+
+#[test]
+fn frame_stream_roundtrips_over_a_buffer() {
+    let mut rng = XorShift64Star::new(0x57_12EA);
+    let frames: Vec<Frame> = (0..64).map(|_| random_frame(&mut rng)).collect();
+    let mut buf = Vec::new();
+    for f in &frames {
+        wire::write_frame(&mut buf, f).unwrap();
+    }
+    let mut r: &[u8] = &buf;
+    let mut back = Vec::new();
+    while let Some(f) = wire::read_frame(&mut r, DEFAULT_MAX_FRAME_LEN).unwrap() {
+        back.push(f);
+    }
+    assert_eq!(frames, back);
+}
+
+#[test]
+fn sample_conversion_roundtrips_real_datasets() {
+    for (ds, i) in [(Dataset::Smnist, 0u64), (Dataset::Dvs, 3), (Dataset::Shd, 7)] {
+        let s = ds.sample(i, Split::Test, 9);
+        let frame = wire::submit_from_sample(5, i, &s);
+        let Frame::SubmitSample { t_steps, inputs, ref spikes, .. } = frame else {
+            panic!("submit_from_sample must build SubmitSample");
+        };
+        let back = wire::sample_from_submit(t_steps, inputs, spikes);
+        assert_eq!(back.spikes, s.spikes, "bit-packing must be lossless for {ds:?}");
+        assert_eq!(back.t_steps, s.t_steps);
+        assert_eq!(back.inputs, s.inputs);
+    }
+}
