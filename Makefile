@@ -1,6 +1,6 @@
 # Convenience targets; everything is plain cargo underneath.
 
-.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology bench-hotpath bench-serving fmt clippy
+.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology bench-hotpath bench-serving snapshot-smoke fmt clippy
 
 all: build
 
@@ -54,6 +54,17 @@ bench-smoke: bench-hotpath bench-serving
 	cargo run --release --bin repro -- bench-check \
 		BENCH_topology.json BENCH_hotpath.json BENCH_batched.json \
 		BENCH_serving_slo.json
+
+# Snapshot/restore differential gate: freeze an engine after 8 samples to
+# a versioned connectome image, revive it into a fresh engine, run to 16,
+# and diff every result (and the final machine state) against an
+# uninterrupted run — `repro restore` exits nonzero on any divergence.
+snapshot-smoke:
+	cargo run --release --bin repro -- snapshot \
+		--n 8 --cores 2 --lanes 4 --out connectome_smoke.qcnx
+	cargo run --release --bin repro -- restore \
+		--in connectome_smoke.qcnx --total 16
+	rm -f connectome_smoke.qcnx
 
 fmt:
 	cargo fmt --all -- --check

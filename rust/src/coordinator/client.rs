@@ -62,6 +62,18 @@ impl ClientSender {
         let frame = wire::program_to_wire(session, request, program)?;
         self.send(&frame)
     }
+
+    /// Ask the server for a connectome snapshot of its engine; the reply
+    /// arrives as a `SnapshotData` frame.
+    pub fn snapshot(&mut self, session: u32, request: u64) -> Result<(), WireError> {
+        self.send(&Frame::Snapshot { session, request })
+    }
+
+    /// Offer an encoded connectome for live migration; the reply arrives
+    /// as a `RestoreAck` frame carrying the assigned config epoch.
+    pub fn restore(&mut self, session: u32, request: u64, bytes: Vec<u8>) -> Result<(), WireError> {
+        self.send(&Frame::Restore { session, request, bytes })
+    }
 }
 
 /// Read half of a connection.
@@ -155,6 +167,35 @@ impl WireClient {
         program: &ReconfigProgram,
     ) -> Result<(), WireError> {
         self.sender.reconfig(session, request, program)
+    }
+
+    /// Fetch the engine's connectome over the wire: sends `Snapshot` and
+    /// blocks for the matching `SnapshotData`, returning the encoded bytes
+    /// (decode with
+    /// [`Connectome::decode`](super::connectome::Connectome::decode)).
+    pub fn snapshot(&mut self, session: u32, request: u64) -> Result<Vec<u8>> {
+        self.sender.snapshot(session, request)?;
+        match self.recv()? {
+            Frame::SnapshotData { request: r, bytes, .. } if r == request => Ok(bytes),
+            Frame::Error { code, message, .. } => {
+                bail!("server refused snapshot ({code:?}): {message}")
+            }
+            other => bail!("expected SnapshotData, got {other:?}"),
+        }
+    }
+
+    /// Live blue/green migration: sends an encoded connectome as a
+    /// `Restore` frame and blocks for the `RestoreAck`, returning the one
+    /// config epoch the swap was assigned.
+    pub fn restore(&mut self, session: u32, request: u64, bytes: Vec<u8>) -> Result<u64> {
+        self.sender.restore(session, request, bytes)?;
+        match self.recv()? {
+            Frame::RestoreAck { request: r, epoch, .. } if r == request => Ok(epoch),
+            Frame::Error { code, message, .. } => {
+                bail!("server refused restore ({code:?}): {message}")
+            }
+            other => bail!("expected RestoreAck, got {other:?}"),
+        }
     }
 
     /// Split into independently-owned halves for concurrent send/receive.

@@ -1,0 +1,669 @@
+//! Versioned binary **connectome** snapshots: the complete state of a
+//! [`ServingEngine`](super::serving::ServingEngine) — geometry, topology
+//! stores (packed weight words), per-layer register files, the SoA neuron
+//! bank (`vmem`/`refcnt`, plus the lane-major banks when `lane_width > 1`),
+//! config epoch, and the Bus/Activity ledgers — as one self-describing,
+//! CRC-protected byte stream.
+//!
+//! This is the durable half of the paper's software-defined methodology:
+//! §II makes all core state programmatically readable/writable through
+//! cfg_in/wt_in; a connectome file is that same state captured at a
+//! quiesce point, so an engine can be checkpointed, restored bit-exactly
+//! into a fresh process ([`ServingEngine::from_connectome`]), or
+//! warm-swapped into a *live* engine as exactly one config epoch
+//! ([`ControlPlane::migrate`](super::control::ControlPlane::migrate) —
+//! drainless blue/green migration).
+//!
+//! # Format
+//!
+//! Everything is little-endian. The file is a fixed header followed by
+//! TLV sections, each integrity-checked by a CRC-32 over its payload:
+//!
+//! ```text
+//! magic   u32   "QCNX"
+//! version u16   format version (1)
+//! count   u32   number of sections
+//! section * count:
+//!   tag   u8    1 = geometry, 2 = ledgers, 3 = layer
+//!   len   u32   payload byte length
+//!   payload [len bytes]
+//!   crc   u32   CRC-32 (IEEE) of payload
+//! ```
+//!
+//! Section order is fixed: one GEOMETRY, one LEDGERS, then exactly
+//! `cores × num_layers` LAYER sections in (shard-major, layer) order.
+//! The decoder never panics: every read is bounds-checked through a
+//! cursor in the style of `wire.rs`, every structural invariant maps to
+//! a typed [`SnapshotError`], and corrupt input can never yield a
+//! partially-restored engine (decoding is pure; application happens only
+//! after the whole file validates).
+
+use crate::config::model::MemKind;
+use crate::config::registers::NUM_REGS;
+use crate::config::Topology;
+use crate::coordinator::interface::BusStats;
+use crate::fixed::QSpec;
+use crate::hdl::ActivityStats;
+
+/// `b"QCNX"` little-endian: Quantisenc CoNnectome eXchange.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"QCNX");
+/// Current format version.
+pub const VERSION: u16 = 1;
+
+const TAG_GEOMETRY: u8 = 1;
+const TAG_LEDGERS: u8 = 2;
+const TAG_LAYER: u8 = 3;
+
+/// Hard cap on any single decoded vector arity (weights, vmem, …):
+/// matches the wire layer's 16 MiB frame bound expressed in words, so a
+/// hostile length field cannot drive a multi-GiB allocation.
+const MAX_WORDS: usize = 16 * 1024 * 1024 / 4;
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) — table built in const fn
+// so the dependency-free build pays nothing at runtime.
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// Errors
+
+/// Typed decode/validation failure. Corrupt or hostile snapshot bytes
+/// always land on one of these — never a panic, never a partial restore.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// Ran out of bytes while reading `what`.
+    Truncated { what: &'static str },
+    /// First word was not [`MAGIC`].
+    BadMagic(u32),
+    /// Unknown format version.
+    BadVersion(u16),
+    /// Payload CRC mismatch in the `index`-th section (`section` names its tag).
+    BadCrc { section: &'static str, index: usize },
+    /// A structural invariant failed (named by the message).
+    BadValue(&'static str),
+    /// Bytes left over after the declared sections.
+    TrailingBytes { extra: usize },
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Truncated { what } => {
+                write!(f, "truncated connectome: ran out of bytes reading {what}")
+            }
+            SnapshotError::BadMagic(m) => {
+                write!(f, "bad connectome magic {m:#010x} (want {MAGIC:#010x} = \"QCNX\")")
+            }
+            SnapshotError::BadVersion(v) => {
+                write!(f, "unsupported connectome format version {v} (decoder speaks {VERSION})")
+            }
+            SnapshotError::BadCrc { section, index } => {
+                write!(f, "CRC mismatch in {section} section #{index} (corrupt payload)")
+            }
+            SnapshotError::BadValue(what) => write!(f, "invalid connectome: {what}"),
+            SnapshotError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after the last connectome section")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+// ---------------------------------------------------------------------------
+// Bounds-checked cursor (wire.rs idiom; no index arithmetic can panic).
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], SnapshotError> {
+        if self.remaining() < n {
+            return Err(SnapshotError::Truncated { what });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, SnapshotError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, SnapshotError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, SnapshotError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn i32(&mut self, what: &'static str) -> Result<i32, SnapshotError> {
+        Ok(self.u32(what)? as i32)
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, SnapshotError> {
+        let b = self.take(8, what)?;
+        let mut v = [0u8; 8];
+        v.copy_from_slice(b);
+        Ok(u64::from_le_bytes(v))
+    }
+
+    /// `u32` count followed by that many `i32` words, with the count
+    /// validated against the bytes actually present *and* [`MAX_WORDS`]
+    /// before any allocation.
+    fn i32_vec(&mut self, what: &'static str) -> Result<Vec<i32>, SnapshotError> {
+        let n = self.u32(what)? as usize;
+        if n > MAX_WORDS || self.remaining() / 4 < n {
+            return Err(SnapshotError::Truncated { what });
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.i32(what)?);
+        }
+        Ok(v)
+    }
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_i32_vec(out: &mut Vec<u8>, v: &[i32]) {
+    put_u32(out, v.len() as u32);
+    for &w in v {
+        put_u32(out, w as u32);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The in-memory snapshot
+
+/// Per-(shard, layer) state captured at a quiesce point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerState {
+    /// The layer's register file ([`crate::config::registers::RegisterFile::vector`]).
+    /// Registers are broadcast engine-wide, so every section carries the
+    /// same vector; restore validates that invariant.
+    pub regs: [i32; NUM_REGS],
+    /// Topology-aware packed weight words
+    /// ([`crate::hdl::SynapticMemory::packed`]) — dense words for
+    /// all-to-all, the diagonal for one-to-one, the band for gaussian.
+    pub weights: Vec<i32>,
+    /// Single-sample membrane potentials (one word per neuron).
+    pub vmem: Vec<i32>,
+    /// Single-sample refractory countdowns (one word per neuron).
+    pub refcnt: Vec<i32>,
+    /// Lane count the lane-major banks were sized for (0 if the
+    /// lane-batched datapath never ran on this shard).
+    pub lanes: u16,
+    /// Lane-major membrane bank: `lane_vmem[j * lanes + l]`.
+    pub lane_vmem: Vec<i32>,
+    /// Lane-major refractory bank, same layout.
+    pub lane_refcnt: Vec<i32>,
+}
+
+/// A complete, self-describing engine snapshot. Produced by
+/// [`ServingEngine::snapshot`](super::serving::ServingEngine::snapshot),
+/// serialized by [`Connectome::encode`], revived by
+/// [`Connectome::decode`] +
+/// [`ServingEngine::from_connectome`](super::serving::ServingEngine::from_connectome).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Connectome {
+    pub qspec: QSpec,
+    pub mem: MemKind,
+    /// Shard count C of the source engine.
+    pub cores: u16,
+    /// Samples stepped per lane group (1 = single-sample datapath).
+    pub lane_width: u16,
+    /// Layer widths, inputs first (`sizes.len() >= 2`).
+    pub sizes: Vec<u32>,
+    /// One topology per connection layer (`sizes.len() - 1` entries).
+    pub topologies: Vec<Topology>,
+    /// Config epoch at the quiesce point.
+    pub epoch: u64,
+    /// Engine-wide AXI bus ledger at the quiesce point.
+    pub bus: BusStats,
+    /// Cumulative activity ledger across all completed streams.
+    pub activity: ActivityStats,
+    /// Streams admitted by the source engine.
+    pub submitted: u64,
+    /// Streams fully served. Equal to `submitted` at a quiesce point —
+    /// the snapshot fences at a sample-group boundary, so there are no
+    /// partially-stepped streams to record; this pair *is* the ragged
+    /// in-flight position ledger.
+    pub completed: u64,
+    /// `[shard][layer]` state sections.
+    pub layers: Vec<Vec<LayerState>>,
+}
+
+impl Connectome {
+    /// Serialize to the versioned TLV byte format described in the
+    /// module docs. Infallible: the encoder only runs on snapshots
+    /// produced from live engine state, whose arities are bounded far
+    /// below the format's `u32` limits.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u32(&mut out, MAGIC);
+        put_u16(&mut out, VERSION);
+        let n_layer_sections: usize = self.layers.iter().map(Vec::len).sum();
+        put_u32(&mut out, 2 + n_layer_sections as u32);
+
+        // GEOMETRY
+        let mut p = Vec::new();
+        p.push(self.qspec.n());
+        p.push(self.qspec.q());
+        p.push(mem_tag(self.mem));
+        put_u16(&mut p, self.cores);
+        put_u16(&mut p, self.lane_width);
+        put_u32(&mut p, self.sizes.len() as u32);
+        for &s in &self.sizes {
+            put_u32(&mut p, s);
+        }
+        for t in &self.topologies {
+            let (tag, radius) = match t {
+                Topology::AllToAll => (0u8, 0u32),
+                Topology::OneToOne => (1, 0),
+                Topology::Gaussian { radius } => (2, *radius),
+            };
+            p.push(tag);
+            put_u32(&mut p, radius);
+        }
+        put_section(&mut out, TAG_GEOMETRY, &p);
+
+        // LEDGERS
+        let mut p = Vec::new();
+        put_u64(&mut p, self.epoch);
+        for v in [
+            self.bus.wt_writes,
+            self.bus.cfg_writes,
+            self.bus.spk_in_events,
+            self.bus.spk_out_events,
+        ] {
+            put_u64(&mut p, v);
+        }
+        for v in [
+            self.activity.spk_steps,
+            self.activity.mem_cycles,
+            self.activity.synaptic_ops,
+            self.activity.gated_ops,
+            self.activity.vmem_toggles,
+            self.activity.neuron_updates,
+            self.activity.spikes,
+        ] {
+            put_u64(&mut p, v);
+        }
+        put_u64(&mut p, self.submitted);
+        put_u64(&mut p, self.completed);
+        put_section(&mut out, TAG_LEDGERS, &p);
+
+        // LAYER sections, shard-major.
+        for (shard, states) in self.layers.iter().enumerate() {
+            for (layer, st) in states.iter().enumerate() {
+                let mut p = Vec::new();
+                put_u16(&mut p, shard as u16);
+                put_u16(&mut p, layer as u16);
+                for &r in &st.regs {
+                    put_u32(&mut p, r as u32);
+                }
+                put_i32_vec(&mut p, &st.weights);
+                put_i32_vec(&mut p, &st.vmem);
+                put_i32_vec(&mut p, &st.refcnt);
+                put_u16(&mut p, st.lanes);
+                put_i32_vec(&mut p, &st.lane_vmem);
+                put_i32_vec(&mut p, &st.lane_refcnt);
+                put_section(&mut out, TAG_LAYER, &p);
+            }
+        }
+        out
+    }
+
+    /// Decode and structurally validate a connectome. Every byte is read
+    /// through the bounds-checked cursor; every section payload must match
+    /// its CRC; geometry invariants (layer arity, bank sizes vs neuron
+    /// counts, section order) are enforced here so downstream consumers
+    /// can index freely. Hostile input yields a typed [`SnapshotError`],
+    /// never a panic and never an allocation larger than the input could
+    /// justify.
+    pub fn decode(bytes: &[u8]) -> Result<Connectome, SnapshotError> {
+        let mut c = Cursor::new(bytes);
+        let magic = c.u32("magic")?;
+        if magic != MAGIC {
+            return Err(SnapshotError::BadMagic(magic));
+        }
+        let version = c.u16("version")?;
+        if version != VERSION {
+            return Err(SnapshotError::BadVersion(version));
+        }
+        let count = c.u32("section count")? as usize;
+        if count < 2 {
+            return Err(SnapshotError::BadValue("fewer than two sections"));
+        }
+
+        let mut geometry: Option<Vec<u8>> = None;
+        let mut ledgers: Option<Vec<u8>> = None;
+        let mut layer_payloads: Vec<Vec<u8>> = Vec::new();
+        for index in 0..count {
+            let tag = c.u8("section tag")?;
+            let len = c.u32("section length")? as usize;
+            let payload = c.take(len, "section payload")?;
+            let crc = c.u32("section crc")?;
+            if crc32(payload) != crc {
+                let section = match tag {
+                    TAG_GEOMETRY => "geometry",
+                    TAG_LEDGERS => "ledgers",
+                    TAG_LAYER => "layer",
+                    _ => "unknown",
+                };
+                return Err(SnapshotError::BadCrc { section, index });
+            }
+            match tag {
+                TAG_GEOMETRY if index == 0 && geometry.is_none() => {
+                    geometry = Some(payload.to_vec());
+                }
+                TAG_LEDGERS if index == 1 && ledgers.is_none() => {
+                    ledgers = Some(payload.to_vec());
+                }
+                TAG_LAYER if index >= 2 => layer_payloads.push(payload.to_vec()),
+                TAG_GEOMETRY | TAG_LEDGERS | TAG_LAYER => {
+                    return Err(SnapshotError::BadValue("sections out of order"));
+                }
+                _ => return Err(SnapshotError::BadValue("unknown section tag")),
+            }
+        }
+        if c.remaining() != 0 {
+            return Err(SnapshotError::TrailingBytes { extra: c.remaining() });
+        }
+        let geometry = geometry.ok_or(SnapshotError::BadValue("missing geometry section"))?;
+        let ledgers = ledgers.ok_or(SnapshotError::BadValue("missing ledgers section"))?;
+
+        // GEOMETRY
+        let mut g = Cursor::new(&geometry);
+        let n = g.u8("qspec n")?;
+        let q = g.u8("qspec q")?;
+        let qspec =
+            QSpec::new(n, q).map_err(|_| SnapshotError::BadValue("qspec out of range"))?;
+        let mem = mem_from_tag(g.u8("memory kind")?)
+            .ok_or(SnapshotError::BadValue("unknown memory kind"))?;
+        let cores = g.u16("core count")?;
+        if cores == 0 {
+            return Err(SnapshotError::BadValue("zero cores"));
+        }
+        let lane_width = g.u16("lane width")?;
+        if lane_width == 0 || lane_width > 64 {
+            return Err(SnapshotError::BadValue("lane width outside 1..=64"));
+        }
+        let n_sizes = g.u32("layer-size count")? as usize;
+        if !(2..=1024).contains(&n_sizes) {
+            return Err(SnapshotError::BadValue("layer-size count outside 2..=1024"));
+        }
+        let mut sizes = Vec::with_capacity(n_sizes);
+        for _ in 0..n_sizes {
+            let s = g.u32("layer size")?;
+            if s == 0 || s as usize > MAX_WORDS {
+                return Err(SnapshotError::BadValue("layer size outside 1..=4Mi"));
+            }
+            sizes.push(s);
+        }
+        let mut topologies = Vec::with_capacity(n_sizes - 1);
+        for _ in 0..n_sizes - 1 {
+            let tag = g.u8("topology tag")?;
+            let radius = g.u32("topology radius")?;
+            topologies.push(match tag {
+                0 => Topology::AllToAll,
+                1 => Topology::OneToOne,
+                2 => Topology::Gaussian { radius },
+                _ => return Err(SnapshotError::BadValue("unknown topology tag")),
+            });
+        }
+        if g.remaining() != 0 {
+            return Err(SnapshotError::BadValue("geometry section has trailing bytes"));
+        }
+
+        // LEDGERS
+        let mut l = Cursor::new(&ledgers);
+        let epoch = l.u64("epoch")?;
+        let bus = BusStats {
+            wt_writes: l.u64("wt_writes")?,
+            cfg_writes: l.u64("cfg_writes")?,
+            spk_in_events: l.u64("spk_in_events")?,
+            spk_out_events: l.u64("spk_out_events")?,
+        };
+        let activity = ActivityStats {
+            spk_steps: l.u64("spk_steps")?,
+            mem_cycles: l.u64("mem_cycles")?,
+            synaptic_ops: l.u64("synaptic_ops")?,
+            gated_ops: l.u64("gated_ops")?,
+            vmem_toggles: l.u64("vmem_toggles")?,
+            neuron_updates: l.u64("neuron_updates")?,
+            spikes: l.u64("spikes")?,
+        };
+        let submitted = l.u64("submitted")?;
+        let completed = l.u64("completed")?;
+        if l.remaining() != 0 {
+            return Err(SnapshotError::BadValue("ledgers section has trailing bytes"));
+        }
+
+        // LAYER sections: exactly cores × (sizes.len()-1), shard-major.
+        let num_layers = n_sizes - 1;
+        if layer_payloads.len() != cores as usize * num_layers {
+            return Err(SnapshotError::BadValue("layer section count != cores x layers"));
+        }
+        let mut layers: Vec<Vec<LayerState>> = Vec::with_capacity(cores as usize);
+        let mut payloads = layer_payloads.iter();
+        for shard in 0..cores {
+            let mut states = Vec::with_capacity(num_layers);
+            for layer in 0..num_layers {
+                let payload = payloads.next().expect("arity checked above");
+                let mut s = Cursor::new(payload);
+                if s.u16("shard index")? != shard || s.u16("layer index")? != layer as u16 {
+                    return Err(SnapshotError::BadValue("layer section out of order"));
+                }
+                let mut regs = [0i32; NUM_REGS];
+                for r in &mut regs {
+                    *r = s.i32("register value")?;
+                }
+                let weights = s.i32_vec("weight words")?;
+                let vmem = s.i32_vec("vmem bank")?;
+                let refcnt = s.i32_vec("refcnt bank")?;
+                let lanes = s.u16("lane count")?;
+                let lane_vmem = s.i32_vec("lane vmem bank")?;
+                let lane_refcnt = s.i32_vec("lane refcnt bank")?;
+                if s.remaining() != 0 {
+                    return Err(SnapshotError::BadValue("layer section has trailing bytes"));
+                }
+                let neurons = sizes[layer + 1] as usize;
+                if vmem.len() != neurons || refcnt.len() != neurons {
+                    return Err(SnapshotError::BadValue("neuron bank size != layer width"));
+                }
+                if lanes > 64 {
+                    return Err(SnapshotError::BadValue("lane bank wider than 64"));
+                }
+                let lane_words = neurons * lanes as usize;
+                if lane_vmem.len() != lane_words || lane_refcnt.len() != lane_words {
+                    return Err(SnapshotError::BadValue("lane bank size != width x lanes"));
+                }
+                states.push(LayerState {
+                    regs,
+                    weights,
+                    vmem,
+                    refcnt,
+                    lanes,
+                    lane_vmem,
+                    lane_refcnt,
+                });
+            }
+            layers.push(states);
+        }
+
+        Ok(Connectome {
+            qspec,
+            mem,
+            cores,
+            lane_width,
+            sizes,
+            topologies,
+            epoch,
+            bus,
+            activity,
+            submitted,
+            completed,
+            layers,
+        })
+    }
+
+    /// The engine-wide register vector. Registers are broadcast to every
+    /// shard and layer, so all sections must agree; a snapshot that
+    /// disagrees with itself is rejected rather than silently picking one.
+    pub fn register_vector(&self) -> Result<[i32; NUM_REGS], SnapshotError> {
+        let first = self
+            .layers
+            .first()
+            .and_then(|s| s.first())
+            .ok_or(SnapshotError::BadValue("no layer sections"))?
+            .regs;
+        for states in &self.layers {
+            for st in states {
+                if st.regs != first {
+                    return Err(SnapshotError::BadValue("register sections disagree"));
+                }
+            }
+        }
+        Ok(first)
+    }
+}
+
+fn put_section(out: &mut Vec<u8>, tag: u8, payload: &[u8]) {
+    out.push(tag);
+    put_u32(out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    put_u32(out, crc32(payload));
+}
+
+fn mem_tag(mem: MemKind) -> u8 {
+    match mem {
+        MemKind::Bram => 0,
+        MemKind::DistributedLut => 1,
+        MemKind::Register => 2,
+    }
+}
+
+fn mem_from_tag(tag: u8) -> Option<MemKind> {
+    match tag {
+        0 => Some(MemKind::Bram),
+        1 => Some(MemKind::DistributedLut),
+        2 => Some(MemKind::Register),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // The canonical IEEE check value plus an empty-input identity.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn tiny() -> Connectome {
+        Connectome {
+            qspec: crate::fixed::Q5_3,
+            mem: MemKind::Bram,
+            cores: 1,
+            lane_width: 1,
+            sizes: vec![2, 3],
+            topologies: vec![Topology::AllToAll],
+            epoch: 7,
+            bus: BusStats { wt_writes: 1, cfg_writes: 2, spk_in_events: 3, spk_out_events: 4 },
+            activity: ActivityStats { spikes: 9, ..Default::default() },
+            submitted: 5,
+            completed: 5,
+            layers: vec![vec![LayerState {
+                regs: [2, 8, 8, 0, 2, 0],
+                weights: vec![1, -2, 3, -4, 5, -6],
+                vmem: vec![0, 0, 0],
+                refcnt: vec![0, 0, 0],
+                lanes: 0,
+                lane_vmem: vec![],
+                lane_refcnt: vec![],
+            }]],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let c = tiny();
+        let bytes = c.encode();
+        assert_eq!(Connectome::decode(&bytes).unwrap(), c);
+    }
+
+    #[test]
+    fn every_truncation_is_a_typed_error() {
+        let bytes = tiny().encode();
+        for cut in 0..bytes.len() {
+            let err = Connectome::decode(&bytes[..cut]);
+            assert!(err.is_err(), "decode of {cut}-byte prefix must fail");
+        }
+    }
+
+    #[test]
+    fn register_disagreement_is_rejected() {
+        let mut c = tiny();
+        c.cores = 2;
+        let mut other = c.layers[0].clone();
+        other[0].regs[0] = 3;
+        c.layers.push(other);
+        let bytes = c.encode();
+        let decoded = Connectome::decode(&bytes).unwrap();
+        assert_eq!(
+            decoded.register_vector(),
+            Err(SnapshotError::BadValue("register sections disagree"))
+        );
+    }
+}

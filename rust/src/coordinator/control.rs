@@ -203,6 +203,10 @@ pub enum ControlError {
     PayloadSize { layer: usize, expect: usize, got: usize },
     /// A wt_in payload word does not fit the engine's Qn.q format.
     WeightOutOfRange { layer: usize, index: usize, value: i32, q: String },
+    /// A connectome offered to [`ControlPlane::migrate`] does not describe
+    /// this engine (wrong quantization, layer arity, or internally
+    /// inconsistent register sections). Nothing was applied.
+    SnapshotMismatch { what: &'static str },
 }
 
 impl std::fmt::Display for ControlError {
@@ -220,6 +224,9 @@ impl std::fmt::Display for ControlError {
                 f,
                 "wt_in payload for layer {layer} word {index} = {value} does not fit {q}"
             ),
+            ControlError::SnapshotMismatch { what } => {
+                write!(f, "connectome does not match this engine: {what}")
+            }
         }
     }
 }
@@ -353,6 +360,20 @@ impl ControlShared {
     pub(crate) fn charge_spk_out(&self, events: u64) {
         relock(&self.bus).spk_out_events += events;
     }
+
+    /// The wt_in payload-size contract: layer k's physical word count.
+    pub(crate) fn packed_sizes(&self) -> &[usize] {
+        &self.packed_sizes
+    }
+
+    /// Connectome-restore seeding: continue the epoch counter and the AXI
+    /// ledger exactly where the snapshot fenced them. Only called on a
+    /// freshly built engine before it serves anything (the shadow register
+    /// file was already seeded through the constructor).
+    pub(crate) fn seed(&self, epoch: u64, bus: BusStats) {
+        self.next_epoch.store(epoch + 1, Ordering::SeqCst);
+        *relock(&self.bus) = bus;
+    }
 }
 
 /// A cloneable, thread-safe handle for reprogramming a live
@@ -437,6 +458,48 @@ impl ControlPlane {
     /// shard) plus spk_in/spk_out data beats, on one meter.
     pub fn bus(&self) -> BusStats {
         self.shared.bus()
+    }
+
+    /// Blue/green migration: warm-swap a connectome's registers **and**
+    /// every layer's packed weights into this live engine as **exactly one
+    /// config epoch** — one atomic cfg_in + wt_in program through the
+    /// ordinary [`ControlPlane::apply`] path, so it lands at the next
+    /// sample boundary with no drain, no rebuild, and no stream lost.
+    /// The snapshot's dynamic state (neuron banks, ledgers, epoch counter)
+    /// is deliberately *not* applied — a live engine keeps its own; use
+    /// [`ServingEngine::from_connectome`](super::serving::ServingEngine::from_connectome)
+    /// for a full bit-exact restore.
+    ///
+    /// Returns the assigned epoch. A snapshot that does not describe this
+    /// engine's geometry is rejected with a typed [`ControlError`] and
+    /// nothing is applied.
+    pub fn migrate(&self, c: &super::connectome::Connectome) -> Result<u64, ControlError> {
+        if c.qspec != self.shared.qspec {
+            return Err(ControlError::SnapshotMismatch { what: "quantization format differs" });
+        }
+        let donor = c
+            .layers
+            .first()
+            .ok_or(ControlError::SnapshotMismatch { what: "snapshot has no layer sections" })?;
+        if donor.len() != self.shared.packed_sizes.len() {
+            return Err(ControlError::SnapshotMismatch { what: "layer count differs" });
+        }
+        let vector = c
+            .register_vector()
+            .map_err(|_| ControlError::SnapshotMismatch { what: "register sections disagree" })?;
+        // Shards of the donor engine are identical by construction; shard
+        // 0's packed stores are the canonical weight payloads. Payload
+        // sizes and Qn.q range are validated by `apply` against *this*
+        // engine's topology stores — a geometry mismatch that survives
+        // the checks above is still rejected there, atomically.
+        let mut program = ReconfigProgram::new();
+        for (addr, &value) in vector.iter().enumerate() {
+            program = program.write(addr, value);
+        }
+        for (k, st) in donor.iter().enumerate() {
+            program = program.swap_weights(k, st.weights.clone());
+        }
+        self.apply(program)
     }
 }
 

@@ -27,12 +27,19 @@
 //!   per-tenant reconfiguration through the control plane's epochs.
 //! * [`client`] — the matching client ([`client::WireClient`]) and the
 //!   open-loop load generator behind `repro loadgen`.
+//! * [`connectome`] — the versioned binary snapshot of a serving engine's
+//!   complete software-defined state ([`connectome::Connectome`]):
+//!   topology-packed weights, registers, neuron banks, epoch and bus
+//!   ledgers — with per-section CRCs, a never-panicking decoder, bit-exact
+//!   restore ([`serving::ServingEngine::from_connectome`]) and live
+//!   blue/green migration ([`control::ControlPlane::migrate`]).
 //!
 //! See `ARCHITECTURE.md` at the repo root for the module map, the
 //! paper-section cross-reference, and the dataflow diagram of the sharded
 //! pipelined engine with the control-message path.
 
 pub mod client;
+pub mod connectome;
 pub mod control;
 pub mod interface;
 pub mod metrics;

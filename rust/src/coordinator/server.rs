@@ -60,6 +60,7 @@ use anyhow::Result;
 
 use crate::datasets::Sample;
 
+use super::connectome::Connectome;
 use super::control::{ControlPlane, ReconfigProgram};
 use super::serving::{ServingEngine, SessionOp};
 use super::wire::{self, ErrorCode, Frame, WireError};
@@ -79,6 +80,11 @@ pub struct ServerOptions {
     pub max_t_steps: u32,
     /// Frame-length cap handed to the wire codec.
     pub max_frame_len: u32,
+    /// Close a connection that completes no frame for this long (the
+    /// slow-loris defence): the session gets a typed
+    /// [`ErrorCode::IdleTimeout`] error and the socket is closed, so a
+    /// silent client cannot pin a connection thread forever.
+    pub idle_timeout: Duration,
 }
 
 impl Default for ServerOptions {
@@ -89,6 +95,7 @@ impl Default for ServerOptions {
             max_batch: 64,
             max_t_steps: 4096,
             max_frame_len: wire::DEFAULT_MAX_FRAME_LEN,
+            idle_timeout: Duration::from_secs(300),
         }
     }
 }
@@ -105,6 +112,8 @@ pub struct ServerStats {
     pub rejects_bad: u64,
     /// Connections killed for frame-grammar violations.
     pub protocol_errors: u64,
+    /// Connections closed for exceeding [`ServerOptions::idle_timeout`].
+    pub idle_timeouts: u64,
     /// Engine failures observed by the pump (the engine stops serving but
     /// the server keeps answering with typed `Internal` errors).
     pub engine_failures: u64,
@@ -119,6 +128,7 @@ struct Counters {
     rejects_overloaded: AtomicU64,
     rejects_bad: AtomicU64,
     protocol_errors: AtomicU64,
+    idle_timeouts: AtomicU64,
     engine_failures: AtomicU64,
 }
 
@@ -136,6 +146,7 @@ impl Counters {
             rejects_overloaded: self.rejects_overloaded.load(Ordering::Relaxed),
             rejects_bad: self.rejects_bad.load(Ordering::Relaxed),
             protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            idle_timeouts: self.idle_timeouts.load(Ordering::Relaxed),
             engine_failures: self.engine_failures.load(Ordering::Relaxed),
         }
     }
@@ -166,6 +177,17 @@ enum PumpMsg {
         session: u32,
         request: u64,
         program: ReconfigProgram,
+        inflight: Arc<AtomicU32>,
+        reply: Sender<Frame>,
+    },
+    /// Serialize the engine's full connectome at the next batch boundary.
+    Snapshot { session: u32, request: u64, inflight: Arc<AtomicU32>, reply: Sender<Frame> },
+    /// Warm-swap a connectome's weights+registers into the live engine as
+    /// one config epoch ([`ControlPlane::migrate`]).
+    Restore {
+        session: u32,
+        request: u64,
+        bytes: Vec<u8>,
         inflight: Arc<AtomicU32>,
         reply: Sender<Frame>,
     },
@@ -303,6 +325,44 @@ fn reject(reply: &Sender<Frame>, code: ErrorCode, session: u32, reference: u64, 
     let _ = reply.send(Frame::Error { code, session, reference, message });
 }
 
+/// Enqueue a validated op on the pump queue, undoing its in-flight
+/// reservation and answering with a typed error if the queue is full or
+/// the server is shutting down.
+fn enqueue_or_reject(
+    pump_tx: &SyncSender<PumpMsg>,
+    msg: PumpMsg,
+    inflight: &Arc<AtomicU32>,
+    counters: &Counters,
+    reply: &Sender<Frame>,
+    session: u32,
+    reference: u64,
+) {
+    match pump_tx.try_send(msg) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => {
+            inflight.fetch_sub(1, Ordering::AcqRel);
+            Counters::bump(&counters.rejects_overloaded);
+            reject(
+                reply,
+                ErrorCode::Overloaded,
+                session,
+                reference,
+                "server admission queue is full".to_string(),
+            );
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            inflight.fetch_sub(1, Ordering::AcqRel);
+            reject(
+                reply,
+                ErrorCode::Internal,
+                session,
+                reference,
+                "server is shutting down".to_string(),
+            );
+        }
+    }
+}
+
 fn connection_loop(
     stream: TcpStream,
     pump_tx: SyncSender<PumpMsg>,
@@ -313,10 +373,11 @@ fn connection_loop(
     session_ids: Arc<AtomicU32>,
 ) {
     let _ = stream.set_nodelay(true);
-    // The read timeout is the shutdown poll interval, not a client SLA:
-    // an idle socket surfaces as WireError::Idle and we just re-check the
-    // flag.
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    // The read timeout is the shutdown/idle poll interval, not a client
+    // SLA: an idle socket surfaces as WireError::Idle every 200ms and we
+    // re-check the shutdown flag and the session's idle budget.
+    let poll = Duration::from_millis(200).min(options.idle_timeout);
+    let _ = stream.set_read_timeout(Some(poll));
     let write_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -327,13 +388,24 @@ fn connection_loop(
     // Connection-local sessions: id → (in-flight counter, granted quota).
     let mut sessions: HashMap<u32, (Arc<AtomicU32>, u32)> = HashMap::new();
     let mut hello_done = false;
+    // Slow-loris defence: a client that completes no frame for
+    // `idle_timeout` is cut off with a typed `IdleTimeout` error. The
+    // clock resets on every completed frame, so a chatty-but-slow client
+    // is fine; only a silent one trips it.
+    let mut last_frame = std::time::Instant::now();
     let fatal: Option<WireError> = loop {
         let frame = match wire::read_frame(&mut reader, options.max_frame_len) {
-            Ok(Some(f)) => f,
+            Ok(Some(f)) => {
+                last_frame = std::time::Instant::now();
+                f
+            }
             Ok(None) => break None, // clean EOF
             Err(WireError::Idle) => {
                 if shutdown.load(Ordering::SeqCst) {
                     break None;
+                }
+                if last_frame.elapsed() >= options.idle_timeout {
+                    break Some(WireError::Idle);
                 }
                 continue;
             }
@@ -406,11 +478,22 @@ fn connection_loop(
                     );
                     continue;
                 }
+                // The unpack geometry is attacker-controlled: a hostile
+                // t_steps×inputs product is rejected here with a typed
+                // error instead of feeding an unchecked multiply.
+                let parsed = match wire::sample_from_submit(t_steps, inputs, &spikes) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        Counters::bump(&counters.rejects_bad);
+                        reject(&reply_tx, ErrorCode::BadSample, session, sample, e.to_string());
+                        continue;
+                    }
+                };
                 inflight.fetch_add(1, Ordering::AcqRel);
                 let msg = PumpMsg::Submit {
                     session,
                     sample_id: sample,
-                    sample: wire::sample_from_submit(t_steps, inputs, &spikes),
+                    sample: parsed,
                     inflight: inflight.clone(),
                     reply: reply_tx.clone(),
                 };
@@ -497,12 +580,79 @@ fn connection_loop(
                     }
                 }
             }
+            Frame::Snapshot { session, request } => {
+                let Some((inflight, quota)) = sessions.get(&session) else {
+                    Counters::bump(&counters.rejects_bad);
+                    reject(
+                        &reply_tx,
+                        ErrorCode::BadSession,
+                        session,
+                        request,
+                        format!("session {session} not open on this connection"),
+                    );
+                    continue;
+                };
+                if inflight.load(Ordering::Acquire) >= *quota {
+                    Counters::bump(&counters.rejects_overloaded);
+                    reject(
+                        &reply_tx,
+                        ErrorCode::Overloaded,
+                        session,
+                        request,
+                        format!("session {session} already has {quota} requests in flight"),
+                    );
+                    continue;
+                }
+                inflight.fetch_add(1, Ordering::AcqRel);
+                let msg = PumpMsg::Snapshot {
+                    session,
+                    request,
+                    inflight: inflight.clone(),
+                    reply: reply_tx.clone(),
+                };
+                enqueue_or_reject(&pump_tx, msg, inflight, &counters, &reply_tx, session, request);
+            }
+            Frame::Restore { session, request, bytes } => {
+                let Some((inflight, quota)) = sessions.get(&session) else {
+                    Counters::bump(&counters.rejects_bad);
+                    reject(
+                        &reply_tx,
+                        ErrorCode::BadSession,
+                        session,
+                        request,
+                        format!("session {session} not open on this connection"),
+                    );
+                    continue;
+                };
+                if inflight.load(Ordering::Acquire) >= *quota {
+                    Counters::bump(&counters.rejects_overloaded);
+                    reject(
+                        &reply_tx,
+                        ErrorCode::Overloaded,
+                        session,
+                        request,
+                        format!("session {session} already has {quota} requests in flight"),
+                    );
+                    continue;
+                }
+                inflight.fetch_add(1, Ordering::AcqRel);
+                let msg = PumpMsg::Restore {
+                    session,
+                    request,
+                    bytes,
+                    inflight: inflight.clone(),
+                    reply: reply_tx.clone(),
+                };
+                enqueue_or_reject(&pump_tx, msg, inflight, &counters, &reply_tx, session, request);
+            }
             // Server→client frames arriving from a client violate the
             // protocol.
             Frame::HelloAck { .. }
             | Frame::SessionOpened { .. }
             | Frame::Result { .. }
             | Frame::ReconfigAck { .. }
+            | Frame::SnapshotData { .. }
+            | Frame::RestoreAck { .. }
             | Frame::Error { .. } => {
                 break Some(WireError::BadValue("client sent a server-side frame"));
             }
@@ -512,9 +662,25 @@ fn connection_loop(
         // Protocol violations kill this connection only: send the typed
         // error, then close (the writer drains and exits when the last
         // reply sender — possibly held by the pump for in-flight ops —
-        // drops).
-        Counters::bump(&counters.protocol_errors);
-        reject(&reply_tx, ErrorCode::BadFrame, 0, 0, e.to_string());
+        // drops). An idle expiry gets its own code so clients can tell a
+        // timeout from a grammar violation.
+        let (code, message) = match e {
+            WireError::Idle => {
+                Counters::bump(&counters.idle_timeouts);
+                (
+                    ErrorCode::IdleTimeout,
+                    format!(
+                        "connection idle for longer than {:?}; closing",
+                        options.idle_timeout
+                    ),
+                )
+            }
+            e => {
+                Counters::bump(&counters.protocol_errors);
+                (ErrorCode::BadFrame, e.to_string())
+            }
+        };
+        reject(&reply_tx, code, 0, 0, message);
     }
     drop(reply_tx);
     let _ = writer.join();
@@ -585,121 +751,315 @@ fn pump_loop(
                 Err(_) => break,
             }
         }
-        if let Some(msg) = &engine_dead {
-            for op in batch {
-                let (reply, inflight, session, reference) = match &op {
-                    PumpMsg::Submit { reply, inflight, session, sample_id, .. } => {
-                        (reply.clone(), inflight.clone(), *session, *sample_id)
-                    }
-                    PumpMsg::Reconfig { reply, inflight, session, request, .. } => {
-                        (reply.clone(), inflight.clone(), *session, *request)
-                    }
-                };
-                reject(&reply, ErrorCode::Internal, session, reference, msg.clone());
-                inflight.fetch_sub(1, Ordering::AcqRel);
-            }
-            continue;
-        }
-        // Decompose the batch: samples (kept alive for the borrow in
-        // SessionOp::Submit), per-submit reply metadata, and the op plan
-        // in arrival order. Malformed programs are rejected here,
-        // per-tenant, without failing anyone else's batch.
-        let mut samples: Vec<Sample> = Vec::new();
-        let mut submit_meta: Vec<(u32, u64, Arc<AtomicU32>, Sender<Frame>)> = Vec::new();
-        let mut programs: Vec<ReconfigProgram> = Vec::new();
-        let mut plan: Vec<Slot> = Vec::new();
-        let epoch_before = control.epoch();
-        let mut accepted_programs = 0u64;
+        // Snapshot/Restore are batch-boundary control ops: everything
+        // queued ahead of one runs to completion first (`run_session` is
+        // synchronous, so the pipeline is quiesced — `submitted ==
+        // completed` — when the op executes), then the rest of the batch
+        // proceeds. No queued stream is drained or lost.
+        let mut pending: Vec<PumpMsg> = Vec::new();
         for op in batch {
             match op {
-                PumpMsg::Submit { session, sample_id, sample, inflight, reply } => {
-                    samples.push(sample);
-                    submit_meta.push((session, sample_id, inflight, reply));
-                    plan.push(Slot::Sample { index: samples.len() - 1 });
-                }
-                PumpMsg::Reconfig { session, request, program, inflight, reply } => {
-                    match control.validate(&program) {
-                        Ok(()) => {
-                            accepted_programs += 1;
-                            programs.push(program);
-                            plan.push(Slot::Ack {
-                                session,
-                                request,
-                                epoch: epoch_before + accepted_programs,
-                                inflight,
-                                reply,
-                            });
-                        }
-                        Err(e) => {
-                            Counters::bump(&counters.rejects_bad);
-                            reject(&reply, ErrorCode::BadProgram, session, request, e.to_string());
-                            inflight.fetch_sub(1, Ordering::AcqRel);
-                        }
-                    }
-                }
-            }
-        }
-        if plan.is_empty() {
-            continue;
-        }
-        let mut program_iter = programs.into_iter();
-        let ops: Vec<SessionOp> = plan
-            .iter()
-            .map(|slot| match slot {
-                Slot::Sample { index } => SessionOp::Submit(&samples[*index]),
-                Slot::Ack { .. } => SessionOp::Reconfig(
-                    program_iter.next().expect("one program per ack slot"),
-                ),
-            })
-            .collect();
-        match engine.run_session(&ops) {
-            Ok(results) => {
-                debug_assert_eq!(results.len(), submit_meta.len(), "one result per submit");
-                let mut result_iter = results.into_iter();
-                for slot in plan {
-                    match slot {
-                        Slot::Sample { index } => {
-                            let (session, sample_id, inflight, reply) = &submit_meta[index];
-                            if let Some(r) = result_iter.next() {
-                                Counters::bump(&counters.samples_served);
-                                let _ = reply.send(Frame::Result {
-                                    session: *session,
-                                    sample: *sample_id,
-                                    epoch: r.epoch,
-                                    prediction: r.prediction as u32,
-                                    spikes_total: r.spikes_total,
-                                    counts: r.counts,
+                PumpMsg::Submit { .. } | PumpMsg::Reconfig { .. } => pending.push(op),
+                PumpMsg::Snapshot { session, request, inflight, reply } => {
+                    run_slots(
+                        &mut engine,
+                        &control,
+                        &counters,
+                        &mut engine_dead,
+                        std::mem::take(&mut pending),
+                    );
+                    if let Some(msg) = &engine_dead {
+                        reject(&reply, ErrorCode::Internal, session, request, msg.clone());
+                    } else {
+                        match engine.snapshot() {
+                            Ok(c) => {
+                                let _ = reply.send(Frame::SnapshotData {
+                                    session,
+                                    request,
+                                    bytes: c.encode(),
                                 });
                             }
-                            inflight.fetch_sub(1, Ordering::AcqRel);
+                            Err(e) => {
+                                Counters::bump(&counters.engine_failures);
+                                let msg = format!("snapshot failed: {e:#}");
+                                engine_dead = Some(msg.clone());
+                                reject(&reply, ErrorCode::Internal, session, request, msg);
+                            }
                         }
-                        Slot::Ack { session, request, epoch, inflight, reply } => {
-                            Counters::bump(&counters.reconfigs_applied);
-                            let _ = reply.send(Frame::ReconfigAck { session, request, epoch });
-                            inflight.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    inflight.fetch_sub(1, Ordering::AcqRel);
+                }
+                PumpMsg::Restore { session, request, bytes, inflight, reply } => {
+                    run_slots(
+                        &mut engine,
+                        &control,
+                        &counters,
+                        &mut engine_dead,
+                        std::mem::take(&mut pending),
+                    );
+                    if let Some(msg) = &engine_dead {
+                        reject(&reply, ErrorCode::Internal, session, request, msg.clone());
+                    } else {
+                        // Decode and migrate both reject with typed errors;
+                        // a bad snapshot is the client's problem, not the
+                        // engine's — it keeps serving.
+                        let outcome = Connectome::decode(&bytes)
+                            .map_err(|e| e.to_string())
+                            .and_then(|c| control.migrate(&c).map_err(|e| e.to_string()));
+                        match outcome {
+                            Ok(epoch) => {
+                                Counters::bump(&counters.reconfigs_applied);
+                                let _ = reply.send(Frame::RestoreAck { session, request, epoch });
+                            }
+                            Err(msg) => {
+                                Counters::bump(&counters.rejects_bad);
+                                reject(&reply, ErrorCode::BadProgram, session, request, msg);
+                            }
                         }
+                    }
+                    inflight.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+        }
+        run_slots(&mut engine, &control, &counters, &mut engine_dead, pending);
+    }
+    // Engine drops here: its Drop joins every shard thread.
+}
+
+/// Run one micro-batch of data-path ops (submits + in-band reconfigs)
+/// through the engine and answer every slot. Factored out of the pump loop
+/// so snapshot/restore control ops can flush the queue ahead of
+/// themselves.
+fn run_slots(
+    engine: &mut ServingEngine,
+    control: &ControlPlane,
+    counters: &Counters,
+    engine_dead: &mut Option<String>,
+    batch: Vec<PumpMsg>,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    if let Some(msg) = engine_dead {
+        for op in batch {
+            let (reply, inflight, session, reference) = match &op {
+                PumpMsg::Submit { reply, inflight, session, sample_id, .. } => {
+                    (reply.clone(), inflight.clone(), *session, *sample_id)
+                }
+                PumpMsg::Reconfig { reply, inflight, session, request, .. }
+                | PumpMsg::Snapshot { reply, inflight, session, request, .. }
+                | PumpMsg::Restore { reply, inflight, session, request, .. } => {
+                    (reply.clone(), inflight.clone(), *session, *request)
+                }
+            };
+            reject(&reply, ErrorCode::Internal, session, reference, msg.clone());
+            inflight.fetch_sub(1, Ordering::AcqRel);
+        }
+        return;
+    }
+    // Decompose the batch: samples (kept alive for the borrow in
+    // SessionOp::Submit), per-submit reply metadata, and the op plan
+    // in arrival order. Malformed programs are rejected here,
+    // per-tenant, without failing anyone else's batch.
+    let mut samples: Vec<Sample> = Vec::new();
+    let mut submit_meta: Vec<(u32, u64, Arc<AtomicU32>, Sender<Frame>)> = Vec::new();
+    let mut programs: Vec<ReconfigProgram> = Vec::new();
+    let mut plan: Vec<Slot> = Vec::new();
+    let epoch_before = control.epoch();
+    let mut accepted_programs = 0u64;
+    for op in batch {
+        match op {
+            PumpMsg::Submit { session, sample_id, sample, inflight, reply } => {
+                samples.push(sample);
+                submit_meta.push((session, sample_id, inflight, reply));
+                plan.push(Slot::Sample { index: samples.len() - 1 });
+            }
+            PumpMsg::Reconfig { session, request, program, inflight, reply } => {
+                match control.validate(&program) {
+                    Ok(()) => {
+                        accepted_programs += 1;
+                        programs.push(program);
+                        plan.push(Slot::Ack {
+                            session,
+                            request,
+                            epoch: epoch_before + accepted_programs,
+                            inflight,
+                            reply,
+                        });
+                    }
+                    Err(e) => {
+                        Counters::bump(&counters.rejects_bad);
+                        reject(&reply, ErrorCode::BadProgram, session, request, e.to_string());
+                        inflight.fetch_sub(1, Ordering::AcqRel);
                     }
                 }
             }
-            Err(e) => {
-                Counters::bump(&counters.engine_failures);
-                let msg = format!("serving engine failed: {e:#}");
-                engine_dead = Some(msg.clone());
-                for slot in plan {
-                    match slot {
-                        Slot::Sample { index } => {
-                            let (session, sample_id, inflight, reply) = &submit_meta[index];
-                            reject(reply, ErrorCode::Internal, *session, *sample_id, msg.clone());
-                            inflight.fetch_sub(1, Ordering::AcqRel);
+            // Control ops never reach the data path (the pump executes
+            // them at flush boundaries); answer defensively rather than
+            // panic if one ever does.
+            PumpMsg::Snapshot { session, request, inflight, reply }
+            | PumpMsg::Restore { session, request, inflight, reply, .. } => {
+                reject(
+                    &reply,
+                    ErrorCode::Internal,
+                    session,
+                    request,
+                    "control op routed to the data path".to_string(),
+                );
+                inflight.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+    let (plan, ops) = build_ops(plan, &samples, programs);
+    if ops.is_empty() {
+        return;
+    }
+    match engine.run_session(&ops) {
+        Ok(results) => {
+            debug_assert_eq!(results.len(), submit_meta.len(), "one result per submit");
+            let mut result_iter = results.into_iter();
+            for slot in plan {
+                match slot {
+                    Slot::Sample { index } => {
+                        let (session, sample_id, inflight, reply) = &submit_meta[index];
+                        if let Some(r) = result_iter.next() {
+                            Counters::bump(&counters.samples_served);
+                            let _ = reply.send(Frame::Result {
+                                session: *session,
+                                sample: *sample_id,
+                                epoch: r.epoch,
+                                prediction: r.prediction as u32,
+                                spikes_total: r.spikes_total,
+                                counts: r.counts,
+                            });
                         }
-                        Slot::Ack { session, request, inflight, reply, .. } => {
-                            reject(&reply, ErrorCode::Internal, session, request, msg.clone());
-                            inflight.fetch_sub(1, Ordering::AcqRel);
-                        }
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    Slot::Ack { session, request, epoch, inflight, reply } => {
+                        Counters::bump(&counters.reconfigs_applied);
+                        let _ = reply.send(Frame::ReconfigAck { session, request, epoch });
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            Counters::bump(&counters.engine_failures);
+            let msg = format!("serving engine failed: {e:#}");
+            *engine_dead = Some(msg.clone());
+            for slot in plan {
+                match slot {
+                    Slot::Sample { index } => {
+                        let (session, sample_id, inflight, reply) = &submit_meta[index];
+                        reject(reply, ErrorCode::Internal, *session, *sample_id, msg.clone());
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    Slot::Ack { session, request, inflight, reply, .. } => {
+                        reject(&reply, ErrorCode::Internal, session, request, msg.clone());
+                        inflight.fetch_sub(1, Ordering::AcqRel);
                     }
                 }
             }
         }
     }
-    // Engine drops here: its Drop joins every shard thread.
+}
+
+/// Pair each planned slot with its engine op. An `Ack` slot without a
+/// matching validated program is pump bookkeeping gone wrong; it used to
+/// panic the pump thread — the engine's sole owner, so one bad batch took
+/// the whole front door down. Now the offending slot alone is answered
+/// with a typed `Internal` error and dropped from the plan, and the pump
+/// keeps serving every other tenant.
+fn build_ops<'a>(
+    plan: Vec<Slot>,
+    samples: &'a [Sample],
+    programs: Vec<ReconfigProgram>,
+) -> (Vec<Slot>, Vec<SessionOp<'a>>) {
+    let mut program_iter = programs.into_iter();
+    let mut kept: Vec<Slot> = Vec::with_capacity(plan.len());
+    let mut ops: Vec<SessionOp<'a>> = Vec::with_capacity(plan.len());
+    for slot in plan {
+        match slot {
+            Slot::Sample { index } => {
+                ops.push(SessionOp::Submit(&samples[index]));
+                kept.push(Slot::Sample { index });
+            }
+            Slot::Ack { session, request, epoch, inflight, reply } => match program_iter.next() {
+                Some(program) => {
+                    ops.push(SessionOp::Reconfig(program));
+                    kept.push(Slot::Ack { session, request, epoch, inflight, reply });
+                }
+                None => {
+                    reject(
+                        &reply,
+                        ErrorCode::Internal,
+                        session,
+                        request,
+                        "reconfig ack bookkeeping mismatch: no validated program for this ack"
+                            .to_string(),
+                    );
+                    inflight.fetch_sub(1, Ordering::AcqRel);
+                }
+            },
+        }
+    }
+    (kept, ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ack_slot(session: u32, request: u64) -> (Slot, Arc<AtomicU32>, Receiver<Frame>) {
+        let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
+        let inflight = Arc::new(AtomicU32::new(1));
+        let slot = Slot::Ack { session, request, epoch: 1, inflight: inflight.clone(), reply: reply_tx };
+        (slot, inflight, reply_rx)
+    }
+
+    /// Regression: an `Ack` slot with no matching validated program used to
+    /// panic the pump thread via `.expect("one program per ack slot")` —
+    /// and the pump is the engine's sole owner, so that panic took the
+    /// whole front door down. The mismatch must now fail only the
+    /// offending session with a typed `Internal` error.
+    #[test]
+    fn ack_slot_without_program_fails_session_not_pump() {
+        let (slot, inflight, reply_rx) = ack_slot(7, 99);
+        let samples: Vec<Sample> = Vec::new();
+        let (kept, ops) = build_ops(vec![slot], &samples, Vec::new());
+        assert!(kept.is_empty());
+        assert!(ops.is_empty());
+        assert_eq!(inflight.load(Ordering::SeqCst), 0, "in-flight slot must be released");
+        match reply_rx.try_recv().expect("offending session must get a typed error") {
+            Frame::Error { code, session, reference, message } => {
+                assert_eq!(code, ErrorCode::Internal);
+                assert_eq!((session, reference), (7, 99));
+                assert!(message.contains("bookkeeping"), "{message}");
+            }
+            f => panic!("expected Error frame, got {}", f.name()),
+        }
+    }
+
+    /// A mismatched ack in the middle of a batch must not disturb sibling
+    /// slots: every sample and every matched ack still runs.
+    #[test]
+    fn mismatched_ack_keeps_sibling_slots() {
+        let sample = Sample { spikes: vec![0; 4], t_steps: 1, inputs: 4, label: 0 };
+        let samples = vec![sample.clone(), sample];
+        let (matched, matched_inflight, matched_rx) = ack_slot(1, 10);
+        let (orphan, orphan_inflight, orphan_rx) = ack_slot(2, 20);
+        let plan = vec![Slot::Sample { index: 0 }, matched, orphan, Slot::Sample { index: 1 }];
+        let programs = vec![ReconfigProgram::new()];
+        let (kept, ops) = build_ops(plan, &samples, programs);
+        assert_eq!(kept.len(), 3, "both samples and the matched ack survive");
+        assert_eq!(ops.len(), 3);
+        assert!(matches!(ops[0], SessionOp::Submit(_)));
+        assert!(matches!(ops[1], SessionOp::Reconfig(_)));
+        assert!(matches!(ops[2], SessionOp::Submit(_)));
+        // The matched ack is untouched; the orphan alone was answered.
+        assert_eq!(matched_inflight.load(Ordering::SeqCst), 1);
+        assert!(matched_rx.try_recv().is_err());
+        assert_eq!(orphan_inflight.load(Ordering::SeqCst), 0);
+        assert!(matches!(orphan_rx.try_recv(), Ok(Frame::Error { .. })));
+    }
 }

@@ -89,6 +89,11 @@ pub enum ServingError {
     /// A worker thread panicked; `worker` names it and `message` is the
     /// stringified panic payload. The engine is shut down but droppable.
     WorkerPanicked { worker: String, message: String },
+    /// The engine was shut down (or poisoned and self-shut-down); no
+    /// further batches or snapshots are possible. Submitting used to hit
+    /// an `expect` on the closed stage channel and panic the caller —
+    /// now it is an ordinary, typed refusal.
+    ShutDown,
 }
 
 impl std::fmt::Display for ServingError {
@@ -96,6 +101,9 @@ impl std::fmt::Display for ServingError {
         match self {
             ServingError::WorkerPanicked { worker, message } => {
                 write!(f, "serving {worker} panicked: {message}")
+            }
+            ServingError::ShutDown => {
+                write!(f, "serving engine is shut down; rebuild or restore it")
             }
         }
     }
@@ -135,7 +143,23 @@ pub(crate) enum StageMsg {
     /// each stage (the lane twin of `Flush`).
     FlushLanes { streams: Vec<usize>, stats: Vec<ActivityStats> },
     Reconfig { epoch: u64, program: Arc<ReconfigProgram> },
+    /// Connectome snapshot fence: each stage writes its full state
+    /// (registers, packed weights, neuron banks) to `reply` and forwards
+    /// the fence downstream. Because it rides the same FIFO as the data,
+    /// the export is automatically taken at a sample-group boundary —
+    /// nothing in flight, nothing drained.
+    Export { reply: std::sync::mpsc::Sender<LayerExport> },
+    /// Connectome restore: each stage applies its entry of `states`
+    /// (weights + neuron banks; registers were seeded at construction),
+    /// acks on `reply`, and forwards. Payloads are validated against the
+    /// engine geometry *before* this message is sent, so stage-side
+    /// application is infallible — the Reconfig precedent.
+    Import { states: Arc<Vec<LayerExport>>, reply: std::sync::mpsc::Sender<()> },
 }
+
+/// Alias local to the stage machinery: the per-(shard, layer) state
+/// section of a [`Connectome`](super::connectome::Connectome).
+pub(crate) type LayerExport = super::connectome::LayerState;
 
 /// Body of one pipeline stage: owns hardware layer `layer_idx`, transforms
 /// spike vectors, resets its membranes at every stream boundary, and applies
@@ -245,6 +269,33 @@ pub(crate) fn stage_loop(
                     }
                 }
                 if tx.send(StageMsg::Reconfig { epoch, program }).is_err() {
+                    return;
+                }
+            }
+            StageMsg::Export { reply } => {
+                let (lanes, lane_vmem, lane_refcnt) = layer.lane_state();
+                // Send errors mean the snapshotter gave up (timeout) —
+                // the fence still flows downstream so later stages drain.
+                let _ = reply.send(LayerExport {
+                    regs: regs.vector(),
+                    weights: layer.memory().packed().to_vec(),
+                    vmem: layer.vmem_slice().to_vec(),
+                    refcnt: layer.refcnt_slice().to_vec(),
+                    lanes: lanes as u16,
+                    lane_vmem,
+                    lane_refcnt,
+                });
+                if tx.send(StageMsg::Export { reply }).is_err() {
+                    return;
+                }
+            }
+            StageMsg::Import { states, reply } => {
+                let st = &states[layer_idx];
+                layer.load_packed(&st.weights).expect("payload validated before import");
+                layer.restore_state(&st.vmem, &st.refcnt);
+                layer.restore_lanes(st.lanes as usize, &st.lane_vmem, &st.lane_refcnt);
+                let _ = reply.send(());
+                if tx.send(StageMsg::Import { states, reply }).is_err() {
                     return;
                 }
             }
@@ -403,6 +454,9 @@ pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
             StageMsg::Reconfig { epoch: e, .. } => {
                 epoch = e;
             }
+            // Snapshot fences terminate here: every stage already exported
+            // (or imported) by the time the marker reaches the collector.
+            StageMsg::Export { .. } | StageMsg::Import { .. } => {}
         }
     }
 }
@@ -502,6 +556,9 @@ struct Shard {
 /// ```
 pub struct ServingEngine {
     shards: Vec<Shard>,
+    /// The deployed architecture — kept so snapshots are self-describing
+    /// and a restored engine can be rebuilt without the original artifact.
+    config: ModelConfig,
     inputs: usize,
     outputs: usize,
     /// Physical synaptic storage words per shard (topology-aware stores).
@@ -521,6 +578,9 @@ pub struct ServingEngine {
     lane_width: usize,
     submitted: u64,
     completed: u64,
+    /// Cumulative [`ActivityStats`] over every completed stream — the
+    /// engine-lifetime activity ledger a connectome snapshot carries.
+    activity: ActivityStats,
     /// Set when a batch failed mid-flight: in-flight state is then
     /// indeterminate, so the engine refuses further batches (rebuild it).
     poisoned: bool,
@@ -626,6 +686,7 @@ impl ServingEngine {
         let control = Arc::new(ControlShared::new(regs.clone(), packed_sizes, options.cores));
         Ok(ServingEngine {
             shards,
+            config: config.clone(),
             inputs: config.inputs(),
             outputs: n_out,
             synapse_words,
@@ -635,6 +696,7 @@ impl ServingEngine {
             lane_width: lanes,
             submitted: 0,
             completed: 0,
+            activity: ActivityStats::default(),
             poisoned: false,
         })
     }
@@ -754,11 +816,15 @@ impl ServingEngine {
             }
         }
         let n_cores = self.shards.len();
-        let senders: Vec<SyncSender<StageMsg>> = self
-            .shards
-            .iter()
-            .map(|s| s.in_tx.as_ref().expect("engine not shut down").clone())
-            .collect();
+        // A shut-down engine has dropped its stage senders; submitting to
+        // it is a typed, recoverable refusal — not an `expect` panic.
+        let mut senders: Vec<SyncSender<StageMsg>> = Vec::with_capacity(n_cores);
+        for shard in &self.shards {
+            match &shard.in_tx {
+                Some(tx) => senders.push(tx.clone()),
+                None => return Err(ServingError::ShutDown.into()),
+            }
+        }
         let control = self.control.clone();
         let plane_pool = self.plane_pool.clone();
         let matrix_pool = self.matrix_pool.clone();
@@ -936,6 +1002,9 @@ impl ServingEngine {
                     "steady-state lane streaming allocated spike matrices (pool underprovisioned)"
                 );
                 self.completed += results.len() as u64;
+                for r in &results {
+                    self.activity.add(&r.stats);
+                }
                 Ok(results)
             }
             Err(e) => {
@@ -984,6 +1053,119 @@ impl ServingEngine {
             std::thread::sleep(std::time::Duration::from_millis(5));
         }
         None
+    }
+
+    /// Capture the complete engine state as a versioned
+    /// [`Connectome`](super::connectome::Connectome).
+    ///
+    /// The snapshot fence rides the same per-shard FIFO as the data
+    /// ([`StageMsg`] `Export`), so it is taken at a **sample-group
+    /// boundary**: every admitted stream has fully drained, none is
+    /// queued behind it, and nothing is discarded. Callers that interleave
+    /// snapshots with traffic (the network pump) serialize them between
+    /// [`ServingEngine::run_session`] calls, which is exactly that
+    /// boundary. `submitted == completed` in the result is the in-flight
+    /// ledger's quiesce-point invariant.
+    pub fn snapshot(&mut self) -> Result<super::connectome::Connectome> {
+        anyhow::ensure!(
+            !self.poisoned,
+            "serving engine poisoned by an earlier failed batch; nothing coherent to snapshot"
+        );
+        let num_layers = self.config.num_layers();
+        let mut layers = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            let tx = match &shard.in_tx {
+                Some(tx) => tx.clone(),
+                None => return Err(ServingError::ShutDown.into()),
+            };
+            let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+            tx.send(StageMsg::Export { reply: reply_tx })
+                .map_err(|_| anyhow::anyhow!("serving shard died"))?;
+            // Stage order is the FIFO order: layer k's export arrives k-th.
+            let mut states = Vec::with_capacity(num_layers);
+            for k in 0..num_layers {
+                states.push(
+                    reply_rx
+                        .recv_timeout(std::time::Duration::from_secs(60))
+                        .map_err(|_| anyhow::anyhow!("stage {k} never exported its state"))?,
+                );
+            }
+            layers.push(states);
+        }
+        Ok(super::connectome::Connectome {
+            qspec: self.config.qspec,
+            mem: self.config.mem,
+            cores: self.shards.len() as u16,
+            lane_width: self.lane_width as u16,
+            sizes: self.config.sizes().iter().map(|&s| s as u32).collect(),
+            topologies: (0..num_layers).map(|k| self.config.layer(k).topology).collect(),
+            epoch: self.control.epoch(),
+            bus: self.control.bus(),
+            activity: self.activity,
+            submitted: self.submitted,
+            completed: self.completed,
+            layers,
+        })
+    }
+
+    /// Revive a snapshot as a fresh, live engine — bit-exact: geometry,
+    /// registers, packed weights, neuron banks (single-sample and
+    /// lane-major), config epoch, and all ledgers continue exactly where
+    /// [`ServingEngine::snapshot`] fenced them. The differential gate in
+    /// `tests/connectome.rs` proves run-k-then-restore ≡ uninterrupted.
+    ///
+    /// Everything is validated *before* any stage applies anything (the
+    /// decoded geometry rebuilds the [`ModelConfig`]; weight payloads are
+    /// checked against the topology stores' packed sizes and the
+    /// quantization range), so a bad snapshot is a typed error with no
+    /// partially-restored engine left behind.
+    pub fn from_connectome(c: &super::connectome::Connectome) -> Result<ServingEngine> {
+        let sizes: Vec<usize> = c.sizes.iter().map(|&s| s as usize).collect();
+        let config = ModelConfig::with_topologies(&sizes, &c.topologies, c.qspec)?.with_mem(c.mem);
+        let mut regs = RegisterFile::new(c.qspec);
+        let vector = c.register_vector()?;
+        let program: Vec<(usize, i32)> = vector.iter().copied().enumerate().collect();
+        regs.apply_program(&program)?;
+        // Zero dense weights satisfy every topology mask; the real packed
+        // payloads land through the Import fence below.
+        let zeros: Vec<Vec<i32>> =
+            config.layers().iter().map(|l| vec![0i32; l.fan_in * l.neurons]).collect();
+        let options = ServingOptions::with_lanes(c.cores as usize, c.lane_width as usize);
+        let mut engine = ServingEngine::new(&config, &zeros, &regs, options)?;
+        anyhow::ensure!(
+            c.layers.len() == engine.shards.len(),
+            "snapshot has {} shard sections for a {}-shard engine",
+            c.layers.len(),
+            engine.shards.len()
+        );
+        let packed_sizes = engine.control.packed_sizes().to_vec();
+        for states in &c.layers {
+            // The decoder checked neuron-bank arity against the snapshot's
+            // own geometry; weight payloads are validated here against the
+            // rebuilt topology stores, reusing the control plane's wt_in
+            // contract so Import cannot fail stage-side.
+            let mut probe = ReconfigProgram::new();
+            for (k, st) in states.iter().enumerate() {
+                probe = probe.swap_weights(k, st.weights.clone());
+            }
+            probe.validate_weights(config.qspec, &packed_sizes)?;
+        }
+        for (shard, states) in engine.shards.iter().zip(&c.layers) {
+            let tx = shard.in_tx.as_ref().expect("freshly built engine").clone();
+            let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+            tx.send(StageMsg::Import { states: Arc::new(states.clone()), reply: ack_tx })
+                .map_err(|_| anyhow::anyhow!("serving shard died"))?;
+            for k in 0..packed_sizes.len() {
+                ack_rx
+                    .recv_timeout(std::time::Duration::from_secs(60))
+                    .map_err(|_| anyhow::anyhow!("stage {k} never acked its import"))?;
+            }
+        }
+        engine.control.seed(c.epoch, c.bus);
+        engine.submitted = c.submitted;
+        engine.completed = c.completed;
+        engine.activity = c.activity;
+        Ok(engine)
     }
 
     /// Drop the admission side and join all stage threads. Keeps draining
@@ -1460,5 +1642,115 @@ mod tests {
         // was admitted.
         let out = engine.run_batch(&samples[..2]).unwrap();
         assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_typed_error_not_panic() {
+        // Regression: submitting to a shut-down engine used to hit
+        // `.expect("engine not shut down")` on the closed admission
+        // channel and panic the caller. It must be a typed ShutDown error.
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        engine.shutdown();
+        let err = engine.run_batch(&samples[..2]).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServingError>(), Some(ServingError::ShutDown)),
+            "expected ServingError::ShutDown, got: {err:#}"
+        );
+        // Snapshot after shutdown takes the same typed path.
+        let err = engine.snapshot().unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServingError>(), Some(ServingError::ShutDown)),
+            "expected ServingError::ShutDown from snapshot, got: {err:#}"
+        );
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_bitexact() {
+        // Unit-level differential check (the cross-topology × lane-width
+        // gate lives in tests/connectome.rs): run a prefix, snapshot,
+        // revive, and require the remainder — and the final snapshot — to
+        // be bit-identical to the uninterrupted engine.
+        let (cfg, weights, regs, samples) = setup();
+        let opts = ServingOptions::with_cores(2);
+        let mut uninterrupted = ServingEngine::new(&cfg, &weights, &regs, opts).unwrap();
+        let mut donor = ServingEngine::new(&cfg, &weights, &regs, opts).unwrap();
+        let _ = uninterrupted.run_batch(&samples[..4]).unwrap();
+        let _ = donor.run_batch(&samples[..4]).unwrap();
+        let snap = donor.snapshot().unwrap();
+        assert_eq!((snap.submitted, snap.completed), (4, 4), "quiesce-point invariant");
+        let bytes = snap.encode();
+        let decoded = super::super::connectome::Connectome::decode(&bytes).unwrap();
+        assert_eq!(decoded, snap, "wire roundtrip must be identity");
+        let mut revived = ServingEngine::from_connectome(&decoded).unwrap();
+        let a = uninterrupted.run_batch(&samples[4..]).unwrap();
+        let b = revived.run_batch(&samples[4..]).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.counts, y.counts, "restored engine diverged");
+            assert_eq!(x.stats, y.stats, "restored activity ledger diverged");
+            assert_eq!(x.epoch, y.epoch);
+        }
+        // Whole-state equivalence: the two engines snapshot identically.
+        assert_eq!(revived.snapshot().unwrap(), uninterrupted.snapshot().unwrap());
+    }
+
+    #[test]
+    fn migrate_applies_snapshot_as_one_epoch() {
+        let (cfg, weights, regs, samples) = setup();
+        // Donor carries different weights and a raised threshold.
+        let mut rng = crate::datasets::rng::XorShift64Star::new(0xD02);
+        let donor_weights: Vec<Vec<i32>> = cfg
+            .layers()
+            .iter()
+            .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(15) as i32 - 7).collect())
+            .collect();
+        let mut donor_regs = regs.clone();
+        donor_regs.set_vth(4.0).unwrap();
+        let mut donor = ServingEngine::new(
+            &cfg,
+            &donor_weights,
+            &donor_regs,
+            ServingOptions::with_cores(1),
+        )
+        .unwrap();
+        let snap = donor.snapshot().unwrap();
+
+        let mut live =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        let _ = live.run_batch(&samples[..2]).unwrap();
+        let control = live.control_plane();
+        let before = control.epoch();
+        let epoch = control.migrate(&snap).unwrap();
+        assert_eq!(epoch, before + 1, "migration must be exactly one config epoch");
+        // Post-migration results are bit-identical to a sequential core
+        // built with the donor's weights and registers.
+        let out = live.run_batch(&samples[..3]).unwrap();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&donor_weights).unwrap();
+        core.registers = donor_regs;
+        for (r, s) in out.iter().zip(&samples[..3]) {
+            assert_eq!(r.counts, core.run(s).counts, "migrated engine diverged from donor");
+            assert_eq!(r.epoch, epoch);
+        }
+        // Geometry mismatch is rejected with a typed error, atomically.
+        let narrow = ModelConfig::parse_arch("4x3", Q5_3).unwrap();
+        let narrow_engine = ServingEngine::new(
+            &narrow,
+            &[vec![0; 12]],
+            &RegisterFile::new(Q5_3),
+            ServingOptions::with_cores(1),
+        )
+        .unwrap();
+        let err = narrow_engine.control_plane().migrate(&snap).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                super::super::control::ControlError::SnapshotMismatch { .. }
+                    | super::super::control::ControlError::PayloadSize { .. }
+            ),
+            "mismatched migrate must be typed: {err}"
+        );
+        assert_eq!(narrow_engine.control_plane().epoch(), 0, "nothing applied");
     }
 }

@@ -30,6 +30,10 @@
 //! | 7    | `Result`         | session `u32`, sample id `u64`, epoch `u64`, prediction `u32`, spikes_total `u64`, n_counts `u16`, n_counts × `u32` |
 //! | 8    | `ReconfigAck`    | session `u32`, request id `u64`, epoch `u64` |
 //! | 9    | `Error`          | code `u16`, session `u32`, reference id `u64`, msg_len `u16`, UTF-8 message |
+//! | 10   | `Snapshot`       | session `u32`, request id `u64` |
+//! | 11   | `SnapshotData`   | session `u32`, request id `u64`, byte_len `u32`, connectome bytes |
+//! | 12   | `Restore`        | session `u32`, request id `u64`, byte_len `u32`, connectome bytes |
+//! | 13   | `RestoreAck`     | session `u32`, request id `u64`, epoch `u64` |
 //!
 //! Spike payloads are bit-packed row-major (timestep-major, LSB-first
 //! within each byte) — the AER-flavoured dense encoding: 8 spike lines per
@@ -83,6 +87,10 @@ pub enum ErrorCode {
     /// The serving engine failed (e.g. a worker panicked). The process
     /// stays alive but this engine no longer serves.
     Internal,
+    /// The connection sent no complete frame for longer than the server's
+    /// configured idle read timeout; the server closes it after sending
+    /// this (the slow-loris defence).
+    IdleTimeout,
 }
 
 impl ErrorCode {
@@ -94,6 +102,7 @@ impl ErrorCode {
             ErrorCode::BadSample => 4,
             ErrorCode::BadFrame => 5,
             ErrorCode::Internal => 6,
+            ErrorCode::IdleTimeout => 7,
         }
     }
 
@@ -105,6 +114,7 @@ impl ErrorCode {
             4 => ErrorCode::BadSample,
             5 => ErrorCode::BadFrame,
             6 => ErrorCode::Internal,
+            7 => ErrorCode::IdleTimeout,
             _ => return None,
         })
     }
@@ -132,6 +142,16 @@ pub enum Frame {
     },
     ReconfigAck { session: u32, request: u64, epoch: u64 },
     Error { code: ErrorCode, session: u32, reference: u64, message: String },
+    /// Request a connectome snapshot of the engine (taken at the pump's
+    /// next sample-group boundary; see `coordinator::connectome`).
+    Snapshot { session: u32, request: u64 },
+    /// A snapshot's encoded connectome, answering a `Snapshot` request.
+    SnapshotData { session: u32, request: u64, bytes: Vec<u8> },
+    /// Offer a connectome for live blue/green migration: its registers +
+    /// weights are applied to the serving engine as one config epoch.
+    Restore { session: u32, request: u64, bytes: Vec<u8> },
+    /// Migration applied; `epoch` is the config epoch it was assigned.
+    RestoreAck { session: u32, request: u64, epoch: u64 },
 }
 
 /// Typed decode/transport failure. Every malformed input maps here — the
@@ -257,6 +277,10 @@ impl Frame {
             Frame::Result { .. } => "Result",
             Frame::ReconfigAck { .. } => "ReconfigAck",
             Frame::Error { .. } => "Error",
+            Frame::Snapshot { .. } => "Snapshot",
+            Frame::SnapshotData { .. } => "SnapshotData",
+            Frame::Restore { .. } => "Restore",
+            Frame::RestoreAck { .. } => "RestoreAck",
         }
     }
 
@@ -271,6 +295,10 @@ impl Frame {
             Frame::Result { .. } => 7,
             Frame::ReconfigAck { .. } => 8,
             Frame::Error { .. } => 9,
+            Frame::Snapshot { .. } => 10,
+            Frame::SnapshotData { .. } => 11,
+            Frame::Restore { .. } => 12,
+            Frame::RestoreAck { .. } => 13,
         }
     }
 
@@ -363,6 +391,25 @@ impl Frame {
                 out.extend_from_slice(&reference.to_le_bytes());
                 out.extend_from_slice(&(msg.len() as u16).to_le_bytes());
                 out.extend_from_slice(msg);
+            }
+            Frame::Snapshot { session, request } => {
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&request.to_le_bytes());
+            }
+            Frame::SnapshotData { session, request, bytes }
+            | Frame::Restore { session, request, bytes } => {
+                if bytes.len() > u32::MAX as usize {
+                    return Err(WireError::BadValue("connectome payload arity"));
+                }
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&request.to_le_bytes());
+                out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                out.extend_from_slice(bytes);
+            }
+            Frame::RestoreAck { session, request, epoch } => {
+                out.extend_from_slice(&session.to_le_bytes());
+                out.extend_from_slice(&request.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
             }
         }
         Ok(out)
@@ -472,6 +519,28 @@ impl Frame {
                     .to_string();
                 Frame::Error { code, session, reference, message }
             }
+            10 => Frame::Snapshot {
+                session: c.u32("snapshot session")?,
+                request: c.u64("snapshot request id")?,
+            },
+            11 | 12 => {
+                let session = c.u32("connectome session")?;
+                let request = c.u64("connectome request id")?;
+                let n = c.u32("connectome byte_len")? as usize;
+                // Validate against the bytes actually present before any
+                // allocation is sized from the declared length.
+                let bytes = c.take(n, "connectome payload")?.to_vec();
+                if t == 11 {
+                    Frame::SnapshotData { session, request, bytes }
+                } else {
+                    Frame::Restore { session, request, bytes }
+                }
+            }
+            13 => Frame::RestoreAck {
+                session: c.u32("restore ack session")?,
+                request: c.u64("restore ack request id")?,
+                epoch: c.u64("restore ack epoch")?,
+            },
             other => return Err(WireError::BadType(other)),
         };
         if c.remaining() != 0 {
@@ -515,9 +584,26 @@ pub fn submit_from_sample(session: u32, sample_id: u64, s: &Sample) -> Frame {
 
 /// Reassemble the [`Sample`] carried by a `SubmitSample` frame (label 0 —
 /// the wire carries stimuli, not supervision).
-pub fn sample_from_submit(t_steps: u32, inputs: u32, spikes: &[u8]) -> Sample {
-    let n = t_steps as usize * inputs as usize;
-    Sample { spikes: unpack_bits(spikes, n), t_steps: t_steps as usize, inputs: inputs as usize, label: 0 }
+///
+/// The `t_steps × inputs` bit count comes from attacker-controlled header
+/// fields: it is computed with `checked_mul`, capped at the bits one
+/// maximum-size frame could actually carry, and checked against the
+/// payload arity — a hostile header is a typed [`WireError`], never an
+/// overflow or an unbounded `unpack_bits` allocation.
+pub fn sample_from_submit(t_steps: u32, inputs: u32, spikes: &[u8]) -> Result<Sample, WireError> {
+    let n = (t_steps as usize)
+        .checked_mul(inputs as usize)
+        .filter(|&n| n <= DEFAULT_MAX_FRAME_LEN as usize * 8)
+        .ok_or(WireError::BadValue("sample bit count overflows the frame cap"))?;
+    if spikes.len() as u64 != packed_len(n as u64) {
+        return Err(WireError::BadValue("spike payload arity"));
+    }
+    Ok(Sample {
+        spikes: unpack_bits(spikes, n),
+        t_steps: t_steps as usize,
+        inputs: inputs as usize,
+        label: 0,
+    })
 }
 
 /// Convert a wire `Reconfig` frame into a control-plane program (the
@@ -667,6 +753,10 @@ mod tests {
                 reference: 43,
                 message: "session quota full".into(),
             },
+            Frame::Snapshot { session: 7, request: 11 },
+            Frame::SnapshotData { session: 7, request: 11, bytes: vec![0xAB; 9] },
+            Frame::Restore { session: 7, request: 12, bytes: vec![1, 2, 3, 4] },
+            Frame::RestoreAck { session: 7, request: 12, epoch: 2 },
         ];
         let mut buf = Vec::new();
         for f in &frames {
@@ -708,6 +798,17 @@ mod tests {
             spikes: vec![0; 3], // needs 8
         };
         assert!(matches!(bad.encode(), Err(WireError::BadValue(_))));
+        // Hostile header: t_steps * inputs overflows the frame budget — typed
+        // error, no panic, no attacker-sized allocation.
+        assert!(matches!(
+            sample_from_submit(u32::MAX, u32::MAX, &[]),
+            Err(WireError::BadValue(_))
+        ));
+        // Plausible header whose product exceeds the frame budget.
+        assert!(matches!(
+            sample_from_submit(1 << 20, 1 << 20, &[]),
+            Err(WireError::BadValue(_))
+        ));
     }
 
     #[test]

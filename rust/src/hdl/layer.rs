@@ -197,6 +197,46 @@ impl Layer {
         (0..self.mem.n()).map(|j| self.lane_vmem[j * self.lanes + lane]).collect()
     }
 
+    /// Borrow the refractory countdowns of the struct-of-arrays neuron
+    /// bank — the snapshot twin of [`Layer::vmem_slice`].
+    pub fn refcnt_slice(&self) -> &[i32] {
+        &self.refcnt
+    }
+
+    /// Overwrite the single-sample neuron bank from a connectome section.
+    /// Arity is the caller's contract: the snapshot decoder validates both
+    /// banks against the layer width before anything reaches a stage.
+    pub fn restore_state(&mut self, vmem: &[i32], refcnt: &[i32]) {
+        assert_eq!(vmem.len(), self.vmem.len(), "vmem bank arity validated by decoder");
+        assert_eq!(refcnt.len(), self.refcnt.len(), "refcnt bank arity validated by decoder");
+        self.vmem.copy_from_slice(vmem);
+        self.refcnt.copy_from_slice(refcnt);
+    }
+
+    /// Export the lane-batched bank for a snapshot:
+    /// `(width, lane-major vmem, lane-major refcnt)`. Width 0 means the
+    /// lane datapath never ran on this layer.
+    pub fn lane_state(&self) -> (usize, Vec<i32>, Vec<i32>) {
+        (self.lanes, self.lane_vmem.clone(), self.lane_refcnt.clone())
+    }
+
+    /// Restore the lane-batched bank from a connectome section. The
+    /// activity scratch is not architectural state — it is resized and
+    /// zeroed, exactly as a fresh lane-bank sizing would leave it.
+    pub fn restore_lanes(&mut self, lanes: usize, lane_vmem: &[i32], lane_refcnt: &[i32]) {
+        let n = self.mem.n();
+        assert_eq!(lane_vmem.len(), n * lanes, "lane vmem arity validated by decoder");
+        assert_eq!(lane_refcnt.len(), n * lanes, "lane refcnt arity validated by decoder");
+        self.lanes = lanes;
+        self.lane_vmem.clear();
+        self.lane_vmem.extend_from_slice(lane_vmem);
+        self.lane_refcnt.clear();
+        self.lane_refcnt.extend_from_slice(lane_refcnt);
+        self.lane_act.clear();
+        self.lane_act.resize(n * lanes, 0);
+        self.lane_act_dirty = false;
+    }
+
     /// Size the lane-batched bank for `lanes` concurrent samples. Changing
     /// the width resets all lane state (a new batch geometry cannot
     /// continue old streams).

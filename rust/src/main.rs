@@ -9,6 +9,9 @@
 //! repro all                   every table & figure, in paper order
 //! repro serve [opts]          batched inference over the ServingEngine
 //! repro loadgen [opts]        open-loop load generator for the front door
+//! repro snapshot [opts]       run k samples, freeze the engine to a connectome file
+//! repro restore [opts]        revive a connectome and diff it against an
+//!                             uninterrupted run (nonzero exit on divergence)
 //! repro explore <arch> [Q]    DSE estimate for an architecture on all boards
 //! repro codegen <arch>        emit Verilog HDL + self-checking testbench
 //! repro bench-check <json>..  validate BENCH_*.json perf reports
@@ -31,6 +34,7 @@ use anyhow::{Context, Result};
 use std::time::Instant;
 
 use quantisenc::coordinator::client::{self, LoadgenOptions};
+use quantisenc::coordinator::connectome::Connectome;
 use quantisenc::coordinator::metrics::Telemetry;
 use quantisenc::coordinator::pipeline;
 use quantisenc::coordinator::server::{ServerOptions, SpikeServer};
@@ -103,6 +107,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         "serve" => serve(&args[1..]),
         "loadgen" => loadgen(&args[1..]),
+        "snapshot" => snapshot_cmd(&args[1..]),
+        "restore" => restore_cmd(&args[1..]),
         "explore" => {
             let arch = args.get(1).context("usage: repro explore <arch> [Qn.q]")?;
             let q = QSpec::parse(args.get(2).map(String::as_str).unwrap_or("Q5.3"))?;
@@ -344,6 +350,11 @@ const HELP: &str = "repro — QUANTISENC reproduction CLI
   loadgen         open-loop load generator for the front door (--addr, or
                   hermetic with an oracle-verified in-process server);
                   writes BENCH_serving_slo.json for bench-check
+  snapshot        run --n samples on a fresh engine, then freeze its complete
+                  state to --out <FILE> (versioned connectome, per-section CRCs)
+  restore         revive --in <FILE> into a fresh engine, run it to --total
+                  samples, and diff against an uninterrupted run — bit-exact
+                  or nonzero exit (the snapshot-smoke gate)
   explore <arch>  DSE estimate, e.g. repro explore 256x512x10 Q5.3
   codegen <arch>  emit Verilog HDL + self-checking SV testbench (paper §IV)
   bench-check <f> validate BENCH_*.json perf reports (the bench-smoke gate)
@@ -600,6 +611,111 @@ fn loadgen(args: &[String]) -> Result<()> {
         report.result_mismatches == 0,
         "{} network results diverged from the sequential oracle",
         report.result_mismatches
+    );
+    Ok(())
+}
+
+/// `repro snapshot` — run `--n` samples through a fresh [`ServingEngine`]
+/// and write its complete software-defined state (weights, registers,
+/// neuron banks, epoch, bus/activity ledgers) to `--out` as a versioned
+/// connectome image.
+fn snapshot_cmd(args: &[String]) -> Result<()> {
+    let out = flag_val(args, "--out").unwrap_or("connectome.qcnx");
+    let ds_name = flag_val(args, "--dataset").unwrap_or("smnist");
+    let qname = flag_val(args, "--q").unwrap_or("Q5.3");
+    let k: u64 = flag_val(args, "--n").unwrap_or("8").parse()?;
+    let cores: usize = flag_val(args, "--cores").unwrap_or("2").parse()?;
+    let lanes: usize = flag_val(args, "--lanes").unwrap_or("1").parse()?;
+    let dataset = Dataset::parse(ds_name).context("bad --dataset")?;
+    let m = manifest()?;
+    let art = m.model(ds_name, qname)?;
+    let (_config, mut engine) =
+        experiments::engine_from_artifact(&art, ServingOptions::with_lanes(cores, lanes))?;
+    let samples: Vec<_> = (0..k).map(|i| dataset.sample(i, Split::Test, art.t_steps)).collect();
+    let t0 = Instant::now();
+    engine.run_batch(&samples)?;
+    let c = engine.snapshot()?;
+    let bytes = c.encode();
+    std::fs::write(out, &bytes).with_context(|| format!("writing {out}"))?;
+    println!(
+        "snapshot: {ds_name} {qname} frozen after {k} samples -> {out} \
+         ({} bytes, {} cores x {} layers, lane width {}, epoch {}, {:.2?})",
+        bytes.len(),
+        c.cores,
+        c.layers.first().map_or(0, Vec::len),
+        c.lane_width,
+        c.epoch,
+        t0.elapsed(),
+    );
+    Ok(())
+}
+
+/// `repro restore` — revive a connectome written by `repro snapshot` into
+/// a fresh engine, run it forward to `--total` samples, and diff every
+/// result (and the final machine state) against an engine that ran the
+/// whole prefix uninterrupted. Any divergence is a nonzero exit; this is
+/// the `make snapshot-smoke` gate.
+fn restore_cmd(args: &[String]) -> Result<()> {
+    let path = flag_val(args, "--in").context("usage: repro restore --in <FILE> [--total N]")?;
+    let ds_name = flag_val(args, "--dataset").unwrap_or("smnist");
+    let qname = flag_val(args, "--q").unwrap_or("Q5.3");
+    let total: u64 = flag_val(args, "--total").unwrap_or("16").parse()?;
+    let dataset = Dataset::parse(ds_name).context("bad --dataset")?;
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    let c = Connectome::decode(&bytes)?;
+    let k = c.completed;
+    anyhow::ensure!(
+        total >= k,
+        "--total {total} is before the snapshot point ({k} samples already completed)"
+    );
+    let mut revived = ServingEngine::from_connectome(&c)?;
+
+    // The uninterrupted control: the same artifact, same shard/lane
+    // geometry, replaying the full prefix in one life.
+    let m = manifest()?;
+    let art = m.model(ds_name, qname)?;
+    let (_config, mut fresh) = experiments::engine_from_artifact(
+        &art,
+        ServingOptions::with_lanes(c.cores as usize, c.lane_width as usize),
+    )?;
+    let samples: Vec<_> =
+        (0..total).map(|i| dataset.sample(i, Split::Test, art.t_steps)).collect();
+    fresh.run_batch(&samples[..k as usize])?;
+
+    let revived_tail = revived.run_batch(&samples[k as usize..])?;
+    let fresh_tail = fresh.run_batch(&samples[k as usize..])?;
+    anyhow::ensure!(
+        revived_tail.len() == fresh_tail.len(),
+        "result count diverged after restore"
+    );
+    for (i, (r, f)) in revived_tail.iter().zip(&fresh_tail).enumerate() {
+        anyhow::ensure!(
+            r.prediction == f.prediction
+                && r.counts == f.counts
+                && r.spikes_total == f.spikes_total
+                && r.epoch == f.epoch,
+            "restored engine diverged from the uninterrupted run at sample {} \
+             (prediction {} vs {}, epoch {} vs {})",
+            k as usize + i,
+            r.prediction,
+            f.prediction,
+            r.epoch,
+            f.epoch,
+        );
+    }
+    // Stronger than result equality: the full machine state must re-freeze
+    // to byte-identical images.
+    let revived_image = revived.snapshot()?.encode();
+    let fresh_image = fresh.snapshot()?.encode();
+    anyhow::ensure!(
+        revived_image == fresh_image,
+        "post-run connectomes differ: restore is not bit-exact"
+    );
+    println!(
+        "restore: OK — {} samples past the snapshot point ({k}..{total}) match the \
+         uninterrupted run bit-exactly; final state images identical ({} bytes)",
+        revived_tail.len(),
+        revived_image.len(),
     );
     Ok(())
 }

@@ -1,0 +1,235 @@
+//! The snapshot differential gate (the PR's headline acceptance): run k
+//! samples, freeze the engine to a connectome image, revive it into a
+//! fresh engine, and run the remainder — the interrupted run must be
+//! bit-identical to an uninterrupted one, across three topologies, both
+//! lane widths, and an in-band reconfiguration that straddles the
+//! snapshot point. Plus the corruption suite: no mutilated image —
+//! truncated, bit-flipped, wrong magic or version — may panic the
+//! decoder or restore into an engine.
+
+use quantisenc::config::registers::{RegisterFile, REG_VTH};
+use quantisenc::config::{ModelConfig, Topology};
+use quantisenc::coordinator::connectome::{Connectome, SnapshotError};
+use quantisenc::coordinator::control::ReconfigProgram;
+use quantisenc::coordinator::serving::{ServingEngine, ServingOptions, SessionOp};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::Sample;
+use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::ActivityStats;
+
+/// A 32→32→10 model whose first layer uses the given topology, with
+/// seeded random weights sized to the dense fan-in (the topology store
+/// masks them down internally).
+fn model_for(topo: Topology) -> (ModelConfig, Vec<Vec<i32>>, RegisterFile) {
+    let sizes = [32usize, 32, 10];
+    let cfg = ModelConfig::with_topologies(&sizes, &[topo, Topology::AllToAll], Q5_3).unwrap();
+    let mut rng = XorShift64Star::new(0xC0_FFEE ^ topo_tag(topo));
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(15) as i32 - 7).collect())
+        .collect();
+    (cfg, weights, RegisterFile::new(Q5_3))
+}
+
+fn topo_tag(t: Topology) -> u64 {
+    match t {
+        Topology::AllToAll => 1,
+        Topology::OneToOne => 2,
+        Topology::Gaussian { radius } => 0x100 + radius as u64,
+    }
+}
+
+/// Deterministic random spike trains shaped for the 32-input model.
+fn spike_samples(n: usize) -> Vec<Sample> {
+    let mut rng = XorShift64Star::new(0x5A_17E5);
+    (0..n)
+        .map(|_| {
+            let t_steps = 6;
+            let inputs = 32;
+            let spikes = (0..t_steps * inputs).map(|_| (rng.uniform() < 0.25) as u8).collect();
+            Sample { spikes, t_steps, inputs, label: 0 }
+        })
+        .collect()
+}
+
+fn assert_results_equal(a: &[quantisenc::coordinator::pipeline::StreamResult],
+                        b: &[quantisenc::coordinator::pipeline::StreamResult],
+                        ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: result count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.stream_id, y.stream_id, "{ctx}");
+        assert_eq!(x.counts, y.counts, "{ctx}: stream {}", x.stream_id);
+        assert_eq!(x.prediction, y.prediction, "{ctx}: stream {}", x.stream_id);
+        assert_eq!(x.spikes_total, y.spikes_total, "{ctx}: stream {}", x.stream_id);
+        assert_eq!(x.epoch, y.epoch, "{ctx}: stream {}", x.stream_id);
+        let (xs, ys): (ActivityStats, ActivityStats) = (x.stats, y.stats);
+        assert_eq!(xs, ys, "{ctx}: stream {}", x.stream_id);
+    }
+}
+
+/// The gate proper: snapshot after 4 samples, restore, then run 4 more
+/// with an in-band reconfig in the second half — so the epoch bump the
+/// snapshot must survive happens *after* the restore point.
+#[test]
+fn interrupted_run_is_bit_identical_to_uninterrupted() {
+    let topologies =
+        [Topology::AllToAll, Topology::OneToOne, Topology::Gaussian { radius: 2 }];
+    let samples = spike_samples(8);
+    for topo in topologies {
+        for lanes in [1usize, 64] {
+            let ctx = format!("{topo:?} lanes={lanes}");
+            let (cfg, weights, regs) = model_for(topo);
+            let options = ServingOptions::with_lanes(2, lanes);
+            let mut uninterrupted =
+                ServingEngine::new(&cfg, &weights, &regs, options).unwrap();
+            let mut donor = ServingEngine::new(&cfg, &weights, &regs, options).unwrap();
+
+            let first: Vec<SessionOp> = samples[..4].iter().map(SessionOp::Submit).collect();
+            let second: Vec<SessionOp> = samples[4..6]
+                .iter()
+                .map(SessionOp::Submit)
+                .chain(std::iter::once(SessionOp::Reconfig(
+                    ReconfigProgram::new().write(REG_VTH, regs.vth() + 8),
+                )))
+                .chain(samples[6..].iter().map(SessionOp::Submit))
+                .collect();
+
+            let u_first = uninterrupted.run_session(&first).unwrap();
+            let d_first = donor.run_session(&first).unwrap();
+            assert_results_equal(&u_first, &d_first, &ctx);
+
+            // Freeze the donor, push the image through the codec, revive.
+            let snap = donor.snapshot().unwrap_or_else(|e| panic!("{ctx}: snapshot: {e}"));
+            assert_eq!((snap.submitted, snap.completed), (4, 4), "{ctx}: quiesced");
+            let bytes = snap.encode();
+            let decoded = Connectome::decode(&bytes).unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            assert_eq!(decoded, snap, "{ctx}: codec round-trip");
+            let mut revived = ServingEngine::from_connectome(&decoded)
+                .unwrap_or_else(|e| panic!("{ctx}: restore: {e}"));
+
+            // The remainder — including the straddling reconfig — must be
+            // bit-identical between the revived and uninterrupted engines.
+            let u_second = uninterrupted.run_session(&second).unwrap();
+            let r_second = revived.run_session(&second).unwrap();
+            assert_results_equal(&u_second, &r_second, &ctx);
+
+            // Stronger than result equality: both machines re-freeze to
+            // byte-identical images.
+            let u_image = uninterrupted.snapshot().unwrap().encode();
+            let r_image = revived.snapshot().unwrap().encode();
+            assert_eq!(u_image, r_image, "{ctx}: final state images differ");
+        }
+    }
+}
+
+/// A small engine keeps the image compact enough to sweep every
+/// truncation length and a dense grid of bit flips in test time.
+fn small_image() -> Vec<u8> {
+    let sizes = [8usize, 6, 4];
+    let cfg = ModelConfig::with_topologies(
+        &sizes,
+        &[Topology::AllToAll, Topology::Gaussian { radius: 1 }],
+        Q5_3,
+    )
+    .unwrap();
+    let mut rng = XorShift64Star::new(0xDEC0DE);
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(15) as i32 - 7).collect())
+        .collect();
+    let regs = RegisterFile::new(Q5_3);
+    let mut engine =
+        ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_lanes(2, 1)).unwrap();
+    let samples: Vec<Sample> = (0..3)
+        .map(|_| {
+            let spikes = (0..6 * 8).map(|_| (rng.uniform() < 0.3) as u8).collect();
+            Sample { spikes, t_steps: 6, inputs: 8, label: 0 }
+        })
+        .collect();
+    engine.run_batch(&samples).unwrap();
+    engine.snapshot().unwrap().encode()
+}
+
+#[test]
+fn every_truncation_is_a_typed_error_never_a_panic() {
+    let bytes = small_image();
+    assert!(Connectome::decode(&bytes).is_ok(), "the intact image decodes");
+    for cut in 0..bytes.len() {
+        match Connectome::decode(&bytes[..cut]) {
+            Ok(c) => panic!("truncated image decoded at cut {cut}/{}: {c:?}", bytes.len()),
+            Err(_) => {} // any typed error is fine; a panic would abort the test
+        }
+    }
+}
+
+#[test]
+fn bit_flips_never_panic_and_never_silently_corrupt() {
+    let bytes = small_image();
+    let baseline = Connectome::decode(&bytes).unwrap();
+    let mut rng = XorShift64Star::new(0xF11B);
+    // Every byte of the header region plus a dense random sample of the
+    // payload: a flip must surface as a typed error (CRC, magic, version,
+    // structure) — or, where it lands in redundant freedom the format
+    // does not have, decode to something that still re-encodes
+    // byte-identically to the mutated image. Never a panic, and never a
+    // silent pass-through of different state under an intact-looking API.
+    let positions: Vec<usize> = (0..bytes.len().min(64))
+        .chain((0..400).map(|_| rng.below(bytes.len() as u64) as usize))
+        .collect();
+    for pos in positions {
+        for bit in 0..8 {
+            let mut mutated = bytes.clone();
+            mutated[pos] ^= 1 << bit;
+            match Connectome::decode(&mutated) {
+                Err(_) => {}
+                Ok(c) => {
+                    assert_eq!(
+                        c.encode(),
+                        mutated,
+                        "byte {pos} bit {bit}: decode accepted a mutation it cannot re-encode"
+                    );
+                    assert_ne!(
+                        c, baseline,
+                        "byte {pos} bit {bit}: mutation decoded back to the baseline image"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn wrong_magic_and_version_are_typed_errors() {
+    let bytes = small_image();
+    let mut bad_magic = bytes.clone();
+    bad_magic[0] ^= 0xFF;
+    assert!(matches!(Connectome::decode(&bad_magic), Err(SnapshotError::BadMagic(_))));
+    let mut bad_version = bytes.clone();
+    bad_version[4] ^= 0xFF;
+    assert!(matches!(Connectome::decode(&bad_version), Err(SnapshotError::BadVersion(_))));
+    assert!(matches!(Connectome::decode(&[]), Err(SnapshotError::Truncated { .. })));
+    assert!(matches!(Connectome::decode(&[0; 3]), Err(SnapshotError::Truncated { .. })));
+}
+
+#[test]
+fn geometry_mismatched_restore_is_a_typed_error() {
+    // An image from the 8x6x4 engine must not revive after its geometry
+    // header is edited to claim a different shard count — the layer
+    // section arity check catches it as a typed error.
+    let bytes = small_image();
+    let c = Connectome::decode(&bytes).unwrap();
+    let mut wrong = c.clone();
+    wrong.cores = 3; // image still carries 2 shards' worth of layer sections
+    assert!(
+        ServingEngine::from_connectome(&wrong).is_err(),
+        "shard arity mismatch must be a typed error"
+    );
+    let mut wrong = c.clone();
+    wrong.sizes = vec![8, 7, 4]; // weights no longer fit the claimed model
+    assert!(
+        ServingEngine::from_connectome(&wrong).is_err(),
+        "payload-size mismatch must be a typed error"
+    );
+}

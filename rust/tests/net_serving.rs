@@ -11,6 +11,7 @@ use std::time::Duration;
 use quantisenc::config::registers::{RegisterFile, REG_VTH};
 use quantisenc::config::ModelConfig;
 use quantisenc::coordinator::client::{self, LoadgenOptions, WireClient};
+use quantisenc::coordinator::connectome::Connectome;
 use quantisenc::coordinator::control::ReconfigProgram;
 use quantisenc::coordinator::server::{ServerOptions, SpikeServer};
 use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
@@ -242,6 +243,98 @@ fn garbage_bytes_kill_only_the_offending_connection() {
     client.submit(session, 0, &good).unwrap();
     assert!(matches!(client.recv().unwrap(), Frame::Result { .. }));
     assert_eq!(server.stats().protocol_errors, 1);
+}
+
+#[test]
+fn stalled_connection_times_out_with_a_typed_error() {
+    // Slow-loris defence: a client that completes the handshake and then
+    // goes silent must be cut loose with a typed IdleTimeout error — it
+    // may not pin a connection slot forever.
+    let server = spawn_server(
+        1,
+        1,
+        ServerOptions { idle_timeout: Duration::from_millis(300), ..Default::default() },
+    );
+    let addr = server.local_addr().to_string();
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    wire::write_frame(&mut raw, &Frame::Hello { version: wire::VERSION }).unwrap();
+    match wire::read_frame(&mut raw, DEFAULT_MAX_FRAME_LEN).unwrap() {
+        Some(Frame::HelloAck { .. }) => {}
+        other => panic!("expected HelloAck, got {other:?}"),
+    }
+    // Say nothing more. The server announces the timeout, then closes.
+    match wire::read_frame(&mut raw, DEFAULT_MAX_FRAME_LEN).unwrap() {
+        Some(Frame::Error { code: ErrorCode::IdleTimeout, .. }) => {}
+        other => panic!("expected IdleTimeout error, got {other:?}"),
+    }
+    assert!(
+        wire::read_frame(&mut raw, DEFAULT_MAX_FRAME_LEN).unwrap().is_none(),
+        "server closes the idle connection"
+    );
+    // The stall burned nothing shared: a live client on the same server
+    // opens a session and serves normally.
+    let mut client = WireClient::connect(&addr).unwrap();
+    let (session, _) = client.open_session(0).unwrap();
+    let good = Dataset::Smnist.sample(0, Split::Test, 6);
+    client.submit(session, 0, &good).unwrap();
+    assert!(matches!(client.recv().unwrap(), Frame::Result { .. }));
+    let stats = server.stats();
+    assert_eq!(stats.idle_timeouts, 1);
+    assert_eq!(stats.protocol_errors, 0, "an idle stall is not a protocol error");
+}
+
+#[test]
+fn snapshot_restore_round_trips_over_the_wire() {
+    let server = spawn_server(2, 4, ServerOptions::default());
+    let addr = server.local_addr().to_string();
+    let mut client = WireClient::connect(&addr).unwrap();
+    let (session, _) = client.open_session(0).unwrap();
+    let samples: Vec<Sample> =
+        (0..4).map(|i| Dataset::Smnist.sample(i, Split::Test, 6)).collect();
+    for (i, s) in samples.iter().enumerate() {
+        client.submit(session, i as u64, s).unwrap();
+        assert!(matches!(client.recv().unwrap(), Frame::Result { .. }));
+    }
+
+    // Snapshot over the wire: a versioned connectome image of the live
+    // engine, taken at a quiesced sample-group boundary.
+    let bytes = client.snapshot(session, 7).unwrap();
+    let c = Connectome::decode(&bytes).expect("wire snapshot decodes");
+    assert_eq!(c.cores, 2);
+    assert_eq!((c.submitted, c.completed), (4, 4));
+
+    // A corrupted image is a typed per-request reject, not a dead server.
+    let mut bad = bytes.clone();
+    let n = bad.len();
+    bad[n - 3] ^= 0x40;
+    assert!(client.restore(session, 8, bad).is_err(), "CRC flip must be rejected");
+
+    // Restoring the intact image is blue/green migration: exactly one
+    // config epoch, no stream drained, no rebuild.
+    let epoch = client.restore(session, 9, bytes).unwrap();
+    assert_eq!(epoch, 1);
+    // The migrated weights/registers are the ones already live, so results
+    // are unchanged — just tagged with the new epoch.
+    let mut core = {
+        let (cfg, weights, regs) = fixture();
+        let mut core = Core::new(cfg);
+        core.load_weights(&weights).unwrap();
+        core.registers = regs;
+        core
+    };
+    client.submit(session, 100, &samples[0]).unwrap();
+    match client.recv().unwrap() {
+        Frame::Result { sample: 100, epoch, counts, .. } => {
+            assert_eq!(epoch, 1);
+            assert_eq!(counts, core.run(&samples[0]).counts, "migration preserved weights");
+        }
+        other => panic!("expected Result, got {other:?}"),
+    }
+    let stats = server.stats();
+    assert_eq!(stats.reconfigs_applied, 1, "restore = one applied program");
+    assert_eq!(stats.samples_served, 5);
+    assert_eq!(stats.rejects_bad, 1, "the corrupted image was the only reject");
 }
 
 #[test]

@@ -11,7 +11,7 @@ use quantisenc::datasets::{Dataset, Split};
 
 /// Draw one random-but-valid frame of every variant class.
 fn random_frame(rng: &mut XorShift64Star) -> Frame {
-    match rng.below(9) {
+    match rng.below(13) {
         0 => Frame::Hello { version: VERSION },
         1 => Frame::HelloAck {
             version: rng.next_u64() as u16,
@@ -65,8 +65,22 @@ fn random_frame(rng: &mut XorShift64Star) -> Frame {
             request: rng.next_u64(),
             epoch: rng.below(1 << 20),
         },
+        8 => Frame::Snapshot { session: rng.next_u64() as u32, request: rng.next_u64() },
+        9 => {
+            let bytes: Vec<u8> = (0..rng.below(200)).map(|_| rng.next_u64() as u8).collect();
+            Frame::SnapshotData { session: rng.next_u64() as u32, request: rng.next_u64(), bytes }
+        }
+        10 => {
+            let bytes: Vec<u8> = (0..rng.below(200)).map(|_| rng.next_u64() as u8).collect();
+            Frame::Restore { session: rng.next_u64() as u32, request: rng.next_u64(), bytes }
+        }
+        11 => Frame::RestoreAck {
+            session: rng.next_u64() as u32,
+            request: rng.next_u64(),
+            epoch: rng.below(1 << 20),
+        },
         _ => {
-            let code = ErrorCode::from_u16(1 + rng.below(6) as u16).unwrap();
+            let code = ErrorCode::from_u16(1 + rng.below(7) as u16).unwrap();
             let msg: String =
                 (0..rng.below(40)).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
             Frame::Error {
@@ -205,6 +219,27 @@ fn submit_sample_payload_arity_is_enforced() {
 }
 
 #[test]
+fn hostile_submit_headers_are_typed_errors_not_panics() {
+    // The classic multiply-overflow header: t_steps × inputs would wrap (or
+    // demand an attacker-sized allocation). Must be a typed error.
+    assert!(matches!(
+        wire::sample_from_submit(u32::MAX, u32::MAX, &[]),
+        Err(WireError::BadValue(_))
+    ));
+    // Fuzz the header space: no (t_steps, inputs, payload) triple panics,
+    // and whenever the conversion succeeds the arity invariant holds.
+    let mut rng = XorShift64Star::new(0x0EADBEEF);
+    for _ in 0..5000 {
+        let t_steps = rng.next_u64() as u32;
+        let inputs = rng.next_u64() as u32;
+        let payload: Vec<u8> = (0..rng.below(64)).map(|_| rng.next_u64() as u8).collect();
+        if let Ok(s) = wire::sample_from_submit(t_steps, inputs, &payload) {
+            assert_eq!(s.spikes.len(), t_steps as usize * inputs as usize);
+        }
+    }
+}
+
+#[test]
 fn frame_stream_roundtrips_over_a_buffer() {
     let mut rng = XorShift64Star::new(0x57_12EA);
     let frames: Vec<Frame> = (0..64).map(|_| random_frame(&mut rng)).collect();
@@ -228,7 +263,8 @@ fn sample_conversion_roundtrips_real_datasets() {
         let Frame::SubmitSample { t_steps, inputs, ref spikes, .. } = frame else {
             panic!("submit_from_sample must build SubmitSample");
         };
-        let back = wire::sample_from_submit(t_steps, inputs, spikes);
+        let back = wire::sample_from_submit(t_steps, inputs, spikes)
+            .expect("well-formed submit headers convert");
         assert_eq!(back.spikes, s.spikes, "bit-packing must be lossless for {ds:?}");
         assert_eq!(back.t_steps, s.t_steps);
         assert_eq!(back.inputs, s.inputs);
