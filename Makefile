@@ -47,9 +47,11 @@ bench-serving:
 
 # bench-smoke runs everything above, then validates the reports (required
 # keys present, >=5x topology ops reduction, >=3x packed layer-step
-# speedup at N=400 / 2% firing, positive engine throughput, >=2x lane-64
-# serving samples/s with zero matrix-pool misses, and a clean oracle-
-# verified front-door SLO report).
+# speedup at N=400 / 2% firing, positive engine throughput, >=1.5x
+# SIMD-vs-scalar lane-step speedup where a vector kernel is available,
+# >=2x lane-64 serving samples/s with zero matrix-pool misses, and a
+# clean oracle-verified front-door SLO report). A report file that was
+# never generated is skipped with a warning, not an error.
 bench-smoke: bench-hotpath bench-serving
 	cargo run --release --bin repro -- bench-check \
 		BENCH_topology.json BENCH_hotpath.json BENCH_batched.json \

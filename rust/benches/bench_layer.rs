@@ -25,6 +25,7 @@ use quantisenc::config::registers::RegisterFile;
 use quantisenc::config::{LayerConfig, MemKind, Topology};
 use quantisenc::datasets::rng::XorShift64Star;
 use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::neuron::LaneKernel;
 use quantisenc::hdl::{ActivityStats, Layer, SpikeMatrix, SpikePlane};
 use quantisenc::util::bench::quick;
 use quantisenc::util::json::Json;
@@ -241,6 +242,106 @@ fn bench_lane_case(name: &str, n: usize, topo: Topology, firing: f64) -> (String
     (name.to_string(), speedup)
 }
 
+struct SimdResult {
+    name: String,
+    kernel: &'static str,
+    scalar_ns: f64,
+    simd_ns: f64,
+    speedup: f64,
+}
+
+/// Pinned-kernel lane-step twins: the same 64-lane bank stepped with
+/// `LaneKernel::Scalar` vs the widest vector tier `LaneKernel::auto`
+/// resolves on this host (AVX2 → SSE2 → scalar). Both twins are first
+/// proven bit-identical over 120 steps of evolving membrane state (spike
+/// matrices, per-lane vmem, ledgers), then timed on `step_lanes` alone.
+///
+/// The acceptance case is one-to-one at 35% firing: ActGen retires ~one
+/// accumulate per firing (line, lane) pair, so the per-call cost is
+/// dominated by the N×64 neuron sweep the vector tiers batch 4–8 lanes
+/// per instruction. The all-to-all case is reported alongside — there the
+/// shared ActGen scatter dominates the call and dilutes the sweep win. On
+/// hosts where `auto` falls back to scalar the twins are the same kernel
+/// and the reported speedup is ~1.0x; `bench-check` reads the `kernel`
+/// field and skips the SIMD gate in that case.
+fn bench_simd_case(name: &str, n: usize, topo: Topology, firing: f64) -> SimdResult {
+    const LANES: usize = 64;
+    let cfg = LayerConfig { fan_in: n, neurons: n, topology: topo };
+    let mut rng = XorShift64Star::new(0x51D_u64 ^ (n as u64) << 9);
+    let mask = topo.mask(n, n).unwrap();
+    let weights: Vec<i32> = mask
+        .iter()
+        .map(|&a| if a == 0 { 0 } else { rng.below(255) as i32 - 127 })
+        .collect();
+    let regs = RegisterFile::new(Q5_3);
+    let mut matrix = SpikeMatrix::new(n, LANES);
+    for l in 0..LANES {
+        let stream: Vec<u8> = (0..n).map(|_| (rng.uniform() < firing) as u8).collect();
+        matrix.load_lane_bytes(l, &stream);
+    }
+
+    let mut scalar = Layer::new(&cfg, Q5_3, MemKind::Bram);
+    scalar.memory_mut().load_dense(&weights).unwrap();
+    let mut vector = scalar.clone();
+    scalar.set_lane_kernel(Some(LaneKernel::Scalar));
+    let kernel = LaneKernel::auto(Q5_3);
+    vector.set_lane_kernel(Some(kernel));
+
+    // Bit-exactness pre-gate: pinned twins must stay identical while the
+    // lane banks evolve under the benchmarked stream.
+    let mut out_s = SpikeMatrix::default();
+    let mut out_v = SpikeMatrix::default();
+    let mut stats_s = vec![ActivityStats::default(); LANES];
+    let mut stats_v = vec![ActivityStats::default(); LANES];
+    for t in 0..120 {
+        scalar.step_lanes(&matrix, &mut out_s, &regs, u64::MAX, &mut stats_s);
+        vector.step_lanes(&matrix, &mut out_v, &regs, u64::MAX, &mut stats_v);
+        assert_eq!(out_v, out_s, "{name} t={t} spikes diverged across kernels");
+        assert_eq!(stats_v, stats_s, "{name} t={t} ledger diverged across kernels");
+        for l in 0..LANES {
+            assert_eq!(vector.lane_vmem(l), scalar.lane_vmem(l), "{name} t={t} lane {l} vmem");
+        }
+    }
+
+    let rs = quick(&format!("simd/{name}/scalar"), || {
+        std::hint::black_box(scalar.step_lanes(
+            std::hint::black_box(&matrix),
+            &mut out_s,
+            &regs,
+            u64::MAX,
+            &mut stats_s,
+        ));
+    });
+    let rv = quick(&format!("simd/{name}/{}", kernel.name()), || {
+        std::hint::black_box(vector.step_lanes(
+            std::hint::black_box(&matrix),
+            &mut out_v,
+            &regs,
+            u64::MAX,
+            &mut stats_v,
+        ));
+    });
+    let scalar_ns = rs.median.as_secs_f64() * 1e9;
+    let simd_ns = rv.median.as_secs_f64() * 1e9;
+    SimdResult {
+        name: name.to_string(),
+        kernel: kernel.name(),
+        scalar_ns,
+        simd_ns,
+        speedup: scalar_ns / simd_ns,
+    }
+}
+
+fn simd_json(c: &SimdResult) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(c.name.clone()));
+    o.insert("kernel".to_string(), Json::Str(c.kernel.to_string()));
+    o.insert("scalar_ns_per_step".to_string(), Json::Num(c.scalar_ns));
+    o.insert("simd_ns_per_step".to_string(), Json::Num(c.simd_ns));
+    o.insert("speedup".to_string(), Json::Num(c.speedup));
+    Json::Obj(o)
+}
+
 fn hotpath_json(c: &HotpathResult) -> Json {
     let mut o = BTreeMap::new();
     o.insert("name".to_string(), Json::Str(c.name.clone()));
@@ -341,6 +442,27 @@ fn main() {
         println!("  {name:28} {speedup:>5.1}x");
     }
 
+    println!("\n== bench_layer (SIMD lane kernels: pinned scalar vs widest vector tier) ==");
+    let simd_cases = vec![
+        bench_simd_case("one_to_one_400_firing_35pct", 400, Topology::OneToOne, 0.35),
+        bench_simd_case("one_to_one_400_firing_90pct", 400, Topology::OneToOne, 0.90),
+        bench_simd_case("gaussian_r1_400_firing_35pct", 400, g1, 0.35),
+        bench_simd_case("fc_256_firing_35pct", 256, Topology::AllToAll, 0.35),
+    ];
+    println!("\nlane-step latency, pinned scalar kernel vs `LaneKernel::auto`:");
+    for c in &simd_cases {
+        println!(
+            "  {:28} [{:6}] scalar {:>9.0} ns  simd {:>9.0} ns  {:>5.1}x",
+            c.name, c.kernel, c.scalar_ns, c.simd_ns, c.speedup
+        );
+    }
+    let simd_accept = simd_cases.iter().find(|c| c.name == "one_to_one_400_firing_35pct").unwrap();
+    println!(
+        "\nSIMD acceptance point one-to-one N=400 @ 35% firing: {:.1}x on `{}` (gate: >= 1.5x \
+         unless the auto kernel is the scalar fallback)",
+        simd_accept.speedup, simd_accept.kernel
+    );
+
     if let Ok(path) = std::env::var("BENCH_HOTPATH_JSON") {
         let mut root = BTreeMap::new();
         root.insert("bench".to_string(), Json::Str("hotpath".to_string()));
@@ -365,6 +487,12 @@ fn main() {
                     })
                     .collect(),
             ),
+        );
+        root.insert("simd_kernel".to_string(), Json::Str(simd_accept.kernel.to_string()));
+        root.insert("simd_speedup_lane_step".to_string(), Json::Num(simd_accept.speedup));
+        root.insert(
+            "simd_cases".to_string(),
+            Json::Arr(simd_cases.iter().map(simd_json).collect()),
         );
         let json = Json::Obj(root);
         std::fs::write(&path, format!("{json}\n")).expect("write BENCH_HOTPATH_JSON");

@@ -13,12 +13,16 @@
 //!   saturated (`queue_depth` messages per stage), which is the
 //!   backpressure story — a flooded engine slows producers instead of
 //!   buffering unboundedly.
-//! * **Deterministic, in-order results**: samples are assigned round-robin
-//!   (sample *i* → shard *i mod C*) and within a shard the stage chain is
-//!   FIFO, so merging shard outputs round-robin returns results in
-//!   submission order. Every stream is settled (membranes reset) between
-//!   samples, so results are bit-for-bit identical to a sequential
-//!   [`crate::hdl::Core`] run — asserted in tests and in
+//! * **Deterministic, in-order results**: single-sample mode assigns
+//!   streams round-robin (sample *i* → shard *i mod C*); lane mode packs
+//!   consecutive samples into groups and dispatches each group to the
+//!   shard with the least cumulative dispatched work — a deterministic
+//!   work-stealing schedule (a pure function of the op stream, never of
+//!   thread timing). Within a shard the stage chain is FIFO and the
+//!   feeder records every assignment, so the drainer merges shard outputs
+//!   back into submission order. Every stream is settled (membranes
+//!   reset) between samples, so results are bit-for-bit identical to a
+//!   sequential [`crate::hdl::Core`] run — asserted in tests and in
 //!   `benches/bench_serving.rs`.
 //! * **Live reconfiguration**: the engine is *software-defined* after
 //!   deployment. A [`ControlPlane`] handle (see
@@ -40,8 +44,9 @@
 //!   performs **zero plane allocations** (debug-asserted on every batch
 //!   via [`PlanePool::misses`]).
 //! * **Lane batching** ([`ServingOptions::lane_width`] > 1): the feeder
-//!   packs up to 64 round-robin-assigned samples per shard into one
-//!   [`SpikeMatrix`] per timestep; every stage steps all lanes at once
+//!   packs up to 64 consecutive samples into one group, sent to its shard
+//!   as one [`SpikeMatrix`] per timestep; every stage steps all lanes at
+//!   once
 //!   ([`crate::hdl::Layer::step_lanes`]) with each synaptic row fetched
 //!   **once** per firing line and every channel hop amortized across the
 //!   whole group, lanes of ragged batches are masked out as their streams
@@ -50,7 +55,11 @@
 //!   activity ledgers) to the single-sample path, which remains the
 //!   `lane_width == 1` fallback and conformance oracle. Matrices recycle
 //!   through a pre-filled [`MatrixPool`] with the same zero-alloc
-//!   contract.
+//!   contract. With [`ServingOptions::sparse_cutoff`] set, samples whose
+//!   input firing density falls below the cutoff skip lane packing and
+//!   stream down the single-sample path instead, where the layers'
+//!   quiescence fast path elides most neuron work — dense traffic pays
+//!   the batched costs, near-silent traffic does not.
 //!
 //! The per-stage loop (`stage_loop`) and the spike-count collector
 //! (`collector_loop`) are shared with [`super::pipeline::run_pipelined`],
@@ -343,25 +352,55 @@ fn feed_group(
     Ok(())
 }
 
-/// Flush every shard's partial lane group, **ordered by first stream id**
-/// so the global submission order of groups on the channels is preserved
-/// (the deadlock-freedom and in-order-drain arguments rely on it). Called
-/// before any reconfiguration broadcast — so an epoch boundary lands
-/// exactly between samples — and at end of session.
-fn flush_pending_groups(
-    pending: &mut [(Vec<usize>, Vec<&Sample>)],
+/// Index of the shard with the least cumulative dispatched work, lowest
+/// index on ties (`min_by_key` returns the *first* minimum). The choice is
+/// a pure function of the op stream, so identical sessions yield identical
+/// shard assignments run-to-run — which keeps per-shard lane-bank shapes,
+/// and therefore connectome snapshots, reproducible.
+fn least_loaded(load: &[u64]) -> usize {
+    load.iter().enumerate().min_by_key(|&(_, &c)| c).map(|(i, _)| i).unwrap_or(0)
+}
+
+/// Dispatch the pending lane group (possibly partial) to the least-loaded
+/// shard and record the assignment for the drainer.
+///
+/// This is the serving engine's work-stealing scheduler in deterministic
+/// form: instead of idle stage threads racing to pop a shared deque
+/// (which would make shard assignment — and with it lane-bank widths and
+/// connectome snapshots — depend on thread timing), the feeder tracks the
+/// cumulative step-cost dispatched to each shard and hands every ready
+/// group to the shard that has received the least. An idle shard thereby
+/// takes exactly the group a hot shard would otherwise have queued, while
+/// the schedule stays a pure function of the op stream. Groups pack
+/// **consecutive** stream ids, so dispatch order equals stream order and
+/// the drainer's per-record in-order recv argument holds.
+///
+/// Called when a group fills, before any reconfiguration broadcast (epoch
+/// boundaries land between groups), before a sparse-fallback single (so
+/// results stay in submission order), and at end of session.
+fn dispatch_group(
+    pending: &mut (Vec<usize>, Vec<&Sample>),
     senders: &[SyncSender<StageMsg>],
+    load: &mut [u64],
+    assign: &std::sync::mpsc::Sender<(usize, usize)>,
     matrix_pool: &MatrixPool,
     lane_width: usize,
     inputs: usize,
 ) -> Result<()> {
-    let mut order: Vec<usize> = (0..pending.len()).filter(|&s| !pending[s].0.is_empty()).collect();
-    order.sort_by_key(|&s| pending[s].0[0]);
-    for s in order {
-        let (streams, group) = &mut pending[s];
-        feed_group(&senders[s], streams, group, matrix_pool, lane_width, inputs)?;
+    let (streams, group) = pending;
+    if group.is_empty() {
+        return Ok(());
     }
-    Ok(())
+    let shard = least_loaded(load);
+    // Cost model: one StepLanes message per timestep plus the FlushLanes
+    // marker — proportional to the stage work the group induces.
+    let t_max = group.iter().map(|s| s.t_steps).max().unwrap_or(0) as u64;
+    load[shard] += t_max + 1;
+    // The record channel is unbounded and the drainer holds its receiver
+    // until the session scope ends, so this send cannot block; a closed
+    // receiver only happens while the scope is already unwinding.
+    let _ = assign.send((shard, group.len()));
+    feed_group(&senders[shard], streams, group, matrix_pool, lane_width, inputs)
 }
 
 /// Body of the terminal collector: accumulates output-layer spike counts per
@@ -489,16 +528,27 @@ pub struct ServingOptions {
     /// or of one whole lane group in batched mode).
     pub queue_depth: usize,
     /// Samples stepped concurrently per shard message (1..=64). At 1 the
-    /// engine runs the single-sample packed path; above 1 each shard packs
-    /// `lane_width` round-robin-assigned samples into one [`SpikeMatrix`]
-    /// per timestep, so every synaptic row fetch and every channel hop is
-    /// amortized across the batch. Results are bit-identical either way.
+    /// engine runs the single-sample packed path; above 1 the feeder packs
+    /// **consecutive** samples into lane groups and dispatches each ready
+    /// group to the least-loaded shard (see [`ServingEngine::run_session`]),
+    /// so every synaptic row fetch and every channel hop is amortized
+    /// across the batch. Results are bit-identical either way.
     pub lane_width: usize,
+    /// Firing-rate-aware admission policy for lane-batched engines: a
+    /// sample whose input spike density (`nnz / (t_steps × inputs)`) is
+    /// **below** this cutoff bypasses lane packing and is streamed down the
+    /// single-sample packed path, whose per-neuron quiescence fast path
+    /// does near-zero work on silence — dense-batch costs are only paid by
+    /// streams dense enough to amortize them. `None` (default) packs
+    /// everything. Routing never changes results (both paths are
+    /// bit-identical); an out-of-order hazard is avoided by flushing the
+    /// pending group before a sparse sample is dispatched.
+    pub sparse_cutoff: Option<f64>,
 }
 
 impl Default for ServingOptions {
     fn default() -> Self {
-        ServingOptions { cores: 2, queue_depth: 64, lane_width: 1 }
+        ServingOptions { cores: 2, queue_depth: 64, lane_width: 1, sparse_cutoff: None }
     }
 }
 
@@ -510,6 +560,13 @@ impl ServingOptions {
     /// Lane-batched engine: C shards × `lane_width` samples per step.
     pub fn with_lanes(cores: usize, lane_width: usize) -> ServingOptions {
         ServingOptions { cores, lane_width, ..Default::default() }
+    }
+
+    /// Builder: set the sparse-stream fallback cutoff (see
+    /// [`ServingOptions::sparse_cutoff`]).
+    pub fn sparse_cutoff(mut self, cutoff: f64) -> ServingOptions {
+        self.sparse_cutoff = Some(cutoff);
+        self
     }
 }
 
@@ -576,6 +633,10 @@ pub struct ServingEngine {
     matrix_pool: Arc<MatrixPool>,
     /// Samples packed per lane group (1 = single-sample path).
     lane_width: usize,
+    /// Firing-density cutoff below which a sample bypasses lane packing
+    /// and streams down the single-sample quiescence fast path
+    /// ([`ServingOptions::sparse_cutoff`]).
+    sparse_cutoff: Option<f64>,
     submitted: u64,
     completed: u64,
     /// Cumulative [`ActivityStats`] over every completed stream — the
@@ -616,7 +677,11 @@ impl ServingEngine {
         let per_shard = (config.num_layers() + 1) * options.queue_depth
             + 2 * config.num_layers()
             + 4;
-        let plane_pool = Arc::new(if lanes == 1 {
+        // The sparse-stream fallback routes below-cutoff samples down the
+        // single-sample plane path even in lane mode, so such engines
+        // pre-fill both pools (the zero-alloc invariant covers both).
+        let wants_planes = lanes == 1 || options.sparse_cutoff.is_some();
+        let plane_pool = Arc::new(if wants_planes {
             PlanePool::prefilled(options.cores * per_shard, max_width)
         } else {
             PlanePool::new()
@@ -647,22 +712,23 @@ impl ServingEngine {
                 // Two pre-sized buffers per stage-local free list cover the
                 // one output buffer a stage ever needs in hand (planes on
                 // the single-sample path, lane matrices in batched mode).
-                let (stage_pool, stage_mats) = if lanes == 1 {
-                    (
-                        vec![
-                            SpikePlane::with_line_capacity(max_width),
-                            SpikePlane::with_line_capacity(max_width),
-                        ],
-                        Vec::new(),
-                    )
+                // A sparse-fallback engine mixes both message kinds, so its
+                // stages carry both free lists.
+                let stage_pool = if wants_planes {
+                    vec![
+                        SpikePlane::with_line_capacity(max_width),
+                        SpikePlane::with_line_capacity(max_width),
+                    ]
                 } else {
-                    (
-                        Vec::new(),
-                        vec![
-                            SpikeMatrix::with_line_capacity(max_width),
-                            SpikeMatrix::with_line_capacity(max_width),
-                        ],
-                    )
+                    Vec::new()
+                };
+                let stage_mats = if lanes > 1 {
+                    vec![
+                        SpikeMatrix::with_line_capacity(max_width),
+                        SpikeMatrix::with_line_capacity(max_width),
+                    ]
+                } else {
+                    Vec::new()
                 };
                 threads.push(std::thread::spawn(move || {
                     stage_loop(layer_idx, layer, stage_regs, rx, tx, stage_pool, stage_mats)
@@ -694,6 +760,7 @@ impl ServingEngine {
             plane_pool,
             matrix_pool,
             lane_width: lanes,
+            sparse_cutoff: options.sparse_cutoff,
             submitted: 0,
             completed: 0,
             activity: ActivityStats::default(),
@@ -704,6 +771,12 @@ impl ServingEngine {
     /// Samples stepped per shard message (1 = single-sample path).
     pub fn lane_width(&self) -> usize {
         self.lane_width
+    }
+
+    /// The firing-density cutoff for the sparse-stream fallback, if one
+    /// was configured ([`ServingOptions::sparse_cutoff`]).
+    pub fn sparse_cutoff(&self) -> Option<f64> {
+        self.sparse_cutoff
     }
 
     /// Spike lines of the input layer (spk_in width) — the sample width
@@ -771,8 +844,9 @@ impl ServingEngine {
         self.control.epoch()
     }
 
-    /// Serve a batch: admission feeds the shards round-robin under
-    /// backpressure while results are drained concurrently; returns one
+    /// Serve a batch: admission feeds the shards under backpressure
+    /// (round-robin in single-sample mode, least-loaded lane groups in
+    /// lane mode) while results are drained concurrently; returns one
     /// result per sample, in submission order, bit-identical to a
     /// sequential core. Control-plane programs admitted via
     /// [`ControlPlane::apply`] are broadcast at sample boundaries of this
@@ -829,19 +903,29 @@ impl ServingEngine {
         let plane_pool = self.plane_pool.clone();
         let matrix_pool = self.matrix_pool.clone();
         let lane_width = self.lane_width;
+        let sparse_cutoff = self.sparse_cutoff;
         let inputs = self.inputs;
         let pool_misses_before = self.plane_pool.misses();
         let mat_misses_before = self.matrix_pool.misses();
+        // Assignment records (shard, n_results): the feeder appends one per
+        // dispatched unit in stream order; the drainer follows them to know
+        // which shard's output queue holds the next in-order results.
+        // Unbounded — records are tiny and the feeder must never block on
+        // bookkeeping while holding backpressured data channels.
+        let (assign_tx, assign_rx) = std::sync::mpsc::channel::<(usize, usize)>();
 
         let results = std::thread::scope(|scope| -> Result<Vec<StreamResult>> {
-            // Feeder: streams every sample to its shard (blocking on the
+            // Feeder: streams every sample to a shard (blocking on the
             // bounded channels = admission control) and broadcasts control
             // programs to *all* shards at sample boundaries, so the FIFO
             // position of a Reconfig is identical in every chain. In
-            // lane-batched mode (`lane_width > 1`) each shard's samples are
-            // packed into lane groups sent as one SpikeMatrix per timestep;
-            // partial groups are flushed in stream order before any
-            // reconfiguration broadcast, so epoch semantics are unchanged.
+            // lane-batched mode (`lane_width > 1`) consecutive samples are
+            // packed into one lane group sent as a SpikeMatrix per
+            // timestep, and each ready group goes to the shard with the
+            // least cumulative dispatched work (see [`dispatch_group`]);
+            // partial groups are flushed before any reconfiguration
+            // broadcast, so epoch semantics are unchanged. Every dispatch
+            // appends an assignment record the drainer follows.
             let feeder = scope.spawn(move || -> Result<()> {
                 let dead = || anyhow::anyhow!("serving shard died");
                 let broadcast = |epoch: u64, program: &Arc<ReconfigProgram>| -> Result<()> {
@@ -851,21 +935,35 @@ impl ServingEngine {
                     }
                     Ok(())
                 };
-                // Per-shard lane group under construction (stream ids +
-                // samples); unused on the single-sample path.
-                let mut pending: Vec<(Vec<usize>, Vec<&Sample>)> =
-                    vec![(Vec::new(), Vec::new()); n_cores];
+                // The single lane group under construction (consecutive
+                // stream ids + samples); unused on the single-sample path.
+                let mut pending: (Vec<usize>, Vec<&Sample>) = (Vec::new(), Vec::new());
+                // Cumulative dispatched step-cost per shard — the
+                // deterministic load model behind [`least_loaded`].
+                let mut load = vec![0u64; n_cores];
+                // Firing-rate-aware routing: a sample whose input density
+                // is below the cutoff skips lane packing entirely and
+                // streams as a single-sample plane sequence, where the
+                // layers' quiescence fast path elides most neuron work.
+                let is_sparse = |s: &Sample| {
+                    sparse_cutoff.is_some_and(|cut| {
+                        let slots = (s.t_steps * s.inputs).max(1) as f64;
+                        (s.nnz() as f64) < cut * slots
+                    })
+                };
                 let mut stream = 0usize;
                 for op in ops {
                     // Programs applied asynchronously through a ControlPlane
                     // handle land here, at the next sample boundary (group
-                    // boundary in lane mode: partial groups go first so
+                    // boundary in lane mode: the partial group goes first so
                     // already-admitted samples keep the old epoch).
                     let async_programs = control.take_pending();
                     if !async_programs.is_empty() {
-                        flush_pending_groups(
+                        dispatch_group(
                             &mut pending,
                             &senders,
+                            &mut load,
+                            &assign_tx,
                             &matrix_pool,
                             lane_width,
                             inputs,
@@ -876,7 +974,12 @@ impl ServingEngine {
                     }
                     match op {
                         SessionOp::Submit(sample) if lane_width == 1 => {
-                            let tx = &senders[stream % n_cores];
+                            // Single-sample mode keeps the static
+                            // round-robin schedule — it is the conformance
+                            // fallback and oracle for the adaptive path.
+                            let shard = stream % n_cores;
+                            let tx = &senders[shard];
+                            let _ = assign_tx.send((shard, 1));
                             for t in 0..sample.t_steps {
                                 // Encode straight into a recycled pool
                                 // plane — no per-timestep Vec allocation.
@@ -890,18 +993,46 @@ impl ServingEngine {
                             control.charge_spk_in(sample.nnz() as u64);
                             stream += 1;
                         }
-                        SessionOp::Submit(sample) => {
-                            let shard = stream % n_cores;
-                            pending[shard].0.push(stream);
-                            pending[shard].1.push(*sample);
+                        SessionOp::Submit(sample) if is_sparse(sample) => {
+                            // Sparse fallback: flush the pending group
+                            // first so results stay in submission order,
+                            // then stream this sample alone to the
+                            // least-loaded shard as planes.
+                            dispatch_group(
+                                &mut pending,
+                                &senders,
+                                &mut load,
+                                &assign_tx,
+                                &matrix_pool,
+                                lane_width,
+                                inputs,
+                            )?;
+                            let shard = least_loaded(&load);
+                            load[shard] += sample.t_steps as u64 + 1;
+                            let _ = assign_tx.send((shard, 1));
+                            let tx = &senders[shard];
+                            for t in 0..sample.t_steps {
+                                let mut plane = plane_pool.take();
+                                sample.step_plane_into(t, &mut plane);
+                                tx.send(StageMsg::Step { stream, plane })
+                                    .map_err(|_| dead())?;
+                            }
+                            tx.send(StageMsg::Flush { stream, stats: ActivityStats::default() })
+                                .map_err(|_| dead())?;
                             control.charge_spk_in(sample.nnz() as u64);
                             stream += 1;
-                            if pending[shard].1.len() == lane_width {
-                                let (streams, group) = &mut pending[shard];
-                                feed_group(
-                                    &senders[shard],
-                                    streams,
-                                    group,
+                        }
+                        SessionOp::Submit(sample) => {
+                            pending.0.push(stream);
+                            pending.1.push(*sample);
+                            control.charge_spk_in(sample.nnz() as u64);
+                            stream += 1;
+                            if pending.1.len() == lane_width {
+                                dispatch_group(
+                                    &mut pending,
+                                    &senders,
+                                    &mut load,
+                                    &assign_tx,
                                     &matrix_pool,
                                     lane_width,
                                     inputs,
@@ -909,9 +1040,11 @@ impl ServingEngine {
                             }
                         }
                         SessionOp::Reconfig(program) => {
-                            flush_pending_groups(
+                            dispatch_group(
                                 &mut pending,
                                 &senders,
+                                &mut load,
+                                &assign_tx,
                                 &matrix_pool,
                                 lane_width,
                                 inputs,
@@ -925,30 +1058,53 @@ impl ServingEngine {
                         }
                     }
                 }
-                flush_pending_groups(&mut pending, &senders, &matrix_pool, lane_width, inputs)
+                dispatch_group(
+                    &mut pending,
+                    &senders,
+                    &mut load,
+                    &assign_tx,
+                    &matrix_pool,
+                    lane_width,
+                    inputs,
+                )
+                // `assign_tx` drops here, which is what ends the drainer's
+                // record iteration once every queued result is harvested.
             });
 
-            // Drainer (this thread): round-robin pop restores global order.
-            // recv_timeout (rather than recv) is a liveness bound, not a
-            // latency budget: it only fires if a shard produces *nothing*
-            // for a very long time (a wedged/dead pipeline), in which case
-            // the batch is abandoned with an error.
+            // Drainer (this thread): follows the feeder's assignment
+            // records in dispatch order. Units (groups or singles) pack
+            // consecutive stream ids and each shard's pipeline is FIFO, so
+            // the next `n` in-order results are always at the head of the
+            // recorded shard's output queue — popping record by record
+            // restores global order regardless of how the load balancer
+            // scattered units across shards. recv_timeout (rather than
+            // recv) is a liveness bound, not a latency budget: it only
+            // fires if a shard produces *nothing* for a very long time (a
+            // wedged/dead pipeline), abandoning the batch with an error.
             let mut results = Vec::with_capacity(n_samples);
             let mut first_err: Option<anyhow::Error> = None;
-            for i in 0..n_samples {
-                match self.shards[i % n_cores]
-                    .out_rx
-                    .recv_timeout(std::time::Duration::from_secs(3600))
-                {
-                    Ok(r) => {
-                        debug_assert_eq!(r.stream_id, i, "shard FIFO order violated");
-                        self.control.charge_spk_out(r.spikes_total);
-                        results.push(r);
-                    }
-                    Err(_) => {
-                        first_err =
-                            Some(anyhow::anyhow!("serving shard produced no result {i}"));
-                        break;
+            'drain: for (shard, n) in assign_rx.iter() {
+                for _ in 0..n {
+                    match self.shards[shard]
+                        .out_rx
+                        .recv_timeout(std::time::Duration::from_secs(3600))
+                    {
+                        Ok(r) => {
+                            debug_assert_eq!(
+                                r.stream_id,
+                                results.len(),
+                                "shard FIFO order violated"
+                            );
+                            self.control.charge_spk_out(r.spikes_total);
+                            results.push(r);
+                        }
+                        Err(_) => {
+                            first_err = Some(anyhow::anyhow!(
+                                "serving shard {shard} produced no result {}",
+                                results.len()
+                            ));
+                            break 'drain;
+                        }
                     }
                 }
             }
@@ -982,6 +1138,14 @@ impl ServingEngine {
                 return Err(e);
             }
             fed?;
+            // Backstop: a healthy feeder emits exactly one record slot per
+            // submitted sample, so a shortfall here is a scheduler bug
+            // (records ran out early), not a shard failure.
+            anyhow::ensure!(
+                results.len() == n_samples,
+                "serving session drained {} of {n_samples} results",
+                results.len()
+            );
             Ok(results)
         });
 
@@ -1407,7 +1571,12 @@ mod tests {
                 &cfg,
                 &weights,
                 &regs,
-                ServingOptions { cores: 2, queue_depth: depth, lane_width: 4 },
+                ServingOptions {
+                    cores: 2,
+                    queue_depth: depth,
+                    lane_width: 4,
+                    ..Default::default()
+                },
             )
             .unwrap();
             let a = engine.run_batch(&samples).unwrap();
@@ -1422,6 +1591,100 @@ mod tests {
             );
             assert_eq!(engine.plane_pool_misses(), 0, "queue_depth {depth}");
         }
+    }
+
+    #[test]
+    fn least_loaded_lane_dispatch_is_bitexact_and_deterministic() {
+        // Heavily skewed stream lengths create hot and idle shards; the
+        // least-dispatched-work balancer must still return bit-exact,
+        // in-order results — and because the schedule is a pure function
+        // of the op stream (never of thread timing), two identical
+        // engines must agree on every result and on their final
+        // connectome images (per-shard lane-bank shapes included).
+        let (cfg, weights, regs, _) = setup();
+        let samples: Vec<Sample> = (0..17u64)
+            .map(|i| Dataset::Smnist.sample(i, Split::Test, 1 + ((i * i * 7) % 23) as usize))
+            .collect();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        for cores in [2usize, 3] {
+            for lane_width in [3usize, 8] {
+                let opts = ServingOptions::with_lanes(cores, lane_width);
+                let mut engine = ServingEngine::new(&cfg, &weights, &regs, opts).unwrap();
+                let mut twin = ServingEngine::new(&cfg, &weights, &regs, opts).unwrap();
+                let out = engine.run_batch(&samples).unwrap();
+                let out_twin = twin.run_batch(&samples).unwrap();
+                assert_eq!(out.len(), samples.len());
+                for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+                    let seq = core.run(s);
+                    let ctx = format!("cores={cores} lanes={lane_width} sample {i}");
+                    assert_eq!(r.stream_id, i, "{ctx}");
+                    assert_eq!(r.counts, seq.counts, "{ctx}");
+                    assert_eq!(r.stats, seq.stats, "{ctx} activity ledger");
+                    let t = &out_twin[i];
+                    assert_eq!(r.counts, t.counts, "{ctx}: twin diverged");
+                    assert_eq!(r.stats, t.stats, "{ctx}: twin ledger diverged");
+                }
+                assert_eq!(
+                    engine.snapshot().unwrap(),
+                    twin.snapshot().unwrap(),
+                    "cores={cores} lanes={lane_width}: shard schedule diverged between twins"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_cutoff_fallback_is_bitexact_and_zero_alloc() {
+        // A lane engine with a firing-density cutoff routes near-silent
+        // samples down the single-sample quiescence path; results must be
+        // bit-identical to the sequential core and to a cutoff-less lane
+        // engine, in order, with both recycled-buffer pools staying warm.
+        let (cfg, weights, regs, _) = setup();
+        let mut rng = crate::datasets::rng::XorShift64Star::new(0x51AB);
+        let samples: Vec<Sample> = (0..12u64)
+            .map(|i| {
+                if i % 3 == 0 {
+                    // Near-silent: a handful of spikes over 9 timesteps
+                    // (density « 5%), below the routing cutoff.
+                    let t_steps = 9;
+                    let mut spikes = vec![0u8; t_steps * 256];
+                    for _ in 0..4 {
+                        let slot = rng.below((t_steps * 256) as u64) as usize;
+                        spikes[slot] = 1;
+                    }
+                    Sample { spikes, t_steps, inputs: 256, label: 0 }
+                } else {
+                    Dataset::Smnist.sample(i, Split::Test, 6)
+                }
+            })
+            .collect();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        let mut dense =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_lanes(2, 4)).unwrap();
+        let mut routed = ServingEngine::new(
+            &cfg,
+            &weights,
+            &regs,
+            ServingOptions::with_lanes(2, 4).sparse_cutoff(0.05),
+        )
+        .unwrap();
+        assert_eq!(routed.sparse_cutoff(), Some(0.05));
+        let base = dense.run_batch(&samples).unwrap();
+        let out = routed.run_batch(&samples).unwrap();
+        assert_eq!(out.len(), samples.len());
+        for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+            let seq = core.run(s);
+            assert_eq!(r.stream_id, i, "sample {i}");
+            assert_eq!(r.counts, seq.counts, "sample {i} vs sequential core");
+            assert_eq!(r.stats, seq.stats, "sample {i} activity ledger");
+            assert_eq!(r.counts, base[i].counts, "sample {i} vs cutoff-less lane engine");
+        }
+        assert_eq!(routed.plane_pool_misses(), 0, "sparse fallback allocated planes");
+        assert_eq!(routed.matrix_pool_misses(), 0, "lane path allocated matrices");
     }
 
     #[test]
@@ -1468,7 +1731,7 @@ mod tests {
                     &cfg,
                     &weights,
                     &regs,
-                    ServingOptions { cores: 2, queue_depth: 8, lane_width },
+                    ServingOptions { cores: 2, queue_depth: 8, lane_width, ..Default::default() },
                 )
                 .is_err(),
                 "lane width {lane_width} must be rejected"

@@ -82,6 +82,17 @@ impl Core {
         &mut self.layers[k]
     }
 
+    /// Pin the lane-step kernel on every layer (`None` restores each
+    /// layer's firing-rate-aware auto policy). Purely a performance knob —
+    /// all kernels are bit-identical (see
+    /// [`super::neuron::step_soa_lanes_with`]); the `simd_parity` suite
+    /// uses this to build scalar-vs-SIMD conformance twins.
+    pub fn set_lane_kernel(&mut self, kernel: Option<super::neuron::LaneKernel>) {
+        for l in &mut self.layers {
+            l.set_lane_kernel(kernel);
+        }
+    }
+
     /// Reset all membrane state (inter-stream settle, Fig. 8's `s`).
     pub fn reset(&mut self) {
         for l in &mut self.layers {

@@ -94,7 +94,28 @@ pub struct Layer {
     /// dirty-flag clear protocol as the single-sample `act` scratch.
     lane_act: Vec<i32>,
     lane_act_dirty: bool,
+    /// Lane-step kernel override: `Some(k)` pins the kernel (how the
+    /// conformance suite builds scalar-vs-SIMD twins); `None` selects per
+    /// step via the firing-rate-aware auto policy below. Purely a
+    /// performance knob — every kernel is bit-identical.
+    lane_kernel: Option<neuron::LaneKernel>,
+    /// EMA of input spike density on the lane path (firing (line, lane)
+    /// pairs over M × active lanes), driving the auto kernel policy:
+    /// sparse streams stay on the scalar loop, whose per-lane quiescence
+    /// skip does near-zero work per inert neuron, while dense streams take
+    /// the widest vector tier.
+    lane_density_ema: f32,
 }
+
+/// EMA smoothing factor for the lane-path input-density estimate (1/8 —
+/// a few steps of history, so one dense timestep doesn't flip a sparse
+/// stream off its fast path).
+const LANE_DENSITY_ALPHA: f32 = 0.125;
+
+/// Auto-policy threshold: below ~2% input density the quiescence skip in
+/// the scalar loop beats computing the full vector datapath for lanes
+/// that provably cannot change.
+const LANE_SIMD_MIN_DENSITY: f32 = 0.02;
 
 impl Layer {
     pub fn new(cfg: &LayerConfig, qspec: QSpec, mem_kind: MemKind) -> Layer {
@@ -121,7 +142,23 @@ impl Layer {
             lane_refcnt: Vec::new(),
             lane_act: Vec::new(),
             lane_act_dirty: false,
+            lane_kernel: None,
+            lane_density_ema: 0.0,
         }
+    }
+
+    /// Pin the lane-step kernel, or `None` to restore the firing-rate-aware
+    /// auto policy. An unavailable pinned kernel falls back to the scalar
+    /// loop inside [`neuron::step_soa_lanes_with`]; either way the results
+    /// are bit-identical, so this is a performance request, never a
+    /// correctness hazard (the `simd_parity` suite pins twins through it).
+    pub fn set_lane_kernel(&mut self, kernel: Option<neuron::LaneKernel>) {
+        self.lane_kernel = kernel;
+    }
+
+    /// The current lane-kernel override (`None` = auto policy).
+    pub fn lane_kernel(&self) -> Option<neuron::LaneKernel> {
+        self.lane_kernel
     }
 
     pub fn fan_in(&self) -> usize {
@@ -466,12 +503,14 @@ impl Layer {
         }
         let mut syn = [0u64; 64];
         let mut any_syn = false;
+        let mut fired_bits = 0u64;
         let (mut touched_lo, mut touched_hi) = (usize::MAX, 0usize);
         for (i, &word) in spikes_in.words().iter().enumerate() {
             let fired = word & active;
             if fired == 0 {
                 continue;
             }
+            fired_bits += fired.count_ones() as u64;
             let (lo, row) = self.mem.row_slice(i);
             if row.is_empty() {
                 continue;
@@ -528,14 +567,34 @@ impl Layer {
             };
         }
 
+        // --- Kernel policy for the neuron sweep: pinned override, else
+        // firing-rate-aware auto. The density EMA tracks firing
+        // (line, lane) pairs over M × active lanes; below the threshold the
+        // scalar loop wins (its quiescence skip touches nothing for inert
+        // lanes), above it the widest vector tier wins (4–8 lanes per
+        // instruction). Either choice is bit-identical (simd_parity suite),
+        // so the EMA only steers throughput.
+        let active_lanes = active.count_ones().max(1);
+        let density = fired_bits as f32 / (m.max(1) as f32 * active_lanes as f32);
+        self.lane_density_ema += LANE_DENSITY_ALPHA * (density - self.lane_density_ema);
+        let kernel = self.lane_kernel.unwrap_or_else(|| {
+            if self.lane_density_ema < LANE_SIMD_MIN_DENSITY {
+                neuron::LaneKernel::Scalar
+            } else {
+                neuron::LaneKernel::auto(self.qspec)
+            }
+        });
+
         // --- Neuron updates over the lane-major SoA bank, one neuron's
-        // lanes at a time (quiescence fast path applied per lane inside
-        // step_soa_lanes).
+        // lanes at a time (the scalar kernel applies the quiescence fast
+        // path per lane inside step_soa_lanes; the vector tiers compute the
+        // full datapath, which the hold-range proof makes bit-identical).
         let hold = neuron::quiescent_hold_range(snap, self.qspec);
         spikes_out.resize_clear(n, lanes);
         for j in 0..n {
             let base = j * lanes;
-            let out = neuron::step_soa_lanes(
+            let out = neuron::step_soa_lanes_with(
+                kernel,
                 &mut self.lane_vmem[base..base + lanes],
                 &mut self.lane_refcnt[base..base + lanes],
                 &self.lane_act[base..base + lanes],
@@ -816,6 +875,70 @@ mod tests {
                 assert_eq!(plane_in, plane_out, "t={t} lane {l} spikes");
                 assert_eq!(batched.lane_vmem(l), twin.vmem_slice(), "t={t} lane {l} vmem");
                 assert_eq!(stats[l], want, "t={t} lane {l} ledger");
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_lane_kernels_are_bitexact_twins() {
+        // Layers pinned to every kernel tier (plus the auto policy) must
+        // walk identical lane-state / spike / ledger trajectories across a
+        // dense-then-sparse stream that exercises the density EMA's policy
+        // flip in auto mode.
+        use crate::hdl::neuron::LaneKernel;
+        use crate::hdl::spikes::SpikeMatrix;
+        let (m, n, lanes) = (24usize, 17usize, 11usize);
+        let cfg = LayerConfig { fan_in: m, neurons: n, topology: Topology::AllToAll };
+        let weights: Vec<i32> = (0..m * n).map(|k| (k as i32 % 15) - 7).collect();
+        let build = |kernel: Option<LaneKernel>| {
+            let mut l = Layer::new(&cfg, Q5_3, MemKind::Bram);
+            l.memory_mut().load_dense(&weights).unwrap();
+            l.set_lane_kernel(kernel);
+            l
+        };
+        let mut oracle = build(Some(LaneKernel::Scalar));
+        assert_eq!(oracle.lane_kernel(), Some(LaneKernel::Scalar));
+        let mut others = vec![
+            build(Some(LaneKernel::Sse2)),
+            build(Some(LaneKernel::Avx2)),
+            build(None),
+        ];
+        let regs = RegisterFile::new(Q5_3);
+        let active = (1u64 << lanes) - 1;
+        let mut mat_in = SpikeMatrix::default();
+        let mut mat_out = SpikeMatrix::default();
+        let mut want_out = SpikeMatrix::default();
+        let mut stats = vec![ActivityStats::default(); lanes];
+        let mut want_stats = vec![ActivityStats::default(); lanes];
+        for t in 0..60usize {
+            mat_in.resize_clear(m, lanes);
+            for l in 0..lanes {
+                for i in 0..m {
+                    // Dense for 30 steps, then near-silent: flips the auto
+                    // policy from SIMD back to the scalar fast path.
+                    let fire = if t < 30 {
+                        (t + i * 3 + l * 7) % 3 == 0
+                    } else {
+                        (t + i + l) % 97 == 0
+                    };
+                    if fire {
+                        mat_in.set(i, l);
+                    }
+                }
+            }
+            oracle.step_lanes(&mat_in, &mut want_out, &regs, active, &mut want_stats);
+            for other in &mut others {
+                let k = other.lane_kernel();
+                other.step_lanes(&mat_in, &mut mat_out, &regs, active, &mut stats);
+                assert_eq!(mat_out, want_out, "t={t} kernel {k:?} spikes");
+                assert_eq!(stats, want_stats, "t={t} kernel {k:?} ledger");
+                for lane in 0..lanes {
+                    assert_eq!(
+                        other.lane_vmem(lane),
+                        oracle.lane_vmem(lane),
+                        "t={t} kernel {k:?} lane {lane} vmem"
+                    );
+                }
             }
         }
     }

@@ -193,6 +193,414 @@ pub fn step_soa_lanes(
     out
 }
 
+/// Which implementation services [`step_soa_lanes_with`] — the scalar
+/// per-lane loop (always available; the conformance oracle) or one of the
+/// x86-64 vector tiers that step 4 (SSE2) or 8 (AVX2) lanes per
+/// instruction. The vector tiers compute the *full* datapath for every
+/// active lane — including lanes the scalar path would skip via the
+/// quiescence fast path — which is bit-identical because the skip is a
+/// proven no-op ([`quiescent_hold_range`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneKernel {
+    /// Per-lane scalar loop with the quiescence fast path.
+    Scalar,
+    /// 4 lanes per instruction (x86-64 baseline, no runtime detection
+    /// needed).
+    Sse2,
+    /// 8 lanes per instruction (runtime `is_x86_feature_detected!`).
+    Avx2,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_detected() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_detected() -> bool {
+    false
+}
+
+impl LaneKernel {
+    /// Whether the vector tiers are exact for `qspec`: every stored
+    /// register/weight/vmem value of a W ≤ 16 spec fits in i16, so all
+    /// Qn.q products fit a 32-bit SIMD lane exactly and the wrap formula
+    /// never overflows i32. Q17.15 (W = 32) needs i64 products and takes
+    /// the scalar path.
+    pub fn simd_eligible(qspec: QSpec) -> bool {
+        cfg!(target_arch = "x86_64") && qspec.width() <= 16
+    }
+
+    /// Widest kernel the running CPU supports for `qspec` (Scalar on
+    /// non-x86 targets and for W > 16 specs).
+    pub fn auto(qspec: QSpec) -> LaneKernel {
+        if !Self::simd_eligible(qspec) {
+            LaneKernel::Scalar
+        } else if avx2_detected() {
+            LaneKernel::Avx2
+        } else {
+            LaneKernel::Sse2
+        }
+    }
+
+    /// True iff this kernel may legally run for `qspec` on this CPU.
+    pub fn available(self, qspec: QSpec) -> bool {
+        match self {
+            LaneKernel::Scalar => true,
+            LaneKernel::Sse2 => Self::simd_eligible(qspec),
+            LaneKernel::Avx2 => Self::simd_eligible(qspec) && avx2_detected(),
+        }
+    }
+
+    /// Lanes stepped per arithmetic instruction (1 for the scalar loop).
+    pub fn lanes_per_op(self) -> usize {
+        match self {
+            LaneKernel::Scalar => 1,
+            LaneKernel::Sse2 => 4,
+            LaneKernel::Avx2 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LaneKernel::Scalar => "scalar",
+            LaneKernel::Sse2 => "sse2",
+            LaneKernel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// [`step_soa_lanes`] through an explicit kernel choice. An unavailable
+/// kernel (wrong arch, W > 16, AVX2 absent) silently falls back to the
+/// scalar loop — the result is bit-identical either way, so pinning a
+/// kernel is a performance request, never a correctness hazard.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn step_soa_lanes_with(
+    kernel: LaneKernel,
+    vmem: &mut [i32],
+    refcnt: &mut [i32],
+    act: &[i32],
+    active: u64,
+    hold: (i32, i32),
+    regs: &RegSnapshot,
+    qspec: QSpec,
+) -> LaneStepOut {
+    match kernel {
+        LaneKernel::Scalar => step_soa_lanes(vmem, refcnt, act, active, hold, regs, qspec),
+        #[cfg(target_arch = "x86_64")]
+        LaneKernel::Sse2 if LaneKernel::simd_eligible(qspec) => {
+            // SAFETY: SSE2 is part of the x86_64 baseline ABI.
+            unsafe { step_lanes_sse2(vmem, refcnt, act, active, hold, regs, qspec) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        LaneKernel::Avx2 if LaneKernel::Avx2.available(qspec) => {
+            // SAFETY: `available` just confirmed AVX2 via runtime detection.
+            unsafe { step_lanes_avx2(vmem, refcnt, act, active, hold, regs, qspec) }
+        }
+        _ => step_soa_lanes(vmem, refcnt, act, active, hold, regs, qspec),
+    }
+}
+
+/// Vectorized [`step_soa_lanes`]: one spk_clk edge for a single neuron
+/// across up to 64 lanes, 4–8 lanes per instruction, dispatching at
+/// runtime to the widest available x86-64 tier (AVX2 → SSE2 → scalar; see
+/// [`LaneKernel::auto`]). Bit-identical to the scalar loop in state,
+/// spike bits, and toggle bits — `rust/tests/simd_parity.rs` is the
+/// differential gate. Non-x86 targets and W > 16 specs take the scalar
+/// fallback, so this is safe to call unconditionally.
+#[inline]
+pub fn step_soa_lanes_simd(
+    vmem: &mut [i32],
+    refcnt: &mut [i32],
+    act: &[i32],
+    active: u64,
+    hold: (i32, i32),
+    regs: &RegSnapshot,
+    qspec: QSpec,
+) -> LaneStepOut {
+    step_soa_lanes_with(LaneKernel::auto(qspec), vmem, refcnt, act, active, hold, regs, qspec)
+}
+
+// --- x86-64 vector tiers ---------------------------------------------------
+//
+// Exactness argument (both tiers): `RegisterFile` validates every register
+// into the W-bit range and the layer stores only wrapped W-bit values, so
+// for W <= 16 every operand is in [-2^15, 2^15 - 1]. Hence
+//   |a * b| <= 2^30            — the full product fits an i32 lane exactly,
+//                                so a 32-bit low-half multiply IS the exact
+//                                product and `>> q` (arithmetic) matches the
+//                                scalar i64 shift;
+//   |x + half| <= 2^30 + 2^15  — the wrap formula ((x + half) & mask) - half
+//                                never overflows an i32 lane.
+// The spike comparator `v_new >= vth` is computed as NOT(vth > v_new) so
+// vth == i32::MIN (raw cfg writes can't produce it, but RegSnapshot is a
+// plain struct) needs no vth - 1 rewrite. Reset mode and all registers are
+// core-global, so the mode branch is scalar and uniform across lanes.
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{step_soa_lanes, LaneStepOut, RegSnapshot};
+    use crate::config::registers::ResetMode;
+    use crate::fixed::QSpec;
+    use core::arch::x86_64::*;
+
+    /// Low 32 bits of the four lanewise products — exact for W <= 16
+    /// operands (see the module-level argument). SSE2 has no mullo_epi32
+    /// (that's SSE4.1); emulate with two widening unsigned multiplies:
+    /// the low 32 bits of an unsigned product equal the low 32 bits of
+    /// the signed product mod 2^32.
+    #[inline(always)]
+    unsafe fn mullo_sse2(a: __m128i, b: __m128i) -> __m128i {
+        let even = _mm_mul_epu32(a, b); // 64-bit products of lanes 0, 2
+        let odd = _mm_mul_epu32(_mm_srli_si128(a, 4), _mm_srli_si128(b, 4)); // lanes 1, 3
+        let even_lo = _mm_shuffle_epi32(even, 0b0000_1000); // [p0.lo, p2.lo, _, _]
+        let odd_lo = _mm_shuffle_epi32(odd, 0b0000_1000); // [p1.lo, p3.lo, _, _]
+        _mm_unpacklo_epi32(even_lo, odd_lo) // [p0, p1, p2, p3]
+    }
+
+    /// Lanewise `QSpec::wrap`: ((x + half) & mask) - half, exact in i32.
+    #[inline(always)]
+    unsafe fn wrap4(x: __m128i, half: __m128i, mask: __m128i) -> __m128i {
+        _mm_sub_epi32(_mm_and_si128(_mm_add_epi32(x, half), mask), half)
+    }
+
+    /// `mask ? a : b` per 32-bit lane (mask lanes are all-ones/all-zeros).
+    #[inline(always)]
+    unsafe fn sel4(mask: __m128i, a: __m128i, b: __m128i) -> __m128i {
+        _mm_or_si128(_mm_and_si128(mask, a), _mm_andnot_si128(mask, b))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn step_lanes_sse2(
+        vmem: &mut [i32],
+        refcnt: &mut [i32],
+        act: &[i32],
+        active: u64,
+        hold: (i32, i32),
+        regs: &RegSnapshot,
+        qspec: QSpec,
+    ) -> LaneStepOut {
+        debug_assert!(qspec.width() <= 16, "SSE2 tier requires W <= 16");
+        let lanes = vmem.len();
+        let w = qspec.width();
+        let q_shift = _mm_cvtsi32_si128(qspec.q() as i32);
+        let half = _mm_set1_epi32(1i32 << (w - 1));
+        let wmask = _mm_set1_epi32(((1i64 << w) - 1) as i32);
+        let decay = _mm_set1_epi32(regs.decay);
+        let growth = _mm_set1_epi32(regs.growth);
+        let vth = _mm_set1_epi32(regs.vth);
+        let refr = _mm_set1_epi32(regs.refractory);
+        let one = _mm_set1_epi32(1);
+        let zero = _mm_setzero_si128();
+        let all = _mm_set1_epi32(-1);
+
+        let mut out = LaneStepOut::default();
+        let mut base = 0usize;
+        while base + 4 <= lanes {
+            let abits = ((active >> base) & 0xF) as i32;
+            if abits == 0 {
+                base += 4;
+                continue;
+            }
+            let amask = _mm_set_epi32(
+                -((abits >> 3) & 1),
+                -((abits >> 2) & 1),
+                -((abits >> 1) & 1),
+                -(abits & 1),
+            );
+            let vp = vmem.as_mut_ptr().add(base);
+            let rp = refcnt.as_mut_ptr().add(base);
+            let v_old = _mm_loadu_si128(vp as *const __m128i);
+            let r_old = _mm_loadu_si128(rp as *const __m128i);
+            let a_in = _mm_loadu_si128(act.as_ptr().add(base) as *const __m128i);
+
+            // Refractory hold: vmem kept, spike suppressed, counter--.
+            let hold_m = _mm_cmpgt_epi32(r_old, zero);
+
+            // VmemDyn: v' = wrap(wrap(v - dv) + gi).
+            let dv = wrap4(_mm_sra_epi32(mullo_sse2(decay, v_old), q_shift), half, wmask);
+            let gi = wrap4(_mm_sra_epi32(mullo_sse2(growth, a_in), q_shift), half, wmask);
+            let v1 = wrap4(_mm_sub_epi32(v_old, dv), half, wmask);
+            let v_new = wrap4(_mm_add_epi32(v1, gi), half, wmask);
+
+            // SpkGen: v_new >= vth == NOT(vth > v_new); held lanes never fire.
+            let spike_m = _mm_andnot_si128(hold_m, _mm_xor_si128(_mm_cmpgt_epi32(vth, v_new), all));
+
+            // VmemSel (Eq. 7): the reset mux, uniform across lanes.
+            let v_reset = match regs.mode {
+                ResetMode::Default => {
+                    let dvn = wrap4(_mm_sra_epi32(mullo_sse2(decay, v_new), q_shift), half, wmask);
+                    wrap4(_mm_sub_epi32(v_new, dvn), half, wmask)
+                }
+                ResetMode::ToZero => zero,
+                ResetMode::BySubtraction => wrap4(_mm_sub_epi32(v_new, vth), half, wmask),
+                ResetMode::ToConstant => _mm_set1_epi32(regs.vreset),
+            };
+
+            let v_step = sel4(hold_m, v_old, sel4(spike_m, v_reset, v_new));
+            let r_step = sel4(hold_m, _mm_sub_epi32(r_old, one), sel4(spike_m, refr, r_old));
+
+            // Masked-out lanes (finished streams) keep their state untouched.
+            let v_fin = sel4(amask, v_step, v_old);
+            let r_fin = sel4(amask, r_step, r_old);
+            _mm_storeu_si128(vp as *mut __m128i, v_fin);
+            _mm_storeu_si128(rp as *mut __m128i, r_fin);
+
+            let toggle_m = _mm_xor_si128(_mm_cmpeq_epi32(v_fin, v_old), all);
+            let sb = _mm_movemask_ps(_mm_castsi128_ps(spike_m)) as u64;
+            let tb = _mm_movemask_ps(_mm_castsi128_ps(toggle_m)) as u64;
+            out.spikes |= (sb & abits as u64) << base;
+            out.toggles |= (tb & abits as u64) << base;
+            base += 4;
+        }
+        if base < lanes {
+            let tail_active = (active >> base) & ((1u64 << (lanes - base)) - 1);
+            let t = step_soa_lanes(
+                &mut vmem[base..],
+                &mut refcnt[base..],
+                &act[base..],
+                tail_active,
+                hold,
+                regs,
+                qspec,
+            );
+            out.spikes |= t.spikes << base;
+            out.toggles |= t.toggles << base;
+        }
+        out
+    }
+
+    /// Lanewise wrap, 8 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn wrap8(x: __m256i, half: __m256i, mask: __m256i) -> __m256i {
+        _mm256_sub_epi32(_mm256_and_si256(_mm256_add_epi32(x, half), mask), half)
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn sel8(mask: __m256i, a: __m256i, b: __m256i) -> __m256i {
+        _mm256_or_si256(_mm256_and_si256(mask, a), _mm256_andnot_si256(mask, b))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn step_lanes_avx2(
+        vmem: &mut [i32],
+        refcnt: &mut [i32],
+        act: &[i32],
+        active: u64,
+        hold: (i32, i32),
+        regs: &RegSnapshot,
+        qspec: QSpec,
+    ) -> LaneStepOut {
+        debug_assert!(qspec.width() <= 16, "AVX2 tier requires W <= 16");
+        let lanes = vmem.len();
+        let w = qspec.width();
+        let q_shift = _mm_cvtsi32_si128(qspec.q() as i32);
+        let half = _mm256_set1_epi32(1i32 << (w - 1));
+        let wmask = _mm256_set1_epi32(((1i64 << w) - 1) as i32);
+        let decay = _mm256_set1_epi32(regs.decay);
+        let growth = _mm256_set1_epi32(regs.growth);
+        let vth = _mm256_set1_epi32(regs.vth);
+        let refr = _mm256_set1_epi32(regs.refractory);
+        let one = _mm256_set1_epi32(1);
+        let zero = _mm256_setzero_si256();
+        let all = _mm256_set1_epi32(-1);
+
+        let mut out = LaneStepOut::default();
+        let mut base = 0usize;
+        while base + 8 <= lanes {
+            let abits = ((active >> base) & 0xFF) as i32;
+            if abits == 0 {
+                base += 8;
+                continue;
+            }
+            let amask = _mm256_set_epi32(
+                -((abits >> 7) & 1),
+                -((abits >> 6) & 1),
+                -((abits >> 5) & 1),
+                -((abits >> 4) & 1),
+                -((abits >> 3) & 1),
+                -((abits >> 2) & 1),
+                -((abits >> 1) & 1),
+                -(abits & 1),
+            );
+            let vp = vmem.as_mut_ptr().add(base);
+            let rp = refcnt.as_mut_ptr().add(base);
+            let v_old = _mm256_loadu_si256(vp as *const __m256i);
+            let r_old = _mm256_loadu_si256(rp as *const __m256i);
+            let a_in = _mm256_loadu_si256(act.as_ptr().add(base) as *const __m256i);
+
+            let hold_m = _mm256_cmpgt_epi32(r_old, zero);
+
+            let dv = wrap8(
+                _mm256_sra_epi32(_mm256_mullo_epi32(decay, v_old), q_shift),
+                half,
+                wmask,
+            );
+            let gi = wrap8(
+                _mm256_sra_epi32(_mm256_mullo_epi32(growth, a_in), q_shift),
+                half,
+                wmask,
+            );
+            let v1 = wrap8(_mm256_sub_epi32(v_old, dv), half, wmask);
+            let v_new = wrap8(_mm256_add_epi32(v1, gi), half, wmask);
+
+            let spike_m =
+                _mm256_andnot_si256(hold_m, _mm256_xor_si256(_mm256_cmpgt_epi32(vth, v_new), all));
+
+            let v_reset = match regs.mode {
+                ResetMode::Default => {
+                    let dvn = wrap8(
+                        _mm256_sra_epi32(_mm256_mullo_epi32(decay, v_new), q_shift),
+                        half,
+                        wmask,
+                    );
+                    wrap8(_mm256_sub_epi32(v_new, dvn), half, wmask)
+                }
+                ResetMode::ToZero => zero,
+                ResetMode::BySubtraction => wrap8(_mm256_sub_epi32(v_new, vth), half, wmask),
+                ResetMode::ToConstant => _mm256_set1_epi32(regs.vreset),
+            };
+
+            let v_step = sel8(hold_m, v_old, sel8(spike_m, v_reset, v_new));
+            let r_step = sel8(hold_m, _mm256_sub_epi32(r_old, one), sel8(spike_m, refr, r_old));
+
+            let v_fin = sel8(amask, v_step, v_old);
+            let r_fin = sel8(amask, r_step, r_old);
+            _mm256_storeu_si256(vp as *mut __m256i, v_fin);
+            _mm256_storeu_si256(rp as *mut __m256i, r_fin);
+
+            let toggle_m = _mm256_xor_si256(_mm256_cmpeq_epi32(v_fin, v_old), all);
+            let sb = _mm256_movemask_ps(_mm256_castsi256_ps(spike_m)) as u32 as u64;
+            let tb = _mm256_movemask_ps(_mm256_castsi256_ps(toggle_m)) as u32 as u64;
+            out.spikes |= (sb & abits as u64) << base;
+            out.toggles |= (tb & abits as u64) << base;
+            base += 8;
+        }
+        if base < lanes {
+            let tail_active = (active >> base) & ((1u64 << (lanes - base)) - 1);
+            let t = step_soa_lanes(
+                &mut vmem[base..],
+                &mut refcnt[base..],
+                &act[base..],
+                tail_active,
+                hold,
+                regs,
+                qspec,
+            );
+            out.spikes |= t.spikes << base;
+            out.toggles |= t.toggles << base;
+        }
+        out
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use x86::{step_lanes_avx2, step_lanes_sse2};
+
 /// Inclusive `vmem` range `[lo, hi]` inside which a neuron with `act == 0`
 /// and `refcnt == 0` is **provably inert** for one step: the full datapath
 /// would leave `vmem` unchanged, emit no spike, and toggle no register.
@@ -477,6 +885,124 @@ mod tests {
         let out = step_soa_lanes(&mut vmem, &mut refcnt, &act, 0, hold, &snap, qs);
         assert_eq!(out, LaneStepOut::default());
         assert_eq!(vmem, vec![30; 4]);
+    }
+
+    #[test]
+    fn lane_kernel_auto_is_available_and_scalar_for_wide_specs() {
+        use crate::fixed::{Q17_15, Q3_1};
+        for qs in [Q3_1, Q5_3, Q9_7] {
+            let k = LaneKernel::auto(qs);
+            assert!(k.available(qs), "auto kernel {k:?} must be runnable for {qs}");
+        }
+        assert_eq!(LaneKernel::auto(Q17_15), LaneKernel::Scalar, "W=32 needs i64 products");
+        assert!(!LaneKernel::Sse2.available(Q17_15));
+        assert!(LaneKernel::Scalar.available(Q17_15));
+    }
+
+    /// Every kernel tier (including unavailable ones, which must fall back)
+    /// is bit-identical to the scalar loop on a state sweep that hits
+    /// refractory holds, spikes, saturation extremes, and masked lanes, for
+    /// every reset mode, lane count, and shipped narrow QSpec.
+    #[test]
+    fn simd_kernels_match_scalar_oracle() {
+        use crate::fixed::Q3_1;
+        let kernels = [LaneKernel::Scalar, LaneKernel::Sse2, LaneKernel::Avx2];
+        for qs in [Q3_1, Q5_3, Q9_7] {
+            for mode in [
+                ResetMode::Default,
+                ResetMode::ToZero,
+                ResetMode::BySubtraction,
+                ResetMode::ToConstant,
+            ] {
+                let snap = RegSnapshot {
+                    decay: qs.from_float(0.2),
+                    growth: qs.from_float(1.0),
+                    vth: qs.from_float(1.0),
+                    vreset: qs.from_float(-0.5),
+                    mode,
+                    refractory: 2,
+                };
+                let hold = quiescent_hold_range(&snap, qs);
+                for lanes in [1usize, 3, 4, 5, 8, 37, 64] {
+                    let (lo, hi) = (qs.min_raw(), qs.max_raw());
+                    let vmem0: Vec<i32> = (0..lanes)
+                        .map(|l| match l % 5 {
+                            0 => lo,
+                            1 => hi,
+                            2 => 0,
+                            3 => hi - (l as i32 % 7),
+                            _ => lo + (l as i32 * 3) % 17,
+                        })
+                        .collect();
+                    let refcnt0: Vec<i32> = (0..lanes).map(|l| (l as i32) % 4).collect();
+                    let act: Vec<i32> = (0..lanes)
+                        .map(|l| match l % 4 {
+                            0 => 0,
+                            1 => hi,
+                            2 => lo,
+                            _ => (l as i32 * 11) % 23 - 11,
+                        })
+                        .collect();
+                    let active = if lanes == 64 {
+                        0xF0F0_F0F0_F0F0_F0F3u64
+                    } else {
+                        ((1u64 << lanes) - 1) & 0xAAAA_AAAA_AAAA_AAAB
+                    };
+
+                    let (mut sv, mut sr) = (vmem0.clone(), refcnt0.clone());
+                    let want =
+                        step_soa_lanes(&mut sv, &mut sr, &act, active, hold, &snap, qs);
+                    for k in kernels {
+                        let (mut v, mut r) = (vmem0.clone(), refcnt0.clone());
+                        let got = step_soa_lanes_with(
+                            k, &mut v, &mut r, &act, active, hold, &snap, qs,
+                        );
+                        assert_eq!(got, want, "{k:?} {qs} {mode:?} lanes={lanes}");
+                        assert_eq!(v, sv, "{k:?} {qs} {mode:?} lanes={lanes} vmem");
+                        assert_eq!(r, sr, "{k:?} {qs} {mode:?} lanes={lanes} refcnt");
+                    }
+                    let (mut v, mut r) = (vmem0.clone(), refcnt0.clone());
+                    let got =
+                        step_soa_lanes_simd(&mut v, &mut r, &act, active, hold, &snap, qs);
+                    assert_eq!(got, want, "auto-dispatch {qs} {mode:?} lanes={lanes}");
+                    assert_eq!((v, r), (sv.clone(), sr.clone()));
+                }
+            }
+        }
+    }
+
+    /// Multi-step parity: iterate the kernels over many steps so reset
+    /// products, refractory wraps, and toggle accounting accumulate.
+    #[test]
+    fn simd_kernels_match_scalar_over_time() {
+        let qs = Q9_7;
+        let snap = RegSnapshot {
+            decay: qs.from_float(0.2),
+            growth: qs.from_float(1.0),
+            vth: qs.from_float(1.0),
+            vreset: 0,
+            mode: ResetMode::BySubtraction,
+            refractory: 3,
+        };
+        let hold = quiescent_hold_range(&snap, qs);
+        let lanes = 37usize;
+        let active = (1u64 << lanes) - 1;
+        for k in [LaneKernel::Sse2, LaneKernel::Avx2] {
+            let mut sv: Vec<i32> = (0..lanes).map(|l| (l as i32 * 97) % 256 - 128).collect();
+            let mut sr = vec![0i32; lanes];
+            let mut kv = sv.clone();
+            let mut kr = sr.clone();
+            for step in 0..220 {
+                let act: Vec<i32> =
+                    (0..lanes).map(|l| ((l + step) as i32 * 13) % 300 - 50).collect();
+                let want = step_soa_lanes(&mut sv, &mut sr, &act, active, hold, &snap, qs);
+                let got =
+                    step_soa_lanes_with(k, &mut kv, &mut kr, &act, active, hold, &snap, qs);
+                assert_eq!(got, want, "{k:?} diverged at step {step}");
+                assert_eq!(kv, sv, "{k:?} vmem diverged at step {step}");
+                assert_eq!(kr, sr, "{k:?} refcnt diverged at step {step}");
+            }
+        }
     }
 
     #[test]

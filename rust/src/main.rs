@@ -45,6 +45,7 @@ use quantisenc::experiments;
 use quantisenc::fixed::QSpec;
 use quantisenc::hwmodel::Board;
 use quantisenc::runtime::artifacts::Manifest;
+use quantisenc::util::benchcheck;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -186,8 +187,24 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         "bench-check" => {
             anyhow::ensure!(args.len() > 1, "usage: repro bench-check <BENCH_*.json>...");
+            let gates = benchcheck::Gates::from_env();
+            let mut skipped = 0usize;
             for path in &args[1..] {
-                bench_check(path)?;
+                match benchcheck::check_report(path, &gates)? {
+                    benchcheck::ReportStatus::Validated { summary, .. } => {
+                        println!("{path}: OK ({summary})");
+                    }
+                    benchcheck::ReportStatus::SkippedMissing { path } => {
+                        skipped += 1;
+                        eprintln!(
+                            "warning: {path}: bench report not found — skipped \
+                             (run `make bench-smoke` to generate it)"
+                        );
+                    }
+                }
+            }
+            if skipped > 0 {
+                eprintln!("warning: {skipped} bench report(s) skipped as missing");
             }
             Ok(())
         }
@@ -199,144 +216,6 @@ fn dispatch(args: &[String]) -> Result<()> {
     }
 }
 
-/// Validate a `BENCH_*.json` perf report (the `make bench-smoke` gate):
-/// required keys present, and the acceptance thresholds met — ≥ 5× fewer
-/// synaptic ops for the Gaussian-r1 topology report, ≥ 3× layer-step
-/// speedup at N=400 / 2% firing plus positive engine throughput for the
-/// event-driven hot-path report, ≥ 2× serving samples/s at lane width
-/// 64 vs 1 (gaussian-r1 N=400, zero pool misses) for the lane-batched
-/// report, and — for the `serving_slo` front-door report — positive
-/// throughput, zero protocol errors, zero oracle mismatches, and a p99
-/// latency under the (generous, overridable) CI bound.
-fn bench_check(path: &str) -> Result<()> {
-    use quantisenc::util::json::Json;
-    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    let json = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
-    let bench = json.req("bench")?.as_str().context("bench key must be a string")?.to_string();
-    match bench.as_str() {
-        "bench_layer/topology" => {
-            let ratio = json
-                .req("ops_ratio_fc400_over_gaussian_r1_400")?
-                .as_f64()
-                .context("ops ratio must be numeric")?;
-            anyhow::ensure!(ratio >= 5.0, "{path}: ops ratio {ratio:.1} below the 5x gate");
-            let cases = json.req("cases")?.as_arr().context("cases must be an array")?;
-            anyhow::ensure!(!cases.is_empty(), "{path}: empty cases");
-            println!("{path}: OK (topology ops ratio {ratio:.1}x over {} cases)", cases.len());
-        }
-        "hotpath" => {
-            let speedup = json
-                .req("layer_speedup_n400_2pct")?
-                .as_f64()
-                .context("layer speedup must be numeric")?;
-            // Wall-clock gate (the only timing-based one; the topology gate
-            // above is a deterministic op count). Default 3.0 per the PR-4
-            // acceptance point; BENCH_GATE_MIN_SPEEDUP overrides it for
-            // heavily contended runners where medians get noisy.
-            let min_speedup = std::env::var("BENCH_GATE_MIN_SPEEDUP")
-                .ok()
-                .and_then(|v| v.parse::<f64>().ok())
-                .unwrap_or(3.0);
-            anyhow::ensure!(
-                speedup >= min_speedup,
-                "{path}: packed layer-step speedup {speedup:.2}x below the \
-                 {min_speedup}x gate (N=400, 2% firing, gaussian r1)"
-            );
-            let cases = json.req("layer_cases")?.as_arr().context("layer_cases array")?;
-            anyhow::ensure!(!cases.is_empty(), "{path}: empty layer_cases");
-            let engine = json.req("engine")?;
-            let seq = engine
-                .req("sequential_samples_per_s")?
-                .as_f64()
-                .context("sequential_samples_per_s numeric")?;
-            let by_cores = engine.req("by_cores")?.as_arr().context("by_cores array")?;
-            anyhow::ensure!(
-                seq > 0.0 && !by_cores.is_empty(),
-                "{path}: missing engine throughput section"
-            );
-            for c in by_cores {
-                let sps = c.req("samples_per_s")?.as_f64().context("samples_per_s numeric")?;
-                anyhow::ensure!(sps > 0.0, "{path}: non-positive engine throughput");
-            }
-            println!(
-                "{path}: OK (layer speedup {speedup:.1}x, engine throughput for {} core counts)",
-                by_cores.len()
-            );
-        }
-        "batched" => {
-            let speedup = json
-                .req("speedup_lane64_over_lane1")?
-                .as_f64()
-                .context("batched speedup must be numeric")?;
-            // Wall-clock gate on the lane-batched serving path: lane width
-            // 64 must serve ≥ 2× the samples/s of lane width 1 on the
-            // gaussian-r1 N=400 case. BENCH_GATE_MIN_BATCH_SPEEDUP
-            // overrides it for heavily contended runners.
-            let min_speedup = std::env::var("BENCH_GATE_MIN_BATCH_SPEEDUP")
-                .ok()
-                .and_then(|v| v.parse::<f64>().ok())
-                .unwrap_or(2.0);
-            anyhow::ensure!(
-                speedup >= min_speedup,
-                "{path}: lane-64 serving speedup {speedup:.2}x below the \
-                 {min_speedup}x gate (gaussian r1, N=400)"
-            );
-            let misses = json
-                .req("matrix_pool_misses")?
-                .as_f64()
-                .context("matrix_pool_misses numeric")?;
-            anyhow::ensure!(
-                misses == 0.0,
-                "{path}: lane-batched streaming allocated {misses} matrices (pool must not miss)"
-            );
-            let lanes = json.req("by_lane_width")?.as_arr().context("by_lane_width array")?;
-            anyhow::ensure!(!lanes.is_empty(), "{path}: empty by_lane_width");
-            for c in lanes {
-                let sps = c.req("samples_per_s")?.as_f64().context("samples_per_s numeric")?;
-                anyhow::ensure!(sps > 0.0, "{path}: non-positive batched throughput");
-            }
-            println!(
-                "{path}: OK (lane-64 serving speedup {speedup:.1}x over {} lane widths, \
-                 zero pool misses)",
-                lanes.len()
-            );
-        }
-        "serving_slo" => {
-            let ok = json.req("results_ok")?.as_f64().context("results_ok numeric")?;
-            anyhow::ensure!(ok > 0.0, "{path}: no results served");
-            let sps = json.req("samples_per_sec")?.as_f64().context("samples_per_sec numeric")?;
-            anyhow::ensure!(sps > 0.0, "{path}: non-positive serving throughput");
-            let p99 = json.req("p99_us")?.as_f64().context("p99_us numeric")?;
-            // A deliberately generous CI bound: the gate exists to catch a
-            // wedged pump or a pathological regression (seconds-scale
-            // tails), not to benchmark shared runners.
-            // BENCH_GATE_MAX_P99_US overrides it.
-            let max_p99 = std::env::var("BENCH_GATE_MAX_P99_US")
-                .ok()
-                .and_then(|v| v.parse::<f64>().ok())
-                .unwrap_or(2_000_000.0);
-            anyhow::ensure!(
-                p99 > 0.0 && p99 <= max_p99,
-                "{path}: p99 latency {p99:.0}us outside (0, {max_p99:.0}]us"
-            );
-            let perr = json.req("protocol_errors")?.as_f64().context("protocol_errors numeric")?;
-            anyhow::ensure!(perr == 0.0, "{path}: {perr} protocol errors on the wire");
-            let mism =
-                json.req("result_mismatches")?.as_f64().context("result_mismatches numeric")?;
-            anyhow::ensure!(mism == 0.0, "{path}: {mism} results diverged from the oracle");
-            let rr = json.req("reject_rate")?.as_f64().context("reject_rate numeric")?;
-            anyhow::ensure!((0.0..=1.0).contains(&rr), "{path}: reject_rate {rr} out of range");
-            println!(
-                "{path}: OK ({ok:.0} results at {sps:.1}/s, p50/p99 {:.0}/{p99:.0}us, \
-                 reject rate {:.1}%)",
-                json.req("p50_us")?.as_f64().unwrap_or(0.0),
-                100.0 * rr,
-            );
-        }
-        other => anyhow::bail!("{path}: unknown bench report kind {other:?}"),
-    }
-    Ok(())
-}
 
 const HELP: &str = "repro — QUANTISENC reproduction CLI
   artifacts       (re)generate the native artifact store (no Python needed)

@@ -1,6 +1,7 @@
 //! Small self-contained utilities (no external deps are available offline).
 
 pub mod bench;
+pub mod benchcheck;
 pub mod json;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,178 @@
+//! Regression tests for the `repro bench-check` library
+//! ([`quantisenc::util::benchcheck`]): a missing report file must be the
+//! typed skip-with-warning (not an error), every recognized report kind
+//! must validate on a well-formed synthetic body, each acceptance gate
+//! must fail closed with the offending path and value in the message,
+//! and the SIMD lane-step gate must be enforced for real vector kernels
+//! while the scalar fallback keeps non-x86 hosts green.
+//!
+//! Gates are passed explicitly ([`Gates`] values, not `BENCH_GATE_*`
+//! environment variables) so the suite stays deterministic under the
+//! parallel test harness.
+
+use quantisenc::util::benchcheck::{check_report, check_report_str, Gates, ReportStatus};
+
+fn topology_report(ratio: f64) -> String {
+    format!(
+        r#"{{"bench":"bench_layer/topology",
+            "ops_ratio_fc400_over_gaussian_r1_400":{ratio},
+            "cases":[{{"name":"fc_400"}},{{"name":"gaussian_r1_400"}}]}}"#
+    )
+}
+
+fn hotpath_report(layer_speedup: f64, kernel: &str, simd_speedup: f64) -> String {
+    format!(
+        r#"{{"bench":"hotpath",
+            "layer_speedup_n400_2pct":{layer_speedup},
+            "layer_cases":[{{"name":"gaussian_r1_400_firing_2pct"}}],
+            "simd_kernel":"{kernel}",
+            "simd_speedup_lane_step":{simd_speedup},
+            "simd_cases":[{{"name":"one_to_one_400_firing_35pct",
+                            "kernel":"{kernel}","speedup":{simd_speedup}}}],
+            "engine":{{"sequential_samples_per_s":120.5,
+                       "by_cores":[{{"cores":2,"samples_per_s":200.0}}]}}}}"#
+    )
+}
+
+fn batched_report(speedup: f64, misses: f64) -> String {
+    format!(
+        r#"{{"bench":"batched",
+            "speedup_lane64_over_lane1":{speedup},
+            "matrix_pool_misses":{misses},
+            "by_lane_width":[{{"lanes":1,"samples_per_s":50.0}},
+                             {{"lanes":64,"samples_per_s":160.0}}]}}"#
+    )
+}
+
+fn serving_slo_report(p99_us: f64, protocol_errors: f64, reject_rate: f64) -> String {
+    format!(
+        r#"{{"bench":"serving_slo",
+            "results_ok":48,"samples_per_sec":310.0,
+            "p50_us":800.0,"p99_us":{p99_us},
+            "protocol_errors":{protocol_errors},
+            "result_mismatches":0,
+            "reject_rate":{reject_rate}}}"#
+    )
+}
+
+fn kind_of(status: &ReportStatus) -> &str {
+    match status {
+        ReportStatus::Validated { kind, .. } => kind,
+        ReportStatus::SkippedMissing { .. } => "skipped",
+    }
+}
+
+#[test]
+fn missing_report_is_a_typed_skip_not_an_error() {
+    let path = std::env::temp_dir().join(format!("BENCH_nope_{}.json", std::process::id()));
+    let path = path.to_str().unwrap();
+    match check_report(path, &Gates::default()) {
+        Ok(ReportStatus::SkippedMissing { path: p }) => assert_eq!(p, path),
+        other => panic!("missing file must be SkippedMissing, got {other:?}"),
+    }
+}
+
+#[test]
+fn existing_report_files_validate_through_the_fs_path() {
+    let path = std::env::temp_dir().join(format!("BENCH_ok_{}.json", std::process::id()));
+    std::fs::write(&path, topology_report(9.4)).unwrap();
+    let status = check_report(path.to_str().unwrap(), &Gates::default()).unwrap();
+    assert_eq!(kind_of(&status), "bench_layer/topology");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn every_report_kind_validates_on_a_well_formed_body() {
+    let gates = Gates::default();
+    let bodies = [
+        topology_report(9.4),
+        hotpath_report(4.2, "avx2", 2.6),
+        batched_report(3.1, 0.0),
+        serving_slo_report(1500.0, 0.0, 0.125),
+    ];
+    let kinds = ["bench_layer/topology", "hotpath", "batched", "serving_slo"];
+    for (body, want) in bodies.iter().zip(kinds) {
+        match check_report_str("synthetic.json", body, &gates).unwrap() {
+            ReportStatus::Validated { kind, summary } => {
+                assert_eq!(kind, want);
+                assert!(!summary.is_empty(), "{want}: empty summary");
+            }
+            other => panic!("{want}: expected Validated, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn simd_gate_is_enforced_for_vector_kernels() {
+    let gates = Gates::default();
+    for kernel in ["sse2", "avx2"] {
+        let err = check_report_str("hp.json", &hotpath_report(4.2, kernel, 1.2), &gates)
+            .expect_err("1.2x on a vector kernel must fail the 1.5x gate");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("SIMD gate"), "message must name the gate: {msg}");
+        assert!(msg.contains("hp.json"), "message must name the path: {msg}");
+        assert!(msg.contains(kernel), "message must name the kernel: {msg}");
+        assert!(
+            check_report_str("hp.json", &hotpath_report(4.2, kernel, 1.5), &gates).is_ok(),
+            "{kernel}: exactly 1.5x must pass the inclusive gate"
+        );
+    }
+}
+
+#[test]
+fn scalar_fallback_keeps_the_simd_gate_green() {
+    // On hosts where `LaneKernel::auto` resolves to the scalar fallback
+    // the twins run the same kernel: a ~1.0x ratio must validate without
+    // any BENCH_GATE override, but a non-positive ratio is still nonsense.
+    let gates = Gates::default();
+    let ok = check_report_str("hp.json", &hotpath_report(4.2, "scalar", 0.97), &gates);
+    assert!(ok.is_ok(), "scalar fallback below 1.5x must pass: {ok:?}");
+    assert!(check_report_str("hp.json", &hotpath_report(4.2, "scalar", 0.0), &gates).is_err());
+}
+
+#[test]
+fn explicit_gates_relax_thresholds_like_the_env_overrides() {
+    let relaxed = Gates { min_simd_speedup: 1.1, min_batch_speedup: 1.2, ..Gates::default() };
+    assert!(check_report_str("hp.json", &hotpath_report(4.2, "avx2", 1.2), &relaxed).is_ok());
+    assert!(check_report_str("b.json", &batched_report(1.3, 0.0), &relaxed).is_ok());
+    let strict = Gates { min_speedup: 5.0, ..Gates::default() };
+    assert!(check_report_str("hp.json", &hotpath_report(4.2, "avx2", 2.6), &strict).is_err());
+}
+
+#[test]
+fn gate_failures_name_the_path_and_the_value() {
+    let gates = Gates::default();
+    let err = check_report_str("BENCH_t.json", &topology_report(3.9), &gates).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("BENCH_t.json") && msg.contains("3.9"), "{msg}");
+
+    let err = check_report_str("BENCH_b.json", &batched_report(1.4, 0.0), &gates).unwrap_err();
+    assert!(format!("{err:#}").contains("1.40x"), "{err:#}");
+    let err = check_report_str("BENCH_b.json", &batched_report(3.0, 2.0), &gates).unwrap_err();
+    assert!(format!("{err:#}").contains("pool"), "{err:#}");
+
+    let err =
+        check_report_str("BENCH_s.json", &serving_slo_report(9e9, 0.0, 0.0), &gates).unwrap_err();
+    assert!(format!("{err:#}").contains("p99"), "{err:#}");
+    let err =
+        check_report_str("BENCH_s.json", &serving_slo_report(1e3, 2.0, 0.0), &gates).unwrap_err();
+    assert!(format!("{err:#}").contains("protocol errors"), "{err:#}");
+    let err =
+        check_report_str("BENCH_s.json", &serving_slo_report(1e3, 0.0, 1.5), &gates).unwrap_err();
+    assert!(format!("{err:#}").contains("reject_rate"), "{err:#}");
+}
+
+#[test]
+fn malformed_unknown_and_incomplete_reports_are_errors() {
+    let gates = Gates::default();
+    assert!(check_report_str("x.json", "{not json", &gates).is_err());
+    assert!(check_report_str("x.json", r#"{"bench":"mystery"}"#, &gates).is_err());
+    assert!(check_report_str("x.json", r#"{"layer_speedup_n400_2pct":4.0}"#, &gates).is_err());
+    // A hotpath report predating the SIMD section must fail loudly rather
+    // than silently passing without the gate.
+    let legacy = r#"{"bench":"hotpath","layer_speedup_n400_2pct":4.2,
+        "layer_cases":[{"name":"x"}],
+        "engine":{"sequential_samples_per_s":1.0,"by_cores":[{"samples_per_s":1.0}]}}"#;
+    let err = check_report_str("legacy.json", legacy, &gates).unwrap_err();
+    assert!(format!("{err:#}").contains("simd_kernel"), "{err:#}");
+}

@@ -1,0 +1,93 @@
+//! Shared fixtures for the integration suites: the fixed-point saturation
+//! **corner corpus** — explicit neuron-state and register vectors at the
+//! edges of each shipped QSpec — seeded by the satellite property tests in
+//! `property_invariants.rs` and reused verbatim by the SIMD differential
+//! suite in `simd_parity.rs`, so every boundary the scalar oracle is
+//! checked against is also re-proved under the vector masks.
+//!
+//! Compiled once per including test crate via `mod common;`; suites that
+//! use only part of the API keep the rest without dead-code noise.
+#![allow(dead_code)]
+
+use quantisenc::config::registers::{RegisterFile, ResetMode};
+use quantisenc::fixed::QSpec;
+use quantisenc::hdl::neuron::RegSnapshot;
+
+/// One saturation-boundary neuron state: architectural registers plus the
+/// accumulated activation fed into the step.
+#[derive(Debug, Clone, Copy)]
+pub struct CornerState {
+    pub name: &'static str,
+    pub vmem: i32,
+    pub refcnt: i32,
+    pub act: i32,
+}
+
+/// Explicit neuron-state corner vectors for `qs`: vmem pinned at the raw
+/// representable extremes (±(2^(n+q-1) − 1) and one ulp inside), at the
+/// ±1.0 fixed-point units where in range, at zero rest, and under active
+/// refractory counts — each crossed with activations at 0 and both raw
+/// extremes so the wrapping multiply/add in VmemDyn is exercised exactly
+/// where it overflows the W-bit window.
+pub fn corner_states(qs: QSpec) -> Vec<CornerState> {
+    let hi = qs.max_raw();
+    let lo = qs.min_raw();
+    let one = (1i64 << qs.q()) as i32; // +1.0, in range whenever n >= 2
+    let mut cases = vec![
+        CornerState { name: "rest", vmem: 0, refcnt: 0, act: 0 },
+        CornerState { name: "vmem=+max", vmem: hi, refcnt: 0, act: 0 },
+        CornerState { name: "vmem=+max-ulp", vmem: hi - 1, refcnt: 0, act: 0 },
+        CornerState { name: "vmem=-max", vmem: lo, refcnt: 0, act: 0 },
+        CornerState { name: "vmem=-max+ulp", vmem: lo + 1, refcnt: 0, act: 0 },
+        CornerState { name: "vmem=+max act=+max", vmem: hi, refcnt: 0, act: hi },
+        CornerState { name: "vmem=+max act=-max", vmem: hi, refcnt: 0, act: lo },
+        CornerState { name: "vmem=-max act=-max", vmem: lo, refcnt: 0, act: lo },
+        CornerState { name: "vmem=-max act=+max", vmem: lo, refcnt: 0, act: hi },
+        CornerState { name: "refractory hold at +max", vmem: hi, refcnt: 1, act: hi },
+        CornerState { name: "refractory hold at -max", vmem: lo, refcnt: 2, act: hi },
+        CornerState { name: "deep refractory count", vmem: hi - 1, refcnt: 250, act: lo },
+    ];
+    if hi >= one {
+        cases.push(CornerState { name: "vmem=+1.0", vmem: one, refcnt: 0, act: 0 });
+        cases.push(CornerState { name: "vmem=-1.0", vmem: -one, refcnt: 0, act: hi });
+    }
+    cases
+}
+
+/// Register corner configurations for `qs`, each tagged for assertion
+/// messages: the default file under every reset mode, thresholds pinned at
+/// both raw extremes (a comparator corner: `vth = min_raw` makes *every*
+/// update spike, `vth = max_raw` almost none), zero decay (the exact-hold
+/// configuration behind the quiescence fast path), and refractory periods
+/// long enough to roll a lane through arm → hold → release inside one
+/// sweep. All values are in the QSpec's W-bit range by construction, the
+/// same contract [`RegisterFile`] enforces on writes.
+pub fn corner_reg_sets(qs: QSpec) -> Vec<(String, RegSnapshot)> {
+    let base = RegSnapshot::from(&RegisterFile::new(qs));
+    let hi = qs.max_raw();
+    let lo = qs.min_raw();
+    let mut sets = Vec::new();
+    for mode in ResetMode::all() {
+        let m = RegSnapshot { mode, ..base };
+        sets.push((format!("{qs} {mode:?} default"), m));
+        sets.push((format!("{qs} {mode:?} vth=+max"), RegSnapshot { vth: hi, ..m }));
+        sets.push((format!("{qs} {mode:?} vth=-max"), RegSnapshot { vth: lo, ..m }));
+        sets.push((
+            format!("{qs} {mode:?} zero-decay"),
+            RegSnapshot { decay: 0, vth: hi, refractory: 1, ..m },
+        ));
+        sets.push((
+            format!("{qs} {mode:?} refractory-wrap"),
+            RegSnapshot { refractory: 3, vth: 1.max(hi >> 2), vreset: lo / 2, ..m },
+        ));
+        sets.push((
+            format!("{qs} {mode:?} max-drive"),
+            RegSnapshot { decay: hi, growth: hi, vth: hi, vreset: lo, refractory: 2, ..m },
+        ));
+        sets.push((
+            format!("{qs} {mode:?} negative-growth"),
+            RegSnapshot { growth: lo, vth: lo / 2, ..m },
+        ));
+    }
+    sets
+}

@@ -53,9 +53,11 @@ fn spike_samples(n: usize) -> Vec<Sample> {
         .collect()
 }
 
-fn assert_results_equal(a: &[quantisenc::coordinator::pipeline::StreamResult],
-                        b: &[quantisenc::coordinator::pipeline::StreamResult],
-                        ctx: &str) {
+fn assert_results_equal(
+    a: &[quantisenc::coordinator::pipeline::StreamResult],
+    b: &[quantisenc::coordinator::pipeline::StreamResult],
+    ctx: &str,
+) {
     assert_eq!(a.len(), b.len(), "{ctx}: result count");
     for (x, y) in a.iter().zip(b) {
         assert_eq!(x.stream_id, y.stream_id, "{ctx}");
@@ -73,16 +75,14 @@ fn assert_results_equal(a: &[quantisenc::coordinator::pipeline::StreamResult],
 /// snapshot must survive happens *after* the restore point.
 #[test]
 fn interrupted_run_is_bit_identical_to_uninterrupted() {
-    let topologies =
-        [Topology::AllToAll, Topology::OneToOne, Topology::Gaussian { radius: 2 }];
+    let topologies = [Topology::AllToAll, Topology::OneToOne, Topology::Gaussian { radius: 2 }];
     let samples = spike_samples(8);
     for topo in topologies {
         for lanes in [1usize, 64] {
             let ctx = format!("{topo:?} lanes={lanes}");
             let (cfg, weights, regs) = model_for(topo);
             let options = ServingOptions::with_lanes(2, lanes);
-            let mut uninterrupted =
-                ServingEngine::new(&cfg, &weights, &regs, options).unwrap();
+            let mut uninterrupted = ServingEngine::new(&cfg, &weights, &regs, options).unwrap();
             let mut donor = ServingEngine::new(&cfg, &weights, &regs, options).unwrap();
 
             let first: Vec<SessionOp> = samples[..4].iter().map(SessionOp::Submit).collect();

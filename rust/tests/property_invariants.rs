@@ -3,7 +3,10 @@
 //! each property runs across many randomized cases with printed seeds so
 //! failures are reproducible).
 
+mod common;
+
 use quantisenc::config::registers::{RegisterFile, ResetMode, NUM_REGS, REG_REFRACTORY, REG_RESET_MODE};
+use quantisenc::hdl::neuron::{step_soa, RegSnapshot};
 use quantisenc::config::{ModelConfig, Topology};
 use quantisenc::coordinator::multicore::MultiCore;
 use quantisenc::coordinator::pipeline::run_pipelined;
@@ -531,6 +534,140 @@ fn prop_spike_matrix_transpose_roundtrip() {
             0,
             "case {case}: bits beyond lane {lanes}"
         );
+    }
+}
+
+/// The documented LIF step semantics (DESIGN.md §2: refractory hold, then
+/// Eq. 3 VmemDyn, Eq. 7 reset mux, refractory arm), restated from the
+/// public [`QSpec`] primitives — the specification `step_soa` is pinned to
+/// at every saturation corner below.
+fn spec_step(qs: QSpec, regs: &RegSnapshot, vmem: i32, refcnt: i32, act: i32) -> (i32, i32, bool) {
+    if refcnt > 0 {
+        return (vmem, refcnt - 1, false);
+    }
+    let v_new = qs.add(qs.sub(vmem, qs.mul(regs.decay, vmem)), qs.mul(regs.growth, act));
+    let spike = v_new >= regs.vth;
+    let v = if spike {
+        match regs.mode {
+            ResetMode::Default => qs.sub(v_new, qs.mul(regs.decay, v_new)),
+            ResetMode::ToZero => 0,
+            ResetMode::BySubtraction => qs.sub(v_new, regs.vth),
+            ResetMode::ToConstant => regs.vreset,
+        }
+    } else {
+        v_new
+    };
+    (v, if spike { regs.refractory } else { refcnt }, spike)
+}
+
+/// `neuron::step_soa` pinned to the documented step semantics at every
+/// saturation boundary of the three shipped QSpecs — vmem at ±max and one
+/// ulp inside, activations at both raw extremes, thresholds at both
+/// extremes, zero decay, refractory corners — plus seeded perturbations
+/// within ±2 ulps of each corner. This corner corpus (`tests/common`) is
+/// the exact set the SIMD differential suite replays through the vector
+/// kernels.
+#[test]
+fn prop_step_soa_saturation_corners() {
+    let mut rng = XorShift64Star::new(0x5EED_20);
+    for qs in [Q9_7, Q5_3, Q3_1] {
+        for (tag, regs) in common::corner_reg_sets(qs) {
+            for corner in common::corner_states(qs) {
+                let mut starts = vec![(corner.vmem, corner.act)];
+                for _ in 0..4 {
+                    let dv = (rng.below(5) as i64) - 2;
+                    let da = (rng.below(5) as i64) - 2;
+                    starts.push((
+                        qs.wrap(corner.vmem as i64 + dv),
+                        qs.wrap(corner.act as i64 + da),
+                    ));
+                }
+                for (v0, act) in starts {
+                    let (mut v, mut r) = (v0, corner.refcnt);
+                    let out = step_soa(&mut v, &mut r, act, &regs, qs);
+                    let (want_v, want_r, want_spike) = spec_step(qs, &regs, v0, corner.refcnt, act);
+                    let ctx = format!("{tag} / {} v0={v0} act={act}", corner.name);
+                    assert_eq!(v, want_v, "{ctx}: vmem");
+                    assert_eq!(r, want_r, "{ctx}: refcnt");
+                    assert_eq!(out.spike, want_spike, "{ctx}: spike");
+                    assert_eq!(out.vmem_toggled, v != v0, "{ctx}: toggle flag");
+                    assert!(qs.in_range(v), "{ctx}: vmem {v} left the Qn.q range");
+                    assert!(r >= 0, "{ctx}: refcnt went negative");
+                }
+            }
+        }
+    }
+}
+
+/// Zero decay with silent input is an *exact* hold: from any
+/// sub-threshold corner state, vmem is bit-frozen across 220 steps with no
+/// spikes and no register toggles — the invariant both the layer's
+/// quiescence fast path and the SIMD kernels' full-datapath no-op proof
+/// rest on.
+#[test]
+fn prop_step_soa_zero_decay_holds_exactly() {
+    for qs in [Q9_7, Q5_3, Q3_1] {
+        let regs = RegSnapshot {
+            decay: 0,
+            vth: qs.max_raw(),
+            ..RegSnapshot::from(&RegisterFile::new(qs))
+        };
+        for corner in common::corner_states(qs) {
+            if corner.vmem >= regs.vth || corner.refcnt > 0 {
+                continue;
+            }
+            let (mut v, mut r) = (corner.vmem, 0);
+            for step in 0..220 {
+                let out = step_soa(&mut v, &mut r, 0, &regs, qs);
+                assert!(
+                    !out.spike && !out.vmem_toggled,
+                    "{qs} {} step {step}: zero-decay hold emitted activity",
+                    corner.name
+                );
+                assert_eq!(v, corner.vmem, "{qs} {} step {step}: hold broke", corner.name);
+            }
+        }
+    }
+}
+
+/// Refractory arming and countdown: with `vth = min_raw` every
+/// non-refractory update spikes, so the spike train must have exact period
+/// `refractory + 1` — spike (re-arming the counter), `refractory` hold
+/// steps with vmem frozen and the counter stepping down by exactly one,
+/// release, spike again — for every reset mode, including a 250-cycle
+/// period that rolls the counter far beyond any sweep in the SIMD suite.
+#[test]
+fn prop_step_soa_refcnt_rollover_period() {
+    for qs in [Q9_7, Q5_3, Q3_1] {
+        for refractory in [1i32, 3, 250] {
+            for mode in ResetMode::all() {
+                let regs = RegSnapshot {
+                    vth: qs.min_raw(),
+                    refractory,
+                    mode,
+                    ..RegSnapshot::from(&RegisterFile::new(qs))
+                };
+                let (mut v, mut r) = (0i32, 0i32);
+                let period = refractory as usize + 1;
+                for step in 0..3 * period {
+                    let held = v;
+                    let out = step_soa(&mut v, &mut r, 1, &regs, qs);
+                    let ctx = format!("{qs} {mode:?} refractory={refractory} step {step}");
+                    if step % period == 0 {
+                        assert!(out.spike, "{ctx}: release step must spike");
+                        assert_eq!(r, refractory, "{ctx}: counter must re-arm");
+                    } else {
+                        assert!(!out.spike, "{ctx}: hold step spiked");
+                        assert_eq!(v, held, "{ctx}: vmem moved during hold");
+                        assert_eq!(
+                            r,
+                            refractory - (step % period) as i32,
+                            "{ctx}: countdown must step by exactly one"
+                        );
+                    }
+                }
+            }
+        }
     }
 }
 

@@ -1,0 +1,278 @@
+//! SIMD-vs-scalar differential suite — the conformance gate behind
+//! `neuron::step_soa_lanes_simd` and the layer's vector lane kernels.
+//!
+//! The scalar per-lane loop (`step_soa_lanes`) is the always-available
+//! oracle; every vector tier (SSE2, AVX2) and the runtime dispatcher must
+//! be **bit-identical** to it — lane state banks, spike words, toggle
+//! words, spike-count ledgers, and activity ledgers — across:
+//!
+//! * the saturation corner corpus (`tests/common`): vmem at ±max and one
+//!   ulp inside, thresholds at both raw extremes, zero decay, refractory
+//!   wrap — the vectors whose scalar behaviour the quiescence proofs
+//!   already pin down and the vector masks must re-prove;
+//! * full cores over AllToAll / OneToOne / Gaussian{2} topologies ×
+//!   Q9.7 / Q5.3 / Q3.1 × 220-step streams at 0 / 2 / 35 / 90 % input
+//!   firing × lane widths 1 / 37 / 64.
+//!
+//! On non-x86 targets (and wherever AVX2 is absent) the pinned vector
+//! kernels fall back to the scalar loop inside `step_soa_lanes_with`, so
+//! this suite degenerates to scalar-vs-scalar and stays green everywhere.
+
+mod common;
+
+use quantisenc::config::registers::{RegisterFile, ResetMode};
+use quantisenc::config::{ModelConfig, Topology};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::Sample;
+use quantisenc::fixed::{QSpec, Q3_1, Q5_3, Q9_7};
+use quantisenc::hdl::neuron::{
+    quiescent_hold_range, step_soa_lanes, step_soa_lanes_simd, step_soa_lanes_with, LaneKernel,
+};
+use quantisenc::hdl::{Core, SpikeMatrix};
+
+/// Every vector kernel (and the auto dispatcher) against the scalar oracle
+/// on 64-lane state banks tiled from the saturation corner corpus: 220
+/// steps per register corner, active masks cycling through full / sparse /
+/// alternating / random patterns, activations cycling through silence,
+/// corpus extremes, and random in-range values. State, spike words, and
+/// toggle words must agree bit-for-bit after every step.
+#[test]
+fn kernels_match_scalar_on_corner_corpus() {
+    let mut rng = XorShift64Star::new(0x51D_C0DE);
+    for qs in [Q9_7, Q5_3, Q3_1] {
+        for (tag, regs) in common::corner_reg_sets(qs) {
+            let corners = common::corner_states(qs);
+            let hold = quiescent_hold_range(&regs, qs);
+            let lanes = 64usize;
+            let mut vmem0 = vec![0i32; lanes];
+            let mut ref0 = vec![0i32; lanes];
+            let mut act0 = vec![0i32; lanes];
+            for l in 0..lanes {
+                let c = corners[l % corners.len()];
+                vmem0[l] = c.vmem;
+                ref0[l] = c.refcnt;
+                act0[l] = c.act;
+            }
+            let mut oracle = (vmem0.clone(), ref0.clone());
+            let mut twins: Vec<(&str, Vec<i32>, Vec<i32>)> = vec![
+                ("sse2", vmem0.clone(), ref0.clone()),
+                ("avx2", vmem0.clone(), ref0.clone()),
+                ("auto", vmem0, ref0),
+            ];
+            let mut act = act0.clone();
+            for step in 0..220 {
+                let active = match step % 4 {
+                    0 => u64::MAX,
+                    1 => 0xF0F0_F0F0_F0F0_F0F3,
+                    2 => 0xAAAA_AAAA_AAAA_AAAB,
+                    _ => rng.next_u64() | 1,
+                };
+                let want =
+                    step_soa_lanes(&mut oracle.0, &mut oracle.1, &act, active, hold, &regs, qs);
+                for (name, vm, rc) in twins.iter_mut() {
+                    let got = match *name {
+                        "sse2" => step_soa_lanes_with(
+                            LaneKernel::Sse2,
+                            vm,
+                            rc,
+                            &act,
+                            active,
+                            hold,
+                            &regs,
+                            qs,
+                        ),
+                        "avx2" => step_soa_lanes_with(
+                            LaneKernel::Avx2,
+                            vm,
+                            rc,
+                            &act,
+                            active,
+                            hold,
+                            &regs,
+                            qs,
+                        ),
+                        _ => step_soa_lanes_simd(vm, rc, &act, active, hold, &regs, qs),
+                    };
+                    assert_eq!(got, want, "{tag} step {step} {name}: spike/toggle words");
+                    assert_eq!(vm, &oracle.0, "{tag} step {step} {name}: vmem bank");
+                    assert_eq!(rc, &oracle.1, "{tag} step {step} {name}: refcnt bank");
+                }
+                for (l, a) in act.iter_mut().enumerate() {
+                    *a = match step % 3 {
+                        0 => 0,
+                        1 => act0[(l + step) % lanes],
+                        // Wrapped to W bits, exactly like the layer's
+                        // ActGen before the neuron sweep.
+                        _ => qs.wrap(rng.next_u64() as i64),
+                    };
+                }
+            }
+        }
+    }
+}
+
+fn masked_weights(cfg: &ModelConfig, rng: &mut XorShift64Star) -> Vec<Vec<i32>> {
+    cfg.layers()
+        .iter()
+        .map(|l| {
+            let lim = cfg.qspec.max_raw().min(127) as u64;
+            let mask = l.topology.mask(l.fan_in, l.neurons).unwrap();
+            mask.iter()
+                .map(|&a| if a == 0 { 0 } else { (rng.below(2 * lim + 1) as i32) - lim as i32 })
+                .collect()
+        })
+        .collect()
+}
+
+/// The headline matrix: pinned-SIMD cores against the pinned-scalar twin
+/// over AllToAll / OneToOne / Gaussian{2} × Q9.7 / Q5.3 / Q3.1 × ~220-step
+/// ragged streams at 0 / 2 / 35 / 90 % firing × lanes 1 / 37 / 64 — spike
+/// counts, per-layer spike ledgers, activity ledgers, predictions, and the
+/// final per-layer lane state banks must all be bit-identical. The `None`
+/// twin additionally runs the firing-rate-aware kernel policy, whose
+/// scalar/vector choice must be invisible in the results.
+#[test]
+fn simd_core_twins_match_scalar_across_matrix() {
+    let mut rng = XorShift64Star::new(0x51D_C1);
+    let topologies: [(&str, Vec<usize>, Vec<Topology>); 3] = [
+        ("all-to-all", vec![16, 12, 10], vec![Topology::AllToAll, Topology::AllToAll]),
+        ("one-to-one", vec![20, 20], vec![Topology::OneToOne]),
+        ("gaussian-r2", vec![24, 24], vec![Topology::Gaussian { radius: 2 }]),
+    ];
+    for (topo_name, sizes, topos) in &topologies {
+        for qs in [Q9_7, Q5_3, Q3_1] {
+            let cfg = ModelConfig::with_topologies(sizes, topos, qs).unwrap();
+            let weights = masked_weights(&cfg, &mut rng);
+            for (di, density) in [0.0f64, 0.02, 0.35, 0.90].into_iter().enumerate() {
+                let mut regs = RegisterFile::new(qs);
+                regs.set_reset_mode(ResetMode::all()[di % 4]).unwrap();
+                regs.set_refractory((di % 3) as i32).unwrap();
+                for lanes in [1usize, 37, 64] {
+                    let samples: Vec<Sample> = (0..lanes)
+                        .map(|l| {
+                            let t_steps = 220 - (l % 7);
+                            let spikes = (0..t_steps * cfg.inputs())
+                                .map(|_| (rng.uniform() < density) as u8)
+                                .collect();
+                            Sample { spikes, t_steps, inputs: cfg.inputs(), label: 0 }
+                        })
+                        .collect();
+                    let mut oracle = Core::new(cfg.clone());
+                    oracle.load_weights(&weights).unwrap();
+                    oracle.registers = regs.clone();
+                    oracle.set_lane_kernel(Some(LaneKernel::Scalar));
+                    let want = oracle.run_lanes(&samples);
+                    for kernel in [Some(LaneKernel::Sse2), Some(LaneKernel::Avx2), None] {
+                        let mut twin = Core::new(cfg.clone());
+                        twin.load_weights(&weights).unwrap();
+                        twin.registers = regs.clone();
+                        twin.set_lane_kernel(kernel);
+                        let got = twin.run_lanes(&samples);
+                        let ctx = format!(
+                            "{topo_name} {qs} density {density} lanes {lanes} kernel {kernel:?}"
+                        );
+                        assert_eq!(got.len(), want.len(), "{ctx}");
+                        for (l, (g, w)) in got.iter().zip(&want).enumerate() {
+                            assert_eq!(g.counts, w.counts, "{ctx} lane {l}: spike counts");
+                            assert_eq!(
+                                g.layer_spikes, w.layer_spikes,
+                                "{ctx} lane {l}: per-layer spike ledger"
+                            );
+                            assert_eq!(g.stats, w.stats, "{ctx} lane {l}: activity ledger");
+                            assert_eq!(g.prediction, w.prediction, "{ctx} lane {l}: prediction");
+                        }
+                        for (k, (a, b)) in
+                            oracle.layers().iter().zip(twin.layers()).enumerate()
+                        {
+                            assert_eq!(
+                                a.lane_state(),
+                                b.lane_state(),
+                                "{ctx} layer {k}: final lane vmem/refcnt bank"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Saturation-boundary vectors driven through the full core lane datapath:
+/// corner vmem/refcnt banks are injected into every layer of pinned twins
+/// via `restore_lanes`, then 60 input matrices (dense, silent, and
+/// ragged-masked) are stepped through `Core::step_lanes` — output spike
+/// matrices and every layer's lane banks must stay bit-identical while the
+/// injected extremes decay, spike, reset, and wrap through refractory.
+#[test]
+fn injected_saturation_banks_step_identically() {
+    let mut rng = XorShift64Star::new(0x51D_C2);
+    let lanes = 64usize;
+    for qs in [Q9_7, Q5_3, Q3_1] {
+        let cfg = ModelConfig::with_topologies(&[14, 11, 10], &[Topology::AllToAll; 2], qs)
+            .unwrap();
+        let weights = masked_weights(&cfg, &mut rng);
+        let corners = common::corner_states(qs);
+        let mut regs = RegisterFile::new(qs);
+        regs.set_refractory(3).unwrap();
+        regs.set_reset_mode(ResetMode::ToConstant).unwrap();
+        for kernel in [LaneKernel::Sse2, LaneKernel::Avx2] {
+            let mut oracle = Core::new(cfg.clone());
+            let mut twin = Core::new(cfg.clone());
+            for core in [&mut oracle, &mut twin] {
+                core.load_weights(&weights).unwrap();
+                core.registers = regs.clone();
+            }
+            oracle.set_lane_kernel(Some(LaneKernel::Scalar));
+            twin.set_lane_kernel(Some(kernel));
+            // Inject the corner corpus, tiled with a different phase per
+            // layer so every (corner state, lane slot) pairing occurs.
+            for (k, layer_cfg) in cfg.layers().iter().enumerate() {
+                let m = layer_cfg.neurons;
+                let mut vbank = vec![0i32; m * lanes];
+                let mut rbank = vec![0i32; m * lanes];
+                for j in 0..m {
+                    for l in 0..lanes {
+                        let c = corners[(j * 13 + l + k) % corners.len()];
+                        vbank[j * lanes + l] = c.vmem;
+                        rbank[j * lanes + l] = c.refcnt;
+                    }
+                }
+                oracle.layer_mut(k).restore_lanes(lanes, &vbank, &rbank);
+                twin.layer_mut(k).restore_lanes(lanes, &vbank, &rbank);
+            }
+            let n_layers = cfg.num_layers();
+            let mut spikes_a = vec![0u64; n_layers * lanes];
+            let mut spikes_b = vec![0u64; n_layers * lanes];
+            let mut stats_a = vec![Default::default(); lanes];
+            let mut stats_b = vec![Default::default(); lanes];
+            let mut input = SpikeMatrix::new(cfg.inputs(), lanes);
+            for step in 0..60 {
+                input.resize_clear(cfg.inputs(), lanes);
+                let density = [0.0, 0.9, 0.2][step % 3];
+                for i in 0..cfg.inputs() {
+                    let mut word = 0u64;
+                    for l in 0..lanes {
+                        if rng.uniform() < density {
+                            word |= 1 << l;
+                        }
+                    }
+                    input.set_line_word(i, word);
+                }
+                let active = match step % 3 {
+                    0 => u64::MAX,
+                    1 => 0x0F0F_0F0F_0F0F_0F0F,
+                    _ => rng.next_u64() | 1,
+                };
+                let out_a = oracle.step_lanes(&input, active, &mut spikes_a, &mut stats_a);
+                let ctx = format!("{qs} kernel {kernel:?} step {step}");
+                let out_b = twin.step_lanes(&input, active, &mut spikes_b, &mut stats_b);
+                assert_eq!(out_a, out_b, "{ctx}: output spike matrix");
+                assert_eq!(spikes_a, spikes_b, "{ctx}: layer spike ledgers");
+                assert_eq!(stats_a, stats_b, "{ctx}: activity ledgers");
+                for (k, (a, b)) in oracle.layers().iter().zip(twin.layers()).enumerate() {
+                    assert_eq!(a.lane_state(), b.lane_state(), "{ctx} layer {k}: lane banks");
+                }
+            }
+        }
+    }
+}
