@@ -1,6 +1,6 @@
 # Convenience targets; everything is plain cargo underneath.
 
-.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology bench-hotpath bench-serving snapshot-smoke fmt clippy
+.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology bench-hotpath bench-serving snapshot-smoke chaos-smoke fmt clippy
 
 all: build
 
@@ -67,6 +67,18 @@ snapshot-smoke:
 	cargo run --release --bin repro -- restore \
 		--in connectome_smoke.qcnx --total 16
 	rm -f connectome_smoke.qcnx
+
+# Self-healing differential gate: a hermetic TCP server under a seeded
+# chaos schedule (shard-killing stage panics and channel drops with live
+# retrying clients). Exits nonzero unless every surviving result is
+# bit-identical to the sequential core, >=1 recovery ran, every shard ends
+# Healthy, and recovery p99 is under BENCH_GATE_MAX_RECOVERY_MS (default
+# 5s). Emits BENCH_chaos.json and re-validates it through bench-check.
+chaos-smoke:
+	cargo run --release --bin repro -- chaos-soak \
+		--sessions 3 --n 48 --cores 2 --deaths 4 --ckpt-every 8 \
+		--out BENCH_chaos.json
+	cargo run --release --bin repro -- bench-check BENCH_chaos.json
 
 fmt:
 	cargo fmt --all -- --check

@@ -179,6 +179,88 @@ fn bench_batched() {
     assert_eq!(plane_misses, 0, "streaming allocated planes (pool underprovisioned)");
 }
 
+/// Load-imbalance case (the PR-9 robustness satellite): a skewed stream
+/// mix — lane groups alternating heavy (T=60) and light (T=4) — that a
+/// static round-robin group schedule would pile onto half the shards (the
+/// even groups, all heavy, land on shards 0 and 2; shards 1 and 3 idle on
+/// light work). The adaptive dispatcher hands every ready group to the
+/// shard with the least cumulative dispatched step-cost, so an idle shard
+/// steals the next heavy group from the hot one.
+///
+/// The balance assertion runs on the engine's exact dispatch ledger — the
+/// `t_max + 1` per-group cost that `least_loaded` greedily minimizes, with
+/// its first-minimum tie-break — replayed here over the same group
+/// sequence the feeder forms (consecutive streams, groups of `LANES`).
+/// The mix is fixed, so both imbalance ratios are deterministic: 1.85
+/// under round-robin, 1.29 under least-loaded. The engine run itself is
+/// gated bit-exact against the sequential core like every other case.
+fn bench_load_imbalance() {
+    const CORES: usize = 4;
+    const LANES: usize = 8;
+    const GROUPS: usize = 12;
+    let cfg = ModelConfig::parse_arch("64x32x10", Q5_3).unwrap();
+    let mut rng = XorShift64Star::new(0x5E_55);
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(255) as i32 - 127).collect())
+        .collect();
+    let regs = RegisterFile::new(Q5_3);
+    let samples: Vec<Sample> = (0..GROUPS * LANES)
+        .map(|i| {
+            let t_steps = if (i / LANES) % 2 == 0 { 60 } else { 4 };
+            let spikes =
+                (0..t_steps * cfg.inputs()).map(|_| (rng.uniform() < 0.3) as u8).collect();
+            Sample { spikes, t_steps, inputs: cfg.inputs(), label: 0 }
+        })
+        .collect();
+
+    // Replay both schedules over the engine's cost model.
+    let group_cost: Vec<u64> = samples
+        .chunks(LANES)
+        .map(|g| g.iter().map(|s| s.t_steps as u64).max().unwrap() + 1)
+        .collect();
+    let mut round_robin = [0u64; CORES];
+    for (g, &c) in group_cost.iter().enumerate() {
+        round_robin[g % CORES] += c;
+    }
+    let mut least_loaded = [0u64; CORES];
+    for &c in &group_cost {
+        let shard = (0..CORES).min_by_key(|&s| least_loaded[s]).unwrap();
+        least_loaded[shard] += c;
+    }
+    let imbalance = |load: &[u64; CORES]| {
+        let max = *load.iter().max().unwrap() as f64;
+        max / (load.iter().sum::<u64>() as f64 / CORES as f64)
+    };
+    let (rr, ll) = (imbalance(&round_robin), imbalance(&least_loaded));
+    println!("hot/cold mix, dispatch-ledger imbalance (max shard / mean):");
+    println!("  static round-robin: {rr:.2}x   least-loaded: {ll:.2}x");
+    assert!(rr > 1.8, "mix must actually be skewed under round-robin (got {rr:.2}x)");
+    assert!(ll < 1.3, "least-loaded dispatch must flatten the hot shard (got {ll:.2}x)");
+    assert!(
+        least_loaded.iter().max() < round_robin.iter().max(),
+        "the stealer must shorten the critical shard"
+    );
+
+    // Bit-exactness gate, then timing, on the real engine.
+    let mut core = Core::new(cfg.clone());
+    core.load_weights(&weights).unwrap();
+    core.registers = regs.clone();
+    let mut engine =
+        ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_lanes(CORES, LANES))
+            .unwrap();
+    let out = engine.run_batch(&samples).unwrap();
+    for (i, r) in out.iter().enumerate() {
+        let want = core.run(&samples[i]);
+        assert_eq!(r.counts, want.counts, "hot/cold sample {i} diverged");
+        assert_eq!(r.stats, want.stats, "hot/cold sample {i} ledger diverged");
+    }
+    quick("serving_imbalance/4_cores_lane8_hot_cold_mix", || {
+        std::hint::black_box(engine.run_batch(std::hint::black_box(&samples)).unwrap());
+    });
+}
+
 /// The Table X sweep pattern: visit several register configs over the same
 /// deployed weights. Compares reprogramming one live engine through the
 /// control plane against tearing the engine down and rebuilding it per
@@ -277,6 +359,9 @@ fn main() {
 
     println!("\n== bench_serving (lane-batched datapath) ==");
     bench_batched();
+
+    println!("\n== bench_serving (load imbalance) ==");
+    bench_load_imbalance();
 
     println!("\n== bench_serving (live control plane) ==");
     bench_live_reconfig();

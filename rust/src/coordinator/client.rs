@@ -35,6 +35,92 @@ pub struct HelloInfo {
     pub lane_width: u16,
 }
 
+/// Client-side retry/backoff policy for idempotent requests.
+///
+/// Submits are pure functions of the sample (the engine holds no
+/// per-stream state across samples), so resubmitting after a typed
+/// `ShardLost` or `Overloaded` rejection is always safe — the retried
+/// result is bit-identical to what the lost one would have been. Backoff
+/// is capped exponential with **deterministic jitter**: the sleep before
+/// attempt `k` of request `r` is a pure function of `(seed, r, k)`, so a
+/// chaos soak replays byte-identically from its command line while
+/// distinct requests still decorrelate (no thundering herd on recovery).
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub base: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub cap: Duration,
+    /// Per-request wall-clock budget: a retry whose backoff would land
+    /// past this deadline fails with a typed error instead of sleeping.
+    pub deadline: Duration,
+    /// Jitter seed (vary per client to decorrelate whole processes).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            base: Duration::from_millis(5),
+            cap: Duration::from_millis(200),
+            deadline: Duration::from_secs(2),
+            seed: 0xB0FF,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The backoff sleep before retry `attempt` (1-based: the sleep after
+    /// the first failure is `backoff(r, 1)`). Capped exponential —
+    /// `base · 2^(attempt-1)`, clamped to `cap` — scaled by a
+    /// deterministic jitter factor in `[0.5, 1.0)` drawn from
+    /// `(seed, request, attempt)`.
+    pub fn backoff(&self, request: u64, attempt: u32) -> Duration {
+        let exp = self.base.as_secs_f64() * 2f64.powi(attempt.saturating_sub(1).min(32) as i32);
+        let capped = exp.min(self.cap.as_secs_f64());
+        let mut rng = XorShift64Star::new(
+            self.seed
+                ^ request.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (attempt as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        let jitter = 0.5 + 0.5 * rng.uniform();
+        Duration::from_secs_f64(capped * jitter)
+    }
+}
+
+/// What [`WireClient::submit_with_retry`] returns: the (bit-exact) result
+/// plus the retry telemetry the chaos soak aggregates.
+#[derive(Debug, Clone)]
+pub struct RetryOutcome {
+    pub epoch: u64,
+    pub prediction: u32,
+    pub spikes_total: u64,
+    pub counts: Vec<u32>,
+    /// Attempts spent, including the successful one (1 = first try).
+    pub attempts: u32,
+    /// Typed `ShardLost` rejections absorbed along the way.
+    pub shard_losses: u32,
+    /// Typed `Overloaded` rejections absorbed along the way.
+    pub overloads: u32,
+}
+
+/// Supervision state reported by a wire `Health` frame (see
+/// [`WireClient::health`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthInfo {
+    /// True while any shard is not `Healthy`.
+    pub degraded: bool,
+    pub recoveries: u64,
+    pub quarantines: u64,
+    /// Samples completed since the engine's live recovery point.
+    pub checkpoint_age: u64,
+    /// One status byte per shard: 0 Healthy, 1 Quarantined, 2 Rebuilding.
+    pub shards: Vec<u8>,
+}
+
 /// Write half of a connection (own thread-safe handle after
 /// [`WireClient::into_split`]).
 pub struct ClientSender {
@@ -196,6 +282,86 @@ impl WireClient {
             }
             other => bail!("expected RestoreAck, got {other:?}"),
         }
+    }
+
+    /// Poll the server's supervision state ([`Frame::HealthReq`] →
+    /// [`Frame::Health`]); answered from the pump's telemetry mirror, so
+    /// it works even while the engine is mid-recovery.
+    pub fn health(&mut self, request: u64) -> Result<HealthInfo> {
+        self.send(&Frame::HealthReq { request })?;
+        match self.recv()? {
+            Frame::Health { request: r, degraded, recoveries, quarantines, checkpoint_age, shards }
+                if r == request =>
+            {
+                Ok(HealthInfo { degraded, recoveries, quarantines, checkpoint_age, shards })
+            }
+            Frame::Error { code, message, .. } => {
+                bail!("server refused health probe ({code:?}): {message}")
+            }
+            other => bail!("expected Health, got {other:?}"),
+        }
+    }
+
+    /// Submit one sample and block for its result, absorbing retryable
+    /// rejections under `policy`. Retries fire on typed `ShardLost` (the
+    /// stream was on a shard that died; the supervisor is rebuilding it)
+    /// and `Overloaded` (admission backpressure) — both idempotent-safe —
+    /// and sleep `policy.backoff(...)` between attempts. Every other error
+    /// code, retry-budget exhaustion, and deadline overrun are typed
+    /// failures.
+    pub fn submit_with_retry(
+        &mut self,
+        session: u32,
+        sample_id: u64,
+        s: &Sample,
+        policy: &RetryPolicy,
+    ) -> Result<RetryOutcome> {
+        let start = Instant::now();
+        let budget = policy.max_attempts.max(1);
+        let mut shard_losses = 0u32;
+        let mut overloads = 0u32;
+        for attempt in 1..=budget {
+            self.submit(session, sample_id, s)?;
+            match self.recv()? {
+                Frame::Result { sample, epoch, prediction, spikes_total, counts, .. }
+                    if sample == sample_id =>
+                {
+                    return Ok(RetryOutcome {
+                        epoch,
+                        prediction,
+                        spikes_total,
+                        counts,
+                        attempts: attempt,
+                        shard_losses,
+                        overloads,
+                    });
+                }
+                Frame::Error { code, reference, message, .. } if reference == sample_id => {
+                    match code {
+                        ErrorCode::ShardLost => shard_losses += 1,
+                        ErrorCode::Overloaded => overloads += 1,
+                        _ => bail!("submit {sample_id} rejected ({code:?}): {message}"),
+                    }
+                    if attempt == budget {
+                        bail!(
+                            "submit {sample_id} failed ({code:?}) after {attempt} attempts: \
+                             {message}"
+                        );
+                    }
+                    let nap = policy.backoff(sample_id, attempt);
+                    if start.elapsed() + nap > policy.deadline {
+                        bail!(
+                            "submit {sample_id} deadline {:?} exhausted after {attempt} attempts \
+                             (last error {code:?}: {message})",
+                            policy.deadline
+                        );
+                    }
+                    std::thread::sleep(nap);
+                }
+                other => bail!("unexpected frame while awaiting sample {sample_id}: {other:?}"),
+            }
+        }
+        bail!("submit {sample_id}: retry budget exhausted")
     }
 
     /// Split into independently-owned halves for concurrent send/receive.
@@ -506,5 +672,31 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.spikes, y.spikes, "pool must be reproducible for oracle checks");
         }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        let p = RetryPolicy::default();
+        // Pure function of (seed, request, attempt): replayable soaks.
+        assert_eq!(p.backoff(7, 1), p.backoff(7, 1));
+        assert_eq!(p.backoff(7, 3), p.backoff(7, 3));
+        // Distinct requests and attempts decorrelate.
+        assert_ne!(p.backoff(7, 1), p.backoff(8, 1));
+        assert_ne!(p.backoff(7, 1), p.backoff(7, 2));
+        // Every sleep lands in [base·2^(k-1)/2, base·2^(k-1)) pre-cap...
+        for attempt in 1..=3u32 {
+            let nominal = p.base.as_secs_f64() * 2f64.powi(attempt as i32 - 1);
+            for request in 0..50u64 {
+                let b = p.backoff(request, attempt).as_secs_f64();
+                assert!(b >= nominal * 0.5 - 1e-12, "attempt {attempt} req {request}: {b}");
+                assert!(b < nominal, "attempt {attempt} req {request}: {b}");
+            }
+        }
+        // ...and the cap bounds deep retries (attempt 40 would otherwise
+        // be base·2^39 ≈ 32 days).
+        assert!(p.backoff(1, 40) <= p.cap);
+        // Different seeds give different jitter streams.
+        let q = RetryPolicy { seed: 0xFEED, ..p };
+        assert_ne!(p.backoff(7, 1), q.backoff(7, 1));
     }
 }

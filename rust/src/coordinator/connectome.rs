@@ -39,7 +39,7 @@
 //! after the whole file validates).
 
 use crate::config::model::MemKind;
-use crate::config::registers::NUM_REGS;
+use crate::config::registers::{RegisterFile, NUM_REGS};
 use crate::config::Topology;
 use crate::coordinator::interface::BusStats;
 use crate::fixed::QSpec;
@@ -244,6 +244,24 @@ pub struct LayerState {
     pub lane_vmem: Vec<i32>,
     /// Lane-major refractory bank, same layout.
     pub lane_refcnt: Vec<i32>,
+}
+
+impl LayerState {
+    /// Materialize this section's register vector as a live
+    /// [`RegisterFile`] — the seed a supervised shard rebuild spawns its
+    /// stage chain under (registers are broadcast engine-wide, so any one
+    /// section's vector is the whole engine's). Register values captured
+    /// from a live engine always re-apply cleanly; an error here means the
+    /// snapshot was hand-forged out of range.
+    pub fn register_file(
+        &self,
+        qspec: QSpec,
+    ) -> Result<RegisterFile, crate::config::registers::RegisterError> {
+        let mut regs = RegisterFile::new(qspec);
+        let program: Vec<(usize, i32)> = self.regs.iter().copied().enumerate().collect();
+        regs.apply_program(&program)?;
+        Ok(regs)
+    }
 }
 
 /// A complete, self-describing engine snapshot. Produced by

@@ -253,6 +253,11 @@ pub(crate) struct ControlShared {
     /// Validated programs awaiting broadcast at the next sample boundary,
     /// in epoch order.
     pending: Mutex<Vec<(u64, Arc<ReconfigProgram>)>>,
+    /// Every committed program since the last checkpoint, in epoch order —
+    /// the replay tail a supervised rebuild programs onto a revived shard.
+    /// Pruned by [`ControlShared::prune_history`] once a newer checkpoint
+    /// makes the prefix unreachable.
+    history: Mutex<Vec<(u64, Arc<ReconfigProgram>)>>,
     /// Next epoch to assign; the engine's construction config is epoch 0.
     next_epoch: AtomicU64,
     /// Shadow register file tracking every accepted cfg_in program — what
@@ -282,6 +287,7 @@ impl ControlShared {
     pub(crate) fn new(regs: RegisterFile, packed_sizes: Vec<usize>, cores: usize) -> ControlShared {
         ControlShared {
             pending: Mutex::new(Vec::new()),
+            history: Mutex::new(Vec::new()),
             next_epoch: AtomicU64::new(1),
             qspec: regs.qspec(),
             regs: Mutex::new(regs),
@@ -306,22 +312,28 @@ impl ControlShared {
     /// bus ledger. Used by [`ControlPlane::apply`].
     pub(crate) fn admit(&self, program: ReconfigProgram) -> Result<u64, ControlError> {
         self.validate(&program)?;
+        let program = Arc::new(program);
         let mut pending = relock(&self.pending);
         let epoch = self.commit(&program);
-        pending.push((epoch, Arc::new(program)));
+        pending.push((epoch, program));
         Ok(epoch)
     }
 
     /// Assign an epoch to an already-validated program and account for it
-    /// (shadow registers + bus beats). The caller delivers the program.
-    pub(crate) fn commit(&self, program: &ReconfigProgram) -> u64 {
+    /// (shadow registers + bus beats + replay history). The caller
+    /// delivers the program.
+    pub(crate) fn commit(&self, program: &Arc<ReconfigProgram>) -> u64 {
         relock(&self.regs)
             .apply_program(&program.cfg)
             .expect("program validated before commit");
-        let mut bus = relock(&self.bus);
-        bus.cfg_writes += program.cfg_beats() * self.cores as u64;
-        bus.wt_writes += program.wt_beats() * self.cores as u64;
-        self.next_epoch.fetch_add(1, Ordering::SeqCst)
+        {
+            let mut bus = relock(&self.bus);
+            bus.cfg_writes += program.cfg_beats() * self.cores as u64;
+            bus.wt_writes += program.wt_beats() * self.cores as u64;
+        }
+        let epoch = self.next_epoch.fetch_add(1, Ordering::SeqCst);
+        relock(&self.history).push((epoch, Arc::clone(program)));
+        epoch
     }
 
     /// Epoch-assign an in-band program while draining any async-pending
@@ -330,10 +342,27 @@ impl ControlShared {
         &self,
         program: ReconfigProgram,
     ) -> (Vec<(u64, Arc<ReconfigProgram>)>, u64, Arc<ReconfigProgram>) {
+        let program = Arc::new(program);
         let mut pending = relock(&self.pending);
         let drained = std::mem::take(&mut *pending);
         let epoch = self.commit(&program);
-        (drained, epoch, Arc::new(program))
+        (drained, epoch, program)
+    }
+
+    /// Committed programs with epoch strictly greater than `epoch`, in
+    /// epoch order — the replay tail for a shard rebuilt from a
+    /// checkpoint fenced at that epoch. Replay is idempotent (cfg writes
+    /// are absolute, wt swaps are whole payloads), so replaying from any
+    /// conservative lower bound of the checkpoint's true epoch is exact.
+    pub(crate) fn programs_since(&self, epoch: u64) -> Vec<(u64, Arc<ReconfigProgram>)> {
+        relock(&self.history).iter().filter(|(e, _)| *e > epoch).cloned().collect()
+    }
+
+    /// Drop history entries at or below `upto`. Safe once a checkpoint
+    /// fenced at `upto` exists — no rebuild ever replays past it — which
+    /// bounds history growth to one checkpoint interval of programs.
+    pub(crate) fn prune_history(&self, upto: u64) {
+        relock(&self.history).retain(|(e, _)| *e > upto);
     }
 
     /// Drain programs queued by [`ControlPlane::apply`], in epoch order.
@@ -613,6 +642,27 @@ mod tests {
         assert_eq!(s.take_pending().len(), 1);
         // Rejection still validates against the recovered shadow file.
         assert!(s.admit(ReconfigProgram::new().write(99, 0)).is_err());
+    }
+
+    #[test]
+    fn history_tracks_commits_and_prunes() {
+        let s = shared();
+        s.admit(ReconfigProgram::new().write(REG_VTH, 4)).unwrap(); // epoch 1
+        let (_, e2, _) = s.commit_in_band(ReconfigProgram::new().write(REG_VTH, 5)); // epoch 2
+        assert_eq!(e2, 2);
+        let epochs: Vec<u64> = s.programs_since(0).iter().map(|(e, _)| *e).collect();
+        assert_eq!(epochs, vec![1, 2]);
+        assert_eq!(s.programs_since(1).len(), 1);
+        assert!(s.programs_since(2).is_empty());
+        // Pruning below a checkpoint keeps the replay tail reachable.
+        s.prune_history(1);
+        let epochs: Vec<u64> = s.programs_since(0).iter().map(|(e, _)| *e).collect();
+        assert_eq!(epochs, vec![2]);
+        s.prune_history(2);
+        assert!(s.programs_since(0).is_empty());
+        // Rejected programs never enter history.
+        assert!(s.admit(ReconfigProgram::new().write(99, 0)).is_err());
+        assert!(s.programs_since(0).is_empty());
     }
 
     #[test]

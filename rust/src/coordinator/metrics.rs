@@ -29,6 +29,20 @@ pub struct Telemetry {
     /// `Overloaded` rejections). Not counted in [`Telemetry::requests`],
     /// so throughput and latency describe served traffic only.
     pub rejects: u64,
+    /// Streams lost to a dead serving shard (typed `ShardLost` errors —
+    /// retryable; not counted in [`Telemetry::requests`]).
+    pub shard_losses: u64,
+    /// Supervisor mirror: shards rebuilt from a connectome checkpoint.
+    pub recoveries: u64,
+    /// Supervisor mirror: shards quarantined (≥ recoveries; the excess is
+    /// failed rebuilds).
+    pub quarantines: u64,
+    /// Supervisor mirror: samples completed since the live recovery point
+    /// was fenced (the replay distance a rebuild would incur right now).
+    pub checkpoint_age_samples: u64,
+    /// Supervisor mirror: cumulative wall-clock spent in degraded mode
+    /// (one or more shards not healthy), in milliseconds.
+    pub degraded_ms: u64,
     started: Option<Instant>,
     elapsed: Duration,
 }
@@ -60,6 +74,26 @@ impl Telemetry {
     /// Count one admission-control rejection (`Overloaded`).
     pub fn record_reject(&mut self) {
         self.rejects += 1;
+    }
+
+    /// Count one stream lost to a dead shard (typed `ShardLost`).
+    pub fn record_shard_loss(&mut self) {
+        self.shard_losses += 1;
+    }
+
+    /// Adopt the engine/server supervision counters so recovery shows up
+    /// in the same summary line as the traffic it disturbed.
+    pub fn record_supervision(
+        &mut self,
+        recoveries: u64,
+        quarantines: u64,
+        checkpoint_age_samples: u64,
+        degraded_ms: u64,
+    ) {
+        self.recoveries = recoveries;
+        self.quarantines = quarantines;
+        self.checkpoint_age_samples = checkpoint_age_samples;
+        self.degraded_ms = degraded_ms;
     }
 
     /// Rejected fraction of all requests that reached the front door.
@@ -138,6 +172,15 @@ impl Telemetry {
         if self.rejects > 0 {
             s.push_str(&format!(" rejects={} ({:.1}%)", self.rejects, 100.0 * self.reject_rate()));
         }
+        if self.shard_losses > 0 {
+            s.push_str(&format!(" shard_losses={}", self.shard_losses));
+        }
+        if self.quarantines > 0 {
+            s.push_str(&format!(
+                " recoveries={}/{} degraded={}ms ckpt_age={}",
+                self.recoveries, self.quarantines, self.degraded_ms, self.checkpoint_age_samples
+            ));
+        }
         s
     }
 }
@@ -200,5 +243,29 @@ mod tests {
         assert_eq!(t.requests, 3, "rejects are not served requests");
         assert!((t.reject_rate() - 0.25).abs() < 1e-12);
         assert!(t.summary().contains("rejects=1 (25.0%)"), "{}", t.summary());
+    }
+
+    #[test]
+    fn supervision_counters_surface_in_summary() {
+        // Mirrors the reject-rate accounting test: losses and recovery
+        // counters are separate ledgers from served requests, and they
+        // only appear in the summary once something actually happened.
+        let mut t = Telemetry::new();
+        assert!(!t.summary().contains("recoveries="), "quiet engine, quiet summary");
+        assert!(!t.summary().contains("shard_losses="));
+        for _ in 0..4 {
+            t.record(Duration::from_micros(100), &ActivityStats::default(), None);
+        }
+        t.record_shard_loss();
+        t.record_shard_loss();
+        t.record_supervision(2, 3, 17, 250);
+        assert_eq!(t.requests, 4, "lost streams are not served requests");
+        assert_eq!(t.shard_losses, 2);
+        assert_eq!((t.recoveries, t.quarantines), (2, 3));
+        assert_eq!(t.checkpoint_age_samples, 17);
+        assert_eq!(t.degraded_ms, 250);
+        let s = t.summary();
+        assert!(s.contains("shard_losses=2"), "{s}");
+        assert!(s.contains("recoveries=2/3 degraded=250ms ckpt_age=17"), "{s}");
     }
 }

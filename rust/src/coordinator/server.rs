@@ -35,10 +35,15 @@
 //!   programs are rejected per-request (`BadProgram`) via
 //!   [`ControlPlane::validate`] before they reach the shared engine;
 //!   protocol violations kill only the offending connection (`BadFrame`);
-//!   and if the engine itself dies (e.g. a worker panic surfacing as
-//!   [`ServingError::WorkerPanicked`](super::serving::ServingError)), the
-//!   server answers every subsequent request with a typed `Internal`
-//!   error — the process and every connection stay alive.
+//!   a dead serving shard costs exactly the streams that were in flight on
+//!   it (each answered with a typed [`ErrorCode::ShardLost`], safe to
+//!   resubmit) while the engine's supervisor rebuilds the shard from its
+//!   last connectome checkpoint; and only if recovery itself fails does
+//!   the engine stop serving — the server then answers every request with
+//!   a typed `Internal` error, and the process and every connection stay
+//!   alive. Clients poll the supervisor through [`Frame::HealthReq`],
+//!   answered from the pump's telemetry mirror without touching the
+//!   engine.
 //!
 //! ## Epoch acks
 //!
@@ -52,7 +57,7 @@ use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -62,7 +67,7 @@ use crate::datasets::Sample;
 
 use super::connectome::Connectome;
 use super::control::{ControlPlane, ReconfigProgram};
-use super::serving::{ServingEngine, SessionOp};
+use super::serving::{ServingEngine, ServingError, SessionOp};
 use super::wire::{self, ErrorCode, Frame, WireError};
 
 /// Front-door tuning knobs.
@@ -117,6 +122,18 @@ pub struct ServerStats {
     /// Engine failures observed by the pump (the engine stops serving but
     /// the server keeps answering with typed `Internal` errors).
     pub engine_failures: u64,
+    /// Streams lost to a dead shard and answered with a typed
+    /// [`ErrorCode::ShardLost`] (the client may resubmit; the supervisor
+    /// rebuilds the shard).
+    pub shard_losses: u64,
+    /// Supervisor mirror: shards rebuilt from a checkpoint.
+    pub recoveries: u64,
+    /// Supervisor mirror: shards quarantined.
+    pub quarantines: u64,
+    /// Supervisor mirror: samples completed since the live recovery point.
+    pub checkpoint_age: u64,
+    /// Supervisor mirror: cumulative milliseconds in degraded mode.
+    pub degraded_ms: u64,
 }
 
 #[derive(Default)]
@@ -130,6 +147,17 @@ struct Counters {
     protocol_errors: AtomicU64,
     idle_timeouts: AtomicU64,
     engine_failures: AtomicU64,
+    shard_losses: AtomicU64,
+    recoveries: AtomicU64,
+    quarantines: AtomicU64,
+    checkpoint_age: AtomicU64,
+    degraded_ms: AtomicU64,
+    /// One status byte per shard (0 Healthy, 1 Quarantined, 2 Rebuilding),
+    /// refreshed by the pump after every engine interaction — readers
+    /// answer `HealthReq` from this mirror without touching the engine.
+    shard_health: Mutex<Vec<u8>>,
+    /// Detection→re-admission latency of every completed recovery (ms).
+    recovery_ms: Mutex<Vec<f64>>,
 }
 
 impl Counters {
@@ -148,8 +176,36 @@ impl Counters {
             protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
             idle_timeouts: self.idle_timeouts.load(Ordering::Relaxed),
             engine_failures: self.engine_failures.load(Ordering::Relaxed),
+            shard_losses: self.shard_losses.load(Ordering::Relaxed),
+            recoveries: self.recoveries.load(Ordering::Relaxed),
+            quarantines: self.quarantines.load(Ordering::Relaxed),
+            checkpoint_age: self.checkpoint_age.load(Ordering::Relaxed),
+            degraded_ms: self.degraded_ms.load(Ordering::Relaxed),
         }
     }
+
+    fn shard_health(&self) -> Vec<u8> {
+        self.shard_health.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    fn recovery_ms(&self) -> Vec<f64> {
+        self.recovery_ms.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+}
+
+/// Refresh the reader-visible supervision mirror from the engine (the pump
+/// is the engine's sole owner; readers must never block on it).
+fn mirror_health(engine: &ServingEngine, counters: &Counters) {
+    counters.recoveries.store(engine.recoveries(), Ordering::Relaxed);
+    counters.quarantines.store(engine.quarantines(), Ordering::Relaxed);
+    counters.checkpoint_age.store(engine.checkpoint_age_samples(), Ordering::Relaxed);
+    counters
+        .degraded_ms
+        .store(engine.degraded_duration().as_millis() as u64, Ordering::Relaxed);
+    *counters.shard_health.lock().unwrap_or_else(|e| e.into_inner()) =
+        engine.shard_health().iter().map(|h| *h as u8).collect();
+    *counters.recovery_ms.lock().unwrap_or_else(|e| e.into_inner()) =
+        engine.recovery_latencies_ms().to_vec();
 }
 
 /// Engine geometry advertised in `HelloAck` and used for reader-side
@@ -246,6 +302,19 @@ impl SpikeServer {
 
     pub fn stats(&self) -> ServerStats {
         self.counters.snapshot()
+    }
+
+    /// Supervision mirror: one status byte per shard (0 Healthy,
+    /// 1 Quarantined, 2 Rebuilding) — the payload a wire `Health` frame
+    /// carries, refreshed by the pump after every engine interaction.
+    pub fn shard_health(&self) -> Vec<u8> {
+        self.counters.shard_health()
+    }
+
+    /// Supervision mirror: detection→re-admission latency of every
+    /// completed shard recovery, in milliseconds.
+    pub fn recovery_latencies_ms(&self) -> Vec<f64> {
+        self.counters.recovery_ms()
     }
 
     /// Stop accepting, close every connection, drain the pump, and shut
@@ -645,6 +714,20 @@ fn connection_loop(
                 };
                 enqueue_or_reject(&pump_tx, msg, inflight, &counters, &reply_tx, session, request);
             }
+            Frame::HealthReq { request } => {
+                // Answered from the pump's telemetry mirror — no session
+                // needed, never blocks on the engine, and stays accurate
+                // even while the engine is mid-recovery.
+                let shards = counters.shard_health();
+                let _ = reply_tx.send(Frame::Health {
+                    request,
+                    degraded: shards.iter().any(|&s| s != 0),
+                    recoveries: counters.recoveries.load(Ordering::Relaxed),
+                    quarantines: counters.quarantines.load(Ordering::Relaxed),
+                    checkpoint_age: counters.checkpoint_age.load(Ordering::Relaxed),
+                    shards,
+                });
+            }
             // Server→client frames arriving from a client violate the
             // protocol.
             Frame::HelloAck { .. }
@@ -653,6 +736,7 @@ fn connection_loop(
             | Frame::ReconfigAck { .. }
             | Frame::SnapshotData { .. }
             | Frame::RestoreAck { .. }
+            | Frame::Health { .. }
             | Frame::Error { .. } => {
                 break Some(WireError::BadValue("client sent a server-side frame"));
             }
@@ -729,9 +813,12 @@ fn pump_loop(
     options: ServerOptions,
 ) {
     let control = engine.control_plane();
-    // Once the engine fails (worker panic, wedged shard) it stops serving,
-    // but the pump keeps answering every request with a typed Internal
-    // error — the process and all other tenants' connections stay alive.
+    mirror_health(&engine, &counters);
+    // Once the engine fails (a failed shard rebuild, a wedged teardown) it
+    // stops serving, but the pump keeps answering every request with a
+    // typed Internal error — the process and all other tenants'
+    // connections stay alive. A plain shard death never lands here: the
+    // supervisor heals it and only the lost streams see a typed ShardLost.
     let mut engine_dead: Option<String> = None;
     loop {
         let first = match rx.recv_timeout(Duration::from_millis(100)) {
@@ -914,24 +1001,50 @@ fn run_slots(
     if ops.is_empty() {
         return;
     }
-    match engine.run_session(&ops) {
-        Ok(results) => {
-            debug_assert_eq!(results.len(), submit_meta.len(), "one result per submit");
-            let mut result_iter = results.into_iter();
+    match engine.run_session_outcomes(&ops) {
+        Ok(outcomes) => {
+            debug_assert_eq!(outcomes.len(), submit_meta.len(), "one outcome per submit");
+            let mut outcome_iter = outcomes.into_iter();
             for slot in plan {
                 match slot {
                     Slot::Sample { index } => {
                         let (session, sample_id, inflight, reply) = &submit_meta[index];
-                        if let Some(r) = result_iter.next() {
-                            Counters::bump(&counters.samples_served);
-                            let _ = reply.send(Frame::Result {
-                                session: *session,
-                                sample: *sample_id,
-                                epoch: r.epoch,
-                                prediction: r.prediction as u32,
-                                spikes_total: r.spikes_total,
-                                counts: r.counts,
-                            });
+                        match outcome_iter.next() {
+                            Some(Ok(r)) => {
+                                Counters::bump(&counters.samples_served);
+                                let _ = reply.send(Frame::Result {
+                                    session: *session,
+                                    sample: *sample_id,
+                                    epoch: r.epoch,
+                                    prediction: r.prediction as u32,
+                                    spikes_total: r.spikes_total,
+                                    counts: r.counts,
+                                });
+                            }
+                            Some(Err(e)) => {
+                                // A lost shard costs exactly its in-flight
+                                // streams; the supervisor has already
+                                // rebuilt it by the time we answer, so the
+                                // client's retry lands on a healthy engine.
+                                let code = match &e {
+                                    ServingError::ShardLost { .. } => {
+                                        Counters::bump(&counters.shard_losses);
+                                        ErrorCode::ShardLost
+                                    }
+                                    _ => ErrorCode::Internal,
+                                };
+                                reject(reply, code, *session, *sample_id, e.to_string());
+                            }
+                            None => {
+                                reject(
+                                    reply,
+                                    ErrorCode::Internal,
+                                    *session,
+                                    *sample_id,
+                                    "pump bookkeeping mismatch: no outcome for this submit"
+                                        .to_string(),
+                                );
+                            }
                         }
                         inflight.fetch_sub(1, Ordering::AcqRel);
                     }
@@ -942,6 +1055,7 @@ fn run_slots(
                     }
                 }
             }
+            mirror_health(engine, counters);
         }
         Err(e) => {
             Counters::bump(&counters.engine_failures);
@@ -960,6 +1074,7 @@ fn run_slots(
                     }
                 }
             }
+            mirror_health(engine, counters);
         }
     }
 }

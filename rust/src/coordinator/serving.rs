@@ -68,6 +68,7 @@
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -81,6 +82,10 @@ use crate::hdl::ActivityStats;
 
 use super::control::{ControlPlane, ControlShared, ReconfigProgram};
 use super::interface::BusStats;
+
+pub mod chaos;
+
+use chaos::{ChaosKind, ChaosSchedule};
 
 pub use super::pipeline::StreamResult;
 
@@ -103,6 +108,15 @@ pub enum ServingError {
     /// an `expect` on the closed stage channel and panic the caller —
     /// now it is an ordinary, typed refusal.
     ShutDown,
+    /// One shard's stage pipeline died while this stream was assigned to
+    /// it. **Only** the streams in that shard's FIFO are affected — the
+    /// remaining shards keep serving, and the supervisor rebuilds the
+    /// dead shard bit-exactly from the last connectome checkpoint before
+    /// the next session. `resumable` is true when resubmitting the same
+    /// sample is sound (it always is for pure inference submits, which
+    /// are idempotent functions of the sample; it is false only when the
+    /// engine could not be healed and is shut down).
+    ShardLost { shard: usize, resumable: bool },
 }
 
 impl std::fmt::Display for ServingError {
@@ -113,6 +127,13 @@ impl std::fmt::Display for ServingError {
             }
             ServingError::ShutDown => {
                 write!(f, "serving engine is shut down; rebuild or restore it")
+            }
+            ServingError::ShardLost { shard, resumable } => {
+                if *resumable {
+                    write!(f, "serving shard {shard} was lost mid-stream; resubmit the sample")
+                } else {
+                    write!(f, "serving shard {shard} was lost and could not be rebuilt")
+                }
             }
         }
     }
@@ -164,6 +185,12 @@ pub(crate) enum StageMsg {
     /// engine geometry *before* this message is sent, so stage-side
     /// application is infallible — the Reconfig precedent.
     Import { states: Arc<Vec<LayerExport>>, reply: std::sync::mpsc::Sender<()> },
+    /// Deterministic fault injection (see [`chaos`]): the stage the kind
+    /// addresses acts on it (panics, exits, or stalls); every earlier
+    /// stage forwards it, so the fault lands at an exact position in the
+    /// shard's FIFO — everything dispatched before it completes, and
+    /// everything behind a fatal fault is lost with the shard.
+    Chaos { kind: ChaosKind },
 }
 
 /// Alias local to the stage machinery: the per-(shard, layer) state
@@ -308,6 +335,26 @@ pub(crate) fn stage_loop(
                     return;
                 }
             }
+            StageMsg::Chaos { kind } => {
+                match kind {
+                    ChaosKind::StagePanic { stage } if stage == layer_idx => {
+                        panic!("chaos: injected panic at stage {layer_idx}");
+                    }
+                    ChaosKind::ChannelDrop { stage } if stage == layer_idx => {
+                        // The software model of a torn-down channel: exit
+                        // the loop so both channel ends drop — upstream
+                        // sends fail, downstream drains and cascades out.
+                        return;
+                    }
+                    ChaosKind::SlowStage { stage, millis } if stage == layer_idx => {
+                        std::thread::sleep(Duration::from_millis(millis));
+                    }
+                    _ => {}
+                }
+                if tx.send(StageMsg::Chaos { kind }).is_err() {
+                    return;
+                }
+            }
         }
     }
 }
@@ -352,13 +399,64 @@ fn feed_group(
     Ok(())
 }
 
-/// Index of the shard with the least cumulative dispatched work, lowest
-/// index on ties (`min_by_key` returns the *first* minimum). The choice is
-/// a pure function of the op stream, so identical sessions yield identical
-/// shard assignments run-to-run — which keeps per-shard lane-bank shapes,
-/// and therefore connectome snapshots, reproducible.
-fn least_loaded(load: &[u64]) -> usize {
-    load.iter().enumerate().min_by_key(|&(_, &c)| c).map(|(i, _)| i).unwrap_or(0)
+/// Stream one sample down a shard's chain as per-timestep planes followed
+/// by the Fig.-8 flush marker. Returns false when the shard's first stage
+/// is gone (the caller marks it dead); buffers already handed to a dying
+/// chain are replaced by the supervisor's pool refill, not reclaimed here.
+fn feed_single(
+    tx: &SyncSender<StageMsg>,
+    stream: usize,
+    sample: &Sample,
+    plane_pool: &PlanePool,
+) -> bool {
+    for t in 0..sample.t_steps {
+        // Encode straight into a recycled pool plane — no per-timestep
+        // Vec allocation.
+        let mut plane = plane_pool.take();
+        sample.step_plane_into(t, &mut plane);
+        if tx.send(StageMsg::Step { stream, plane }).is_err() {
+            return false;
+        }
+    }
+    tx.send(StageMsg::Flush { stream, stats: ActivityStats::default() }).is_ok()
+}
+
+/// Broadcast an epoch-tagged program to every live shard, marking any
+/// whose first stage is gone. A dead shard missing the broadcast is not
+/// an error: the program is already committed in the control plane's
+/// replay history, and the supervisor programs that history onto the
+/// rebuilt shard before re-admitting it.
+fn broadcast_program(
+    senders: &[SyncSender<StageMsg>],
+    alive: &mut [bool],
+    epoch: u64,
+    program: &Arc<ReconfigProgram>,
+) {
+    for (i, tx) in senders.iter().enumerate() {
+        if alive[i]
+            && tx.send(StageMsg::Reconfig { epoch, program: program.clone() }).is_err()
+        {
+            alive[i] = false;
+        }
+    }
+}
+
+/// Index of the live shard with the least cumulative dispatched work,
+/// lowest index on ties (`min_by_key` returns the *first* minimum). With
+/// every shard alive — the steady state — the choice is a pure function
+/// of the op stream, so identical sessions yield identical shard
+/// assignments run-to-run, which keeps per-shard lane-bank shapes, and
+/// therefore connectome snapshots, reproducible. When a shard has died
+/// mid-session it is excluded (graceful degradation: the survivors absorb
+/// its traffic); with *no* shard left alive, shard 0 is returned so the
+/// unit is still recorded and the drainer can settle its streams as lost.
+fn least_loaded(load: &[u64], alive: &[bool]) -> usize {
+    load.iter()
+        .enumerate()
+        .filter(|&(i, _)| alive[i])
+        .min_by_key(|&(_, &c)| c)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
 }
 
 /// Dispatch the pending lane group (possibly partial) to the least-loaded
@@ -381,17 +479,18 @@ fn least_loaded(load: &[u64]) -> usize {
 fn dispatch_group(
     pending: &mut (Vec<usize>, Vec<&Sample>),
     senders: &[SyncSender<StageMsg>],
+    alive: &mut [bool],
     load: &mut [u64],
     assign: &std::sync::mpsc::Sender<(usize, usize)>,
     matrix_pool: &MatrixPool,
     lane_width: usize,
     inputs: usize,
-) -> Result<()> {
+) {
     let (streams, group) = pending;
     if group.is_empty() {
-        return Ok(());
+        return;
     }
-    let shard = least_loaded(load);
+    let shard = least_loaded(load, alive);
     // Cost model: one StepLanes message per timestep plus the FlushLanes
     // marker — proportional to the stage work the group induces.
     let t_max = group.iter().map(|s| s.t_steps).max().unwrap_or(0) as u64;
@@ -400,7 +499,16 @@ fn dispatch_group(
     // until the session scope ends, so this send cannot block; a closed
     // receiver only happens while the scope is already unwinding.
     let _ = assign.send((shard, group.len()));
-    feed_group(&senders[shard], streams, group, matrix_pool, lane_width, inputs)
+    // A failed send means the shard's first stage is gone: mark it dead
+    // and move on — the record above lets the drainer settle the group's
+    // streams as ShardLost while the surviving shards keep serving.
+    if alive[shard]
+        && feed_group(&senders[shard], streams, group, matrix_pool, lane_width, inputs).is_err()
+    {
+        alive[shard] = false;
+    }
+    streams.clear();
+    group.clear();
 }
 
 /// Body of the terminal collector: accumulates output-layer spike counts per
@@ -495,7 +603,8 @@ pub(crate) fn collector_loop<F: FnMut(StreamResult) -> bool>(
             }
             // Snapshot fences terminate here: every stage already exported
             // (or imported) by the time the marker reaches the collector.
-            StageMsg::Export { .. } | StageMsg::Import { .. } => {}
+            // Chaos markers address stages; a surviving one is spent.
+            StageMsg::Export { .. } | StageMsg::Import { .. } | StageMsg::Chaos { .. } => {}
         }
     }
 }
@@ -544,11 +653,25 @@ pub struct ServingOptions {
     /// bit-identical); an out-of-order hazard is avoided by flushing the
     /// pending group before a sparse sample is dispatched.
     pub sparse_cutoff: Option<f64>,
+    /// Supervision recovery-point cadence: a fresh in-memory connectome
+    /// checkpoint is fenced (cheaply, via `StageMsg::Export` at a
+    /// sample-group boundary) once at least this many samples completed
+    /// since the last one. Smaller intervals shorten the epoch-replay
+    /// tail a shard rebuild performs; larger ones fence less often. The
+    /// construction state is always checkpoint zero, so recovery works
+    /// from the first sample.
+    pub checkpoint_interval: u64,
 }
 
 impl Default for ServingOptions {
     fn default() -> Self {
-        ServingOptions { cores: 2, queue_depth: 64, lane_width: 1, sparse_cutoff: None }
+        ServingOptions {
+            cores: 2,
+            queue_depth: 64,
+            lane_width: 1,
+            sparse_cutoff: None,
+            checkpoint_interval: 256,
+        }
     }
 }
 
@@ -568,6 +691,13 @@ impl ServingOptions {
         self.sparse_cutoff = Some(cutoff);
         self
     }
+
+    /// Builder: set the supervision checkpoint cadence (see
+    /// [`ServingOptions::checkpoint_interval`]).
+    pub fn checkpoints_every(mut self, samples: u64) -> ServingOptions {
+        self.checkpoint_interval = samples.max(1);
+        self
+    }
 }
 
 /// One operation in a [`ServingEngine::run_session`] request stream: admit
@@ -584,6 +714,101 @@ struct Shard {
     in_tx: Option<SyncSender<StageMsg>>,
     out_rx: Receiver<StreamResult>,
     threads: Vec<JoinHandle<()>>,
+}
+
+/// Supervision state of one shard. In steady state every shard is
+/// `Healthy`; the other two states are transited synchronously inside the
+/// supervisor's recovery pass, so an observer between sessions sees
+/// either all-`Healthy` or a poisoned engine — the intermediate states
+/// surface through [`ServingEngine::shard_health`] during recovery and in
+/// the recovery counters afterwards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Serving traffic.
+    Healthy,
+    /// Detected dead; its in-flight streams have been settled as
+    /// [`ServingError::ShardLost`] and its threads are being reaped.
+    Quarantined,
+    /// Stage pipeline being rebuilt from the last connectome checkpoint
+    /// (import fence + config-epoch replay).
+    Rebuilding,
+}
+
+/// An in-memory recovery point: the per-shard, per-layer connectome
+/// state fenced at a sample-group boundary, plus the config epoch it was
+/// fenced under. A shard rebuilt from `layers[shard]` and replayed
+/// through every committed program after `epoch` is bit-exact with its
+/// never-died twin: at group boundaries membranes are settled to rest by
+/// construction, so registers + packed weights + epoch are the complete
+/// state, and replay is idempotent (cfg writes are absolute, wt swaps are
+/// whole payloads).
+struct Checkpoint {
+    epoch: u64,
+    /// `ServingEngine::completed` when the fence was taken — the age
+    /// ledger behind [`ServingEngine::checkpoint_age_samples`].
+    completed: u64,
+    layers: Vec<Vec<LayerExport>>,
+}
+
+/// Spin up one shard's stage chain + collector (shared by construction
+/// and by the supervisor's shard rebuild, which must produce an
+/// identically-shaped pipeline for the import fence and epoch replay).
+#[allow(clippy::too_many_arguments)]
+fn spawn_shard(
+    layers: Vec<Layer>,
+    regs: &RegisterFile,
+    queue_depth: usize,
+    lanes: usize,
+    wants_planes: bool,
+    max_width: usize,
+    n_out: usize,
+    plane_pool: &Arc<PlanePool>,
+    matrix_pool: &Arc<MatrixPool>,
+) -> Shard {
+    let mut threads = Vec::with_capacity(layers.len() + 1);
+    let (first_tx, mut chain_rx) = sync_channel::<StageMsg>(queue_depth);
+    for (layer_idx, layer) in layers.into_iter().enumerate() {
+        let (tx, next_rx) = sync_channel::<StageMsg>(queue_depth);
+        let stage_regs = regs.clone();
+        let rx = std::mem::replace(&mut chain_rx, next_rx);
+        // Two pre-sized buffers per stage-local free list cover the
+        // one output buffer a stage ever needs in hand (planes on
+        // the single-sample path, lane matrices in batched mode).
+        // A sparse-fallback engine mixes both message kinds, so its
+        // stages carry both free lists.
+        let stage_pool = if wants_planes {
+            vec![
+                SpikePlane::with_line_capacity(max_width),
+                SpikePlane::with_line_capacity(max_width),
+            ]
+        } else {
+            Vec::new()
+        };
+        let stage_mats = if lanes > 1 {
+            vec![
+                SpikeMatrix::with_line_capacity(max_width),
+                SpikeMatrix::with_line_capacity(max_width),
+            ]
+        } else {
+            Vec::new()
+        };
+        threads.push(std::thread::spawn(move || {
+            stage_loop(layer_idx, layer, stage_regs, rx, tx, stage_pool, stage_mats)
+        }));
+    }
+    // In lane mode a single FlushLanes emits up to lane_width
+    // results at once; the result channel must absorb a whole
+    // group so the collector never wedges mid-flush.
+    let (out_tx, out_rx) = sync_channel::<StreamResult>(queue_depth.max(lanes) + lanes);
+    let collector_rx = chain_rx;
+    let collector_pool = plane_pool.clone();
+    let collector_mats = matrix_pool.clone();
+    threads.push(std::thread::spawn(move || {
+        collector_loop(n_out, collector_rx, collector_pool, collector_mats, |r| {
+            out_tx.send(r).is_ok()
+        })
+    }));
+    Shard { in_tx: Some(first_tx), out_rx, threads }
 }
 
 /// C sharded, per-layer-pipelined QUANTISENC cores behind one batched,
@@ -642,9 +867,37 @@ pub struct ServingEngine {
     /// Cumulative [`ActivityStats`] over every completed stream — the
     /// engine-lifetime activity ledger a connectome snapshot carries.
     activity: ActivityStats,
-    /// Set when a batch failed mid-flight: in-flight state is then
-    /// indeterminate, so the engine refuses further batches (rebuild it).
+    /// Set when the engine failed in a way the supervisor cannot repair
+    /// (feeder panic, scheduler bug, failed rebuild): in-flight state is
+    /// then indeterminate, so the engine refuses further batches. A mere
+    /// shard death does NOT poison — the supervisor quarantines and
+    /// rebuilds it instead.
     poisoned: bool,
+    // ---- supervision state ----------------------------------------
+    /// Per-shard health; all-`Healthy` between sessions unless poisoned.
+    health: Vec<ShardHealth>,
+    /// The live recovery point (always `Some` once construction
+    /// completes; an `Option` only for staged initialization).
+    checkpoint: Option<Checkpoint>,
+    checkpoint_interval: u64,
+    quarantines: u64,
+    recoveries: u64,
+    /// Cumulative wall-clock spent with any shard not `Healthy`.
+    degraded: Duration,
+    /// Per-recovery latency (detection → re-admission), milliseconds —
+    /// the distribution `repro chaos-soak` reports as p50/p99.
+    recovery_ms: Vec<f64>,
+    /// Installed fault schedule ([`ServingEngine::install_chaos`]) and
+    /// the index of the first event not yet fired.
+    chaos: Option<ChaosSchedule>,
+    // ---- rebuild parameters (frozen at construction) ---------------
+    queue_depth: usize,
+    max_width: usize,
+    wants_planes: bool,
+    /// The pool prefill bound (`cores * per_shard`); recovery tops the
+    /// pools back up to it after a dead shard drops its in-flight
+    /// buffers, so the zero-miss invariant survives re-admission.
+    pool_target: usize,
 }
 
 impl ServingEngine {
@@ -703,54 +956,21 @@ impl ServingEngine {
                 packed_sizes = layers.iter().map(|l| l.memory().synapses()).collect();
                 synapse_words = packed_sizes.iter().sum();
             }
-            let mut threads = Vec::with_capacity(layers.len() + 1);
-            let (first_tx, mut chain_rx) = sync_channel::<StageMsg>(options.queue_depth);
-            for (layer_idx, layer) in layers.into_iter().enumerate() {
-                let (tx, next_rx) = sync_channel::<StageMsg>(options.queue_depth);
-                let stage_regs = regs.clone();
-                let rx = std::mem::replace(&mut chain_rx, next_rx);
-                // Two pre-sized buffers per stage-local free list cover the
-                // one output buffer a stage ever needs in hand (planes on
-                // the single-sample path, lane matrices in batched mode).
-                // A sparse-fallback engine mixes both message kinds, so its
-                // stages carry both free lists.
-                let stage_pool = if wants_planes {
-                    vec![
-                        SpikePlane::with_line_capacity(max_width),
-                        SpikePlane::with_line_capacity(max_width),
-                    ]
-                } else {
-                    Vec::new()
-                };
-                let stage_mats = if lanes > 1 {
-                    vec![
-                        SpikeMatrix::with_line_capacity(max_width),
-                        SpikeMatrix::with_line_capacity(max_width),
-                    ]
-                } else {
-                    Vec::new()
-                };
-                threads.push(std::thread::spawn(move || {
-                    stage_loop(layer_idx, layer, stage_regs, rx, tx, stage_pool, stage_mats)
-                }));
-            }
-            // In lane mode a single FlushLanes emits up to lane_width
-            // results at once; the result channel must absorb a whole
-            // group so the collector never wedges mid-flush.
-            let (out_tx, out_rx) =
-                sync_channel::<StreamResult>(options.queue_depth.max(lanes) + lanes);
-            let collector_rx = chain_rx;
-            let collector_pool = plane_pool.clone();
-            let collector_mats = matrix_pool.clone();
-            threads.push(std::thread::spawn(move || {
-                collector_loop(n_out, collector_rx, collector_pool, collector_mats, |r| {
-                    out_tx.send(r).is_ok()
-                })
-            }));
-            shards.push(Shard { in_tx: Some(first_tx), out_rx, threads });
+            shards.push(spawn_shard(
+                layers,
+                regs,
+                options.queue_depth,
+                lanes,
+                wants_planes,
+                max_width,
+                n_out,
+                &plane_pool,
+                &matrix_pool,
+            ));
         }
         let control = Arc::new(ControlShared::new(regs.clone(), packed_sizes, options.cores));
-        Ok(ServingEngine {
+        let mut engine = ServingEngine {
+            health: vec![ShardHealth::Healthy; shards.len()],
             shards,
             config: config.clone(),
             inputs: config.inputs(),
@@ -765,7 +985,22 @@ impl ServingEngine {
             completed: 0,
             activity: ActivityStats::default(),
             poisoned: false,
-        })
+            checkpoint: None,
+            checkpoint_interval: options.checkpoint_interval.max(1),
+            quarantines: 0,
+            recoveries: 0,
+            degraded: Duration::ZERO,
+            recovery_ms: Vec::new(),
+            chaos: None,
+            queue_depth: options.queue_depth,
+            max_width,
+            wants_planes,
+            pool_target: options.cores * per_shard,
+        };
+        // Checkpoint zero: the construction state is always a valid
+        // recovery point, so supervision covers the very first sample.
+        engine.take_checkpoint()?;
+        Ok(engine)
     }
 
     /// Samples stepped per shard message (1 = single-sample path).
@@ -856,6 +1091,17 @@ impl ServingEngine {
         self.run_session(&ops)
     }
 
+    /// Per-stream twin of [`ServingEngine::run_batch`]: one outcome per
+    /// sample, `Err(ShardLost)` only for streams that were in a dying
+    /// shard's FIFO (see [`ServingEngine::run_session_outcomes`]).
+    pub fn run_batch_outcomes(
+        &mut self,
+        samples: &[Sample],
+    ) -> Result<Vec<Result<StreamResult, ServingError>>> {
+        let ops: Vec<SessionOp> = samples.iter().map(SessionOp::Submit).collect();
+        self.run_session_outcomes(&ops)
+    }
+
     /// Serve a request stream that interleaves samples with in-band
     /// reconfigurations. Each [`SessionOp::Reconfig`] takes effect at
     /// exactly its position: samples before it complete under the previous
@@ -868,6 +1114,40 @@ impl ServingEngine {
     /// In-band programs are validated up front; an invalid program fails
     /// the call before any sample is admitted (the engine stays healthy).
     pub fn run_session(&mut self, ops: &[SessionOp]) -> Result<Vec<StreamResult>> {
+        let outcomes = self.run_session_outcomes(ops)?;
+        let mut results = Vec::with_capacity(outcomes.len());
+        for outcome in outcomes {
+            // Fail-fast view: the first lost stream fails the call. The
+            // engine itself was already healed by the outcomes pass (it is
+            // NOT poisoned) — the caller only lost this session's results.
+            results.push(outcome.map_err(anyhow::Error::from)?);
+        }
+        Ok(results)
+    }
+
+    /// Serve a request stream with **per-stream settlement**: one outcome
+    /// per [`SessionOp::Submit`], in submission order. `Ok` results are
+    /// bit-identical to a sequential [`crate::hdl::Core`] run;
+    /// `Err(`[`ServingError::ShardLost`]`)` settles exactly the streams
+    /// that were in a dying shard's FIFO behind the fault. The call itself
+    /// only fails for whole-engine conditions: poisoned/shut-down engine,
+    /// invalid in-band program (checked before any admission), a feeder
+    /// panic, or a failed shard rebuild.
+    ///
+    /// This is the supervised entry point. Before admission the engine
+    /// heals any shard that died since the last session and refreshes the
+    /// in-memory recovery point when the checkpoint cadence is due
+    /// ([`ServingOptions::checkpoint_interval`]); after the drain, every
+    /// shard lost mid-session is quarantined, rebuilt bit-exactly from the
+    /// last checkpoint (import fence + config-epoch replay), and
+    /// re-admitted to the dispatcher — the engine returns to
+    /// all-[`Healthy`](ShardHealth::Healthy) before this returns, and the
+    /// surviving shards serve throughout (graceful degradation: a fault
+    /// costs its own shard's in-flight streams, nothing else).
+    pub fn run_session_outcomes(
+        &mut self,
+        ops: &[SessionOp],
+    ) -> Result<Vec<Result<StreamResult, ServingError>>> {
         anyhow::ensure!(
             !self.poisoned,
             "serving engine poisoned by an earlier failed batch; build a new engine"
@@ -889,6 +1169,11 @@ impl ServingEngine {
                 }
             }
         }
+        // Supervised pre-pass: heal anything that died between sessions
+        // (e.g. a fault that landed after the previous drain finished) and
+        // refresh the recovery point if the cadence is due.
+        self.heal()?;
+        self.maybe_checkpoint()?;
         let n_cores = self.shards.len();
         // A shut-down engine has dropped its stage senders; submitting to
         // it is a typed, recoverable refusal — not an `expect` panic.
@@ -899,6 +1184,22 @@ impl ServingEngine {
                 None => return Err(ServingError::ShutDown.into()),
             }
         }
+        // This session's slice of the installed chaos schedule, rebased to
+        // session-local sample indices, plus the kill set for post-session
+        // supervision (a fault landing after a shard's last assigned
+        // stream loses nothing but still must be healed before the next
+        // session — the drainer alone would never see it).
+        let base = self.submitted;
+        let chaos_events: Vec<(usize, chaos::ChaosEvent)> = self
+            .chaos
+            .as_ref()
+            .map(|c| c.window(base, base + n_samples as u64))
+            .unwrap_or_default();
+        let chaos_suspects: Vec<usize> = chaos_events
+            .iter()
+            .filter(|(_, e)| !matches!(e.kind, ChaosKind::SlowStage { .. }))
+            .map(|(_, e)| e.shard)
+            .collect();
         let control = self.control.clone();
         let plane_pool = self.plane_pool.clone();
         let matrix_pool = self.matrix_pool.clone();
@@ -914,309 +1215,616 @@ impl ServingEngine {
         // bookkeeping while holding backpressured data channels.
         let (assign_tx, assign_rx) = std::sync::mpsc::channel::<(usize, usize)>();
 
-        let results = std::thread::scope(|scope| -> Result<Vec<StreamResult>> {
-            // Feeder: streams every sample to a shard (blocking on the
-            // bounded channels = admission control) and broadcasts control
-            // programs to *all* shards at sample boundaries, so the FIFO
-            // position of a Reconfig is identical in every chain. In
-            // lane-batched mode (`lane_width > 1`) consecutive samples are
-            // packed into one lane group sent as a SpikeMatrix per
-            // timestep, and each ready group goes to the shard with the
-            // least cumulative dispatched work (see [`dispatch_group`]);
-            // partial groups are flushed before any reconfiguration
-            // broadcast, so epoch semantics are unchanged. Every dispatch
-            // appends an assignment record the drainer follows.
-            let feeder = scope.spawn(move || -> Result<()> {
-                let dead = || anyhow::anyhow!("serving shard died");
-                let broadcast = |epoch: u64, program: &Arc<ReconfigProgram>| -> Result<()> {
-                    for tx in &senders {
-                        tx.send(StageMsg::Reconfig { epoch, program: program.clone() })
-                            .map_err(|_| dead())?;
-                    }
-                    Ok(())
-                };
-                // The single lane group under construction (consecutive
-                // stream ids + samples); unused on the single-sample path.
-                let mut pending: (Vec<usize>, Vec<&Sample>) = (Vec::new(), Vec::new());
-                // Cumulative dispatched step-cost per shard — the
-                // deterministic load model behind [`least_loaded`].
-                let mut load = vec![0u64; n_cores];
-                // Firing-rate-aware routing: a sample whose input density
-                // is below the cutoff skips lane packing entirely and
-                // streams as a single-sample plane sequence, where the
-                // layers' quiescence fast path elides most neuron work.
-                let is_sparse = |s: &Sample| {
-                    sparse_cutoff.is_some_and(|cut| {
-                        let slots = (s.t_steps * s.inputs).max(1) as f64;
-                        (s.nnz() as f64) < cut * slots
-                    })
-                };
-                let mut stream = 0usize;
-                for op in ops {
-                    // Programs applied asynchronously through a ControlPlane
-                    // handle land here, at the next sample boundary (group
-                    // boundary in lane mode: the partial group goes first so
-                    // already-admitted samples keep the old epoch).
-                    let async_programs = control.take_pending();
-                    if !async_programs.is_empty() {
-                        dispatch_group(
-                            &mut pending,
-                            &senders,
-                            &mut load,
-                            &assign_tx,
-                            &matrix_pool,
-                            lane_width,
-                            inputs,
-                        )?;
-                        for (epoch, program) in async_programs {
-                            broadcast(epoch, &program)?;
-                        }
-                    }
-                    match op {
-                        SessionOp::Submit(sample) if lane_width == 1 => {
-                            // Single-sample mode keeps the static
-                            // round-robin schedule — it is the conformance
-                            // fallback and oracle for the adaptive path.
-                            let shard = stream % n_cores;
-                            let tx = &senders[shard];
-                            let _ = assign_tx.send((shard, 1));
-                            for t in 0..sample.t_steps {
-                                // Encode straight into a recycled pool
-                                // plane — no per-timestep Vec allocation.
-                                let mut plane = plane_pool.take();
-                                sample.step_plane_into(t, &mut plane);
-                                tx.send(StageMsg::Step { stream, plane })
-                                    .map_err(|_| dead())?;
-                            }
-                            tx.send(StageMsg::Flush { stream, stats: ActivityStats::default() })
-                                .map_err(|_| dead())?;
-                            control.charge_spk_in(sample.nnz() as u64);
-                            stream += 1;
-                        }
-                        SessionOp::Submit(sample) if is_sparse(sample) => {
-                            // Sparse fallback: flush the pending group
-                            // first so results stay in submission order,
-                            // then stream this sample alone to the
-                            // least-loaded shard as planes.
+        let outcomes = std::thread::scope(
+            |scope| -> Result<Vec<Result<StreamResult, ServingError>>> {
+                // Feeder: streams every sample to a shard (blocking on the
+                // bounded channels = admission control), fires this
+                // session's chaos injections at their exact sample indices,
+                // and broadcasts control programs to every *live* shard at
+                // sample boundaries (a dead shard catches up during its
+                // rebuild by replaying the committed history). In
+                // lane-batched mode consecutive samples are packed into one
+                // lane group sent as a SpikeMatrix per timestep, and each
+                // ready group goes to the live shard with the least
+                // cumulative dispatched work; partial groups are flushed
+                // before any broadcast or injection, so epoch and fault
+                // positions are exact. The feeder is resilient by design —
+                // a failed send marks the shard dead and moves on; it
+                // records an assignment for every stream regardless (so the
+                // drainer can settle the lost ones) and never errors.
+                let feeder = scope.spawn(move || {
+                    let mut alive = vec![true; n_cores];
+                    // The single lane group under construction (consecutive
+                    // stream ids + samples); unused on the single-sample path.
+                    let mut pending: (Vec<usize>, Vec<&Sample>) = (Vec::new(), Vec::new());
+                    // Cumulative dispatched step-cost per shard — the
+                    // deterministic load model behind [`least_loaded`].
+                    let mut load = vec![0u64; n_cores];
+                    let mut injections = chaos_events.iter().peekable();
+                    // Firing-rate-aware routing: a sample whose input density
+                    // is below the cutoff skips lane packing entirely and
+                    // streams as a single-sample plane sequence, where the
+                    // layers' quiescence fast path elides most neuron work.
+                    let is_sparse = |s: &Sample| {
+                        sparse_cutoff.is_some_and(|cut| {
+                            let slots = (s.t_steps * s.inputs).max(1) as f64;
+                            (s.nnz() as f64) < cut * slots
+                        })
+                    };
+                    let mut stream = 0usize;
+                    for op in ops {
+                        // Programs applied asynchronously through a ControlPlane
+                        // handle land here, at the next sample boundary (group
+                        // boundary in lane mode: the partial group goes first so
+                        // already-admitted samples keep the old epoch).
+                        let async_programs = control.take_pending();
+                        if !async_programs.is_empty() {
                             dispatch_group(
                                 &mut pending,
                                 &senders,
+                                &mut alive,
                                 &mut load,
                                 &assign_tx,
                                 &matrix_pool,
                                 lane_width,
                                 inputs,
-                            )?;
-                            let shard = least_loaded(&load);
-                            load[shard] += sample.t_steps as u64 + 1;
-                            let _ = assign_tx.send((shard, 1));
-                            let tx = &senders[shard];
-                            for t in 0..sample.t_steps {
-                                let mut plane = plane_pool.take();
-                                sample.step_plane_into(t, &mut plane);
-                                tx.send(StageMsg::Step { stream, plane })
-                                    .map_err(|_| dead())?;
+                            );
+                            for (epoch, program) in async_programs {
+                                broadcast_program(&senders, &mut alive, epoch, &program);
                             }
-                            tx.send(StageMsg::Flush { stream, stats: ActivityStats::default() })
-                                .map_err(|_| dead())?;
-                            control.charge_spk_in(sample.nnz() as u64);
-                            stream += 1;
                         }
-                        SessionOp::Submit(sample) => {
-                            pending.0.push(stream);
-                            pending.1.push(*sample);
-                            control.charge_spk_in(sample.nnz() as u64);
-                            stream += 1;
-                            if pending.1.len() == lane_width {
+                        match op {
+                            SessionOp::Submit(sample) => {
+                                // Chaos injections scheduled at this sample's
+                                // admission fire first, after flushing the
+                                // pending group — every earlier stream's
+                                // position relative to the fault is exact.
+                                while injections.peek().is_some_and(|(rel, _)| *rel <= stream) {
+                                    let (_, e) = injections.next().expect("peeked");
+                                    dispatch_group(
+                                        &mut pending,
+                                        &senders,
+                                        &mut alive,
+                                        &mut load,
+                                        &assign_tx,
+                                        &matrix_pool,
+                                        lane_width,
+                                        inputs,
+                                    );
+                                    if alive[e.shard]
+                                        && senders[e.shard]
+                                            .send(StageMsg::Chaos { kind: e.kind })
+                                            .is_err()
+                                    {
+                                        alive[e.shard] = false;
+                                    }
+                                }
+                                if lane_width == 1 {
+                                    // Single-sample mode keeps the static
+                                    // round-robin schedule — the conformance
+                                    // fallback and oracle for the adaptive
+                                    // path. A stream whose round-robin shard
+                                    // has died reroutes to the next live one:
+                                    // still a pure function of the op stream
+                                    // and the fault point, so deterministic.
+                                    let mut shard = stream % n_cores;
+                                    for k in 0..n_cores {
+                                        let cand = (stream + k) % n_cores;
+                                        if alive[cand] {
+                                            shard = cand;
+                                            break;
+                                        }
+                                    }
+                                    let _ = assign_tx.send((shard, 1));
+                                    if alive[shard]
+                                        && !feed_single(
+                                            &senders[shard],
+                                            stream,
+                                            sample,
+                                            &plane_pool,
+                                        )
+                                    {
+                                        alive[shard] = false;
+                                    }
+                                    control.charge_spk_in(sample.nnz() as u64);
+                                    stream += 1;
+                                } else if is_sparse(sample) {
+                                    // Sparse fallback: flush the pending group
+                                    // first so results stay in submission
+                                    // order, then stream this sample alone to
+                                    // the least-loaded live shard as planes.
+                                    dispatch_group(
+                                        &mut pending,
+                                        &senders,
+                                        &mut alive,
+                                        &mut load,
+                                        &assign_tx,
+                                        &matrix_pool,
+                                        lane_width,
+                                        inputs,
+                                    );
+                                    let shard = least_loaded(&load, &alive);
+                                    load[shard] += sample.t_steps as u64 + 1;
+                                    let _ = assign_tx.send((shard, 1));
+                                    if alive[shard]
+                                        && !feed_single(
+                                            &senders[shard],
+                                            stream,
+                                            sample,
+                                            &plane_pool,
+                                        )
+                                    {
+                                        alive[shard] = false;
+                                    }
+                                    control.charge_spk_in(sample.nnz() as u64);
+                                    stream += 1;
+                                } else {
+                                    pending.0.push(stream);
+                                    pending.1.push(*sample);
+                                    control.charge_spk_in(sample.nnz() as u64);
+                                    stream += 1;
+                                    if pending.1.len() == lane_width {
+                                        dispatch_group(
+                                            &mut pending,
+                                            &senders,
+                                            &mut alive,
+                                            &mut load,
+                                            &assign_tx,
+                                            &matrix_pool,
+                                            lane_width,
+                                            inputs,
+                                        );
+                                    }
+                                }
+                            }
+                            SessionOp::Reconfig(program) => {
                                 dispatch_group(
                                     &mut pending,
                                     &senders,
+                                    &mut alive,
                                     &mut load,
                                     &assign_tx,
                                     &matrix_pool,
                                     lane_width,
                                     inputs,
-                                )?;
+                                );
+                                let (drained, epoch, program) =
+                                    control.commit_in_band(program.clone());
+                                for (e, p) in drained {
+                                    broadcast_program(&senders, &mut alive, e, &p);
+                                }
+                                broadcast_program(&senders, &mut alive, epoch, &program);
                             }
-                        }
-                        SessionOp::Reconfig(program) => {
-                            dispatch_group(
-                                &mut pending,
-                                &senders,
-                                &mut load,
-                                &assign_tx,
-                                &matrix_pool,
-                                lane_width,
-                                inputs,
-                            )?;
-                            let (drained, epoch, program) =
-                                control.commit_in_band(program.clone());
-                            for (e, p) in drained {
-                                broadcast(e, &p)?;
-                            }
-                            broadcast(epoch, &program)?;
                         }
                     }
-                }
-                dispatch_group(
-                    &mut pending,
-                    &senders,
-                    &mut load,
-                    &assign_tx,
-                    &matrix_pool,
-                    lane_width,
-                    inputs,
-                )
-                // `assign_tx` drops here, which is what ends the drainer's
-                // record iteration once every queued result is harvested.
-            });
+                    dispatch_group(
+                        &mut pending,
+                        &senders,
+                        &mut alive,
+                        &mut load,
+                        &assign_tx,
+                        &matrix_pool,
+                        lane_width,
+                        inputs,
+                    );
+                    // `assign_tx` drops here, which is what ends the drainer's
+                    // record iteration once every queued result is harvested.
+                });
 
-            // Drainer (this thread): follows the feeder's assignment
-            // records in dispatch order. Units (groups or singles) pack
-            // consecutive stream ids and each shard's pipeline is FIFO, so
-            // the next `n` in-order results are always at the head of the
-            // recorded shard's output queue — popping record by record
-            // restores global order regardless of how the load balancer
-            // scattered units across shards. recv_timeout (rather than
-            // recv) is a liveness bound, not a latency budget: it only
-            // fires if a shard produces *nothing* for a very long time (a
-            // wedged/dead pipeline), abandoning the batch with an error.
-            let mut results = Vec::with_capacity(n_samples);
-            let mut first_err: Option<anyhow::Error> = None;
-            'drain: for (shard, n) in assign_rx.iter() {
-                for _ in 0..n {
-                    match self.shards[shard]
-                        .out_rx
-                        .recv_timeout(std::time::Duration::from_secs(3600))
-                    {
-                        Ok(r) => {
-                            debug_assert_eq!(
-                                r.stream_id,
-                                results.len(),
-                                "shard FIFO order violated"
-                            );
-                            self.control.charge_spk_out(r.spikes_total);
-                            results.push(r);
-                        }
-                        Err(_) => {
-                            first_err = Some(anyhow::anyhow!(
-                                "serving shard {shard} produced no result {}",
-                                results.len()
-                            ));
-                            break 'drain;
+                // Drainer (this thread): follows the feeder's assignment
+                // records in dispatch order. Units (groups or singles) pack
+                // consecutive stream ids and each shard's pipeline is FIFO,
+                // so the next `n` in-order results are always at the head
+                // of the recorded shard's output queue — popping record by
+                // record restores global order regardless of how the load
+                // balancer scattered units across shards. A disconnected
+                // output channel is the death cascade completing: the
+                // record's remaining streams (and every later record on
+                // that shard) were in the dying FIFO behind the fault, and
+                // each settles as exactly one typed ShardLost outcome —
+                // the surviving shards' records keep draining normally.
+                // recv_timeout is a liveness bound, not a latency budget:
+                // it only fires for a shard wedged for an hour, which is
+                // then settled as lost rather than hanging the session.
+                let mut outcomes: Vec<Result<StreamResult, ServingError>> =
+                    Vec::with_capacity(n_samples);
+                for (shard, n) in assign_rx.iter() {
+                    for _ in 0..n {
+                        match self.shards[shard]
+                            .out_rx
+                            .recv_timeout(std::time::Duration::from_secs(3600))
+                        {
+                            Ok(r) => {
+                                debug_assert_eq!(
+                                    r.stream_id,
+                                    outcomes.len(),
+                                    "shard FIFO order violated"
+                                );
+                                self.control.charge_spk_out(r.spikes_total);
+                                outcomes.push(Ok(r));
+                            }
+                            Err(_) => {
+                                outcomes
+                                    .push(Err(ServingError::ShardLost { shard, resumable: true }));
+                            }
                         }
                     }
                 }
-            }
-            if first_err.is_some() {
-                // Failure path: unblock the feeder by continuously draining
-                // every shard's output (discarding — order is gone) until
-                // the feeder exits; its sends either succeed into chains we
-                // keep empty or fail on the dead shard. The engine is then
-                // poisoned: leftover in-flight results make further batches
-                // unsound, and shutdown() drains them while joining.
-                while !feeder.is_finished() {
-                    for shard in &self.shards {
-                        while shard.out_rx.try_recv().is_ok() {}
-                    }
-                    std::thread::sleep(std::time::Duration::from_millis(10));
-                }
-            }
-            // The feeder is joined explicitly (never `expect`ed): a panic
-            // there must become a typed error, not a process abort.
-            let fed = match feeder.join() {
-                Ok(r) => r,
-                Err(payload) => {
+                // The feeder is infallible and joined explicitly (never
+                // `expect`ed): a panic there must become a typed error, not
+                // a process abort.
+                if let Err(payload) = feeder.join() {
                     return Err(ServingError::WorkerPanicked {
                         worker: "session feeder".to_string(),
                         message: panic_message(payload),
                     }
-                    .into())
+                    .into());
                 }
-            };
-            if let Some(e) = first_err {
-                return Err(e);
-            }
-            fed?;
-            // Backstop: a healthy feeder emits exactly one record slot per
-            // submitted sample, so a shortfall here is a scheduler bug
-            // (records ran out early), not a shard failure.
-            anyhow::ensure!(
-                results.len() == n_samples,
-                "serving session drained {} of {n_samples} results",
-                results.len()
-            );
-            Ok(results)
-        });
+                // Backstop: the feeder emits exactly one record slot per
+                // submitted sample and the drainer settles every slot, so
+                // a shortfall here is a scheduler bug, not a shard failure.
+                anyhow::ensure!(
+                    outcomes.len() == n_samples,
+                    "serving session settled {} of {n_samples} streams",
+                    outcomes.len()
+                );
+                Ok(outcomes)
+            },
+        );
 
         self.submitted += n_samples as u64;
-        match results {
-            Ok(results) => {
-                // Zero-alloc invariant: the pre-filled pool covers the
-                // engine's maximum in-flight footprint, so steady-state
-                // streaming must not have allocated a single plane.
-                debug_assert_eq!(
-                    self.plane_pool.misses(),
-                    pool_misses_before,
-                    "steady-state streaming allocated spike planes (pool underprovisioned)"
-                );
-                debug_assert_eq!(
-                    self.matrix_pool.misses(),
-                    mat_misses_before,
-                    "steady-state lane streaming allocated spike matrices (pool underprovisioned)"
-                );
-                self.completed += results.len() as u64;
-                for r in &results {
-                    self.activity.add(&r.stats);
+        match outcomes {
+            Ok(outcomes) => {
+                let mut suspects = chaos_suspects;
+                let mut lost_any = false;
+                for outcome in &outcomes {
+                    match outcome {
+                        Ok(r) => {
+                            self.completed += 1;
+                            self.activity.add(&r.stats);
+                        }
+                        Err(ServingError::ShardLost { shard, .. }) => {
+                            lost_any = true;
+                            suspects.push(*shard);
+                        }
+                        Err(_) => {}
+                    }
                 }
-                Ok(results)
+                if !lost_any {
+                    // Zero-alloc invariant: the pre-filled pool covers the
+                    // engine's maximum in-flight footprint, so steady-state
+                    // streaming must not have allocated a single plane.
+                    // (A dying shard drops its in-flight buffers, so the
+                    // invariant is only asserted on loss-free sessions;
+                    // recovery refills the pools to the construction bound
+                    // before the next session is admitted.)
+                    debug_assert_eq!(
+                        self.plane_pool.misses(),
+                        pool_misses_before,
+                        "steady-state streaming allocated spike planes (pool underprovisioned)"
+                    );
+                    debug_assert_eq!(
+                        self.matrix_pool.misses(),
+                        mat_misses_before,
+                        "steady-state lane streaming allocated spike matrices (pool underprovisioned)"
+                    );
+                }
+                // Supervised recovery: every shard that died this session —
+                // whether it lost streams or its fault landed after its
+                // last assigned one — is rebuilt before this returns, so
+                // the engine hands back all-Healthy (or poisons itself if
+                // a rebuild is impossible).
+                suspects.sort_unstable();
+                suspects.dedup();
+                suspects.retain(|&d| self.shards[d].in_tx.is_some());
+                if !suspects.is_empty() {
+                    self.recover_or_poison(&suspects)?;
+                }
+                Ok(outcomes)
             }
             Err(e) => {
+                // Whole-engine failure (feeder panic or scheduler bug):
+                // in-flight state is indeterminate, so poison and shut
+                // down — but stay droppable (Drop re-runs the idempotent
+                // shutdown).
                 self.poisoned = true;
-                // If the batch died because a shard worker panicked,
-                // surface the typed panic error instead of the generic
-                // drain failure, then leave the engine shut down but
-                // droppable (Drop re-runs the idempotent shutdown).
-                let panicked = self.harvest_worker_panic();
                 self.shutdown();
-                match panicked {
-                    Some(err) => Err(err.into()),
-                    None => Err(e),
-                }
+                Err(e)
             }
         }
     }
 
-    /// After a failed batch, reap every shard thread that has already
-    /// exited and report the first panic payload found. Only finished
-    /// threads are joined (a healthy upstream stage may be parked on its
-    /// input channel), and a panicked thread finishes unwinding within
-    /// microseconds of killing the batch — polled briefly to close that
-    /// race without ever blocking on a live worker.
-    fn harvest_worker_panic(&mut self) -> Option<ServingError> {
-        for _ in 0..50 {
-            let mut found = None;
-            for (shard_idx, shard) in self.shards.iter_mut().enumerate() {
-                let mut i = 0;
-                while i < shard.threads.len() {
-                    if shard.threads[i].is_finished() {
-                        if let Err(payload) = shard.threads.remove(i).join() {
-                            found.get_or_insert(ServingError::WorkerPanicked {
-                                worker: format!("shard {shard_idx} worker"),
-                                message: panic_message(payload),
-                            });
-                        }
-                    } else {
-                        i += 1;
-                    }
-                }
-            }
-            if found.is_some() {
-                return found;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(5));
+    // ---- supervision ----------------------------------------------------
+
+    /// Install a deterministic fault schedule (see [`chaos`]). Event
+    /// sample indices are engine-lifetime (`submitted`-relative), so a
+    /// schedule installed on a fresh engine addresses global sample
+    /// counts regardless of how traffic is split into sessions.
+    pub fn install_chaos(&mut self, schedule: ChaosSchedule) {
+        self.chaos = Some(schedule);
+    }
+
+    /// Per-shard supervision state. All `Healthy` between sessions unless
+    /// the engine is poisoned; the transient states are observable from
+    /// telemetry mirrors taken inside a recovery pass.
+    pub fn shard_health(&self) -> Vec<ShardHealth> {
+        self.health.clone()
+    }
+
+    /// Shards rebuilt from a checkpoint over the engine's lifetime.
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
+    }
+
+    /// Shards quarantined over the engine's lifetime. Equals
+    /// [`ServingEngine::recoveries`] unless a rebuild failed (which
+    /// poisons the engine with the quarantine still counted).
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines
+    }
+
+    /// Samples completed since the live recovery point was fenced — the
+    /// work a shard rebuild would discard right now (its lost-stream bound
+    /// is the in-flight window, but its *replay* distance is this).
+    pub fn checkpoint_age_samples(&self) -> u64 {
+        self.checkpoint.as_ref().map_or(0, |c| self.completed.saturating_sub(c.completed))
+    }
+
+    /// Cumulative wall-clock the engine has spent in degraded mode (one or
+    /// more shards not `Healthy`, i.e. inside recovery passes).
+    pub fn degraded_duration(&self) -> Duration {
+        self.degraded
+    }
+
+    /// Detection→re-admission latency of every completed shard recovery,
+    /// in milliseconds — the distribution `repro chaos-soak` reports as
+    /// p50/p99.
+    pub fn recovery_latencies_ms(&self) -> &[f64] {
+        &self.recovery_ms
+    }
+
+    /// Shards whose pipeline has died (still admitting, but some stage or
+    /// collector thread has exited) — the supervisor's detection
+    /// predicate. A dying shard's threads cascade out within microseconds
+    /// of the fault, so one finished thread is a reliable death signal.
+    fn dead_shards(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.in_tx.is_some() && s.threads.iter().any(|t| t.is_finished()))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Detect and rebuild every dead shard; returns how many were
+    /// recovered (0 when all shards are healthy). Runs automatically
+    /// before and after every session
+    /// ([`ServingEngine::run_session_outcomes`]); exposed for callers that
+    /// want to heal eagerly between sessions. On a failed rebuild the
+    /// engine poisons itself, shuts down, and returns the error.
+    pub fn heal(&mut self) -> Result<usize> {
+        if self.poisoned {
+            return Ok(0);
         }
-        None
+        let dead = self.dead_shards();
+        if dead.is_empty() {
+            return Ok(0);
+        }
+        self.recover_or_poison(&dead)
+    }
+
+    fn recover_or_poison(&mut self, dead: &[usize]) -> Result<usize> {
+        match self.recover(dead) {
+            Ok(n) => Ok(n),
+            Err(e) => {
+                self.poisoned = true;
+                self.shutdown();
+                Err(e.context("shard recovery failed; engine poisoned"))
+            }
+        }
+    }
+
+    /// Quarantine → teardown → rebuild-from-checkpoint → replay →
+    /// re-admit, for each listed shard.
+    ///
+    /// The rebuild is bit-exact by construction: checkpoints are fenced at
+    /// sample-group boundaries where every membrane is settled to rest, so
+    /// registers + packed weights + epoch are the *complete* state; the
+    /// import fence restores those, and the committed-program history
+    /// replays every epoch after the checkpoint (idempotently — cfg
+    /// writes are absolute, wt swaps are whole payloads). A rebuilt shard
+    /// is indistinguishable from one that never died.
+    fn recover(&mut self, dead: &[usize]) -> Result<usize> {
+        let window = Instant::now();
+        let ckpt_epoch = match &self.checkpoint {
+            Some(c) => c.epoch,
+            None => anyhow::bail!("no recovery point (construction checkpoint missing)"),
+        };
+        let mut recovered = 0usize;
+        for &d in dead {
+            if self.shards[d].in_tx.is_none() {
+                continue; // shut down, not supervised
+            }
+            self.health[d] = ShardHealth::Quarantined;
+            self.quarantines += 1;
+            let t0 = Instant::now();
+            // Teardown: close the chain, keep the output side drained so a
+            // collector blocked on a full channel can always exit, and
+            // reap every thread. Bounded — a shard that stays wedged past
+            // the deadline (a stall far beyond the chaos harness's scales)
+            // fails recovery instead of hanging the supervisor.
+            self.shards[d].in_tx = None;
+            let deadline = Instant::now() + Duration::from_secs(30);
+            loop {
+                while self.shards[d].out_rx.try_recv().is_ok() {}
+                if self.shards[d].threads.iter().all(|t| t.is_finished()) {
+                    break;
+                }
+                anyhow::ensure!(Instant::now() < deadline, "shard {d} wedged during teardown");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            for t in self.shards[d].threads.drain(..) {
+                // Panic payloads were already settled as typed ShardLost
+                // outcomes; joining here only releases the threads.
+                let _ = t.join();
+            }
+            while self.shards[d].out_rx.try_recv().is_ok() {}
+            // Rebuild: respawn the stage chain under the checkpoint's
+            // register file, restore its packed weights and neuron banks
+            // through the import fence, seed the collector's epoch tag,
+            // then replay every committed program after the checkpoint
+            // epoch (chaos injections in the history are skipped — they
+            // are faults, not configuration).
+            self.health[d] = ShardHealth::Rebuilding;
+            let ckpt = self.checkpoint.as_ref().expect("checked above");
+            let states = Arc::new(ckpt.layers[d].clone());
+            let regs = states[0].register_file(self.config.qspec)?;
+            let zeros: Vec<Vec<i32>> =
+                self.config.layers().iter().map(|l| vec![0i32; l.fan_in * l.neurons]).collect();
+            let layers = build_layers(&self.config, &zeros)?;
+            let shard = spawn_shard(
+                layers,
+                &regs,
+                self.queue_depth,
+                self.lane_width,
+                self.wants_planes,
+                self.max_width,
+                self.outputs,
+                &self.plane_pool,
+                &self.matrix_pool,
+            );
+            let tx = shard.in_tx.as_ref().expect("freshly spawned shard").clone();
+            let n_states = states.len();
+            let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+            tx.send(StageMsg::Import { states, reply: ack_tx })
+                .map_err(|_| anyhow::anyhow!("rebuilt shard {d} died before import"))?;
+            for k in 0..n_states {
+                ack_rx.recv_timeout(Duration::from_secs(60)).map_err(|_| {
+                    anyhow::anyhow!("rebuilt shard {d} stage {k} never acked its import")
+                })?;
+            }
+            for (e, p) in self.control.programs_since(ckpt_epoch) {
+                if p.chaos_panic_stage.is_some() {
+                    // Faults in the history are injections, not config.
+                    continue;
+                }
+                tx.send(StageMsg::Reconfig { epoch: e, program: p })
+                    .map_err(|_| anyhow::anyhow!("rebuilt shard {d} died during replay"))?;
+            }
+            // Epoch-tag sync: collectors tag results with the last Reconfig
+            // epoch they saw, and the fresh collector saw none of the
+            // pre-checkpoint (pruned) or chaos (skipped) epochs. Close the
+            // replay with an empty program carrying the committed epoch, so
+            // the rebuilt shard tags results identically to one that never
+            // died. (If programs are admitted-but-pending right now, every
+            // shard — rebuilt or not — re-syncs at the next session's
+            // broadcast; replayed programs re-applying then is sound
+            // because application is idempotent.)
+            tx.send(StageMsg::Reconfig {
+                epoch: self.control.epoch(),
+                program: Arc::new(ReconfigProgram::new()),
+            })
+            .map_err(|_| anyhow::anyhow!("rebuilt shard {d} died during epoch sync"))?;
+            self.shards[d] = shard;
+            self.health[d] = ShardHealth::Healthy;
+            self.recoveries += 1;
+            recovered += 1;
+            self.recovery_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
+        }
+        // The dead shards took their in-flight pool buffers down with them
+        // (queued planes/matrices drop with the channels). Top the shared
+        // pools back up to the construction prefill bound so the zero-miss
+        // invariant holds for traffic admitted after re-admission.
+        if self.wants_planes {
+            for _ in self.plane_pool.available()..self.pool_target {
+                self.plane_pool.put(SpikePlane::with_line_capacity(self.max_width));
+            }
+        }
+        if self.lane_width > 1 {
+            for _ in self.matrix_pool.available()..self.pool_target {
+                self.matrix_pool.put(SpikeMatrix::with_line_capacity(self.max_width));
+            }
+        }
+        self.degraded += window.elapsed();
+        Ok(recovered)
+    }
+
+    /// Fence the complete per-shard layer state through the per-shard
+    /// FIFOs (shared by [`ServingEngine::snapshot`] and the supervisor's
+    /// in-memory checkpoints). Bounded-poll per stage: a shard dying
+    /// *under the fence* is detected within milliseconds (one of its
+    /// threads has finished) instead of stalling for the liveness budget.
+    fn export_shards(&self) -> Result<Vec<Vec<LayerExport>>> {
+        let num_layers = self.config.num_layers();
+        let mut layers = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            let tx = match &shard.in_tx {
+                Some(tx) => tx.clone(),
+                None => return Err(ServingError::ShutDown.into()),
+            };
+            let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+            tx.send(StageMsg::Export { reply: reply_tx })
+                .map_err(|_| anyhow::anyhow!("serving shard died"))?;
+            // Stage order is the FIFO order: layer k's export arrives k-th.
+            let mut states = Vec::with_capacity(num_layers);
+            for k in 0..num_layers {
+                let deadline = Instant::now() + Duration::from_secs(60);
+                let state = loop {
+                    match reply_rx.recv_timeout(Duration::from_millis(20)) {
+                        Ok(s) => break s,
+                        Err(_) => {
+                            anyhow::ensure!(
+                                !shard.threads.iter().any(|t| t.is_finished()),
+                                "shard died under the export fence at stage {k}"
+                            );
+                            anyhow::ensure!(
+                                Instant::now() < deadline,
+                                "stage {k} never exported its state"
+                            );
+                        }
+                    }
+                };
+                states.push(state);
+            }
+            layers.push(states);
+        }
+        Ok(layers)
+    }
+
+    /// Fence a fresh in-memory recovery point and prune the control
+    /// plane's program history up to its epoch (no rebuild can ever
+    /// replay past a newer checkpoint, so older programs are dead weight).
+    pub fn take_checkpoint(&mut self) -> Result<()> {
+        let layers = self.export_shards()?;
+        let epoch = self.control.epoch();
+        self.checkpoint = Some(Checkpoint { epoch, completed: self.completed, layers });
+        self.control.prune_history(epoch);
+        Ok(())
+    }
+
+    /// Refresh the recovery point if the checkpoint cadence is due. A
+    /// shard dying *under the export fence* is handled here: the failed
+    /// fence names no usable state, so the supervisor waits out the death
+    /// cascade, heals from the previous checkpoint, and re-fences.
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        let due = match &self.checkpoint {
+            None => true,
+            Some(c) => self.completed.saturating_sub(c.completed) >= self.checkpoint_interval,
+        };
+        if !due {
+            return Ok(());
+        }
+        if self.take_checkpoint().is_ok() {
+            return Ok(());
+        }
+        for _ in 0..400 {
+            if !self.dead_shards().is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        anyhow::ensure!(self.heal()? > 0, "checkpoint fence failed with no dead shard to heal");
+        self.take_checkpoint()
     }
 
     /// Capture the complete engine state as a versioned
@@ -1236,26 +1844,7 @@ impl ServingEngine {
             "serving engine poisoned by an earlier failed batch; nothing coherent to snapshot"
         );
         let num_layers = self.config.num_layers();
-        let mut layers = Vec::with_capacity(self.shards.len());
-        for shard in &self.shards {
-            let tx = match &shard.in_tx {
-                Some(tx) => tx.clone(),
-                None => return Err(ServingError::ShutDown.into()),
-            };
-            let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-            tx.send(StageMsg::Export { reply: reply_tx })
-                .map_err(|_| anyhow::anyhow!("serving shard died"))?;
-            // Stage order is the FIFO order: layer k's export arrives k-th.
-            let mut states = Vec::with_capacity(num_layers);
-            for k in 0..num_layers {
-                states.push(
-                    reply_rx
-                        .recv_timeout(std::time::Duration::from_secs(60))
-                        .map_err(|_| anyhow::anyhow!("stage {k} never exported its state"))?,
-                );
-            }
-            layers.push(states);
-        }
+        let layers = self.export_shards()?;
         Ok(super::connectome::Connectome {
             qspec: self.config.qspec,
             mem: self.config.mem,
@@ -1329,6 +1918,10 @@ impl ServingEngine {
         engine.submitted = c.submitted;
         engine.completed = c.completed;
         engine.activity = c.activity;
+        // The construction checkpoint fenced the zero-weight scaffold;
+        // re-fence so the supervisor's recovery point reflects the
+        // restored weights, neuron banks, epoch, and completion ledger.
+        engine.take_checkpoint()?;
         Ok(engine)
     }
 
@@ -1833,12 +2426,13 @@ mod tests {
     }
 
     #[test]
-    fn panicked_worker_yields_typed_error_not_abort() {
-        // The headline bugfix: a panicking stage thread used to take the
-        // whole process down through `join().expect(...)`. Inject a panic
-        // into stage 1 of every shard via a chaos program and require a
-        // typed ServingError::WorkerPanicked instead — the process (and
-        // every other tenant) stays alive.
+    fn panicked_worker_yields_typed_error_then_heals() {
+        // PR 6 turned a stage panic from a process abort into a typed
+        // error; the supervisor upgrades it again: the panic costs exactly
+        // the streams behind it, surfaces as ShardLost, and the engine
+        // rebuilds itself from the last checkpoint instead of dying. Here
+        // the chaos program is broadcast, so *every* shard dies — the
+        // worst case — and the engine must still come back bit-exact.
         let (cfg, weights, regs, samples) = setup();
         let mut engine =
             ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
@@ -1847,17 +2441,313 @@ mod tests {
             SessionOp::Reconfig(ReconfigProgram::new().chaos_panic(1)),
             SessionOp::Submit(&samples[1]),
         ];
-        let err = engine.run_session(&ops).unwrap_err();
-        let ServingError::WorkerPanicked { worker, message } = err
-            .downcast_ref::<ServingError>()
-            .expect("panic must surface as the typed ServingError");
-        assert!(worker.contains("shard"), "panic attributed to a shard worker: {worker}");
-        assert!(message.contains("chaos"), "panic payload preserved: {message}");
-        // Shut-down-but-droppable: the engine refuses further batches with
-        // a poisoned-engine error, and dropping it is clean.
-        let refused = engine.run_batch(&samples[..1]).unwrap_err();
-        assert!(refused.to_string().contains("poisoned"), "{refused}");
+        let outcomes = engine.run_session_outcomes(&ops).unwrap();
+        assert_eq!(outcomes.len(), 2);
+        // Sample 0 fully preceded the fault in its shard's FIFO; sample 1
+        // rode behind the panic broadcast on the other shard.
+        assert!(outcomes[0].is_ok(), "pre-fault stream must survive");
+        assert!(
+            matches!(outcomes[1], Err(ServingError::ShardLost { resumable: true, .. })),
+            "stream behind the fault settles as typed ShardLost"
+        );
+        // Self-healing: all shards Healthy again, recoveries counted, and
+        // the next batch is bit-identical to a sequential core — tagged
+        // with the chaos program's epoch, exactly like a never-died engine.
+        assert!(engine.shard_health().iter().all(|h| *h == ShardHealth::Healthy));
+        assert!(engine.recoveries() >= 1, "at least the lossy shard was rebuilt");
+        assert_eq!(engine.recoveries(), engine.quarantines());
+        let out = engine.run_batch(&samples[..4]).unwrap();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        for (i, (r, s)) in out.iter().zip(&samples[..4]).enumerate() {
+            let seq = core.run(s);
+            assert_eq!(r.counts, seq.counts, "healed engine diverged on sample {i}");
+            assert_eq!(r.stats, seq.stats, "healed activity ledger diverged on sample {i}");
+            assert_eq!(r.epoch, 1, "healed engine must tag the committed epoch");
+        }
         drop(engine);
+    }
+
+    #[test]
+    fn fail_fast_wrapper_reports_shard_lost_without_poisoning() {
+        // run_session (the fail-fast view over run_session_outcomes)
+        // returns the first ShardLost as its error — but the engine was
+        // already healed by the outcomes pass and keeps serving.
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        let ops = [
+            SessionOp::Reconfig(ReconfigProgram::new().chaos_panic(0)),
+            SessionOp::Submit(&samples[0]),
+        ];
+        let err = engine.run_session(&ops).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServingError>(), Some(ServingError::ShardLost { .. })),
+            "expected ShardLost, got: {err:#}"
+        );
+        let out = engine.run_batch(&samples[..2]).unwrap();
+        assert_eq!(out.len(), 2, "engine serves after the fail-fast error");
+    }
+
+    #[test]
+    fn seeded_chaos_deaths_recover_bitexact_under_live_traffic() {
+        // In-module twin of the tests/chaos_recovery.rs gate: a seeded
+        // schedule of shard deaths across both shards, live traffic
+        // throughout — every surviving stream bit-identical to the
+        // sequential core, every lost stream exactly one typed ShardLost,
+        // all shards Healthy at the end.
+        let (cfg, weights, regs, samples) = setup();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        let mut engine = ServingEngine::new(
+            &cfg,
+            &weights,
+            &regs,
+            ServingOptions::with_cores(2).checkpoints_every(4),
+        )
+        .unwrap();
+        engine.install_chaos(ChaosSchedule::seeded(0xFA11, 4, 24, 2, cfg.num_layers()));
+        let mut losses = 0usize;
+        for round in 0..3 {
+            let outcomes = engine.run_batch_outcomes(&samples).unwrap();
+            assert_eq!(outcomes.len(), samples.len(), "round {round}: every stream settles");
+            for (i, (outcome, s)) in outcomes.iter().zip(&samples).enumerate() {
+                match outcome {
+                    Ok(r) => {
+                        let seq = core.run(s);
+                        assert_eq!(r.counts, seq.counts, "round {round} sample {i}");
+                        assert_eq!(r.stats, seq.stats, "round {round} sample {i} ledger");
+                    }
+                    Err(ServingError::ShardLost { .. }) => losses += 1,
+                    Err(e) => panic!("round {round} sample {i}: unexpected error {e}"),
+                }
+            }
+            assert!(
+                engine.shard_health().iter().all(|h| *h == ShardHealth::Healthy),
+                "round {round}: engine must end all-Healthy"
+            );
+        }
+        assert!(engine.recoveries() >= 2, "schedule must have killed shards");
+        assert!(losses > 0, "deaths with live traffic must cost some streams");
+        assert!(!engine.recovery_latencies_ms().is_empty());
+        assert!(engine.degraded_duration() > Duration::ZERO);
+    }
+
+    #[test]
+    fn rebuilt_shard_respects_pool_invariant() {
+        // Satellite: the PlanePool/MatrixPool prefill bound assumed K
+        // static shards; a re-admitted rebuilt shard must not trip the
+        // zero-miss debug assertion. Exercised at queue_depth 1 and 8, in
+        // both datapaths (loss-free rounds after recovery debug-assert
+        // the zero-miss invariant internally on every batch).
+        let (cfg, weights, regs, samples) = setup();
+        for depth in [1usize, 8] {
+            for lane_width in [1usize, 4] {
+                let mut engine = ServingEngine::new(
+                    &cfg,
+                    &weights,
+                    &regs,
+                    ServingOptions {
+                        cores: 2,
+                        queue_depth: depth,
+                        lane_width,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                engine.install_chaos(ChaosSchedule::new(vec![chaos::ChaosEvent {
+                    at_sample: 2,
+                    shard: 0,
+                    kind: ChaosKind::StagePanic { stage: 1 },
+                }]));
+                let _ = engine.run_batch_outcomes(&samples).unwrap();
+                assert!(engine.recoveries() >= 1, "depth {depth} lanes {lane_width}");
+                let before_planes = engine.plane_pool_misses();
+                let before_mats = engine.matrix_pool_misses();
+                for _ in 0..2 {
+                    let out = engine.run_batch(&samples).unwrap();
+                    assert_eq!(out.len(), samples.len());
+                }
+                assert_eq!(
+                    engine.plane_pool_misses(),
+                    before_planes,
+                    "depth {depth} lanes {lane_width}: rebuild under-provisioned the plane pool"
+                );
+                assert_eq!(
+                    engine.matrix_pool_misses(),
+                    before_mats,
+                    "depth {depth} lanes {lane_width}: rebuild under-provisioned the matrix pool"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_at_sample_zero_recovers_cleanly() {
+        // Satellite edge case: the schedule fires before the very first
+        // sample is admitted. The construction checkpoint must cover it —
+        // every stream settles (no hang), survivors are bit-exact, and
+        // the engine heals.
+        let (cfg, weights, regs, samples) = setup();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        engine.install_chaos(ChaosSchedule::new(vec![chaos::ChaosEvent {
+            at_sample: 0,
+            shard: 0,
+            kind: ChaosKind::StagePanic { stage: 0 },
+        }]));
+        let outcomes = engine.run_batch_outcomes(&samples).unwrap();
+        assert_eq!(outcomes.len(), samples.len());
+        assert!(
+            matches!(outcomes[0], Err(ServingError::ShardLost { shard: 0, .. })),
+            "stream 0 was admitted behind the sample-0 fault"
+        );
+        for (i, (outcome, s)) in outcomes.iter().zip(&samples).enumerate() {
+            if let Ok(r) = outcome {
+                assert_eq!(r.counts, core.run(s).counts, "survivor {i} diverged");
+            }
+        }
+        assert!(engine.shard_health().iter().all(|h| *h == ShardHealth::Healthy));
+        let out = engine.run_batch(&samples).unwrap();
+        for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+            assert_eq!(r.counts, core.run(s).counts, "post-heal sample {i} diverged");
+        }
+    }
+
+    #[test]
+    fn slow_stage_chaos_delays_but_loses_nothing() {
+        // A stalled stage is backpressure, not death: no quarantine, no
+        // losses, results bit-exact.
+        let (cfg, weights, regs, samples) = setup();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        engine.install_chaos(ChaosSchedule::new(vec![chaos::ChaosEvent {
+            at_sample: 1,
+            shard: 1,
+            kind: ChaosKind::SlowStage { stage: 1, millis: 60 },
+        }]));
+        let outcomes = engine.run_batch_outcomes(&samples[..5]).unwrap();
+        for (i, (outcome, s)) in outcomes.iter().zip(&samples[..5]).enumerate() {
+            let r = outcome.as_ref().expect("stalls must not lose streams");
+            assert_eq!(r.counts, core.run(s).counts, "sample {i} diverged under stall");
+        }
+        assert_eq!(engine.quarantines(), 0, "a stall must not quarantine the shard");
+        assert_eq!(engine.recoveries(), 0);
+    }
+
+    #[test]
+    fn shard_death_during_export_fence_is_typed_then_healed() {
+        // Satellite edge case: a shard dies *under* the checkpoint export
+        // fence. The fence must fail with a typed error (bounded poll, no
+        // 60 s stall, no hang), and healing from the *previous* checkpoint
+        // must restore service bit-exactly.
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine =
+            ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+        let _ = engine.run_batch(&samples[..4]).unwrap();
+        // Kill stage 0 of shard 1 directly, then fence before the
+        // supervisor has seen the death: the Export rides the FIFO right
+        // behind the panic.
+        let t0 = Instant::now();
+        engine.shards[1]
+            .in_tx
+            .as_ref()
+            .unwrap()
+            .send(StageMsg::Chaos { kind: ChaosKind::StagePanic { stage: 0 } })
+            .unwrap();
+        let err = engine.take_checkpoint().unwrap_err();
+        assert!(
+            err.to_string().contains("export fence") || err.to_string().contains("shard died"),
+            "fence failure must be typed: {err:#}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "fence death must be detected by the bounded poll, not the 60 s budget"
+        );
+        assert!(engine.heal().unwrap() >= 1, "the dead shard must be rebuilt");
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        let out = engine.run_batch(&samples).unwrap();
+        for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+            assert_eq!(r.counts, core.run(s).counts, "post-fence-death sample {i} diverged");
+        }
+        engine.take_checkpoint().unwrap();
+    }
+
+    #[test]
+    fn checkpoint_on_reconfig_epoch_boundary_replays_exactly() {
+        // Satellite edge case: the checkpoint fence lands exactly at a
+        // reconfig epoch boundary (fenced immediately after the program
+        // committed). A shard killed right after must rebuild from that
+        // checkpoint and still serve the *new* epoch bit-exactly — the
+        // boundary program must be captured by exactly one of
+        // {checkpoint state, replay}, never zero, never twice unsoundly.
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine = ServingEngine::new(
+            &cfg,
+            &weights,
+            &regs,
+            ServingOptions::with_cores(2).checkpoints_every(1),
+        )
+        .unwrap();
+        let mut raised = regs.clone();
+        raised.set_vth(4.0).unwrap();
+        let ops = [
+            SessionOp::Submit(&samples[0]),
+            SessionOp::Reconfig(ReconfigProgram::from_registers(&raised)),
+            SessionOp::Submit(&samples[1]),
+        ];
+        let out = engine.run_session(&ops).unwrap();
+        assert_eq!((out[0].epoch, out[1].epoch), (0, 1));
+        // Cadence of 1 ⇒ the next session's pre-pass fences a checkpoint
+        // at epoch 1 (the boundary). Kill a shard mid-session right after.
+        engine.install_chaos(ChaosSchedule::new(vec![chaos::ChaosEvent {
+            at_sample: 4,
+            shard: 1,
+            kind: ChaosKind::ChannelDrop { stage: 1 },
+        }]));
+        let _ = engine.run_batch_outcomes(&samples[..4]).unwrap();
+        assert!(engine.recoveries() >= 1);
+        assert!(engine.shard_health().iter().all(|h| *h == ShardHealth::Healthy));
+        // The healed engine serves epoch 1 bit-exactly.
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = raised;
+        let out = engine.run_batch(&samples).unwrap();
+        for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+            assert_eq!(r.counts, core.run(s).counts, "epoch-boundary heal diverged at {i}");
+            assert_eq!(r.epoch, 1, "healed engine must stay on the committed epoch");
+        }
+    }
+
+    #[test]
+    fn checkpoint_age_and_interval_accounting() {
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine = ServingEngine::new(
+            &cfg,
+            &weights,
+            &regs,
+            ServingOptions::with_cores(2).checkpoints_every(4),
+        )
+        .unwrap();
+        assert_eq!(engine.checkpoint_age_samples(), 0, "construction checkpoint is fresh");
+        let _ = engine.run_batch(&samples[..3]).unwrap();
+        assert_eq!(engine.checkpoint_age_samples(), 3, "below cadence: no re-fence yet");
+        let _ = engine.run_batch(&samples[..2]).unwrap();
+        // The pre-pass of that session saw age 3 < 4, so it did not
+        // re-fence; afterwards age is 5 and the *next* session re-fences.
+        assert_eq!(engine.checkpoint_age_samples(), 5);
+        let _ = engine.run_batch(&samples[..1]).unwrap();
+        assert_eq!(engine.checkpoint_age_samples(), 1, "cadence hit: re-fenced at 5 completed");
     }
 
     #[test]

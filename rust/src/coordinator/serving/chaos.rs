@@ -1,0 +1,150 @@
+//! Deterministic chaos harness for the serving engine.
+//!
+//! A [`ChaosSchedule`] is a sorted list of fault injections keyed on the
+//! **global sample index** (the engine-lifetime count of admitted
+//! samples, [`ServingEngine::stats`](super::ServingEngine::stats)'s
+//! `submitted`): when the feeder is about to admit sample `at_sample`, it
+//! first pushes the event's [`ChaosKind`] into the target shard's stage
+//! FIFO as a control message. Because injection rides the same bounded
+//! channels as the data, the fault lands at an exact, reproducible point
+//! in each shard's message stream: every stream dispatched to that shard
+//! before the event completes normally, and everything behind it is lost
+//! with the shard (and settled as a typed
+//! [`ShardLost`](super::ServingError::ShardLost)).
+//!
+//! This generalizes the PR-6 `chaos_panic` one-shot (a panic riding a
+//! reconfig broadcast, which necessarily killed *every* shard at the same
+//! epoch) into per-shard, per-stage, per-sample-index faults of three
+//! kinds: stage panics, channel teardowns, and slow-stage stalls. The
+//! first two kill the shard — the supervisor must quarantine, rebuild
+//! from the last connectome checkpoint, and re-admit it; the stall only
+//! delays it — the shard must *not* be quarantined, and results must
+//! still arrive bit-exact.
+//!
+//! Schedules are either explicit ([`ChaosSchedule::new`]) or generated
+//! from a seed ([`ChaosSchedule::seeded`]); both are pure functions of
+//! their inputs, so a chaos soak is replayable from its command line.
+
+use crate::datasets::rng::XorShift64Star;
+
+/// One kind of injected fault, addressed to a stage of the target shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// The addressed stage thread panics (unwind, not abort). The shard's
+    /// chain cascades down and the supervisor rebuilds it.
+    StagePanic { stage: usize },
+    /// The addressed stage exits its loop, dropping its channel ends —
+    /// the software model of a torn-down channel. Upstream sends start
+    /// failing, downstream drains and exits; unlike a panic there is no
+    /// payload to harvest, so recovery must not depend on one.
+    ChannelDrop { stage: usize },
+    /// The addressed stage sleeps `millis` before continuing. The shard
+    /// stays healthy; backpressure holds the traffic, nothing is lost.
+    SlowStage { stage: usize, millis: u64 },
+}
+
+/// A fault scheduled at an exact global sample index on one shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosEvent {
+    /// Global (engine-lifetime) sample index at whose admission the fault
+    /// is injected. Index 0 is the first sample the engine ever admits.
+    pub at_sample: u64,
+    /// Target shard.
+    pub shard: usize,
+    pub kind: ChaosKind,
+}
+
+/// A deterministic, replayable fault schedule (see the module docs).
+#[derive(Debug, Clone, Default)]
+pub struct ChaosSchedule {
+    events: Vec<ChaosEvent>,
+}
+
+impl ChaosSchedule {
+    /// An explicit schedule. Events are sorted by `at_sample` (stable, so
+    /// same-index events fire in the given order).
+    pub fn new(mut events: Vec<ChaosEvent>) -> ChaosSchedule {
+        events.sort_by_key(|e| e.at_sample);
+        ChaosSchedule { events }
+    }
+
+    /// A seeded schedule of `deaths` shard-killing faults (alternating
+    /// stage panics and channel drops) spread over the first `span`
+    /// samples of an engine with `shards` shards and `stages` pipeline
+    /// stages. Shards are covered round-robin so a multi-shard soak
+    /// always exercises more than one shard; sample indices and stage
+    /// targets come from the seed. Pure function of its arguments.
+    pub fn seeded(
+        seed: u64,
+        deaths: usize,
+        span: u64,
+        shards: usize,
+        stages: usize,
+    ) -> ChaosSchedule {
+        let mut rng = XorShift64Star::new(seed | 1);
+        let events = (0..deaths)
+            .map(|i| {
+                let stage = rng.below(stages.max(1) as u64) as usize;
+                let kind = if i % 2 == 0 {
+                    ChaosKind::StagePanic { stage }
+                } else {
+                    ChaosKind::ChannelDrop { stage }
+                };
+                ChaosEvent {
+                    at_sample: rng.below(span.max(1)),
+                    shard: i % shards.max(1),
+                    kind,
+                }
+            })
+            .collect();
+        ChaosSchedule::new(events)
+    }
+
+    /// The events, sorted by `at_sample`.
+    pub fn events(&self) -> &[ChaosEvent] {
+        &self.events
+    }
+
+    /// Events whose `at_sample` falls in `[from, to)` — the injections an
+    /// admission window of global sample indices must fire, with indices
+    /// rebased to the window (`at_sample - from`).
+    pub(crate) fn window(&self, from: u64, to: u64) -> Vec<(usize, ChaosEvent)> {
+        self.events
+            .iter()
+            .filter(|e| e.at_sample >= from && e.at_sample < to)
+            .map(|e| ((e.at_sample - from) as usize, *e))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_schedules_are_deterministic_and_cover_shards() {
+        let a = ChaosSchedule::seeded(0xC405, 6, 100, 3, 3);
+        let b = ChaosSchedule::seeded(0xC405, 6, 100, 3, 3);
+        assert_eq!(a.events(), b.events(), "same seed, same schedule");
+        let shards: std::collections::BTreeSet<usize> =
+            a.events().iter().map(|e| e.shard).collect();
+        assert_eq!(shards.len(), 3, "round-robin shard coverage");
+        assert!(a.events().windows(2).all(|w| w[0].at_sample <= w[1].at_sample), "sorted");
+        let c = ChaosSchedule::seeded(0xC406, 6, 100, 3, 3);
+        assert_ne!(a.events(), c.events(), "different seed, different schedule");
+    }
+
+    #[test]
+    fn window_rebases_and_filters() {
+        let s = ChaosSchedule::new(vec![
+            ChaosEvent { at_sample: 3, shard: 0, kind: ChaosKind::StagePanic { stage: 1 } },
+            ChaosEvent { at_sample: 10, shard: 1, kind: ChaosKind::ChannelDrop { stage: 0 } },
+            ChaosEvent { at_sample: 17, shard: 0, kind: ChaosKind::SlowStage { stage: 2, millis: 5 } },
+        ]);
+        let w = s.window(8, 16);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].0, 2, "rebased to the window");
+        assert_eq!(w[0].1.shard, 1);
+        assert!(s.window(20, 30).is_empty());
+    }
+}

@@ -34,6 +34,8 @@
 //! | 11   | `SnapshotData`   | session `u32`, request id `u64`, byte_len `u32`, connectome bytes |
 //! | 12   | `Restore`        | session `u32`, request id `u64`, byte_len `u32`, connectome bytes |
 //! | 13   | `RestoreAck`     | session `u32`, request id `u64`, epoch `u64` |
+//! | 14   | `HealthReq`      | request id `u64` |
+//! | 15   | `Health`         | request id `u64`, degraded `u8`, recoveries `u64`, quarantines `u64`, checkpoint_age `u64`, n_shards `u16`, n_shards × status `u8` (0 Healthy, 1 Quarantined, 2 Rebuilding) |
 //!
 //! Spike payloads are bit-packed row-major (timestep-major, LSB-first
 //! within each byte) — the AER-flavoured dense encoding: 8 spike lines per
@@ -91,6 +93,11 @@ pub enum ErrorCode {
     /// configured idle read timeout; the server closes it after sending
     /// this (the slow-loris defence).
     IdleTimeout,
+    /// The serving shard carrying this stream died mid-flight; the sample
+    /// was lost but the engine is self-healing. Submits are idempotent, so
+    /// the client may safely resubmit (the `RetryPolicy` does so
+    /// automatically).
+    ShardLost,
 }
 
 impl ErrorCode {
@@ -103,6 +110,7 @@ impl ErrorCode {
             ErrorCode::BadFrame => 5,
             ErrorCode::Internal => 6,
             ErrorCode::IdleTimeout => 7,
+            ErrorCode::ShardLost => 8,
         }
     }
 
@@ -115,6 +123,7 @@ impl ErrorCode {
             5 => ErrorCode::BadFrame,
             6 => ErrorCode::Internal,
             7 => ErrorCode::IdleTimeout,
+            8 => ErrorCode::ShardLost,
             _ => return None,
         })
     }
@@ -152,6 +161,21 @@ pub enum Frame {
     Restore { session: u32, request: u64, bytes: Vec<u8> },
     /// Migration applied; `epoch` is the config epoch it was assigned.
     RestoreAck { session: u32, request: u64, epoch: u64 },
+    /// Ask the server for its supervision state (answered out of the
+    /// pump's telemetry mirror — never blocks on the engine).
+    HealthReq { request: u64 },
+    /// Supervision state: `degraded` is true while any shard is not
+    /// healthy, `shards` carries one status byte per shard (0 Healthy,
+    /// 1 Quarantined, 2 Rebuilding), `checkpoint_age` is samples
+    /// completed since the live recovery point was fenced.
+    Health {
+        request: u64,
+        degraded: bool,
+        recoveries: u64,
+        quarantines: u64,
+        checkpoint_age: u64,
+        shards: Vec<u8>,
+    },
 }
 
 /// Typed decode/transport failure. Every malformed input maps here — the
@@ -281,6 +305,8 @@ impl Frame {
             Frame::SnapshotData { .. } => "SnapshotData",
             Frame::Restore { .. } => "Restore",
             Frame::RestoreAck { .. } => "RestoreAck",
+            Frame::HealthReq { .. } => "HealthReq",
+            Frame::Health { .. } => "Health",
         }
     }
 
@@ -299,6 +325,8 @@ impl Frame {
             Frame::SnapshotData { .. } => 11,
             Frame::Restore { .. } => 12,
             Frame::RestoreAck { .. } => 13,
+            Frame::HealthReq { .. } => 14,
+            Frame::Health { .. } => 15,
         }
     }
 
@@ -410,6 +438,21 @@ impl Frame {
                 out.extend_from_slice(&session.to_le_bytes());
                 out.extend_from_slice(&request.to_le_bytes());
                 out.extend_from_slice(&epoch.to_le_bytes());
+            }
+            Frame::HealthReq { request } => {
+                out.extend_from_slice(&request.to_le_bytes());
+            }
+            Frame::Health { request, degraded, recoveries, quarantines, checkpoint_age, shards } => {
+                if shards.len() > u16::MAX as usize {
+                    return Err(WireError::BadValue("shard status arity"));
+                }
+                out.extend_from_slice(&request.to_le_bytes());
+                out.push(*degraded as u8);
+                out.extend_from_slice(&recoveries.to_le_bytes());
+                out.extend_from_slice(&quarantines.to_le_bytes());
+                out.extend_from_slice(&checkpoint_age.to_le_bytes());
+                out.extend_from_slice(&(shards.len() as u16).to_le_bytes());
+                out.extend_from_slice(shards);
             }
         }
         Ok(out)
@@ -541,6 +584,24 @@ impl Frame {
                 request: c.u64("restore ack request id")?,
                 epoch: c.u64("restore ack epoch")?,
             },
+            14 => Frame::HealthReq { request: c.u64("health request id")? },
+            15 => {
+                let request = c.u64("health request id")?;
+                let degraded = match c.u8("health degraded flag")? {
+                    0 => false,
+                    1 => true,
+                    _ => return Err(WireError::BadValue("health degraded flag")),
+                };
+                let recoveries = c.u64("health recoveries")?;
+                let quarantines = c.u64("health quarantines")?;
+                let checkpoint_age = c.u64("health checkpoint age")?;
+                let n = c.u16("health n_shards")? as usize;
+                let shards = c.take(n, "health shard statuses")?.to_vec();
+                if shards.iter().any(|&s| s > 2) {
+                    return Err(WireError::BadValue("health shard status"));
+                }
+                Frame::Health { request, degraded, recoveries, quarantines, checkpoint_age, shards }
+            }
             other => return Err(WireError::BadType(other)),
         };
         if c.remaining() != 0 {
@@ -757,6 +818,21 @@ mod tests {
             Frame::SnapshotData { session: 7, request: 11, bytes: vec![0xAB; 9] },
             Frame::Restore { session: 7, request: 12, bytes: vec![1, 2, 3, 4] },
             Frame::RestoreAck { session: 7, request: 12, epoch: 2 },
+            Frame::Error {
+                code: ErrorCode::ShardLost,
+                session: 7,
+                reference: 44,
+                message: "serving shard 1 was lost mid-stream".into(),
+            },
+            Frame::HealthReq { request: 13 },
+            Frame::Health {
+                request: 13,
+                degraded: true,
+                recoveries: 3,
+                quarantines: 4,
+                checkpoint_age: 129,
+                shards: vec![0, 2, 0],
+            },
         ];
         let mut buf = Vec::new();
         for f in &frames {
@@ -809,6 +885,33 @@ mod tests {
             sample_from_submit(1 << 20, 1 << 20, &[]),
             Err(WireError::BadValue(_))
         ));
+        // Health frame domain checks: a bad degraded flag or an unknown
+        // shard status byte is a typed error, not a silent acceptance.
+        let mut h = Frame::Health {
+            request: 1,
+            degraded: false,
+            recoveries: 0,
+            quarantines: 0,
+            checkpoint_age: 0,
+            shards: vec![0],
+        }
+        .encode()
+        .unwrap();
+        h[9] = 9; // degraded flag byte (type + request id precede it)
+        assert!(matches!(Frame::decode(&h), Err(WireError::BadValue(_))));
+        let mut h2 = Frame::Health {
+            request: 1,
+            degraded: true,
+            recoveries: 0,
+            quarantines: 0,
+            checkpoint_age: 0,
+            shards: vec![3],
+        }
+        .encode()
+        .unwrap();
+        assert!(matches!(Frame::decode(&h2), Err(WireError::BadValue(_))));
+        h2.pop();
+        assert!(matches!(Frame::decode(&h2), Err(WireError::Truncated { .. })));
     }
 
     #[test]

@@ -12,6 +12,9 @@
 //! repro snapshot [opts]       run k samples, freeze the engine to a connectome file
 //! repro restore [opts]        revive a connectome and diff it against an
 //!                             uninterrupted run (nonzero exit on divergence)
+//! repro chaos-soak [opts]     hermetic front door under seeded shard-killing
+//!                             chaos; retrying clients must end bit-exact and
+//!                             the engine all-healthy (nonzero exit otherwise)
 //! repro explore <arch> [Q]    DSE estimate for an architecture on all boards
 //! repro codegen <arch>        emit Verilog HDL + self-checking testbench
 //! repro bench-check <json>..  validate BENCH_*.json perf reports
@@ -33,11 +36,12 @@
 use anyhow::{Context, Result};
 use std::time::Instant;
 
-use quantisenc::coordinator::client::{self, LoadgenOptions};
+use quantisenc::coordinator::client::{self, LoadgenOptions, RetryPolicy, WireClient};
 use quantisenc::coordinator::connectome::Connectome;
 use quantisenc::coordinator::metrics::Telemetry;
 use quantisenc::coordinator::pipeline;
 use quantisenc::coordinator::server::{ServerOptions, SpikeServer};
+use quantisenc::coordinator::serving::chaos::ChaosSchedule;
 use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
 use quantisenc::datasets::{Dataset, Split};
 use quantisenc::dse;
@@ -110,6 +114,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "loadgen" => loadgen(&args[1..]),
         "snapshot" => snapshot_cmd(&args[1..]),
         "restore" => restore_cmd(&args[1..]),
+        "chaos-soak" => chaos_soak(&args[1..]),
         "explore" => {
             let arch = args.get(1).context("usage: repro explore <arch> [Qn.q]")?;
             let q = QSpec::parse(args.get(2).map(String::as_str).unwrap_or("Q5.3"))?;
@@ -234,6 +239,11 @@ const HELP: &str = "repro — QUANTISENC reproduction CLI
   restore         revive --in <FILE> into a fresh engine, run it to --total
                   samples, and diff against an uninterrupted run — bit-exact
                   or nonzero exit (the snapshot-smoke gate)
+  chaos-soak      hermetic front door with a seeded shard-killing schedule
+                  (--deaths, --seed, --ckpt-every); retrying clients verify
+                  every result against the sequential oracle and the engine
+                  must end all-healthy; writes BENCH_chaos.json and gates it
+                  (the chaos-smoke gate; BENCH_GATE_MAX_RECOVERY_MS overrides)
   explore <arch>  DSE estimate, e.g. repro explore 256x512x10 Q5.3
   codegen <arch>  emit Verilog HDL + self-checking SV testbench (paper §IV)
   bench-check <f> validate BENCH_*.json perf reports (the bench-smoke gate)
@@ -596,6 +606,169 @@ fn restore_cmd(args: &[String]) -> Result<()> {
         revived_tail.len(),
         revived_image.len(),
     );
+    Ok(())
+}
+
+/// `repro chaos-soak` — the self-healing gate. Hermetic by construction:
+/// binds an in-process [`SpikeServer`] whose engine carries a seeded
+/// [`ChaosSchedule`] of shard-killing faults, drives it with closed-loop
+/// client sessions that absorb `ShardLost` rejections under a
+/// [`RetryPolicy`], and verifies every result bit-exactly against the
+/// sequential [`Core`](quantisenc::hdl::Core) oracle. Writes
+/// `BENCH_chaos.json` and gates it through `benchcheck` (zero mismatches,
+/// ≥ 1 recovery, all shards healthy, bounded recovery p99) — any failure
+/// is a nonzero exit. Replayable: the schedule and the retry jitter are
+/// pure functions of `--seed`.
+fn chaos_soak(args: &[String]) -> Result<()> {
+    let ds_name = flag_val(args, "--dataset").unwrap_or("smnist");
+    let qname = flag_val(args, "--q").unwrap_or("Q5.3");
+    let sessions: usize = flag_val(args, "--sessions").unwrap_or("3").parse()?;
+    let n: u64 = flag_val(args, "--n").unwrap_or("48").parse()?;
+    let cores: usize = flag_val(args, "--cores").unwrap_or("2").parse()?;
+    let lanes: usize = flag_val(args, "--lanes").unwrap_or("1").parse()?;
+    let deaths: usize = flag_val(args, "--deaths").unwrap_or("4").parse()?;
+    let ckpt_every: u64 = flag_val(args, "--ckpt-every").unwrap_or("8").parse()?;
+    let pool: usize = flag_val(args, "--pool").unwrap_or("12").parse()?;
+    let t_steps: usize = flag_val(args, "--t").unwrap_or("6").parse()?;
+    let seed: u64 = flag_val(args, "--seed").unwrap_or("64017").parse()?;
+    let out_path = flag_val(args, "--out").unwrap_or("BENCH_chaos.json");
+    let dataset = Dataset::parse(ds_name).context("bad --dataset")?;
+    anyhow::ensure!(sessions >= 1 && n >= 1 && deaths >= 1, "need sessions, samples and deaths");
+
+    let m = manifest()?;
+    let art = m.model(ds_name, qname)?;
+    let samples = client::sample_pool(dataset, pool, t_steps);
+    let (_config, mut core) = experiments::core_from_artifact(&art)?;
+    let oracle: Vec<_> = samples.iter().map(|s| core.run(s)).collect();
+
+    // All deaths land in the first half of the nominal traffic so the
+    // second half exercises the rebuilt shards (and retries can only push
+    // the admitted-sample counter past the schedule, never before it).
+    let total = sessions as u64 * n;
+    let span = (total / 2).max(deaths as u64 + 1);
+    let (config, mut engine) = experiments::engine_from_artifact(
+        &art,
+        ServingOptions::with_lanes(cores, lanes).checkpoints_every(ckpt_every),
+    )?;
+    let schedule = ChaosSchedule::seeded(seed, deaths, span, cores, config.num_layers());
+    println!(
+        "chaos-soak: {sessions} sessions x {n} samples on {cores} cores (lane width {lanes}), \
+         checkpoint every {ckpt_every}, {} seeded shard-killing faults over the first {span} \
+         admissions (seed {seed})",
+        schedule.events().len(),
+    );
+    engine.install_chaos(schedule);
+    let mut server = SpikeServer::bind(engine, "127.0.0.1:0", ServerOptions::default())?;
+    let addr = server.local_addr().to_string();
+
+    let policy = RetryPolicy {
+        max_attempts: 10,
+        base: std::time::Duration::from_millis(5),
+        cap: std::time::Duration::from_millis(100),
+        deadline: std::time::Duration::from_secs(30),
+        seed,
+    };
+    // (ok, retries, shard_losses, overloads, mismatches, failures) per session.
+    let mut tallies: Vec<(u64, u64, u64, u64, u64, u64)> = Vec::new();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..sessions)
+            .map(|_| {
+                let (addr, samples, oracle, policy) = (&addr, &samples, &oracle, &policy);
+                scope.spawn(move || -> Result<(u64, u64, u64, u64, u64, u64)> {
+                    let mut client = WireClient::connect(addr)?;
+                    let (session, _quota) = client.open_session(0)?;
+                    let mut t = (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+                    for i in 0..n {
+                        let idx = i as usize % samples.len();
+                        match client.submit_with_retry(session, i, &samples[idx], policy) {
+                            Ok(r) => {
+                                t.0 += 1;
+                                t.1 += (r.attempts - 1) as u64;
+                                t.2 += r.shard_losses as u64;
+                                t.3 += r.overloads as u64;
+                                let o = &oracle[idx];
+                                if r.prediction as usize != o.prediction || r.counts != o.counts {
+                                    t.4 += 1;
+                                }
+                            }
+                            Err(e) => {
+                                t.5 += 1;
+                                eprintln!("chaos-soak: stream {i} failed: {e:#}");
+                            }
+                        }
+                    }
+                    Ok(t)
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(Ok(t)) => tallies.push(t),
+                Ok(Err(e)) => eprintln!("chaos-soak: session aborted: {e:#}"),
+                Err(_) => eprintln!("chaos-soak: session thread panicked"),
+            }
+        }
+    });
+    let elapsed = t0.elapsed();
+    anyhow::ensure!(tallies.len() == sessions, "a session aborted before finishing its stream");
+    let results_ok: u64 = tallies.iter().map(|t| t.0).sum();
+    let retries: u64 = tallies.iter().map(|t| t.1).sum();
+    let client_losses: u64 = tallies.iter().map(|t| t.2).sum();
+    let overloads: u64 = tallies.iter().map(|t| t.3).sum();
+    let mismatches: u64 = tallies.iter().map(|t| t.4).sum();
+    let failures: u64 = tallies.iter().map(|t| t.5).sum();
+
+    // The pump mirrors supervision state after each op, so the engine's
+    // post-recovery health is already visible; the brief poll only covers
+    // the window between the last Result frame and the final mirror.
+    let heal_deadline = Instant::now() + std::time::Duration::from_secs(10);
+    let all_healthy = loop {
+        if server.shard_health().iter().all(|&h| h == 0) {
+            break true;
+        }
+        if Instant::now() >= heal_deadline {
+            break false;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    };
+    // Exercise the wire-level probe too: a fresh connection must see the
+    // same verdict through Frame::HealthReq.
+    let health = WireClient::connect(&addr)?.health(1)?;
+    let stats = server.stats();
+    let recovery_ms = server.recovery_latencies_ms();
+    let p50 = quantisenc::util::stats::percentile(&recovery_ms, 50.0);
+    let p99 = quantisenc::util::stats::percentile(&recovery_ms, 99.0);
+    server.shutdown();
+
+    println!(
+        "chaos-soak: ok={results_ok}/{total} in {elapsed:.2?}, retries={retries} \
+         (shard_losses={client_losses} overloads={overloads}), failures={failures}, \
+         mismatches={mismatches}; server recoveries={} quarantines={} degraded={}ms, \
+         recovery p50/p99 {p50:.1}/{p99:.1}ms, wire health degraded={} shards={:?}",
+        stats.recoveries, stats.quarantines, stats.degraded_ms, health.degraded, health.shards,
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"chaos\",\n  \"seed\": {seed},\n  \"samples\": {total},\n  \
+         \"results_ok\": {results_ok},\n  \"failures\": {failures},\n  \"retries\": {retries},\n  \
+         \"shard_losses\": {},\n  \"overloads\": {overloads},\n  \"recoveries\": {},\n  \
+         \"quarantines\": {},\n  \"mismatches\": {mismatches},\n  \"all_healthy\": {},\n  \
+         \"checkpoint_age\": {},\n  \"degraded_ms\": {},\n  \"recovery_p50_ms\": {p50:.3},\n  \
+         \"recovery_p99_ms\": {p99:.3}\n}}\n",
+        stats.shard_losses.max(client_losses),
+        stats.recoveries,
+        stats.quarantines,
+        if all_healthy && !health.degraded { 1 } else { 0 },
+        stats.checkpoint_age,
+        stats.degraded_ms,
+    );
+    std::fs::write(out_path, &json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    anyhow::ensure!(failures == 0, "{failures} streams exhausted their retry budget");
+    match benchcheck::check_report_str(out_path, &json, &benchcheck::Gates::from_env())? {
+        benchcheck::ReportStatus::Validated { summary, .. } => println!("chaos gate: OK ({summary})"),
+        other => anyhow::bail!("{out_path}: unexpected gate outcome {other:?}"),
+    }
     Ok(())
 }
 

@@ -7,9 +7,11 @@
 //! and — when the host's auto lane kernel is a real vector tier — a
 //! ≥ 1.5× SIMD-vs-scalar lane-step speedup for the hot-path report; ≥ 2×
 //! serving samples/s at lane width 64 vs 1 with zero pool misses for the
-//! lane-batched report; and positive throughput, zero protocol errors,
+//! lane-batched report; positive throughput, zero protocol errors,
 //! zero oracle mismatches, and a bounded p99 for the `serving_slo`
-//! front-door report.
+//! front-door report; and zero oracle mismatches, at least one shard
+//! recovery, an all-healthy final state, and a bounded recovery p99 for
+//! the `chaos` soak report.
 //!
 //! Outcomes are **typed**: a missing report file is a
 //! [`ReportStatus::SkippedMissing`] — a skip the caller surfaces as a
@@ -22,8 +24,9 @@
 //!
 //! Thresholds live in [`Gates`]; [`Gates::from_env`] applies the CI
 //! overrides (`BENCH_GATE_MIN_SPEEDUP`, `BENCH_GATE_MIN_BATCH_SPEEDUP`,
-//! `BENCH_GATE_MIN_SIMD_SPEEDUP`, `BENCH_GATE_MAX_P99_US`) on top of the
-//! defaults, while tests pass explicit values for determinism.
+//! `BENCH_GATE_MIN_SIMD_SPEEDUP`, `BENCH_GATE_MAX_P99_US`,
+//! `BENCH_GATE_MAX_RECOVERY_MS`) on top of the defaults, while tests
+//! pass explicit values for determinism.
 
 use anyhow::{Context, Result};
 
@@ -43,6 +46,9 @@ pub struct Gates {
     pub min_simd_speedup: f64,
     /// Maximum front-door p99 latency in microseconds (serving_slo).
     pub max_p99_us: f64,
+    /// Maximum shard detection→re-admission p99 latency in milliseconds
+    /// (chaos report).
+    pub max_recovery_ms: f64,
 }
 
 impl Default for Gates {
@@ -52,6 +58,7 @@ impl Default for Gates {
             min_batch_speedup: 2.0,
             min_simd_speedup: 1.5,
             max_p99_us: 2_000_000.0,
+            max_recovery_ms: 5_000.0,
         }
     }
 }
@@ -70,6 +77,7 @@ impl Gates {
             min_batch_speedup: env_f64("BENCH_GATE_MIN_BATCH_SPEEDUP", d.min_batch_speedup),
             min_simd_speedup: env_f64("BENCH_GATE_MIN_SIMD_SPEEDUP", d.min_simd_speedup),
             max_p99_us: env_f64("BENCH_GATE_MAX_P99_US", d.max_p99_us),
+            max_recovery_ms: env_f64("BENCH_GATE_MAX_RECOVERY_MS", d.max_recovery_ms),
         }
     }
 }
@@ -116,6 +124,7 @@ pub fn check_report_str(path: &str, text: &str, gates: &Gates) -> Result<ReportS
         "hotpath" => check_hotpath(path, &json, gates)?,
         "batched" => check_batched(path, &json, gates)?,
         "serving_slo" => check_serving_slo(path, &json, gates)?,
+        "chaos" => check_chaos(path, &json, gates)?,
         other => anyhow::bail!("{path}: unknown bench report kind {other:?}"),
     };
     Ok(ReportStatus::Validated { kind: bench, summary })
@@ -243,5 +252,32 @@ fn check_serving_slo(path: &str, json: &Json, gates: &Gates) -> Result<String> {
         "{ok:.0} results at {sps:.1}/s, p50/p99 {:.0}/{p99:.0}us, reject rate {:.1}%",
         json.req("p50_us")?.as_f64().unwrap_or(0.0),
         100.0 * rr,
+    ))
+}
+
+fn check_chaos(path: &str, json: &Json, gates: &Gates) -> Result<String> {
+    let ok = json.req("results_ok")?.as_f64().context("results_ok numeric")?;
+    anyhow::ensure!(ok > 0.0, "{path}: chaos soak served no results");
+    let mism = json.req("mismatches")?.as_f64().context("mismatches numeric")?;
+    anyhow::ensure!(mism == 0.0, "{path}: {mism} surviving results diverged from the oracle");
+    let recoveries = json.req("recoveries")?.as_f64().context("recoveries numeric")?;
+    // A soak that never killed (and rebuilt) a shard proved nothing about
+    // self-healing — fail closed rather than green-wash an idle run.
+    anyhow::ensure!(recoveries >= 1.0, "{path}: no shard recovery exercised ({recoveries})");
+    let healthy = json.req("all_healthy")?.as_f64().context("all_healthy numeric")?;
+    anyhow::ensure!(healthy == 1.0, "{path}: engine did not end with every shard healthy");
+    let p99 = json.req("recovery_p99_ms")?.as_f64().context("recovery_p99_ms numeric")?;
+    // Detection→re-admission wall clock. The default bound is generous
+    // (rebuild replays a checkpoint, not a training run); CI relaxes it
+    // further via BENCH_GATE_MAX_RECOVERY_MS for contended runners.
+    anyhow::ensure!(
+        p99 > 0.0 && p99 <= gates.max_recovery_ms,
+        "{path}: recovery p99 {p99:.1}ms outside (0, {:.0}]ms",
+        gates.max_recovery_ms
+    );
+    Ok(format!(
+        "{ok:.0} surviving results bit-exact, {recoveries:.0} recoveries, \
+         recovery p50/p99 {:.1}/{p99:.1}ms",
+        json.req("recovery_p50_ms")?.as_f64().unwrap_or(0.0),
     ))
 }

@@ -55,6 +55,16 @@ fn serving_slo_report(p99_us: f64, protocol_errors: f64, reject_rate: f64) -> St
     )
 }
 
+fn chaos_report(mismatches: f64, recoveries: f64, all_healthy: f64, p99_ms: f64) -> String {
+    format!(
+        r#"{{"bench":"chaos",
+            "samples":96,"results_ok":90,"retries":11,
+            "shard_losses":6,"recoveries":{recoveries},"quarantines":{recoveries},
+            "mismatches":{mismatches},"all_healthy":{all_healthy},
+            "recovery_p50_ms":4.2,"recovery_p99_ms":{p99_ms}}}"#
+    )
+}
+
 fn kind_of(status: &ReportStatus) -> &str {
     match status {
         ReportStatus::Validated { kind, .. } => kind,
@@ -89,8 +99,9 @@ fn every_report_kind_validates_on_a_well_formed_body() {
         hotpath_report(4.2, "avx2", 2.6),
         batched_report(3.1, 0.0),
         serving_slo_report(1500.0, 0.0, 0.125),
+        chaos_report(0.0, 3.0, 1.0, 18.0),
     ];
-    let kinds = ["bench_layer/topology", "hotpath", "batched", "serving_slo"];
+    let kinds = ["bench_layer/topology", "hotpath", "batched", "serving_slo", "chaos"];
     for (body, want) in bodies.iter().zip(kinds) {
         match check_report_str("synthetic.json", body, &gates).unwrap() {
             ReportStatus::Validated { kind, summary } => {
@@ -160,6 +171,29 @@ fn gate_failures_name_the_path_and_the_value() {
     let err =
         check_report_str("BENCH_s.json", &serving_slo_report(1e3, 0.0, 1.5), &gates).unwrap_err();
     assert!(format!("{err:#}").contains("reject_rate"), "{err:#}");
+}
+
+#[test]
+fn chaos_gates_fail_closed_on_each_axis() {
+    let gates = Gates::default();
+    // One surviving result diverging from the oracle is a hard failure.
+    let err = check_report_str("BENCH_c.json", &chaos_report(1.0, 3.0, 1.0, 18.0), &gates)
+        .expect_err("oracle mismatch must fail the chaos gate");
+    assert!(format!("{err:#}").contains("diverged"), "{err:#}");
+    // A soak that never exercised a recovery proves nothing.
+    let err = check_report_str("BENCH_c.json", &chaos_report(0.0, 0.0, 1.0, 18.0), &gates)
+        .expect_err("zero recoveries must fail the chaos gate");
+    assert!(format!("{err:#}").contains("recovery"), "{err:#}");
+    // Ending with a quarantined shard means self-healing did not complete.
+    let err = check_report_str("BENCH_c.json", &chaos_report(0.0, 3.0, 0.0, 18.0), &gates)
+        .expect_err("unhealthy final state must fail the chaos gate");
+    assert!(format!("{err:#}").contains("healthy"), "{err:#}");
+    // Recovery latency is wall-clock gated, with the env-style override.
+    let err = check_report_str("BENCH_c.json", &chaos_report(0.0, 3.0, 1.0, 9e6), &gates)
+        .expect_err("9000s recovery p99 must fail the default 5s gate");
+    assert!(format!("{err:#}").contains("recovery p99"), "{err:#}");
+    let relaxed = Gates { max_recovery_ms: 1e7, ..Gates::default() };
+    assert!(check_report_str("BENCH_c.json", &chaos_report(0.0, 3.0, 1.0, 9e6), &relaxed).is_ok());
 }
 
 #[test]

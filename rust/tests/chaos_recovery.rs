@@ -1,0 +1,152 @@
+//! The PR-9 self-healing acceptance gate, as an integration test: a
+//! multi-round chaos differential against the sequential [`Core`] oracle.
+//!
+//! An explicit [`ChaosSchedule`] injects four shard-killing faults (stage
+//! panics and channel drops, covering both shards of a two-core engine)
+//! under live traffic spread over four `run_batch_outcomes` rounds. The
+//! contract checked after every round, at lane widths 1 and 64:
+//!
+//! - every non-failed stream is **bit-identical** to the oracle
+//!   (prediction, counts, spike totals, epoch);
+//! - every failed stream surfaces **exactly one** typed
+//!   [`ServingError::ShardLost`] with `resumable: true` and a valid shard
+//!   index — never a panic, never a hang, never a poisoned engine;
+//! - the engine ends the round with every shard [`ShardHealth::Healthy`]
+//!   (the supervisor quarantined, rebuilt from the connectome checkpoint,
+//!   and re-admitted the dead shard before returning);
+//! - resubmitting the lost streams afterwards succeeds bit-exactly — the
+//!   `resumable` flag means what it says.
+
+use quantisenc::config::registers::RegisterFile;
+use quantisenc::config::ModelConfig;
+use quantisenc::coordinator::serving::chaos::{ChaosEvent, ChaosKind, ChaosSchedule};
+use quantisenc::coordinator::serving::{ServingEngine, ServingError, ServingOptions, ShardHealth};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::Sample;
+use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::Core;
+
+const ROUND: usize = 12;
+const ROUNDS: usize = 4;
+
+fn fixture() -> (ModelConfig, Vec<Vec<i32>>, RegisterFile, Vec<Sample>) {
+    let cfg = ModelConfig::parse_arch("24x16x10", Q5_3).unwrap();
+    let mut rng = XorShift64Star::new(0x9A7E);
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(15) as i32 - 7).collect())
+        .collect();
+    let regs = RegisterFile::new(cfg.qspec);
+    let t_steps = 6;
+    let samples: Vec<Sample> = (0..(ROUND * ROUNDS) as u64)
+        .map(|i| {
+            let mut srng = XorShift64Star::new(0xBEEF ^ i);
+            Sample {
+                spikes: (0..t_steps * cfg.inputs()).map(|_| (srng.uniform() < 0.3) as u8).collect(),
+                t_steps,
+                inputs: cfg.inputs(),
+                label: (i % 10) as usize,
+            }
+        })
+        .collect();
+    (cfg, weights, regs, samples)
+}
+
+/// One death per round, alternating shards: the surviving shard serves
+/// throughout (graceful degradation), and both shards get killed — and
+/// rebuilt — twice, by both fault kinds.
+fn schedule() -> ChaosSchedule {
+    ChaosSchedule::new(vec![
+        ChaosEvent { at_sample: 3, shard: 0, kind: ChaosKind::StagePanic { stage: 1 } },
+        ChaosEvent { at_sample: 16, shard: 1, kind: ChaosKind::ChannelDrop { stage: 0 } },
+        ChaosEvent { at_sample: 27, shard: 0, kind: ChaosKind::ChannelDrop { stage: 1 } },
+        ChaosEvent { at_sample: 40, shard: 1, kind: ChaosKind::StagePanic { stage: 0 } },
+    ])
+}
+
+fn run_gate(lane_width: usize) {
+    let (cfg, weights, regs, samples) = fixture();
+    let mut core = Core::new(cfg.clone());
+    core.load_weights(&weights).unwrap();
+    core.registers = regs.clone();
+
+    let mut engine = ServingEngine::new(
+        &cfg,
+        &weights,
+        &regs,
+        ServingOptions::with_lanes(2, lane_width).checkpoints_every(8),
+    )
+    .unwrap();
+    engine.install_chaos(schedule());
+
+    let mut lost: Vec<usize> = Vec::new();
+    for round in 0..ROUNDS {
+        let window = &samples[round * ROUND..(round + 1) * ROUND];
+        let outcomes = engine.run_batch_outcomes(window).unwrap();
+        assert_eq!(outcomes.len(), ROUND, "round {round}: one settlement per stream");
+        for (j, outcome) in outcomes.iter().enumerate() {
+            let idx = round * ROUND + j;
+            match outcome {
+                Ok(r) => {
+                    let o = core.run(&samples[idx]);
+                    assert_eq!(r.prediction, o.prediction, "round {round} stream {j} prediction");
+                    assert_eq!(r.counts, o.counts, "round {round} stream {j} counts");
+                    assert_eq!(r.epoch, 0, "no reconfig was issued");
+                }
+                Err(ServingError::ShardLost { shard, resumable }) => {
+                    assert!(*shard < 2, "round {round} stream {j}: shard index out of range");
+                    assert!(*resumable, "pure inference submits are always resumable");
+                    lost.push(idx);
+                }
+                Err(other) => {
+                    panic!("round {round} stream {j}: expected ShardLost, got {other:?}")
+                }
+            }
+        }
+        assert!(
+            engine.shard_health().iter().all(|h| *h == ShardHealth::Healthy),
+            "round {round}: supervisor must re-admit every shard before returning \
+             (got {:?})",
+            engine.shard_health()
+        );
+    }
+
+    // Four deaths were injected; each one was quarantined and recovered
+    // (a recovery is counted even when the dead shard held no streams,
+    // which can happen at lane width 64 where a whole round is one lane
+    // group on one shard).
+    assert!(engine.recoveries() >= 3, "expected >=3 recoveries, got {}", engine.recoveries());
+    assert_eq!(engine.recoveries(), engine.quarantines(), "every quarantine must recover");
+    assert!(!engine.recovery_latencies_ms().is_empty());
+    if lane_width == 1 {
+        assert!(
+            lost.len() >= 3,
+            "round-robin dispatch puts streams behind every fault; got {} losses",
+            lost.len()
+        );
+    }
+
+    // The resumable contract, end to end: resubmitting exactly the lost
+    // streams on the healed engine yields bit-exact results.
+    let resubmit: Vec<Sample> = lost.iter().map(|&i| samples[i].clone()).collect();
+    if !resubmit.is_empty() {
+        let results = engine.run_batch(&resubmit).unwrap();
+        for (r, &i) in results.iter().zip(&lost) {
+            let o = core.run(&samples[i]);
+            assert_eq!(r.prediction, o.prediction, "resubmitted stream {i} prediction");
+            assert_eq!(r.counts, o.counts, "resubmitted stream {i} counts");
+        }
+    }
+    assert!(engine.shard_health().iter().all(|h| *h == ShardHealth::Healthy));
+}
+
+#[test]
+fn chaos_differential_gate_lane_width_1() {
+    run_gate(1);
+}
+
+#[test]
+fn chaos_differential_gate_lane_width_64() {
+    run_gate(64);
+}

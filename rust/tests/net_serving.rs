@@ -10,10 +10,11 @@ use std::time::Duration;
 
 use quantisenc::config::registers::{RegisterFile, REG_VTH};
 use quantisenc::config::ModelConfig;
-use quantisenc::coordinator::client::{self, LoadgenOptions, WireClient};
+use quantisenc::coordinator::client::{self, LoadgenOptions, RetryPolicy, WireClient};
 use quantisenc::coordinator::connectome::Connectome;
 use quantisenc::coordinator::control::ReconfigProgram;
 use quantisenc::coordinator::server::{ServerOptions, ServerStats, SpikeServer};
+use quantisenc::coordinator::serving::chaos::{ChaosEvent, ChaosKind, ChaosSchedule};
 use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
 use quantisenc::coordinator::wire::{self, ErrorCode, Frame, DEFAULT_MAX_FRAME_LEN};
 use quantisenc::datasets::rng::XorShift64Star;
@@ -413,6 +414,69 @@ fn loadgen_verifies_bitexact_against_the_oracle() {
     assert!(report.verified);
     assert!(report.p50_us > 0.0 && report.p99_us >= report.p50_us);
     assert!(report.samples_per_sec > 0.0);
+}
+
+#[test]
+fn shard_loss_is_typed_on_the_wire_and_health_reports_recovery() {
+    // The self-healing path end to end over TCP: a shard death surfaces
+    // as exactly one typed ShardLost error frame (reference-preserving,
+    // connection stays up), a retrying client absorbs the next one into a
+    // served bit-exact result, and the HealthReq/Health probe reports the
+    // recoveries with every shard back to Healthy.
+    let (cfg, weights, regs) = fixture();
+    let mut core = Core::new(cfg.clone());
+    core.load_weights(&weights).unwrap();
+    core.registers = regs.clone();
+    let mut engine =
+        ServingEngine::new(&cfg, &weights, &regs, ServingOptions::with_cores(2)).unwrap();
+    // Admission 0 kills shard 0 under the first stream; admission 2 kills
+    // both shards, so the stream is lost no matter where it was dispatched
+    // (keeps the retry outcome deterministic).
+    engine.install_chaos(ChaosSchedule::new(vec![
+        ChaosEvent { at_sample: 0, shard: 0, kind: ChaosKind::StagePanic { stage: 0 } },
+        ChaosEvent { at_sample: 2, shard: 0, kind: ChaosKind::StagePanic { stage: 1 } },
+        ChaosEvent { at_sample: 2, shard: 1, kind: ChaosKind::ChannelDrop { stage: 0 } },
+    ]));
+    let mut server = SpikeServer::bind(engine, "127.0.0.1:0", ServerOptions::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = WireClient::connect(&addr).unwrap();
+
+    // Pre-traffic probe: healthy, nothing recovered, one status byte per
+    // shard — answered without a session.
+    let h0 = client.health(1).unwrap();
+    assert!(!h0.degraded, "fresh server is healthy: {h0:?}");
+    assert_eq!((h0.recoveries, h0.quarantines), (0, 0));
+    assert_eq!(h0.shards, vec![0, 0]);
+
+    let (session, _) = client.open_session(0).unwrap();
+    let s0 = Dataset::Smnist.sample(0, Split::Test, 6);
+
+    // Bare submit: the loss is one typed, reference-preserving error.
+    client.submit(session, 0, &s0).unwrap();
+    match client.recv().unwrap() {
+        Frame::Error { code: ErrorCode::ShardLost, reference: 0, .. } => {}
+        other => panic!("expected a typed ShardLost, got {other:?}"),
+    }
+    // The session is not burned: the healed engine serves the next submit.
+    let r1 = client.submit_with_retry(session, 1, &s0, &RetryPolicy::default()).unwrap();
+    assert_eq!(r1.counts, core.run(&s0).counts, "post-recovery result bit-exact");
+
+    // Retrying submit: attempt 1 is admission 2 (both shards die under
+    // it), attempt 2 is served by the rebuilt engine.
+    let r2 = client.submit_with_retry(session, 2, &s0, &RetryPolicy::default()).unwrap();
+    assert_eq!(r2.attempts, 2, "one absorbed loss, then served");
+    assert_eq!(r2.shard_losses, 1);
+    assert_eq!(r2.counts, core.run(&s0).counts, "retried result bit-exact");
+
+    let stats = wait_for_stats(&server, "the recoveries to be mirrored", |s| s.recoveries == 3);
+    assert_eq!(stats.shard_losses, 2, "two streams were settled as ShardLost");
+    assert_eq!(stats.quarantines, 3, "every death was quarantined");
+    assert_eq!(server.recovery_latencies_ms().len(), 3);
+    let h1 = client.health(2).unwrap();
+    assert!(!h1.degraded, "supervisor re-admitted every shard: {h1:?}");
+    assert_eq!((h1.recoveries, h1.quarantines), (3, 3));
+    assert_eq!(h1.shards, vec![0, 0]);
+    server.shutdown();
 }
 
 #[test]
