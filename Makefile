@@ -1,6 +1,6 @@
 # Convenience targets; everything is plain cargo underneath.
 
-.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology bench-hotpath bench-serving snapshot-smoke chaos-smoke fmt clippy
+.PHONY: all build test artifacts bench bench-norun bench-smoke bench-topology bench-hotpath bench-serving snapshot-smoke chaos-smoke seu-smoke fmt clippy
 
 all: build
 
@@ -79,6 +79,20 @@ chaos-smoke:
 		--sessions 3 --n 48 --cores 2 --deaths 4 --ckpt-every 8 \
 		--out BENCH_chaos.json
 	cargo run --release --bin repro -- bench-check BENCH_chaos.json
+
+# Memory-integrity differential gate: seeded single-event upsets against a
+# SECDED Correct-mode engine (repaired in place, bit-exact vs the
+# sequential core), a parity Detect-mode engine (quarantine + checkpoint
+# rebuild + bit-exact resubmit), and a lane-64 scrub-overhead measurement.
+# Exits nonzero unless every upset is accounted for (detection rate 1.0),
+# at least one flip was corrected in place, no stream diverged, and the
+# scrub overhead is under BENCH_GATE_MAX_SCRUB_OVERHEAD (default 10%).
+# Emits BENCH_integrity.json and re-validates it through bench-check.
+seu-smoke:
+	cargo run --release --bin repro -- seu-soak \
+		--cores 2 --flips 6 --det-flips 2 --n64 192 \
+		--out BENCH_integrity.json
+	cargo run --release --bin repro -- bench-check BENCH_integrity.json
 
 fmt:
 	cargo fmt --all -- --check

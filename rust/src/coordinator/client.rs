@@ -105,6 +105,9 @@ pub struct RetryOutcome {
     pub shard_losses: u32,
     /// Typed `Overloaded` rejections absorbed along the way.
     pub overloads: u32,
+    /// Fresh connections dialed after idle expiries (`IdleTimeout` frames
+    /// or sockets the server had already closed).
+    pub reconnects: u32,
 }
 
 /// Supervision state reported by a wire `Health` frame (see
@@ -117,6 +120,12 @@ pub struct HealthInfo {
     pub quarantines: u64,
     /// Samples completed since the engine's live recovery point.
     pub checkpoint_age: u64,
+    /// Parity/SECDED blocks swept by the engine's background scrubber.
+    pub scrubbed_blocks: u64,
+    /// Single-bit upsets repaired in place by SECDED.
+    pub corrected: u64,
+    /// Detected-uncorrectable words (each one a quarantine cause).
+    pub detected: u64,
     /// One status byte per shard: 0 Healthy, 1 Quarantined, 2 Rebuilding.
     pub shards: Vec<u8>,
 }
@@ -189,6 +198,9 @@ pub struct WireClient {
     sender: ClientSender,
     receiver: ClientReceiver,
     pub hello: HelloInfo,
+    /// Address the connection was dialed to — kept so retry paths can
+    /// dial a fresh connection after the server expires this one.
+    addr: String,
 }
 
 impl WireClient {
@@ -201,6 +213,7 @@ impl WireClient {
             sender: ClientSender { writer: BufWriter::new(stream) },
             receiver: ClientReceiver { reader, max_frame_len: wire::DEFAULT_MAX_FRAME_LEN },
             hello: HelloInfo { inputs: 0, outputs: 0, cores: 0, lane_width: 0 },
+            addr: addr.to_string(),
         };
         client.send(&Frame::Hello { version: wire::VERSION })?;
         match client.recv()? {
@@ -210,6 +223,18 @@ impl WireClient {
             other => bail!("expected HelloAck, got {other:?}"),
         }
         Ok(client)
+    }
+
+    /// Replace this handle's transport with a freshly dialed, handshaken
+    /// connection to the same address (used after the server expires the
+    /// old one for idleness). Sessions do not survive the old connection —
+    /// callers must open a replacement on the new one.
+    pub fn reconnect(&mut self) -> Result<()> {
+        let fresh = WireClient::connect(&self.addr)?;
+        self.sender = fresh.sender;
+        self.receiver = fresh.receiver;
+        self.hello = fresh.hello;
+        Ok(())
     }
 
     pub fn send(&mut self, frame: &Frame) -> Result<(), WireError> {
@@ -290,11 +315,26 @@ impl WireClient {
     pub fn health(&mut self, request: u64) -> Result<HealthInfo> {
         self.send(&Frame::HealthReq { request })?;
         match self.recv()? {
-            Frame::Health { request: r, degraded, recoveries, quarantines, checkpoint_age, shards }
-                if r == request =>
-            {
-                Ok(HealthInfo { degraded, recoveries, quarantines, checkpoint_age, shards })
-            }
+            Frame::Health {
+                request: r,
+                degraded,
+                recoveries,
+                quarantines,
+                checkpoint_age,
+                scrubbed_blocks,
+                corrected,
+                detected,
+                shards,
+            } if r == request => Ok(HealthInfo {
+                degraded,
+                recoveries,
+                quarantines,
+                checkpoint_age,
+                scrubbed_blocks,
+                corrected,
+                detected,
+                shards,
+            }),
             Frame::Error { code, message, .. } => {
                 bail!("server refused health probe ({code:?}): {message}")
             }
@@ -306,9 +346,12 @@ impl WireClient {
     /// rejections under `policy`. Retries fire on typed `ShardLost` (the
     /// stream was on a shard that died; the supervisor is rebuilding it)
     /// and `Overloaded` (admission backpressure) — both idempotent-safe —
-    /// and sleep `policy.backoff(...)` between attempts. Every other error
-    /// code, retry-budget exhaustion, and deadline overrun are typed
-    /// failures.
+    /// and sleep `policy.backoff(...)` between attempts. An idle-expired
+    /// connection (a typed `IdleTimeout` frame, or a send/receive failing
+    /// because the server already closed the socket) is also retryable,
+    /// but on a *fresh* connection: the client redials, opens a
+    /// replacement session, and resubmits there. Every other error code,
+    /// retry-budget exhaustion, and deadline overrun are typed failures.
     pub fn submit_with_retry(
         &mut self,
         session: u32,
@@ -318,11 +361,34 @@ impl WireClient {
     ) -> Result<RetryOutcome> {
         let start = Instant::now();
         let budget = policy.max_attempts.max(1);
+        let mut session = session;
         let mut shard_losses = 0u32;
         let mut overloads = 0u32;
+        let mut reconnects = 0u32;
         for attempt in 1..=budget {
-            self.submit(session, sample_id, s)?;
-            match self.recv()? {
+            let reply = match self.submit(session, sample_id, s) {
+                Ok(()) => self.recv(),
+                Err(e) => Err(e.into()),
+            };
+            let frame = match reply {
+                Ok(f) => f,
+                Err(e) => {
+                    // The socket died under us — the server closes
+                    // idle-expired connections right after its courtesy
+                    // error frame, so the write or read can fail before
+                    // that frame is ever seen. Submits are idempotent, so
+                    // a fresh connection and session make this retryable.
+                    if attempt == budget {
+                        return Err(e.context(format!(
+                            "submit {sample_id}: connection lost after {attempt} attempts"
+                        )));
+                    }
+                    session = self.reopen(policy, sample_id, attempt, start)?;
+                    reconnects += 1;
+                    continue;
+                }
+            };
+            match frame {
                 Frame::Result { sample, epoch, prediction, spikes_total, counts, .. }
                     if sample == sample_id =>
                 {
@@ -334,7 +400,21 @@ impl WireClient {
                         attempts: attempt,
                         shard_losses,
                         overloads,
+                        reconnects,
                     });
+                }
+                Frame::Error { code: ErrorCode::IdleTimeout, message, .. } => {
+                    // The idle kill is addressed to the connection, not to
+                    // any request (reference 0), and the server closes the
+                    // socket right behind it — the old session is gone.
+                    if attempt == budget {
+                        bail!(
+                            "submit {sample_id} failed (IdleTimeout) after {attempt} attempts: \
+                             {message}"
+                        );
+                    }
+                    session = self.reopen(policy, sample_id, attempt, start)?;
+                    reconnects += 1;
                 }
                 Frame::Error { code, reference, message, .. } if reference == sample_id => {
                     match code {
@@ -362,6 +442,28 @@ impl WireClient {
             }
         }
         bail!("submit {sample_id}: retry budget exhausted")
+    }
+
+    /// Back off, dial a fresh connection, and open a replacement session
+    /// after an idle expiry (see [`WireClient::submit_with_retry`]).
+    fn reopen(
+        &mut self,
+        policy: &RetryPolicy,
+        sample_id: u64,
+        attempt: u32,
+        start: Instant,
+    ) -> Result<u32> {
+        let nap = policy.backoff(sample_id, attempt);
+        if start.elapsed() + nap > policy.deadline {
+            bail!(
+                "submit {sample_id} deadline {:?} exhausted while redialing after an idle expiry",
+                policy.deadline
+            );
+        }
+        std::thread::sleep(nap);
+        self.reconnect()?;
+        let (session, _) = self.open_session(0)?;
+        Ok(session)
     }
 
     /// Split into independently-owned halves for concurrent send/receive.

@@ -81,13 +81,47 @@ const fn crc32_table() -> [u32; 256] {
 
 static CRC_TABLE: [u32; 256] = crc32_table();
 
-/// CRC-32 (IEEE) of `bytes`.
-pub fn crc32(bytes: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in bytes {
-        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+/// Incremental CRC-32 (IEEE 802.3) digest: feed bytes in any chunking via
+/// [`Crc32::update`] and read the checksum with [`Crc32::finish`]. Useful
+/// when a payload is produced piecewise (streamed sections, scatter
+/// buffers) — the digest over the concatenation equals the one-shot
+/// [`crc32`] of the same bytes regardless of split points.
+#[derive(Debug, Clone, Copy)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    /// A fresh digest (equivalent to having hashed zero bytes).
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
     }
-    !c
+
+    /// Absorb a chunk; chunk boundaries do not affect the checksum.
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state = CRC_TABLE[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+    }
+
+    /// The CRC-32 of everything absorbed so far. Non-consuming: further
+    /// `update` calls continue the same running digest.
+    pub fn finish(&self) -> u32 {
+        !self.state
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Crc32 {
+        Crc32::new()
+    }
+}
+
+/// CRC-32 (IEEE) of `bytes` in one shot (see [`Crc32`] for streaming).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut digest = Crc32::new();
+    digest.update(bytes);
+    digest.finish()
 }
 
 // ---------------------------------------------------------------------------
@@ -627,6 +661,23 @@ mod tests {
         // The canonical IEEE check value plus an empty-input identity.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+        assert_eq!(Crc32::new().finish(), 0, "fresh digest = empty-input identity");
+    }
+
+    #[test]
+    fn incremental_crc32_matches_one_shot_at_every_split() {
+        // Chunk boundaries must never affect the digest: hash a buffer at
+        // every possible split point (including empty chunks) and compare
+        // against the one-shot CRC of the whole.
+        let data: Vec<u8> = (0u32..300).map(|i| (i.wrapping_mul(31) ^ (i >> 3)) as u8).collect();
+        let whole = crc32(&data);
+        for split in 0..=data.len() {
+            let mut digest = Crc32::new();
+            digest.update(&data[..split]);
+            digest.update(&[]);
+            digest.update(&data[split..]);
+            assert_eq!(digest.finish(), whole, "split at {split} changed the digest");
+        }
     }
 
     fn tiny() -> Connectome {

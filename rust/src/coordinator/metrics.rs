@@ -43,6 +43,14 @@ pub struct Telemetry {
     /// Supervisor mirror: cumulative wall-clock spent in degraded mode
     /// (one or more shards not healthy), in milliseconds.
     pub degraded_ms: u64,
+    /// Integrity mirror: parity/SECDED blocks swept by the background
+    /// scrubber across all shards.
+    pub scrubbed_blocks: u64,
+    /// Integrity mirror: single-bit upsets repaired in place (SECDED).
+    pub integrity_corrected: u64,
+    /// Integrity mirror: detected-uncorrectable words — each one fed the
+    /// supervisor a quarantine cause.
+    pub integrity_detected: u64,
     started: Option<Instant>,
     elapsed: Duration,
 }
@@ -94,6 +102,15 @@ impl Telemetry {
         self.quarantines = quarantines;
         self.checkpoint_age_samples = checkpoint_age_samples;
         self.degraded_ms = degraded_ms;
+    }
+
+    /// Adopt the engine's memory-integrity ledger (scrubbed blocks,
+    /// in-place corrections, detected-uncorrectable words) so silent-data-
+    /// corruption defense is visible in the same summary as the traffic.
+    pub fn record_integrity(&mut self, scrubbed_blocks: u64, corrected: u64, detected: u64) {
+        self.scrubbed_blocks = scrubbed_blocks;
+        self.integrity_corrected = corrected;
+        self.integrity_detected = detected;
     }
 
     /// Rejected fraction of all requests that reached the front door.
@@ -179,6 +196,12 @@ impl Telemetry {
             s.push_str(&format!(
                 " recoveries={}/{} degraded={}ms ckpt_age={}",
                 self.recoveries, self.quarantines, self.degraded_ms, self.checkpoint_age_samples
+            ));
+        }
+        if self.scrubbed_blocks > 0 || self.integrity_detected > 0 {
+            s.push_str(&format!(
+                " scrub={}blk corrected={} detected={}",
+                self.scrubbed_blocks, self.integrity_corrected, self.integrity_detected
             ));
         }
         s
@@ -267,5 +290,16 @@ mod tests {
         let s = t.summary();
         assert!(s.contains("shard_losses=2"), "{s}");
         assert!(s.contains("recoveries=2/3 degraded=250ms ckpt_age=17"), "{s}");
+    }
+
+    #[test]
+    fn integrity_counters_surface_in_summary() {
+        let mut t = Telemetry::new();
+        assert!(!t.summary().contains("scrub="), "integrity off, no segment");
+        t.record_integrity(4096, 2, 1);
+        assert_eq!(t.scrubbed_blocks, 4096);
+        assert_eq!((t.integrity_corrected, t.integrity_detected), (2, 1));
+        let s = t.summary();
+        assert!(s.contains("scrub=4096blk corrected=2 detected=1"), "{s}");
     }
 }

@@ -28,7 +28,7 @@ use crate::hdl::spikes::{MatrixPool, PlanePool};
 use crate::hdl::ActivityStats;
 
 use super::serving::{
-    build_layers, collector_loop, panic_message, stage_loop, ServingError, StageMsg,
+    build_layers, collector_loop, panic_message, stage_loop, ScrubPlan, ServingError, StageMsg,
 };
 
 /// Analytic pipeline schedule — Eq. 11 and the Fig. 8 timing diagram.
@@ -137,7 +137,18 @@ pub fn run_pipelined(
             let stage_regs = regs.clone();
             let rx = std::mem::replace(&mut chain_rx, next_rx);
             stages.push(scope.spawn(move || {
-                stage_loop(layer_idx, layer, stage_regs, rx, tx, Vec::new(), Vec::new())
+                // Integrity-off scrub plan: the one-shot executor has no
+                // chaos surface and no supervisor to feed.
+                stage_loop(
+                    layer_idx,
+                    layer,
+                    stage_regs,
+                    rx,
+                    tx,
+                    Vec::new(),
+                    Vec::new(),
+                    ScrubPlan::default(),
+                )
             }));
         }
         let collector_rx = chain_rx;

@@ -134,6 +134,12 @@ pub struct ServerStats {
     pub checkpoint_age: u64,
     /// Supervisor mirror: cumulative milliseconds in degraded mode.
     pub degraded_ms: u64,
+    /// Integrity mirror: parity/SECDED blocks swept by the scrubber.
+    pub scrubbed_blocks: u64,
+    /// Integrity mirror: single-bit upsets repaired in place.
+    pub integrity_corrected: u64,
+    /// Integrity mirror: detected-uncorrectable words (quarantine causes).
+    pub integrity_detected: u64,
 }
 
 #[derive(Default)]
@@ -152,6 +158,9 @@ struct Counters {
     quarantines: AtomicU64,
     checkpoint_age: AtomicU64,
     degraded_ms: AtomicU64,
+    scrubbed_blocks: AtomicU64,
+    integrity_corrected: AtomicU64,
+    integrity_detected: AtomicU64,
     /// One status byte per shard (0 Healthy, 1 Quarantined, 2 Rebuilding),
     /// refreshed by the pump after every engine interaction — readers
     /// answer `HealthReq` from this mirror without touching the engine.
@@ -181,6 +190,9 @@ impl Counters {
             quarantines: self.quarantines.load(Ordering::Relaxed),
             checkpoint_age: self.checkpoint_age.load(Ordering::Relaxed),
             degraded_ms: self.degraded_ms.load(Ordering::Relaxed),
+            scrubbed_blocks: self.scrubbed_blocks.load(Ordering::Relaxed),
+            integrity_corrected: self.integrity_corrected.load(Ordering::Relaxed),
+            integrity_detected: self.integrity_detected.load(Ordering::Relaxed),
         }
     }
 
@@ -202,6 +214,10 @@ fn mirror_health(engine: &ServingEngine, counters: &Counters) {
     counters
         .degraded_ms
         .store(engine.degraded_duration().as_millis() as u64, Ordering::Relaxed);
+    let (scrubbed, corrected, detected) = engine.integrity_counters();
+    counters.scrubbed_blocks.store(scrubbed, Ordering::Relaxed);
+    counters.integrity_corrected.store(corrected, Ordering::Relaxed);
+    counters.integrity_detected.store(detected, Ordering::Relaxed);
     *counters.shard_health.lock().unwrap_or_else(|e| e.into_inner()) =
         engine.shard_health().iter().map(|h| *h as u8).collect();
     *counters.recovery_ms.lock().unwrap_or_else(|e| e.into_inner()) =
@@ -725,6 +741,9 @@ fn connection_loop(
                     recoveries: counters.recoveries.load(Ordering::Relaxed),
                     quarantines: counters.quarantines.load(Ordering::Relaxed),
                     checkpoint_age: counters.checkpoint_age.load(Ordering::Relaxed),
+                    scrubbed_blocks: counters.scrubbed_blocks.load(Ordering::Relaxed),
+                    corrected: counters.integrity_corrected.load(Ordering::Relaxed),
+                    detected: counters.integrity_detected.load(Ordering::Relaxed),
                     shards,
                 });
             }

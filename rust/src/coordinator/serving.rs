@@ -76,6 +76,7 @@ use crate::config::registers::RegisterFile;
 use crate::config::ModelConfig;
 use crate::datasets::Sample;
 use crate::hdl::core::argmax;
+use crate::hdl::integrity::{self, IntegrityMode};
 use crate::hdl::layer::Layer;
 use crate::hdl::spikes::{MatrixPool, PlanePool, SpikeMatrix, SpikePlane};
 use crate::hdl::ActivityStats;
@@ -197,6 +198,38 @@ pub(crate) enum StageMsg {
 /// section of a [`Connectome`](super::connectome::Connectome).
 pub(crate) type LayerExport = super::connectome::LayerState;
 
+/// Per-stage scrubbing contract: how many synaptic-memory blocks each
+/// stage verifies at every sample-group boundary
+/// ([`ServingOptions::scrub_stride`]) and the engine-wide ledger the
+/// tallies land in. The default (stride 0, fresh ledger) is the
+/// integrity-off plan the scoped pipeline wrapper uses.
+#[derive(Clone, Default)]
+pub(crate) struct ScrubPlan {
+    pub(crate) stride: usize,
+    pub(crate) ledger: Arc<integrity::Ledger>,
+}
+
+/// Boundary scrub: verify the stage's neuron banks (in full, they are
+/// small) plus the next `stride` synaptic-memory blocks, repairing what
+/// the mode can repair and absorbing the tally into the engine ledger.
+/// Detected-uncorrectable corruption panics the stage — deliberately: the
+/// panic reuses the entire supervision path (typed ShardLost settlement,
+/// quarantine, rebuild from the last checkpoint, epoch replay), so a flip
+/// the code cannot fix costs exactly one shard's in-flight streams, never
+/// a silently wrong result. Runs *before* the first timestep after a
+/// boundary, so corrupted state is caught before any datapath work
+/// consumes it.
+fn boundary_scrub(layer: &mut Layer, layer_idx: usize, scrub: &ScrubPlan) {
+    if layer.integrity_mode() == IntegrityMode::Off {
+        return;
+    }
+    let out = layer.scrub(scrub.stride);
+    scrub.ledger.absorb(out);
+    if out.detected > 0 {
+        panic!("integrity: uncorrectable corruption detected at stage {layer_idx}");
+    }
+}
+
 /// Body of one pipeline stage: owns hardware layer `layer_idx`, transforms
 /// spike vectors, resets its membranes at every stream boundary, and applies
 /// the slice of each control-plane program that addresses it (all register
@@ -205,6 +238,7 @@ pub(crate) type LayerExport = super::connectome::LayerState;
 /// construction: they arrive through the same FIFO as the data, so every
 /// stream is processed entirely under one config epoch. Returns when the
 /// input channel closes or the downstream consumer disappears.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn stage_loop(
     layer_idx: usize,
     mut layer: Layer,
@@ -213,6 +247,7 @@ pub(crate) fn stage_loop(
     tx: SyncSender<StageMsg>,
     mut pool: Vec<SpikePlane>,
     mut mat_pool: Vec<SpikeMatrix>,
+    scrub: ScrubPlan,
 ) {
     // Activity accumulated by this stage for the stream in flight.
     let mut acc = ActivityStats::default();
@@ -221,9 +256,19 @@ pub(crate) fn stage_loop(
     // first use; the engine keeps the lane width constant).
     let mut acc_lanes: Vec<ActivityStats> = Vec::new();
     let mut lane_scratch: Vec<ActivityStats> = Vec::new();
+    // True between streams (initially, and after every flush marker): the
+    // first timestep after a boundary runs the background scrub *before*
+    // touching the datapath, so a fault injected between samples — the
+    // only place the feeder injects — is repaired or detected before any
+    // compute consumes the corrupted word.
+    let mut at_boundary = true;
     for msg in rx {
         match msg {
             StageMsg::Step { stream, plane } => {
+                if at_boundary {
+                    boundary_scrub(&mut layer, layer_idx, &scrub);
+                    at_boundary = false;
+                }
                 // Output buffer from the stage-local free list; the consumed
                 // input plane is recycled into the same list below, so a
                 // pre-filled stage never allocates (and each plane's word
@@ -244,6 +289,7 @@ pub(crate) fn stage_loop(
             StageMsg::Flush { stream, stats: mut upstream } => {
                 // Fig. 8 settle: membranes back to rest between streams.
                 layer.reset();
+                at_boundary = true;
                 upstream.add(&acc);
                 acc = ActivityStats::default();
                 if tx.send(StageMsg::Flush { stream, stats: upstream }).is_err() {
@@ -251,6 +297,10 @@ pub(crate) fn stage_loop(
                 }
             }
             StageMsg::StepLanes { matrix, active } => {
+                if at_boundary {
+                    boundary_scrub(&mut layer, layer_idx, &scrub);
+                    at_boundary = false;
+                }
                 let lanes = matrix.lanes();
                 if acc_lanes.len() != lanes {
                     acc_lanes.resize(lanes, ActivityStats::default());
@@ -276,6 +326,7 @@ pub(crate) fn stage_loop(
                 // ragged final group shorter than the lane width, and a
                 // zero-step group that never sized the accumulators).
                 layer.reset();
+                at_boundary = true;
                 for (st, lane_acc) in upstream.iter_mut().zip(&acc_lanes) {
                     st.add(lane_acc);
                 }
@@ -309,6 +360,12 @@ pub(crate) fn stage_loop(
                 }
             }
             StageMsg::Export { reply } => {
+                // Scrub before fencing: a checkpoint must never capture a
+                // flip that landed after the last boundary scrub — either
+                // it is repaired here (Correct) or the panic fails the
+                // fence as a typed error and the supervisor re-fences
+                // after healing (Detect).
+                boundary_scrub(&mut layer, layer_idx, &scrub);
                 let (lanes, lane_vmem, lane_refcnt) = layer.lane_state();
                 // Send errors mean the snapshotter gave up (timeout) —
                 // the fence still flows downstream so later stages drain.
@@ -348,6 +405,15 @@ pub(crate) fn stage_loop(
                     }
                     ChaosKind::SlowStage { stage, millis } if stage == layer_idx => {
                         std::thread::sleep(Duration::from_millis(millis));
+                    }
+                    ChaosKind::BitFlip { layer: at_layer, target, word, bit }
+                        if at_layer == layer_idx =>
+                    {
+                        // A single-event upset: flip the raw storage bit
+                        // behind the integrity codes' back. The feeder
+                        // injects between samples, so the very next
+                        // boundary scrub decides the outcome.
+                        layer.integrity_flip(target, word, bit);
                     }
                     _ => {}
                 }
@@ -659,8 +725,26 @@ pub struct ServingOptions {
     /// since the last one. Smaller intervals shorten the epoch-replay
     /// tail a shard rebuild performs; larger ones fence less often. The
     /// construction state is always checkpoint zero, so recovery works
-    /// from the first sample.
+    /// from the first sample. Must be at least 1 — validated (as a typed
+    /// error) at engine construction, never silently clamped.
     pub checkpoint_interval: u64,
+    /// SEU-integrity level for every stage's state memories (synaptic
+    /// stores and neuron banks — see [`crate::hdl::integrity`]). `Off`
+    /// (default) skips all code maintenance; `Detect` adds interleaved
+    /// parity (any boundary flip quarantines the shard, which is then
+    /// rebuilt from the last checkpoint); `Correct` adds SECDED codes
+    /// that repair single-bit flips in place at the boundary scrub.
+    pub integrity: IntegrityMode,
+    /// Background-scrub budget: synaptic-memory blocks
+    /// ([`crate::hdl::integrity::PARITY_BLOCK`]-word groups) each stage
+    /// verifies at every sample-group boundary, via a wrapping cursor
+    /// (the small neuron banks are always verified in full). The default
+    /// `usize::MAX` sweeps the whole weight store every boundary — the
+    /// setting the bit-exactness gates assume, since a flip in an
+    /// unswept block could be consumed before its scrub turn; smaller
+    /// strides amortize the sweep across boundaries at the cost of that
+    /// detection-latency window.
+    pub scrub_stride: usize,
 }
 
 impl Default for ServingOptions {
@@ -671,6 +755,8 @@ impl Default for ServingOptions {
             lane_width: 1,
             sparse_cutoff: None,
             checkpoint_interval: 256,
+            integrity: IntegrityMode::Off,
+            scrub_stride: usize::MAX,
         }
     }
 }
@@ -693,9 +779,25 @@ impl ServingOptions {
     }
 
     /// Builder: set the supervision checkpoint cadence (see
-    /// [`ServingOptions::checkpoint_interval`]).
+    /// [`ServingOptions::checkpoint_interval`]). A cadence of 0 is kept
+    /// as-is and rejected with a typed error by [`ServingEngine::new`] —
+    /// surfacing the misconfiguration beats silently clamping it.
     pub fn checkpoints_every(mut self, samples: u64) -> ServingOptions {
-        self.checkpoint_interval = samples.max(1);
+        self.checkpoint_interval = samples;
+        self
+    }
+
+    /// Builder: set the SEU-integrity level (see
+    /// [`ServingOptions::integrity`]).
+    pub fn with_integrity(mut self, mode: IntegrityMode) -> ServingOptions {
+        self.integrity = mode;
+        self
+    }
+
+    /// Builder: set the background-scrub budget (see
+    /// [`ServingOptions::scrub_stride`]).
+    pub fn scrub_stride(mut self, blocks: usize) -> ServingOptions {
+        self.scrub_stride = blocks;
         self
     }
 }
@@ -764,12 +866,14 @@ fn spawn_shard(
     n_out: usize,
     plane_pool: &Arc<PlanePool>,
     matrix_pool: &Arc<MatrixPool>,
+    scrub: &ScrubPlan,
 ) -> Shard {
     let mut threads = Vec::with_capacity(layers.len() + 1);
     let (first_tx, mut chain_rx) = sync_channel::<StageMsg>(queue_depth);
     for (layer_idx, layer) in layers.into_iter().enumerate() {
         let (tx, next_rx) = sync_channel::<StageMsg>(queue_depth);
         let stage_regs = regs.clone();
+        let stage_scrub = scrub.clone();
         let rx = std::mem::replace(&mut chain_rx, next_rx);
         // Two pre-sized buffers per stage-local free list cover the
         // one output buffer a stage ever needs in hand (planes on
@@ -793,7 +897,7 @@ fn spawn_shard(
             Vec::new()
         };
         threads.push(std::thread::spawn(move || {
-            stage_loop(layer_idx, layer, stage_regs, rx, tx, stage_pool, stage_mats)
+            stage_loop(layer_idx, layer, stage_regs, rx, tx, stage_pool, stage_mats, stage_scrub)
         }));
     }
     // In lane mode a single FlushLanes emits up to lane_width
@@ -890,7 +994,16 @@ pub struct ServingEngine {
     /// Installed fault schedule ([`ServingEngine::install_chaos`]) and
     /// the index of the first event not yet fired.
     chaos: Option<ChaosSchedule>,
+    /// Engine-wide integrity tally (blocks scrubbed, flips corrected,
+    /// uncorrectable flips detected), shared with every stage thread.
+    scrub_ledger: Arc<integrity::Ledger>,
     // ---- rebuild parameters (frozen at construction) ---------------
+    /// SEU-integrity level every stage runs under
+    /// ([`ServingOptions::integrity`]); rebuilt shards inherit it.
+    integrity: IntegrityMode,
+    /// Boundary-scrub budget in synaptic-memory blocks
+    /// ([`ServingOptions::scrub_stride`]).
+    scrub_stride: usize,
     queue_depth: usize,
     max_width: usize,
     wants_planes: bool,
@@ -914,6 +1027,11 @@ impl ServingEngine {
         anyhow::ensure!(
             (1..=64).contains(&options.lane_width),
             "lane width must be 1..=64 (one bit per sample in a u64 lane word)"
+        );
+        anyhow::ensure!(
+            options.checkpoint_interval >= 1,
+            "checkpoint interval must be at least 1 sample (a zero cadence cannot make \
+             recovery points more frequent than the per-session fence)"
         );
         let lanes = options.lane_width;
         let n_out = config.outputs();
@@ -944,11 +1062,16 @@ impl ServingEngine {
         } else {
             MatrixPool::new()
         });
+        let scrub_ledger = Arc::new(integrity::Ledger::default());
+        let scrub = ScrubPlan { stride: options.scrub_stride, ledger: scrub_ledger.clone() };
         let mut shards = Vec::with_capacity(options.cores);
         let mut synapse_words = 0usize;
         let mut packed_sizes: Vec<usize> = Vec::new();
         for shard_idx in 0..options.cores {
-            let layers = build_layers(config, weights)?;
+            let mut layers = build_layers(config, weights)?;
+            for layer in &mut layers {
+                layer.set_integrity(options.integrity);
+            }
             if shard_idx == 0 {
                 // Shards are identical; measure the footprint once. The
                 // per-layer word counts double as the control plane's
@@ -966,6 +1089,7 @@ impl ServingEngine {
                 n_out,
                 &plane_pool,
                 &matrix_pool,
+                &scrub,
             ));
         }
         let control = Arc::new(ControlShared::new(regs.clone(), packed_sizes, options.cores));
@@ -986,12 +1110,15 @@ impl ServingEngine {
             activity: ActivityStats::default(),
             poisoned: false,
             checkpoint: None,
-            checkpoint_interval: options.checkpoint_interval.max(1),
+            checkpoint_interval: options.checkpoint_interval,
             quarantines: 0,
             recoveries: 0,
             degraded: Duration::ZERO,
             recovery_ms: Vec::new(),
             chaos: None,
+            scrub_ledger,
+            integrity: options.integrity,
+            scrub_stride: options.scrub_stride,
             queue_depth: options.queue_depth,
             max_width,
             wants_planes,
@@ -1195,9 +1322,15 @@ impl ServingEngine {
             .as_ref()
             .map(|c| c.window(base, base + n_samples as u64))
             .unwrap_or_default();
+        // SlowStage only delays; BitFlip kills a shard only when the mode
+        // leaves the boundary scrub nothing better than a panic (Detect),
+        // and that death is observed directly — as ShardLost settlements
+        // or by the next heal pass — so neither is a blanket suspect.
         let chaos_suspects: Vec<usize> = chaos_events
             .iter()
-            .filter(|(_, e)| !matches!(e.kind, ChaosKind::SlowStage { .. }))
+            .filter(|(_, e)| {
+                !matches!(e.kind, ChaosKind::SlowStage { .. } | ChaosKind::BitFlip { .. })
+            })
             .map(|(_, e)| e.shard)
             .collect();
         let control = self.control.clone();
@@ -1563,6 +1696,26 @@ impl ServingEngine {
         self.quarantines
     }
 
+    /// The SEU-integrity level every stage runs under
+    /// ([`ServingOptions::integrity`]).
+    pub fn integrity_mode(&self) -> IntegrityMode {
+        self.integrity
+    }
+
+    /// Lifetime integrity tally across every stage of every shard:
+    /// `(scrubbed_blocks, corrected, detected)` — synaptic-memory blocks
+    /// verified by the background scrub, single-bit flips repaired in
+    /// place (SECDED, `Correct` mode), and detected-uncorrectable
+    /// corruptions (each of which quarantined its shard for a checkpoint
+    /// rebuild).
+    pub fn integrity_counters(&self) -> (u64, u64, u64) {
+        (
+            self.scrub_ledger.scrubbed_blocks(),
+            self.scrub_ledger.corrected(),
+            self.scrub_ledger.detected(),
+        )
+    }
+
     /// Samples completed since the live recovery point was fenced — the
     /// work a shard rebuild would discard right now (its lost-stream bound
     /// is the in-flight window, but its *replay* distance is this).
@@ -1681,7 +1834,11 @@ impl ServingEngine {
             let regs = states[0].register_file(self.config.qspec)?;
             let zeros: Vec<Vec<i32>> =
                 self.config.layers().iter().map(|l| vec![0i32; l.fan_in * l.neurons]).collect();
-            let layers = build_layers(&self.config, &zeros)?;
+            let mut layers = build_layers(&self.config, &zeros)?;
+            for layer in &mut layers {
+                layer.set_integrity(self.integrity);
+            }
+            let scrub = ScrubPlan { stride: self.scrub_stride, ledger: self.scrub_ledger.clone() };
             let shard = spawn_shard(
                 layers,
                 &regs,
@@ -1692,6 +1849,7 @@ impl ServingEngine {
                 self.outputs,
                 &self.plane_pool,
                 &self.matrix_pool,
+                &scrub,
             );
             let tx = shard.in_tx.as_ref().expect("freshly spawned shard").clone();
             let n_states = states.len();
@@ -2751,6 +2909,143 @@ mod tests {
     }
 
     #[test]
+    fn checkpoint_interval_zero_is_rejected() {
+        // Satellite: a zero cadence used to be silently clamped to 1;
+        // misconfiguration must surface as a typed construction error.
+        let (cfg, weights, regs, _) = setup();
+        let err = ServingEngine::new(
+            &cfg,
+            &weights,
+            &regs,
+            ServingOptions::with_cores(2).checkpoints_every(0),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("checkpoint interval"), "typed validation: {err:#}");
+    }
+
+    #[test]
+    fn checkpoint_fenced_on_final_sample_recovers_with_empty_replay() {
+        // Satellite edge case: checkpoints_every(1) with a fence taken
+        // right at the last completed sample (age 0). That recovery point
+        // must still be complete — a shard killed immediately after
+        // rebuilds with an empty replay tail and serves bit-exactly.
+        let (cfg, weights, regs, samples) = setup();
+        let mut engine = ServingEngine::new(
+            &cfg,
+            &weights,
+            &regs,
+            ServingOptions::with_cores(2).checkpoints_every(1),
+        )
+        .unwrap();
+        let _ = engine.run_batch(&samples[..4]).unwrap();
+        engine.take_checkpoint().unwrap();
+        assert_eq!(engine.checkpoint_age_samples(), 0, "fence sits on the final sample");
+        engine.install_chaos(ChaosSchedule::new(vec![chaos::ChaosEvent {
+            at_sample: 4,
+            shard: 0,
+            kind: ChaosKind::StagePanic { stage: 0 },
+        }]));
+        let outcomes = engine.run_batch_outcomes(&samples[..4]).unwrap();
+        assert!(outcomes.iter().any(|o| o.is_err()), "the kill must cost its shard's streams");
+        assert!(engine.shard_health().iter().all(|h| *h == ShardHealth::Healthy));
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        let out = engine.run_batch(&samples).unwrap();
+        for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+            assert_eq!(r.counts, core.run(s).counts, "sample {i} after the age-0 rebuild");
+        }
+    }
+
+    #[test]
+    fn correct_mode_repairs_boundary_flips_bitexact_without_quarantine() {
+        // SECDED mode: single-bit upsets injected between samples are
+        // repaired by the boundary scrub before any datapath work uses
+        // them — results bit-exact, no quarantine, every repair counted.
+        use crate::hdl::integrity::FlipTarget;
+        let (cfg, weights, regs, samples) = setup();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        let mut engine = ServingEngine::new(
+            &cfg,
+            &weights,
+            &regs,
+            ServingOptions::with_cores(2).with_integrity(IntegrityMode::Correct),
+        )
+        .unwrap();
+        assert_eq!(engine.integrity_mode(), IntegrityMode::Correct);
+        let flip = |at_sample, shard, layer, target, word| chaos::ChaosEvent {
+            at_sample,
+            shard,
+            kind: ChaosKind::BitFlip { layer, target, word, bit: 7 },
+        };
+        engine.install_chaos(ChaosSchedule::new(vec![
+            flip(1, 0, 0, FlipTarget::Weights, 123),
+            flip(3, 1, 1, FlipTarget::Vmem, 5),
+            flip(5, 0, 1, FlipTarget::Refcnt, 2),
+        ]));
+        for round in 0..2 {
+            let out = engine.run_batch(&samples).unwrap();
+            for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+                let seq = core.run(s);
+                assert_eq!(r.counts, seq.counts, "round {round} sample {i}");
+                assert_eq!(r.stats, seq.stats, "round {round} sample {i} ledger");
+            }
+        }
+        let (scrubbed, corrected, detected) = engine.integrity_counters();
+        assert!(scrubbed > 0, "background scrub must have swept blocks");
+        assert_eq!(corrected, 3, "every injected flip repaired in place exactly once");
+        assert_eq!(detected, 0, "single-bit flips are correctable under SECDED");
+        assert_eq!(engine.quarantines(), 0, "correctable flips must not quarantine");
+    }
+
+    #[test]
+    fn detect_mode_flip_quarantines_and_rebuilds_bitexact() {
+        // Parity mode can only flag corruption: the boundary scrub panics
+        // the stage, the streams behind it settle as typed ShardLost, and
+        // the supervisor rebuilds the shard from the last checkpoint —
+        // the same path as any other shard death, with the detection
+        // counted in the integrity ledger.
+        use crate::hdl::integrity::FlipTarget;
+        let (cfg, weights, regs, samples) = setup();
+        let mut core = Core::new(cfg.clone());
+        core.load_weights(&weights).unwrap();
+        core.registers = regs.clone();
+        let mut engine = ServingEngine::new(
+            &cfg,
+            &weights,
+            &regs,
+            ServingOptions::with_cores(2).with_integrity(IntegrityMode::Detect),
+        )
+        .unwrap();
+        engine.install_chaos(ChaosSchedule::new(vec![chaos::ChaosEvent {
+            at_sample: 2,
+            shard: 0,
+            kind: ChaosKind::BitFlip { layer: 0, target: FlipTarget::Weights, word: 40, bit: 3 },
+        }]));
+        let outcomes = engine.run_batch_outcomes(&samples).unwrap();
+        assert!(
+            matches!(outcomes[2], Err(ServingError::ShardLost { shard: 0, resumable: true })),
+            "the stream right behind the flip settles as typed ShardLost"
+        );
+        for (i, (outcome, s)) in outcomes.iter().zip(&samples).enumerate() {
+            if let Ok(r) = outcome {
+                assert_eq!(r.counts, core.run(s).counts, "survivor {i} diverged");
+            }
+        }
+        assert!(engine.shard_health().iter().all(|h| *h == ShardHealth::Healthy));
+        assert_eq!(engine.quarantines(), 1, "detected corruption is a quarantine cause");
+        assert_eq!(engine.recoveries(), 1);
+        let (_, corrected, detected) = engine.integrity_counters();
+        assert_eq!((corrected, detected), (0, 1), "parity detects but cannot locate the bit");
+        let out = engine.run_batch(&samples).unwrap();
+        for (i, (r, s)) in out.iter().zip(&samples).enumerate() {
+            assert_eq!(r.counts, core.run(s).counts, "post-rebuild sample {i} diverged");
+        }
+    }
+
+    #[test]
     fn panicked_pipeline_stage_yields_typed_error() {
         // Same contract for the one-shot scoped executor: a worker panic
         // must become ServingError::WorkerPanicked, never a scope-exit
@@ -2769,6 +3064,7 @@ mod tests {
                     tx_out,
                     Vec::new(),
                     Vec::new(),
+                    ScrubPlan::default(),
                 )
             });
             let program = Arc::new(ReconfigProgram::new().chaos_panic(0));

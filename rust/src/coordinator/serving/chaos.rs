@@ -26,6 +26,7 @@
 //! their inputs, so a chaos soak is replayable from its command line.
 
 use crate::datasets::rng::XorShift64Star;
+use crate::hdl::integrity::FlipTarget;
 
 /// One kind of injected fault, addressed to a stage of the target shard.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,6 +42,14 @@ pub enum ChaosKind {
     /// The addressed stage sleeps `millis` before continuing. The shard
     /// stays healthy; backpressure holds the traffic, nothing is lost.
     SlowStage { stage: usize, millis: u64 },
+    /// A single-event upset: flip `bit` of word `word` in the addressed
+    /// layer's state memory (`word` wraps modulo the bank size). The
+    /// flip bypasses the integrity codes, exactly like radiation hitting
+    /// an SRAM cell; what happens next depends on the engine's
+    /// [`IntegrityMode`](crate::hdl::integrity::IntegrityMode) — repaired
+    /// in place (`Correct`), quarantined and rebuilt (`Detect`), or
+    /// silently corrupting results (`Off`).
+    BitFlip { layer: usize, target: FlipTarget, word: usize, bit: u8 },
 }
 
 /// A fault scheduled at an exact global sample index on one shard.
@@ -100,6 +109,36 @@ impl ChaosSchedule {
         ChaosSchedule::new(events)
     }
 
+    /// A seeded schedule of `flips` single-event upsets spread over the
+    /// first `span` samples of an engine with `shards` shards and
+    /// `layers` pipeline layers. Shards are covered round-robin and the
+    /// flips alternate weight and membrane targets; layer, word, and bit
+    /// positions come from the seed (words wrap modulo the bank size at
+    /// injection time, so any word value addresses real storage). Pure
+    /// function of its arguments.
+    pub fn seeded_flips(
+        seed: u64,
+        flips: usize,
+        span: u64,
+        shards: usize,
+        layers: usize,
+    ) -> ChaosSchedule {
+        let mut rng = XorShift64Star::new(seed | 1);
+        let events = (0..flips)
+            .map(|i| {
+                let target = if i % 2 == 0 { FlipTarget::Weights } else { FlipTarget::Vmem };
+                let kind = ChaosKind::BitFlip {
+                    layer: rng.below(layers.max(1) as u64) as usize,
+                    target,
+                    word: rng.below(1 << 20) as usize,
+                    bit: rng.below(32) as u8,
+                };
+                ChaosEvent { at_sample: rng.below(span.max(1)), shard: i % shards.max(1), kind }
+            })
+            .collect();
+        ChaosSchedule::new(events)
+    }
+
     /// The events, sorted by `at_sample`.
     pub fn events(&self) -> &[ChaosEvent] {
         &self.events
@@ -132,6 +171,29 @@ mod tests {
         assert!(a.events().windows(2).all(|w| w[0].at_sample <= w[1].at_sample), "sorted");
         let c = ChaosSchedule::seeded(0xC406, 6, 100, 3, 3);
         assert_ne!(a.events(), c.events(), "different seed, different schedule");
+    }
+
+    #[test]
+    fn seeded_flip_schedules_are_deterministic_and_alternate_targets() {
+        let a = ChaosSchedule::seeded_flips(0x5EED, 8, 50, 2, 3);
+        let b = ChaosSchedule::seeded_flips(0x5EED, 8, 50, 2, 3);
+        assert_eq!(a.events(), b.events(), "same seed, same schedule");
+        let mut weights = 0;
+        let mut vmem = 0;
+        for e in a.events() {
+            match e.kind {
+                ChaosKind::BitFlip { target: FlipTarget::Weights, bit, .. } => {
+                    assert!(bit < 32);
+                    weights += 1;
+                }
+                ChaosKind::BitFlip { target: FlipTarget::Vmem, .. } => vmem += 1,
+                other => panic!("unexpected kind {other:?}"),
+            }
+        }
+        assert_eq!((weights, vmem), (4, 4), "alternating targets");
+        let shards: std::collections::BTreeSet<usize> =
+            a.events().iter().map(|e| e.shard).collect();
+        assert_eq!(shards.len(), 2, "round-robin shard coverage");
     }
 
     #[test]

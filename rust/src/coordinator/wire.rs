@@ -35,7 +35,7 @@
 //! | 12   | `Restore`        | session `u32`, request id `u64`, byte_len `u32`, connectome bytes |
 //! | 13   | `RestoreAck`     | session `u32`, request id `u64`, epoch `u64` |
 //! | 14   | `HealthReq`      | request id `u64` |
-//! | 15   | `Health`         | request id `u64`, degraded `u8`, recoveries `u64`, quarantines `u64`, checkpoint_age `u64`, n_shards `u16`, n_shards × status `u8` (0 Healthy, 1 Quarantined, 2 Rebuilding) |
+//! | 15   | `Health`         | request id `u64`, degraded `u8`, recoveries `u64`, quarantines `u64`, checkpoint_age `u64`, scrubbed_blocks `u64`, corrected `u64`, detected `u64`, n_shards `u16`, n_shards × status `u8` (0 Healthy, 1 Quarantined, 2 Rebuilding) |
 //!
 //! Spike payloads are bit-packed row-major (timestep-major, LSB-first
 //! within each byte) — the AER-flavoured dense encoding: 8 spike lines per
@@ -167,13 +167,19 @@ pub enum Frame {
     /// Supervision state: `degraded` is true while any shard is not
     /// healthy, `shards` carries one status byte per shard (0 Healthy,
     /// 1 Quarantined, 2 Rebuilding), `checkpoint_age` is samples
-    /// completed since the live recovery point was fenced.
+    /// completed since the live recovery point was fenced. The integrity
+    /// triple mirrors the engine's memory-integrity ledger: parity/SECDED
+    /// blocks swept by the background scrubber, single-bit upsets repaired
+    /// in place, and detected-uncorrectable words (quarantine causes).
     Health {
         request: u64,
         degraded: bool,
         recoveries: u64,
         quarantines: u64,
         checkpoint_age: u64,
+        scrubbed_blocks: u64,
+        corrected: u64,
+        detected: u64,
         shards: Vec<u8>,
     },
 }
@@ -442,7 +448,17 @@ impl Frame {
             Frame::HealthReq { request } => {
                 out.extend_from_slice(&request.to_le_bytes());
             }
-            Frame::Health { request, degraded, recoveries, quarantines, checkpoint_age, shards } => {
+            Frame::Health {
+                request,
+                degraded,
+                recoveries,
+                quarantines,
+                checkpoint_age,
+                scrubbed_blocks,
+                corrected,
+                detected,
+                shards,
+            } => {
                 if shards.len() > u16::MAX as usize {
                     return Err(WireError::BadValue("shard status arity"));
                 }
@@ -451,6 +467,9 @@ impl Frame {
                 out.extend_from_slice(&recoveries.to_le_bytes());
                 out.extend_from_slice(&quarantines.to_le_bytes());
                 out.extend_from_slice(&checkpoint_age.to_le_bytes());
+                out.extend_from_slice(&scrubbed_blocks.to_le_bytes());
+                out.extend_from_slice(&corrected.to_le_bytes());
+                out.extend_from_slice(&detected.to_le_bytes());
                 out.extend_from_slice(&(shards.len() as u16).to_le_bytes());
                 out.extend_from_slice(shards);
             }
@@ -595,12 +614,25 @@ impl Frame {
                 let recoveries = c.u64("health recoveries")?;
                 let quarantines = c.u64("health quarantines")?;
                 let checkpoint_age = c.u64("health checkpoint age")?;
+                let scrubbed_blocks = c.u64("health scrubbed blocks")?;
+                let corrected = c.u64("health corrected words")?;
+                let detected = c.u64("health detected words")?;
                 let n = c.u16("health n_shards")? as usize;
                 let shards = c.take(n, "health shard statuses")?.to_vec();
                 if shards.iter().any(|&s| s > 2) {
                     return Err(WireError::BadValue("health shard status"));
                 }
-                Frame::Health { request, degraded, recoveries, quarantines, checkpoint_age, shards }
+                Frame::Health {
+                    request,
+                    degraded,
+                    recoveries,
+                    quarantines,
+                    checkpoint_age,
+                    scrubbed_blocks,
+                    corrected,
+                    detected,
+                    shards,
+                }
             }
             other => return Err(WireError::BadType(other)),
         };
@@ -831,6 +863,9 @@ mod tests {
                 recoveries: 3,
                 quarantines: 4,
                 checkpoint_age: 129,
+                scrubbed_blocks: 65536,
+                corrected: 2,
+                detected: 1,
                 shards: vec![0, 2, 0],
             },
         ];
@@ -893,6 +928,9 @@ mod tests {
             recoveries: 0,
             quarantines: 0,
             checkpoint_age: 0,
+            scrubbed_blocks: 0,
+            corrected: 0,
+            detected: 0,
             shards: vec![0],
         }
         .encode()
@@ -905,6 +943,9 @@ mod tests {
             recoveries: 0,
             quarantines: 0,
             checkpoint_age: 0,
+            scrubbed_blocks: 0,
+            corrected: 0,
+            detected: 0,
             shards: vec![3],
         }
         .encode()

@@ -1,0 +1,550 @@
+//! Memory-integrity codes for the quantized state memories (SEU defence).
+//!
+//! QUANTISENC's state lives in distributed SRAMs — per-layer synaptic
+//! memories plus the neuron-state register banks — and on real FPGA/ASIC
+//! deployments those arrays are exactly where single-event upsets (SEUs)
+//! silently corrupt inference. This module provides the two classic
+//! word-level protection schemes, selected per [`IntegrityMode`]:
+//!
+//! * **Detect** — interleaved column parity: one `u32` per
+//!   [`PARITY_BLOCK`]-word block holding the XOR of the block's words.
+//!   Any single bit flip anywhere in the block flips exactly one bit of
+//!   the XOR, so it is always detected (but cannot be located). Overhead
+//!   is 1/32 ≈ 3% of the protected words.
+//! * **Correct** — per-word SECDED, Hamming(38,32) plus an overall parity
+//!   bit packed into one `u8` per word (6 Hamming check bits + 1 parity).
+//!   Single-bit flips are located and repaired in place; double-bit flips
+//!   are detected as uncorrectable. Overhead is 8/32 = 25%.
+//!
+//! Both schemes cover the full 32-bit storage word, so they protect any
+//! Qn.q fixed-point format the core is configured with — the code does
+//! not care where the binary point sits.
+//!
+//! [`Guard`] owns the code words for one flat `i32` bank and keeps them
+//! consistent incrementally ([`Guard::record_write`]) or in bulk
+//! ([`Guard::rebuild`]); [`Guard::scrub`] walks a bounded budget of
+//! blocks per call with a wrapping cursor, which is how the serving
+//! stage loop amortizes verification across sample-group boundaries.
+//! [`Ledger`] is the thread-safe tally the serving engine aggregates
+//! scrub activity into.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Words per parity block (and per scrub unit in both modes).
+pub const PARITY_BLOCK: usize = 32;
+
+/// Protection level for a state memory. `Off` is free; see the module
+/// docs for the cost/coverage trade of the other two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IntegrityMode {
+    /// No codes stored, no checking (the pre-PR-10 behavior).
+    #[default]
+    Off,
+    /// Interleaved block parity: every single-bit flip detected, none
+    /// correctable — corruption quarantines the shard.
+    Detect,
+    /// Per-word SECDED: single-bit flips repaired in place, double-bit
+    /// flips detected as uncorrectable.
+    Correct,
+}
+
+impl IntegrityMode {
+    /// Parse a CLI flag value (`off` / `detect` / `correct`).
+    pub fn parse(s: &str) -> Option<IntegrityMode> {
+        match s {
+            "off" => Some(IntegrityMode::Off),
+            "detect" => Some(IntegrityMode::Detect),
+            "correct" => Some(IntegrityMode::Correct),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            IntegrityMode::Off => "off",
+            IntegrityMode::Detect => "detect",
+            IntegrityMode::Correct => "correct",
+        }
+    }
+}
+
+/// Codeword positions (1-indexed Hamming layout over positions `1..=38`)
+/// assigned to the 32 data bits: every position that is not a power of
+/// two, in ascending order. Powers of two hold the check bits.
+const fn data_positions() -> [u32; 32] {
+    let mut out = [0u32; 32];
+    let mut pos = 1u32;
+    let mut j = 0;
+    while j < 32 {
+        if pos & (pos - 1) != 0 {
+            out[j] = pos;
+            j += 1;
+        }
+        pos += 1;
+    }
+    out
+}
+
+const POS: [u32; 32] = data_positions();
+
+/// Inverse map: codeword position → data bit index, or -1 for check-bit
+/// positions. Indexed by syndrome value `1..=38`.
+const fn position_bits() -> [i8; 39] {
+    let mut out = [-1i8; 39];
+    let mut j = 0;
+    while j < 32 {
+        out[POS[j] as usize] = j as i8;
+        j += 1;
+    }
+    out
+}
+
+const POS_BIT: [i8; 39] = position_bits();
+
+/// XOR of the codeword positions of the word's set data bits — equals
+/// the 6 Hamming check bits the word should carry.
+#[inline]
+fn hamming_checks(word: u32) -> u32 {
+    let mut syn = 0u32;
+    let mut w = word;
+    while w != 0 {
+        let j = w.trailing_zeros() as usize;
+        syn ^= POS[j];
+        w &= w - 1;
+    }
+    syn
+}
+
+/// Encode the SECDED code byte for one 32-bit word: bits 0..=5 are the
+/// Hamming check bits, bit 6 is the overall (even) parity over data +
+/// check bits.
+pub fn secded_encode(word: u32) -> u8 {
+    let checks = hamming_checks(word);
+    let parity = (word.count_ones() + checks.count_ones()) & 1;
+    (checks | (parity << 6)) as u8
+}
+
+/// Outcome of checking one word against its SECDED code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WordVerdict {
+    /// Word and code agree.
+    Clean,
+    /// A single bit flipped (in the word, a check bit, or the parity
+    /// bit); carries the repaired data word. When the flip was outside
+    /// the data bits the word is returned unchanged — the caller should
+    /// still refresh the stored code.
+    Corrected(u32),
+    /// Two or more bits flipped — detected but not locatable.
+    Uncorrectable,
+}
+
+/// Check one word against its code byte, locating single-bit errors.
+pub fn secded_check(word: u32, code: u8) -> WordVerdict {
+    let stored_checks = (code & 0x3f) as u32;
+    let stored_parity = ((code >> 6) & 1) as u32;
+    let syndrome = hamming_checks(word) ^ stored_checks;
+    let parity_err = (word.count_ones() + stored_checks.count_ones() + stored_parity) & 1 != 0;
+    match (syndrome, parity_err) {
+        (0, false) => WordVerdict::Clean,
+        // Only the overall parity bit flipped; data intact.
+        (0, true) => WordVerdict::Corrected(word),
+        (s, true) => {
+            if let Some(&bit) = POS_BIT.get(s as usize) {
+                if bit >= 0 {
+                    WordVerdict::Corrected(word ^ (1u32 << bit))
+                } else {
+                    // A check-bit position flipped; data intact.
+                    WordVerdict::Corrected(word)
+                }
+            } else {
+                WordVerdict::Uncorrectable
+            }
+        }
+        // Non-zero syndrome with even parity: double-bit error.
+        (_, false) => WordVerdict::Uncorrectable,
+    }
+}
+
+/// Which state memory an injected SEU ([`crate::hdl::Layer::integrity_flip`])
+/// lands in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlipTarget {
+    /// The layer's synaptic weight memory (any topology store).
+    Weights,
+    /// A membrane register (lane-major bank when the lane datapath is
+    /// active, else the single-sample bank).
+    Vmem,
+    /// A refractory counter (same bank selection as `Vmem`).
+    Refcnt,
+}
+
+/// Tally of one scrub pass (or one verified block).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScrubOutcome {
+    /// Blocks whose codes were verified.
+    pub checked_blocks: u64,
+    /// Single-bit flips repaired in place (Correct mode only).
+    pub corrected: u64,
+    /// Uncorrectable corruption events: parity mismatches in Detect
+    /// mode, double-bit SECDED errors in Correct mode.
+    pub detected: u64,
+}
+
+impl ScrubOutcome {
+    pub fn merge(&mut self, other: ScrubOutcome) {
+        self.checked_blocks += other.checked_blocks;
+        self.corrected += other.corrected;
+        self.detected += other.detected;
+    }
+
+    /// True when nothing was corrected or detected.
+    pub fn clean(&self) -> bool {
+        self.corrected == 0 && self.detected == 0
+    }
+}
+
+/// The integrity codes guarding one flat `i32` word bank. `Off` guards
+/// store nothing and every operation is a no-op, so an un-enabled bank
+/// pays only a branch.
+#[derive(Debug, Clone, Default)]
+pub struct Guard {
+    mode: IntegrityMode,
+    /// Detect: one XOR word per [`PARITY_BLOCK`]-word block.
+    parity: Vec<u32>,
+    /// Correct: one SECDED code byte per word.
+    secded: Vec<u8>,
+}
+
+impl Guard {
+    pub fn new(mode: IntegrityMode, words: &[i32]) -> Guard {
+        let mut g = Guard { mode, ..Guard::default() };
+        g.rebuild(words);
+        g
+    }
+
+    pub fn mode(&self) -> IntegrityMode {
+        self.mode
+    }
+
+    /// Recompute every code from scratch — the bulk-load / restore /
+    /// resize path.
+    pub fn rebuild(&mut self, words: &[i32]) {
+        match self.mode {
+            IntegrityMode::Off => {}
+            IntegrityMode::Detect => {
+                self.parity.clear();
+                self.parity.resize(words.len().div_ceil(PARITY_BLOCK), 0);
+                for (k, &w) in words.iter().enumerate() {
+                    self.parity[k / PARITY_BLOCK] ^= w as u32;
+                }
+            }
+            IntegrityMode::Correct => {
+                self.secded.clear();
+                self.secded.extend(words.iter().map(|&w| secded_encode(w as u32)));
+            }
+        }
+    }
+
+    /// Recompute the codes for an all-zero bank of `len` words without
+    /// reading it — `secded_encode(0) == 0` and the XOR of zeros is zero,
+    /// so both code vectors are just zero-filled. This keeps the
+    /// per-sample `Layer::reset` cheap.
+    pub fn rebuild_zeroed(&mut self, len: usize) {
+        match self.mode {
+            IntegrityMode::Off => {}
+            IntegrityMode::Detect => {
+                self.parity.clear();
+                self.parity.resize(len.div_ceil(PARITY_BLOCK), 0);
+            }
+            IntegrityMode::Correct => {
+                self.secded.clear();
+                self.secded.resize(len, 0);
+            }
+        }
+    }
+
+    /// Incrementally account one word write (`old` → `new`) — O(1) for
+    /// parity, one encode for SECDED.
+    #[inline]
+    pub fn record_write(&mut self, idx: usize, old: i32, new: i32) {
+        match self.mode {
+            IntegrityMode::Off => {}
+            IntegrityMode::Detect => {
+                self.parity[idx / PARITY_BLOCK] ^= (old as u32) ^ (new as u32)
+            }
+            IntegrityMode::Correct => self.secded[idx] = secded_encode(new as u32),
+        }
+    }
+
+    /// Scrub units covering the guarded bank (0 when `Off`).
+    pub fn blocks(&self) -> usize {
+        match self.mode {
+            IntegrityMode::Off => 0,
+            IntegrityMode::Detect => self.parity.len(),
+            IntegrityMode::Correct => self.secded.len().div_ceil(PARITY_BLOCK),
+        }
+    }
+
+    /// Verify one block; in Correct mode single-bit flips are repaired
+    /// in `words` and the stored code refreshed. `words` must be the
+    /// bank the guard was built over.
+    pub fn verify_block(&mut self, words: &mut [i32], block: usize) -> ScrubOutcome {
+        let mut out = ScrubOutcome { checked_blocks: 1, ..ScrubOutcome::default() };
+        let lo = block * PARITY_BLOCK;
+        let hi = (lo + PARITY_BLOCK).min(words.len());
+        match self.mode {
+            IntegrityMode::Off => out.checked_blocks = 0,
+            IntegrityMode::Detect => {
+                let mut xor = 0u32;
+                for &w in &words[lo..hi] {
+                    xor ^= w as u32;
+                }
+                if xor != self.parity[block] {
+                    out.detected += 1;
+                }
+            }
+            IntegrityMode::Correct => {
+                for idx in lo..hi {
+                    match secded_check(words[idx] as u32, self.secded[idx]) {
+                        WordVerdict::Clean => {}
+                        WordVerdict::Corrected(fixed) => {
+                            words[idx] = fixed as i32;
+                            self.secded[idx] = secded_encode(fixed);
+                            out.corrected += 1;
+                        }
+                        WordVerdict::Uncorrectable => out.detected += 1,
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Verify up to `budget` blocks starting at `*cursor`, wrapping, and
+    /// advance the cursor — the amortized background-scrub step. Covers
+    /// each block at most once per call.
+    pub fn scrub(&mut self, words: &mut [i32], cursor: &mut usize, budget: usize) -> ScrubOutcome {
+        let nblocks = self.blocks();
+        let mut out = ScrubOutcome::default();
+        if nblocks == 0 || budget == 0 {
+            return out;
+        }
+        for _ in 0..budget.min(nblocks) {
+            if *cursor >= nblocks {
+                *cursor = 0;
+            }
+            out.merge(self.verify_block(words, *cursor));
+            *cursor += 1;
+        }
+        out
+    }
+
+    /// Verify (and repair) the whole bank in one pass.
+    pub fn verify_all(&mut self, words: &mut [i32]) -> ScrubOutcome {
+        let mut cursor = 0;
+        let budget = self.blocks();
+        self.scrub(words, &mut cursor, budget)
+    }
+}
+
+/// Thread-safe scrub tally shared by every stage of a serving engine;
+/// mirrored into `ServerStats` / `Telemetry` / the wire `Health` frame.
+#[derive(Debug, Default)]
+pub struct Ledger {
+    scrubbed_blocks: AtomicU64,
+    corrected: AtomicU64,
+    detected: AtomicU64,
+}
+
+impl Ledger {
+    pub fn absorb(&self, o: ScrubOutcome) {
+        self.scrubbed_blocks.fetch_add(o.checked_blocks, Ordering::Relaxed);
+        self.corrected.fetch_add(o.corrected, Ordering::Relaxed);
+        self.detected.fetch_add(o.detected, Ordering::Relaxed);
+    }
+
+    /// Blocks verified by background scrubbing so far.
+    pub fn scrubbed_blocks(&self) -> u64 {
+        self.scrubbed_blocks.load(Ordering::Relaxed)
+    }
+
+    /// Single-bit flips repaired in place.
+    pub fn corrected(&self) -> u64 {
+        self.corrected.load(Ordering::Relaxed)
+    }
+
+    /// Uncorrectable corruption events (each one quarantines a shard).
+    pub fn detected(&self) -> u64 {
+        self.detected.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic LCG so property-style sweeps need no external crate.
+    fn lcg(state: &mut u64) -> u32 {
+        *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (*state >> 33) as u32
+    }
+
+    #[test]
+    fn secded_roundtrip_is_clean() {
+        let mut s = 0x5EED_u64;
+        let mut words = vec![0u32, 1, u32::MAX, 0x8000_0000, 0xDEAD_BEEF];
+        for _ in 0..200 {
+            words.push(lcg(&mut s));
+        }
+        for w in words {
+            assert_eq!(secded_check(w, secded_encode(w)), WordVerdict::Clean, "word {w:#x}");
+        }
+    }
+
+    #[test]
+    fn secded_corrects_every_single_bit_flip() {
+        let mut s = 0xC0DE_u64;
+        for _ in 0..50 {
+            let w = lcg(&mut s);
+            let code = secded_encode(w);
+            for bit in 0..32 {
+                let bad = w ^ (1u32 << bit);
+                assert_eq!(
+                    secded_check(bad, code),
+                    WordVerdict::Corrected(w),
+                    "word {w:#x} bit {bit}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn secded_detects_double_bit_flips() {
+        let mut s = 0xD0D0_u64;
+        for _ in 0..50 {
+            let w = lcg(&mut s);
+            let code = secded_encode(w);
+            let b1 = lcg(&mut s) % 32;
+            let b2 = (b1 + 1 + lcg(&mut s) % 31) % 32;
+            assert_ne!(b1, b2);
+            let bad = w ^ (1u32 << b1) ^ (1u32 << b2);
+            assert_eq!(secded_check(bad, code), WordVerdict::Uncorrectable, "word {w:#x}");
+        }
+    }
+
+    #[test]
+    fn parity_guard_detects_any_single_flip() {
+        let mut s = 0xFA11_u64;
+        let mut words: Vec<i32> = (0..100).map(|_| lcg(&mut s) as i32).collect();
+        let mut g = Guard::new(IntegrityMode::Detect, &words);
+        assert_eq!(g.blocks(), 4, "100 words -> 4 parity blocks");
+        assert!(g.verify_all(&mut words).clean());
+        for k in [0usize, 31, 32, 99] {
+            for bit in [0u32, 13, 31] {
+                words[k] ^= 1i32 << bit;
+                let out = g.verify_all(&mut words);
+                assert_eq!(out.detected, 1, "word {k} bit {bit}");
+                assert_eq!(out.corrected, 0, "parity cannot correct");
+                words[k] ^= 1i32 << bit; // undo; codes still match
+                assert!(g.verify_all(&mut words).clean());
+            }
+        }
+    }
+
+    #[test]
+    fn correct_guard_repairs_in_place() {
+        let mut s = 0xFEED_u64;
+        let mut words: Vec<i32> = (0..70).map(|_| lcg(&mut s) as i32).collect();
+        let original = words.clone();
+        let mut g = Guard::new(IntegrityMode::Correct, &words);
+        assert_eq!(g.blocks(), 3);
+        words[5] ^= 1 << 7;
+        words[69] ^= 1 << 30;
+        let out = g.verify_all(&mut words);
+        assert_eq!(out.corrected, 2);
+        assert_eq!(out.detected, 0);
+        assert_eq!(words, original, "both flips repaired in place");
+        assert!(g.verify_all(&mut words).clean());
+        // A double flip in one word is detected, not mis-corrected.
+        words[10] ^= (1 << 3) | (1 << 19);
+        let out = g.verify_all(&mut words);
+        assert_eq!(out.detected, 1);
+        assert_eq!(words[10], original[10] ^ ((1 << 3) | (1 << 19)), "left untouched");
+    }
+
+    #[test]
+    fn incremental_writes_match_rebuild() {
+        for mode in [IntegrityMode::Detect, IntegrityMode::Correct] {
+            let mut s = 0xAB1E_u64;
+            let mut words: Vec<i32> = (0..64).map(|_| lcg(&mut s) as i32).collect();
+            let mut g = Guard::new(mode, &words);
+            for _ in 0..500 {
+                let idx = lcg(&mut s) as usize % words.len();
+                let new = lcg(&mut s) as i32;
+                let old = words[idx];
+                words[idx] = new;
+                g.record_write(idx, old, new);
+            }
+            assert!(g.verify_all(&mut words).clean(), "{mode:?} codes stayed consistent");
+            let fresh = Guard::new(mode, &words);
+            assert_eq!(format!("{g:?}"), format!("{fresh:?}"), "{mode:?} equals rebuild");
+        }
+    }
+
+    #[test]
+    fn scrub_cursor_wraps_and_bounds_budget() {
+        let mut words = vec![0i32; PARITY_BLOCK * 5];
+        let mut g = Guard::new(IntegrityMode::Detect, &words);
+        let mut cursor = 0usize;
+        let out = g.scrub(&mut words, &mut cursor, 2);
+        assert_eq!((out.checked_blocks, cursor), (2, 2));
+        let out = g.scrub(&mut words, &mut cursor, 2);
+        assert_eq!((out.checked_blocks, cursor), (2, 4));
+        // Budget larger than the bank covers each block once, wrapping.
+        let out = g.scrub(&mut words, &mut cursor, 100);
+        assert_eq!(out.checked_blocks, 5);
+        // A flip is found within one full sweep regardless of phase.
+        words[PARITY_BLOCK * 3 + 7] ^= 1 << 2;
+        let out = g.scrub(&mut words, &mut cursor, 5);
+        assert_eq!(out.detected, 1);
+    }
+
+    #[test]
+    fn rebuild_zeroed_matches_full_rebuild() {
+        for mode in [IntegrityMode::Detect, IntegrityMode::Correct] {
+            let mut zeros = vec![0i32; 77];
+            let mut g = Guard::new(mode, &[1i32; 5]);
+            g.rebuild_zeroed(zeros.len());
+            assert!(g.verify_all(&mut zeros).clean(), "{mode:?}");
+            assert_eq!(format!("{g:?}"), format!("{:?}", Guard::new(mode, &zeros)), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn off_guard_is_free_and_silent() {
+        let mut words = vec![3i32; 40];
+        let mut g = Guard::new(IntegrityMode::Off, &words);
+        assert_eq!(g.blocks(), 0);
+        words[0] ^= 1;
+        let mut cursor = 9;
+        assert_eq!(g.scrub(&mut words, &mut cursor, 8), ScrubOutcome::default());
+        g.record_write(0, 3, words[0]);
+        assert!(g.verify_all(&mut words).clean());
+    }
+
+    #[test]
+    fn ledger_accumulates_outcomes() {
+        let l = Ledger::default();
+        l.absorb(ScrubOutcome { checked_blocks: 4, corrected: 1, detected: 0 });
+        l.absorb(ScrubOutcome { checked_blocks: 2, corrected: 0, detected: 3 });
+        assert_eq!((l.scrubbed_blocks(), l.corrected(), l.detected()), (6, 1, 3));
+    }
+
+    #[test]
+    fn mode_parse_roundtrips_labels() {
+        for mode in [IntegrityMode::Off, IntegrityMode::Detect, IntegrityMode::Correct] {
+            assert_eq!(IntegrityMode::parse(mode.label()), Some(mode));
+        }
+        assert_eq!(IntegrityMode::parse("ecc"), None);
+    }
+}

@@ -55,6 +55,7 @@ use crate::config::{LayerConfig, MemKind};
 use crate::fixed::QSpec;
 
 use super::clock::ActivityStats;
+use super::integrity::{FlipTarget, Guard, IntegrityMode, ScrubOutcome};
 use super::memory::SynapticMemory;
 use super::neuron::{self, LifNeuron, RegSnapshot};
 use super::spikes::{SpikeMatrix, SpikePlane};
@@ -105,6 +106,19 @@ pub struct Layer {
     /// skip does near-zero work per inert neuron, while dense streams take
     /// the widest vector tier.
     lane_density_ema: f32,
+    /// SEU-integrity level for this layer's state memories. `Off` skips
+    /// all code maintenance; otherwise the synaptic memory's guard lives
+    /// in [`SynapticMemory`] and the four neuron-bank guards below are
+    /// refreshed at every bank boundary (reset / restore / resize) —
+    /// cheap, since banks are zeroed or bulk-copied exactly there.
+    integrity: IntegrityMode,
+    guard_vmem: Guard,
+    guard_refcnt: Guard,
+    guard_lane_vmem: Guard,
+    guard_lane_refcnt: Guard,
+    /// Wrapping scrub cursor over the synaptic memory's blocks (the
+    /// neuron banks are small and verified in full per scrub call).
+    scrub_cursor: usize,
 }
 
 /// EMA smoothing factor for the lane-path input-density estimate (1/8 —
@@ -144,6 +158,91 @@ impl Layer {
             lane_act_dirty: false,
             lane_kernel: None,
             lane_density_ema: 0.0,
+            integrity: IntegrityMode::Off,
+            guard_vmem: Guard::default(),
+            guard_refcnt: Guard::default(),
+            guard_lane_vmem: Guard::default(),
+            guard_lane_refcnt: Guard::default(),
+            scrub_cursor: 0,
+        }
+    }
+
+    /// Enable (or disable) SEU-integrity codes over the synaptic memory
+    /// and all four neuron banks, rebuilding every code from the current
+    /// contents. See [`crate::hdl::integrity`] for the mode semantics.
+    pub fn set_integrity(&mut self, mode: IntegrityMode) {
+        self.integrity = mode;
+        self.mem.set_integrity(mode);
+        self.refresh_bank_guards();
+    }
+
+    pub fn integrity_mode(&self) -> IntegrityMode {
+        self.integrity
+    }
+
+    /// Rebuild the neuron-bank guards from the banks' current contents
+    /// (bulk-restore boundary).
+    fn refresh_bank_guards(&mut self) {
+        self.guard_vmem = Guard::new(self.integrity, &self.vmem);
+        self.guard_refcnt = Guard::new(self.integrity, &self.refcnt);
+        self.guard_lane_vmem = Guard::new(self.integrity, &self.lane_vmem);
+        self.guard_lane_refcnt = Guard::new(self.integrity, &self.lane_refcnt);
+    }
+
+    /// Re-code the neuron-bank guards for all-zero banks without reading
+    /// them (reset / resize boundary).
+    fn zero_bank_guards(&mut self) {
+        self.guard_vmem.rebuild_zeroed(self.vmem.len());
+        self.guard_refcnt.rebuild_zeroed(self.refcnt.len());
+        self.guard_lane_vmem.rebuild_zeroed(self.lane_vmem.len());
+        self.guard_lane_refcnt.rebuild_zeroed(self.lane_refcnt.len());
+    }
+
+    /// Verify the four neuron banks in full plus up to `budget` synaptic
+    /// memory blocks (wrapping cursor — successive calls sweep the whole
+    /// weight store). Correctable flips are repaired in place; the tally
+    /// reports what happened. Only meaningful at a sample boundary, where
+    /// the bank guards are freshly synced. No-op when integrity is off.
+    pub fn scrub(&mut self, budget: usize) -> ScrubOutcome {
+        if self.integrity == IntegrityMode::Off {
+            return ScrubOutcome::default();
+        }
+        let mut out = self.guard_vmem.verify_all(&mut self.vmem);
+        out.merge(self.guard_refcnt.verify_all(&mut self.refcnt));
+        out.merge(self.guard_lane_vmem.verify_all(&mut self.lane_vmem));
+        out.merge(self.guard_lane_refcnt.verify_all(&mut self.lane_refcnt));
+        out.merge(self.mem.scrub(&mut self.scrub_cursor, budget));
+        out
+    }
+
+    /// Flip one raw storage bit in the targeted state memory *without*
+    /// updating the integrity codes — the SEU fault-injection hook.
+    /// Neuron-bank flips land in the lane-major bank when the lane
+    /// datapath has run, else in the single-sample bank; `word` wraps
+    /// modulo the bank size and `bit` modulo 32.
+    pub fn integrity_flip(&mut self, target: FlipTarget, word: usize, bit: u8) {
+        fn flip(bank: &mut [i32], word: usize, bit: u8) {
+            if !bank.is_empty() {
+                let idx = word % bank.len();
+                bank[idx] ^= 1i32 << (bit % 32);
+            }
+        }
+        match target {
+            FlipTarget::Weights => self.mem.integrity_flip(word, bit),
+            FlipTarget::Vmem => {
+                if self.lanes > 0 {
+                    flip(&mut self.lane_vmem, word, bit);
+                } else {
+                    flip(&mut self.vmem, word, bit);
+                }
+            }
+            FlipTarget::Refcnt => {
+                if self.lanes > 0 {
+                    flip(&mut self.lane_refcnt, word, bit);
+                } else {
+                    flip(&mut self.refcnt, word, bit);
+                }
+            }
         }
     }
 
@@ -210,6 +309,9 @@ impl Layer {
         self.refcnt.fill(0);
         self.lane_vmem.fill(0);
         self.lane_refcnt.fill(0);
+        if self.integrity != IntegrityMode::Off {
+            self.zero_bank_guards();
+        }
     }
 
     /// Current lane-bank width (0 until the first [`Layer::step_lanes`]).
@@ -248,6 +350,10 @@ impl Layer {
         assert_eq!(refcnt.len(), self.refcnt.len(), "refcnt bank arity validated by decoder");
         self.vmem.copy_from_slice(vmem);
         self.refcnt.copy_from_slice(refcnt);
+        if self.integrity != IntegrityMode::Off {
+            self.guard_vmem.rebuild(&self.vmem);
+            self.guard_refcnt.rebuild(&self.refcnt);
+        }
     }
 
     /// Export the lane-batched bank for a snapshot:
@@ -272,6 +378,10 @@ impl Layer {
         self.lane_act.clear();
         self.lane_act.resize(n * lanes, 0);
         self.lane_act_dirty = false;
+        if self.integrity != IntegrityMode::Off {
+            self.guard_lane_vmem.rebuild(&self.lane_vmem);
+            self.guard_lane_refcnt.rebuild(&self.lane_refcnt);
+        }
     }
 
     /// Size the lane-batched bank for `lanes` concurrent samples. Changing
@@ -288,6 +398,10 @@ impl Layer {
             self.lane_act.clear();
             self.lane_act.resize(n * lanes, 0);
             self.lane_act_dirty = false;
+            if self.integrity != IntegrityMode::Off {
+                self.guard_lane_vmem.rebuild_zeroed(self.lane_vmem.len());
+                self.guard_lane_refcnt.rebuild_zeroed(self.lane_refcnt.len());
+            }
         }
     }
 
@@ -967,6 +1081,44 @@ mod tests {
         l.step_lanes(&mat3, &mut mat_out, &regs, 0b111, &mut stats3);
         assert_eq!(l.lane_width(), 3);
         assert_eq!(l.lane_vmem(2), vec![0; 3]);
+    }
+
+    #[test]
+    fn integrity_scrub_corrects_boundary_flips_per_target() {
+        use crate::hdl::spikes::SpikeMatrix;
+        let mut l = layer(4, 3);
+        let weights: Vec<i32> = (0..12).map(|k| (k as i32 % 9) - 4).collect();
+        l.memory_mut().load_dense(&weights).unwrap();
+        l.set_integrity(IntegrityMode::Correct);
+        assert_eq!(l.integrity_mode(), IntegrityMode::Correct);
+        // Single-sample banks: run a step, reset (a sample boundary — the
+        // guards re-sync there), flip, scrub.
+        let mut out = Vec::new();
+        l.step(&[1, 0, 1, 1], &mut out);
+        l.reset();
+        for target in [FlipTarget::Weights, FlipTarget::Vmem, FlipTarget::Refcnt] {
+            l.integrity_flip(target, 5, 3);
+            let o = l.scrub(usize::MAX);
+            assert_eq!((o.corrected, o.detected), (1, 0), "{target:?}");
+        }
+        assert_eq!(l.memory().dense(), weights, "weight flip repaired in place");
+        // Neuron-bank flips land in the lane-major bank once the lane
+        // datapath has run.
+        let regs = RegisterFile::new(Q5_3);
+        let mat_in = SpikeMatrix::new(4, 2);
+        let mut mat_out = SpikeMatrix::default();
+        let mut stats = vec![ActivityStats::default(); 2];
+        l.step_lanes(&mat_in, &mut mat_out, &regs, 0b11, &mut stats);
+        l.reset();
+        l.integrity_flip(FlipTarget::Vmem, 1, 30);
+        let o = l.scrub(usize::MAX);
+        assert_eq!((o.corrected, o.detected), (1, 0), "lane vmem");
+        assert_eq!(l.lane_vmem(0), vec![0; 3], "lane bank repaired to rest");
+        // Detect mode flags the corruption but cannot locate the bit.
+        l.set_integrity(IntegrityMode::Detect);
+        l.integrity_flip(FlipTarget::Weights, 0, 0);
+        let o = l.scrub(usize::MAX);
+        assert_eq!((o.corrected, o.detected), (0, 1), "detect-only mode");
     }
 
     #[test]

@@ -53,6 +53,7 @@
 
 use crate::config::{MemKind, Topology};
 use crate::fixed::QSpec;
+use crate::hdl::integrity::{Guard, IntegrityMode, ScrubOutcome};
 
 #[derive(Debug, PartialEq)]
 pub enum MemError {
@@ -137,6 +138,9 @@ pub struct SynapticMemory {
     store: Store,
     /// Accepted wt_in writes (interface telemetry).
     writes: u64,
+    /// SEU-integrity codes over the physical word vector (see
+    /// [`crate::hdl::integrity`]); `Off` by default and free when off.
+    guard: Guard,
 }
 
 impl SynapticMemory {
@@ -170,7 +174,60 @@ impl SynapticMemory {
                 Store::Banded { starts, offsets, weights: vec![0; total] }
             }
         };
-        SynapticMemory { m, n, qspec, kind, topology, store, writes: 0 }
+        SynapticMemory { m, n, qspec, kind, topology, store, writes: 0, guard: Guard::default() }
+    }
+
+    /// Enable (or disable) SEU-integrity codes over the physical words,
+    /// rebuilding them from the current contents. Every subsequent write
+    /// path — [`write`], [`load_dense`], [`load_packed`] — keeps the
+    /// codes consistent incrementally.
+    ///
+    /// [`write`]: SynapticMemory::write
+    /// [`load_dense`]: SynapticMemory::load_dense
+    /// [`load_packed`]: SynapticMemory::load_packed
+    pub fn set_integrity(&mut self, mode: IntegrityMode) {
+        self.guard = Guard::new(mode, self.words());
+    }
+
+    pub fn integrity_mode(&self) -> IntegrityMode {
+        self.guard.mode()
+    }
+
+    /// Scrub units covering this memory (0 when integrity is off).
+    pub fn integrity_blocks(&self) -> usize {
+        self.guard.blocks()
+    }
+
+    /// Verify up to `budget` blocks starting at `*cursor` (wrapping; the
+    /// cursor advances). Correctable flips are repaired in place.
+    pub fn scrub(&mut self, cursor: &mut usize, budget: usize) -> ScrubOutcome {
+        let SynapticMemory { store, guard, .. } = self;
+        let words: &mut [i32] = match store {
+            Store::Dense(w) | Store::Diagonal(w) => w,
+            Store::Banded { weights, .. } => weights,
+        };
+        guard.scrub(words, cursor, budget)
+    }
+
+    /// Flip one raw storage bit *without* updating the integrity codes —
+    /// the SEU fault-injection hook (`word` wraps modulo the physical
+    /// word count, `bit` modulo 32). A no-op on empty stores.
+    pub fn integrity_flip(&mut self, word: usize, bit: u8) {
+        let words = self.words_mut();
+        if words.is_empty() {
+            return;
+        }
+        let idx = word % words.len();
+        words[idx] ^= 1i32 << (bit % 32);
+    }
+
+    /// Rebuild the integrity codes after a bulk store mutation.
+    fn refresh_guard(&mut self) {
+        let words: &[i32] = match &self.store {
+            Store::Dense(w) | Store::Diagonal(w) => w,
+            Store::Banded { weights, .. } => weights,
+        };
+        self.guard.rebuild(words);
     }
 
     pub fn m(&self) -> usize {
@@ -269,7 +326,9 @@ impl SynapticMemory {
         }
         match self.slot(pre, post) {
             Some(s) => {
+                let old = self.words()[s];
                 self.words_mut()[s] = value;
+                self.guard.record_write(s, old, value);
                 self.writes += 1;
                 Ok(())
             }
@@ -380,6 +439,7 @@ impl SynapticMemory {
             let src = &weights[src_lo..src_lo + range.len()];
             self.words_mut()[range].copy_from_slice(src);
         }
+        self.refresh_guard();
         self.writes += self.synapses() as u64;
         Ok(())
     }
@@ -403,6 +463,7 @@ impl SynapticMemory {
             }
         }
         self.words_mut().copy_from_slice(packed);
+        self.refresh_guard();
         self.writes += expect as u64;
         Ok(())
     }
@@ -603,5 +664,45 @@ mod tests {
             g.load_dense(&[0; 3]).unwrap_err(),
             MemError::BulkSize { expect: 64, got: 3 }
         );
+    }
+
+    #[test]
+    fn integrity_guard_tracks_every_write_path() {
+        for topo in [Topology::AllToAll, Topology::OneToOne, Topology::Gaussian { radius: 1 }] {
+            for mode in [IntegrityMode::Detect, IntegrityMode::Correct] {
+                let mut m = SynapticMemory::new(6, 6, topo, Q5_3, MemKind::Bram);
+                m.set_integrity(mode);
+                assert_eq!(m.integrity_mode(), mode);
+                let payload: Vec<i32> = (0..m.synapses()).map(|k| (k as i32 % 7) - 3).collect();
+                m.load_packed(&payload).unwrap();
+                m.write(2, 2, -9).unwrap();
+                let dense = m.dense();
+                m.load_dense(&dense).unwrap();
+                let blocks = m.integrity_blocks();
+                assert!(blocks > 0, "{topo:?} {mode:?}");
+                let mut cursor = 0;
+                assert!(m.scrub(&mut cursor, blocks).clean(), "{topo:?} {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn integrity_flip_is_corrected_or_detected_by_scrub() {
+        let mut m = mem();
+        let payload: Vec<i32> = (0..m.synapses()).map(|k| (k as i32 % 9) - 4).collect();
+        m.load_packed(&payload).unwrap();
+        m.set_integrity(IntegrityMode::Correct);
+        m.integrity_flip(7, 4);
+        assert_ne!(m.packed(), &payload[..], "flip bypasses the guard");
+        let mut cursor = 0;
+        let out = m.scrub(&mut cursor, m.integrity_blocks());
+        assert_eq!((out.corrected, out.detected), (1, 0));
+        assert_eq!(m.packed(), &payload[..], "repaired in place");
+        // Detect mode flags the same flip but cannot repair it.
+        m.set_integrity(IntegrityMode::Detect);
+        m.integrity_flip(2, 0);
+        let mut cursor = 0;
+        let out = m.scrub(&mut cursor, m.integrity_blocks());
+        assert_eq!((out.corrected, out.detected), (0, 1));
     }
 }

@@ -24,11 +24,15 @@
 //!   [`SpikeMatrix`], and the recycled-buffer [`PlanePool`]/[`MatrixPool`].
 //! * [`clock`] — clock-domain bookkeeping and activity statistics that feed
 //!   the power model.
+//! * [`integrity`] — parity/SECDED codes guarding the synaptic and
+//!   neuron-state memories against single-event upsets, plus the scrub
+//!   ledger the serving engine aggregates.
 
 pub mod aer;
 pub mod verilog;
 pub mod clock;
 pub mod extensions;
+pub mod integrity;
 pub mod core;
 pub mod layer;
 pub mod memory;
@@ -37,6 +41,7 @@ pub mod spikes;
 
 pub use self::core::Core;
 pub use clock::ActivityStats;
+pub use integrity::IntegrityMode;
 pub use layer::Layer;
 pub use memory::SynapticMemory;
 pub use neuron::LifNeuron;

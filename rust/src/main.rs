@@ -15,6 +15,10 @@
 //! repro chaos-soak [opts]     hermetic front door under seeded shard-killing
 //!                             chaos; retrying clients must end bit-exact and
 //!                             the engine all-healthy (nonzero exit otherwise)
+//! repro seu-soak [opts]       memory-integrity gate: seeded single-event
+//!                             upsets against Correct- and Detect-mode engines
+//!                             plus a lane-64 scrub-overhead measurement
+//!                             (writes and gates BENCH_integrity.json)
 //! repro explore <arch> [Q]    DSE estimate for an architecture on all boards
 //! repro codegen <arch>        emit Verilog HDL + self-checking testbench
 //! repro bench-check <json>..  validate BENCH_*.json perf reports
@@ -41,8 +45,10 @@ use quantisenc::coordinator::connectome::Connectome;
 use quantisenc::coordinator::metrics::Telemetry;
 use quantisenc::coordinator::pipeline;
 use quantisenc::coordinator::server::{ServerOptions, SpikeServer};
-use quantisenc::coordinator::serving::chaos::ChaosSchedule;
+use quantisenc::coordinator::serving::chaos::{ChaosEvent, ChaosKind, ChaosSchedule};
 use quantisenc::coordinator::serving::{ServingEngine, ServingOptions};
+use quantisenc::hdl::integrity::FlipTarget;
+use quantisenc::hdl::IntegrityMode;
 use quantisenc::datasets::{Dataset, Split};
 use quantisenc::dse;
 use quantisenc::experiments;
@@ -115,6 +121,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "snapshot" => snapshot_cmd(&args[1..]),
         "restore" => restore_cmd(&args[1..]),
         "chaos-soak" => chaos_soak(&args[1..]),
+        "seu-soak" => seu_soak(&args[1..]),
         "explore" => {
             let arch = args.get(1).context("usage: repro explore <arch> [Qn.q]")?;
             let q = QSpec::parse(args.get(2).map(String::as_str).unwrap_or("Q5.3"))?;
@@ -244,6 +251,12 @@ const HELP: &str = "repro — QUANTISENC reproduction CLI
                   every result against the sequential oracle and the engine
                   must end all-healthy; writes BENCH_chaos.json and gates it
                   (the chaos-smoke gate; BENCH_GATE_MAX_RECOVERY_MS overrides)
+  seu-soak        memory-integrity gate: seeded single-event upsets (--flips,
+                  --det-flips, --seed) against a SECDED Correct-mode engine
+                  (repaired in place, bit-exact) and a parity Detect-mode
+                  engine (quarantine + rebuild + resubmit), plus the lane-64
+                  scrub-overhead measurement; writes BENCH_integrity.json and
+                  gates it (BENCH_GATE_MAX_SCRUB_OVERHEAD overrides)
   explore <arch>  DSE estimate, e.g. repro explore 256x512x10 Q5.3
   codegen <arch>  emit Verilog HDL + self-checking SV testbench (paper §IV)
   bench-check <f> validate BENCH_*.json perf reports (the bench-smoke gate)
@@ -767,6 +780,191 @@ fn chaos_soak(args: &[String]) -> Result<()> {
     anyhow::ensure!(failures == 0, "{failures} streams exhausted their retry budget");
     match benchcheck::check_report_str(out_path, &json, &benchcheck::Gates::from_env())? {
         benchcheck::ReportStatus::Validated { summary, .. } => println!("chaos gate: OK ({summary})"),
+        other => anyhow::bail!("{out_path}: unexpected gate outcome {other:?}"),
+    }
+    Ok(())
+}
+
+/// `repro seu-soak` — the memory-integrity gate. Engine-direct (no network):
+/// seeded single-event upsets go through the chaos harness and all three
+/// integrity behaviours are checked. Phase 1 (SECDED): a Correct-mode engine
+/// absorbs every flip in place — bit-exact against the sequential oracle,
+/// `corrected` equal to the injected count. Flips are spaced `cores + 1`
+/// admissions apart so round-robin dispatch lands a boundary scrub on the
+/// target shard between consecutive upsets: each flip is a fresh single-bit
+/// error when the scrubber reaches it, never an accumulated double-bit one.
+/// Phase 2 (parity): a Detect-mode engine turns each upset into a quarantine
+/// and checkpoint rebuild; the lost streams are resubmitted on the healed
+/// engine and must come back bit-exact. Phase 3 (cost): lane-64 throughput
+/// with Correct-mode scrubbing against integrity off. Writes
+/// `BENCH_integrity.json` and gates it in-process (100% detection, at least
+/// one in-place correction, zero mismatches, bounded scrub overhead;
+/// `BENCH_GATE_MAX_SCRUB_OVERHEAD` overrides). Replayable from `--seed`.
+fn seu_soak(args: &[String]) -> Result<()> {
+    let ds_name = flag_val(args, "--dataset").unwrap_or("smnist");
+    let qname = flag_val(args, "--q").unwrap_or("Q5.3");
+    let cores: usize = flag_val(args, "--cores").unwrap_or("2").parse()?;
+    let flips: usize = flag_val(args, "--flips").unwrap_or("6").parse()?;
+    let det_flips: usize = flag_val(args, "--det-flips").unwrap_or("2").parse()?;
+    let n64: usize = flag_val(args, "--n64").unwrap_or("192").parse()?;
+    let pool: usize = flag_val(args, "--pool").unwrap_or("12").parse()?;
+    let t_steps: usize = flag_val(args, "--t").unwrap_or("6").parse()?;
+    let seed: u64 = flag_val(args, "--seed").unwrap_or("24269").parse()?;
+    let out_path = flag_val(args, "--out").unwrap_or("BENCH_integrity.json");
+    let dataset = Dataset::parse(ds_name).context("bad --dataset")?;
+    anyhow::ensure!(cores >= 1 && flips >= 1 && det_flips >= 1, "need cores and flips");
+
+    let m = manifest()?;
+    let art = m.model(ds_name, qname)?;
+    let samples = client::sample_pool(dataset, pool, t_steps);
+    let (config, mut core) = experiments::core_from_artifact(&art)?;
+    let oracle: Vec<_> = samples.iter().map(|s| core.run(s)).collect();
+    let mut rng = quantisenc::datasets::rng::XorShift64Star::new(seed | 1);
+    let mut mismatches = 0u64;
+    let mut scrubbed_total = 0u64;
+
+    // Phase 1 — SECDED correction in place. Words beyond a bank's length
+    // wrap, so a 20-bit draw exercises every store without knowing sizes.
+    let stride = cores as u64 + 1;
+    let n1 = (flips as u64 * stride + 2).max(4 * samples.len() as u64) as usize;
+    let events: Vec<ChaosEvent> = (0..flips)
+        .map(|i| ChaosEvent {
+            at_sample: 1 + i as u64 * stride,
+            shard: i % cores,
+            kind: ChaosKind::BitFlip {
+                layer: rng.below(config.num_layers() as u64) as usize,
+                target: if i % 2 == 0 { FlipTarget::Weights } else { FlipTarget::Vmem },
+                word: rng.below(1 << 20) as usize,
+                bit: rng.below(32) as u8,
+            },
+        })
+        .collect();
+    let (_, mut correct_engine) = experiments::engine_from_artifact(
+        &art,
+        ServingOptions::with_cores(cores).with_integrity(IntegrityMode::Correct),
+    )?;
+    correct_engine.install_chaos(ChaosSchedule::new(events));
+    let batch1: Vec<_> = (0..n1).map(|i| samples[i % samples.len()].clone()).collect();
+    for (i, r) in correct_engine.run_batch(&batch1)?.iter().enumerate() {
+        let o = &oracle[i % samples.len()];
+        if r.counts != o.counts || r.prediction != o.prediction {
+            mismatches += 1;
+        }
+    }
+    let (scrubbed1, corrected, det1) = correct_engine.integrity_counters();
+    scrubbed_total += scrubbed1;
+    anyhow::ensure!(
+        det1 == 0 && correct_engine.quarantines() == 0,
+        "Correct mode must repair in place (detected {det1}, quarantines {})",
+        correct_engine.quarantines()
+    );
+    println!(
+        "seu-soak phase 1 (SECDED): {flips} upsets over {n1} samples on {cores} cores, \
+         corrected={corrected}, scrubbed={scrubbed1} blocks, mismatches={mismatches}"
+    );
+
+    // Phase 2 — parity detection: quarantine, rebuild, resubmit. One upset
+    // per round, because a chaos send aimed at an already-dead shard is
+    // dropped silently; a single flip per session keeps detection exact.
+    let (_, mut detect_engine) = experiments::engine_from_artifact(
+        &art,
+        ServingOptions::with_cores(cores)
+            .with_integrity(IntegrityMode::Detect)
+            .checkpoints_every(8),
+    )?;
+    let mut resubmitted = 0u64;
+    for k in 0..det_flips {
+        let (submitted, _) = detect_engine.stats();
+        detect_engine.install_chaos(ChaosSchedule::new(vec![ChaosEvent {
+            at_sample: submitted + 1,
+            shard: k % cores,
+            kind: ChaosKind::BitFlip {
+                layer: k % config.num_layers(),
+                target: FlipTarget::Weights,
+                word: rng.below(1 << 20) as usize,
+                bit: rng.below(32) as u8,
+            },
+        }]));
+        let outcomes = detect_engine.run_batch_outcomes(&samples)?;
+        let mut failed = Vec::new();
+        for (i, outcome) in outcomes.iter().enumerate() {
+            match outcome {
+                Ok(r) => {
+                    if r.counts != oracle[i].counts || r.prediction != oracle[i].prediction {
+                        mismatches += 1;
+                    }
+                }
+                Err(_) => failed.push(i),
+            }
+        }
+        anyhow::ensure!(!failed.is_empty(), "phase 2 round {k}: the injected upset cost no stream");
+        let redo: Vec<_> = failed.iter().map(|&i| samples[i].clone()).collect();
+        for (r, &i) in detect_engine.run_batch(&redo)?.iter().zip(&failed) {
+            if r.counts != oracle[i].counts || r.prediction != oracle[i].prediction {
+                mismatches += 1;
+            }
+        }
+        resubmitted += failed.len() as u64;
+    }
+    let (scrubbed2, corrected2, detected) = detect_engine.integrity_counters();
+    scrubbed_total += scrubbed2;
+    anyhow::ensure!(corrected2 == 0, "parity cannot correct, yet corrected={corrected2}");
+    let quarantines = detect_engine.quarantines();
+    println!(
+        "seu-soak phase 2 (parity): {det_flips} upsets, detected={detected}, \
+         quarantines={quarantines}, recoveries={}, resubmitted={resubmitted} streams, \
+         mismatches={mismatches}",
+        detect_engine.recoveries(),
+    );
+
+    // Phase 3 — scrub overhead at lane width 64, integrity off vs Correct.
+    let batch64: Vec<_> = (0..n64).map(|i| samples[i % samples.len()].clone()).collect();
+    let (_, mut off_engine) =
+        experiments::engine_from_artifact(&art, ServingOptions::with_lanes(cores, 64))?;
+    let (_, mut scrub_engine) = experiments::engine_from_artifact(
+        &art,
+        ServingOptions::with_lanes(cores, 64).with_integrity(IntegrityMode::Correct),
+    )?;
+    // One warm-up pass each (thread spin-up, allocator steady state).
+    off_engine.run_batch(&batch64)?;
+    scrub_engine.run_batch(&batch64)?;
+    let t0 = Instant::now();
+    let out_off = off_engine.run_batch(&batch64)?;
+    let sps_off = n64 as f64 / t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let out_scrub = scrub_engine.run_batch(&batch64)?;
+    let sps_scrub = n64 as f64 / t0.elapsed().as_secs_f64();
+    for (a, b) in out_off.iter().zip(&out_scrub) {
+        if a.counts != b.counts || a.stats != b.stats {
+            mismatches += 1;
+        }
+    }
+    let (scrubbed3, _, det3) = scrub_engine.integrity_counters();
+    scrubbed_total += scrubbed3;
+    anyhow::ensure!(det3 == 0, "clean lane-64 run flagged corruption (detected {det3})");
+    let overhead = 1.0 - sps_scrub / sps_off;
+    println!(
+        "seu-soak phase 3 (cost): lane-64 {sps_off:.1} sps off vs {sps_scrub:.1} sps correct \
+         ({:.1}% scrub overhead, {scrubbed3} blocks)",
+        overhead.max(0.0) * 100.0,
+    );
+
+    let injected = (flips + det_flips) as u64;
+    let detection_rate = (corrected + detected) as f64 / injected as f64;
+    let json = format!(
+        "{{\n  \"bench\": \"integrity\",\n  \"seed\": {seed},\n  \"injected_flips\": {injected},\n  \
+         \"corrected\": {corrected},\n  \"detected\": {detected},\n  \
+         \"detection_rate\": {detection_rate:.4},\n  \"quarantines\": {quarantines},\n  \
+         \"resubmitted_streams\": {resubmitted},\n  \"mismatches\": {mismatches},\n  \
+         \"scrubbed_blocks\": {scrubbed_total},\n  \"lane64_sps_off\": {sps_off:.1},\n  \
+         \"lane64_sps_correct\": {sps_scrub:.1},\n  \"scrub_overhead\": {overhead:.4}\n}}\n"
+    );
+    std::fs::write(out_path, &json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    match benchcheck::check_report_str(out_path, &json, &benchcheck::Gates::from_env())? {
+        benchcheck::ReportStatus::Validated { summary, .. } => {
+            println!("integrity gate: OK ({summary})")
+        }
         other => anyhow::bail!("{out_path}: unexpected gate outcome {other:?}"),
     }
     Ok(())

@@ -9,9 +9,12 @@
 //! serving samples/s at lane width 64 vs 1 with zero pool misses for the
 //! lane-batched report; positive throughput, zero protocol errors,
 //! zero oracle mismatches, and a bounded p99 for the `serving_slo`
-//! front-door report; and zero oracle mismatches, at least one shard
+//! front-door report; zero oracle mismatches, at least one shard
 //! recovery, an all-healthy final state, and a bounded recovery p99 for
-//! the `chaos` soak report.
+//! the `chaos` soak report; and 100% injected-flip detection, at least
+//! one in-place SECDED correction, zero survivor mismatches, and a
+//! bounded scrub throughput overhead for the `integrity` SEU-soak
+//! report.
 //!
 //! Outcomes are **typed**: a missing report file is a
 //! [`ReportStatus::SkippedMissing`] — a skip the caller surfaces as a
@@ -25,8 +28,8 @@
 //! Thresholds live in [`Gates`]; [`Gates::from_env`] applies the CI
 //! overrides (`BENCH_GATE_MIN_SPEEDUP`, `BENCH_GATE_MIN_BATCH_SPEEDUP`,
 //! `BENCH_GATE_MIN_SIMD_SPEEDUP`, `BENCH_GATE_MAX_P99_US`,
-//! `BENCH_GATE_MAX_RECOVERY_MS`) on top of the defaults, while tests
-//! pass explicit values for determinism.
+//! `BENCH_GATE_MAX_RECOVERY_MS`, `BENCH_GATE_MAX_SCRUB_OVERHEAD`) on top
+//! of the defaults, while tests pass explicit values for determinism.
 
 use anyhow::{Context, Result};
 
@@ -49,6 +52,9 @@ pub struct Gates {
     /// Maximum shard detection→re-admission p99 latency in milliseconds
     /// (chaos report).
     pub max_recovery_ms: f64,
+    /// Maximum fractional lane-64 throughput cost of background scrubbing
+    /// (integrity report): `1 - sps_correct / sps_off` must not exceed it.
+    pub max_scrub_overhead: f64,
 }
 
 impl Default for Gates {
@@ -59,6 +65,7 @@ impl Default for Gates {
             min_simd_speedup: 1.5,
             max_p99_us: 2_000_000.0,
             max_recovery_ms: 5_000.0,
+            max_scrub_overhead: 0.10,
         }
     }
 }
@@ -78,6 +85,7 @@ impl Gates {
             min_simd_speedup: env_f64("BENCH_GATE_MIN_SIMD_SPEEDUP", d.min_simd_speedup),
             max_p99_us: env_f64("BENCH_GATE_MAX_P99_US", d.max_p99_us),
             max_recovery_ms: env_f64("BENCH_GATE_MAX_RECOVERY_MS", d.max_recovery_ms),
+            max_scrub_overhead: env_f64("BENCH_GATE_MAX_SCRUB_OVERHEAD", d.max_scrub_overhead),
         }
     }
 }
@@ -125,6 +133,7 @@ pub fn check_report_str(path: &str, text: &str, gates: &Gates) -> Result<ReportS
         "batched" => check_batched(path, &json, gates)?,
         "serving_slo" => check_serving_slo(path, &json, gates)?,
         "chaos" => check_chaos(path, &json, gates)?,
+        "integrity" => check_integrity(path, &json, gates)?,
         other => anyhow::bail!("{path}: unknown bench report kind {other:?}"),
     };
     Ok(ReportStatus::Validated { kind: bench, summary })
@@ -279,5 +288,39 @@ fn check_chaos(path: &str, json: &Json, gates: &Gates) -> Result<String> {
         "{ok:.0} surviving results bit-exact, {recoveries:.0} recoveries, \
          recovery p50/p99 {:.1}/{p99:.1}ms",
         json.req("recovery_p50_ms")?.as_f64().unwrap_or(0.0),
+    ))
+}
+
+fn check_integrity(path: &str, json: &Json, gates: &Gates) -> Result<String> {
+    let injected = json.req("injected_flips")?.as_f64().context("injected_flips numeric")?;
+    // A soak that never injected an upset proved nothing about the
+    // integrity layer — fail closed, same policy as the chaos gate.
+    anyhow::ensure!(injected >= 1.0, "{path}: no upsets injected ({injected})");
+    let rate = json.req("detection_rate")?.as_f64().context("detection_rate numeric")?;
+    anyhow::ensure!(
+        rate == 1.0,
+        "{path}: detection rate {rate} below 1.0 — an injected flip went unnoticed"
+    );
+    let corrected = json.req("corrected")?.as_f64().context("corrected numeric")?;
+    anyhow::ensure!(
+        corrected >= 1.0,
+        "{path}: no in-place SECDED correction exercised ({corrected})"
+    );
+    let mism = json.req("mismatches")?.as_f64().context("mismatches numeric")?;
+    anyhow::ensure!(mism == 0.0, "{path}: {mism} surviving results diverged from the oracle");
+    let overhead = json.req("scrub_overhead")?.as_f64().context("scrub_overhead numeric")?;
+    // Fractional lane-64 throughput cost of running with Correct-mode
+    // scrubbing vs integrity off. The default bound is the 10% acceptance
+    // point; BENCH_GATE_MAX_SCRUB_OVERHEAD relaxes it for noisy runners.
+    anyhow::ensure!(
+        overhead <= gates.max_scrub_overhead,
+        "{path}: scrub overhead {:.1}% above the {:.1}% gate",
+        100.0 * overhead,
+        100.0 * gates.max_scrub_overhead
+    );
+    Ok(format!(
+        "{injected:.0} upsets all detected, {corrected:.0} corrected in place, \
+         scrub overhead {:.1}%",
+        100.0 * overhead.max(0.0)
     ))
 }

@@ -65,6 +65,16 @@ fn chaos_report(mismatches: f64, recoveries: f64, all_healthy: f64, p99_ms: f64)
     )
 }
 
+fn integrity_report(rate: f64, corrected: f64, mismatches: f64, overhead: f64) -> String {
+    format!(
+        r#"{{"bench":"integrity",
+            "injected_flips":12,"detected":6,"corrected":{corrected},
+            "detection_rate":{rate},"mismatches":{mismatches},
+            "scrubbed_blocks":40000,"scrub_overhead":{overhead},
+            "lane64_sps_off":900.0,"lane64_sps_correct":880.0}}"#
+    )
+}
+
 fn kind_of(status: &ReportStatus) -> &str {
     match status {
         ReportStatus::Validated { kind, .. } => kind,
@@ -100,8 +110,10 @@ fn every_report_kind_validates_on_a_well_formed_body() {
         batched_report(3.1, 0.0),
         serving_slo_report(1500.0, 0.0, 0.125),
         chaos_report(0.0, 3.0, 1.0, 18.0),
+        integrity_report(1.0, 6.0, 0.0, 0.03),
     ];
-    let kinds = ["bench_layer/topology", "hotpath", "batched", "serving_slo", "chaos"];
+    let kinds =
+        ["bench_layer/topology", "hotpath", "batched", "serving_slo", "chaos", "integrity"];
     for (body, want) in bodies.iter().zip(kinds) {
         match check_report_str("synthetic.json", body, &gates).unwrap() {
             ReportStatus::Validated { kind, summary } => {
@@ -194,6 +206,32 @@ fn chaos_gates_fail_closed_on_each_axis() {
     assert!(format!("{err:#}").contains("recovery p99"), "{err:#}");
     let relaxed = Gates { max_recovery_ms: 1e7, ..Gates::default() };
     assert!(check_report_str("BENCH_c.json", &chaos_report(0.0, 3.0, 1.0, 9e6), &relaxed).is_ok());
+}
+
+#[test]
+fn integrity_gates_fail_closed_on_each_axis() {
+    let gates = Gates::default();
+    // Any injected flip slipping past the scrubber is a hard failure.
+    let err = check_report_str("BENCH_i.json", &integrity_report(0.9, 6.0, 0.0, 0.03), &gates)
+        .expect_err("detection rate below 1.0 must fail the integrity gate");
+    assert!(format!("{err:#}").contains("detection rate"), "{err:#}");
+    // A soak that never exercised an in-place correction proves nothing
+    // about the SECDED repair path.
+    let err = check_report_str("BENCH_i.json", &integrity_report(1.0, 0.0, 0.0, 0.03), &gates)
+        .expect_err("zero corrections must fail the integrity gate");
+    assert!(format!("{err:#}").contains("correction"), "{err:#}");
+    // Survivors must stay bit-exact.
+    let err = check_report_str("BENCH_i.json", &integrity_report(1.0, 6.0, 2.0, 0.03), &gates)
+        .expect_err("oracle mismatch must fail the integrity gate");
+    assert!(format!("{err:#}").contains("diverged"), "{err:#}");
+    // Scrub overhead is wall-clock gated, with the env-style override.
+    let err = check_report_str("BENCH_i.json", &integrity_report(1.0, 6.0, 0.0, 0.35), &gates)
+        .expect_err("35% overhead must fail the default 10% gate");
+    assert!(format!("{err:#}").contains("scrub overhead"), "{err:#}");
+    let relaxed = Gates { max_scrub_overhead: 0.5, ..Gates::default() };
+    assert!(
+        check_report_str("BENCH_i.json", &integrity_report(1.0, 6.0, 0.0, 0.35), &relaxed).is_ok()
+    );
 }
 
 #[test]

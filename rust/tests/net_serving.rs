@@ -321,6 +321,40 @@ fn stalled_connection_times_out_with_a_typed_error() {
 }
 
 #[test]
+fn idle_expiry_is_retryable_on_a_fresh_connection() {
+    // Companion to the slow-loris defence: when the server expires a
+    // connection for idleness, a later submit on that handle must not be
+    // a hard failure — the request is idempotent, so submit_with_retry
+    // absorbs the typed IdleTimeout (or the already-closed socket behind
+    // it) by redialing, opening a replacement session, and resubmitting.
+    let server = spawn_server(
+        1,
+        1,
+        ServerOptions { idle_timeout: Duration::from_millis(200), ..Default::default() },
+    );
+    let addr = server.local_addr().to_string();
+    let (cfg, weights, regs) = fixture();
+    let mut core = Core::new(cfg);
+    core.load_weights(&weights).unwrap();
+    core.registers = regs;
+    let s0 = Dataset::Smnist.sample(0, Split::Test, 6);
+
+    let mut client = WireClient::connect(&addr).unwrap();
+    let (session, _) = client.open_session(0).unwrap();
+    let first = client.submit_with_retry(session, 0, &s0, &RetryPolicy::default()).unwrap();
+    assert_eq!(first.counts, core.run(&s0).counts);
+    assert_eq!(first.reconnects, 0, "a live connection needs no redial");
+
+    // Outlive the server's idle budget, then submit on the expired handle.
+    std::thread::sleep(Duration::from_millis(600));
+    let retried = client.submit_with_retry(session, 1, &s0, &RetryPolicy::default()).unwrap();
+    assert_eq!(retried.counts, core.run(&s0).counts, "served on the fresh connection, bit-exact");
+    assert!(retried.reconnects >= 1, "the expiry forced at least one redial: {retried:?}");
+    let stats = wait_for_stats(&server, "the idle expiry to be counted", |s| s.idle_timeouts >= 1);
+    assert_eq!(stats.protocol_errors, 0, "an idle expiry is not a protocol error");
+}
+
+#[test]
 fn snapshot_restore_round_trips_over_the_wire() {
     let server = spawn_server(2, 4, ServerOptions::default());
     let addr = server.local_addr().to_string();
@@ -476,6 +510,11 @@ fn shard_loss_is_typed_on_the_wire_and_health_reports_recovery() {
     assert!(!h1.degraded, "supervisor re-admitted every shard: {h1:?}");
     assert_eq!((h1.recoveries, h1.quarantines), (3, 3));
     assert_eq!(h1.shards, vec![0, 0]);
+    assert_eq!(
+        (h1.scrubbed_blocks, h1.corrected, h1.detected),
+        (0, 0, 0),
+        "integrity is off on this engine; the wire mirror must say so"
+    );
     server.shutdown();
 }
 

@@ -1,0 +1,229 @@
+//! The PR-10 memory-integrity acceptance gate: seeded single-event upsets
+//! (SEUs) against parity- and SECDED-protected engines, differentially
+//! checked against the sequential [`Core`] oracle.
+//!
+//! Matrix: three topologies x lane widths 1 and 64 x flip targets
+//! {Weights, Vmem}, in both integrity modes:
+//!
+//! - **Correct** (SECDED): every injected flip is repaired in place by the
+//!   boundary scrubber — all streams bit-exact, `corrected` equals the
+//!   flip count, no shard is ever lost;
+//! - **Detect** (parity): every injected flip costs exactly one shard
+//!   session — the lost streams surface as typed resumable
+//!   [`ServingError::ShardLost`], the supervisor quarantines and rebuilds
+//!   from the checkpoint, survivors and resubmits are bit-exact, and
+//!   `detected` equals the flip count.
+//!
+//! One flip per `run_batch_outcomes` round keeps the accounting exact in
+//! both modes: a boundary scrub always lands between consecutive upsets to
+//! the same shard (no XOR cancellation, no accumulated double-bit words),
+//! and no flip is ever aimed at a shard that is already down.
+
+use quantisenc::config::registers::RegisterFile;
+use quantisenc::config::ModelConfig;
+use quantisenc::coordinator::serving::chaos::{ChaosEvent, ChaosKind, ChaosSchedule};
+use quantisenc::coordinator::serving::{ServingEngine, ServingError, ServingOptions, ShardHealth};
+use quantisenc::datasets::rng::XorShift64Star;
+use quantisenc::datasets::Sample;
+use quantisenc::fixed::Q5_3;
+use quantisenc::hdl::integrity::FlipTarget;
+use quantisenc::hdl::{Core, IntegrityMode};
+
+const CORES: usize = 2;
+const FLIP_ROUNDS: usize = 4;
+
+fn fixture(arch: &str, n: usize) -> (ModelConfig, Vec<Vec<i32>>, RegisterFile, Vec<Sample>) {
+    let cfg = ModelConfig::parse_arch(arch, Q5_3).unwrap();
+    let mut rng = XorShift64Star::new(0xA11E ^ arch.len() as u64);
+    let weights: Vec<Vec<i32>> = cfg
+        .layers()
+        .iter()
+        .map(|l| (0..l.fan_in * l.neurons).map(|_| rng.below(15) as i32 - 7).collect())
+        .collect();
+    let regs = RegisterFile::new(cfg.qspec);
+    let t_steps = 6;
+    let samples: Vec<Sample> = (0..n as u64)
+        .map(|i| {
+            let mut srng = XorShift64Star::new(0x5EED ^ (i << 8) ^ arch.len() as u64);
+            Sample {
+                spikes: (0..t_steps * cfg.inputs()).map(|_| (srng.uniform() < 0.3) as u8).collect(),
+                t_steps,
+                inputs: cfg.inputs(),
+                label: (i % 10) as usize,
+            }
+        })
+        .collect();
+    (cfg, weights, regs, samples)
+}
+
+fn oracle(cfg: &ModelConfig, weights: &[Vec<i32>], regs: &RegisterFile) -> Core {
+    let mut core = Core::new(cfg.clone());
+    core.load_weights(weights).unwrap();
+    core.registers = regs.clone();
+    core
+}
+
+fn build_engine(
+    cfg: &ModelConfig,
+    weights: &[Vec<i32>],
+    regs: &RegisterFile,
+    lane_width: usize,
+    mode: IntegrityMode,
+) -> ServingEngine {
+    ServingEngine::new(
+        cfg,
+        weights,
+        regs,
+        ServingOptions::with_lanes(CORES, lane_width).checkpoints_every(8).with_integrity(mode),
+    )
+    .unwrap()
+}
+
+/// Arm one seeded upset for the round about to start: the admitted-sample
+/// counter is read back so the event fires on the round's first admission,
+/// ahead of the target shard's next boundary scrub. Targets alternate
+/// between the synaptic store and the membrane bank, shards alternate too,
+/// and the layer index sweeps the whole stack.
+fn flip_round(
+    engine: &mut ServingEngine,
+    cfg: &ModelConfig,
+    rng: &mut XorShift64Star,
+    round: usize,
+) {
+    let (submitted, _) = engine.stats();
+    let target = if round % 2 == 0 { FlipTarget::Weights } else { FlipTarget::Vmem };
+    engine.install_chaos(ChaosSchedule::new(vec![ChaosEvent {
+        at_sample: submitted + 1,
+        shard: round % CORES,
+        kind: ChaosKind::BitFlip {
+            layer: round % cfg.num_layers(),
+            target,
+            word: rng.below(1 << 20) as usize,
+            bit: rng.below(32) as u8,
+        },
+    }]));
+}
+
+fn run_correct(arch: &str, lane_width: usize) {
+    let round = CORES * lane_width.max(12);
+    let (cfg, weights, regs, samples) = fixture(arch, round * (FLIP_ROUNDS + 1));
+    let mut core = oracle(&cfg, &weights, &regs);
+    let mut engine = build_engine(&cfg, &weights, &regs, lane_width, IntegrityMode::Correct);
+    let mut rng = XorShift64Star::new(0xC0DE ^ lane_width as u64 ^ arch.len() as u64);
+
+    for r in 0..=FLIP_ROUNDS {
+        if r < FLIP_ROUNDS {
+            flip_round(&mut engine, &cfg, &mut rng, r);
+        }
+        let window = &samples[r * round..(r + 1) * round];
+        let results = engine.run_batch(window).unwrap();
+        for (j, res) in results.iter().enumerate() {
+            let o = core.run(&window[j]);
+            assert_eq!(res.counts, o.counts, "{arch} w{lane_width} round {r} stream {j} counts");
+            assert_eq!(res.prediction, o.prediction, "{arch} w{lane_width} round {r} stream {j}");
+        }
+    }
+    let (scrubbed, corrected, detected) = engine.integrity_counters();
+    assert!(scrubbed > 0, "the boundary scrubber never ran");
+    assert_eq!(corrected, FLIP_ROUNDS as u64, "every SECDED upset repaired in place");
+    assert_eq!(detected, 0, "no upset may escape to detected-uncorrectable");
+    assert_eq!(engine.quarantines(), 0, "Correct mode must not cost a shard");
+    assert!(engine.shard_health().iter().all(|h| *h == ShardHealth::Healthy));
+}
+
+fn run_detect(arch: &str, lane_width: usize) {
+    let round = CORES * lane_width.max(12);
+    let (cfg, weights, regs, samples) = fixture(arch, round * (FLIP_ROUNDS + 1));
+    let mut core = oracle(&cfg, &weights, &regs);
+    let mut engine = build_engine(&cfg, &weights, &regs, lane_width, IntegrityMode::Detect);
+    let mut rng = XorShift64Star::new(0xDE7EC7 ^ lane_width as u64 ^ arch.len() as u64);
+
+    let mut lost: Vec<usize> = Vec::new();
+    for r in 0..=FLIP_ROUNDS {
+        if r < FLIP_ROUNDS {
+            flip_round(&mut engine, &cfg, &mut rng, r);
+        }
+        let window = &samples[r * round..(r + 1) * round];
+        let outcomes = engine.run_batch_outcomes(window).unwrap();
+        let mut failed = 0usize;
+        for (j, outcome) in outcomes.iter().enumerate() {
+            let idx = r * round + j;
+            match outcome {
+                Ok(res) => {
+                    let o = core.run(&samples[idx]);
+                    assert_eq!(res.counts, o.counts, "{arch} w{lane_width} round {r} stream {j}");
+                    assert_eq!(res.prediction, o.prediction, "{arch} w{lane_width} round {r}");
+                }
+                Err(ServingError::ShardLost { shard, resumable }) => {
+                    assert!(*shard < CORES && *resumable, "typed resumable loss expected");
+                    failed += 1;
+                    lost.push(idx);
+                }
+                Err(other) => panic!("round {r} stream {j}: expected ShardLost, got {other:?}"),
+            }
+        }
+        if r < FLIP_ROUNDS {
+            assert!(failed > 0, "{arch} w{lane_width} round {r}: the upset cost no stream");
+        } else {
+            assert_eq!(failed, 0, "{arch} w{lane_width}: clean round lost a stream");
+        }
+        assert!(
+            engine.shard_health().iter().all(|h| *h == ShardHealth::Healthy),
+            "round {r}: supervisor must rebuild the flipped shard before returning"
+        );
+    }
+    let (_, corrected, detected) = engine.integrity_counters();
+    assert_eq!(corrected, 0, "parity cannot correct");
+    assert_eq!(detected, FLIP_ROUNDS as u64, "every parity upset must be detected");
+    assert_eq!(engine.quarantines(), FLIP_ROUNDS as u64, "one quarantine per upset");
+    assert_eq!(engine.recoveries(), engine.quarantines(), "every quarantine must recover");
+
+    // The resumable contract: exactly the lost streams, replayed on the
+    // healed engine, come back bit-exact — and the replay itself is clean
+    // (the rebuilt shard carries no residue of the flip).
+    let resubmit: Vec<Sample> = lost.iter().map(|&i| samples[i].clone()).collect();
+    let results = engine.run_batch(&resubmit).unwrap();
+    for (res, &i) in results.iter().zip(&lost) {
+        let o = core.run(&samples[i]);
+        assert_eq!(res.counts, o.counts, "resubmitted stream {i} counts");
+        assert_eq!(res.prediction, o.prediction, "resubmitted stream {i} prediction");
+    }
+    let (_, _, detected_after) = engine.integrity_counters();
+    assert_eq!(detected_after, FLIP_ROUNDS as u64, "resubmit must run clean");
+}
+
+#[test]
+fn seu_gate_16x20x10_lane_1() {
+    run_correct("16x20x10", 1);
+    run_detect("16x20x10", 1);
+}
+
+#[test]
+fn seu_gate_16x20x10_lane_64() {
+    run_correct("16x20x10", 64);
+    run_detect("16x20x10", 64);
+}
+
+#[test]
+fn seu_gate_24x16x10_lane_1() {
+    run_correct("24x16x10", 1);
+    run_detect("24x16x10", 1);
+}
+
+#[test]
+fn seu_gate_24x16x10_lane_64() {
+    run_correct("24x16x10", 64);
+    run_detect("24x16x10", 64);
+}
+
+#[test]
+fn seu_gate_32x24x12x10_lane_1() {
+    run_correct("32x24x12x10", 1);
+    run_detect("32x24x12x10", 1);
+}
+
+#[test]
+fn seu_gate_32x24x12x10_lane_64() {
+    run_correct("32x24x12x10", 64);
+    run_detect("32x24x12x10", 64);
+}
